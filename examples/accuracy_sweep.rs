@@ -1,0 +1,71 @@
+//! Accuracy study (Table-2 style, plus the PWL-segment ablation): runs
+//! the cycle-accurate FSA device across sequence lengths and segment
+//! counts and reports MAE/RMSE/MRE against the dense SDPA oracle.
+//!
+//!     cargo run --release --example accuracy_sweep [-- --n 16]
+
+use fsa::benchutil::Table;
+use fsa::cli::Args;
+use fsa::experiments::{paper_input, sim_accuracy_row};
+use fsa::kernel::flash::detranspose_output;
+use fsa::kernel::{flash_attention_program, FlashLayout, FlashParams};
+use fsa::numerics::reference::{mat_error, sdpa, Mat};
+use fsa::numerics::SplitMix64;
+use fsa::sim::{Machine, MachineConfig};
+
+fn main() -> fsa::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n = args.get("n", 16usize)?;
+
+    println!("== accuracy sweep on the cycle-accurate FSA device (d = {n}) ==\n");
+
+    // Part 1: error vs sequence length (Table-2 shape at sim scale).
+    let mut t = Table::new(&["seq", "MAE", "RMSE", "MRE"]);
+    for mult in [2usize, 4, 8] {
+        let seq = mult * n;
+        let e = sim_accuracy_row(n, seq, 40 + mult as u64)?;
+        t.row(&[
+            seq.to_string(),
+            format!("{:.3e}", e.mae),
+            format!("{:.3e}", e.rmse),
+            format!("{:.3e}", e.mre),
+        ]);
+    }
+    println!("error vs sequence length (reference: dense fp32 SDPA):\n{}", t.to_string());
+
+    // Part 2: error vs PWL segment count (the Fig-12 knob, end to end).
+    let mut t2 = Table::new(&["segments", "MAE", "max|err|"]);
+    let seq = 4 * n;
+    for segments in [2usize, 4, 8, 16] {
+        let p = FlashParams {
+            seq_len: seq,
+            d: n,
+            spad_elems: (6 * n * n) as u32,
+            accum_elems: (n * n + n) as u32,
+        };
+        let layout = FlashLayout::packed(&p);
+        let prog = flash_attention_program(&p, &layout)?;
+        let mut cfg = MachineConfig::small(n);
+        cfg.segments = segments;
+        cfg.mem_elems = layout.mem_elems(&p).max(1 << 16);
+        let mut m = Machine::new(cfg);
+        let mut rng = SplitMix64::new(99);
+        let q = paper_input(&mut rng, seq, n);
+        let k = paper_input(&mut rng, seq, n);
+        let v = paper_input(&mut rng, seq, n);
+        m.write_mem(layout.q_addr, &q.data);
+        m.write_mem(layout.k_addr, &k.data);
+        m.write_mem(layout.v_addr, &v.data);
+        m.run_program(&prog)?;
+        let out = detranspose_output(m.read_mem(0, layout.mem_elems(&p)), &layout, &p);
+        let err = mat_error(&Mat::new(seq, n, out), &sdpa(&q, &k, &v));
+        t2.row(&[
+            segments.to_string(),
+            format!("{:.3e}", err.mae),
+            format!("{:.3e}", err.max_abs),
+        ]);
+    }
+    println!("error vs PWL segments at seq = {seq} (paper uses 8):\n{}", t2.to_string());
+    println!("accuracy_sweep OK");
+    Ok(())
+}

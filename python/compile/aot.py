@@ -1,0 +1,148 @@
+"""AOT compile path: lower every L2 entry point to HLO text artifacts.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+
+* ``<name>.hlo.txt``      — one per entry point / shape combination
+* ``manifest.txt``        — machine-readable index consumed by
+                            ``fsa::runtime::Manifest`` (whitespace table)
+* ``pwl_coeffs_<S>.txt``  — golden PWL coefficient tables cross-checked by
+                            ``fsa::numerics::pwl`` tests
+* ``.stamp``              — build stamp for the Makefile
+
+Usage: ``python -m compile.aot --out ../artifacts [--full]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.pwl import coefficients
+
+HEAD_DIM = 128          # paper evaluation: d = 128 throughout
+DEFAULT_SEQ = [128, 512, 2048, 4096]
+FULL_SEQ = [8192, 16384]
+SDPA_MAX_SEQ = 4096     # dense L x L fp32 reference beyond this is wasteful
+COEFF_SEGMENTS = [1, 2, 4, 8, 16, 32, 64]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entries(full: bool):
+    """(name, fn, arg_specs, manifest fields) for every artifact."""
+    seqs = DEFAULT_SEQ + (FULL_SEQ if full else [])
+    d = HEAD_DIM
+    f16 = jnp.float16
+    entries = []
+    for L in seqs:
+        qkv = [_spec((L, d), f16)] * 3
+        entries.append((
+            f"fsa_attn_L{L}_d{d}", model.fsa_attn, qkv,
+            dict(kind="fsa_attn", dtype="f16", L=L, d=d, heads=1, br=128,
+                 bc=128, segments=8),
+        ))
+        entries.append((
+            f"flash_exact_L{L}_d{d}", model.flash_exact, qkv,
+            dict(kind="flash_exact", dtype="f16", L=L, d=d, heads=1, br=128,
+                 bc=128, segments=0),
+        ))
+        if L <= SDPA_MAX_SEQ:
+            entries.append((
+                f"sdpa_L{L}_d{d}", model.sdpa, qkv,
+                dict(kind="sdpa", dtype="f16", L=L, d=d, heads=1, br=0,
+                     bc=0, segments=0),
+            ))
+    # Multi-head + full projection block (model-level composition).
+    H, Lm = 4, 512
+    mqkv = [_spec((H, Lm, d), f16)] * 3
+    entries.append((
+        f"fsa_mha_h{H}_L{Lm}_d{d}", model.fsa_mha, mqkv,
+        dict(kind="fsa_mha", dtype="f16", L=Lm, d=d, heads=H, br=128,
+             bc=128, segments=8),
+    ))
+    D = H * d
+    proj = [_spec((Lm, D), f16)] + [_spec((D, D), f16)] * 4
+    entries.append((
+        f"mha_proj_h{H}_L{Lm}_D{D}",
+        functools.partial(model.mha_proj, heads=H), proj,
+        dict(kind="mha_proj", dtype="f16", L=Lm, d=d, heads=H, br=128,
+             bc=128, segments=8),
+    ))
+    return entries
+
+
+def write_coeff_tables(out_dir: str) -> None:
+    for s in COEFF_SEGMENTS:
+        slopes, intercepts = coefficients(s)
+        path = os.path.join(out_dir, f"pwl_coeffs_{s}.txt")
+        with open(path, "w") as f:
+            f.write(f"# k slope intercept (segments={s})\n")
+            for k in range(s):
+                f.write(f"{k} {slopes[k]:.17g} {intercepts[k]:.17g}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--full", action="store_true",
+                    help="also emit the 8K/16K sequence-length artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name substrings to build")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = build_entries(args.full)
+    if args.only:
+        pats = args.only.split(",")
+        entries = [e for e in entries if any(p in e[0] for p in pats)]
+
+    manifest_lines = [
+        "# name file kind dtype L d heads br bc segments num_inputs",
+    ]
+    for name, fn, specs, meta in entries:
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(
+            f"{name} {fname} {meta['kind']} {meta['dtype']} {meta['L']} "
+            f"{meta['d']} {meta['heads']} {meta['br']} {meta['bc']} "
+            f"{meta['segments']} {len(specs)}"
+        )
+        print(f"  {fname:40s} {len(text)/1e6:7.2f} MB  {time.time()-t0:5.1f}s")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    write_coeff_tables(args.out)
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write(str(time.time()) + "\n")
+    print(f"wrote {len(entries)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""L1 — the FSA FlashAttention forward pass as a Pallas kernel.
+
+This kernel is the software twin of what the FSA silicon executes
+(paper Algorithm 1 + §3): one pass over the K/V sequence per Q row-block,
+rowmax/rowsum carried online, ``exp`` realized as
+``exp2(log2(e)/sqrt(d) * x)`` through the Split + piecewise-linear scheme
+of §3.3, fp16 matmul operands with fp32 accumulation, and the exact
+FlashAttention floating-point operation order (the property the paper
+preserves for numerical stability).
+
+The kernel is always lowered with ``interpret=True``: the CPU PJRT plugin
+used by the Rust runtime cannot execute Mosaic custom-calls.  On a real
+TPU the same BlockSpec structure maps Br=Bc=d=128 tiles into VMEM with two
+back-to-back 128x128x128 MXU matmuls per grid step (see DESIGN.md
+§Hardware-Adaptation for the VMEM/MXU budget).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pwl import LOG2E, coefficients
+from .ref import NEG_INF
+
+
+FP16_MIN_NORMAL = 2.0 ** -14
+
+
+def _pwl_exp2_tab(x, s_tab, c_tab, segments: int, f16_mac: bool = False):
+    """In-kernel PWL exp2 (x <= 0): Split -> MAC interpolation -> 2**xi.
+
+    With ``f16_mac`` the interpolation runs on the half-precision PE
+    datapath (fp16 fraction, fp16 coefficients, fp16-rounded MAC result),
+    matching the silicon; the 2**xi exponent shift is exact either way.
+    """
+    xi = jnp.ceil(x)
+    xf = x - xi
+    k = jnp.clip(jnp.floor(-xf * segments).astype(jnp.int32), 0, segments - 1)
+    if f16_mac:
+        xf16 = xf.astype(jnp.float16)
+        s16 = s_tab.astype(jnp.float16)
+        c16 = c_tab.astype(jnp.float16)
+        frac = (jnp.take(s16, k) * xf16 + jnp.take(c16, k)).astype(jnp.float32)
+    else:
+        frac = jnp.take(s_tab, k) * xf + jnp.take(c_tab, k)
+    xi = jnp.clip(xi, -126.0, 127.0)
+    return jnp.exp2(xi) * frac
+
+
+def _ftz_f16(x):
+    """fp16 quantization with flush-to-zero on subnormals.
+
+    The paper assumes accelerator flush-to-zero semantics (§6.2.1); jnp's
+    astype keeps subnormals, so the flush is applied explicitly.  This is
+    what makes the Table-2 error grow with sequence length: softmax
+    weights scale like 1/L and start underflowing the fp16 normal range
+    near L = 16K.
+    """
+    q = x.astype(jnp.float16)
+    return jnp.where(jnp.abs(q) < jnp.float16(FP16_MIN_NORMAL), jnp.float16(0), q)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, s_ref, c_ref, o_ref, *, bc: int,
+                  segments: int, scale: float):
+    br, d = q_ref.shape
+    lk = k_ref.shape[0]
+    tc = lk // bc
+    dtype = q_ref.dtype
+
+    # PWL coefficient tables stream in as kernel operands, mirroring the
+    # hardware, which streams (slope_k, intercept_k) from the array edges
+    # rather than storing them in the PEs (§3.3).  fp16 inputs run the
+    # interpolation on the fp16 PE datapath, like the silicon.
+    e2 = functools.partial(
+        _pwl_exp2_tab, s_tab=s_ref[...], c_tab=c_ref[...], segments=segments,
+        f16_mac=dtype == jnp.float16,
+    )
+
+    q = q_ref[...]
+
+    def body(j, carry):
+        m, l, acc = carry
+        kj = pl.load(k_ref, (pl.dslice(j * bc, bc), slice(None)))
+        vj = pl.load(v_ref, (pl.dslice(j * bc, bc), slice(None)))
+        # S = Q K^T (first matmul, upward path on FSA), fp32 psums.
+        s = jax.lax.dot_general(
+            q, kj, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        if dtype == jnp.float16:
+            # S parks in the fp16 PE result registers on the device.
+            s = s.astype(jnp.float16).astype(jnp.float32)
+        local_m = jnp.max(s, axis=1)          # CMP row, on the fly
+        new_m = jnp.maximum(m, local_m)
+        b = e2(scale * (m - new_m))           # accumulator scale factor
+        n = s - new_m[:, None]                # in-place subtract (left=1, top=-new_m)
+        p = e2(scale * n)                     # Split + PWL on resident tile
+        # In fp16 mode P lives in the fp16 (FTZ) PE result registers; the
+        # rowsum sums those *stored* values (downward, left=1, top=0), and
+        # the second matmul reads the same registers.  f32 mode stays pure
+        # for the strict-twin tests.
+        if dtype == jnp.float16:
+            p16 = _ftz_f16(p).astype(dtype)
+            local_l = jnp.sum(p16.astype(jnp.float32), axis=1)
+        else:
+            p16 = p.astype(dtype)
+            local_l = jnp.sum(p, axis=1)
+        new_l = l * b + local_l
+        pv = jax.lax.dot_general(
+            p16, vj, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        new_acc = b[:, None] * acc + pv
+        return new_m, new_l, new_acc
+
+    m0 = jnp.full((br,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((br,), jnp.float32)
+    acc0 = jnp.zeros((br, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, tc, body, (m0, l0, acc0))
+    # Attn LSE Norm: reciprocal + scale (paper §4.2 outer-loop phases).
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def fsa_attention(q, k, v, br: int = 128, bc: int = 128, segments: int = 8):
+    """Single-head FlashAttention on FSA numerics.
+
+    Args:
+      q: ``(L, d)`` queries.  k, v: ``(Lk, d)`` keys/values (same dtype).
+      br, bc: row/column tile sizes; on FSA hardware ``br = N_COLS`` and
+        ``bc = N_ROWS = d`` (§3.5), but the kernel accepts any divisor
+        tiling so tests can sweep shapes.
+      segments: PWL segment count (paper default 8).
+
+    Returns ``(L, d)`` attention output in the input dtype.
+    """
+    L, d = q.shape
+    lk, dk = k.shape
+    if dk != d or v.shape != (lk, d):
+        raise ValueError(f"shape mismatch: q={q.shape} k={k.shape} v={v.shape}")
+    if L % br or lk % bc:
+        raise ValueError(f"L={L},Lk={lk} not divisible by br={br},bc={bc}")
+    scale = LOG2E / math.sqrt(d)
+    grid = (L // br,)
+    slopes, intercepts = coefficients(segments)
+    s_tab = jnp.asarray(slopes, jnp.float32)
+    c_tab = jnp.asarray(intercepts, jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bc=bc, segments=segments, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((lk, d), lambda i: (0, 0)),
+            pl.BlockSpec((lk, d), lambda i: (0, 0)),
+            pl.BlockSpec((segments,), lambda i: (0,)),
+            pl.BlockSpec((segments,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, d), q.dtype),
+        interpret=True,
+    )(q, k, v, s_tab, c_tab)
+
+
+def fsa_attention_mha(q, k, v, br: int = 128, bc: int = 128, segments: int = 8):
+    """Multi-head wrapper: ``(H, L, d)`` inputs, vmapped over heads."""
+    f = functools.partial(fsa_attention, br=br, bc=bc, segments=segments)
+    return jax.vmap(f)(q, k, v)

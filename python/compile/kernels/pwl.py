@@ -1,0 +1,89 @@
+"""Piecewise-linear exp2 — the numerics contract of the FSA Split+PWL unit.
+
+The paper (§3.3) observes that FlashAttention only ever evaluates
+``exp2(x)`` for ``x <= 0``.  Decomposing ``x = xi + xf`` with integer
+``xi = ceil(x)`` gives a fractional part ``xf in (-1, 0]``, hence
+``2**xf in (0.5, 1]``.  FSA approximates ``2**xf`` with an S-piece uniform
+piecewise-linear interpolation whose (slope, intercept) pairs are streamed
+through the array and evaluated on the PE MAC units; the integer part only
+shifts the result exponent.
+
+This module is the *single source of truth* for the coefficient tables:
+``aot.py`` exports them to ``artifacts/pwl_coeffs_{S}.txt`` and the Rust
+``fsa::numerics::pwl`` module is golden-tested against that file.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+LOG2E = math.log2(math.e)
+
+
+def coefficients(segments: int) -> tuple[np.ndarray, np.ndarray]:
+    """Endpoint-interpolating PWL coefficients for 2**xf on (-1, 0].
+
+    Segment ``k`` (k = 0..S-1) covers ``xf in [-(k+1)/S, -k/S)`` (with the
+    right-closed end at xf=0 folded into k=0).  On segment ``[a, b]``::
+
+        slope_k     = (2**b - 2**a) / (b - a)
+        intercept_k = 2**a - slope_k * a      # line through both endpoints
+
+    Returns float64 arrays (callers quantize as needed).  All intercepts
+    land in (0.5, 1] — the property FSA uses to encode the segment index k
+    in the intercept's exponent MSBs (checked in tests on both layers).
+    """
+    if segments < 1:
+        raise ValueError(f"segments must be >= 1, got {segments}")
+    slopes = np.empty(segments, dtype=np.float64)
+    intercepts = np.empty(segments, dtype=np.float64)
+    for k in range(segments):
+        b = -k / segments
+        a = -(k + 1) / segments
+        s = (2.0**b - 2.0**a) / (b - a)
+        c = 2.0**a - s * a
+        slopes[k] = s
+        intercepts[k] = c
+    return slopes, intercepts
+
+
+def split_int_frac(x):
+    """Decompose x (x <= 0 expected) into (xi, xf) with xf in (-1, 0]."""
+    xi = jnp.ceil(x)
+    xf = x - xi
+    return xi, xf
+
+
+def pwl_exp2(x, segments: int = 8, dtype=jnp.float32):
+    """exp2(x) for x <= 0 via the FSA Split + PWL scheme (pure jnp).
+
+    Matches the hardware dataflow: slope*xf + intercept on the MAC, then a
+    2**xi exponent adjustment.  Saturates to 0 below the f32 exponent
+    range, mirroring flush-to-zero accumulators.
+    """
+    slopes, intercepts = coefficients(segments)
+    s_tab = jnp.asarray(slopes, dtype=dtype)
+    c_tab = jnp.asarray(intercepts, dtype=dtype)
+    x = x.astype(dtype)
+    xi, xf = split_int_frac(x)
+    k = jnp.clip(jnp.floor(-xf * segments).astype(jnp.int32), 0, segments - 1)
+    frac = s_tab[k] * xf + c_tab[k]
+    # 2**xi applied as an exact exponent shift; clamp so that the
+    # intermediate exp2 never overflows (xi <= 0 in FlashAttention, but the
+    # guard keeps the helper total for stray positive inputs in tests).
+    xi = jnp.clip(xi, -126.0, 127.0)
+    return jnp.exp2(xi.astype(dtype)) * frac
+
+
+def pwl_exp2_np(x: np.ndarray, segments: int = 8) -> np.ndarray:
+    """NumPy float64 twin of :func:`pwl_exp2` (reference for error sweeps)."""
+    slopes, intercepts = coefficients(segments)
+    x = np.asarray(x, dtype=np.float64)
+    xi = np.ceil(x)
+    xf = x - xi
+    k = np.clip(np.floor(-xf * segments).astype(np.int64), 0, segments - 1)
+    frac = slopes[k] * xf + intercepts[k]
+    return np.exp2(np.clip(xi, -1074, 1023)) * frac

@@ -1,0 +1,114 @@
+"""Pure-jnp correctness oracles for the FSA attention kernel.
+
+Three references, in decreasing strictness of what they share with the
+Pallas kernel:
+
+* :func:`flash_pwl`   — same tiling, same Algorithm-1 FP op order, same
+  PWL exp2.  The Pallas kernel must match this to ~1e-5 (it *is* the same
+  math outside pallas machinery).
+* :func:`flash_exact` — same tiling and op order, exact exp2.  Difference
+  vs flash_pwl isolates the PWL approximation error (paper §6.2.2).
+* :func:`sdpa`        — dense fp32 scaled-dot-product attention, the
+  paper's external reference (stand-in for torch SDPA).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .pwl import LOG2E, coefficients, pwl_exp2
+
+NEG_INF = -1e30  # finite -inf stand-in; keeps fp16 arithmetic NaN-free
+
+
+def sdpa(q, k, v):
+    """Dense fp32 softmax(Q K^T / sqrt(d)) V."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    s = jnp.matmul(q, k.T) / math.sqrt(d)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.matmul(p, v)
+
+
+def pwl_exp2_f16mac(x, segments: int = 8):
+    """PWL exp2 with the interpolation MAC on the fp16 PE datapath."""
+    slopes, intercepts = coefficients(segments)
+    s16 = jnp.asarray(slopes, jnp.float16)
+    c16 = jnp.asarray(intercepts, jnp.float16)
+    xi = jnp.ceil(x)
+    xf = x - xi
+    kk = jnp.clip(jnp.floor(-xf * segments).astype(jnp.int32), 0, segments - 1)
+    frac = (s16[kk] * xf.astype(jnp.float16) + c16[kk]).astype(jnp.float32)
+    return jnp.exp2(jnp.clip(xi, -126.0, 127.0)) * frac
+
+
+def _flash(q, k, v, br: int, bc: int, exp2_fn):
+    """FlashAttention-2 forward, Algorithm 1 of the paper, tile by tile.
+
+    Matmul inputs stay in the caller dtype (fp16 on FSA); reductions and
+    accumulators are fp32, matching '16-bit activation / 32-bit
+    accumulation' of Table 1.
+    """
+    L, d = q.shape
+    Lk = k.shape[0]
+    if L % br or Lk % bc:
+        raise ValueError(f"seq lens ({L},{Lk}) not divisible by tiles ({br},{bc})")
+    scale = LOG2E / math.sqrt(d)
+    tr, tc = L // br, Lk // bc
+    out = []
+    for i in range(tr):
+        qi = q[i * br : (i + 1) * br]
+        m = jnp.full((br,), NEG_INF, jnp.float32)
+        l = jnp.zeros((br,), jnp.float32)
+        acc = jnp.zeros((br, d), jnp.float32)
+        for j in range(tc):
+            kj = k[j * bc : (j + 1) * bc]
+            vj = v[j * bc : (j + 1) * bc]
+            s = jnp.matmul(qi, kj.T, preferred_element_type=jnp.float32)
+            if q.dtype == jnp.float16:
+                # S parks in fp16 result registers on the device.
+                s = s.astype(jnp.float16).astype(jnp.float32)
+            local_m = jnp.max(s, axis=1)
+            new_m = jnp.maximum(m, local_m)
+            a = m - new_m
+            b = exp2_fn(scale * a)
+            n = s - new_m[:, None]
+            p = exp2_fn(scale * n)
+            # In fp16 mode, P lives in the device's fp16 (FTZ) registers;
+            # the rowsum and the PV matmul both read those stored values.
+            if q.dtype == jnp.float16:
+                p16 = p.astype(jnp.float16)
+                p16 = jnp.where(
+                    jnp.abs(p16) < jnp.float16(2.0 ** -14), jnp.float16(0), p16
+                )
+                p = p16.astype(jnp.float32)
+            local_l = jnp.sum(p, axis=1)
+            l = l * b + local_l
+            pv = jnp.matmul(p.astype(q.dtype), vj, preferred_element_type=jnp.float32)
+            acc = b[:, None] * acc + pv
+            m = new_m
+        out.append(acc / l[:, None])
+    return jnp.concatenate(out, axis=0).astype(q.dtype)
+
+
+def flash_exact(q, k, v, br: int = 128, bc: int = 128):
+    """Tiled FlashAttention with exact exp2 (isolates tiling/op-order)."""
+    return _flash(q, k, v, br, bc, jnp.exp2)
+
+
+def flash_pwl(q, k, v, br: int = 128, bc: int = 128, segments: int = 8):
+    """Tiled FlashAttention with FSA's PWL exp2 — the kernel's strict twin.
+
+    fp16 inputs use the fp16 interpolation MAC, matching both the kernel
+    and the silicon; f32 inputs keep the f32 PWL.
+    """
+    fn = (functools.partial(pwl_exp2_f16mac, segments=segments)
+          if q.dtype == jnp.float16
+          else functools.partial(pwl_exp2, segments=segments))
+    return _flash(q, k, v, br, bc, fn)

@@ -1,0 +1,69 @@
+"""L2 — JAX attention entry points lowered to the Rust runtime's artifacts.
+
+Each entry point is a pure function over concrete shapes; ``aot.py`` lowers
+them once to HLO *text* and the Rust ``fsa::runtime`` executes them through
+PJRT on the request path.  Everything here calls the L1 Pallas kernel (or
+one of its oracles) — no other compute library exists at runtime.
+
+Entry points:
+
+* ``fsa_attn``     — single-head FlashAttention with FSA numerics (the
+                     device-accurate path; what the serving examples run).
+* ``flash_exact``  — op-order-identical exact-exp2 twin (reference used by
+                     Table 2 at sequence lengths where dense SDPA would
+                     need O(L^2) memory).
+* ``sdpa``         — dense fp32 reference (small/medium L).
+* ``fsa_mha``      — multi-head (vmap) variant, plus ``mha_proj``: a full
+                     attention block with QKVO projections, demonstrating
+                     the kernel composing into a model-level graph.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.fsa_attention import fsa_attention, fsa_attention_mha
+
+
+def fsa_attn(q, k, v, br: int = 128, bc: int = 128, segments: int = 8):
+    return (fsa_attention(q, k, v, br=br, bc=bc, segments=segments),)
+
+
+def flash_exact(q, k, v, br: int = 128, bc: int = 128):
+    return (ref.flash_exact(q, k, v, br=br, bc=bc),)
+
+
+def sdpa(q, k, v):
+    return (ref.sdpa(q, k, v),)
+
+
+def fsa_mha(q, k, v, br: int = 128, bc: int = 128, segments: int = 8):
+    return (fsa_attention_mha(q, k, v, br=br, bc=bc, segments=segments),)
+
+
+def mha_proj(x, wq, wk, wv, wo, heads: int, br: int = 128, bc: int = 128,
+             segments: int = 8):
+    """Full multi-head attention block: projections around the FSA kernel.
+
+    ``x``: (L, D); ``wq/wk/wv/wo``: (D, D).  D must equal heads * d_head.
+    Projections run in the activation dtype; attention per head on FSA
+    numerics; output projection back to (L, D).
+    """
+    L, D = x.shape
+    d = D // heads
+    if d * heads != D:
+        raise ValueError(f"D={D} not divisible by heads={heads}")
+
+    def split(y):  # (L, D) -> (H, L, d)
+        return jnp.transpose(y.reshape(L, heads, d), (1, 0, 2))
+
+    q = split(x @ wq)
+    k = split(x @ wk)
+    v = split(x @ wv)
+    o = fsa_attention_mha(q, k, v, br=br, bc=bc, segments=segments)
+    o = jnp.transpose(o, (1, 0, 2)).reshape(L, D)
+    return (o @ wo,)

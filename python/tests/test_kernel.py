@@ -1,0 +1,162 @@
+"""Pallas kernel vs oracles — the CORE correctness signal of layer 1.
+
+Strictness ladder (see kernels/ref.py):
+  kernel == flash_pwl   (same math; tight tolerance)
+  kernel ~= flash_exact (differs only by PWL exp2; medium tolerance)
+  kernel ~= sdpa        (plus tiling/op-order effects; loose tolerance)
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fsa_attention import fsa_attention, fsa_attention_mha
+
+
+def rand_qkv(rng, L, d, dtype, spiky=False):
+    """Paper §6.2.2 input distribution when spiky: N(0,1)+N(0,100)·Bern(1e-3)."""
+    def one():
+        x = rng.standard_normal((L, d))
+        if spiky:
+            x = x + rng.standard_normal((L, d)) * 10.0 * (
+                rng.random((L, d)) < 1e-3
+            )
+        return jnp.asarray(x, dtype)
+    return one(), one(), one()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16])
+@pytest.mark.parametrize("L,d,br,bc", [
+    (64, 32, 16, 16),
+    (128, 64, 32, 64),
+    (128, 128, 128, 128),   # the paper's native tile shape
+    (256, 64, 64, 32),
+])
+def test_kernel_matches_flash_pwl(dtype, L, d, br, bc):
+    rng = np.random.default_rng(hash((L, d, br, bc)) % 2**32)
+    q, k, v = rand_qkv(rng, L, d, dtype)
+    got = fsa_attention(q, k, v, br=br, bc=bc)
+    want = ref.flash_pwl(q, k, v, br=br, bc=bc)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-3 if dtype == jnp.float16 else 1e-5,
+        atol=2e-3 if dtype == jnp.float16 else 1e-6,
+    )
+
+
+@pytest.mark.parametrize("L,d", [(128, 64), (256, 128)])
+def test_kernel_close_to_exact_sdpa(L, d):
+    rng = np.random.default_rng(7)
+    q, k, v = rand_qkv(rng, L, d, jnp.float32, spiky=True)
+    got = np.asarray(fsa_attention(q, k, v, br=64, bc=64), np.float32)
+    want = np.asarray(ref.sdpa(q, k, v), np.float32)
+    # PWL error budget (paper Table 2: MAE ~1e-2 at fp16; f32 tighter).
+    assert np.mean(np.abs(got - want)) < 5e-3
+    assert np.max(np.abs(got - want)) < 5e-2
+
+
+def test_pwl_error_isolated_from_tiling():
+    # flash_exact == sdpa (tight) proves op-order/tiling is faithful;
+    # kernel - flash_exact is then the PWL contribution alone.
+    rng = np.random.default_rng(3)
+    q, k, v = rand_qkv(rng, 128, 64, jnp.float32)
+    exact = np.asarray(ref.flash_exact(q, k, v, br=32, bc=32), np.float32)
+    dense = np.asarray(ref.sdpa(q, k, v), np.float32)
+    np.testing.assert_allclose(exact, dense, rtol=1e-4, atol=1e-5)
+
+
+def test_scale_invariance_of_output_range():
+    rng = np.random.default_rng(11)
+    q, k, v = rand_qkv(rng, 64, 32, jnp.float32)
+    shifted = np.asarray(fsa_attention(q * 30.0, k, v, br=16, bc=16))
+    assert np.all(np.isfinite(shifted))
+
+
+def test_single_tile_equals_multi_tile():
+    # Online-softmax across tiles must agree with a single big tile up to
+    # the PWL approximation (tiling changes new_m, hence which PWL segment
+    # each score lands in — a ~1e-3-level effect, same order as Table 2).
+    rng = np.random.default_rng(13)
+    q, k, v = rand_qkv(rng, 128, 32, jnp.float32)
+    one = np.asarray(fsa_attention(q, k, v, br=128, bc=128))
+    many = np.asarray(fsa_attention(q, k, v, br=16, bc=16))
+    np.testing.assert_allclose(one, many, atol=2e-3)
+    # With exact exp2 the tiling dependence vanishes entirely.
+    one_e = np.asarray(ref.flash_exact(q, k, v, br=128, bc=128))
+    many_e = np.asarray(ref.flash_exact(q, k, v, br=16, bc=16))
+    np.testing.assert_allclose(one_e, many_e, rtol=1e-5, atol=1e-6)
+
+
+def test_mha_matches_per_head():
+    rng = np.random.default_rng(17)
+    H, L, d = 3, 64, 32
+    q = jnp.asarray(rng.standard_normal((H, L, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((H, L, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((H, L, d)), jnp.float32)
+    got = np.asarray(fsa_attention_mha(q, k, v, br=16, bc=16))
+    for h in range(H):
+        want = np.asarray(fsa_attention(q[h], k[h], v[h], br=16, bc=16))
+        np.testing.assert_allclose(got[h], want, rtol=1e-6, atol=1e-7)
+
+
+def test_shape_validation():
+    q = jnp.zeros((64, 32), jnp.float32)
+    with pytest.raises(ValueError, match="divisible"):
+        fsa_attention(q, q, q, br=48, bc=16)
+    with pytest.raises(ValueError, match="mismatch"):
+        fsa_attention(q, jnp.zeros((64, 16), jnp.float32), q)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, dtypes, tile sizes.
+# ---------------------------------------------------------------------------
+
+tile_cases = st.sampled_from([8, 16, 32, 64])
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    lq_tiles=st.integers(1, 4),
+    lk_tiles=st.integers(1, 4),
+    br=tile_cases,
+    bc=tile_cases,
+    d=st.sampled_from([8, 16, 32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.float16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_vs_twin_hypothesis(lq_tiles, lk_tiles, br, bc, d, dtype, seed):
+    L, Lk = lq_tiles * br, lk_tiles * bc
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((L, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((Lk, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((Lk, d)), dtype)
+    got = np.asarray(fsa_attention(q, k, v, br=br, bc=bc), np.float32)
+    want = np.asarray(ref.flash_pwl(q, k, v, br=br, bc=bc), np.float32)
+    tol = 2e-3 if dtype == jnp.float16 else 2e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+    assert got.shape == (L, d)
+    assert np.all(np.isfinite(got))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    scale=st.floats(min_value=0.01, max_value=30.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_numerical_stability_under_scale(scale, seed):
+    # FlashAttention's raison d'être: no overflow for large logits.
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((32, 16)) * scale, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((32, 16)) * scale, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    out = np.asarray(fsa_attention(q, k, v, br=16, bc=16))
+    assert np.all(np.isfinite(out))
+    # Output is a convex combination of V rows (up to PWL wiggle).
+    assert out.max() <= float(np.asarray(v).max()) + 0.2
+    assert out.min() >= float(np.asarray(v).min()) - 0.2

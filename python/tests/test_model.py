@@ -1,0 +1,83 @@
+"""L2 model-level tests: shapes, composition, and AOT lowering round-trip."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_mha_proj_shapes_and_reference():
+    rng = np.random.default_rng(0)
+    H, L, d = 2, 64, 16
+    D = H * d
+    x = jnp.asarray(rng.standard_normal((L, D)) * 0.3, jnp.float32)
+    ws = [jnp.asarray(rng.standard_normal((D, D)) / np.sqrt(D), jnp.float32)
+          for _ in range(4)]
+    (out,) = model.mha_proj(x, *ws, heads=H, br=16, bc=16)
+    assert out.shape == (L, D)
+    # Reference: same projections + dense SDPA per head.
+    q = (x @ ws[0]).reshape(L, H, d).transpose(1, 0, 2)
+    k = (x @ ws[1]).reshape(L, H, d).transpose(1, 0, 2)
+    v = (x @ ws[2]).reshape(L, H, d).transpose(1, 0, 2)
+    heads = jnp.stack([ref.sdpa(q[h], k[h], v[h]) for h in range(H)])
+    want = heads.transpose(1, 0, 2).reshape(L, D) @ ws[3]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_mha_proj_rejects_bad_heads():
+    x = jnp.zeros((32, 48), jnp.float32)
+    w = jnp.zeros((48, 48), jnp.float32)
+    with pytest.raises(ValueError, match="divisible"):
+        model.mha_proj(x, w, w, w, w, heads=5, br=16, bc=16)
+
+
+def test_entry_points_return_tuples():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    for fn in (model.fsa_attn, model.flash_exact):
+        out = fn(q, q, q, br=16, bc=16)
+        assert isinstance(out, tuple) and len(out) == 1
+    out = model.sdpa(q, q, q)
+    assert isinstance(out, tuple) and len(out) == 1
+
+
+def test_lowering_produces_parseable_hlo_text():
+    spec = jax.ShapeDtypeStruct((128, 128), jnp.float16)
+    lowered = jax.jit(
+        lambda q, k, v: model.fsa_attn(q, k, v, br=128, bc=128)
+    ).lower(spec, spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f16[128,128]" in text
+    # return_tuple=True: root computation returns a tuple.
+    assert "(f16[128,128]" in text
+
+
+def test_build_entries_cover_paper_sizes():
+    names = [e[0] for e in aot.build_entries(full=True)]
+    for L in (2048, 4096, 8192, 16384):
+        assert f"fsa_attn_L{L}_d128" in names
+        assert f"flash_exact_L{L}_d128" in names
+    assert not any("sdpa_L16384" in n for n in names)  # dense ref capped
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.txt")),
+                    reason="artifacts not built")
+def test_manifest_consistent_with_files():
+    with open(os.path.join(ARTIFACTS, "manifest.txt")) as f:
+        lines = [l.split() for l in f if l.strip() and not l.startswith("#")]
+    assert len(lines) >= 10
+    for parts in lines:
+        assert len(parts) == 11
+        assert os.path.exists(os.path.join(ARTIFACTS, parts[1])), parts[1]
+        L, d = int(parts[4]), int(parts[5])
+        assert L >= 128 and d == 128

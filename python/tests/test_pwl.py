@@ -1,0 +1,78 @@
+"""PWL exp2 unit tests — the numerics contract both layers depend on."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.pwl import LOG2E, coefficients, pwl_exp2, pwl_exp2_np
+
+SEGMENTS = [1, 2, 4, 8, 16, 32, 64]
+
+
+@pytest.mark.parametrize("s", SEGMENTS)
+def test_intercepts_in_half_open_unit_range(s):
+    # Paper §3.3: all intercepts lie in (0.5, 1], so their exponent is 0 or
+    # -1 and the MSBs can encode the segment index k.
+    _, intercepts = coefficients(s)
+    assert np.all(intercepts > 0.5)
+    assert np.all(intercepts <= 1.0)
+
+
+@pytest.mark.parametrize("s", SEGMENTS)
+def test_endpoint_interpolation_exact(s):
+    # The PWL is exact at every segment breakpoint.
+    slopes, intercepts = coefficients(s)
+    for k in range(s):
+        for x in (-k / s, -(k + 1) / s):
+            approx = slopes[k] * x + intercepts[k]
+            assert math.isclose(approx, 2.0**x, rel_tol=1e-12)
+
+
+@pytest.mark.parametrize("s", SEGMENTS)
+def test_pwl_continuous_and_monotone(s):
+    # Adjacent segments meet at breakpoints; slopes are positive and
+    # decreasing in k (2^x is increasing and convex on (-1, 0]).
+    slopes, intercepts = coefficients(s)
+    assert np.all(slopes > 0)
+    assert np.all(np.diff(slopes) < 0) or s == 1
+    for k in range(s - 1):
+        x = -(k + 1) / s
+        left = slopes[k] * x + intercepts[k]
+        right = slopes[k + 1] * x + intercepts[k + 1]
+        assert math.isclose(left, right, rel_tol=1e-12)
+
+
+def test_error_decreases_with_segments():
+    x = np.linspace(-20, 0, 20001)
+    exact = np.exp2(x)
+    errs = []
+    for s in SEGMENTS:
+        errs.append(np.mean(np.abs(pwl_exp2_np(x, s) - exact)))
+    assert all(a > b for a, b in zip(errs, errs[1:]))
+
+
+def test_eight_segment_max_rel_error_bound():
+    # Interp theory: max rel err <= (ln2)^2 / (8 * 64) / 2^xf < 2e-3.
+    x = np.linspace(-1, 0, 100001)
+    rel = np.abs(pwl_exp2_np(x, 8) - np.exp2(x)) / np.exp2(x)
+    assert rel.max() < 2e-3
+
+
+@settings(deadline=None, max_examples=200)
+@given(st.floats(min_value=-80.0, max_value=0.0), st.sampled_from(SEGMENTS))
+def test_jnp_matches_np(x, s):
+    a = float(pwl_exp2(np.float32(x), segments=s))
+    b = float(pwl_exp2_np(np.array([x]), s)[0])
+    assert a == pytest.approx(b, rel=1e-5, abs=1e-38)
+
+
+@settings(deadline=None, max_examples=100)
+@given(st.integers(min_value=-30, max_value=0))
+def test_exact_at_integers(xi):
+    # xf = 0 lands in segment 0 whose intercept is exactly 1.
+    assert float(pwl_exp2(np.float32(xi), segments=8)) == pytest.approx(
+        2.0**xi, rel=1e-6
+    )

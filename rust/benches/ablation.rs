@@ -1,0 +1,80 @@
+//! Bench: design-choice ablations called out in DESIGN.md —
+//! §8.2 single- vs dual-path dataflow, PWL segment count vs the +10
+//! window, vector-unit throughput sensitivity of the Neuron baseline,
+//! and §8.3 head-dim padding waste.
+use fsa::accel::baseline::{baseline_flash_perf, KernelProfile};
+use fsa::benchutil::Table;
+use fsa::config::AccelConfig;
+use fsa::perfmodel::fsa_flash_perf;
+use fsa::schedule::Variant;
+
+fn main() {
+    let fsa = AccelConfig::builtin("fsa").unwrap();
+
+    // -- §8.2 dataflow variant --
+    let mut t = Table::new(&["seq", "dual-path util%", "single-path util%", "slowdown"]);
+    for seq in [2048usize, 8192, 16384] {
+        let d = fsa_flash_perf(&fsa, seq, 128, Variant::DualPath, 8);
+        let s = fsa_flash_perf(&fsa, seq, 128, Variant::SinglePath, 8);
+        t.row(&[
+            seq.to_string(),
+            format!("{:.1}", 100.0 * d.utilization),
+            format!("{:.1}", 100.0 * s.utilization),
+            format!("{:.2}x", s.total_cycles as f64 / d.total_cycles as f64),
+        ]);
+    }
+    println!("§8.2 single- vs dual-direction dataflow:\n{}", t.to_string());
+
+    // -- PWL segment count: accuracy/latency trade (Fig 12 x §3.5) --
+    let mut t = Table::new(&["segments", "inner latency", "util% @8192"]);
+    for seg in [2usize, 4, 8, 16, 32] {
+        let p = fsa_flash_perf(&fsa, 8192, 128, Variant::DualPath, seg);
+        t.row(&[
+            seg.to_string(),
+            format!("5N+{}", 2 + seg),
+            format!("{:.1}", 100.0 * p.utilization),
+        ]);
+    }
+    println!("PWL segments vs the elementwise window:\n{}", t.to_string());
+
+    // -- Baseline sensitivity: what if Neuron's exp engine were faster? --
+    let neuron = AccelConfig::builtin("neuron-v2").unwrap();
+    let base = KernelProfile::for_machine("neuron-v2").unwrap();
+    let mut t = Table::new(&["exp/cycle", "scalar active%", "util% @8192"]);
+    for mult in [1.0f64, 2.0, 4.0, 8.0] {
+        // Re-derive with a scaled exp rate by recomputing the structural
+        // model terms (scalar time scales down; tensor eventually binds).
+        let scalar = (base.br * base.bc) as f64 / (base.exp_per_cycle * mult);
+        let passes = 2.0 * (128f64 / 128.0) * (base.bc as f64 / 128.0);
+        let tensor = passes * (base.br as f64 + 256.0) / base.tensor_eff;
+        let ii = tensor.max(scalar) / base.pipeline_eff;
+        let useful = 4.0 * (base.br * base.bc * 128) as f64; // FLOPs per tile
+        let peak_per_cycle = 2.0 * 128.0 * 128.0;
+        t.row(&[
+            format!("{:.1}", base.exp_per_cycle * mult),
+            format!("{:.0}", 100.0 * scalar / ii),
+            format!("{:.1}", 100.0 * useful / (peak_per_cycle * ii)),
+        ]);
+    }
+    let _ = neuron;
+    println!("Neuron-v2 exp-throughput sensitivity (FSA's point: matching the\narray needs disproportionate scalar FLOPs/s):\n{}", t.to_string());
+
+    // -- §8.3: head-dim padding (decode-phase weakness) --
+    let mut t = Table::new(&["head dim", "util% @4096"]);
+    for d in [128usize, 64, 32, 16] {
+        let p = fsa_flash_perf(&fsa, 4096, d, Variant::DualPath, 8);
+        t.row(&[d.to_string(), format!("{:.1}", 100.0 * p.utilization)]);
+    }
+    println!("§8.3 head-dim padding waste on the 128x128 array:\n{}", t.to_string());
+
+    // -- baseline tile-size ablation --
+    let mut t = Table::new(&["machine", "seq", "util%"]);
+    for name in ["tpuv5e", "neuron-v2"] {
+        let cfg = AccelConfig::builtin(name).unwrap();
+        for seq in [2048usize, 16384] {
+            let p = baseline_flash_perf(&cfg, seq, 128);
+            t.row(&[name.into(), seq.to_string(), format!("{:.1}", 100.0 * p.utilization)]);
+        }
+    }
+    println!("baseline utilization endpoints:\n{}", t.to_string());
+}

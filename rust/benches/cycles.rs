@@ -1,0 +1,18 @@
+//! Bench: validate the paper's §3.5/§8.2 cycle counts against the
+//! cycle-accurate simulator (5N+10 inner loop, 6N+10 single-path, 8N-2
+//! naive two-matmul) and time the simulator itself.
+use std::time::Duration;
+
+use fsa::benchutil::{bench_for, fmt_duration};
+use fsa::experiments::cycles_report;
+
+fn main() {
+    println!("{}", cycles_report(&[4, 8, 16, 32, 64]));
+    let st = bench_for(Duration::from_secs(2), || {
+        fsa::experiments::sim_accuracy_row(16, 32, 1).unwrap();
+    });
+    println!(
+        "[bench] full 16x16 device run (2x2 tiles, schedule+execute+verify): median {}",
+        fmt_duration(st.median)
+    );
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Figure 1 (component active-time breakdown on
+//! NeuronCore-v2-like and TPUv5e-like machines running FlashAttention),
+//! and time the model evaluation itself.
+use std::time::Duration;
+
+use fsa::benchutil::{bench_for, fmt_duration, observe};
+use fsa::experiments::fig1_report;
+
+fn main() {
+    for seq in [2048usize, 8192, 16384] {
+        println!("{}", fig1_report(seq));
+    }
+    let st = bench_for(Duration::from_millis(200), || {
+        observe(fig1_report(8192));
+    });
+    println!("[bench] fig1_report(8192): median {}", fmt_duration(st.median));
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Figure 11 (FLOPs/s utilization of FSA vs
+//! TPUv5e vs NeuronCore-v2 over sequence lengths 2048..16384).
+use std::time::Duration;
+
+use fsa::accel::{mean_ratio, paper_seq_lens, utilization_curve};
+use fsa::benchutil::{bench_for, fmt_duration, observe};
+use fsa::experiments::fig11_report;
+
+fn main() {
+    let lens = paper_seq_lens();
+    println!("{}", fig11_report(&lens, 128));
+    let fsa = utilization_curve("fsa", &lens, 128).unwrap();
+    let tpu = utilization_curve("tpuv5e", &lens, 128).unwrap();
+    let neuron = utilization_curve("neuron-v2", &lens, 128).unwrap();
+    println!(
+        "paper targets: 1.77x TPUv5e (got {:.2}), 4.83x Neuron-v2 (got {:.2})",
+        mean_ratio(&fsa, &tpu),
+        mean_ratio(&fsa, &neuron)
+    );
+    let st = bench_for(Duration::from_millis(200), || {
+        observe(utilization_curve("fsa", &lens, 128).unwrap());
+    });
+    println!("[bench] fsa utilization curve: median {}", fmt_duration(st.median));
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate paper Figure 12 (exp2 PWL MAE/MRE vs segment count,
+//! exhaustive over all negative normal fp16 values) in all rounding
+//! modes, and time the exhaustive sweep.
+use std::time::Duration;
+
+use fsa::benchutil::{bench_for, fmt_duration, observe, Table};
+use fsa::experiments::fig12_report;
+use fsa::numerics::pwl::{error_sweep_ref, EvalMode};
+
+fn main() {
+    println!("{}", fig12_report(&[1, 2, 4, 8, 16, 32, 64]));
+
+    // Mode matrix at 8 segments: quantization choices the paper leaves
+    // implicit (EXPERIMENTS.md discusses which one matches).
+    let mut t = Table::new(&["mode", "ref", "MAE", "MRE"]);
+    for (mode, name) in [
+        (EvalMode::Exact, "exact"),
+        (EvalMode::F32, "f32"),
+        (EvalMode::F16Round, "f16-round"),
+        (EvalMode::F16, "f16-flush"),
+    ] {
+        for (r16, rname) in [(false, "f64"), (true, "f16")] {
+            let e = error_sweep_ref(8, mode, r16);
+            t.row(&[
+                name.into(),
+                rname.into(),
+                format!("{:.5e}", e.mae),
+                format!("{:.5}", e.mre),
+            ]);
+        }
+    }
+    println!("mode matrix at 8 segments (paper: MAE 0.00014, MRE 0.02728):\n{}", t.to_string());
+
+    let st = bench_for(Duration::from_millis(300), || {
+        observe(error_sweep_ref(8, EvalMode::F16, true));
+    });
+    println!("[bench] exhaustive fp16 sweep (30720 values): median {}", fmt_duration(st.median));
+}

@@ -1,0 +1,84 @@
+//! Bench: L3 hot-path microbenchmarks driving the §Perf optimization pass
+//! (EXPERIMENTS.md §Perf records before/after per change).
+//!
+//! Paths measured:
+//!  1. cycle-sim array step loop (dominates every simulator experiment);
+//!  2. full small-device FlashAttention run (schedule + execute);
+//!  3. host flash_pwl reference (dominates Table-2 cross-checks);
+//!  4. PWL exp2 scalar evaluation;
+//!  5. coordinator round trip without PJRT (batching/routing overhead).
+use std::time::Duration;
+
+use fsa::benchutil::{bench_for, fmt_duration, observe, Table};
+use fsa::kernel::{flash_attention_program, FlashLayout, FlashParams};
+use fsa::numerics::pwl::PwlExp2;
+use fsa::numerics::reference::{flash_pwl, Mat};
+use fsa::numerics::SplitMix64;
+use fsa::sim::{Machine, MachineConfig};
+
+fn main() {
+    let mut t = Table::new(&["hot path", "median", "notes"]);
+
+    // 1 + 2: full device run at two sizes.
+    for n in [16usize, 32] {
+        let seq = 2 * n;
+        let p = FlashParams {
+            seq_len: seq,
+            d: n,
+            spad_elems: (6 * n * n) as u32,
+            accum_elems: (n * n + n) as u32,
+        };
+        let layout = FlashLayout::packed(&p);
+        let prog = flash_attention_program(&p, &layout).unwrap();
+        let mut rng = SplitMix64::new(3);
+        let data = rng.normal_matrix(seq, n);
+        let st = bench_for(Duration::from_secs(1), || {
+            let mut cfg = MachineConfig::small(n);
+            cfg.mem_elems = layout.mem_elems(&p).max(1 << 16);
+            let mut m = Machine::new(cfg);
+            m.write_mem(layout.q_addr, &data);
+            m.write_mem(layout.k_addr, &data);
+            m.write_mem(layout.v_addr, &data);
+            observe(m.run_program(&prog).unwrap());
+        });
+        let cycles = fsa::schedule::fsa_total_cycles(seq, n, fsa::schedule::Variant::DualPath, 8);
+        t.row(&[
+            format!("device run {n}x{n}, seq {seq}"),
+            fmt_duration(st.median),
+            format!("{:.2} sim-cycles/us", cycles as f64 / st.per_iter_ns() * 1e3),
+        ]);
+    }
+
+    // 3: host oracle.
+    let mut rng = SplitMix64::new(4);
+    let (l, d) = (256usize, 64usize);
+    let q = Mat::new(l, d, rng.normal_matrix(l, d));
+    let k = Mat::new(l, d, rng.normal_matrix(l, d));
+    let v = Mat::new(l, d, rng.normal_matrix(l, d));
+    let st = bench_for(Duration::from_secs(1), || {
+        observe(flash_pwl(&q, &k, &v, 64, 64, 8));
+    });
+    t.row(&[
+        format!("flash_pwl oracle {l}x{d}"),
+        fmt_duration(st.median),
+        format!("{:.2} GFLOP/s", (4 * l * l * d) as f64 / st.per_iter_ns()),
+    ]);
+
+    // 4: scalar PWL.
+    let pwl = PwlExp2::new(8);
+    let xs: Vec<f32> = (0..4096).map(|i| -(i as f32) * 0.01).collect();
+    let st = bench_for(Duration::from_millis(300), || {
+        let mut acc = 0.0f32;
+        for &x in &xs {
+            acc += pwl.eval_f32(x);
+        }
+        observe(acc);
+    });
+    t.row(&[
+        "pwl exp2 f32 x4096".into(),
+        fmt_duration(st.median),
+        format!("{:.1} Melem/s", 4096.0 / st.per_iter_ns() * 1e3),
+    ]);
+
+    println!("{}", t.to_string());
+}

@@ -1,0 +1,51 @@
+//! Bench: regenerate paper Table 2 (end-to-end FlashAttention accuracy on
+//! FSA numerics vs exact references) through the PJRT artifacts, plus the
+//! small-scale cross-check through the cycle-accurate simulator.
+//!
+//! Sequence lengths follow the artifacts present: `make artifacts` ships
+//! 128..4096; `make artifacts-full` adds the paper's 8192/16384.
+use std::path::Path;
+
+use fsa::benchutil::Table;
+use fsa::experiments::{sim_accuracy_row, table2_report};
+use fsa::runtime::Manifest;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    let seqs: Vec<usize> = match Manifest::load(dir) {
+        Ok(m) => {
+            let mut s: Vec<usize> = m
+                .entries
+                .iter()
+                .filter(|e| e.kind == "fsa_attn")
+                .map(|e| e.seq_len)
+                .collect();
+            s.sort_unstable();
+            s.dedup();
+            s
+        }
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e:#}); run `make artifacts` first");
+            return;
+        }
+    };
+    match table2_report(dir, &seqs, 128, 0xF5A) {
+        Ok(r) => println!("{r}"),
+        Err(e) => eprintln!("table2 failed: {e:#}"),
+    }
+
+    // Cross-check: same metric through the cycle-accurate device at
+    // simulator-friendly sizes (validates the artifact path end to end).
+    let mut t = Table::new(&["n", "seq", "MAE", "RMSE", "MRE"]);
+    for (n, seq) in [(16usize, 64usize), (16, 128), (32, 128)] {
+        let e = sim_accuracy_row(n, seq, 5).unwrap();
+        t.row(&[
+            n.to_string(),
+            seq.to_string(),
+            format!("{:.3e}", e.mae),
+            format!("{:.3e}", e.rmse),
+            format!("{:.3e}", e.mre),
+        ]);
+    }
+    println!("cycle-simulator cross-check (same metric, small scale):\n{}", t.to_string());
+}

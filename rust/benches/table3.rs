@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Table 3 (FSA area breakdown, 16 nm @ 1.5 GHz)
+//! plus the array-size scaling ablation the paper doesn't show.
+use fsa::area::AreaBreakdown;
+use fsa::benchutil::Table;
+use fsa::experiments::table3_report;
+
+fn main() {
+    println!("{}", table3_report(128));
+    let mut t = Table::new(&["N", "total mm^2", "overhead %"]);
+    for n in [32usize, 64, 128, 256] {
+        let a = AreaBreakdown::for_array(n);
+        t.row(&[
+            n.to_string(),
+            format!("{:.2}", a.total() / 1e6),
+            format!("{:.2}", 100.0 * a.overhead_fraction()),
+        ]);
+    }
+    println!("array-size scaling (model extrapolation):\n{}", t.to_string());
+}

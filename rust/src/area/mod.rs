@@ -1,0 +1,140 @@
+//! Area model — paper Table 3 (16 nm, 1.5 GHz synthesis of the array).
+//!
+//! We cannot synthesize RTL in this environment, so the model is
+//! component-level with per-unit constants *fitted once* to the paper's
+//! 128 x 128 breakdown, and structural scaling laws in the array size:
+//! per-PE components (PE MAC, upward-path mux/regs, Split unit) scale as
+//! N^2, the CMP row as N, and "other logic" (controller, edge skew
+//! registers) as N.  This reproduces Table 3 exactly at N = 128 and lets
+//! the ablation bench explore other array sizes.
+
+/// Fitted per-unit areas in um^2 (paper Table 3 / component counts).
+const PE_AREA: f64 = 24_445_044.0 / (128.0 * 128.0); // 1492.0 um^2 per MAC PE
+const OTHER_PER_EDGE: f64 = 313_457.0 / 128.0; // skew regs + control per row
+const UP_PATH_PER_PE: f64 = 1_756_641.0 / (128.0 * 128.0);
+const SPLIT_PER_PE: f64 = 1_493_150.0 / (128.0 * 128.0);
+const CMP_PER_COL: f64 = 149_524.0 / 128.0;
+
+/// One Table-3 row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AreaItem {
+    pub group: &'static str,
+    pub component: &'static str,
+    pub area_um2: f64,
+}
+
+/// Full breakdown for an N x N FSA array.
+#[derive(Clone, Debug)]
+pub struct AreaBreakdown {
+    pub n: usize,
+    pub items: Vec<AreaItem>,
+}
+
+impl AreaBreakdown {
+    pub fn for_array(n: usize) -> AreaBreakdown {
+        let pes = (n * n) as f64;
+        let items = vec![
+            AreaItem { group: "Standard", component: "PEs", area_um2: PE_AREA * pes },
+            AreaItem {
+                group: "Standard",
+                component: "Other logic",
+                area_um2: OTHER_PER_EDGE * n as f64,
+            },
+            AreaItem {
+                group: "FSA additional",
+                component: "Upward data path",
+                area_um2: UP_PATH_PER_PE * pes,
+            },
+            AreaItem {
+                group: "FSA additional",
+                component: "Split units",
+                area_um2: SPLIT_PER_PE * pes,
+            },
+            AreaItem {
+                group: "FSA additional",
+                component: "CMP units",
+                area_um2: CMP_PER_COL * n as f64,
+            },
+        ];
+        AreaBreakdown { n, items }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.items.iter().map(|i| i.area_um2).sum()
+    }
+
+    pub fn group_total(&self, group: &str) -> f64 {
+        self.items.iter().filter(|i| i.group == group).map(|i| i.area_um2).sum()
+    }
+
+    /// FSA's additional area as a fraction of the total (the paper's
+    /// headline "12% area overhead").
+    pub fn overhead_fraction(&self) -> f64 {
+        self.group_total("FSA additional") / self.total()
+    }
+
+    /// Render the Table-3 style report.
+    pub fn to_table(&self) -> String {
+        let total = self.total();
+        let mut out = String::from(
+            "Group           Component          Area(%)   Area(um^2)\n",
+        );
+        for i in &self.items {
+            out.push_str(&format!(
+                "{:<15} {:<18} {:>6.2}    {:>12.0}\n",
+                i.group,
+                i.component,
+                100.0 * i.area_um2 / total,
+                i.area_um2
+            ));
+        }
+        for g in ["Standard", "FSA additional"] {
+            out.push_str(&format!(
+                "{:<15} {:<18} {:>6.2}    {:>12.0}\n",
+                g,
+                "Total",
+                100.0 * self.group_total(g) / total,
+                self.group_total(g)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table3_at_128() {
+        let a = AreaBreakdown::for_array(128);
+        // Absolute um^2 match the paper's numbers by construction.
+        let by_name = |c: &str| a.items.iter().find(|i| i.component == c).unwrap().area_um2;
+        assert!((by_name("PEs") - 24_445_044.0).abs() < 1.0);
+        assert!((by_name("Upward data path") - 1_756_641.0).abs() < 1.0);
+        assert!((by_name("Split units") - 1_493_150.0).abs() < 1.0);
+        assert!((by_name("CMP units") - 149_524.0).abs() < 1.0);
+        // Percentages: standard 87.92%, additional 12.07%.
+        assert!((100.0 * a.overhead_fraction() - 12.07).abs() < 0.05);
+        assert!((100.0 * a.group_total("Standard") / a.total() - 87.92).abs() < 0.05);
+    }
+
+    #[test]
+    fn overhead_shrinks_slightly_with_array_size() {
+        // CMP row and other-logic are O(N) while PE-attached parts are
+        // O(N^2): the relative overhead converges to the per-PE ratio.
+        let small = AreaBreakdown::for_array(32).overhead_fraction();
+        let big = AreaBreakdown::for_array(256).overhead_fraction();
+        let per_pe_ratio = (UP_PATH_PER_PE + SPLIT_PER_PE) / (PE_AREA + UP_PATH_PER_PE + SPLIT_PER_PE);
+        assert!((big - per_pe_ratio).abs() < 0.01);
+        assert!((small - big).abs() < 0.02, "small {small} big {big}");
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let t = AreaBreakdown::for_array(128).to_table();
+        for c in ["PEs", "Split units", "CMP units", "Upward data path", "Total"] {
+            assert!(t.contains(c), "missing {c}\n{t}");
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Benchmark mini-harness (criterion is unavailable offline): warmup,
+//! fixed-iteration timing, median/p95 statistics, and aligned table
+//! printing shared by every `benches/*.rs` target (all declared with
+//! `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over the measured iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let sum: Duration = samples.iter().sum();
+    Stats {
+        iters,
+        mean: sum / iters as u32,
+        median: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+        min: samples[0],
+    }
+}
+
+/// Adaptive variant: picks an iteration count so total time ~ `budget`.
+pub fn bench_for<F: FnMut()>(budget: Duration, mut f: F) -> Stats {
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_nanos() / once.as_nanos()).clamp(3, 10_000) as usize;
+    bench(1, iters, f)
+}
+
+/// Black-box to defeat optimizer dead-code elimination (std::hint wrapper).
+#[inline]
+pub fn observe<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Simple fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+/// Format a duration in human units.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut acc = 0u64;
+        let st = bench(2, 16, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(observe(i));
+            }
+        });
+        assert_eq!(st.iters, 16);
+        assert!(st.min <= st.median && st.median <= st.p95);
+        assert!(st.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn adaptive_bench_respects_budget_order() {
+        let st = bench_for(Duration::from_millis(5), || {
+            observe((0..100).sum::<u64>());
+        });
+        assert!(st.iters >= 3);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["seq", "util"]);
+        t.row(&["2048".into(), "0.39".into()]);
+        t.row(&["16384".into(), "0.40".into()]);
+        let s = t.to_string();
+        assert!(s.contains("seq"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12 ns");
+        assert!(fmt_duration(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).contains("s"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser (no clap offline): `fsa <command> [--flag
+//! value | --flag=value | --switch] [positionals...]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> crate::Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut args = Args { command, ..Default::default() };
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(body.to_string(), v);
+                } else {
+                    args.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> crate::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> crate::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str, default: &[usize]) -> crate::Result<Vec<usize>> {
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|e| anyhow!("--{name} {s:?}: {e}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse("fig11 --seqs 2048,4096 --d=128 extra --verbose");
+        assert_eq!(a.command, "fig11");
+        assert_eq!(a.flag("seqs"), Some("2048,4096"));
+        assert_eq!(a.get::<usize>("d", 0).unwrap(), 128);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+        assert_eq!(a.get_list("seqs", &[]).unwrap(), vec![2048, 4096]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("table3");
+        assert_eq!(a.get::<usize>("n", 128).unwrap(), 128);
+        assert!(!a.switch("verbose"));
+        assert_eq!(a.get_list("seqs", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("x --n nope");
+        assert!(a.get::<usize>("n", 1).is_err());
+        assert!(Args::parse(vec!["c".into(), "--".into()]).is_err());
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,133 @@
+//! Sequence-length batcher: groups compatible requests so a device runs
+//! one compiled executable per batch (amortizing PJRT dispatch), bounded
+//! by `max_batch` and a timeout so short queues still make progress.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::metrics::Metrics;
+use super::request::Envelope;
+use super::router::Router;
+
+pub struct Batcher {
+    max_batch: usize,
+    /// Timeout expressed in simulated device cycles in the config; the
+    /// batcher converts at the FSA clock (1.5 GHz) to a host duration.
+    timeout: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, timeout_cycles: u64) -> Batcher {
+        Batcher {
+            max_batch: max_batch.max(1),
+            timeout: Duration::from_nanos((timeout_cycles as f64 / 1.5) as u64),
+        }
+    }
+
+    /// Main loop: drain the ingress channel into per-seq-length groups,
+    /// dispatch a group when it reaches `max_batch` or its oldest member
+    /// exceeds the timeout.  Exits when the ingress disconnects.
+    pub fn run(&self, rx: mpsc::Receiver<Envelope>, router: Router, metrics: Arc<Metrics>) {
+        // (seq_len, d) -> pending envelopes.
+        let mut groups: Vec<((usize, usize), Vec<Envelope>)> = Vec::new();
+        loop {
+            // Block briefly so timeouts fire even when idle.
+            let first = rx.recv_timeout(self.timeout.min(Duration::from_millis(5)));
+            match first {
+                Ok(env) => {
+                    let key = (env.req.seq_len, env.req.d);
+                    match groups.iter_mut().find(|(k, _)| *k == key) {
+                        Some((_, g)) => g.push(env),
+                        None => groups.push((key, vec![env])),
+                    }
+                    // Opportunistically drain whatever else is queued.
+                    while let Ok(env) = rx.try_recv() {
+                        let key = (env.req.seq_len, env.req.d);
+                        match groups.iter_mut().find(|(k, _)| *k == key) {
+                            Some((_, g)) => g.push(env),
+                            None => groups.push((key, vec![env])),
+                        }
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Flush everything and exit.
+                    for (_, g) in groups.drain(..) {
+                        for chunk in Self::chunks(g, self.max_batch) {
+                            metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            router.dispatch(chunk);
+                        }
+                    }
+                    return;
+                }
+            }
+
+            // Dispatch full groups and timed-out groups.
+            let now = std::time::Instant::now();
+            let mut i = 0;
+            while i < groups.len() {
+                let ready = groups[i].1.len() >= self.max_batch
+                    || groups[i]
+                        .1
+                        .first()
+                        .map(|e| now.duration_since(e.enqueued) >= self.timeout)
+                        .unwrap_or(false);
+                if ready {
+                    let (_, g) = groups.swap_remove(i);
+                    for chunk in Self::chunks(g, self.max_batch) {
+                        metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        router.dispatch(chunk);
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    fn chunks(mut g: Vec<Envelope>, max: usize) -> Vec<Vec<Envelope>> {
+        let mut out = Vec::new();
+        while g.len() > max {
+            let rest = g.split_off(max);
+            out.push(g);
+            g = rest;
+        }
+        if !g.is_empty() {
+            out.push(g);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(id: u64, seq: usize) -> Envelope {
+        let d = 4;
+        let m = vec![0.0f32; seq * d];
+        Envelope {
+            req: super::super::request::AttentionRequest::new(id, seq, d, m.clone(), m.clone(), m),
+            reply: mpsc::channel().0,
+            enqueued: std::time::Instant::now(),
+        }
+    }
+
+    #[test]
+    fn chunking_respects_max_batch() {
+        let g: Vec<Envelope> = (0..10).map(|i| env(i, 8)).collect();
+        let chunks = Batcher::chunks(g, 4);
+        let sizes: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+        // No request lost or duplicated.
+        let mut ids: Vec<u64> = chunks.iter().flatten().map(|e| e.req.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_group_produces_no_chunks() {
+        assert!(Batcher::chunks(vec![], 4).is_empty());
+    }
+}

@@ -1,0 +1,117 @@
+//! Device worker: one thread owning a PJRT runtime (numerics) and the FSA
+//! performance model (simulated device timing).
+//!
+//! Each worker is a simulated FSA card: requests execute through the
+//! `fsa_attn` AOT artifact (the numerics twin of the silicon, see
+//! DESIGN.md), while latency/throughput are accounted in device cycles
+//! from [`crate::perfmodel`] at the paper's 1.5 GHz clock.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::AccelConfig;
+use crate::perfmodel::fsa_flash_perf;
+use crate::runtime::Runtime;
+use crate::schedule::Variant;
+
+use super::metrics::Metrics;
+use super::request::AttentionResponse;
+use super::router::{Batch, WorkerHandle};
+
+pub struct DeviceWorker {
+    handle: WorkerHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DeviceWorker {
+    /// Spawn the worker thread.  The PJRT client is created inside the
+    /// thread (it is not Send) — startup errors surface on first use via
+    /// error responses.
+    pub fn spawn(id: usize, artifacts: PathBuf, metrics: Arc<Metrics>) -> crate::Result<DeviceWorker> {
+        let (tx, rx) = mpsc::channel::<Batch>();
+        let load = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let handle = WorkerHandle { id, queue: tx, load: load.clone() };
+        let thread = std::thread::Builder::new()
+            .name(format!("fsa-device-{id}"))
+            .spawn(move || worker_loop(id, artifacts, rx, load, metrics))?;
+        Ok(DeviceWorker { handle, thread: Some(thread) })
+    }
+
+    pub fn handle(&self) -> WorkerHandle {
+        self.handle.clone()
+    }
+
+    pub fn shutdown(mut self) {
+        // Dropping our queue clone isn't enough (router holds clones);
+        // the batcher going away drops those, and the loop exits.
+        drop(self.handle);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(
+    id: usize,
+    artifacts: PathBuf,
+    rx: mpsc::Receiver<Batch>,
+    load: Arc<std::sync::atomic::AtomicUsize>,
+    metrics: Arc<Metrics>,
+) {
+    let cfg = AccelConfig::builtin("fsa").expect("builtin fsa config");
+    let mut runtime = match Runtime::new(&artifacts) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("device {id}: runtime init failed: {e:#}");
+            None
+        }
+    };
+
+    while let Ok(batch) = rx.recv() {
+        let n = batch.len();
+        for env in batch {
+            let t0 = env.enqueued;
+            let req = env.req;
+            let perf = fsa_flash_perf(&cfg, req.seq_len.max(cfg.array_size), req.d.min(cfg.array_size), Variant::DualPath, cfg.pwl_segments);
+            let output = match runtime.as_mut() {
+                None => Err("device runtime unavailable".to_string()),
+                Some(rt) => {
+                    match rt.manifest.best_for("fsa_attn", req.seq_len, req.d) {
+                        None => Err(format!(
+                            "no fsa_attn artifact covers seq_len {} d {}",
+                            req.seq_len, req.d
+                        )),
+                        Some(meta) if meta.seq_len != req.seq_len => Err(format!(
+                            "strict mode: need exact artifact for seq_len {} (nearest is {}); \
+                             pad client-side with AttentionRequest::padded",
+                            req.seq_len, meta.seq_len
+                        )),
+                        Some(meta) => {
+                            let name = meta.name.clone();
+                            rt.execute_attention(&name, &req.q, &req.k, &req.v)
+                                .map_err(|e| format!("{e:#}"))
+                        }
+                    }
+                }
+            };
+            let ok = output.is_ok();
+            let resp = AttentionResponse {
+                id: req.id,
+                output,
+                device_cycles: perf.total_cycles,
+                device_time: Duration::from_nanos(
+                    (perf.total_cycles as f64 / cfg.freq_ghz) as u64,
+                ),
+                latency: t0.elapsed(),
+                device_id: id,
+                bucket: req.seq_len,
+            };
+            metrics.record(&resp, ok);
+            let _ = env.reply.send(resp);
+        }
+        load.fetch_sub(n, Ordering::Relaxed);
+    }
+}

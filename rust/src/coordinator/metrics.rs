@@ -1,0 +1,102 @@
+//! Serving metrics: counters + latency reservoir, lock-light.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::request::AttentionResponse;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicUsize,
+    pub completed: AtomicUsize,
+    pub failed: AtomicUsize,
+    pub batches: AtomicUsize,
+    /// Total simulated device cycles consumed.
+    pub device_cycles: AtomicU64,
+    /// Host latencies in ns (bounded reservoir).
+    latencies_ns: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record(&self, resp: &AttentionResponse, ok: bool) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.device_cycles.fetch_add(resp.device_cycles, Ordering::Relaxed);
+        let mut l = super::lock(&self.latencies_ns);
+        if l.len() < 65536 {
+            l.push(resp.latency.as_nanos() as u64);
+        }
+    }
+
+    /// (p50, p95, max) host latency.
+    pub fn latency_percentiles(&self) -> (Duration, Duration, Duration) {
+        let mut l = super::lock(&self.latencies_ns).clone();
+        if l.is_empty() {
+            return (Duration::ZERO, Duration::ZERO, Duration::ZERO);
+        }
+        l.sort_unstable();
+        let pick = |p: f64| Duration::from_nanos(l[((l.len() - 1) as f64 * p) as usize]);
+        (pick(0.5), pick(0.95), pick(1.0))
+    }
+
+    pub fn summary(&self) -> String {
+        let (p50, p95, max) = self.latency_percentiles();
+        format!(
+            "submitted {} completed {} failed {} batches {} device_cycles {} \
+             latency p50 {:?} p95 {:?} max {:?}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.device_cycles.load(Ordering::Relaxed),
+            p50,
+            p95,
+            max,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(lat_ms: u64) -> AttentionResponse {
+        AttentionResponse {
+            id: 0,
+            output: Ok(vec![]),
+            device_cycles: 100,
+            device_time: Duration::from_micros(1),
+            latency: Duration::from_millis(lat_ms),
+            device_id: 0,
+            bucket: 128,
+        }
+    }
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        for i in 1..=10 {
+            m.record(&resp(i), i != 3);
+        }
+        assert_eq!(m.completed.load(Ordering::Relaxed), 10);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.device_cycles.load(Ordering::Relaxed), 1000);
+        let (p50, p95, max) = m.latency_percentiles();
+        assert!(p50 >= Duration::from_millis(4) && p50 <= Duration::from_millis(6));
+        assert!(p95 >= p50 && max >= p95);
+        assert!(m.summary().contains("completed 10"));
+    }
+
+    #[test]
+    fn empty_percentiles_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentiles().0, Duration::ZERO);
+    }
+}

@@ -1,0 +1,137 @@
+//! Serving coordinator: the L3 layer that puts FSA devices on a request
+//! path (vLLM-router-shaped, scoped to this paper's device).
+//!
+//! Pipeline: [`request`] types flow into the [`batcher`] (groups
+//! compatible requests into device batches by padded sequence bucket),
+//! the [`router`] picks the least-loaded device worker, and each
+//! [`device`] worker owns a PJRT [`crate::runtime::Runtime`] for numerics
+//! plus the [`crate::perfmodel`] for device-cycle accounting (simulated
+//! FSA latency at 1.5 GHz).  [`metrics`] aggregates throughput/latency.
+//!
+//! Threads + channels stand in for tokio (offline environment, see
+//! DESIGN.md §substitutions); the structure is identical: bounded ingress
+//! queue, worker pool, per-request completion channels.
+
+pub mod batcher;
+pub mod device;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, ensure};
+
+use crate::config::RunConfig;
+use batcher::Batcher;
+use device::DeviceWorker;
+use metrics::Metrics;
+use request::{AttentionRequest, AttentionResponse};
+use router::Router;
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    ingress: mpsc::SyncSender<request::Envelope>,
+    batcher_handle: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<DeviceWorker>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Boot the batcher thread + device worker pool.
+    pub fn start(cfg: RunConfig) -> crate::Result<Coordinator> {
+        ensure!(cfg.devices > 0, "need at least one device");
+        let metrics = Arc::new(Metrics::new());
+        let artifacts = PathBuf::from(&cfg.artifacts_dir);
+        ensure!(
+            artifacts.join("manifest.txt").exists(),
+            "artifacts manifest not found in {:?} — run `make artifacts`",
+            artifacts
+        );
+
+        let mut workers = Vec::with_capacity(cfg.devices);
+        for id in 0..cfg.devices {
+            workers.push(DeviceWorker::spawn(id, artifacts.clone(), metrics.clone())?);
+        }
+        let router = Router::new(workers.iter().map(|w| w.handle()).collect());
+
+        let (ingress, ingress_rx) = mpsc::sync_channel(cfg.queue_depth);
+        let batcher = Batcher::new(cfg.max_batch, cfg.batch_timeout_cycles);
+        let m2 = metrics.clone();
+        let batcher_handle = std::thread::Builder::new()
+            .name("fsa-batcher".into())
+            .spawn(move || batcher.run(ingress_rx, router, m2))
+            .expect("spawning batcher");
+
+        Ok(Coordinator { ingress, batcher_handle: Some(batcher_handle), workers, metrics })
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    /// Fails fast when the ingress queue is full (backpressure).
+    pub fn submit(
+        &self,
+        req: AttentionRequest,
+    ) -> crate::Result<mpsc::Receiver<AttentionResponse>> {
+        let (tx, rx) = mpsc::channel();
+        self.metrics.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.ingress
+            .try_send(request::Envelope { req, reply: tx, enqueued: std::time::Instant::now() })
+            .map_err(|e| match e {
+                mpsc::TrySendError::Full(_) => anyhow!("ingress queue full (backpressure)"),
+                mpsc::TrySendError::Disconnected(_) => anyhow!("coordinator is shut down"),
+            })?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn submit_wait(&self, req: AttentionRequest) -> crate::Result<AttentionResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| anyhow!("worker dropped the request"))
+    }
+
+    /// Graceful shutdown: drain the batcher, stop workers.
+    pub fn shutdown(mut self) {
+        drop(self.ingress);
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        for w in self.workers.drain(..) {
+            w.shutdown();
+        }
+    }
+}
+
+/// Shared helper: bucketize a sequence length to the padded artifact
+/// sizes the runtime ships (powers of the artifact ladder).
+pub fn seq_bucket(seq_len: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().filter(|&b| b >= seq_len).min()
+}
+
+#[derive(Debug)]
+pub struct CoordinatorError;
+
+/// Lock helper that survives poisoned mutexes (a panicked worker must not
+/// wedge the whole coordinator).
+pub fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = [128, 512, 2048, 4096];
+        assert_eq!(seq_bucket(1, &buckets), Some(128));
+        assert_eq!(seq_bucket(128, &buckets), Some(128));
+        assert_eq!(seq_bucket(129, &buckets), Some(512));
+        assert_eq!(seq_bucket(4096, &buckets), Some(4096));
+        assert_eq!(seq_bucket(5000, &buckets), None);
+    }
+}

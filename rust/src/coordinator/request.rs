@@ -1,0 +1,103 @@
+//! Request/response types on the serving path.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One single-head attention request: row-major (seq_len, d) matrices.
+#[derive(Clone, Debug)]
+pub struct AttentionRequest {
+    pub id: u64,
+    pub seq_len: usize,
+    pub d: usize,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl AttentionRequest {
+    pub fn new(id: u64, seq_len: usize, d: usize, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> Self {
+        assert_eq!(q.len(), seq_len * d, "Q shape mismatch");
+        assert_eq!(k.len(), seq_len * d, "K shape mismatch");
+        assert_eq!(v.len(), seq_len * d, "V shape mismatch");
+        AttentionRequest { id, seq_len, d, q, k, v }
+    }
+
+    /// Zero-pad Q/K/V to a bucketed sequence length.
+    ///
+    /// APPROXIMATE for keys: the AOT artifacts take no mask, so padded
+    /// key rows score 0 and receive a small residual softmax weight
+    /// (their V rows are zero, so the output error is a bounded
+    /// denominator inflation).  Padded *query* rows are exact — they are
+    /// sliced away.  The coordinator therefore runs in strict mode by
+    /// default (exact-bucket artifacts only) and callers opt into padding
+    /// explicitly; masked artifacts are listed as future work in
+    /// DESIGN.md.
+    pub fn padded(&self, bucket: usize) -> AttentionRequest {
+        assert!(bucket >= self.seq_len);
+        if bucket == self.seq_len {
+            return self.clone();
+        }
+        let pad = |m: &[f32]| {
+            let mut out = vec![0.0f32; bucket * self.d];
+            out[..m.len()].copy_from_slice(m);
+            out
+        };
+        AttentionRequest {
+            id: self.id,
+            seq_len: bucket,
+            d: self.d,
+            q: pad(&self.q),
+            k: pad(&self.k),
+            v: pad(&self.v),
+        }
+    }
+}
+
+/// Completed request.
+#[derive(Clone, Debug)]
+pub struct AttentionResponse {
+    pub id: u64,
+    /// Row-major (seq_len, d) output, sliced back to the original length.
+    pub output: Result<Vec<f32>, String>,
+    /// Simulated FSA device cycles for this request's workload.
+    pub device_cycles: u64,
+    /// Simulated device time at the configured clock.
+    pub device_time: Duration,
+    /// Host wall-clock from submit to completion.
+    pub latency: Duration,
+    /// Which device served it.
+    pub device_id: usize,
+    /// Padded bucket used.
+    pub bucket: usize,
+}
+
+/// Internal envelope: request + reply channel + enqueue timestamp.
+pub struct Envelope {
+    pub req: AttentionRequest,
+    pub reply: mpsc::Sender<AttentionResponse>,
+    pub enqueued: Instant,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_preserves_prefix() {
+        let r = AttentionRequest::new(1, 2, 2, vec![1., 2., 3., 4.], vec![5., 6., 7., 8.], vec![9., 1., 2., 3.]);
+        let p = r.padded(4);
+        assert_eq!(p.seq_len, 4);
+        assert_eq!(&p.q[..4], &[1., 2., 3., 4.]);
+        assert_eq!(&p.q[4..], &[0.0; 4]);
+        assert_eq!(p.id, 1);
+        // No-op when already at bucket size.
+        let same = r.padded(2);
+        assert_eq!(same.q, r.q);
+    }
+
+    #[test]
+    #[should_panic(expected = "Q shape mismatch")]
+    fn shape_validation() {
+        AttentionRequest::new(1, 2, 2, vec![1.0], vec![0.0; 4], vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Least-loaded router over the device worker pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::request::Envelope;
+
+/// A batch handed to one device worker.
+pub type Batch = Vec<Envelope>;
+
+/// Cloneable handle to one worker's queue + load gauge.
+#[derive(Clone)]
+pub struct WorkerHandle {
+    pub id: usize,
+    pub queue: mpsc::Sender<Batch>,
+    /// Outstanding requests (not batches) on this worker.
+    pub load: Arc<AtomicUsize>,
+}
+
+pub struct Router {
+    workers: Vec<WorkerHandle>,
+    /// Round-robin tiebreaker so equal-load workers share traffic.
+    rr: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(workers: Vec<WorkerHandle>) -> Router {
+        assert!(!workers.is_empty());
+        Router { workers, rr: AtomicUsize::new(0) }
+    }
+
+    /// Pick the least-loaded worker (round-robin among ties) and enqueue.
+    /// Requests on a dead worker are bounced to the next-best one; if all
+    /// workers are gone the batch's reply channels drop, which callers
+    /// observe as a disconnected response channel.
+    pub fn dispatch(&self, batch: Batch) {
+        if batch.is_empty() {
+            return;
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        let mut order: Vec<usize> = (0..self.workers.len()).collect();
+        order.sort_by_key(|&i| {
+            (self.workers[i].load.load(Ordering::Relaxed), (i + self.workers.len() - start % self.workers.len()) % self.workers.len())
+        });
+        let mut batch = batch;
+        for &i in &order {
+            let w = &self.workers[i];
+            w.load.fetch_add(batch.len(), Ordering::Relaxed);
+            match w.queue.send(batch) {
+                Ok(()) => return,
+                Err(mpsc::SendError(b)) => {
+                    // Worker died: undo the gauge and try the next one.
+                    w.load.fetch_sub(b.len(), Ordering::Relaxed);
+                    batch = b;
+                }
+            }
+        }
+        // All workers dead: drop the batch (reply channels disconnect).
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::AttentionRequest;
+
+    fn env(id: u64) -> Envelope {
+        let m = vec![0.0f32; 8];
+        Envelope {
+            req: AttentionRequest::new(id, 2, 4, m.clone(), m.clone(), m),
+            reply: mpsc::channel().0,
+            enqueued: std::time::Instant::now(),
+        }
+    }
+
+    fn handle(id: usize) -> (WorkerHandle, mpsc::Receiver<Batch>) {
+        let (tx, rx) = mpsc::channel();
+        (WorkerHandle { id, queue: tx, load: Arc::new(AtomicUsize::new(0)) }, rx)
+    }
+
+    #[test]
+    fn prefers_least_loaded() {
+        let (h0, rx0) = handle(0);
+        let (h1, rx1) = handle(1);
+        h0.load.store(10, Ordering::Relaxed);
+        let r = Router::new(vec![h0, h1.clone()]);
+        r.dispatch(vec![env(1), env(2)]);
+        assert_eq!(rx1.try_recv().unwrap().len(), 2);
+        assert!(rx0.try_recv().is_err());
+        assert_eq!(h1.load.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn fails_over_when_worker_dead() {
+        let (h0, rx0) = handle(0);
+        let (h1, rx1) = handle(1);
+        drop(rx0); // worker 0 is gone
+        let r = Router::new(vec![h0.clone(), h1]);
+        r.dispatch(vec![env(7)]);
+        assert_eq!(rx1.try_recv().unwrap()[0].req.id, 7);
+        // Gauge on the dead worker was rolled back.
+        assert_eq!(h0.load.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn all_dead_drops_batch_without_panic() {
+        let (h0, rx0) = handle(0);
+        drop(rx0);
+        let r = Router::new(vec![h0]);
+        r.dispatch(vec![env(1)]);
+    }
+}

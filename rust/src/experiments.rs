@@ -1,0 +1,320 @@
+//! Experiment drivers: one function per paper table/figure, shared by the
+//! `fsa` CLI and the `benches/` targets so both print identical reports.
+//! EXPERIMENTS.md records their output against the paper's numbers.
+
+use std::path::Path;
+
+use crate::accel::{self, baseline};
+use crate::area::AreaBreakdown;
+use crate::benchutil::Table;
+use crate::config::AccelConfig;
+use crate::kernel::flash::detranspose_output;
+use crate::kernel::{flash_attention_program, FlashLayout, FlashParams};
+use crate::numerics::pwl::{error_sweep_ref, EvalMode};
+use crate::numerics::reference::{mat_error, Mat, MatError};
+use crate::numerics::SplitMix64;
+use crate::perfmodel::fsa_flash_perf;
+use crate::runtime::Runtime;
+use crate::schedule::{fsa_total_cycles, naive_two_matmul, InnerSchedule, Variant};
+use crate::sim::{Machine, MachineConfig};
+
+/// Paper §6.2.2 input distribution, one (L, d) matrix.
+pub fn paper_input(rng: &mut SplitMix64, l: usize, d: usize) -> Mat {
+    Mat::new(l, d, rng.spiky_matrix(l, d))
+}
+
+// ---------------------------------------------------------------------
+// Figure 1: component active time on NeuronCore-v2 running FlashAttention
+// ---------------------------------------------------------------------
+
+pub fn fig1_report(seq: usize) -> String {
+    let mut t = Table::new(&["machine", "seq", "tensor%", "vector%", "scalar%", "dma%", "util%"]);
+    for name in ["neuron-v2", "tpuv5e"] {
+        let cfg = AccelConfig::builtin(name).unwrap();
+        let p = baseline::baseline_flash_perf(&cfg, seq, 128);
+        t.row(&[
+            name.into(),
+            seq.to_string(),
+            format!("{:.1}", 100.0 * p.tensor_active),
+            format!("{:.1}", 100.0 * p.vector_active),
+            format!("{:.1}", 100.0 * p.scalar_active),
+            format!("{:.1}", 100.0 * p.dma_active),
+            format!("{:.1}", 100.0 * p.utilization),
+        ]);
+    }
+    // FSA for contrast: array active ~100%, no vector/scalar unit at all.
+    let cfg = AccelConfig::builtin("fsa").unwrap();
+    let p = fsa_flash_perf(&cfg, seq, 128, Variant::DualPath, 8);
+    t.row(&[
+        "fsa".into(),
+        seq.to_string(),
+        format!("{:.1}", 100.0 * p.array_active_cycles as f64 / p.total_cycles as f64),
+        "-".into(),
+        "-".into(),
+        format!("{:.1}", 100.0 * p.dma_cycles as f64 / p.total_cycles as f64),
+        format!("{:.1}", 100.0 * p.utilization),
+    ]);
+    format!(
+        "Figure 1 — active time per component (paper: Neuron tensor ~45%, scalar ~80%)\n{}",
+        t.to_string()
+    )
+}
+
+// ---------------------------------------------------------------------
+// Figure 11: FLOPs/s utilization, FSA vs TPUv5e vs Neuron-v2
+// ---------------------------------------------------------------------
+
+pub fn fig11_report(seq_lens: &[usize], d: usize) -> String {
+    let fsa = accel::utilization_curve("fsa", seq_lens, d).unwrap();
+    let tpu = accel::utilization_curve("tpuv5e", seq_lens, d).unwrap();
+    let neuron = accel::utilization_curve("neuron-v2", seq_lens, d).unwrap();
+    let mut t = Table::new(&["seq", "FSA%", "TPUv5e%", "Neuron-v2%", "FSA/TPU", "FSA/Neuron"]);
+    for i in 0..seq_lens.len() {
+        t.row(&[
+            seq_lens[i].to_string(),
+            format!("{:.1}", 100.0 * fsa[i].utilization),
+            format!("{:.1}", 100.0 * tpu[i].utilization),
+            format!("{:.1}", 100.0 * neuron[i].utilization),
+            format!("{:.2}", fsa[i].utilization / tpu[i].utilization),
+            format!("{:.2}", fsa[i].utilization / neuron[i].utilization),
+        ]);
+    }
+    format!(
+        "Figure 11 — FlashAttention FLOPs/s utilization (paper avg: 1.77x TPUv5e, 4.83x Neuron)\n{}\
+         mean FSA/TPUv5e = {:.2}   mean FSA/Neuron-v2 = {:.2}\n",
+        t.to_string(),
+        accel::mean_ratio(&fsa, &tpu),
+        accel::mean_ratio(&fsa, &neuron),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Figure 12: exp2 PWL error vs segment count
+// ---------------------------------------------------------------------
+
+pub fn fig12_report(segments: &[usize]) -> String {
+    let mut t = Table::new(&["segments", "MAE", "MRE", "MAE(f64 ref)", "MRE(f64 ref)"]);
+    for &s in segments {
+        // Paper mode: fp16 PWL with flush-to-zero vs fp16-rounded exp2
+        // reference (reproduces MAE 0.00014 / MRE 0.02728 at 8 segments).
+        let paper = error_sweep_ref(s, EvalMode::F16, true);
+        let ideal = error_sweep_ref(s, EvalMode::Exact, false);
+        t.row(&[
+            s.to_string(),
+            format!("{:.5e}", paper.mae),
+            format!("{:.5}", paper.mre),
+            format!("{:.5e}", ideal.mae),
+            format!("{:.5e}", ideal.mre),
+        ]);
+    }
+    format!(
+        "Figure 12 — exp2 PWL error over all negative normal fp16 \
+         (paper @8: MAE 0.00014, MRE 0.02728)\n{}",
+        t.to_string()
+    )
+}
+
+// ---------------------------------------------------------------------
+// Table 2: end-to-end FlashAttention accuracy on FSA numerics
+// ---------------------------------------------------------------------
+
+/// One Table-2 row via the PJRT artifacts (fsa_attn vs dense SDPA when
+/// available, else the exact-exp2 flash twin).
+pub fn table2_row(rt: &mut Runtime, seq: usize, d: usize, seed: u64) -> crate::Result<(MatError, &'static str)> {
+    let mut rng = SplitMix64::new(seed);
+    let q = paper_input(&mut rng, seq, d);
+    let k = paper_input(&mut rng, seq, d);
+    let v = paper_input(&mut rng, seq, d);
+
+    let fsa_name = rt
+        .manifest
+        .best_for("fsa_attn", seq, d)
+        .filter(|m| m.seq_len == seq)
+        .ok_or_else(|| anyhow::anyhow!("no fsa_attn artifact for seq {seq}"))?
+        .name
+        .clone();
+    let got = rt.execute_attention(&fsa_name, &q.data, &k.data, &v.data)?;
+
+    let (ref_kind, want) = match rt
+        .manifest
+        .best_for("sdpa", seq, d)
+        .filter(|m| m.seq_len == seq)
+        .map(|m| m.name.clone())
+    {
+        Some(name) => ("sdpa", rt.execute_attention(&name, &q.data, &k.data, &v.data)?),
+        None => {
+            let name = rt
+                .manifest
+                .best_for("flash_exact", seq, d)
+                .filter(|m| m.seq_len == seq)
+                .ok_or_else(|| anyhow::anyhow!("no reference artifact for seq {seq}"))?
+                .name
+                .clone();
+            ("flash_exact", rt.execute_attention(&name, &q.data, &k.data, &v.data)?)
+        }
+    };
+    Ok((
+        mat_error(&Mat::new(seq, d, got), &Mat::new(seq, d, want)),
+        ref_kind,
+    ))
+}
+
+pub fn table2_report(artifacts: &Path, seqs: &[usize], d: usize, seed: u64) -> crate::Result<String> {
+    let mut rt = Runtime::new(artifacts)?;
+    let mut t = Table::new(&["SeqLen", "MAE", "RMSE", "MRE", "reference"]);
+    for &seq in seqs {
+        match table2_row(&mut rt, seq, d, seed ^ seq as u64) {
+            Ok((e, kind)) => t.row(&[
+                seq.to_string(),
+                format!("{:.3e}", e.mae),
+                format!("{:.3e}", e.rmse),
+                format!("{:.3e}", e.mre),
+                kind.into(),
+            ]),
+            Err(err) => t.row(&[
+                seq.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("unavailable: {err}"),
+            ]),
+        }
+    }
+    Ok(format!(
+        "Table 2 — FlashAttention accuracy on FSA vs exact reference \
+         (paper @2048: MAE 7.98e-3, RMSE 1.32e-2, MRE 1.56e-2)\n{}",
+        t.to_string()
+    ))
+}
+
+// ---------------------------------------------------------------------
+// Table 3: area breakdown
+// ---------------------------------------------------------------------
+
+pub fn table3_report(n: usize) -> String {
+    let a = AreaBreakdown::for_array(n);
+    format!(
+        "Table 3 — FSA area breakdown at {n}x{n} (paper: +12.07% overhead)\n{}\
+         overhead = {:.2}%\n",
+        a.to_table(),
+        100.0 * a.overhead_fraction()
+    )
+}
+
+// ---------------------------------------------------------------------
+// §3.5 / §8.2 cycle validation: cycle-accurate sim vs closed form
+// ---------------------------------------------------------------------
+
+pub fn cycles_report(sizes: &[usize]) -> String {
+    let mut t = Table::new(&[
+        "N", "formula 5N+10", "sim cycles (2x2 tiles)", "formula total", "naive 8N-2",
+        "single-path 6N+10",
+    ]);
+    for &n in sizes {
+        let p = FlashParams {
+            seq_len: 2 * n,
+            d: n,
+            spad_elems: (6 * n * n) as u32,
+            accum_elems: (n * n + n) as u32,
+        };
+        let layout = FlashLayout::packed(&p);
+        let prog = flash_attention_program(&p, &layout).unwrap();
+        let mut cfg = MachineConfig::small(n);
+        cfg.mem_elems = layout.mem_elems(&p).max(1 << 16);
+        let mut m = Machine::new(cfg);
+        let mut rng = SplitMix64::new(n as u64);
+        let data = rng.normal_matrix(2 * n, n);
+        m.write_mem(layout.q_addr, &data);
+        m.write_mem(layout.k_addr, &data);
+        m.write_mem(layout.v_addr, &data);
+        let stats = m.run_program(&prog).unwrap();
+        let sched = InnerSchedule::new(n, Variant::DualPath, 8);
+        let single = InnerSchedule::new(n, Variant::SinglePath, 8);
+        t.row(&[
+            n.to_string(),
+            sched.inner_latency().to_string(),
+            stats.cycles.to_string(),
+            fsa_total_cycles(2 * n, n, Variant::DualPath, 8).to_string(),
+            naive_two_matmul(n, n).to_string(),
+            single.inner_latency().to_string(),
+        ]);
+    }
+    format!(
+        "Cycle validation — simulator vs §3.5 closed forms (inner loop 5N+10; \
+         naive two-matmul 8N-2; §8.2 variant 6N+10)\n{}",
+        t.to_string()
+    )
+}
+
+// ---------------------------------------------------------------------
+// Table 2 cross-check at small scale through the cycle-accurate machine
+// ---------------------------------------------------------------------
+
+/// Accuracy of the *cycle simulator* vs dense SDPA — closes the loop
+/// device-sim <-> kernel <-> oracle at sizes the sim can chew.
+pub fn sim_accuracy_row(n: usize, seq: usize, seed: u64) -> crate::Result<MatError> {
+    let p = FlashParams {
+        seq_len: seq,
+        d: n,
+        spad_elems: (6 * n * n) as u32,
+        accum_elems: (n * n + n) as u32,
+    };
+    let layout = FlashLayout::packed(&p);
+    let prog = flash_attention_program(&p, &layout)?;
+    let mut cfg = MachineConfig::small(n);
+    cfg.mem_elems = layout.mem_elems(&p).max(1 << 16);
+    let mut m = Machine::new(cfg);
+    let mut rng = SplitMix64::new(seed);
+    let q = paper_input(&mut rng, seq, n);
+    let k = paper_input(&mut rng, seq, n);
+    let v = paper_input(&mut rng, seq, n);
+    m.write_mem(layout.q_addr, &q.data);
+    m.write_mem(layout.k_addr, &k.data);
+    m.write_mem(layout.v_addr, &v.data);
+    m.run_program(&prog)?;
+    let out = detranspose_output(m.read_mem(0, layout.mem_elems(&p)), &layout, &p);
+    let dense = crate::numerics::reference::sdpa(&q, &k, &v);
+    Ok(mat_error(&Mat::new(seq, n, out), &dense))
+}
+
+pub fn table1_report() -> String {
+    let mut t = Table::new(&[
+        "Accelerator", "array", "#arrays", "TFLOPs/s", "freq GHz", "BW GB/s", "spad",
+        "accum", "vector unit?",
+    ]);
+    for name in ["tpuv5e", "neuron-v2", "fsa"] {
+        let c = AccelConfig::builtin(name).unwrap();
+        t.row(&[
+            c.name.clone(),
+            format!("{0}x{0}", c.array_size),
+            c.num_arrays.to_string(),
+            format!("{:.2}", c.peak_tflops()),
+            format!("{:.1}", c.freq_ghz),
+            format!("{:.0}", c.mem_bw_gbs),
+            format!("{}KiB", c.spad_bytes / 1024),
+            format!("{}KiB", c.accum_bytes / 1024),
+            if c.vector_unit.is_some() { "yes" } else { "no" }.into(),
+        ]);
+    }
+    format!("Table 1 — accelerator configurations\n{}", t.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_render() {
+        assert!(fig1_report(4096).contains("neuron-v2"));
+        assert!(fig11_report(&[2048, 4096], 128).contains("FSA/Neuron"));
+        assert!(fig12_report(&[2, 8]).contains("segments"));
+        assert!(table3_report(128).contains("12.07"));
+        assert!(table1_report().contains("tpuv5e"));
+    }
+
+    #[test]
+    fn sim_accuracy_in_paper_error_band() {
+        let e = sim_accuracy_row(16, 32, 5).unwrap();
+        assert!(e.mae < 2e-2, "{e:?}");
+    }
+}

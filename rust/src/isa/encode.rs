@@ -1,0 +1,224 @@
+//! Fixed-width binary encoding of FSA instructions.
+//!
+//! Two little-endian u64 words per instruction, mirroring the "wider bit
+//! fields for DMA" note of §4.2: word 0 carries the opcode, flags and the
+//! input-tile descriptor; word 1 carries the output-tile descriptor.
+//!
+//! Layout per descriptor (52 bits): addr:32 | rows:10 | cols:10, with the
+//! row stride packed into the remaining bits of the word.  Tiles are
+//! bounded at 1024 x 1024 elements, far above the 128 x 128 the device
+//! uses.
+
+use anyhow::{bail, ensure};
+
+use super::{Instruction, Program, Space, TileDesc};
+
+const OP_LOAD_TILE: u8 = 1;
+const OP_STORE_TILE: u8 = 2;
+const OP_LOAD_STATIONARY: u8 = 3;
+const OP_ATTN_SCORE: u8 = 4;
+const OP_ATTN_VALUE: u8 = 5;
+const OP_RECIPROCAL: u8 = 6;
+const OP_ATTN_LSE_NORM: u8 = 7;
+
+const FLAG_FIRST: u8 = 1 << 0;
+
+fn space_code(s: Space) -> u8 {
+    match s {
+        Space::Main => 0,
+        Space::Spad => 1,
+        Space::Accum => 2,
+    }
+}
+
+fn space_from(code: u8) -> crate::Result<Space> {
+    Ok(match code {
+        0 => Space::Main,
+        1 => Space::Spad,
+        2 => Space::Accum,
+        c => bail!("invalid space code {c}"),
+    })
+}
+
+/// Tile dimensions are encoded as log2 (4 bits each): device tiles are
+/// powers of two up to 1024, and 0 encodes an absent tile.
+fn enc_dim(v: u16) -> crate::Result<u64> {
+    ensure!(
+        v == 0 || (v.is_power_of_two() && v <= 1024),
+        "tile dims must be powers of two <= 1024, got {v}"
+    );
+    Ok(if v == 0 { 0xF } else { v.trailing_zeros() as u64 })
+}
+
+fn dec_dim(code: u64) -> u16 {
+    if code == 0xF {
+        0
+    } else {
+        1u16 << code
+    }
+}
+
+/// Encode one instruction into two u64 words.
+///
+/// word0: opcode:8 | flags:8 | in_space:2 | out_space:2 | in_stride:20 | out_stride:20
+/// word1: in_addr:24 | out_addr:24 | log2-dims:16 (in.rows, in.cols, out.rows, out.cols)
+pub fn encode(i: &Instruction) -> crate::Result<[u64; 2]> {
+    let (op, flags, input, output) = match *i {
+        Instruction::LoadTile { src, dst } => (OP_LOAD_TILE, 0, src, Some(dst)),
+        Instruction::StoreTile { src, dst } => (OP_STORE_TILE, 0, src, Some(dst)),
+        Instruction::LoadStationary { src } => (OP_LOAD_STATIONARY, 0, src, None),
+        Instruction::AttnScore { k, lse, first } => {
+            (OP_ATTN_SCORE, if first { FLAG_FIRST } else { 0 }, k, Some(lse))
+        }
+        Instruction::AttnValue { v, out, first } => {
+            (OP_ATTN_VALUE, if first { FLAG_FIRST } else { 0 }, v, Some(out))
+        }
+        Instruction::Reciprocal { l } => (OP_RECIPROCAL, 0, l, None),
+        Instruction::AttnLseNorm { out, l } => (OP_ATTN_LSE_NORM, 0, l, Some(out)),
+    };
+    let out = output.unwrap_or(TileDesc::contiguous(Space::Main, 0, 0, 0));
+    ensure!(input.stride <= 0xF_FFFF && out.stride <= 0xF_FFFF, "stride too large");
+    ensure!(
+        input.addr < (1 << 24) && out.addr < (1 << 24),
+        "address exceeds 24-bit field"
+    );
+
+    let word0 = (op as u64)
+        | ((flags as u64) << 8)
+        | ((space_code(input.space) as u64) << 16)
+        | ((space_code(out.space) as u64) << 18)
+        | ((input.stride as u64) << 20)
+        | ((out.stride as u64) << 40);
+    let dims = enc_dim(input.rows)?
+        | (enc_dim(input.cols)? << 4)
+        | (enc_dim(out.rows)? << 8)
+        | (enc_dim(out.cols)? << 12);
+    let word1 = (input.addr as u64) | ((out.addr as u64) << 24) | (dims << 48);
+    Ok([word0, word1])
+}
+
+/// Decode two u64 words back into an instruction.
+pub fn decode(words: [u64; 2]) -> crate::Result<Instruction> {
+    let op = (words[0] & 0xFF) as u8;
+    let flags = ((words[0] >> 8) & 0xFF) as u8;
+    let in_space = space_from(((words[0] >> 16) & 0x3) as u8)?;
+    let out_space = space_from(((words[0] >> 18) & 0x3) as u8)?;
+    let in_stride = ((words[0] >> 20) & 0xF_FFFF) as u32;
+    let out_stride = ((words[0] >> 40) & 0xF_FFFF) as u32;
+    let in_addr = (words[1] & 0xFF_FFFF) as u32;
+    let out_addr = ((words[1] >> 24) & 0xFF_FFFF) as u32;
+    let dims = words[1] >> 48;
+    let input = TileDesc {
+        space: in_space,
+        addr: in_addr,
+        rows: dec_dim(dims & 0xF),
+        cols: dec_dim((dims >> 4) & 0xF),
+        stride: in_stride,
+    };
+    let output = TileDesc {
+        space: out_space,
+        addr: out_addr,
+        rows: dec_dim((dims >> 8) & 0xF),
+        cols: dec_dim((dims >> 12) & 0xF),
+        stride: out_stride,
+    };
+    let first = flags & FLAG_FIRST != 0;
+    Ok(match op {
+        OP_LOAD_TILE => Instruction::LoadTile { src: input, dst: output },
+        OP_STORE_TILE => Instruction::StoreTile { src: input, dst: output },
+        OP_LOAD_STATIONARY => Instruction::LoadStationary { src: input },
+        OP_ATTN_SCORE => Instruction::AttnScore { k: input, lse: output, first },
+        OP_ATTN_VALUE => Instruction::AttnValue { v: input, out: output, first },
+        OP_RECIPROCAL => Instruction::Reciprocal { l: input },
+        OP_ATTN_LSE_NORM => Instruction::AttnLseNorm { out: output, l: input },
+        c => bail!("invalid opcode {c}"),
+    })
+}
+
+/// Encode a whole program into a flat word stream.
+pub fn encode_program(p: &Program) -> crate::Result<Vec<u64>> {
+    let mut words = Vec::with_capacity(p.len() * 2);
+    for i in &p.instructions {
+        let [a, b] = encode(i)?;
+        words.push(a);
+        words.push(b);
+    }
+    Ok(words)
+}
+
+/// Decode a flat word stream back into a program.
+pub fn decode_program(words: &[u64]) -> crate::Result<Program> {
+    ensure!(words.len() % 2 == 0, "truncated instruction stream");
+    let mut p = Program::new();
+    for pair in words.chunks(2) {
+        p.push(decode([pair[0], pair[1]])?);
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::SplitMix64;
+
+    fn rand_tile(r: &mut SplitMix64, space: Space) -> TileDesc {
+        let rows = 1u16 << r.next_below(8);
+        let cols = 1u16 << r.next_below(8);
+        TileDesc {
+            space,
+            addr: r.next_below(1 << 20) as u32,
+            rows,
+            cols,
+            stride: cols as u32 + r.next_below(64) as u32,
+        }
+    }
+
+    #[test]
+    fn round_trip_all_opcodes() {
+        let mut r = SplitMix64::new(99);
+        for trial in 0..2000 {
+            let a = rand_tile(&mut r, Space::Spad);
+            let b = rand_tile(&mut r, Space::Accum);
+            let m = rand_tile(&mut r, Space::Main);
+            let first = r.next_below(2) == 0;
+            let insns = [
+                Instruction::LoadTile { src: m, dst: a },
+                Instruction::StoreTile { src: b, dst: m },
+                Instruction::LoadStationary { src: a },
+                Instruction::AttnScore { k: a, lse: b, first },
+                Instruction::AttnValue { v: a, out: b, first },
+                Instruction::Reciprocal { l: b },
+                Instruction::AttnLseNorm { out: b, l: b },
+            ];
+            let i = insns[(trial % insns.len()) as usize];
+            let enc = encode(&i).unwrap();
+            let dec = decode(enc).unwrap();
+            assert_eq!(i, dec, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn program_stream_round_trip() {
+        let mut p = Program::new();
+        let t = TileDesc::contiguous(Space::Spad, 0x40, 128, 128);
+        let l = TileDesc::contiguous(Space::Accum, 0, 1, 128);
+        p.push(Instruction::LoadStationary { src: t });
+        p.push(Instruction::AttnScore { k: t, lse: l, first: true });
+        p.push(Instruction::Reciprocal { l });
+        let words = encode_program(&p).unwrap();
+        assert_eq!(words.len(), 6);
+        assert_eq!(decode_program(&words).unwrap(), p);
+    }
+
+    #[test]
+    fn rejects_invalid_streams() {
+        assert!(decode_program(&[1]).is_err()); // odd length
+        assert!(decode([0xFF, 0]).is_err()); // bad opcode
+        let t = TileDesc { space: Space::Spad, addr: 0, rows: 100, cols: 128, stride: 128 };
+        // Non-power-of-two rows are rejected by the compact dim encoding.
+        assert!(encode(&Instruction::LoadStationary { src: t }).is_err());
+        // Oversized address.
+        let big = TileDesc::contiguous(Space::Main, 1 << 27, 128, 128);
+        assert!(encode(&Instruction::LoadStationary { src: big }).is_err());
+    }
+}

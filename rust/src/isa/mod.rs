@@ -1,0 +1,262 @@
+//! The FSA instruction set (paper §4.2 + Fig. 9).
+//!
+//! Five compute instructions + two DMA instructions.  Compute
+//! instructions are one-tile-in / one-tile-out and *fully deterministic*
+//! once issued (the controller statically schedules every control signal
+//! from a cycle counter); DMA instructions carry a 2D descriptor pair.
+//! Instructions of different classes (load / store / compute) execute
+//! asynchronously; within a class they issue in order.
+//!
+//! [`encode`] provides the fixed-width binary format (two u64 words per
+//! instruction, like the real device's instruction queue entries).
+
+pub mod encode;
+
+/// Memory spaces visible to the ISA (paper §5.1's MTile/STile/ATile).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Space {
+    /// Backing memory behind the AXI ports.
+    Main,
+    /// Scratchpad SRAM.
+    Spad,
+    /// Accumulation SRAM at the bottom edge of the array.
+    Accum,
+}
+
+/// A 2D tile descriptor: `rows x cols` elements starting at `addr`
+/// (element-addressed) with a row `stride` in elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileDesc {
+    pub space: Space,
+    pub addr: u32,
+    pub rows: u16,
+    pub cols: u16,
+    pub stride: u32,
+}
+
+impl TileDesc {
+    pub fn contiguous(space: Space, addr: u32, rows: u16, cols: u16) -> TileDesc {
+        TileDesc { space, addr, rows, cols, stride: cols as u32 }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.rows as usize * self.cols as usize
+    }
+
+    /// Inclusive-exclusive element footprint [addr, end) assuming row-major.
+    pub fn end_addr(&self) -> u32 {
+        if self.rows == 0 {
+            self.addr
+        } else {
+            self.addr + (self.rows as u32 - 1) * self.stride + self.cols as u32
+        }
+    }
+
+    pub fn overlaps(&self, other: &TileDesc) -> bool {
+        self.space == other.space
+            && self.addr < other.end_addr()
+            && other.addr < self.end_addr()
+    }
+}
+
+/// The instruction set.  Operand conventions follow Listing 1 of the
+/// paper; every compute instruction implicitly targets the systolic array
+/// + accumulator of its device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Instruction {
+    /// DMA: main memory -> scratchpad SRAM.
+    LoadTile { src: TileDesc, dst: TileDesc },
+    /// DMA: accumulation SRAM -> main memory.
+    StoreTile { src: TileDesc, dst: TileDesc },
+    /// Preload the stationary matrix (Q tile) into the PE array.
+    LoadStationary { src: TileDesc },
+    /// First matmul S = Q K^T fused with online softmax: rowmax via the
+    /// CMP row, in-place subtract/scale/exp2, rowsum; leaves P resident in
+    /// the array and accumulates the (log-)exponent sum into `lse`.
+    /// `first` resets the running max/denominator (j == 0 of Algorithm 1).
+    AttnScore { k: TileDesc, lse: TileDesc, first: bool },
+    /// Second matmul O += P V into the accumulator (with diag(b) rescale).
+    AttnValue { v: TileDesc, out: TileDesc, first: bool },
+    /// Accumulator-local reciprocal of the exponent sum.
+    Reciprocal { l: TileDesc },
+    /// Scale the accumulated O tile by the reciprocal (line 21).
+    AttnLseNorm { out: TileDesc, l: TileDesc },
+}
+
+/// Execution class for queue routing (paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    Load,
+    Store,
+    Compute,
+}
+
+impl Instruction {
+    pub fn class(&self) -> Class {
+        match self {
+            Instruction::LoadTile { .. } => Class::Load,
+            Instruction::StoreTile { .. } => Class::Store,
+            _ => Class::Compute,
+        }
+    }
+
+    /// Human-readable mnemonic (used by the disassembler and traces).
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instruction::LoadTile { .. } => "load_tile",
+            Instruction::StoreTile { .. } => "store_tile",
+            Instruction::LoadStationary { .. } => "load_stationary",
+            Instruction::AttnScore { .. } => "attn_score",
+            Instruction::AttnValue { .. } => "attn_value",
+            Instruction::Reciprocal { .. } => "reciprocal",
+            Instruction::AttnLseNorm { .. } => "attn_lse_norm",
+        }
+    }
+
+    /// The SRAM tile this instruction reads (compute instructions read
+    /// exactly one input tile — the §4.2 "one-tile-in" rule).
+    pub fn input_tile(&self) -> Option<&TileDesc> {
+        match self {
+            Instruction::LoadTile { src, .. } => Some(src),
+            Instruction::StoreTile { src, .. } => Some(src),
+            Instruction::LoadStationary { src } => Some(src),
+            Instruction::AttnScore { k, .. } => Some(k),
+            Instruction::AttnValue { v, .. } => Some(v),
+            Instruction::Reciprocal { l } => Some(l),
+            Instruction::AttnLseNorm { l, .. } => Some(l),
+        }
+    }
+
+    /// The tile this instruction writes, if any.
+    pub fn output_tile(&self) -> Option<&TileDesc> {
+        match self {
+            Instruction::LoadTile { dst, .. } => Some(dst),
+            Instruction::StoreTile { dst, .. } => Some(dst),
+            Instruction::LoadStationary { .. } => None,
+            Instruction::AttnScore { lse, .. } => Some(lse),
+            Instruction::AttnValue { out, .. } => Some(out),
+            Instruction::Reciprocal { l } => Some(l),
+            Instruction::AttnLseNorm { out, .. } => Some(out),
+        }
+    }
+}
+
+/// A compiled FSA program: the unit the JIT builder emits and the device
+/// consumes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Program {
+    pub instructions: Vec<Instruction>,
+}
+
+impl Program {
+    pub fn new() -> Program {
+        Program::default()
+    }
+
+    pub fn push(&mut self, i: Instruction) {
+        self.instructions.push(i);
+    }
+
+    pub fn len(&self) -> usize {
+        self.instructions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instructions.is_empty()
+    }
+
+    /// Count instructions per class (used by scheduling sanity checks).
+    pub fn class_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for i in &self.instructions {
+            match i.class() {
+                Class::Load => c.0 += 1,
+                Class::Store => c.1 += 1,
+                Class::Compute => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Disassemble into a printable listing.
+    pub fn disasm(&self) -> String {
+        let mut out = String::new();
+        for (pc, i) in self.instructions.iter().enumerate() {
+            out.push_str(&format!("{pc:5}: {}\n", disasm_one(i)));
+        }
+        out
+    }
+}
+
+fn disasm_one(i: &Instruction) -> String {
+    fn t(d: &TileDesc) -> String {
+        let s = match d.space {
+            Space::Main => "mem",
+            Space::Spad => "spad",
+            Space::Accum => "acc",
+        };
+        format!("{s}[{:#x} {}x{} stride {}]", d.addr, d.rows, d.cols, d.stride)
+    }
+    match i {
+        Instruction::LoadTile { src, dst } => format!("load_tile {} -> {}", t(src), t(dst)),
+        Instruction::StoreTile { src, dst } => format!("store_tile {} -> {}", t(src), t(dst)),
+        Instruction::LoadStationary { src } => format!("load_stationary {}", t(src)),
+        Instruction::AttnScore { k, lse, first } => {
+            format!("attn_score k={} lse={} first={first}", t(k), t(lse))
+        }
+        Instruction::AttnValue { v, out, first } => {
+            format!("attn_value v={} out={} first={first}", t(v), t(out))
+        }
+        Instruction::Reciprocal { l } => format!("reciprocal {}", t(l)),
+        Instruction::AttnLseNorm { out, l } => {
+            format!("attn_lse_norm out={} l={}", t(out), t(l))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tile(addr: u32, rows: u16, cols: u16) -> TileDesc {
+        TileDesc::contiguous(Space::Spad, addr, rows, cols)
+    }
+
+    #[test]
+    fn classes_route_correctly() {
+        let load = Instruction::LoadTile { src: tile(0, 4, 4), dst: tile(0, 4, 4) };
+        let comp = Instruction::AttnScore { k: tile(0, 4, 4), lse: tile(0, 1, 4), first: true };
+        assert_eq!(load.class(), Class::Load);
+        assert_eq!(comp.class(), Class::Compute);
+        let mut p = Program::new();
+        p.push(load);
+        p.push(comp);
+        assert_eq!(p.class_counts(), (1, 0, 1));
+    }
+
+    #[test]
+    fn tile_overlap_logic() {
+        let a = tile(0, 2, 8); // [0, 16)
+        let b = tile(8, 2, 8); // [8, 24)
+        let c = tile(16, 2, 8); // [16, 32)
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+        let mut d = b;
+        d.space = Space::Accum;
+        assert!(!a.overlaps(&d)); // different space
+    }
+
+    #[test]
+    fn strided_tile_footprint() {
+        let t = TileDesc { space: Space::Main, addr: 100, rows: 3, cols: 4, stride: 10 };
+        assert_eq!(t.end_addr(), 100 + 2 * 10 + 4);
+        assert_eq!(t.elems(), 12);
+    }
+
+    #[test]
+    fn disasm_is_stable() {
+        let i = Instruction::AttnValue { v: tile(64, 8, 8), out: tile(0, 8, 8), first: false };
+        assert!(disasm_one(&i).contains("attn_value"));
+        assert!(disasm_one(&i).contains("first=false"));
+    }
+}

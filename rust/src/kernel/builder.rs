@@ -1,0 +1,190 @@
+//! Typed tiles + the JIT kernel builder (paper §5.1–§5.3).
+
+use anyhow::ensure;
+
+use crate::isa::{Instruction, Program, Space, TileDesc};
+
+/// Main-memory tensor handle (paper's `MTile`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MTile(pub TileDesc);
+
+/// Scratchpad-SRAM tile handle (`STile`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct STile(pub TileDesc);
+
+/// Accumulation-SRAM tile handle (`ATile`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ATile(pub TileDesc);
+
+impl MTile {
+    pub fn rows(&self) -> usize {
+        self.0.rows as usize
+    }
+    pub fn cols(&self) -> usize {
+        self.0.cols as usize
+    }
+
+    /// Split along rows into `rows / chunk` sub-tiles (PyTorch-like
+    /// `split(chunk, dim=-2)` for 2D row-major tensors).
+    pub fn split_rows(&self, chunk: u16) -> Vec<MTile> {
+        assert!(self.0.rows % chunk == 0, "ragged split: {} % {chunk}", self.0.rows);
+        (0..self.0.rows / chunk)
+            .map(|i| {
+                let mut t = self.0;
+                t.addr += i as u32 * chunk as u32 * t.stride;
+                t.rows = chunk;
+                MTile(t)
+            })
+            .collect()
+    }
+}
+
+/// Memory-space allocators for kernel authors: bump allocators over the
+/// three spaces, mirroring `F.alloc_mem / F.alloc_spad / F.alloc_accum`.
+pub struct Alloc {
+    space: Space,
+    next: u32,
+    capacity: u32,
+}
+
+impl Alloc {
+    pub fn new(space: Space, capacity_elems: u32) -> Alloc {
+        Alloc { space, next: 0, capacity: capacity_elems }
+    }
+
+    pub fn tile(&mut self, rows: u16, cols: u16) -> crate::Result<TileDesc> {
+        let elems = rows as u32 * cols as u32;
+        ensure!(
+            self.next + elems <= self.capacity,
+            "{:?} space exhausted: need {elems} at {}, cap {}",
+            self.space,
+            self.next,
+            self.capacity
+        );
+        let t = TileDesc::contiguous(self.space, self.next, rows, cols);
+        self.next += elems;
+        Ok(t)
+    }
+
+    pub fn used(&self) -> u32 {
+        self.next
+    }
+}
+
+/// The JIT builder: each method emits one ISA instruction, with tile
+/// types enforcing the §4.2 operand contracts.
+#[derive(Default)]
+pub struct KernelBuilder {
+    program: Program,
+}
+
+impl KernelBuilder {
+    pub fn new() -> KernelBuilder {
+        KernelBuilder::default()
+    }
+
+    /// `load_tile(src: MTile, dst: STile)` — DMA into scratchpad.
+    pub fn load_tile(&mut self, src: MTile, dst: STile) -> crate::Result<()> {
+        ensure!(
+            src.0.rows == dst.0.rows && src.0.cols == dst.0.cols,
+            "load_tile shape mismatch: {:?} -> {:?}",
+            src.0,
+            dst.0
+        );
+        self.program.push(Instruction::LoadTile { src: src.0, dst: dst.0 });
+        Ok(())
+    }
+
+    /// `store_tile(src: ATile, dst: MTile)` — DMA out of the accumulator.
+    pub fn store_tile(&mut self, src: ATile, dst: MTile) -> crate::Result<()> {
+        ensure!(
+            src.0.rows == dst.0.rows && src.0.cols == dst.0.cols,
+            "store_tile shape mismatch: {:?} -> {:?}",
+            src.0,
+            dst.0
+        );
+        self.program.push(Instruction::StoreTile { src: src.0, dst: dst.0 });
+        Ok(())
+    }
+
+    /// `load_stationary(tile: STile)` — preload Q.
+    pub fn load_stationary(&mut self, tile: STile) {
+        self.program.push(Instruction::LoadStationary { src: tile.0 });
+    }
+
+    /// `attn_score(K: STile, l: ATile)` — fused S = QK^T + online softmax.
+    pub fn attn_score(&mut self, k: STile, l: ATile, first: bool) {
+        self.program.push(Instruction::AttnScore { k: k.0, lse: l.0, first });
+    }
+
+    /// `attn_value(V: STile, O: ATile)` — O += P V.
+    pub fn attn_value(&mut self, v: STile, o: ATile, first: bool) {
+        self.program.push(Instruction::AttnValue { v: v.0, out: o.0, first });
+    }
+
+    /// `reciprocal(l: ATile)`.
+    pub fn reciprocal(&mut self, l: ATile) {
+        self.program.push(Instruction::Reciprocal { l: l.0 });
+    }
+
+    /// `attn_lse_norm(O: ATile)`.
+    pub fn attn_lse_norm(&mut self, o: ATile, l: ATile) {
+        self.program.push(Instruction::AttnLseNorm { out: o.0, l: l.0 });
+    }
+
+    /// Finish: returns the compiled program (the "binary" the device's
+    /// instruction queue consumes; see [`crate::isa::encode`]).
+    pub fn build(self) -> Program {
+        self.program
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_rows_produces_disjoint_tiles() {
+        let m = MTile(TileDesc::contiguous(Space::Main, 0, 64, 16));
+        let parts = m.split_rows(16);
+        assert_eq!(parts.len(), 4);
+        for (i, p) in parts.iter().enumerate() {
+            assert_eq!(p.0.addr, (i * 16 * 16) as u32);
+            assert_eq!(p.rows(), 16);
+        }
+        for w in parts.windows(2) {
+            assert!(!w[0].0.overlaps(&w[1].0));
+        }
+    }
+
+    #[test]
+    fn allocator_respects_capacity() {
+        let mut a = Alloc::new(Space::Spad, 1024);
+        let t1 = a.tile(16, 16).unwrap();
+        let t2 = a.tile(16, 16).unwrap();
+        assert!(!t1.overlaps(&t2));
+        assert!(a.tile(32, 32).is_err());
+        assert_eq!(a.used(), 512);
+    }
+
+    #[test]
+    fn builder_emits_in_order() {
+        let mut b = KernelBuilder::new();
+        let q = STile(TileDesc::contiguous(Space::Spad, 0, 8, 8));
+        let l = ATile(TileDesc::contiguous(Space::Accum, 0, 1, 8));
+        b.load_stationary(q);
+        b.attn_score(q, l, true);
+        b.reciprocal(l);
+        let p = b.build();
+        assert_eq!(p.len(), 3);
+        assert!(p.disasm().contains("attn_score"));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut b = KernelBuilder::new();
+        let src = MTile(TileDesc::contiguous(Space::Main, 0, 8, 8));
+        let dst = STile(TileDesc::contiguous(Space::Spad, 0, 8, 16));
+        assert!(b.load_tile(src, dst).is_err());
+    }
+}

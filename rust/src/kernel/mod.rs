@@ -1,0 +1,20 @@
+//! The FSA kernel programming model (paper §5), in Rust.
+//!
+//! The paper ships an NKI-inspired Python library: type-safe tensors over
+//! three memory spaces (`MTile`/`STile`/`ATile`), one Python function per
+//! ISA instruction, and a lightweight JIT that turns a decorated kernel
+//! into a binary instruction stream.  Since our runtime is Rust, the same
+//! model lives here: typed tile handles, a [`KernelBuilder`] whose methods
+//! mirror Listing 1, and [`flash_attention_program`] — the Listing-2
+//! FlashAttention kernel — as the canonical user.
+//!
+//! Type safety: `MTile`, `STile` and `ATile` are distinct types, so e.g.
+//! `attn_score` can only take a scratchpad K tile and an accumulator lse
+//! tile; misuse is a compile error exactly like the Python library's
+//! runtime type checks — but earlier.
+
+pub mod builder;
+pub mod flash;
+
+pub use builder::{ATile, KernelBuilder, MTile, STile};
+pub use flash::{flash_attention_program, FlashLayout, FlashParams};

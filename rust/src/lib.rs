@@ -1,0 +1,49 @@
+//! # fsa — SystolicAttention / FSA reproduction
+//!
+//! A three-layer reproduction of *"SystolicAttention: Fusing FlashAttention
+//! within a Single Systolic Array"* (Lin et al., EPFL, 2025).
+//!
+//! This crate is layer 3: the FSA **device** (a cycle-accurate simulator of
+//! the enhanced systolic array, its ISA, controller and DMA), the
+//! **SystolicAttention** static schedule, instruction-level **performance
+//! models** of FSA and of the commercial baselines (TPUv5e-like,
+//! NeuronCore-v2-like), the **kernel programming model** of paper §5
+//! (typed tiles + JIT builder), a PJRT **runtime** that executes the
+//! JAX/Pallas AOT artifacts, and a serving **coordinator** (router,
+//! batcher, device pool) that puts it all on a request path with Python
+//! nowhere in sight.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`numerics`] — software fp16, PWL exp2 (the Split-unit contract), RNG.
+//! * [`isa`] — the 7-instruction FSA ISA with binary encode/decode.
+//! * [`schedule`] — SystolicAttention wavefront schedules + latency formulas.
+//! * [`sim`] — cycle-accurate array/accumulator/SRAM/DMA/controller model.
+//! * [`perfmodel`] — deterministic instruction-level timing for full workloads.
+//! * [`accel`] — Table-1 accelerator configs + baseline pipeline models.
+//! * [`area`] — Table-3 area model.
+//! * [`kernel`] — §5 programming model: MTile/STile/ATile + KernelBuilder.
+//! * [`runtime`] — PJRT artifact loading/execution (HLO-text interchange).
+//! * [`coordinator`] — request router, batcher, device workers, metrics.
+//! * [`config`] — INI-style config system for machines and runs.
+//! * [`cli`], [`benchutil`], [`testutil`] — offline-environment stand-ins
+//!   for clap / criterion / proptest (see DESIGN.md §substitutions).
+
+pub mod accel;
+pub mod area;
+pub mod benchutil;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod isa;
+pub mod kernel;
+pub mod numerics;
+pub mod perfmodel;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+pub mod experiments;

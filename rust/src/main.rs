@@ -1,0 +1,137 @@
+//! `fsa` — the leader binary: experiment reports, device inspection, and
+//! the serving loop.  Run `fsa help` for the command list.
+
+use std::path::PathBuf;
+
+use fsa::cli::Args;
+use fsa::config::RunConfig;
+use fsa::coordinator::request::AttentionRequest;
+use fsa::coordinator::Coordinator;
+use fsa::experiments;
+use fsa::kernel::{flash_attention_program, FlashLayout, FlashParams};
+use fsa::numerics::SplitMix64;
+
+const HELP: &str = "\
+fsa — SystolicAttention / FSA reproduction
+
+USAGE: fsa <command> [--flag value]...
+
+Experiment commands (paper artifact regeneration):
+  table1                       accelerator configurations
+  fig1    [--seq 8192]         component active-time breakdown
+  fig11   [--seqs 2048,..]     FLOPs/s utilization comparison
+  fig12   [--segments 1,2,..]  exp2 PWL error sweep
+  table2  [--seqs 2048,4096] [--artifacts DIR] [--seed N]
+                               end-to-end accuracy via PJRT artifacts
+  table3  [--n 128]            area breakdown
+  cycles  [--sizes 4,8,16,32]  cycle-sim vs closed-form validation
+
+Device / serving commands:
+  disasm  [--seq 512 --d 128]  compile + disassemble the flash kernel
+  serve   [--requests 16 --devices 2 --seq 512 --artifacts DIR]
+                               boot the coordinator and serve a workload
+  help                         this text
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> fsa::Result<()> {
+    match args.command.as_str() {
+        "table1" => println!("{}", experiments::table1_report()),
+        "fig1" => {
+            let seq = args.get("seq", 8192usize)?;
+            println!("{}", experiments::fig1_report(seq));
+        }
+        "fig11" => {
+            let seqs = args.get_list("seqs", &fsa::accel::paper_seq_lens())?;
+            let d = args.get("d", 128usize)?;
+            println!("{}", experiments::fig11_report(&seqs, d));
+        }
+        "fig12" => {
+            let segs = args.get_list("segments", &[1, 2, 4, 8, 16, 32, 64])?;
+            println!("{}", experiments::fig12_report(&segs));
+        }
+        "table2" => {
+            let seqs = args.get_list("seqs", &[128, 512, 2048, 4096])?;
+            let d = args.get("d", 128usize)?;
+            let seed = args.get("seed", 0xF5Au64)?;
+            let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+            println!("{}", experiments::table2_report(&dir, &seqs, d, seed)?);
+        }
+        "table3" => {
+            let n = args.get("n", 128usize)?;
+            println!("{}", experiments::table3_report(n));
+        }
+        "cycles" => {
+            let sizes = args.get_list("sizes", &[4, 8, 16, 32])?;
+            println!("{}", experiments::cycles_report(&sizes));
+        }
+        "disasm" => {
+            let seq = args.get("seq", 512usize)?;
+            let d = args.get("d", 128usize)?;
+            let p = FlashParams {
+                seq_len: seq,
+                d,
+                spad_elems: (6 * d * d) as u32,
+                accum_elems: (d * d + d) as u32,
+            };
+            let prog = flash_attention_program(&p, &FlashLayout::packed(&p))?;
+            let (l, s, c) = prog.class_counts();
+            println!(
+                "FlashAttention program for seq={seq} d={d}: {} instructions \
+                 ({l} loads, {s} stores, {c} compute)\n",
+                prog.len()
+            );
+            println!("{}", prog.disasm());
+        }
+        "serve" => serve(args)?,
+        _ => println!("{HELP}"),
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> fsa::Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.devices = args.get("devices", cfg.devices)?;
+    cfg.max_batch = args.get("max-batch", cfg.max_batch)?;
+    cfg.artifacts_dir = args.flag("artifacts").unwrap_or("artifacts").to_string();
+    let n_req = args.get("requests", 16usize)?;
+    let seq = args.get("seq", 512usize)?;
+    let d = args.get("d", 128usize)?;
+
+    println!("booting coordinator: {} devices, artifacts at {}", cfg.devices, cfg.artifacts_dir);
+    let coord = Coordinator::start(cfg)?;
+    let mut rng = SplitMix64::new(1);
+    let mut pending = Vec::new();
+    for id in 0..n_req as u64 {
+        let q = rng.normal_matrix(seq, d);
+        let k = rng.normal_matrix(seq, d);
+        let v = rng.normal_matrix(seq, d);
+        pending.push(coord.submit(AttentionRequest::new(id, seq, d, q, k, v))?);
+    }
+    let mut ok = 0;
+    for rx in pending {
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("worker dropped request"))?;
+        if resp.output.is_ok() {
+            ok += 1;
+        } else if let Err(e) = &resp.output {
+            eprintln!("request {} failed: {e}", resp.id);
+        }
+    }
+    println!("{}/{} requests served", ok, n_req);
+    println!("{}", coord.metrics.summary());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,275 @@
+//! Software IEEE 754 binary16 ("half", fp16).
+//!
+//! The offline environment has no `half` crate, and the paper's error
+//! analysis (§6.2.1, Fig. 12) needs exact control over rounding and
+//! subnormal handling anyway: FSA evaluates the PWL approximation over
+//! *all negative normal fp16 values* and flushes subnormals to zero "as
+//! most accelerators do".  This module provides bit-exact conversions with
+//! round-to-nearest-even, classification helpers, and the exhaustive
+//! enumerations the sweeps are built on.
+
+/// A binary16 value stored as its raw bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct F16(pub u16);
+
+const EXP_BITS: u32 = 5;
+const MAN_BITS: u32 = 10;
+const EXP_BIAS: i32 = 15;
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const NEG_ZERO: F16 = F16(0x8000);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const NAN: F16 = F16(0x7E00);
+    /// Largest finite magnitude (65504).
+    pub const MAX: F16 = F16(0x7BFF);
+    /// Smallest positive normal (2^-14).
+    pub const MIN_POSITIVE_NORMAL: F16 = F16(0x0400);
+
+    #[inline]
+    pub fn from_bits(bits: u16) -> F16 {
+        F16(bits)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Convert from f32 with round-to-nearest-even (the IEEE default used
+    /// by MXU-style multipliers when quantizing activations).
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x007F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN. Preserve a quiet NaN payload bit.
+            return if man == 0 {
+                F16(sign | 0x7C00)
+            } else {
+                F16(sign | 0x7E00)
+            };
+        }
+
+        // Unbiased exponent in f32; rebias for f16.
+        let unbiased = exp - 127;
+        let e16 = unbiased + EXP_BIAS;
+
+        if e16 >= 0x1F {
+            // Overflow -> infinity.
+            return F16(sign | 0x7C00);
+        }
+        if e16 <= 0 {
+            // Subnormal or underflow-to-zero in f16.
+            if e16 < -10 {
+                return F16(sign); // rounds to +-0
+            }
+            // Implicit leading 1 becomes explicit; shift right by (1 - e16).
+            let man = man | 0x0080_0000;
+            let shift = (14 - e16) as u32; // 23 - 10 + (1 - e16)
+            let half = 1u32 << (shift - 1);
+            let rest_mask = half - 1;
+            let mut out = (man >> shift) as u16;
+            let rem = man & (half | rest_mask);
+            if rem > half || (rem == half && out & 1 == 1) {
+                out += 1; // RNE; may carry into the normal range, which is fine
+            }
+            return F16(sign | out);
+        }
+
+        // Normal range: round mantissa 23 -> 10 bits, RNE.
+        let shift = 13u32;
+        let half = 1u32 << (shift - 1);
+        let rest_mask = half - 1;
+        let mut out = ((e16 as u32) << MAN_BITS) as u16 | (man >> shift) as u16;
+        let rem = man & (half | rest_mask);
+        if rem > half || (rem == half && out & 1 == 1) {
+            out += 1; // mantissa carry correctly increments the exponent
+        }
+        F16(sign | out)
+    }
+
+    /// Exact widening conversion to f32.
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & 0x8000) as u32) << 16;
+        let exp = ((self.0 >> MAN_BITS) & 0x1F) as u32;
+        let man = (self.0 & 0x03FF) as u32;
+        let bits = if exp == 0 {
+            if man == 0 {
+                sign // +-0
+            } else {
+                // Subnormal: value = man * 2^-24 with highest set bit h;
+                // normalized f32 exponent is h - 24 (biased: 134 - clz).
+                let lz = man.leading_zeros() - 21; // zeros above bit 10
+                let man = (man << lz) & 0x03FF; // implicit bit drops off
+                let exp = (127 - EXP_BIAS + 1 - lz as i32) as u32;
+                sign | (exp << 23) | (man << 13)
+            }
+        } else if exp == 0x1F {
+            sign | 0x7F80_0000 | (man << 13) // inf / nan
+        } else {
+            sign | ((exp + 127 - EXP_BIAS as u32) << 23) | (man << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x03FF) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+
+    pub fn is_subnormal(self) -> bool {
+        (self.0 & 0x7C00) == 0 && (self.0 & 0x03FF) != 0
+    }
+
+    pub fn is_normal(self) -> bool {
+        let e = self.0 & 0x7C00;
+        e != 0 && e != 0x7C00
+    }
+
+    pub fn is_sign_negative(self) -> bool {
+        self.0 & 0x8000 != 0
+    }
+
+    /// Flush subnormals to (sign-preserving) zero — accelerator semantics
+    /// assumed throughout the paper (§6.2.1, citing bfloat16 docs).
+    pub fn flush_subnormal(self) -> F16 {
+        if self.is_subnormal() {
+            F16(self.0 & 0x8000)
+        } else {
+            self
+        }
+    }
+}
+
+/// Round-trip an f32 through fp16 (RNE) — the quantization a value suffers
+/// when written to an FSA activation register.
+#[inline]
+pub fn quantize_f32(x: f32) -> f32 {
+    F16::from_f32(x).to_f32()
+}
+
+/// fp16 quantization with flush-to-zero on subnormals — the accelerator
+/// semantics the paper assumes (§6.2.1).  This is what makes Table 2's
+/// error grow with sequence length: softmax weights scale like 1/L, and
+/// at L = 16 K the typical weight (6e-5) sits at the fp16 subnormal
+/// boundary, so flushed weights vanish from the PV accumulation.
+#[inline]
+pub fn quantize_ftz_f32(x: f32) -> f32 {
+    F16::from_f32(x).flush_subnormal().to_f32()
+}
+
+/// All negative *normal* fp16 values in increasing-magnitude order
+/// (exp 1..=30, mantissa 0..=1023: 30 * 1024 = 30720 values).  The domain
+/// of the paper's exhaustive Fig. 12 sweep.
+pub fn negative_normals() -> impl Iterator<Item = F16> {
+    (1u16..=30).flat_map(|e| (0u16..1024).map(move |m| F16(0x8000 | (e << 10) | m)))
+}
+
+/// Every finite fp16 value (both signs, subnormals included) — used by
+/// round-trip property tests.
+pub fn all_finite() -> impl Iterator<Item = F16> {
+    (0u16..=0xFFFF).map(F16).filter(|h| !h.is_nan() && !h.is_infinite())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_convert_exactly() {
+        assert_eq!(F16::ONE.to_f32(), 1.0);
+        assert_eq!(F16::ZERO.to_f32(), 0.0);
+        assert_eq!(F16::MAX.to_f32(), 65504.0);
+        assert_eq!(F16::MIN_POSITIVE_NORMAL.to_f32(), 2.0f32.powi(-14));
+        assert!(F16::NAN.is_nan());
+        assert!(F16::INFINITY.is_infinite());
+        assert_eq!(F16::NEG_INFINITY.to_f32(), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn roundtrip_all_finite_values() {
+        // to_f32 is exact, so from_f32(to_f32(h)) must return h bit-exactly
+        // (modulo nothing: every finite f16 is representable in f32).
+        for h in all_finite() {
+            let back = F16::from_f32(h.to_f32());
+            assert_eq!(back.0, h.0, "bits {:#06x}", h.0);
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and the next f16; RNE
+        // keeps the even mantissa (1.0).
+        let x = 1.0f32 + 2.0f32.powi(-11);
+        assert_eq!(F16::from_f32(x), F16::ONE);
+        // 1.0 + 3*2^-11 is halfway between odd and even; rounds up to even.
+        let y = 1.0f32 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(F16::from_f32(y).0, F16(0x3C02).0);
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        assert!(F16::from_f32(1e6).is_infinite());
+        assert!(F16::from_f32(-1e6).is_infinite());
+        assert_eq!(F16::from_f32(1e-12).0, 0);
+        assert_eq!(F16::from_f32(-1e-12).0, 0x8000);
+        // Largest f32 that still rounds to MAX rather than inf.
+        assert_eq!(F16::from_f32(65519.0), F16::MAX);
+        assert!(F16::from_f32(65520.0).is_infinite());
+    }
+
+    #[test]
+    fn subnormal_handling() {
+        let tiny = 2.0f32.powi(-24); // smallest positive f16 subnormal
+        let h = F16::from_f32(tiny);
+        assert!(h.is_subnormal());
+        assert_eq!(h.to_f32(), tiny);
+        assert_eq!(h.flush_subnormal(), F16::ZERO);
+        let neg = F16::from_f32(-tiny);
+        assert_eq!(neg.flush_subnormal(), F16::NEG_ZERO);
+    }
+
+    #[test]
+    fn negative_normals_enumeration() {
+        let v: Vec<F16> = negative_normals().collect();
+        assert_eq!(v.len(), 30 * 1024);
+        assert!(v.iter().all(|h| h.is_normal() && h.is_sign_negative()));
+        assert_eq!(v[0].to_f32(), -(2.0f32.powi(-14)));
+        assert_eq!(v[v.len() - 1].to_f32(), -65504.0);
+    }
+
+    #[test]
+    fn matches_reference_conversion_on_grid() {
+        // Cross-check from_f32 against a simple nearest-search oracle on a
+        // coarse grid of interesting values.
+        for i in -60..60 {
+            for frac in [1.0f32, 1.1, 1.5, 1.999, 1.0009765625] {
+                let x = frac * 2.0f32.powi(i);
+                let h = F16::from_f32(x);
+                if h.is_infinite() || x.abs() < 2.0f32.powi(-26) {
+                    continue;
+                }
+                let err = (h.to_f32() - x).abs();
+                // Nearest f16 is within half a ulp of x.
+                let ulp = if x.abs() >= 2.0f32.powi(-14) {
+                    2.0f32.powi(i - 10).abs().max(2.0f32.powi(-24))
+                } else {
+                    2.0f32.powi(-24)
+                };
+                assert!(err <= ulp, "x={x} h={} err={err} ulp={ulp}", h.to_f32());
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Numerics substrate: software binary16, the PWL exp2 contract of the FSA
+//! Split unit, and the paper's input distributions.
+//!
+//! Everything here is deterministic and dependency-free so that the cycle
+//! simulator, the performance models and the error-analysis benches (paper
+//! Fig. 12, Table 2) share one bit-careful implementation.
+
+pub mod f16;
+pub mod pwl;
+pub mod reference;
+pub mod rng;
+
+pub use f16::F16;
+pub use pwl::PwlExp2;
+pub use rng::SplitMix64;
+
+/// log2(e), the constant FSA streams through the array for the
+/// `exp(x) = exp2(log2(e) * x)` rewrite (Algorithm 1, line 10/12).
+pub const LOG2E: f64 = std::f64::consts::LOG2_E;

@@ -1,0 +1,306 @@
+//! Piecewise-linear exp2 — the bit-level contract of the FSA Split unit
+//! plus MAC interpolation (paper §3.3).
+//!
+//! FlashAttention only evaluates `exp2(x)` for `x <= 0`.  Splitting
+//! `x = xi + xf` with `xi = ceil(x)` puts the fraction in `(-1, 0]`, so
+//! `2^xf ∈ (0.5, 1]` and an S-piece uniform PWL over that interval,
+//! evaluated on the PE's MAC, approximates it; `2^xi` is a pure exponent
+//! adjustment.  Coefficients here use the same endpoint-interpolation
+//! formula as `python/compile/kernels/pwl.py` and are golden-tested
+//! against `artifacts/pwl_coeffs_*.txt`.
+
+use crate::numerics::f16::{negative_normals, F16};
+
+/// One PWL approximation of exp2 on (-inf, 0] with `segments` pieces.
+#[derive(Clone, Debug)]
+pub struct PwlExp2 {
+    pub segments: usize,
+    pub slopes: Vec<f64>,
+    pub intercepts: Vec<f64>,
+}
+
+/// Rounding / evaluation mode for the error sweeps (Fig. 12 reproduces the
+/// paper's sweep; the extra modes quantify each quantization choice the
+/// paper leaves implicit — see EXPERIMENTS.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalMode {
+    /// Coefficients and MAC in f64 (pure approximation error).
+    Exact,
+    /// Coefficients and MAC in f32 (what the Pallas kernel does).
+    F32,
+    /// Coefficients quantized to fp16, MAC computed then rounded to fp16,
+    /// output flushed-to-zero on subnormal (the strictest hardware view).
+    F16,
+    /// Like [`EvalMode::F16`] but subnormal *outputs* are kept (only
+    /// subnormal inputs are excluded, as the paper states).  This is the
+    /// mode that reproduces the paper's flat ~2.7e-2 MRE curve.
+    F16Round,
+}
+
+impl PwlExp2 {
+    /// Build the coefficient tables.  Segment `k` covers
+    /// `xf ∈ [-(k+1)/S, -k/S)` with the right-closed end at `xf = 0`
+    /// folded into `k = 0`.
+    pub fn new(segments: usize) -> PwlExp2 {
+        assert!(segments >= 1, "segments must be >= 1");
+        let s = segments as f64;
+        let mut slopes = Vec::with_capacity(segments);
+        let mut intercepts = Vec::with_capacity(segments);
+        for k in 0..segments {
+            let b = -(k as f64) / s;
+            let a = -((k + 1) as f64) / s;
+            let slope = (b.exp2() - a.exp2()) / (b - a);
+            let intercept = a.exp2() - slope * a;
+            slopes.push(slope);
+            intercepts.push(intercept);
+        }
+        PwlExp2 { segments, slopes, intercepts }
+    }
+
+    /// Segment index for a fraction `xf ∈ (-1, 0]`.
+    #[inline]
+    pub fn segment(&self, xf: f64) -> usize {
+        let k = (-xf * self.segments as f64).floor() as isize;
+        k.clamp(0, self.segments as isize - 1) as usize
+    }
+
+    /// Split `x <= 0` into `(xi, xf)` with `xf ∈ (-1, 0]` — the Split unit.
+    #[inline]
+    pub fn split(x: f64) -> (f64, f64) {
+        let xi = x.ceil();
+        (xi, x - xi)
+    }
+
+    /// exp2(x) for x <= 0 in f64 (approximation error only).
+    pub fn eval(&self, x: f64) -> f64 {
+        let (xi, xf) = Self::split(x);
+        let k = self.segment(xf);
+        let frac = self.slopes[k] * xf + self.intercepts[k];
+        // 2^xi as an exponent shift; exp2 of a float integer is exact.
+        let xi = xi.clamp(-1074.0, 1023.0);
+        xi.exp2() * frac
+    }
+
+    /// exp2(x) in f32 — bit-matches the Pallas kernel's in-kernel PWL.
+    pub fn eval_f32(&self, x: f32) -> f32 {
+        let xi = x.ceil();
+        let xf = x - xi;
+        let k = self.segment(xf as f64);
+        let frac = self.slopes[k] as f32 * xf + self.intercepts[k] as f32;
+        let xi = xi.clamp(-126.0, 127.0);
+        xi.exp2() * frac
+    }
+
+    /// Bit-level fp16 hardware evaluation: fp16 input, fp16 coefficients,
+    /// MAC result rounded to fp16, exponent shift by xi; optional
+    /// subnormal flush on the output.
+    pub fn eval_f16_mode(&self, x: F16, flush: bool) -> F16 {
+        let xv = x.to_f32();
+        let xi = xv.ceil();
+        let xf = F16::from_f32(xv - xi).to_f32();
+        let k = self.segment(xf as f64);
+        let slope = F16::from_f32(self.slopes[k] as f32).to_f32();
+        let intercept = F16::from_f32(self.intercepts[k] as f32).to_f32();
+        let frac = F16::from_f32(slope * xf + intercept).to_f32();
+        let shifted = frac * (xi.clamp(-30.0, 30.0)).exp2();
+        let out = F16::from_f32(shifted);
+        if flush {
+            out.flush_subnormal()
+        } else {
+            out
+        }
+    }
+
+    /// [`Self::eval_f16_mode`] with flush-to-zero (back-compat helper).
+    pub fn eval_f16(&self, x: F16) -> F16 {
+        self.eval_f16_mode(x, true)
+    }
+
+    /// f32-in/f32-out evaluation with the *interpolation MAC performed in
+    /// fp16* — the PE datapath of the FSA silicon (fp16 multipliers,
+    /// coefficients streamed as fp16).  The exponent shift by `xi` is
+    /// exact.  This is the evaluator the cycle simulator and the Pallas
+    /// kernel use in fp16 mode; its ~2.7e-2 relative error is what drives
+    /// the paper's Table-2 magnitudes.
+    pub fn eval_f16_mac(&self, x: f32) -> f32 {
+        let xi = x.ceil();
+        let xf = F16::from_f32(x - xi).to_f32();
+        let k = self.segment(xf as f64);
+        let slope = F16::from_f32(self.slopes[k] as f32).to_f32();
+        let intercept = F16::from_f32(self.intercepts[k] as f32).to_f32();
+        let frac = F16::from_f32(slope * xf + intercept).to_f32();
+        frac * xi.clamp(-126.0, 127.0).exp2()
+    }
+
+    /// The §3.3 trick: every intercept lies in (0.5, 1], so its exponent
+    /// field is 0 (value 1.0) or -1 (everything else) and the high mantissa
+    /// bits suffice to recover `k` without extra control wires.  Returns
+    /// the index encoded for segment `k` and checks invertibility.
+    pub fn intercept_exponent_encoding(&self) -> Vec<(usize, u16)> {
+        self.intercepts
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| {
+                let h = F16::from_f32(c as f32);
+                (k, h.to_bits())
+            })
+            .collect()
+    }
+}
+
+/// Error statistics of a PWL approximation over all negative normal fp16
+/// values — the exact sweep of paper Fig. 12.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorStats {
+    pub mae: f64,
+    pub mre: f64,
+    pub max_abs: f64,
+    pub max_rel: f64,
+    pub count: usize,
+}
+
+/// Exhaustive Fig.-12 sweep: mean absolute / mean relative error of the
+/// S-segment PWL over all negative normal fp16 inputs, vs an exact f64
+/// exp2 reference.
+pub fn error_sweep(segments: usize, mode: EvalMode) -> ErrorStats {
+    error_sweep_ref(segments, mode, false)
+}
+
+/// Like [`error_sweep`], but optionally round the *reference* to fp16
+/// first (`ref_f16 = true`), i.e. measure against the best any fp16
+/// producer could do.  The paper does not state its reference precision;
+/// this reproduces the flat ~2.7e-2 MRE of Fig. 12 (see EXPERIMENTS.md).
+pub fn error_sweep_ref(segments: usize, mode: EvalMode, ref_f16: bool) -> ErrorStats {
+    let pwl = PwlExp2::new(segments);
+    let mut stats = ErrorStats::default();
+    let mut abs_sum = 0.0f64;
+    let mut rel_sum = 0.0f64;
+    let mut n = 0usize;
+    for h in negative_normals() {
+        let x = h.to_f64();
+        let exact = if ref_f16 {
+            F16::from_f32(x.exp2() as f32).to_f64()
+        } else {
+            x.exp2()
+        };
+        let approx = match mode {
+            EvalMode::Exact => pwl.eval(x),
+            EvalMode::F32 => pwl.eval_f32(x as f32) as f64,
+            EvalMode::F16 => pwl.eval_f16_mode(h, true).to_f64(),
+            EvalMode::F16Round => pwl.eval_f16_mode(h, false).to_f64(),
+        };
+        let abs = (approx - exact).abs();
+        let rel = if exact != 0.0 { abs / exact } else { 0.0 };
+        abs_sum += abs;
+        rel_sum += rel;
+        stats.max_abs = stats.max_abs.max(abs);
+        stats.max_rel = stats.max_rel.max(rel);
+        n += 1;
+    }
+    stats.mae = abs_sum / n as f64;
+    stats.mre = rel_sum / n as f64;
+    stats.count = n;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_at_breakpoints() {
+        for s in [1usize, 2, 4, 8, 16, 32, 64] {
+            let pwl = PwlExp2::new(s);
+            for k in 0..s {
+                for x in [-(k as f64) / s as f64, -((k + 1) as f64) / s as f64] {
+                    let approx = pwl.slopes[k] * x + pwl.intercepts[k];
+                    assert!(
+                        (approx - x.exp2()).abs() < 1e-12,
+                        "s={s} k={k} x={x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intercepts_in_half_open_unit_range() {
+        // Paper §3.3: intercepts ∈ (0.5, 1] -> exponent is 0 or -1.
+        for s in [2usize, 4, 8, 16, 32] {
+            let pwl = PwlExp2::new(s);
+            for &c in &pwl.intercepts {
+                assert!(c > 0.5 && c <= 1.0, "s={s} c={c}");
+            }
+            // The fp16 encoding of each intercept must be distinct so the
+            // mantissa MSBs can address the segment (§3.3's control trick).
+            let enc = pwl.intercept_exponent_encoding();
+            let mut bits: Vec<u16> = enc.iter().map(|&(_, b)| b).collect();
+            bits.sort_unstable();
+            bits.dedup();
+            assert_eq!(bits.len(), s, "fp16-encoded intercepts collide");
+        }
+    }
+
+    #[test]
+    fn split_matches_paper_ranges() {
+        for x in [-0.0, -0.25, -1.0, -1.75, -7.001, -30.999] {
+            let (xi, xf) = PwlExp2::split(x);
+            assert_eq!(xi, x.ceil());
+            assert!(xf > -1.0 && xf <= 0.0, "x={x} xf={xf}");
+            assert!((xi + xf - x).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eval_exact_at_integers() {
+        let pwl = PwlExp2::new(8);
+        for i in 0..30 {
+            let x = -(i as f64);
+            assert!((pwl.eval(x) - x.exp2()).abs() < 1e-12 * x.exp2().max(1e-300));
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_segments() {
+        let maes: Vec<f64> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&s| error_sweep(s, EvalMode::Exact).mae)
+            .collect();
+        for w in maes.windows(2) {
+            assert!(w[0] > w[1], "MAE not decreasing: {maes:?}");
+        }
+    }
+
+    #[test]
+    fn eight_segments_match_paper_mae_order() {
+        // Paper: 8 segments -> MAE 0.00014.  Pure approximation error lands
+        // in the same decade; the exact figure depends on quantization mode
+        // (see EXPERIMENTS.md discussion).
+        let st = error_sweep(8, EvalMode::Exact);
+        assert!(st.mae < 5e-4, "MAE {}", st.mae);
+        assert!(st.mae > 5e-6, "MAE {}", st.mae);
+        // Max relative error of the pure PWL is bounded by interpolation
+        // theory: (ln 2)^2 / (8 * 64) / 2 < 2e-3 on (-1, 0].
+        assert!(st.max_rel < 2e-3, "max rel {}", st.max_rel);
+    }
+
+    #[test]
+    fn f32_mode_matches_exact_closely() {
+        let pwl = PwlExp2::new(8);
+        for i in 0..1000 {
+            let x = -(i as f64) * 0.02;
+            let a = pwl.eval(x);
+            let b = pwl.eval_f32(x as f32) as f64;
+            assert!((a - b).abs() <= 1e-6 * a.abs().max(1e-30), "x={x}");
+        }
+    }
+
+    #[test]
+    fn segment_lookup_boundaries() {
+        let pwl = PwlExp2::new(8);
+        assert_eq!(pwl.segment(0.0), 0);
+        assert_eq!(pwl.segment(-0.124), 0);
+        assert_eq!(pwl.segment(-0.125), 1);
+        assert_eq!(pwl.segment(-0.999), 7);
+    }
+}

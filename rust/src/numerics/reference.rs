@@ -1,0 +1,343 @@
+//! Host-side reference attention implementations (row-major f32 matrices).
+//!
+//! These are the oracles the cycle simulator and the serving path are
+//! checked against inside Rust — the same ladder as the Python side:
+//! dense SDPA (exact), tiled FlashAttention with exact exp2, and tiled
+//! FlashAttention with the PWL exp2 (the strict twin of both the Pallas
+//! kernel and the FSA device).
+
+use crate::numerics::f16::quantize_ftz_f32 as quantize_f32;
+use crate::numerics::pwl::PwlExp2;
+use crate::numerics::LOG2E;
+
+/// Precision regime of matmul operands (state is always f32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Operands quantized to fp16 before each multiply (FSA / Table 1).
+    F16F32,
+    /// Pure f32 (used by tests against the f32 Pallas path).
+    F32,
+}
+
+/// Row-major matrix view helpers.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Quantize every element through fp16 (activation load on FSA).
+    pub fn quantized(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| quantize_f32(x)).collect(),
+        }
+    }
+}
+
+#[inline]
+fn q(x: f32, p: Precision) -> f32 {
+    match p {
+        Precision::F16F32 => quantize_f32(x),
+        Precision::F32 => x,
+    }
+}
+
+/// Dense fp32 SDPA: softmax(Q K^T / sqrt(d)) V.  Exact reference.
+pub fn sdpa(qm: &Mat, km: &Mat, vm: &Mat) -> Mat {
+    let (l, d) = (qm.rows, qm.cols);
+    let lk = km.rows;
+    assert_eq!(km.cols, d);
+    assert_eq!(vm.rows, lk);
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut out = Mat::zeros(l, vm.cols);
+    let mut row = vec![0.0f64; lk];
+    for i in 0..l {
+        let mut maxv = f64::NEG_INFINITY;
+        for j in 0..lk {
+            let mut s = 0.0f64;
+            for k in 0..d {
+                s += qm.at(i, k) as f64 * km.at(j, k) as f64;
+            }
+            let s = s * scale;
+            row[j] = s;
+            maxv = maxv.max(s);
+        }
+        let mut denom = 0.0f64;
+        for j in 0..lk {
+            row[j] = (row[j] - maxv).exp();
+            denom += row[j];
+        }
+        for h in 0..vm.cols {
+            let mut acc = 0.0f64;
+            for j in 0..lk {
+                acc += row[j] * vm.at(j, h) as f64;
+            }
+            out.set(i, h, (acc / denom) as f32);
+        }
+    }
+    out
+}
+
+/// exp2 evaluator used by the flash reference.
+pub enum Exp2 {
+    Exact,
+    /// PWL computed in f32 (the f32 Pallas path).
+    Pwl(PwlExp2),
+    /// PWL with the interpolation MAC in fp16 — the PE datapath.
+    PwlF16(PwlExp2),
+}
+
+impl Exp2 {
+    #[inline]
+    fn eval(&self, x: f32) -> f32 {
+        match self {
+            Exp2::Exact => x.exp2(),
+            Exp2::Pwl(p) => p.eval_f32(x),
+            Exp2::PwlF16(p) => p.eval_f16_mac(x),
+        }
+    }
+}
+
+/// Tiled FlashAttention-2 forward, Algorithm 1 of the paper, with either
+/// exact or PWL exp2 and fp16-or-f32 matmul operands.  Bit-order faithful:
+/// the first matmul accumulates over k descending (the upward systolic
+/// path sums from the bottom row up), rowsum and PV accumulate over n
+/// ascending (downward path).
+pub fn flash_forward(
+    qm: &Mat,
+    km: &Mat,
+    vm: &Mat,
+    br: usize,
+    bc: usize,
+    exp2: &Exp2,
+    prec: Precision,
+) -> Mat {
+    let (l, d) = (qm.rows, qm.cols);
+    let lk = km.rows;
+    assert_eq!(km.cols, d);
+    assert_eq!(vm.rows, lk);
+    assert!(l % br == 0 && lk % bc == 0, "tile sizes must divide seq lens");
+    let scale = (LOG2E / (d as f64).sqrt()) as f32;
+    let (tr, tc) = (l / br, lk / bc);
+
+    let mut out = Mat::zeros(l, d);
+    let mut s = vec![0.0f32; br * bc];
+    let mut p16 = vec![0.0f32; br * bc];
+
+    // Quantization is idempotent: pre-quantize the operands once instead
+    // of per-MAC inside the O(L^2 d) loops (EXPERIMENTS.md §Perf).
+    let (qq, kq, vq) = match prec {
+        Precision::F16F32 => (qm.quantized(), km.quantized(), vm.quantized()),
+        Precision::F32 => (qm.clone(), km.clone(), vm.clone()),
+    };
+    let (qm, km, vm) = (&qq, &kq, &vq);
+
+    // Finite -inf stand-in (same convention as the Pallas kernel): a true
+    // -inf would feed NaN through the Split unit's `x - ceil(x)`.
+    const NEG_INF: f32 = -1e30;
+    for i in 0..tr {
+        let q0 = i * br;
+        let mut m = vec![NEG_INF; br];
+        let mut lsum = vec![0.0f32; br];
+        let mut acc = vec![0.0f32; br * d];
+        for j in 0..tc {
+            let k0 = j * bc;
+            // S = Q K^T, fp32 psums, k-descending accumulation order
+            // (upward path starts at the bottom row of the array).
+            for r in 0..br {
+                let qrow = &qm.data[(q0 + r) * d..(q0 + r + 1) * d];
+                for c in 0..bc {
+                    let krow = &km.data[(k0 + c) * d..(k0 + c + 1) * d];
+                    let mut ps = 0.0f32;
+                    for k in (0..d).rev() {
+                        ps += qrow[k] * krow[k];
+                    }
+                    s[r * bc + c] = ps;
+                }
+            }
+            for r in 0..br {
+                // The device parks S in fp16 result registers; rowmax and
+                // the whole elementwise chain run on those values, and the
+                // rowsum sums the *stored* (quantized, flushed) P.
+                let mut local_m = f32::NEG_INFINITY;
+                for c in 0..bc {
+                    s[r * bc + c] = q(s[r * bc + c], prec);
+                    local_m = local_m.max(s[r * bc + c]);
+                }
+                let new_m = m[r].max(local_m);
+                let b = exp2.eval(scale * (m[r] - new_m));
+                let mut local_l = 0.0f32;
+                for c in 0..bc {
+                    let nv = q(s[r * bc + c] - new_m, prec);
+                    let pv = exp2.eval(q(scale * nv, prec));
+                    p16[r * bc + c] = q(pv, prec);
+                    local_l += p16[r * bc + c];
+                }
+                lsum[r] = lsum[r] * b + local_l;
+                m[r] = new_m;
+                // Rescale the accumulator (diag(b) old_O) now; PV adds in
+                // the n-ascending loop below.
+                for h in 0..d {
+                    acc[r * d + h] *= b;
+                }
+            }
+            // O += P V, n-ascending (downward path, top row first).
+            for r in 0..br {
+                for h in 0..d {
+                    let mut ps = 0.0f32;
+                    for n in 0..bc {
+                        ps += p16[r * bc + n] * vm.at(k0 + n, h);
+                    }
+                    acc[r * d + h] += ps;
+                }
+            }
+        }
+        for r in 0..br {
+            let inv = 1.0 / lsum[r];
+            for h in 0..d {
+                out.set(q0 + r, h, acc[r * d + h] * inv);
+            }
+        }
+    }
+    out
+}
+
+/// Convenience: PWL flash with the paper's defaults (used as the
+/// device-numerics oracle everywhere in the Rust tests).
+pub fn flash_pwl(qm: &Mat, km: &Mat, vm: &Mat, br: usize, bc: usize, segments: usize) -> Mat {
+    flash_forward(
+        qm, km, vm, br, bc,
+        &Exp2::PwlF16(PwlExp2::new(segments)),
+        Precision::F16F32,
+    )
+}
+
+/// Error statistics between two equally-shaped matrices (Table 2 metrics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MatError {
+    pub mae: f64,
+    pub rmse: f64,
+    pub mre: f64,
+    pub max_abs: f64,
+}
+
+pub fn mat_error(got: &Mat, want: &Mat) -> MatError {
+    assert_eq!(got.rows, want.rows);
+    assert_eq!(got.cols, want.cols);
+    let n = got.data.len();
+    let (mut abs_sum, mut sq_sum, mut rel_sum, mut max_abs) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..n {
+        let g = got.data[i] as f64;
+        let w = want.data[i] as f64;
+        let abs = (g - w).abs();
+        abs_sum += abs;
+        sq_sum += abs * abs;
+        // Paper MRE convention: |err| / (|ref| + eps) with eps guarding
+        // zero outputs (attention outputs are rarely exactly zero).
+        rel_sum += abs / (w.abs() + 1e-9);
+        max_abs = max_abs.max(abs);
+    }
+    MatError {
+        mae: abs_sum / n as f64,
+        rmse: (sq_sum / n as f64).sqrt(),
+        mre: rel_sum / n as f64,
+        max_abs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::rng::SplitMix64;
+
+    fn rand_mat(rng: &mut SplitMix64, rows: usize, cols: usize) -> Mat {
+        Mat::new(rows, cols, rng.normal_matrix(rows, cols))
+    }
+
+    #[test]
+    fn flash_exact_matches_dense_sdpa() {
+        let mut rng = SplitMix64::new(5);
+        let (l, d) = (32, 16);
+        let qm = rand_mat(&mut rng, l, d);
+        let km = rand_mat(&mut rng, l, d);
+        let vm = rand_mat(&mut rng, l, d);
+        let dense = sdpa(&qm, &km, &vm);
+        let flash = flash_forward(&qm, &km, &vm, 8, 8, &Exp2::Exact, Precision::F32);
+        let err = mat_error(&flash, &dense);
+        assert!(err.max_abs < 1e-5, "{err:?}");
+    }
+
+    #[test]
+    fn flash_pwl_close_to_dense() {
+        let mut rng = SplitMix64::new(6);
+        let (l, d) = (32, 16);
+        let qm = rand_mat(&mut rng, l, d);
+        let km = rand_mat(&mut rng, l, d);
+        let vm = rand_mat(&mut rng, l, d);
+        let dense = sdpa(&qm, &km, &vm);
+        let flash = flash_pwl(&qm, &km, &vm, 8, 8, 8);
+        let err = mat_error(&flash, &dense);
+        // PWL + fp16 operand error budget (paper Table 2 scale).
+        assert!(err.mae < 2e-2, "{err:?}");
+        assert!(err.max_abs < 2e-1, "{err:?}");
+    }
+
+    #[test]
+    fn tile_shape_independence_with_exact_exp2() {
+        let mut rng = SplitMix64::new(8);
+        let (l, d) = (64, 16);
+        let qm = rand_mat(&mut rng, l, d);
+        let km = rand_mat(&mut rng, l, d);
+        let vm = rand_mat(&mut rng, l, d);
+        let a = flash_forward(&qm, &km, &vm, 8, 16, &Exp2::Exact, Precision::F32);
+        let b = flash_forward(&qm, &km, &vm, 32, 32, &Exp2::Exact, Precision::F32);
+        assert!(mat_error(&a, &b).max_abs < 1e-5);
+    }
+
+    #[test]
+    fn huge_logits_stay_finite() {
+        let mut rng = SplitMix64::new(9);
+        let (l, d) = (16, 8);
+        let mut qm = rand_mat(&mut rng, l, d);
+        for v in qm.data.iter_mut() {
+            *v *= 50.0;
+        }
+        let km = rand_mat(&mut rng, l, d);
+        let vm = rand_mat(&mut rng, l, d);
+        let out = flash_pwl(&qm, &km, &vm, 8, 8, 8);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn mat_error_basics() {
+        let a = Mat::new(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::new(1, 4, vec![1.0, 2.0, 3.0, 5.0]);
+        let e = mat_error(&a, &b);
+        assert!((e.mae - 0.25).abs() < 1e-12);
+        assert!((e.rmse - 0.5).abs() < 1e-12);
+        assert!((e.max_abs - 1.0).abs() < 1e-12);
+    }
+}

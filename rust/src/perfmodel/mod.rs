@@ -1,0 +1,152 @@
+//! Instruction-level FSA performance model for full workloads.
+//!
+//! The cycle-accurate simulator ([`crate::sim`]) validates that compute
+//! instructions are fully deterministic with the §3.5 latencies; this
+//! model replays those latencies plus the DMA bandwidth model over whole
+//! FlashAttention workloads (up to the paper's 16 K sequence length) where
+//! element-wise simulation would be needless — `rust/tests` asserts both
+//! agree wherever both run.
+//!
+//! Covers compute-bound and bandwidth-bound regimes, head dims below the
+//! array size (padding waste — the §8.3 decode-phase discussion), and the
+//! two dataflow variants of §8.2.
+
+use crate::config::AccelConfig;
+use crate::schedule::{attention_flops, preload_latency, rescale_latency, InnerSchedule, Variant};
+use crate::sim::dma::DmaConfig;
+
+/// Timing breakdown for one attention head on FSA.
+#[derive(Clone, Copy, Debug)]
+pub struct FsaPerf {
+    pub total_cycles: u64,
+    /// Cycles the PE array has any wave in flight.
+    pub array_active_cycles: u64,
+    pub dma_cycles: u64,
+    /// Achieved / peak FLOPs-per-second ratio (paper §6.1 metric).
+    pub utilization: f64,
+    /// Wall-clock at the config's frequency.
+    pub seconds: f64,
+    /// True when the DMA stream, not compute, sets the iteration pace.
+    pub bandwidth_bound: bool,
+}
+
+/// FlashAttention forward, one head of (seq_len, d), on an FSA machine.
+///
+/// Tiling follows §3.5: Br = Bc = N (the array dim); `d` is padded up to N
+/// when smaller (wasted lanes counted against utilization, cf. §8.3).
+pub fn fsa_flash_perf(
+    cfg: &AccelConfig,
+    seq_len: usize,
+    d: usize,
+    variant: Variant,
+    segments: usize,
+) -> FsaPerf {
+    let n = cfg.array_size;
+    assert!(d <= n, "head dim {d} exceeds array size {n}");
+    let sched = InnerSchedule::new(n, variant, segments);
+    let ii = sched.inner_latency();
+
+    let t = seq_len.div_ceil(n) as u64; // row and column tiles (padded)
+
+    // DMA traffic per inner iteration: one K tile + one V tile (Q is
+    // loaded once per row block), fp16 on the wire.
+    let dma = DmaConfig::for_bandwidth(cfg.mem_bw_gbs, cfg.freq_ghz, 4);
+    let tile_bytes = (n * n * 2) as f64;
+    let bpc = cfg.mem_bw_gbs / cfg.freq_ghz;
+    let dma_per_iter = dma.setup_cycles + (2.0 * tile_bytes / bpc).ceil() as u64;
+
+    // Double buffering: iteration pace is the slower of compute and DMA.
+    let ii_eff = ii.max(dma_per_iter);
+    let bandwidth_bound = dma_per_iter > ii;
+
+    let inner = t * ii_eff;
+    let outer = rescale_latency(n);
+    // Q-block DMA overlaps the previous epilogue; the first fill and the
+    // stationary preload are exposed once.
+    let startup = preload_latency(n) + dma_per_iter + dma.setup_cycles;
+    let total = t * (inner + outer) + startup;
+
+    // Useful FLOPs pad-corrected: the array computes N-wide tiles but only
+    // d lanes carry real data.
+    let flops = attention_flops(seq_len, d) as f64;
+    let peak_per_cycle = 2.0 * (n * n) as f64;
+    let utilization = flops / (peak_per_cycle * total as f64);
+
+    let array_active = t * t * ii + t * preload_latency(n);
+    FsaPerf {
+        total_cycles: total,
+        array_active_cycles: array_active.min(total),
+        dma_cycles: t * t * dma_per_iter,
+        utilization,
+        seconds: total as f64 / (cfg.freq_ghz * 1e9),
+        bandwidth_bound,
+    }
+}
+
+/// Achieved TFLOPs/s for a workload + perf result.
+pub fn achieved_tflops(seq_len: usize, d: usize, perf: &FsaPerf) -> f64 {
+    attention_flops(seq_len, d) as f64 / perf.seconds / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fsa() -> AccelConfig {
+        AccelConfig::builtin("fsa").unwrap()
+    }
+
+    #[test]
+    fn compute_bound_at_paper_config() {
+        // 820 GB/s @1.5 GHz: 64 KiB per iteration in ~136 cycles, far
+        // under the 650-cycle iteration — compute-bound, as §6.1 assumes.
+        let p = fsa_flash_perf(&fsa(), 2048, 128, Variant::DualPath, 8);
+        assert!(!p.bandwidth_bound);
+        assert!(p.utilization > 0.3 && p.utilization < 0.4, "{}", p.utilization);
+    }
+
+    #[test]
+    fn utilization_rises_with_seq_len_to_asymptote() {
+        let us: Vec<f64> = [2048usize, 4096, 8192, 16384]
+            .iter()
+            .map(|&l| fsa_flash_perf(&fsa(), l, 128, Variant::DualPath, 8).utilization)
+            .collect();
+        assert!(us.windows(2).all(|w| w[1] >= w[0]), "{us:?}");
+        let ceiling = 2.0 * 128.0 / (5.0 * 128.0 + 10.0);
+        assert!(us[3] < ceiling && us[3] > ceiling - 0.02, "{us:?}");
+    }
+
+    #[test]
+    fn single_path_variant_is_slower_but_close() {
+        // §8.2: 6N+10 vs 5N+10 — about 17% more cycles at N=128.
+        let dual = fsa_flash_perf(&fsa(), 8192, 128, Variant::DualPath, 8);
+        let single = fsa_flash_perf(&fsa(), 8192, 128, Variant::SinglePath, 8);
+        let ratio = single.total_cycles as f64 / dual.total_cycles as f64;
+        assert!(ratio > 1.1 && ratio < 1.25, "ratio {ratio}");
+    }
+
+    #[test]
+    fn small_head_dim_wastes_lanes() {
+        // §8.3: padding to 128-wide tiles burns utilization.
+        let full = fsa_flash_perf(&fsa(), 4096, 128, Variant::DualPath, 8);
+        let half = fsa_flash_perf(&fsa(), 4096, 64, Variant::DualPath, 8);
+        assert!((half.utilization - full.utilization / 2.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn bandwidth_bound_when_starved() {
+        let mut cfg = fsa();
+        cfg.mem_bw_gbs = 40.0; // starve the DMA
+        let p = fsa_flash_perf(&cfg, 4096, 128, Variant::DualPath, 8);
+        assert!(p.bandwidth_bound);
+        assert!(p.utilization < 0.3);
+    }
+
+    #[test]
+    fn tflops_consistent_with_utilization() {
+        let cfg = fsa();
+        let p = fsa_flash_perf(&cfg, 8192, 128, Variant::DualPath, 8);
+        let t = achieved_tflops(8192, 128, &p);
+        assert!((t / cfg.peak_tflops() - p.utilization).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,258 @@
+//! PJRT runtime: load the JAX/Pallas AOT artifacts and execute them on
+//! the request path — Python never runs here.
+//!
+//! Interchange is HLO *text* (`artifacts/*.hlo.txt`): jax >= 0.5 emits
+//! HloModuleProto with 64-bit instruction ids which this image's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).  `artifacts/manifest.txt` (written by
+//! `python/compile/aot.py`) indexes every artifact with its workload
+//! metadata; [`Runtime`] compiles lazily and caches executables.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context};
+
+/// One manifest row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub dtype: String,
+    pub seq_len: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub br: usize,
+    pub bc: usize,
+    pub segments: usize,
+    pub num_inputs: usize,
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut entries = Vec::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            ensure!(f.len() == 11, "manifest line {}: want 11 fields, got {}", no + 1, f.len());
+            entries.push(ArtifactMeta {
+                name: f[0].into(),
+                file: f[1].into(),
+                kind: f[2].into(),
+                dtype: f[3].into(),
+                seq_len: f[4].parse().context("L")?,
+                d: f[5].parse().context("d")?,
+                heads: f[6].parse().context("heads")?,
+                br: f[7].parse().context("br")?,
+                bc: f[8].parse().context("bc")?,
+                segments: f[9].parse().context("segments")?,
+                num_inputs: f[10].parse().context("num_inputs")?,
+            });
+        }
+        ensure!(!entries.is_empty(), "empty manifest at {}", path.display());
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Best artifact of `kind` for a sequence length: the smallest
+    /// seq_len >= requested (requests are padded up to it).
+    pub fn best_for(&self, kind: &str, seq_len: usize, d: usize) -> Option<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.d == d && e.seq_len >= seq_len && e.heads == 1)
+            .min_by_key(|e| e.seq_len)
+    }
+
+    pub fn kinds(&self) -> Vec<&str> {
+        let mut ks: Vec<&str> = self.entries.iter().map(|e| e.kind.as_str()).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+}
+
+/// PJRT client + lazy executable cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> crate::Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { manifest, client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&mut self, name: &str) -> crate::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+                .clone();
+            let path = self.manifest.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on row-major f32 inputs, each `(rows, cols)`.
+    /// Inputs are converted to the artifact dtype (fp16 activations) on
+    /// the way in; the tuple output is converted back to f32.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> crate::Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        ensure!(
+            inputs.len() == meta.num_inputs,
+            "{name}: expected {} inputs, got {}",
+            meta.num_inputs,
+            inputs.len()
+        );
+        let prim = match meta.dtype.as_str() {
+            "f16" => xla::PrimitiveType::F16,
+            "f32" => xla::PrimitiveType::F32,
+            other => bail!("unsupported artifact dtype {other}"),
+        };
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let expect: i64 = dims.iter().product();
+            ensure!(
+                expect as usize == data.len(),
+                "{name}: input shape {dims:?} wants {expect} elems, got {}",
+                data.len()
+            );
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))?
+                .convert(prim)
+                .map_err(|e| anyhow!("convert to {prim:?}: {e:?}"))?;
+            lits.push(lit);
+        }
+        let exe = self.compile(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        let out = out
+            .convert(xla::PrimitiveType::F32)
+            .map_err(|e| anyhow!("converting result: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("reading result: {e:?}"))
+    }
+
+    /// Convenience: run a single-head attention artifact on (L, d) Q/K/V.
+    pub fn execute_attention(
+        &mut self,
+        name: &str,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> crate::Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        ensure!(meta.heads == 1, "{name} is multi-head; use execute()");
+        let dims = [meta.seq_len as i64, meta.d as i64];
+        self.execute(name, &[(q, &dims), (k, &dims), (v, &dims)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing_rejects_garbage() {
+        let dir = std::env::temp_dir().join("fsa_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "# comment only\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.txt"), "a b c\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# h\nfsa_attn_L128_d128 f.hlo.txt fsa_attn f16 128 128 1 128 128 8 3\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.find("fsa_attn_L128_d128").unwrap().seq_len, 128);
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn best_for_picks_smallest_cover() {
+        let mk = |name: &str, kind: &str, l: usize| ArtifactMeta {
+            name: name.into(),
+            file: format!("{name}.hlo.txt"),
+            kind: kind.into(),
+            dtype: "f16".into(),
+            seq_len: l,
+            d: 128,
+            heads: 1,
+            br: 128,
+            bc: 128,
+            segments: 8,
+            num_inputs: 3,
+        };
+        let m = Manifest {
+            dir: PathBuf::new(),
+            entries: vec![
+                mk("a", "fsa_attn", 128),
+                mk("b", "fsa_attn", 512),
+                mk("c", "fsa_attn", 2048),
+                mk("d", "sdpa", 512),
+            ],
+        };
+        assert_eq!(m.best_for("fsa_attn", 100, 128).unwrap().name, "a");
+        assert_eq!(m.best_for("fsa_attn", 129, 128).unwrap().name, "b");
+        assert_eq!(m.best_for("fsa_attn", 2048, 128).unwrap().name, "c");
+        assert!(m.best_for("fsa_attn", 4096, 128).is_none());
+        assert!(m.best_for("sdpa", 100, 64).is_none());
+        assert_eq!(m.kinds(), vec!["fsa_attn", "sdpa"]);
+    }
+}

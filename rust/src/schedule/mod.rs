@@ -1,0 +1,276 @@
+//! The SystolicAttention schedule (paper §3.5 + Fig. 7).
+//!
+//! FSA's controller statically schedules every control signal from a
+//! per-instruction cycle counter (§4.3).  This module is the analytical
+//! core shared by the cycle simulator and the performance model:
+//!
+//! * the closed-form latency/occupancy formulas the paper states
+//!   (inner iteration `2*N_COLS + 3*N_ROWS + 10 = 5N + 10`, the
+//!   single-direction variant `6N + 10`, the naive two-matmul bound
+//!   `2(M + 3N - 1)`, and the `2N + 20` rescale), and
+//! * the per-phase wavefront timing used to drive edge injections in
+//!   [`crate::sim`] — every formula below is *derived* from the wave
+//!   arithmetic and *validated* by the cycle-accurate simulator in
+//!   `rust/tests/cycle_model.rs`.
+//!
+//! Wave timing (t = 0 at AttnScore issue = the cycle its first edge
+//! injection is queued; an injection queued at cycle c enters the array at
+//! c+1; N = array dim; segments = 8; derivation in DESIGN.md §3):
+//!
+//! | event                                   | cycle                      |
+//! |-----------------------------------------|----------------------------|
+//! | K row n queued at array row k           | `n + (N-1-k)`              |
+//! | S[m,n] processed by CMP unit m          | `n + N + m`                |
+//! | new_m[m] final                          | `2N + m`                   |
+//! | S[m,n] parked at PE(n,m)                | `2n + N + m + 2`           |
+//! | subtract wave applies at PE(n,m)        | `2N + m + n + 2`           |
+//! | const-mult wave (and a=old_m-new_m down)| `2N + m + n + 3`           |
+//! | PWL pair j in {0..7} applies at PE(n,m) | `2N + m + n + 4 + j`       |
+//! | rowsum psum passes PE(n,m)              | `2N + m + n + 12`          |
+//! | PV psum for O[m,h] passes PE(n,m)       | `2N + m + n + h + 13`      |
+//! | O[m,h] received by the accumulator      | `3N + m + h + 12`          |
+//! | last output (m = h = N-1)               | `5N + 10` exactly          |
+
+/// Dataflow variant (§8.2): the full FSA uses both directions; the
+/// area-optimized variant has a single (downward) accumulation path and
+/// must wait for the whole P matrix before starting O = P V.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Upward first matmul + downward second matmul (the paper's FSA).
+    DualPath,
+    /// Single direction; +N cycles per inner iteration.
+    SinglePath,
+}
+
+/// Static timing for an `N x N` SystolicAttention inner iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct InnerSchedule {
+    pub n: usize,
+    pub variant: Variant,
+    /// Number of PWL segments streamed (8 in the paper; the `+10` in the
+    /// formula is 2 elementwise waves + 8 PWL waves).
+    pub segments: usize,
+}
+
+impl InnerSchedule {
+    pub fn new(n: usize, variant: Variant, segments: usize) -> InnerSchedule {
+        assert!(n >= 2, "array dim must be >= 2");
+        assert!(segments >= 1);
+        InnerSchedule { n, variant, segments }
+    }
+
+    /// Paper formula: iteration latency in cycles.  For the default
+    /// 8-segment PWL this is `5N + 10` (dual path) or `6N + 10` (single
+    /// path); other segment counts shift the elementwise window.
+    pub fn inner_latency(&self) -> u64 {
+        let n = self.n as u64;
+        let elementwise = 2 + self.segments as u64; // sub, const-mul, PWL waves
+        match self.variant {
+            Variant::DualPath => 5 * n + elementwise,
+            Variant::SinglePath => 6 * n + elementwise,
+        }
+    }
+
+    /// Cycle at which K row `n` must enter array row `k` (first matmul,
+    /// upward path; reverse row skew).
+    pub fn k_inject(&self, n: usize, k: usize) -> u64 {
+        (n + (self.n - 1 - k)) as u64
+    }
+
+    /// Cycle at which S[m, n] is processed by CMP unit m (its one-cycle
+    /// pipeline stage: max update + downward re-stream).
+    pub fn s_at_cmp(&self, m: usize, n: usize) -> u64 {
+        (n + self.n + m) as u64
+    }
+
+    /// Cycle at which the row max new_m[m] is final.
+    pub fn rowmax_done(&self, m: usize) -> u64 {
+        (2 * self.n + m) as u64
+    }
+
+    /// Cycle at which S[m, n] is parked in PE(row n, col m) after being
+    /// re-streamed down from the CMP row.
+    pub fn s_parked(&self, m: usize, n: usize) -> u64 {
+        (2 * n + self.n + m + 2) as u64
+    }
+
+    /// Elementwise wave `w` (0 = subtract, 1 = const-mult, 2.. = PWL pair
+    /// w-2) application cycle at PE(n, m).
+    pub fn elementwise(&self, w: usize, n: usize, m: usize) -> u64 {
+        debug_assert!(w < 2 + self.segments);
+        (2 * self.n + m + n + 2 + w) as u64
+    }
+
+    /// Rowsum psum passes PE(n, m).
+    pub fn rowsum_at(&self, n: usize, m: usize) -> u64 {
+        (2 * self.n + m + n + 4 + self.segments) as u64
+    }
+
+    /// Queue cycle of the first V injection (h = 0, row 0).
+    pub fn pv_start(&self) -> u64 {
+        match self.variant {
+            // One cycle behind the rowsum wave on the downward path.
+            Variant::DualPath => (2 * self.n + 4 + self.segments) as u64,
+            // Wait for the last P element (PE(N-1, N-1)) to be computed.
+            Variant::SinglePath => (3 * self.n + 4 + self.segments) as u64,
+        }
+    }
+
+    /// PV psum for output element O[m, h] passes PE(n, m).
+    pub fn pv_at(&self, n: usize, m: usize, h: usize) -> u64 {
+        self.pv_start() + (h + n + m) as u64 + 1
+    }
+
+    /// O[m, h] is received by the accumulator.
+    pub fn o_exit(&self, m: usize, h: usize) -> u64 {
+        self.pv_at(self.n - 1, m, h)
+    }
+
+    /// Last cycle with activity — the final output element lands in the
+    /// accumulator exactly at `inner_latency` (== 5N+10 for 8 segments).
+    pub fn last_cycle(&self) -> u64 {
+        self.o_exit(self.n - 1, self.n - 1)
+    }
+}
+
+/// Outer-loop (per Q row-block) epilogue: Reciprocal + AttnLseNorm.
+/// Paper: "this re-scaling step takes 2N + 20 cycles".
+pub fn rescale_latency(n: usize) -> u64 {
+    2 * n as u64 + 20
+}
+
+/// Stationary preload occupancy (N cycles); overlapped with the previous
+/// iteration's PV phase in steady state, exposed only on the first
+/// iteration of a row block.
+pub fn preload_latency(n: usize) -> u64 {
+    n as u64
+}
+
+/// Naive baseline (paper §2.2 / §3.5): two back-to-back `N x M` matmuls on
+/// a standard weight-stationary array, each `M + 3N - 1` cycles including
+/// preload and skew; softmax excluded.  `8N - 2` when M = N.
+pub fn naive_two_matmul(n: usize, m: usize) -> u64 {
+    2 * (m as u64 + 3 * n as u64 - 1)
+}
+
+/// Standard-array single matmul latency (preload + stream + drain).
+pub fn standard_matmul(n: usize, m: usize) -> u64 {
+    m as u64 + 3 * n as u64 - 1
+}
+
+/// FLOPs of one FlashAttention inner iteration on an N-tile (two N^3
+/// matmuls, 2 FLOPs per MAC).
+pub fn inner_flops(n: usize) -> u64 {
+    4 * (n as u64).pow(3)
+}
+
+/// Total attention FLOPs for a full (seq_len, d) head — the paper's
+/// `4 * SeqLen^2 * d` (§6.1).
+pub fn attention_flops(seq_len: usize, d: usize) -> u64 {
+    4 * (seq_len as u64) * (seq_len as u64) * d as u64
+}
+
+/// End-to-end FSA cycle count for one attention head of `seq_len` with
+/// head dim `d = N` (paper tiling Br = Bc = d = N), compute-bound path.
+///
+/// `t_r * (t_c * (5N+10) + (2N+20))` plus the first-iteration stationary
+/// preload; DMA is double-buffered behind compute (checked by
+/// [`crate::perfmodel`], which models bandwidth explicitly).
+pub fn fsa_total_cycles(seq_len: usize, n: usize, variant: Variant, segments: usize) -> u64 {
+    assert!(seq_len % n == 0, "seq_len must be a multiple of the array dim");
+    let sched = InnerSchedule::new(n, variant, segments);
+    let t = (seq_len / n) as u64;
+    t * (t * sched.inner_latency() + rescale_latency(n)) + preload_latency(n)
+}
+
+/// Achieved-vs-peak FLOPs/s utilization for the closed-form FSA model.
+pub fn fsa_utilization(seq_len: usize, n: usize, variant: Variant, segments: usize) -> f64 {
+    let cycles = fsa_total_cycles(seq_len, n, variant, segments) as f64;
+    let flops = attention_flops(seq_len, n) as f64;
+    let peak_per_cycle = 2.0 * (n * n) as f64;
+    flops / (cycles * peak_per_cycle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_formulas() {
+        for n in [4usize, 8, 16, 32, 64, 128] {
+            let dual = InnerSchedule::new(n, Variant::DualPath, 8);
+            assert_eq!(dual.inner_latency(), 5 * n as u64 + 10, "N={n}");
+            let single = InnerSchedule::new(n, Variant::SinglePath, 8);
+            assert_eq!(single.inner_latency(), 6 * n as u64 + 10, "N={n}");
+            assert_eq!(naive_two_matmul(n, n), 8 * n as u64 - 2, "N={n}");
+            assert_eq!(rescale_latency(n), 2 * n as u64 + 20);
+        }
+    }
+
+    #[test]
+    fn wave_arithmetic_consistency() {
+        // The closed-form latency must equal the last wave event derived
+        // from the per-element schedule.
+        for n in [4usize, 8, 16, 128] {
+            for variant in [Variant::DualPath, Variant::SinglePath] {
+                let s = InnerSchedule::new(n, variant, 8);
+                assert_eq!(
+                    s.last_cycle(),
+                    s.inner_latency(),
+                    "N={n} variant={variant:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dataflow_ordering_invariants() {
+        // For every (m, n): parked before subtract; subtract before PWL;
+        // PWL done before the rowsum wave; rowsum before PV psum.
+        let s = InnerSchedule::new(16, Variant::DualPath, 8);
+        for m in 0..16 {
+            assert!(s.rowmax_done(m) < s.elementwise(0, 0, m));
+            for n in 0..16 {
+                assert!(s.s_parked(m, n) <= s.elementwise(0, n, m));
+                assert!(s.elementwise(9, n, m) < s.rowsum_at(n, m));
+                assert!(s.rowsum_at(n, m) < s.pv_at(n, m, 0));
+            }
+        }
+    }
+
+    #[test]
+    fn s_parked_after_cmp_visit() {
+        let s = InnerSchedule::new(8, Variant::DualPath, 8);
+        for m in 0..8 {
+            for n in 0..8 {
+                assert!(s.s_parked(m, n) > s.s_at_cmp(m, n));
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_asymptote() {
+        // Utilization ceiling is 2N / (5N + 10) -> 0.4 for large N & L.
+        let u = fsa_utilization(128 * 128, 128, Variant::DualPath, 8);
+        let ceiling = 2.0 * 128.0 / (5.0 * 128.0 + 10.0);
+        assert!(u < ceiling);
+        assert!(u > ceiling - 0.01, "u={u} ceiling={ceiling}");
+        // Single path is strictly worse but still well above the naive
+        // two-matmul bound of 8N-2 cycles for 4N^3 flops (= N/(4N-1)).
+        let us = fsa_utilization(128 * 128, 128, Variant::SinglePath, 8);
+        assert!(us < u);
+        assert!(us > 128.0 / (4.0 * 128.0 - 1.0) * 0.9);
+    }
+
+    #[test]
+    fn flops_formulas() {
+        assert_eq!(inner_flops(128), 4 * 128u64.pow(3));
+        assert_eq!(attention_flops(2048, 128), 4 * 2048 * 2048 * 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn rejects_ragged_seq() {
+        fsa_total_cycles(100, 128, Variant::DualPath, 8);
+    }
+}

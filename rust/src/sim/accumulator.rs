@@ -1,0 +1,205 @@
+//! Near-memory accumulator + accumulation SRAM (paper §2.2 & §3.4).
+//!
+//! Sits at the bottom edge of the array.  For each column m it receives,
+//! per inner iteration:
+//!
+//! 1. `a[m] = old_m - new_m` (from the CMP row, §3.5 "fifth operation") —
+//!    it forms the rescale factor `b[m] = exp2(scale * a)` with its own
+//!    Split+PWL block (hardware assumption documented in DESIGN.md §3);
+//! 2. the rowsum `local_l[m]` — applies `l = l * b + local_l`;
+//! 3. d PV partial sums `local_O[m, h]` in h order — applies
+//!    `O[h][m] = O[h][m] * b + local_O` (the diag(b) rescale, exactly
+//!    once per element per iteration).
+//!
+//! The accumulation SRAM stores O transposed (`[d][Br]`, Listing 2's
+//! `Ot`) plus the l / lse vectors, element-addressed f32.
+
+use crate::numerics::pwl::PwlExp2;
+use crate::sim::array::BottomOut;
+
+/// Accumulator + accumulation SRAM for an N x N array.
+pub struct Accumulator {
+    pub n: usize,
+    /// exp2 scale = log2(e) / sqrt(d).
+    pub scale: f32,
+    /// Evaluate the rescale factor b on the fp16 PWL datapath.
+    pub f16_mode: bool,
+    pwl: PwlExp2,
+    /// Accumulation SRAM, element-addressed f32.
+    pub sram: Vec<f32>,
+
+    // Per-column iteration state:
+    b: Vec<f32>,
+    /// Per-column count of PV arrivals this iteration (recovers h).
+    pv_seen: Vec<u16>,
+    /// Whether the diag(b) rescale applies (false on `first` iterations,
+    /// where old state must be ignored — b is forced to 0).
+    first: bool,
+
+    /// Current bindings: where l and O^T live in the accumulation SRAM.
+    l_addr: u32,
+    o_addr: u32,
+    o_stride: u32,
+}
+
+impl Accumulator {
+    pub fn new(n: usize, segments: usize, scale: f32, sram_elems: usize) -> Accumulator {
+        Accumulator {
+            n,
+            scale,
+            f16_mode: false,
+            pwl: PwlExp2::new(segments),
+            sram: vec![0.0; sram_elems],
+            b: vec![0.0; n],
+            pv_seen: vec![0; n],
+            first: true,
+            l_addr: 0,
+            o_addr: 0,
+            o_stride: n as u32,
+        }
+    }
+
+    /// Bind the accumulation targets for the current inner iteration and
+    /// reset per-iteration state.  `first` marks j == 0 of Algorithm 1.
+    pub fn begin_iteration(&mut self, l_addr: u32, o_addr: u32, o_stride: u32, first: bool) {
+        self.l_addr = l_addr;
+        self.o_addr = o_addr;
+        self.o_stride = o_stride;
+        self.first = first;
+        self.pv_seen.iter_mut().for_each(|c| *c = 0);
+        // b defaults to 1 until the AVal arrives (it always arrives before
+        // the rowsum in a legal schedule; the assert below enforces it).
+        self.b.iter_mut().for_each(|v| *v = f32::NAN);
+    }
+
+    /// Consume one bottom-edge event from the array.
+    pub fn accept(&mut self, out: BottomOut, cycle: u64) {
+        match out {
+            BottomOut::AVal { col, val } => {
+                let b = if self.first {
+                    0.0 // no previous state: diag(b)*old contributes nothing
+                } else if self.f16_mode {
+                    self.pwl.eval_f16_mac(self.scale * val)
+                } else {
+                    self.pwl.eval_f32(self.scale * val)
+                };
+                self.b[col] = b;
+            }
+            BottomOut::RowSum { col, val } => {
+                let b = self.b[col];
+                assert!(
+                    !b.is_nan(),
+                    "rowsum for col {col} arrived before its a-value (cycle {cycle})"
+                );
+                let addr = self.l_addr as usize + col;
+                self.sram[addr] = self.sram[addr] * b + val;
+            }
+            BottomOut::Pv { col, val } => {
+                let b = self.b[col];
+                assert!(
+                    !b.is_nan(),
+                    "PV psum for col {col} arrived before its a-value (cycle {cycle})"
+                );
+                let h = self.pv_seen[col] as usize;
+                self.pv_seen[col] += 1;
+                assert!(h < self.n, "too many PV arrivals for col {col}");
+                let addr = self.o_addr as usize + h * self.o_stride as usize + col;
+                self.sram[addr] = self.sram[addr] * b + val;
+            }
+        }
+    }
+
+    /// Reciprocal instruction: l <- 1/l over an N-vector (outer loop).
+    pub fn reciprocal(&mut self, l_addr: u32, len: usize) {
+        for i in 0..len {
+            let a = l_addr as usize + i;
+            self.sram[a] = 1.0 / self.sram[a];
+        }
+    }
+
+    /// AttnLseNorm: scale O^T[h][m] by l[m] (the reciprocal already
+    /// applied in place by [`Self::reciprocal`]).
+    pub fn lse_norm(&mut self, o_addr: u32, o_stride: u32, rows: usize, l_addr: u32) {
+        for h in 0..rows {
+            for m in 0..self.n {
+                let oa = o_addr as usize + h * o_stride as usize + m;
+                let la = l_addr as usize + m;
+                self.sram[oa] *= self.sram[la];
+            }
+        }
+    }
+
+    /// Zero a region (fresh output allocation).
+    pub fn clear(&mut self, addr: u32, elems: usize) {
+        for i in 0..elems {
+            self.sram[addr as usize + i] = 0.0;
+        }
+    }
+
+    pub fn read(&self, addr: u32, len: usize) -> &[f32] {
+        &self.sram[addr as usize..addr as usize + len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_iteration_ignores_old_state() {
+        let mut acc = Accumulator::new(4, 8, 1.0, 64);
+        // Poison old state; first=true must zero it via b=0.
+        acc.sram[0..4].copy_from_slice(&[9.0, 9.0, 9.0, 9.0]);
+        acc.begin_iteration(0, 16, 4, true);
+        for col in 0..4 {
+            acc.accept(BottomOut::AVal { col, val: -1e30 }, 0);
+            acc.accept(BottomOut::RowSum { col, val: 2.0 }, 1);
+        }
+        assert_eq!(acc.read(0, 4), &[2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn rescale_applies_exactly_once_per_element() {
+        let mut acc = Accumulator::new(2, 8, 1.0, 64);
+        acc.begin_iteration(0, 8, 2, true);
+        for col in 0..2 {
+            acc.accept(BottomOut::AVal { col, val: 0.0 }, 0);
+            acc.accept(BottomOut::RowSum { col, val: 1.0 }, 1);
+            for _h in 0..2 {
+                acc.accept(BottomOut::Pv { col, val: 3.0 }, 2);
+            }
+        }
+        assert_eq!(acc.read(8, 4), &[3.0; 4]);
+        // Second iteration with a = -1 -> b = exp2(-1) = 0.5.
+        acc.begin_iteration(0, 8, 2, false);
+        for col in 0..2 {
+            acc.accept(BottomOut::AVal { col, val: -1.0 }, 3);
+            acc.accept(BottomOut::RowSum { col, val: 1.0 }, 4);
+            for _h in 0..2 {
+                acc.accept(BottomOut::Pv { col, val: 1.0 }, 5);
+            }
+        }
+        // O = 3 * 0.5 + 1 = 2.5 everywhere; l = 1 * 0.5 + 1 = 1.5.
+        assert_eq!(acc.read(8, 4), &[2.5; 4]);
+        assert_eq!(acc.read(0, 2), &[1.5; 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "before its a-value")]
+    fn rowsum_before_a_is_illegal() {
+        let mut acc = Accumulator::new(2, 8, 1.0, 16);
+        acc.begin_iteration(0, 4, 2, false);
+        acc.accept(BottomOut::RowSum { col: 0, val: 1.0 }, 0);
+    }
+
+    #[test]
+    fn reciprocal_and_norm() {
+        let mut acc = Accumulator::new(2, 8, 1.0, 16);
+        acc.sram[0] = 2.0;
+        acc.sram[1] = 4.0;
+        acc.sram[4..8].copy_from_slice(&[2.0, 4.0, 6.0, 8.0]);
+        acc.reciprocal(0, 2);
+        acc.lse_norm(4, 2, 2, 0);
+        assert_eq!(acc.read(4, 4), &[1.0, 1.0, 3.0, 2.0]);
+    }
+}

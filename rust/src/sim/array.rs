@@ -1,0 +1,696 @@
+//! The N x N PE grid with FSA's three architectural additions (paper §3.1):
+//! a CMP-unit row on top, a Split unit per PE, and an upward data path.
+//!
+//! Per cycle, every in-flight value moves exactly one hop:
+//!
+//! * left operands move right along their row (one port per PE);
+//! * upward partial sums move from row k+1 to row k (first matmul);
+//! * downward values move from row k-1 to row k (S park, broadcasts,
+//!   rowsum, PV psums, stationary preload);
+//! * the CMP row consumes the top-row upward exits (running rowmax), and
+//!   re-emits values downward (S re-streaming, -new_m broadcast, a = old_m
+//!   - new_m pass-down).
+//!
+//! Each port accepts at most one value per cycle; a second injection into
+//! an occupied slot is a *structural hazard* and panics with a diagnostic
+//! — the cycle-model tests rely on this to prove the SystolicAttention
+//! schedule is legal.
+
+use crate::numerics::f16::quantize_ftz_f32 as quantize_f32;
+use crate::numerics::pwl::PwlExp2;
+
+/// Operand tag traveling with left-injected values (hardware sends these
+/// as sideband control bits alongside the data bus).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LeftTag {
+    /// First matmul: up_psum += stat * x (K stream; upward path).
+    MacUp,
+    /// In-place multiply: res *= x (the log2(e)/sqrt(d) constant wave).
+    MulConst,
+    /// PWL pair wave j: if the PE's fraction segment == `seg`, apply
+    /// res = 2^xi * (slope * xf + intercept).  `intercept` rides in the
+    /// second payload lane (hardware streams it from the top edge with the
+    /// segment index encoded in its exponent MSBs — §3.3; the sim carries
+    /// the pair together and checks the encoding property in unit tests).
+    Pwl { seg: u8, intercept: f32 },
+    /// Rowsum: down_psum += res (fp32), streaming "ones" wave.
+    RowSum,
+    /// Second matmul: down_psum += f16(res) * x (V stream; downward path).
+    MacDown,
+}
+
+/// Values on the downward path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DownMsg {
+    /// S value re-streamed from the CMP row; parks in `hops` more rows.
+    Park { val: f32, hops: u16 },
+    /// -new_m broadcast: every PE on the way applies res += val.
+    AddBroadcast { val: f32 },
+    /// a = old_m - new_m passing through to the accumulator.
+    AVal { val: f32 },
+    /// Rowsum partial sum.
+    RowSum { val: f32 },
+    /// Second-matmul partial sum (the accumulator recovers the output
+    /// index h from per-column arrival order — outputs exit in h order by
+    /// construction of the static schedule).
+    Pv { val: f32 },
+    /// Stationary preload value; lands in the stationary register after
+    /// `hops` more rows.
+    Preload { val: f32, hops: u16 },
+}
+
+/// A value leaving the bottom edge into the accumulator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BottomOut {
+    AVal { col: usize, val: f32 },
+    RowSum { col: usize, val: f32 },
+    Pv { col: usize, val: f32 },
+}
+
+#[derive(Clone, Copy, Debug)]
+struct LeftOp {
+    val: f32,
+    tag: LeftTag,
+}
+
+/// One comparison unit (top row, paper §3.1): tracks old/new row max and
+/// re-streams S downward.
+#[derive(Clone, Copy, Debug)]
+struct CmpUnit {
+    old_m: f32,
+    new_m: f32,
+    /// Arrival counter: how many S elements of the current iteration have
+    /// passed through (the park hop count).
+    seen: u16,
+}
+
+/// Finite stand-in for -inf: keeps the Split unit NaN-free (same
+/// convention as the Pallas kernel and flash references).
+pub const NEG_INF: f32 = -1e30;
+
+impl CmpUnit {
+    fn new() -> CmpUnit {
+        CmpUnit { old_m: NEG_INF, new_m: NEG_INF, seen: 0 }
+    }
+}
+
+/// The PE grid + CMP row.  See module docs for the stepping contract.
+pub struct Array {
+    pub n: usize,
+    /// PWL segments for the Split-unit exp2.
+    pwl: PwlExp2,
+    /// Softmax scale log2(e)/sqrt(d) applied by the MulConst wave
+    /// (kept here for the CMP a-value handoff; the wave carries it too).
+    pub quantize_inputs: bool,
+
+    // State, all row-major [row * n + col]:
+    stat: Vec<f32>,
+    res: Vec<f32>,
+    /// Left operands *arriving* at each PE this cycle.
+    ops: Vec<Option<LeftOp>>,
+    /// Upward psums arriving this cycle (from the row below).
+    up: Vec<Option<f32>>,
+    /// Downward values arriving this cycle (from the row above).
+    down: Vec<Option<DownMsg>>,
+    cmp: Vec<CmpUnit>,
+    /// S values that exited the top last cycle, processed by the CMP row
+    /// this cycle (one-cycle CMP latency, matching §3.2's timing).
+    cmp_inbox: Vec<Option<f32>>,
+
+    /// Pending edge injections for the *next* step: left[row], top[col].
+    inject_left: Vec<Option<LeftOp>>,
+    inject_top: Vec<Option<DownMsg>>,
+
+    // Double buffers reused across cycles (perf: avoids 3 x n^2 Vec
+    // allocations per simulated cycle — see EXPERIMENTS.md §Perf).
+    next_ops: Vec<Option<LeftOp>>,
+    next_up: Vec<Option<f32>>,
+    next_down: Vec<Option<DownMsg>>,
+
+    pub cycle: u64,
+    /// Busy-PE count accumulated per cycle (utilization accounting).
+    pub mac_ops: u64,
+    /// MACs spent in the two matmuls only (useful-FLOPs accounting).
+    pub matmul_macs: u64,
+}
+
+impl Array {
+    pub fn new(n: usize, segments: usize, quantize_inputs: bool) -> Array {
+        Array {
+            n,
+            pwl: PwlExp2::new(segments),
+            quantize_inputs,
+            stat: vec![0.0; n * n],
+            res: vec![0.0; n * n],
+            ops: vec![None; n * n],
+            up: vec![None; n * n],
+            down: vec![None; n * n],
+            cmp: vec![CmpUnit::new(); n],
+            cmp_inbox: vec![None; n],
+            inject_left: vec![None; n],
+            inject_top: vec![None; n],
+            next_ops: vec![None; n * n],
+            next_up: vec![None; n * n],
+            next_down: vec![None; n * n],
+            cycle: 0,
+            mac_ops: 0,
+            matmul_macs: 0,
+        }
+    }
+
+    /// Queue a left-edge injection for row `row` (consumed by the next
+    /// [`Self::step`]).  Panics on port contention.
+    pub fn inject_left(&mut self, row: usize, val: f32, tag: LeftTag) {
+        assert!(
+            self.inject_left[row].is_none(),
+            "structural hazard: left port of row {row} double-driven at cycle {}",
+            self.cycle
+        );
+        let (val, tag) = if self.quantize_inputs {
+            match tag {
+                LeftTag::MacUp | LeftTag::MacDown => (quantize_f32(val), tag),
+                LeftTag::Pwl { seg, intercept } => (
+                    quantize_f32(val),
+                    LeftTag::Pwl { seg, intercept: quantize_f32(intercept) },
+                ),
+                _ => (val, tag),
+            }
+        } else {
+            (val, tag)
+        };
+        self.inject_left[row] = Some(LeftOp { val, tag });
+    }
+
+    /// Queue a top-edge downward injection into column `col` (stationary
+    /// preload uses this path; CMP-sourced values are emitted by
+    /// [`Self::cmp_emit_sub`] / [`Self::cmp_emit_a`] instead).
+    pub fn inject_top(&mut self, col: usize, msg: DownMsg) {
+        assert!(
+            self.inject_top[col].is_none(),
+            "structural hazard: top port of column {col} double-driven at cycle {}",
+            self.cycle
+        );
+        self.inject_top[col] = Some(msg);
+    }
+
+    /// Reset CMP unit `col` for a new row block (AttnScore with
+    /// `first = true`): old max becomes -inf.
+    pub fn cmp_reset(&mut self, col: usize) {
+        self.cmp[col] = CmpUnit::new();
+    }
+
+    /// Begin a new inner iteration at CMP `col`: the running max of the
+    /// previous iteration becomes old_m, the arrival counter clears.
+    pub fn cmp_next_iter(&mut self, col: usize) {
+        let c = &mut self.cmp[col];
+        c.old_m = c.new_m;
+        c.seen = 0;
+    }
+
+    /// CMP row emits the -new_m broadcast into column `col`.
+    pub fn cmp_emit_sub(&mut self, col: usize) {
+        let v = -self.cmp[col].new_m;
+        self.inject_top(col, DownMsg::AddBroadcast { val: v });
+    }
+
+    /// CMP row emits a = old_m - new_m toward the accumulator.
+    pub fn cmp_emit_a(&mut self, col: usize) {
+        let c = self.cmp[col];
+        self.inject_top(col, DownMsg::AVal { val: c.old_m - c.new_m });
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: usize) -> usize {
+        row * self.n + col
+    }
+
+    /// Result-register write quantization: fp16 + flush-to-zero in f16
+    /// mode (PE result registers are half-precision), identity otherwise.
+    #[inline]
+    fn q_res(&self, v: f32) -> f32 {
+        if self.quantize_inputs {
+            quantize_f32(v)
+        } else {
+            v
+        }
+    }
+
+    /// Advance one clock cycle.  Returns every value that left the bottom
+    /// edge this cycle (routed to the accumulator by the machine).
+    pub fn step(&mut self) -> Vec<BottomOut> {
+        let n = self.n;
+        let mut outs = Vec::new();
+
+        // Reuse the double buffers (cleared from the previous cycle).
+        let mut next_ops = std::mem::take(&mut self.next_ops);
+        let mut next_up = std::mem::take(&mut self.next_up);
+        let mut next_down = std::mem::take(&mut self.next_down);
+
+        // 1. CMP row: process last cycle's top exits (one-cycle latency):
+        //    update the running max and re-stream S down the column.
+        for col in 0..n {
+            if let Some(s) = self.cmp_inbox[col].take() {
+                // The fp32 psum is quantized to the fp16 register width
+                // *here* so the tracked max and the parked value are the
+                // same number (otherwise the max row's N could land just
+                // above zero and skip the Split unit's sign-guarded PWL).
+                let s = self.q_res(s);
+                let c = &mut self.cmp[col];
+                c.new_m = c.new_m.max(s);
+                let hops = c.seen;
+                c.seen += 1;
+                next_down[self.idx(0, col)] = Some(DownMsg::Park { val: s, hops });
+            }
+        }
+
+        // 2. Per-PE processing, row by row.  Movement semantics:
+        //    ops[r][c] (arriving this cycle) -> next_ops[r][c+1];
+        //    up[r][c] is the psum arriving at (r, c) this cycle from
+        //    (r+1, c); after row r adds its term it becomes next_up[r-1][c]
+        //    (or exits to CMP when r == 0).  Down likewise, top-down.
+        let mut up_exit: Vec<Option<f32>> = vec![None; n];
+        for row in 0..n {
+            for col in 0..n {
+                let i = self.idx(row, col);
+                // ---- Left operand path ----
+                if let Some(op) = self.ops[i] {
+                    // Forward right (unless at the last column).
+                    if col + 1 < n {
+                        next_ops[self.idx(row, col + 1)] = Some(op);
+                    }
+                    match op.tag {
+                        LeftTag::MacUp => {
+                            let acc_in = self.up[i].unwrap_or(0.0);
+                            let term = self.stat[i] * op.val;
+                            let out = acc_in + term;
+                            self.mac_ops += 1;
+                            self.matmul_macs += 1;
+                            if row == 0 {
+                                up_exit[col] = Some(out);
+                            } else {
+                                next_up[self.idx(row - 1, col)] = Some(out);
+                            }
+                        }
+                        LeftTag::MulConst => {
+                            self.res[i] = self.q_res(self.res[i] * op.val);
+                            self.mac_ops += 1;
+                        }
+                        LeftTag::Pwl { seg, intercept } => {
+                            // Split unit: decompose the resident value.
+                            // Sign guard = one-shot latch: exp2 inputs are
+                            // always <= 0 and outputs always > 0, so a PE
+                            // whose register is already positive has
+                            // consumed its pair (cheap hardware: sign bit).
+                            let x = self.res[i];
+                            let xi = x.ceil();
+                            let xf = self.q_res(x - xi);
+                            let k = self.pwl.segment(xf as f64) as u8;
+                            if x <= 0.0 && k == seg {
+                                // fp16 interpolation MAC (PE datapath).
+                                let frac = self.q_res(op.val * xf + intercept);
+                                self.res[i] =
+                                    self.q_res(frac * xi.clamp(-126.0, 127.0).exp2());
+                                self.mac_ops += 1;
+                            }
+                        }
+                        LeftTag::RowSum => {
+                            let acc_in = match self.down[i] {
+                                Some(DownMsg::RowSum { val }) => val,
+                                None => 0.0,
+                                other => panic!(
+                                    "rowsum wave met unexpected down value {other:?} \
+                                     at ({row},{col}) cycle {}",
+                                    self.cycle
+                                ),
+                            };
+                            self.down[i] = None;
+                            let out = acc_in + self.res[i];
+                            self.mac_ops += 1;
+                            let msg = DownMsg::RowSum { val: out };
+                            if row + 1 < n {
+                                next_down[self.idx(row + 1, col)] = Some(msg);
+                            } else {
+                                outs.push(BottomOut::RowSum { col, val: out });
+                            }
+                        }
+                        LeftTag::MacDown => {
+                            // PV psums are born at row 0 (downward path).
+                            let acc_in = match self.down[i] {
+                                Some(DownMsg::Pv { val }) => val,
+                                None => {
+                                    assert_eq!(
+                                        row, 0,
+                                        "PV operand without psum below row 0 \
+                                         at ({row},{col}) cycle {}",
+                                        self.cycle
+                                    );
+                                    0.0
+                                }
+                                other => panic!(
+                                    "PV wave met unexpected down value {other:?} \
+                                     at ({row},{col}) cycle {}",
+                                    self.cycle
+                                ),
+                            };
+                            self.down[i] = None;
+                            let p = if self.quantize_inputs {
+                                quantize_f32(self.res[i])
+                            } else {
+                                self.res[i]
+                            };
+                            let out = acc_in + p * op.val;
+                            self.mac_ops += 1;
+                            self.matmul_macs += 1;
+                            if row + 1 < n {
+                                next_down[self.idx(row + 1, col)] = Some(DownMsg::Pv { val: out });
+                            } else {
+                                outs.push(BottomOut::Pv { col, val: out });
+                            }
+                        }
+                    }
+                } else if let Some(psum) = self.up[i] {
+                    // An upward psum with no matching operand would mean a
+                    // skew bug: MacUp operands and psums travel together.
+                    panic!(
+                        "orphan upward psum {psum} at ({row},{col}) cycle {}",
+                        self.cycle
+                    );
+                }
+
+                // ---- Downward path (non-operand-coupled messages) ----
+                if let Some(msg) = self.down[i].take() {
+                    match msg {
+                        DownMsg::Park { val, hops } => {
+                            if hops == 0 {
+                                // fp16 result registers (FTZ) in f16 mode.
+                                self.res[i] = self.q_res(val);
+                            } else if row + 1 < n {
+                                next_down[self.idx(row + 1, col)] =
+                                    Some(DownMsg::Park { val, hops: hops - 1 });
+                            } else {
+                                panic!(
+                                    "park value fell off column {col} cycle {}",
+                                    self.cycle
+                                );
+                            }
+                        }
+                        DownMsg::AddBroadcast { val } => {
+                            self.res[i] = self.q_res(self.res[i] + val);
+                            self.mac_ops += 1;
+                            if row + 1 < n {
+                                next_down[self.idx(row + 1, col)] =
+                                    Some(DownMsg::AddBroadcast { val });
+                            }
+                        }
+                        DownMsg::AVal { val } => {
+                            if row + 1 < n {
+                                next_down[self.idx(row + 1, col)] = Some(DownMsg::AVal { val });
+                            } else {
+                                outs.push(BottomOut::AVal { col, val });
+                            }
+                        }
+                        DownMsg::Preload { val, hops } => {
+                            if hops == 0 {
+                                self.stat[i] = val;
+                            } else if row + 1 < n {
+                                next_down[self.idx(row + 1, col)] =
+                                    Some(DownMsg::Preload { val, hops: hops - 1 });
+                            } else {
+                                panic!(
+                                    "preload value fell off column {col} cycle {}",
+                                    self.cycle
+                                );
+                            }
+                        }
+                        DownMsg::RowSum { .. } | DownMsg::Pv { .. } => {
+                            // These must always be consumed by an operand in
+                            // the left-path arm above.
+                            panic!(
+                                "unconsumed {msg:?} at ({row},{col}) cycle {} — \
+                                 operand wave and psum wave desynchronized",
+                                self.cycle
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // 3. Stage this cycle's top exits for CMP processing next cycle.
+        for col in 0..n {
+            if let Some(s) = up_exit[col] {
+                assert!(
+                    self.cmp_inbox[col].is_none(),
+                    "structural hazard: CMP inbox col {col} cycle {}",
+                    self.cycle
+                );
+                self.cmp_inbox[col] = Some(s);
+            }
+        }
+
+        // 4. Apply edge injections queued for this boundary.
+        for row in 0..n {
+            if let Some(op) = self.inject_left[row].take() {
+                assert!(
+                    next_ops[self.idx(row, 0)].is_none(),
+                    "structural hazard: left edge row {row} cycle {}",
+                    self.cycle
+                );
+                next_ops[self.idx(row, 0)] = Some(op);
+            }
+        }
+        for col in 0..n {
+            if let Some(msg) = self.inject_top[col].take() {
+                assert!(
+                    next_down[self.idx(0, col)].is_none(),
+                    "structural hazard: top edge col {col} cycle {}",
+                    self.cycle
+                );
+                next_down[self.idx(0, col)] = Some(msg);
+            }
+        }
+
+        // Swap: the consumed arrival buffers become next cycle's blank
+        // next-buffers (they are fully drained by the loops above, which
+        // `take()` every slot they read).
+        self.ops.iter_mut().for_each(|x| *x = None);
+        self.up.iter_mut().for_each(|x| *x = None);
+        self.down.iter_mut().for_each(|x| *x = None);
+        self.next_ops = std::mem::replace(&mut self.ops, next_ops);
+        self.next_up = std::mem::replace(&mut self.up, next_up);
+        self.next_down = std::mem::replace(&mut self.down, next_down);
+        self.cycle += 1;
+        outs
+    }
+
+    /// True when no value is in flight anywhere in the array.
+    pub fn quiescent(&self) -> bool {
+        self.ops.iter().all(Option::is_none)
+            && self.up.iter().all(Option::is_none)
+            && self.down.iter().all(Option::is_none)
+            && self.cmp_inbox.iter().all(Option::is_none)
+            && self.inject_left.iter().all(Option::is_none)
+            && self.inject_top.iter().all(Option::is_none)
+    }
+
+    /// Read the resident matrix (for tests): res[row][col].
+    pub fn resident(&self, row: usize, col: usize) -> f32 {
+        self.res[self.idx(row, col)]
+    }
+
+    pub fn stationary(&self, row: usize, col: usize) -> f32 {
+        self.stat[self.idx(row, col)]
+    }
+
+    /// Direct stationary write (used by tests; the machine preloads via
+    /// the top-edge `Preload` path).
+    pub fn set_stationary(&mut self, row: usize, col: usize, v: f32) {
+        let i = self.idx(row, col);
+        self.stat[i] = if self.quantize_inputs { quantize_f32(v) } else { v };
+    }
+
+    pub fn cmp_new_m(&self, col: usize) -> f32 {
+        self.cmp[col].new_m
+    }
+
+    pub fn pwl(&self) -> &PwlExp2 {
+        &self.pwl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive a bare first matmul (upward) through a tiny array and check
+    /// S = Q K^T lands at the CMP row and parks correctly.
+    #[test]
+    fn upward_matmul_and_park() {
+        let n = 4;
+        let mut a = Array::new(n, 8, false);
+        // stat[k][m] = Q[m][k]; Q = identity-ish pattern.
+        let q = [[1.0f32, 2.0, 0.0, 0.0],
+                 [0.0, 1.0, 0.0, 0.0],
+                 [0.0, 0.0, 1.0, 0.5],
+                 [1.0, 0.0, 0.0, 1.0]];
+        let k = [[1.0f32, 0.0, 0.0, 0.0],
+                 [0.5, 1.0, 0.0, 0.0],
+                 [0.0, 0.0, 2.0, 0.0],
+                 [0.0, 1.0, 0.0, 1.0]];
+        for m in 0..n {
+            for kk in 0..n {
+                a.set_stationary(kk, m, q[m][kk]);
+            }
+        }
+        // Expected S[m][nn] = sum_k q[m][k] * kmat[nn][k].
+        let mut want = [[0.0f32; 4]; 4];
+        for m in 0..n {
+            for nn in 0..n {
+                for kk in 0..n {
+                    want[m][nn] += q[m][kk] * k[nn][kk];
+                }
+            }
+        }
+        // Drive: K row nn enters array row kk at cycle nn + (n-1-kk).
+        let total = 6 * n as u64;
+        for cycle in 0..total {
+            for kk in 0..n {
+                // nn = cycle - (n-1-kk)
+                let skew = (n - 1 - kk) as i64;
+                let nn = cycle as i64 - skew;
+                if (0..n as i64).contains(&nn) {
+                    a.inject_left(kk, k[nn as usize][kk], LeftTag::MacUp);
+                }
+            }
+            let outs = a.step();
+            assert!(outs.is_empty(), "nothing should exit the bottom");
+        }
+        // After the run: parked S in res[nn][m], CMP max per column m.
+        for m in 0..n {
+            for nn in 0..n {
+                assert!(
+                    (a.resident(nn, m) - want[m][nn]).abs() < 1e-6,
+                    "S[{m}][{nn}]: got {} want {}",
+                    a.resident(nn, m),
+                    want[m][nn]
+                );
+            }
+            let want_max = (0..n).map(|nn| want[m][nn]).fold(f32::MIN, f32::max);
+            assert!((a.cmp_new_m(m) - want_max).abs() < 1e-6, "rowmax col {m}");
+        }
+        assert!(a.quiescent());
+    }
+
+    #[test]
+    fn broadcast_and_mulconst_waves() {
+        let n = 3;
+        let mut a = Array::new(n, 8, false);
+        // Park known residents directly.
+        for r in 0..n {
+            for c in 0..n {
+                a.res[r * n + c] = (r * n + c) as f32;
+            }
+        }
+        // Subtract broadcast of 1.0 down column 1, then a x2 wave on row 0.
+        a.inject_top(1, DownMsg::AddBroadcast { val: -1.0 });
+        for _ in 0..(n + 1) {
+            a.step();
+        }
+        for r in 0..n {
+            let want = (r * n + 1) as f32 - 1.0;
+            assert_eq!(a.resident(r, 1), want);
+        }
+        a.inject_left(0, 2.0, LeftTag::MulConst);
+        for _ in 0..(n + 1) {
+            a.step();
+        }
+        assert_eq!(a.resident(0, 0), 0.0 * 2.0);
+        assert_eq!(a.resident(0, 2), 2.0 * 2.0);
+    }
+
+    #[test]
+    fn pwl_wave_applies_correct_segment() {
+        let n = 2;
+        let mut a = Array::new(n, 8, false);
+        let pwl = PwlExp2::new(8);
+        // Residents: values in (-1, 0] across different segments, plus one
+        // with integer part.
+        a.res[0] = -0.05; // seg 0
+        a.res[1] = -0.4; // seg 3
+        a.res[2] = -1.3; // xf = -0.3 -> seg 2
+        a.res[3] = 0.0; // seg 0
+        let want: Vec<f32> = (0..4).map(|i| pwl.eval_f32(a.res[i])).collect();
+        // Stream all 8 pairs along both rows, one per cycle.
+        for j in 0..8u8 {
+            for row in 0..n {
+                a.inject_left(
+                    row,
+                    pwl.slopes[j as usize] as f32,
+                    LeftTag::Pwl { seg: j, intercept: pwl.intercepts[j as usize] as f32 },
+                );
+            }
+            a.step();
+        }
+        for _ in 0..n {
+            a.step();
+        }
+        for i in 0..4 {
+            assert!(
+                (a.res[i] - want[i]).abs() <= 1e-6 * want[i].abs().max(1e-20),
+                "res[{i}] got {} want {}",
+                a.res[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rowsum_and_pv_exit_bottom() {
+        let n = 3;
+        let mut a = Array::new(n, 8, false);
+        for r in 0..n {
+            for c in 0..n {
+                a.res[r * n + c] = (1 + r + c) as f32; // P[c-th row of P][r]
+            }
+        }
+        // Rowsum wave: ones enter row r at cycle r.
+        let mut sums = vec![0.0f32; n];
+        let mut got = vec![false; n];
+        for cycle in 0..(4 * n as u64) {
+            if (cycle as usize) < n {
+                a.inject_left(cycle as usize, 1.0, LeftTag::RowSum);
+            }
+            for out in a.step() {
+                if let BottomOut::RowSum { col, val } = out {
+                    sums[col] = val;
+                    got[col] = true;
+                }
+            }
+        }
+        for c in 0..n {
+            assert!(got[c]);
+            let want: f32 = (0..n).map(|r| (1 + r + c) as f32).sum();
+            assert_eq!(sums[c], want, "col {c}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "structural hazard")]
+    fn double_left_injection_panics() {
+        let mut a = Array::new(2, 8, false);
+        a.inject_left(0, 1.0, LeftTag::MulConst);
+        a.inject_left(0, 2.0, LeftTag::MulConst);
+    }
+
+    #[test]
+    fn quantization_applies_to_mac_operands() {
+        let mut a = Array::new(2, 8, true);
+        // 1/3 is not representable in fp16; MacUp operands get quantized.
+        a.inject_left(0, 1.0 / 3.0, LeftTag::MulConst); // NOT quantized
+        a.inject_left(1, 1.0 / 3.0, LeftTag::MacUp); // quantized
+        // (behavioral check happens via the flash pipeline tests; here we
+        // just ensure the call path doesn't quantize const waves)
+        assert!(a.inject_left[0].unwrap().val == 1.0 / 3.0);
+        assert!((a.inject_left[1].unwrap().val - 1.0 / 3.0).abs() > 0.0);
+    }
+}

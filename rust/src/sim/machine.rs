@@ -1,0 +1,458 @@
+//! The whole FSA device: memories, DMA queues, instruction sequencing and
+//! the cycle-accurate execution loop (paper Fig. 8).
+//!
+//! `run_program` works in two phases, mirroring the hardware's split
+//! between asynchronous instruction issue (§4.1) and fully deterministic
+//! compute execution (§4.2):
+//!
+//! 1. **Schedule**: walk the program in order, resolving issue cycles —
+//!    DMA latencies from the bandwidth model, compute chaining at the
+//!    SystolicAttention initiation interval (5N+10), stationary preloads
+//!    overlapped into the previous iteration's drain window, scoreboarded
+//!    against SRAM readiness.  This produces one combined absolute-cycle
+//!    control-signal stream (the §4.3 dual-FSM + combiner).
+//! 2. **Execute**: step the array cycle by cycle, applying edge signals
+//!    and routing bottom-edge values into the accumulator.  Numerics and
+//!    port-legality are checked *here*, by actual dataflow.
+
+use anyhow::{bail, ensure, Context};
+
+use crate::isa::{Instruction, Program, Space, TileDesc};
+use crate::numerics::f16::quantize_ftz_f32 as quantize_f32;
+use crate::numerics::LOG2E;
+use crate::schedule::{InnerSchedule, Variant};
+use crate::sim::accumulator::Accumulator;
+use crate::sim::array::{Array, LeftTag};
+use crate::sim::controller::{self, Signal};
+use crate::sim::dma::{DmaConfig, DmaQueue};
+use crate::sim::sram::Sram;
+
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    /// Array dimension N (= head dim d = Br = Bc, §3.5 tiling).
+    pub n: usize,
+    pub segments: usize,
+    pub variant: Variant,
+    /// Quantize activations through fp16 (Table-1 numerics) or keep f32.
+    pub quantize: bool,
+    pub mem_elems: usize,
+    pub spad_elems: usize,
+    pub accum_elems: usize,
+    pub dma: DmaConfig,
+}
+
+impl MachineConfig {
+    /// A small device for tests: N x N array, generous memories.
+    pub fn small(n: usize) -> MachineConfig {
+        MachineConfig {
+            n,
+            segments: 8,
+            variant: Variant::DualPath,
+            quantize: true,
+            mem_elems: 1 << 22,
+            spad_elems: 1 << 18,
+            accum_elems: 1 << 16,
+            dma: DmaConfig::for_bandwidth(820.0, 1.5, 4),
+        }
+    }
+
+    /// The paper's FSA configuration (128 x 128).
+    pub fn paper() -> MachineConfig {
+        let mut c = MachineConfig::small(128);
+        c.mem_elems = 1 << 26;
+        c
+    }
+}
+
+/// Timing + utilization results of one program run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunStats {
+    pub cycles: u64,
+    /// MACs spent in the two matmuls (useful FLOPs = 2x this).
+    pub matmul_macs: u64,
+    /// All PE operations including the elementwise softmax chain.
+    pub total_pe_ops: u64,
+    pub dma_load_busy: u64,
+    pub dma_store_busy: u64,
+    pub compute_busy: u64,
+    pub instructions: usize,
+}
+
+impl RunStats {
+    /// FLOPs/s utilization vs the 2N^2/cycle peak (paper §6.1 metric).
+    pub fn utilization(&self, n: usize) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.matmul_macs as f64 / ((n * n) as f64 * self.cycles as f64)
+    }
+}
+
+/// Machine-level events (controller signals resolved with tile bindings).
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Sig { sig: Signal, k_tile: TileDesc, v_tile: TileDesc, q_tile: TileDesc },
+    AccumBegin { l_addr: u32, o_addr: u32, o_stride: u32, first: bool },
+    DmaLoadDone { src: TileDesc, dst: TileDesc },
+    DmaStoreDone { src: TileDesc, dst: TileDesc },
+    Reciprocal { addr: u32, len: usize },
+    LseNorm { o_addr: u32, o_stride: u32, rows: usize, l_addr: u32 },
+}
+
+pub struct Machine {
+    pub cfg: MachineConfig,
+    pub mem: Vec<f32>,
+    pub spad: Sram,
+    pub array: Array,
+    pub accum: Accumulator,
+}
+
+impl Machine {
+    pub fn new(cfg: MachineConfig) -> Machine {
+        let scale = (LOG2E / (cfg.n as f64).sqrt()) as f32;
+        let mut accum = Accumulator::new(cfg.n, cfg.segments, scale, cfg.accum_elems);
+        accum.f16_mode = cfg.quantize;
+        Machine {
+            mem: vec![0.0; cfg.mem_elems],
+            spad: Sram::new(cfg.spad_elems),
+            array: Array::new(cfg.n, cfg.segments, cfg.quantize),
+            accum,
+            cfg,
+        }
+    }
+
+    pub fn write_mem(&mut self, addr: u32, data: &[f32]) {
+        self.mem[addr as usize..addr as usize + data.len()].copy_from_slice(data);
+    }
+
+    pub fn read_mem(&self, addr: u32, len: usize) -> &[f32] {
+        &self.mem[addr as usize..addr as usize + len]
+    }
+
+    /// Schedule + execute a program; returns timing statistics.
+    pub fn run_program(&mut self, program: &Program) -> crate::Result<RunStats> {
+        let n = self.cfg.n;
+        let sched = InnerSchedule::new(n, self.cfg.variant, self.cfg.segments);
+        let ii = sched.inner_latency();
+
+        // ---------------- Phase 1: schedule ----------------
+        let mut events: Vec<(u64, Ev)> = Vec::new();
+        let mut load_q = DmaQueue::new();
+        let mut store_q = DmaQueue::new();
+        let mut compute_free: u64 = 0;
+        let mut last_score_t: Option<u64> = None;
+        let mut pending_q: Option<TileDesc> = None;
+        let mut stationary_loaded = false;
+        // Completion cycle of writes into accumulator regions (for stores)
+        // and of stores reading them (for subsequent compute reuse).
+        let mut accum_writes: Vec<(TileDesc, u64)> = Vec::new();
+        let mut store_reads: Vec<(TileDesc, u64)> = Vec::new();
+        // Last cycle each scratchpad region is read by compute: DMA loads
+        // into a double-buffer slot must wait for the previous consumer
+        // (WAR hazard the real controller resolves via its scoreboard).
+        let mut spad_reads: Vec<(TileDesc, u64)> = Vec::new();
+        let mut compute_busy: u64 = 0;
+
+        let overlap_region = |list: &[(TileDesc, u64)], t: &TileDesc| -> u64 {
+            list.iter().filter(|(r, _)| r.overlaps(t)).map(|&(_, c)| c).max().unwrap_or(0)
+        };
+
+        // Schedule one DMA load (helper so the score arm can pull the V
+        // load that Listing 2 places between attn_score and attn_value
+        // forward in walk order — queue order is preserved because it is
+        // still earlier than any unwalked load).
+        macro_rules! sched_load {
+            ($src:expr, $dst:expr) => {{
+                let (src, dst) = ($src, $dst);
+                ensure!(src.space == Space::Main && dst.space == Space::Spad,
+                    "load_tile must move main -> spad: {src:?} -> {dst:?}");
+                ensure!((dst.end_addr() as usize) <= self.spad.capacity(),
+                    "load_tile overruns scratchpad: {dst:?}");
+                let war = overlap_region(&spad_reads, &dst);
+                let done = load_q.issue(&self.cfg.dma, src, dst, war);
+                self.spad.mark_ready(&dst, done);
+                events.push((done, Ev::DmaLoadDone { src, dst }));
+            }};
+        }
+
+        let insns = &program.instructions;
+        let mut consumed = vec![false; insns.len()];
+        let mut idx = 0usize;
+        while idx < insns.len() {
+            if consumed[idx] {
+                idx += 1;
+                continue;
+            }
+            let insn = insns[idx];
+            match insn {
+                Instruction::LoadTile { src, dst } => {
+                    sched_load!(src, dst);
+                }
+                Instruction::StoreTile { src, dst } => {
+                    ensure!(src.space == Space::Accum && dst.space == Space::Main,
+                        "store_tile must move accum -> main: {insn:?}");
+                    let ready = overlap_region(&accum_writes, &src);
+                    let done = store_q.issue(&self.cfg.dma, src, dst, ready);
+                    store_reads.push((src, done));
+                    events.push((done, Ev::DmaStoreDone { src, dst }));
+                }
+                Instruction::LoadStationary { src } => {
+                    ensure!(src.space == Space::Spad, "load_stationary reads spad");
+                    ensure!(src.rows as usize == n && src.cols as usize == n,
+                        "stationary tile must be {n}x{n}, got {src:?}");
+                    pending_q = Some(src);
+                }
+                Instruction::AttnScore { k, lse, first } => {
+                    ensure!(k.space == Space::Spad && lse.space == Space::Accum,
+                        "attn_score reads spad K, writes accum lse");
+                    ensure!(k.rows as usize == n && k.cols as usize == n,
+                        "K tile must be {n}x{n}, got {k:?}");
+                    // Pair with the next *compute-class* instruction when
+                    // it is the AttnValue (Listing 2 interleaves DMA loads
+                    // between score and value — different queues, §4.1);
+                    // any loads in between are pulled forward so their
+                    // completion times are known to the pairing.
+                    let mut value = None;
+                    let mut value_idx = 0usize;
+                    for j in idx + 1..insns.len() {
+                        match insns[j] {
+                            Instruction::LoadTile { src, dst } if !consumed[j] => {
+                                sched_load!(src, dst);
+                                consumed[j] = true;
+                            }
+                            Instruction::LoadTile { .. } | Instruction::StoreTile { .. } => {}
+                            Instruction::AttnValue { v, out, .. } => {
+                                value = Some((v, out));
+                                value_idx = j;
+                                break;
+                            }
+                            _ => break,
+                        }
+                    }
+                    let k_ready = self.spad.ready_cycle(&k);
+                    let v_ready = value.map(|(v, _)| self.spad.ready_cycle(&v)).unwrap_or(0);
+                    let out_busy = value
+                        .map(|(_, o)| overlap_region(&store_reads, &o))
+                        .unwrap_or(0);
+                    let lse_busy = overlap_region(&store_reads, &lse);
+
+                    let mut t = compute_free
+                        .max(k_ready)
+                        .max(v_ready.saturating_sub(sched.pv_start().saturating_sub(1)))
+                        .max(out_busy)
+                        .max(lse_busy);
+
+                    // Stationary preload placement.
+                    if let Some(q) = pending_q.take() {
+                        let q_ready = self.spad.ready_cycle(&q);
+                        let window = last_score_t.map(|lt| lt + (3 * n + 4 + self.cfg.segments) as u64);
+                        match window {
+                            Some(w) if q_ready <= w && stationary_loaded => {
+                                // Overlapped into the previous iteration's
+                                // drain window (offsets are relative to the
+                                // previous score's issue cycle).
+                                let base = last_score_t.unwrap();
+                                for (c, sig) in controller::preload_events_overlapped(&sched) {
+                                    events.push((base + c,
+                                        Ev::Sig { sig, k_tile: k, v_tile: k, q_tile: q }));
+                                }
+                                spad_reads.push((q, base + (5 * n + 12) as u64));
+                            }
+                            _ => {
+                                // Standalone: wait for array drain + data.
+                                let drained = last_score_t.map(|lt| lt + ii).unwrap_or(0);
+                                let start = q_ready.max(drained).max(compute_free.saturating_sub(0));
+                                for (c, sig) in controller::preload_events_standalone(n) {
+                                    events.push((start + c,
+                                        Ev::Sig { sig, k_tile: k, v_tile: k, q_tile: q }));
+                                }
+                                spad_reads.push((q, start + controller::preload_standalone_cycles(n)));
+                                t = t.max(start + controller::preload_standalone_cycles(n));
+                            }
+                        }
+                        stationary_loaded = true;
+                    }
+                    ensure!(stationary_loaded, "attn_score before any load_stationary");
+
+                    // Emit score events.
+                    for (c, sig) in controller::attn_score_events(&sched, first) {
+                        if matches!(sig, Signal::AccumBegin) {
+                            let (o_addr, o_stride) = value
+                                .map(|(_, o)| (o.addr, o.stride))
+                                .unwrap_or((lse.addr, n as u32));
+                            events.push((t + c, Ev::AccumBegin {
+                                l_addr: lse.addr, o_addr, o_stride, first,
+                            }));
+                        } else {
+                            events.push((t + c, Ev::Sig {
+                                sig, k_tile: k, v_tile: k, q_tile: k,
+                            }));
+                        }
+                    }
+                    accum_writes.push((lse, t + ii));
+                    spad_reads.push((k, t + ii));
+                    last_score_t = Some(t);
+                    compute_free = t + ii;
+                    compute_busy += ii;
+
+                    // Emit the paired value events now (same t).
+                    if let Some((v, out)) = value {
+                        ensure!(v.space == Space::Spad && out.space == Space::Accum,
+                            "attn_value reads spad V, writes accum O");
+                        for (c, sig) in controller::attn_value_events(&sched) {
+                            events.push((t + c, Ev::Sig {
+                                sig, k_tile: k, v_tile: v, q_tile: k,
+                            }));
+                        }
+                        accum_writes.push((out, t + ii));
+                        spad_reads.push((v, t + ii));
+                        consumed[value_idx] = true;
+                    }
+                }
+                Instruction::AttnValue { .. } => {
+                    bail!("attn_value must follow its attn_score (only DMA may sit between)");
+                }
+                Instruction::Reciprocal { l } => {
+                    ensure!(l.space == Space::Accum, "reciprocal operates on accum");
+                    let ready = overlap_region(&accum_writes, &l);
+                    let t = compute_free.max(ready);
+                    let lat = n as u64 + 10;
+                    events.push((t, Ev::Reciprocal { addr: l.addr, len: l.elems() }));
+                    accum_writes.push((l, t + lat));
+                    compute_free = t + lat;
+                    compute_busy += lat;
+                }
+                Instruction::AttnLseNorm { out, l } => {
+                    ensure!(out.space == Space::Accum && l.space == Space::Accum,
+                        "attn_lse_norm operates on accum");
+                    let ready = overlap_region(&accum_writes, &out)
+                        .max(overlap_region(&accum_writes, &l));
+                    let t = compute_free.max(ready);
+                    let lat = n as u64 + 10;
+                    events.push((t, Ev::LseNorm {
+                        o_addr: out.addr,
+                        o_stride: out.stride,
+                        rows: out.rows as usize,
+                        l_addr: l.addr,
+                    }));
+                    accum_writes.push((out, t + lat));
+                    compute_free = t + lat;
+                    compute_busy += lat;
+                }
+            }
+            idx += 1;
+        }
+
+        // ---------------- Phase 2: execute ----------------
+        events.sort_by_key(|&(c, _)| c);
+        let end_cycle = events
+            .iter()
+            .map(|&(c, _)| c)
+            .max()
+            .unwrap_or(0)
+            .max(compute_free)
+            .max(load_q.free_at())
+            .max(store_q.free_at())
+            + 8 * n as u64
+            + 64; // drain margin
+
+        let scale = (LOG2E / (n as f64).sqrt()) as f32;
+        let trace = std::env::var_os("FSA_TRACE").is_some();
+        let mut ei = 0usize;
+        for cycle in 0..end_cycle {
+            while ei < events.len() && events[ei].0 == cycle {
+                let (_, ev) = events[ei];
+                if trace {
+                    eprintln!("cycle {cycle}: {ev:?}");
+                }
+                self.apply_event(ev, scale, cycle)
+                    .with_context(|| format!("applying event at cycle {cycle}"))?;
+                ei += 1;
+            }
+            debug_assert!(ei >= events.len() || events[ei].0 > cycle);
+            let outs = self.array.step();
+            for out in outs {
+                self.accum.accept(out, cycle);
+            }
+        }
+        ensure!(self.array.quiescent(), "array not quiescent at program end");
+
+        Ok(RunStats {
+            cycles: compute_free
+                .max(store_q.free_at())
+                .max(load_q.free_at()),
+            matmul_macs: self.array.matmul_macs,
+            total_pe_ops: self.array.mac_ops,
+            dma_load_busy: load_q.busy_cycles(),
+            dma_store_busy: store_q.busy_cycles(),
+            compute_busy,
+            instructions: program.len(),
+        })
+    }
+
+    fn apply_event(&mut self, ev: Ev, scale: f32, _cycle: u64) -> crate::Result<()> {
+        let n = self.cfg.n;
+        match ev {
+            Ev::Sig { sig, k_tile, v_tile, q_tile } => match sig {
+                Signal::InjectK { row, n: nn } => {
+                    let v = self.spad.at(&k_tile, nn, row);
+                    self.array.inject_left(row, v, LeftTag::MacUp);
+                }
+                Signal::InjectConst { row } => {
+                    self.array.inject_left(row, scale, LeftTag::MulConst);
+                }
+                Signal::InjectPwl { row, pair } => {
+                    let slope = self.array.pwl().slopes[pair] as f32;
+                    let intercept = self.array.pwl().intercepts[pair] as f32;
+                    self.array.inject_left(row, slope, LeftTag::Pwl { seg: pair as u8, intercept });
+                }
+                Signal::InjectRowSumOne { row } => {
+                    self.array.inject_left(row, 1.0, LeftTag::RowSum);
+                }
+                Signal::InjectV { row, h } => {
+                    let v = self.spad.at(&v_tile, row, h);
+                    self.array.inject_left(row, v, LeftTag::MacDown);
+                }
+                Signal::InjectPreload { col, k } => {
+                    let v = self.spad.at(&q_tile, col, k);
+                    self.array.inject_top(col, crate::sim::array::DownMsg::Preload {
+                        val: v,
+                        hops: k as u16,
+                    });
+                }
+                Signal::CmpReset { col } => self.array.cmp_reset(col),
+                Signal::CmpNextIter { col } => self.array.cmp_next_iter(col),
+                Signal::CmpEmitSub { col } => self.array.cmp_emit_sub(col),
+                Signal::CmpEmitA { col } => self.array.cmp_emit_a(col),
+                Signal::AccumBegin => unreachable!("resolved at schedule time"),
+            },
+            Ev::AccumBegin { l_addr, o_addr, o_stride, first } => {
+                self.accum.begin_iteration(l_addr, o_addr, o_stride, first);
+            }
+            Ev::DmaLoadDone { src, dst } => {
+                for r in 0..dst.rows as usize {
+                    for c in 0..dst.cols as usize {
+                        let v = self.mem[src.addr as usize + r * src.stride as usize + c];
+                        let v = if self.cfg.quantize { quantize_f32(v) } else { v };
+                        self.spad.set(&dst, r, c, v);
+                    }
+                }
+            }
+            Ev::DmaStoreDone { src, dst } => {
+                for r in 0..src.rows as usize {
+                    for c in 0..src.cols as usize {
+                        let v = self.accum.sram
+                            [src.addr as usize + r * src.stride as usize + c];
+                        self.mem[dst.addr as usize + r * dst.stride as usize + c] = v;
+                    }
+                }
+            }
+            Ev::Reciprocal { addr, len } => self.accum.reciprocal(addr, len),
+            Ev::LseNorm { o_addr, o_stride, rows, l_addr } => {
+                self.accum.lse_norm(o_addr, o_stride, rows, l_addr);
+            }
+        }
+        let _ = n;
+        Ok(())
+    }
+}

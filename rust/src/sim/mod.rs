@@ -1,0 +1,33 @@
+//! Cycle-accurate FSA device simulator.
+//!
+//! This is the substitution for the paper's Chisel RTL + Verilator
+//! cosimulation (see DESIGN.md §substitutions): a genuine per-cycle
+//! dataflow model of the enhanced systolic array.  Values move exactly one
+//! hop per cycle; operands are injected at the array edges by the
+//! statically-scheduled controller (as in §4.3) and carry hardware-style
+//! control tags; correctness *emerges* from the data arriving at the right
+//! PEs on the right cycles, and the array asserts a structural hazard if
+//! two values ever contend for one port — which is how the
+//! SystolicAttention schedule of [`crate::schedule`] is validated.
+//!
+//! Components (paper Fig. 3 / Fig. 8):
+//!
+//! * [`array`]   — the N x N PE grid with upward + downward paths, Split
+//!   units (PWL exp2) and the top row of CMP units.
+//! * [`accumulator`] — near-memory accumulator + accumulation SRAM.
+//! * [`sram`]    — scratchpad SRAM with double-buffer bookkeeping.
+//! * [`dma`]     — iDMA-style 2D DMA engine with a bandwidth model.
+//! * [`controller`] — per-instruction static control-signal schedules
+//!   (the counter-FSM pair + combiner of §4.3).
+//! * [`machine`] — the whole device: instruction queues by class,
+//!   scoreboarding, and a `run_program` entry point.
+
+pub mod accumulator;
+pub mod array;
+pub mod controller;
+pub mod dma;
+pub mod machine;
+pub mod sram;
+
+pub use array::{Array, LeftTag};
+pub use machine::{Machine, MachineConfig, RunStats};

@@ -1,0 +1,160 @@
+//! Property-testing mini-harness (the offline environment has no
+//! proptest): deterministic SplitMix64-driven generators, a fixed number
+//! of cases per property, and first-failure reporting with the seed so a
+//! case can be replayed.
+//!
+//! Usage (no_run: doctest binaries miss the xla rpath in this image):
+//! ```no_run
+//! use fsa::testutil::Prop;
+//! Prop::new("add_commutes").cases(256).run(|g| {
+//!     let (a, b) = (g.i64_in(-100, 100), g.i64_in(-100, 100));
+//!     assert_eq!(a + b, b + a, "a={a} b={b}");
+//! });
+//! ```
+
+use crate::numerics::SplitMix64;
+
+/// Per-case generator handed to property closures.
+pub struct Gen {
+    rng: SplitMix64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        lo + self.rng.next_below((hi_inclusive - lo + 1) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi_inclusive: i64) -> i64 {
+        lo + self.rng.next_below((hi_inclusive - lo + 1) as u64) as i64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn f32_normal(&mut self) -> f32 {
+        self.rng.next_normal() as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_below(2) == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_below(xs.len() as u64) as usize]
+    }
+
+    /// Row-major standard-normal matrix.
+    pub fn matrix(&mut self, rows: usize, cols: usize) -> Vec<f32> {
+        self.rng.normal_matrix(rows, cols)
+    }
+}
+
+/// A property: named, seeded, with a case budget.
+pub struct Prop {
+    name: &'static str,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Prop {
+        // Stable per-name seed so failures are reproducible across runs.
+        let base_seed = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        });
+        Prop { name, cases: 100, base_seed }
+    }
+
+    pub fn cases(mut self, n: usize) -> Prop {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Prop {
+        self.base_seed = s;
+        self
+    }
+
+    /// Run the property; panics with the case seed on first failure.
+    pub fn run<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(self, f: F) {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let result = std::panic::catch_unwind(|| {
+                let mut g = Gen { rng: SplitMix64::new(seed), seed };
+                f(&mut g);
+            });
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| e.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!(
+                    "property {:?} failed at case {case} (replay with .seed({seed:#x}).cases(1)): {msg}",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(got: &[f32], want: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "index {i}: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn properties_pass_and_are_deterministic() {
+        Prop::new("sum_is_linear").cases(64).run(|g| {
+            let n = g.usize_in(1, 32);
+            let xs = g.matrix(1, n);
+            let s: f32 = xs.iter().sum();
+            let s2: f32 = xs.iter().map(|x| 2.0 * x).sum();
+            assert!((s2 - 2.0 * s).abs() < 1e-4 * s.abs().max(1.0));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always_fails\" failed at case 0")]
+    fn failures_report_seed() {
+        Prop::new("always_fails").cases(5).run(|_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        Prop::new("ranges").cases(200).run(|g| {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let i = g.i64_in(-5, 5);
+            assert!((-5..=5).contains(&i));
+            let f = g.f64_in(0.25, 0.75);
+            assert!((0.25..0.75).contains(&f) || f == 0.75);
+            let c = *g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&c));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "index 1")]
+    fn assert_close_reports_index() {
+        assert_close(&[1.0, 2.0], &[1.0, 3.0], 1e-3, 1e-3);
+    }
+}

@@ -1,0 +1,156 @@
+//! Coordinator integration tests: end-to-end serving over simulated FSA
+//! devices with PJRT numerics, plus failure-injection paths.
+//!
+//! Requires `make artifacts` (skips gracefully when absent, like the
+//! runtime itself does).
+
+use std::path::Path;
+
+use fsa::config::RunConfig;
+use fsa::coordinator::request::AttentionRequest;
+use fsa::coordinator::Coordinator;
+use fsa::numerics::reference::{mat_error, Mat};
+use fsa::numerics::SplitMix64;
+use fsa::runtime::Runtime;
+
+fn artifacts_ready() -> bool {
+    Path::new("artifacts/manifest.txt").exists()
+}
+
+fn cfg(devices: usize) -> RunConfig {
+    RunConfig {
+        devices,
+        max_batch: 4,
+        batch_timeout_cycles: 50_000,
+        queue_depth: 64,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn req(rng: &mut SplitMix64, id: u64, seq: usize) -> AttentionRequest {
+    let d = 128;
+    AttentionRequest::new(
+        id,
+        seq,
+        d,
+        rng.normal_matrix(seq, d),
+        rng.normal_matrix(seq, d),
+        rng.normal_matrix(seq, d),
+    )
+}
+
+#[test]
+fn serves_batch_with_correct_numerics() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let coord = Coordinator::start(cfg(2)).unwrap();
+    let mut rng = SplitMix64::new(77);
+    let reqs: Vec<AttentionRequest> = (0..6).map(|i| req(&mut rng, i, 128)).collect();
+    let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
+
+    let mut verifier = Runtime::new(Path::new("artifacts")).unwrap();
+    for (r, rx) in reqs.iter().zip(rxs) {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, r.id);
+        let out = resp.output.as_ref().expect("numerics ok").clone();
+        let want = verifier
+            .execute_attention("sdpa_L128_d128", &r.q, &r.k, &r.v)
+            .unwrap();
+        let err = mat_error(&Mat::new(128, 128, out), &Mat::new(128, 128, want));
+        assert!(err.mae < 1e-2, "request {}: {err:?}", r.id);
+        assert!(resp.device_cycles > 0);
+    }
+    // No request lost, none failed.
+    assert_eq!(
+        coord.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+        6
+    );
+    assert_eq!(coord.metrics.failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_seq_len_fails_cleanly_without_poisoning_the_pool() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let coord = Coordinator::start(cfg(1)).unwrap();
+    let mut rng = SplitMix64::new(9);
+    // 256 is not an artifact bucket (128/512/2048/4096 are shipped).
+    let bad = coord.submit(req(&mut rng, 1, 256)).unwrap();
+    let resp = bad.recv().unwrap();
+    assert!(resp.output.is_err(), "1 should fail: no exact artifact");
+    assert!(resp.output.unwrap_err().contains("strict mode"));
+    // The pool still serves good requests afterwards.
+    let good = coord.submit(req(&mut rng, 2, 128)).unwrap();
+    assert!(good.recv().unwrap().output.is_ok());
+    coord.shutdown();
+}
+
+#[test]
+fn client_side_padding_recovers_odd_lengths() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let coord = Coordinator::start(cfg(1)).unwrap();
+    let mut rng = SplitMix64::new(10);
+    let original = req(&mut rng, 3, 100);
+    let padded = original.padded(128);
+    let resp = coord.submit_wait(padded).unwrap();
+    let out = resp.output.expect("padded request should serve");
+    // Approximate (documented): padded keys take residual weight; real
+    // query rows must still be close to the unpadded reference.
+    let mut verifier = Runtime::new(Path::new("artifacts")).unwrap();
+    let p = original.padded(128);
+    let want = verifier
+        .execute_attention("sdpa_L128_d128", &p.q, &p.k, &p.v)
+        .unwrap();
+    let err = mat_error(&Mat::new(128, 128, out), &Mat::new(128, 128, want));
+    assert!(err.mae < 1e-2, "{err:?}");
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_on_full_queue() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut c = cfg(1);
+    c.queue_depth = 2;
+    let coord = Coordinator::start(c).unwrap();
+    let mut rng = SplitMix64::new(11);
+    // Flood fast; some submits must hit backpressure instead of hanging.
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..64 {
+        match coord.submit(req(&mut rng, i, 128)) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                assert!(e.to_string().contains("backpressure"), "{e}");
+                rejected += 1;
+            }
+        }
+    }
+    // Every accepted request completes exactly once; any rejection must
+    // have been a clean backpressure error (whether the burst outpaces
+    // the batcher's drain is timing-dependent, so zero rejections is
+    // also a legal outcome — the invariant is no loss, no hang).
+    let n_accepted = accepted.len();
+    for rx in accepted {
+        let _ = rx.recv().expect("accepted requests must complete");
+    }
+    assert_eq!(n_accepted + rejected, 64);
+    coord.shutdown();
+}
+
+#[test]
+fn missing_artifacts_dir_fails_fast() {
+    let mut c = cfg(1);
+    c.artifacts_dir = "/nonexistent/path".into();
+    assert!(Coordinator::start(c).is_err());
+}

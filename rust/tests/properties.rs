@@ -1,0 +1,160 @@
+//! Property-based tests over the crate's invariants (the proptest role;
+//! harness in `fsa::testutil`).
+
+use fsa::isa::encode::{decode_program, encode_program};
+use fsa::isa::{Instruction, Program, Space, TileDesc};
+use fsa::numerics::f16::{quantize_f32, quantize_ftz_f32, F16};
+use fsa::numerics::pwl::PwlExp2;
+use fsa::numerics::reference::{flash_forward, mat_error, sdpa, Exp2, Mat, Precision};
+use fsa::schedule::{InnerSchedule, Variant};
+use fsa::testutil::Prop;
+
+#[test]
+fn prop_f16_roundtrip_is_idempotent_and_monotone() {
+    Prop::new("f16_roundtrip").cases(500).run(|g| {
+        let x = (g.f32_normal()) * 10f32.powi(g.i64_in(-8, 4) as i32);
+        let q1 = quantize_f32(x);
+        assert_eq!(quantize_f32(q1), q1, "idempotent");
+        assert!((q1 - x).abs() <= x.abs() * 0.001 + 1e-7 || q1.is_infinite());
+        // FTZ only ever moves a value to zero.
+        let q2 = quantize_ftz_f32(x);
+        assert!(q2 == q1 || q2 == 0.0 || q2 == -0.0);
+        // Ordering preserved for two values a cell apart.
+        let y = x * 1.5 + 0.25;
+        if x < y {
+            assert!(quantize_f32(x) <= quantize_f32(y));
+        }
+    });
+}
+
+#[test]
+fn prop_pwl_error_bound_and_positivity() {
+    Prop::new("pwl_bounds").cases(300).run(|g| {
+        let segments = *g.choose(&[1usize, 2, 4, 8, 16, 32]);
+        let pwl = PwlExp2::new(segments);
+        let x = -g.f64_in(0.0, 40.0);
+        let approx = pwl.eval(x);
+        let exact = x.exp2();
+        assert!(approx > 0.0 || exact < 1e-300, "positive on (-inf,0]");
+        // Interp theory: |err| = 2^xi * |interp err on xf| with
+        // |interp err| <= (ln2/S)^2 / 8 * max 2^xf = (ln2/S)^2 / 8.
+        let xi = x.ceil().max(-1074.0);
+        let bound = (2f64.ln() / segments as f64).powi(2) / 8.0 * xi.exp2() + 1e-300;
+        assert!(
+            (approx - exact).abs() <= bound * 1.0001,
+            "x={x} approx={approx} exact={exact} bound={bound}"
+        );
+    });
+}
+
+#[test]
+fn prop_isa_roundtrip_fuzz() {
+    Prop::new("isa_roundtrip").cases(500).run(|g| {
+        let tile = |g: &mut fsa::testutil::Gen, space| TileDesc {
+            space,
+            addr: g.usize_in(0, (1 << 24) - 1) as u32,
+            rows: 1u16 << g.usize_in(0, 10),
+            cols: 1u16 << g.usize_in(0, 10),
+            stride: g.usize_in(1, 0xF_FFFF) as u32,
+        };
+        let a = tile(g, Space::Spad);
+        let b = tile(g, Space::Accum);
+        let m = tile(g, Space::Main);
+        let first = g.bool();
+        let insn = match g.usize_in(0, 6) {
+            0 => Instruction::LoadTile { src: m, dst: a },
+            1 => Instruction::StoreTile { src: b, dst: m },
+            2 => Instruction::LoadStationary { src: a },
+            3 => Instruction::AttnScore { k: a, lse: b, first },
+            4 => Instruction::AttnValue { v: a, out: b, first },
+            5 => Instruction::Reciprocal { l: b },
+            _ => Instruction::AttnLseNorm { out: b, l: b },
+        };
+        let mut p = Program::new();
+        p.push(insn);
+        let words = encode_program(&p).expect("encodable");
+        assert_eq!(decode_program(&words).expect("decodable"), p);
+    });
+}
+
+#[test]
+fn prop_flash_matches_dense_for_random_shapes() {
+    Prop::new("flash_vs_dense").cases(40).run(|g| {
+        let br = *g.choose(&[4usize, 8, 16]);
+        let bc = *g.choose(&[4usize, 8, 16]);
+        let tr = g.usize_in(1, 3);
+        let tc = g.usize_in(1, 3);
+        let d = *g.choose(&[4usize, 8, 16]);
+        let (l, lk) = (tr * br, tc * bc);
+        let q = Mat::new(l, d, g.matrix(l, d));
+        let k = Mat::new(lk, d, g.matrix(lk, d));
+        let v = Mat::new(lk, d, g.matrix(lk, d));
+        let exact = flash_forward(&q, &k, &v, br, bc, &Exp2::Exact, Precision::F32);
+        let dense = sdpa(&q, &k, &v);
+        let err = mat_error(&exact, &dense);
+        assert!(err.max_abs < 1e-4, "exact flash drifted: {err:?}");
+        // The fp16/PWL device path stays within the paper's error band.
+        let device = fsa::numerics::reference::flash_pwl(&q, &k, &v, br, bc, 8);
+        let derr = mat_error(&device, &dense);
+        assert!(derr.mae < 3e-2, "device numerics out of band: {derr:?}");
+        assert!(device.data.iter().all(|x| x.is_finite()));
+    });
+}
+
+#[test]
+fn prop_schedule_waves_never_collide() {
+    // For every (n, m) pair and every pair of distinct waves, application
+    // cycles at the same PE must differ (no two writes to one register in
+    // one cycle) — the analytical form of the array's hazard check.
+    Prop::new("wave_disjoint").cases(60).run(|g| {
+        let n = *g.choose(&[4usize, 8, 16, 32]);
+        let s = InnerSchedule::new(n, Variant::DualPath, 8);
+        let row = g.usize_in(0, n - 1);
+        let col = g.usize_in(0, n - 1);
+        let mut cycles: Vec<u64> = (0..10).map(|w| s.elementwise(w, row, col)).collect();
+        cycles.push(s.rowsum_at(row, col));
+        cycles.push(s.s_parked(col, row));
+        for h in 0..n {
+            cycles.push(s.pv_at(row, col, h));
+        }
+        let len = cycles.len();
+        cycles.sort_unstable();
+        cycles.dedup();
+        assert_eq!(cycles.len(), len, "wave collision at PE({row},{col}) n={n}");
+    });
+}
+
+#[test]
+fn prop_seq_bucket_minimal_cover() {
+    Prop::new("bucket_cover").cases(200).run(|g| {
+        let mut buckets: Vec<usize> = (0..g.usize_in(1, 6)).map(|_| g.usize_in(1, 4096)).collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        let want = g.usize_in(1, 5000);
+        match fsa::coordinator::seq_bucket(want, &buckets) {
+            Some(b) => {
+                assert!(b >= want);
+                assert!(buckets.iter().all(|&x| x < want || x >= b), "not minimal");
+            }
+            None => assert!(buckets.iter().all(|&x| x < want)),
+        }
+    });
+}
+
+#[test]
+fn prop_negative_normals_cover_exactly_the_domain() {
+    // Exhaustive double-check of the Fig-12 sweep domain.
+    let mut count = 0usize;
+    for h in fsa::numerics::f16::negative_normals() {
+        assert!(h.is_normal() && h.is_sign_negative());
+        count += 1;
+    }
+    assert_eq!(count, 30 * 1024);
+    // And no finite f16 is both normal-negative and missed: count matches
+    // the closed form 30 exponents x 1024 mantissas.
+    let total_neg_normal = fsa::numerics::f16::all_finite()
+        .filter(|h| h.is_normal() && h.is_sign_negative())
+        .count();
+    assert_eq!(total_neg_normal, count);
+    let _ = F16::ONE;
+}
