@@ -1,0 +1,33 @@
+# fsa — build/verify entry points (see README.md quickstart).
+
+.PHONY: verify build test doc artifacts artifacts-full serve clean
+
+# Tier-1 verification: release build + tests + clean rustdoc.
+verify:
+	./verify.sh
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# Compile the JAX/Pallas AOT artifacts the PJRT backend serves
+# (requires the python toolchain; the reference backend needs none).
+artifacts:
+	python3 python/compile/aot.py --out artifacts
+
+artifacts-full:
+	python3 python/compile/aot.py --out artifacts --full
+
+# Boot the coordinator on the artifact-free reference backend.
+serve:
+	cargo run --release --bin fsa -- serve --backend reference \
+		--heads 8 --kv-heads 2 --devices 2 --seq 128
+
+clean:
+	cargo clean
+	rm -rf artifacts

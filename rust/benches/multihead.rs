@@ -1,0 +1,98 @@
+//! Bench: multi-head / GQA head-sharded serving across the device pool.
+//!
+//! Two parts:
+//!
+//! 1. Model sweep (instant): whole-operator FLOPs/s utilization from
+//!    `perfmodel::multi_head_perf` across head counts and pool sizes —
+//!    the multi-head analogue of the Fig.-11 single-head curves,
+//!    showing perfect rounds vs ragged-tail degradation.
+//! 2. Live coordinator throughput: boots the real coordinator on the
+//!    reference backend (no artifacts needed) and measures host-side
+//!    request throughput of GQA serving at a small shape, where
+//!    batching/routing/gather overhead — not numerics — dominates.
+//!
+//!     cargo bench --bench multihead
+
+use std::time::Duration;
+
+use fsa::benchutil::{bench_for, fmt_duration, Table};
+use fsa::config::{AccelConfig, BackendKind, RunConfig};
+use fsa::coordinator::request::AttentionRequest;
+use fsa::coordinator::Coordinator;
+use fsa::numerics::SplitMix64;
+use fsa::perfmodel::multi_head_perf;
+use fsa::schedule::Variant;
+
+fn model_sweep() {
+    let cfg = AccelConfig::builtin("fsa").unwrap();
+    let mut t = Table::new(&[
+        "L", "heads", "kv", "pool", "used", "rounds", "critical cycles", "pool util %",
+    ]);
+    for &(l, heads, kv) in &[(2048usize, 8usize, 8usize), (2048, 8, 2), (4096, 32, 8), (4096, 40, 8)] {
+        for &devices in &[1usize, 2, 4, 8] {
+            let p = multi_head_perf(&cfg, l, 128, heads, kv, devices, Variant::DualPath, 8);
+            t.row(&[
+                l.to_string(),
+                heads.to_string(),
+                kv.to_string(),
+                devices.to_string(),
+                p.devices_used.to_string(),
+                p.rounds.to_string(),
+                p.critical_path_cycles.to_string(),
+                format!("{:.1}", 100.0 * p.utilization),
+            ]);
+        }
+    }
+    println!("-- whole-operator utilization model (multi-head Fig.-11 analogue) --");
+    t.print();
+}
+
+fn live_coordinator() {
+    let (seq, d, heads, kv_heads) = (64usize, 64usize, 8usize, 2usize);
+    let coord = Coordinator::start(RunConfig {
+        devices: 4,
+        max_batch: 8,
+        batch_timeout_cycles: 50_000,
+        queue_depth: 1024,
+        artifacts_dir: "artifacts".into(),
+        backend: BackendKind::Reference,
+        num_heads: heads,
+        num_kv_heads: kv_heads,
+    })
+    .expect("coordinator boots on the reference backend");
+
+    let mut rng = SplitMix64::new(99);
+    let q = rng.normal_matrix(heads * seq, d);
+    let k = rng.normal_matrix(kv_heads * seq, d);
+    let v = rng.normal_matrix(kv_heads * seq, d);
+    let mut id = 0u64;
+    let st = bench_for(Duration::from_millis(400), || {
+        id += 1;
+        let resp = coord
+            .submit_wait(AttentionRequest::gqa(
+                id, seq, d, heads, kv_heads,
+                q.clone(), k.clone(), v.clone(),
+            ))
+            .expect("submit");
+        assert!(resp.output.is_ok());
+        assert_eq!(resp.shards, heads);
+    });
+
+    let mut t = Table::new(&["live GQA serving", "value"]);
+    t.row(&["request shape".into(), format!("L={seq} d={d} {heads}q/{kv_heads}kv heads")]);
+    t.row(&["median round trip".into(), fmt_duration(st.median)]);
+    t.row(&["p95 round trip".into(), fmt_duration(st.p95)]);
+    t.row(&[
+        "head shards/s (median)".into(),
+        format!("{:.0}", heads as f64 / st.median.as_secs_f64()),
+    ]);
+    println!("\n-- live coordinator (reference backend, 4 devices) --");
+    t.print();
+    println!("{}", coord.metrics.summary());
+    coord.shutdown();
+}
+
+fn main() {
+    model_sweep();
+    live_coordinator();
+}

@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context};
+use anyhow::{anyhow, bail, ensure, Context};
 
 /// Parsed INI document: section -> key -> value (last write wins).
 #[derive(Clone, Debug, Default)]
@@ -232,14 +232,62 @@ impl AccelConfig {
     }
 }
 
+/// Which numerics engine the device workers execute heads on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT execution of the AOT Pallas artifacts; requires an
+    /// artifacts manifest and the real `xla` bindings.  The strict
+    /// default: identical behavior to the pre-multi-head coordinator.
+    #[default]
+    Pjrt,
+    /// In-crate `flash_pwl` reference numerics (the device's software
+    /// twin); no artifacts or PJRT needed.  Exact sequence lengths only.
+    Reference,
+    /// PJRT when the artifacts manifest is present, reference
+    /// otherwise.
+    Auto,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> crate::Result<BackendKind> {
+        match s {
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "reference" | "ref" => Ok(BackendKind::Reference),
+            "auto" => Ok(BackendKind::Auto),
+            other => bail!("unknown backend {other:?} (try pjrt|reference|auto)"),
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Reference => "reference",
+            BackendKind::Auto => "auto",
+        })
+    }
+}
+
 /// Serving-run parameters (coordinator + e2e example).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub devices: usize,
+    /// Batch size limit in *head shards*, not requests.
     pub max_batch: usize,
     pub batch_timeout_cycles: u64,
     pub queue_depth: usize,
     pub artifacts_dir: String,
+    /// Numerics engine for the device workers.
+    pub backend: BackendKind,
+    /// Default query-head count for synthetic workloads (`fsa serve`,
+    /// examples); per-request values always win.
+    pub num_heads: usize,
+    /// Default KV-head count for synthetic workloads; must divide
+    /// `num_heads`.
+    pub num_kv_heads: usize,
 }
 
 impl Default for RunConfig {
@@ -250,11 +298,30 @@ impl Default for RunConfig {
             batch_timeout_cycles: 200_000,
             queue_depth: 1024,
             artifacts_dir: "artifacts".into(),
+            backend: BackendKind::Pjrt,
+            num_heads: 1,
+            num_kv_heads: 1,
         }
     }
 }
 
 impl RunConfig {
+    /// Cross-field invariants, checked wherever a `RunConfig` enters
+    /// the system (INI load, `Coordinator::start`) so the GQA
+    /// divisibility rule lives in exactly one place.
+    pub fn validate(&self) -> crate::Result<()> {
+        ensure!(self.devices >= 1, "need at least one device");
+        ensure!(
+            self.num_heads >= 1
+                && self.num_kv_heads >= 1
+                && self.num_heads % self.num_kv_heads == 0,
+            "num_heads {} must be a positive multiple of num_kv_heads {}",
+            self.num_heads,
+            self.num_kv_heads
+        );
+        Ok(())
+    }
+
     pub fn from_ini(ini: &Ini) -> crate::Result<RunConfig> {
         let sec = "run";
         let mut cfg = RunConfig::default();
@@ -273,6 +340,16 @@ impl RunConfig {
         if let Some(v) = ini.get(sec, "artifacts_dir") {
             cfg.artifacts_dir = v.to_string();
         }
+        if let Some(v) = ini.get_parsed::<BackendKind>(sec, "backend")? {
+            cfg.backend = v;
+        }
+        if let Some(v) = ini.get_parsed::<usize>(sec, "num_heads")? {
+            cfg.num_heads = v;
+        }
+        if let Some(v) = ini.get_parsed::<usize>(sec, "num_kv_heads")? {
+            cfg.num_kv_heads = v;
+        }
+        cfg.validate()?;
         Ok(cfg)
     }
 }
@@ -293,6 +370,22 @@ mod tests {
         let run = RunConfig::from_ini(&ini).unwrap();
         assert_eq!(run.devices, 4);
         assert_eq!(run.max_batch, 8); // default
+        assert_eq!(run.backend, BackendKind::Pjrt); // default
+        assert_eq!(run.num_heads, 1); // default
+    }
+
+    #[test]
+    fn run_config_head_and_backend_knobs() {
+        let text = "[run]\nbackend = reference\nnum_heads = 8\nnum_kv_heads = 2\n";
+        let run = RunConfig::from_ini(&Ini::parse(text).unwrap()).unwrap();
+        assert_eq!(run.backend, BackendKind::Reference);
+        assert_eq!(run.num_heads, 8);
+        assert_eq!(run.num_kv_heads, 2);
+        assert_eq!("auto".parse::<BackendKind>().unwrap(), BackendKind::Auto);
+        assert!("gpu".parse::<BackendKind>().is_err());
+        // GQA divisibility is validated at config load.
+        let bad = "[run]\nnum_heads = 3\nnum_kv_heads = 2\n";
+        assert!(RunConfig::from_ini(&Ini::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -1,6 +1,12 @@
-//! Sequence-length batcher: groups compatible requests so a device runs
-//! one compiled executable per batch (amortizing PJRT dispatch), bounded
-//! by `max_batch` and a timeout so short queues still make progress.
+//! Shard batcher: explodes ingress requests into per-head shards and
+//! groups compatible shards so a device runs one compiled executable
+//! per batch (amortizing PJRT dispatch), bounded by `max_batch` and a
+//! timeout so short queues still make progress.
+//!
+//! A multi-head request enters as one [`Envelope`] and leaves as
+//! `num_heads` [`ShardEnvelope`]s; shards of *different* requests with
+//! the same `(seq_len, d)` shape share batches, so head-sharding and
+//! cross-request batching compose.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -9,6 +15,7 @@ use std::time::Duration;
 use super::metrics::Metrics;
 use super::request::Envelope;
 use super::router::Router;
+use super::shard::{explode, ShardEnvelope};
 
 pub struct Batcher {
     max_batch: usize,
@@ -25,29 +32,30 @@ impl Batcher {
         }
     }
 
-    /// Main loop: drain the ingress channel into per-seq-length groups,
-    /// dispatch a group when it reaches `max_batch` or its oldest member
+    /// Main loop: drain the ingress channel, explode each request into
+    /// head shards, group shards by `(seq_len, d)`, and dispatch a
+    /// group when it reaches `max_batch` shards or its oldest member
     /// exceeds the timeout.  Exits when the ingress disconnects.
     pub fn run(&self, rx: mpsc::Receiver<Envelope>, router: Router, metrics: Arc<Metrics>) {
-        // (seq_len, d) -> pending envelopes.
-        let mut groups: Vec<((usize, usize), Vec<Envelope>)> = Vec::new();
+        // (seq_len, d) -> pending shards.
+        let mut groups: Vec<((usize, usize), Vec<ShardEnvelope>)> = Vec::new();
+        let admit = |env: Envelope, groups: &mut Vec<((usize, usize), Vec<ShardEnvelope>)>| {
+            let key = (env.req.seq_len, env.req.d);
+            let shards = explode(env);
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, g)) => g.extend(shards),
+                None => groups.push((key, shards)),
+            }
+        };
         loop {
             // Block briefly so timeouts fire even when idle.
             let first = rx.recv_timeout(self.timeout.min(Duration::from_millis(5)));
             match first {
                 Ok(env) => {
-                    let key = (env.req.seq_len, env.req.d);
-                    match groups.iter_mut().find(|(k, _)| *k == key) {
-                        Some((_, g)) => g.push(env),
-                        None => groups.push((key, vec![env])),
-                    }
+                    admit(env, &mut groups);
                     // Opportunistically drain whatever else is queued.
                     while let Ok(env) = rx.try_recv() {
-                        let key = (env.req.seq_len, env.req.d);
-                        match groups.iter_mut().find(|(k, _)| *k == key) {
-                            Some((_, g)) => g.push(env),
-                            None => groups.push((key, vec![env])),
-                        }
+                        admit(env, &mut groups);
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -86,7 +94,7 @@ impl Batcher {
         }
     }
 
-    fn chunks(mut g: Vec<Envelope>, max: usize) -> Vec<Vec<Envelope>> {
+    fn chunks(mut g: Vec<ShardEnvelope>, max: usize) -> Vec<Vec<ShardEnvelope>> {
         let mut out = Vec::new();
         while g.len() > max {
             let rest = g.split_off(max);
@@ -103,25 +111,30 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::AttentionRequest;
 
-    fn env(id: u64, seq: usize) -> Envelope {
+    fn envs(n: u64, seq: usize) -> Vec<ShardEnvelope> {
         let d = 4;
-        let m = vec![0.0f32; seq * d];
-        Envelope {
-            req: super::super::request::AttentionRequest::new(id, seq, d, m.clone(), m.clone(), m),
-            reply: mpsc::channel().0,
-            enqueued: std::time::Instant::now(),
-        }
+        (0..n)
+            .flat_map(|id| {
+                let m = vec![0.0f32; seq * d];
+                explode(Envelope {
+                    req: AttentionRequest::new(id, seq, d, m.clone(), m.clone(), m),
+                    reply: mpsc::channel().0,
+                    enqueued: std::time::Instant::now(),
+                })
+            })
+            .collect()
     }
 
     #[test]
     fn chunking_respects_max_batch() {
-        let g: Vec<Envelope> = (0..10).map(|i| env(i, 8)).collect();
+        let g = envs(10, 8);
         let chunks = Batcher::chunks(g, 4);
         let sizes: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
         assert_eq!(sizes, vec![4, 4, 2]);
-        // No request lost or duplicated.
-        let mut ids: Vec<u64> = chunks.iter().flatten().map(|e| e.req.id).collect();
+        // No shard lost or duplicated.
+        let mut ids: Vec<u64> = chunks.iter().flatten().map(|e| e.shard.req.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..10).collect::<Vec<_>>());
     }
@@ -129,5 +142,21 @@ mod tests {
     #[test]
     fn empty_group_produces_no_chunks() {
         assert!(Batcher::chunks(vec![], 4).is_empty());
+    }
+
+    #[test]
+    fn multi_head_request_contributes_one_shard_per_head() {
+        let (seq, d, heads) = (8, 4, 4);
+        let q = vec![0.0f32; heads * seq * d];
+        let kv = vec![0.0f32; seq * d];
+        let shards = explode(Envelope {
+            req: AttentionRequest::gqa(1, seq, d, heads, 1, q, kv.clone(), kv),
+            reply: mpsc::channel().0,
+            enqueued: std::time::Instant::now(),
+        });
+        // One 4-head request + batch limit 3 => chunks of 3 + 1.
+        let sizes: Vec<usize> =
+            Batcher::chunks(shards, 3).iter().map(|c| c.len()).collect();
+        assert_eq!(sizes, vec![3, 1]);
     }
 }

@@ -1,25 +1,29 @@
-//! Device worker: one thread owning a PJRT runtime (numerics) and the FSA
-//! performance model (simulated device timing).
+//! Device worker: one thread owning a numerics [`Backend`] (PJRT
+//! artifacts or the in-crate reference twin) and the FSA performance
+//! model (simulated device timing).
 //!
-//! Each worker is a simulated FSA card: requests execute through the
-//! `fsa_attn` AOT artifact (the numerics twin of the silicon, see
-//! DESIGN.md), while latency/throughput are accounted in device cycles
-//! from [`crate::perfmodel`] at the paper's 1.5 GHz clock.
+//! Each worker is a simulated FSA card.  The unit of work is one *head
+//! shard* (see [`super::shard`]): numerics execute through the backend
+//! (the `fsa_attn` AOT artifact — the numerics twin of the silicon,
+//! see DESIGN.md §3 — or the `flash_pwl` reference), while
+//! latency/throughput are accounted in device cycles from
+//! [`crate::perfmodel`] at the paper's 1.5 GHz clock.  The worker that
+//! finishes a request's final shard assembles and sends the gathered
+//! whole-operator response.
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Duration;
 
-use crate::config::AccelConfig;
+use crate::config::{AccelConfig, BackendKind};
 use crate::perfmodel::fsa_flash_perf;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::schedule::Variant;
 
 use super::metrics::Metrics;
-use super::request::AttentionResponse;
 use super::router::{Batch, WorkerHandle};
+use super::shard::ShardResult;
 
 pub struct DeviceWorker {
     handle: WorkerHandle,
@@ -27,16 +31,21 @@ pub struct DeviceWorker {
 }
 
 impl DeviceWorker {
-    /// Spawn the worker thread.  The PJRT client is created inside the
-    /// thread (it is not Send) — startup errors surface on first use via
-    /// error responses.
-    pub fn spawn(id: usize, artifacts: PathBuf, metrics: Arc<Metrics>) -> crate::Result<DeviceWorker> {
+    /// Spawn the worker thread.  The backend is created inside the
+    /// thread (the PJRT client is not Send) — startup errors surface on
+    /// first use via error responses.
+    pub fn spawn(
+        id: usize,
+        artifacts: PathBuf,
+        backend: BackendKind,
+        metrics: Arc<Metrics>,
+    ) -> crate::Result<DeviceWorker> {
         let (tx, rx) = mpsc::channel::<Batch>();
         let load = Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let handle = WorkerHandle { id, queue: tx, load: load.clone() };
         let thread = std::thread::Builder::new()
             .name(format!("fsa-device-{id}"))
-            .spawn(move || worker_loop(id, artifacts, rx, load, metrics))?;
+            .spawn(move || worker_loop(id, artifacts, backend, rx, load, metrics))?;
         Ok(DeviceWorker { handle, thread: Some(thread) })
     }
 
@@ -57,15 +66,16 @@ impl DeviceWorker {
 fn worker_loop(
     id: usize,
     artifacts: PathBuf,
+    backend_kind: BackendKind,
     rx: mpsc::Receiver<Batch>,
     load: Arc<std::sync::atomic::AtomicUsize>,
     metrics: Arc<Metrics>,
 ) {
     let cfg = AccelConfig::builtin("fsa").expect("builtin fsa config");
-    let mut runtime = match Runtime::new(&artifacts) {
-        Ok(r) => Some(r),
+    let mut backend = match Backend::new(backend_kind, &artifacts, &cfg) {
+        Ok(b) => Some(b),
         Err(e) => {
-            eprintln!("device {id}: runtime init failed: {e:#}");
+            eprintln!("device {id}: backend init failed: {e:#}");
             None
         }
     };
@@ -73,44 +83,36 @@ fn worker_loop(
     while let Ok(batch) = rx.recv() {
         let n = batch.len();
         for env in batch {
-            let t0 = env.enqueued;
-            let req = env.req;
-            let perf = fsa_flash_perf(&cfg, req.seq_len.max(cfg.array_size), req.d.min(cfg.array_size), Variant::DualPath, cfg.pwl_segments);
-            let output = match runtime.as_mut() {
-                None => Err("device runtime unavailable".to_string()),
-                Some(rt) => {
-                    match rt.manifest.best_for("fsa_attn", req.seq_len, req.d) {
-                        None => Err(format!(
-                            "no fsa_attn artifact covers seq_len {} d {}",
-                            req.seq_len, req.d
-                        )),
-                        Some(meta) if meta.seq_len != req.seq_len => Err(format!(
-                            "strict mode: need exact artifact for seq_len {} (nearest is {}); \
-                             pad client-side with AttentionRequest::padded",
-                            req.seq_len, meta.seq_len
-                        )),
-                        Some(meta) => {
-                            let name = meta.name.clone();
-                            rt.execute_attention(&name, &req.q, &req.k, &req.v)
-                                .map_err(|e| format!("{e:#}"))
-                        }
-                    }
-                }
+            let shard = &env.shard;
+            let req = &shard.req;
+            // Per-head device timing: the head runs on one array, seq
+            // padded up to the array dim, head dim capped by it (§8.3).
+            let perf = fsa_flash_perf(
+                &cfg,
+                req.seq_len.max(cfg.array_size),
+                req.d.min(cfg.array_size),
+                Variant::DualPath,
+                cfg.pwl_segments,
+            );
+            let (k, v) = req.head_kv(shard.kv_head);
+            let output = match backend.as_mut() {
+                None => Err("device backend unavailable".to_string()),
+                Some(be) => be.execute_head(req.seq_len, req.d, shard.req.head_q(shard.head), k, v),
             };
-            let ok = output.is_ok();
-            let resp = AttentionResponse {
-                id: req.id,
-                output,
-                device_cycles: perf.total_cycles,
-                device_time: Duration::from_nanos(
-                    (perf.total_cycles as f64 / cfg.freq_ghz) as u64,
-                ),
-                latency: t0.elapsed(),
-                device_id: id,
-                bucket: req.seq_len,
-            };
-            metrics.record(&resp, ok);
-            let _ = env.reply.send(resp);
+            metrics.record_shard(perf.total_cycles);
+            let resp = env.gather.complete_and_report(
+                ShardResult {
+                    head: shard.head,
+                    device_id: id,
+                    cycles: perf.total_cycles,
+                    output,
+                },
+                &cfg,
+            );
+            if let Some(resp) = resp {
+                metrics.record(&resp, resp.output.is_ok());
+                env.gather.send(resp);
+            }
         }
         load.fetch_sub(n, Ordering::Relaxed);
     }

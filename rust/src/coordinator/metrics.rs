@@ -1,4 +1,11 @@
 //! Serving metrics: counters + latency reservoir, lock-light.
+//!
+//! Two granularities are tracked, matching the sharded request path:
+//! whole requests (`submitted`/`completed`/`failed`, latency
+//! percentiles, aggregate device cycles) and per-head shards
+//! (`head_shards`, `shard_cycles`) so head-sharded multi-head serving
+//! is observable — e.g. an 8-head GQA request counts once in
+//! `completed` and eight times in `head_shards`.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -8,12 +15,24 @@ use super::request::AttentionResponse;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests accepted by `Coordinator::submit`.
     pub submitted: AtomicUsize,
+    /// Requests answered (one per gathered response).
     pub completed: AtomicUsize,
+    /// Requests whose gathered output was an error.
     pub failed: AtomicUsize,
+    /// Device batches dispatched by the batcher.
     pub batches: AtomicUsize,
-    /// Total simulated device cycles consumed.
+    /// Per-head shards executed by device workers.
+    pub head_shards: AtomicUsize,
+    /// Requests with more than one query head.
+    pub multi_head_requests: AtomicUsize,
+    /// Total simulated device cycles consumed (summed across shards).
     pub device_cycles: AtomicU64,
+    /// Simulated device cycles as counted per shard at execution time;
+    /// equals `device_cycles` once all gathers have completed (asserted
+    /// by the coordinator tests).
+    pub shard_cycles: AtomicU64,
     /// Host latencies in ns (bounded reservoir).
     latencies_ns: Mutex<Vec<u64>>,
 }
@@ -23,10 +42,20 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Record one executed head shard (called by device workers).
+    pub fn record_shard(&self, cycles: u64) {
+        self.head_shards.fetch_add(1, Ordering::Relaxed);
+        self.shard_cycles.fetch_add(cycles, Ordering::Relaxed);
+    }
+
+    /// Record one gathered response (called by the completing worker).
     pub fn record(&self, resp: &AttentionResponse, ok: bool) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         if !ok {
             self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        if resp.num_heads > 1 {
+            self.multi_head_requests.fetch_add(1, Ordering::Relaxed);
         }
         self.device_cycles.fetch_add(resp.device_cycles, Ordering::Relaxed);
         let mut l = super::lock(&self.latencies_ns);
@@ -46,15 +75,18 @@ impl Metrics {
         (pick(0.5), pick(0.95), pick(1.0))
     }
 
+    /// One-line human-readable summary of every counter.
     pub fn summary(&self) -> String {
         let (p50, p95, max) = self.latency_percentiles();
         format!(
-            "submitted {} completed {} failed {} batches {} device_cycles {} \
-             latency p50 {:?} p95 {:?} max {:?}",
+            "submitted {} completed {} failed {} batches {} head_shards {} \
+             multi_head {} device_cycles {} latency p50 {:?} p95 {:?} max {:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
+            self.head_shards.load(Ordering::Relaxed),
+            self.multi_head_requests.load(Ordering::Relaxed),
             self.device_cycles.load(Ordering::Relaxed),
             p50,
             p95,
@@ -67,14 +99,20 @@ impl Metrics {
 mod tests {
     use super::*;
 
-    fn resp(lat_ms: u64) -> AttentionResponse {
+    fn resp(lat_ms: u64, heads: usize) -> AttentionResponse {
         AttentionResponse {
             id: 0,
             output: Ok(vec![]),
+            num_heads: heads,
+            num_kv_heads: heads,
+            shards: heads,
             device_cycles: 100,
+            critical_path_cycles: 100,
             device_time: Duration::from_micros(1),
+            utilization: 0.3,
             latency: Duration::from_millis(lat_ms),
             device_id: 0,
+            devices_used: vec![0],
             bucket: 128,
         }
     }
@@ -83,7 +121,7 @@ mod tests {
     fn records_and_summarizes() {
         let m = Metrics::new();
         for i in 1..=10 {
-            m.record(&resp(i), i != 3);
+            m.record(&resp(i, 1), i != 3);
         }
         assert_eq!(m.completed.load(Ordering::Relaxed), 10);
         assert_eq!(m.failed.load(Ordering::Relaxed), 1);
@@ -92,6 +130,20 @@ mod tests {
         assert!(p50 >= Duration::from_millis(4) && p50 <= Duration::from_millis(6));
         assert!(p95 >= p50 && max >= p95);
         assert!(m.summary().contains("completed 10"));
+    }
+
+    #[test]
+    fn shard_accounting_is_separate_from_requests() {
+        let m = Metrics::new();
+        for _ in 0..8 {
+            m.record_shard(25);
+        }
+        m.record(&resp(1, 8), true);
+        assert_eq!(m.head_shards.load(Ordering::Relaxed), 8);
+        assert_eq!(m.shard_cycles.load(Ordering::Relaxed), 200);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.multi_head_requests.load(Ordering::Relaxed), 1);
+        assert!(m.summary().contains("head_shards 8"));
     }
 
     #[test]

@@ -1,12 +1,18 @@
 //! Serving coordinator: the L3 layer that puts FSA devices on a request
 //! path (vLLM-router-shaped, scoped to this paper's device).
 //!
-//! Pipeline: [`request`] types flow into the [`batcher`] (groups
-//! compatible requests into device batches by padded sequence bucket),
-//! the [`router`] picks the least-loaded device worker, and each
-//! [`device`] worker owns a PJRT [`crate::runtime::Runtime`] for numerics
-//! plus the [`crate::perfmodel`] for device-cycle accounting (simulated
-//! FSA latency at 1.5 GHz).  [`metrics`] aggregates throughput/latency.
+//! Pipeline: [`request`] types flow into the [`batcher`], which explodes
+//! each request into per-query-head [`shard`]s and groups compatible
+//! shards into device batches by padded sequence bucket; the [`router`]
+//! scatters shards across the pool — least-loaded placement with
+//! KV-head affinity so GQA heads sharing K/V land on one device; each
+//! [`device`] worker owns a numerics backend ([`crate::runtime`]: PJRT
+//! artifacts, or the in-crate reference twin) plus the
+//! [`crate::perfmodel`] for device-cycle accounting (simulated FSA
+//! latency at 1.5 GHz); the final shard's worker gathers the per-head
+//! outputs into one whole-operator [`request::AttentionResponse`].
+//! [`metrics`] aggregates throughput/latency at both request and shard
+//! granularity.
 //!
 //! Threads + channels stand in for tokio (offline environment, see
 //! DESIGN.md §substitutions); the structure is identical: bounded ingress
@@ -17,6 +23,7 @@ pub mod device;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod shard;
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -24,7 +31,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, ensure};
 
-use crate::config::RunConfig;
+use crate::config::{BackendKind, RunConfig};
 use batcher::Batcher;
 use device::DeviceWorker;
 use metrics::Metrics;
@@ -41,19 +48,33 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Boot the batcher thread + device worker pool.
+    ///
+    /// Backend resolution ([`BackendKind`]): `Pjrt` (the default)
+    /// requires the artifacts manifest up front and fails fast without
+    /// it; `Reference` needs nothing; `Auto` takes PJRT when the
+    /// manifest exists and silently serves on the reference twin
+    /// otherwise.
     pub fn start(cfg: RunConfig) -> crate::Result<Coordinator> {
-        ensure!(cfg.devices > 0, "need at least one device");
+        cfg.validate()?;
         let metrics = Arc::new(Metrics::new());
         let artifacts = PathBuf::from(&cfg.artifacts_dir);
-        ensure!(
-            artifacts.join("manifest.txt").exists(),
-            "artifacts manifest not found in {:?} — run `make artifacts`",
-            artifacts
-        );
+        if cfg.backend == BackendKind::Pjrt {
+            ensure!(
+                artifacts.join("manifest.txt").exists(),
+                "artifacts manifest not found in {:?} — run `make artifacts` \
+                 (or select backend=reference|auto)",
+                artifacts
+            );
+        }
 
         let mut workers = Vec::with_capacity(cfg.devices);
         for id in 0..cfg.devices {
-            workers.push(DeviceWorker::spawn(id, artifacts.clone(), metrics.clone())?);
+            workers.push(DeviceWorker::spawn(
+                id,
+                artifacts.clone(),
+                cfg.backend,
+                metrics.clone(),
+            )?);
         }
         let router = Router::new(workers.iter().map(|w| w.handle()).collect());
 
@@ -68,7 +89,8 @@ impl Coordinator {
         Ok(Coordinator { ingress, batcher_handle: Some(batcher_handle), workers, metrics })
     }
 
-    /// Submit a request; the response arrives on the returned channel.
+    /// Submit a request (single-head or multi-head/GQA); the gathered
+    /// whole-operator response arrives on the returned channel.
     /// Fails fast when the ingress queue is full (backpressure).
     pub fn submit(
         &self,

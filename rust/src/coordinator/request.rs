@@ -1,28 +1,109 @@
 //! Request/response types on the serving path.
+//!
+//! A request carries a full multi-head (optionally grouped-query)
+//! attention operator: `num_heads` query heads attending over
+//! `num_kv_heads` shared key/value heads (`num_heads == num_kv_heads`
+//! is classic MHA, `num_kv_heads == 1` is MQA).  The coordinator shards
+//! a request into per-head units of work, scatters them across the
+//! device pool, and gathers one [`AttentionResponse`] with
+//! whole-operator accounting — the granularity the paper's §6.1
+//! FLOPs/s-utilization comparison is measured at.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// One single-head attention request: row-major (seq_len, d) matrices.
+use crate::schedule::attention_flops;
+
+/// One attention operator: row-major per-head `(seq_len, d)` matrices.
+///
+/// Layouts (all head-major, row-major within a head):
+/// * `q`: `(num_heads, seq_len, d)`
+/// * `k`, `v`: `(num_kv_heads, seq_len, d)`
+///
+/// For the single-head case (`num_heads == num_kv_heads == 1`, built by
+/// [`AttentionRequest::new`]) these degenerate to the plain `(seq_len,
+/// d)` matrices of the original API.
 #[derive(Clone, Debug)]
 pub struct AttentionRequest {
     pub id: u64,
     pub seq_len: usize,
     pub d: usize,
+    /// Query head count (≥ 1).
+    pub num_heads: usize,
+    /// Key/value head count; must divide `num_heads` (GQA grouping).
+    pub num_kv_heads: usize,
     pub q: Vec<f32>,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
 }
 
 impl AttentionRequest {
+    /// Single-head request (the original API; `num_heads == num_kv_heads
+    /// == 1`).
     pub fn new(id: u64, seq_len: usize, d: usize, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> Self {
-        assert_eq!(q.len(), seq_len * d, "Q shape mismatch");
-        assert_eq!(k.len(), seq_len * d, "K shape mismatch");
-        assert_eq!(v.len(), seq_len * d, "V shape mismatch");
-        AttentionRequest { id, seq_len, d, q, k, v }
+        Self::gqa(id, seq_len, d, 1, 1, q, k, v)
     }
 
-    /// Zero-pad Q/K/V to a bucketed sequence length.
+    /// Multi-head / grouped-query request.  Panics on shape mismatch
+    /// (requests are constructed by trusted in-process callers; the
+    /// serving path proper returns errors, it never panics).
+    pub fn gqa(
+        id: u64,
+        seq_len: usize,
+        d: usize,
+        num_heads: usize,
+        num_kv_heads: usize,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Self {
+        assert!(num_heads >= 1, "need at least one query head");
+        assert!(num_kv_heads >= 1, "need at least one KV head");
+        assert_eq!(
+            num_heads % num_kv_heads,
+            0,
+            "num_heads {num_heads} must be a multiple of num_kv_heads {num_kv_heads}"
+        );
+        assert_eq!(q.len(), num_heads * seq_len * d, "Q shape mismatch");
+        assert_eq!(k.len(), num_kv_heads * seq_len * d, "K shape mismatch");
+        assert_eq!(v.len(), num_kv_heads * seq_len * d, "V shape mismatch");
+        AttentionRequest { id, seq_len, d, num_heads, num_kv_heads, q, k, v }
+    }
+
+    /// Query heads per KV head (the GQA group size; 1 for MHA).
+    pub fn group_size(&self) -> usize {
+        self.num_heads / self.num_kv_heads
+    }
+
+    /// KV head serving query head `head` (standard GQA mapping: query
+    /// heads are grouped contiguously).
+    pub fn kv_head_for(&self, head: usize) -> usize {
+        debug_assert!(head < self.num_heads);
+        head / self.group_size()
+    }
+
+    /// The `(seq_len, d)` Q matrix of one query head.
+    pub fn head_q(&self, head: usize) -> &[f32] {
+        let stride = self.seq_len * self.d;
+        &self.q[head * stride..(head + 1) * stride]
+    }
+
+    /// The `(seq_len, d)` K and V matrices of one KV head.
+    pub fn head_kv(&self, kv_head: usize) -> (&[f32], &[f32]) {
+        let stride = self.seq_len * self.d;
+        (
+            &self.k[kv_head * stride..(kv_head + 1) * stride],
+            &self.v[kv_head * stride..(kv_head + 1) * stride],
+        )
+    }
+
+    /// Whole-operator FLOPs: every query head runs full `4 L² d`
+    /// attention (KV sharing changes memory traffic, not FLOPs).
+    pub fn flops(&self) -> u64 {
+        self.num_heads as u64 * attention_flops(self.seq_len, self.d)
+    }
+
+    /// Zero-pad every head's Q/K/V to a bucketed sequence length.
     ///
     /// APPROXIMATE for keys: the AOT artifacts take no mask, so padded
     /// key rows score 0 and receive a small residual softmax weight
@@ -31,42 +112,67 @@ impl AttentionRequest {
     /// sliced away.  The coordinator therefore runs in strict mode by
     /// default (exact-bucket artifacts only) and callers opt into padding
     /// explicitly; masked artifacts are listed as future work in
-    /// DESIGN.md.
+    /// DESIGN.md §future-work.
     pub fn padded(&self, bucket: usize) -> AttentionRequest {
         assert!(bucket >= self.seq_len);
         if bucket == self.seq_len {
             return self.clone();
         }
-        let pad = |m: &[f32]| {
-            let mut out = vec![0.0f32; bucket * self.d];
-            out[..m.len()].copy_from_slice(m);
+        let pad = |m: &[f32], heads: usize| {
+            let old = self.seq_len * self.d;
+            let new = bucket * self.d;
+            let mut out = vec![0.0f32; heads * new];
+            for h in 0..heads {
+                out[h * new..h * new + old].copy_from_slice(&m[h * old..(h + 1) * old]);
+            }
             out
         };
         AttentionRequest {
             id: self.id,
             seq_len: bucket,
             d: self.d,
-            q: pad(&self.q),
-            k: pad(&self.k),
-            v: pad(&self.v),
+            num_heads: self.num_heads,
+            num_kv_heads: self.num_kv_heads,
+            q: pad(&self.q, self.num_heads),
+            k: pad(&self.k, self.num_kv_heads),
+            v: pad(&self.v, self.num_kv_heads),
         }
     }
 }
 
-/// Completed request.
+/// Completed request, gathered over all of its head shards.
 #[derive(Clone, Debug)]
 pub struct AttentionResponse {
     pub id: u64,
-    /// Row-major (seq_len, d) output, sliced back to the original length.
+    /// Head-major `(num_heads, seq_len, d)` output, each head sliced
+    /// back to the original length; for a single-head request this is
+    /// the plain row-major `(seq_len, d)` matrix.  `Err` carries the
+    /// first failing head's message.
     pub output: Result<Vec<f32>, String>,
-    /// Simulated FSA device cycles for this request's workload.
+    /// Query/KV head counts echoed from the request.
+    pub num_heads: usize,
+    pub num_kv_heads: usize,
+    /// Per-head shards gathered into this response.
+    pub shards: usize,
+    /// Total simulated FSA device cycles *consumed* across all shards
+    /// (the cost metric: what the pool spent).
     pub device_cycles: u64,
-    /// Simulated device time at the configured clock.
+    /// Simulated whole-operator latency in cycles: the busiest device's
+    /// share of the shards (the paper's whole-operator metric divides
+    /// FLOPs by this, not by the summed cycles).
+    pub critical_path_cycles: u64,
+    /// `critical_path_cycles` at the configured clock.
     pub device_time: Duration,
-    /// Host wall-clock from submit to completion.
+    /// Whole-operator achieved/peak FLOPs/s over the devices that served
+    /// this request (comparable to paper Fig. 11 / §6.1).
+    pub utilization: f64,
+    /// Host wall-clock from submit to gather completion.
     pub latency: Duration,
-    /// Which device served it.
+    /// Device that served head 0 (the only device for single-head
+    /// requests).
     pub device_id: usize,
+    /// All devices that served shards, sorted, deduplicated.
+    pub devices_used: Vec<usize>,
     /// Padded bucket used.
     pub bucket: usize,
 }
@@ -96,8 +202,49 @@ mod tests {
     }
 
     #[test]
+    fn padding_pads_every_head() {
+        let (seq, d) = (2, 2);
+        let q: Vec<f32> = (0..4 * seq * d).map(|x| x as f32).collect();
+        let kv: Vec<f32> = (100..100 + 2 * seq * d).map(|x| x as f32).collect();
+        let r = AttentionRequest::gqa(9, seq, d, 4, 2, q.clone(), kv.clone(), kv.clone());
+        let p = r.padded(4);
+        assert_eq!(p.q.len(), 4 * 4 * d);
+        assert_eq!(p.k.len(), 2 * 4 * d);
+        for h in 0..4 {
+            // Original head data at the head's new offset, zeros after.
+            assert_eq!(&p.q[h * 8..h * 8 + 4], &q[h * 4..(h + 1) * 4]);
+            assert_eq!(&p.q[h * 8 + 4..(h + 1) * 8], &[0.0; 4]);
+        }
+    }
+
+    #[test]
+    fn gqa_head_mapping_and_slices() {
+        let (seq, d) = (2, 3);
+        let q: Vec<f32> = (0..8 * seq * d).map(|x| x as f32).collect();
+        let kv: Vec<f32> = (0..2 * seq * d).map(|x| -(x as f32)).collect();
+        let r = AttentionRequest::gqa(4, seq, d, 8, 2, q.clone(), kv.clone(), kv.clone());
+        assert_eq!(r.group_size(), 4);
+        assert_eq!(r.kv_head_for(0), 0);
+        assert_eq!(r.kv_head_for(3), 0);
+        assert_eq!(r.kv_head_for(4), 1);
+        assert_eq!(r.kv_head_for(7), 1);
+        assert_eq!(r.head_q(2), &q[2 * 6..3 * 6]);
+        let (k1, v1) = r.head_kv(1);
+        assert_eq!(k1, &kv[6..12]);
+        assert_eq!(v1, k1);
+        assert_eq!(r.flops(), 8 * 4 * (seq as u64) * (seq as u64) * d as u64);
+    }
+
+    #[test]
     #[should_panic(expected = "Q shape mismatch")]
     fn shape_validation() {
         AttentionRequest::new(1, 2, 2, vec![1.0], vec![0.0; 4], vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of num_kv_heads")]
+    fn gqa_divisibility_enforced() {
+        let m = vec![0.0f32; 3 * 4];
+        AttentionRequest::gqa(1, 2, 2, 3, 2, m.clone(), m.clone(), m);
     }
 }

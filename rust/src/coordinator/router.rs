@@ -1,20 +1,29 @@
-//! Least-loaded router over the device worker pool.
+//! Shard router over the device worker pool: least-loaded placement
+//! with KV-head affinity.
+//!
+//! The routing unit is the per-head [`ShardEnvelope`].  Within one
+//! dispatched batch, shards are partitioned by their GQA affinity key
+//! `(request, kv_head)` — query heads that share a KV head travel
+//! together so a device fetches each K/V pair once — and every
+//! partition independently goes to the least-loaded worker
+//! (round-robin among ties).  A multi-head request therefore fans out
+//! across the pool (scatter) while each KV group stays device-local.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use super::request::Envelope;
+use super::shard::ShardEnvelope;
 
-/// A batch handed to one device worker.
-pub type Batch = Vec<Envelope>;
+/// A batch of shards handed to one device worker.
+pub type Batch = Vec<ShardEnvelope>;
 
 /// Cloneable handle to one worker's queue + load gauge.
 #[derive(Clone)]
 pub struct WorkerHandle {
     pub id: usize,
     pub queue: mpsc::Sender<Batch>,
-    /// Outstanding requests (not batches) on this worker.
+    /// Outstanding shards (not batches) on this worker.
     pub load: Arc<AtomicUsize>,
 }
 
@@ -30,33 +39,46 @@ impl Router {
         Router { workers, rr: AtomicUsize::new(0) }
     }
 
-    /// Pick the least-loaded worker (round-robin among ties) and enqueue.
-    /// Requests on a dead worker are bounced to the next-best one; if all
-    /// workers are gone the batch's reply channels drop, which callers
-    /// observe as a disconnected response channel.
+    /// Scatter a batch: partition by KV affinity, then send each
+    /// partition to the least-loaded worker.  Order within a partition
+    /// is preserved.
     pub fn dispatch(&self, batch: Batch) {
         if batch.is_empty() {
             return;
         }
+        for group in partition_by_affinity(batch) {
+            self.dispatch_group(group);
+        }
+    }
+
+    /// Pick the least-loaded worker (round-robin among ties) and
+    /// enqueue one affinity group.  Shards for a dead worker are
+    /// bounced to the next-best one; if all workers are gone the
+    /// shards' gather cells drop, which callers observe as a
+    /// disconnected response channel.
+    fn dispatch_group(&self, group: Batch) {
         let start = self.rr.fetch_add(1, Ordering::Relaxed);
         let mut order: Vec<usize> = (0..self.workers.len()).collect();
         order.sort_by_key(|&i| {
-            (self.workers[i].load.load(Ordering::Relaxed), (i + self.workers.len() - start % self.workers.len()) % self.workers.len())
+            (
+                self.workers[i].load.load(Ordering::Relaxed),
+                (i + self.workers.len() - start % self.workers.len()) % self.workers.len(),
+            )
         });
-        let mut batch = batch;
+        let mut group = group;
         for &i in &order {
             let w = &self.workers[i];
-            w.load.fetch_add(batch.len(), Ordering::Relaxed);
-            match w.queue.send(batch) {
+            w.load.fetch_add(group.len(), Ordering::Relaxed);
+            match w.queue.send(group) {
                 Ok(()) => return,
-                Err(mpsc::SendError(b)) => {
+                Err(mpsc::SendError(g)) => {
                     // Worker died: undo the gauge and try the next one.
-                    w.load.fetch_sub(b.len(), Ordering::Relaxed);
-                    batch = b;
+                    w.load.fetch_sub(g.len(), Ordering::Relaxed);
+                    group = g;
                 }
             }
         }
-        // All workers dead: drop the batch (reply channels disconnect).
+        // All workers dead: drop the group (reply channels disconnect).
     }
 
     pub fn worker_count(&self) -> usize {
@@ -64,18 +86,37 @@ impl Router {
     }
 }
 
+/// Split a batch into contiguous groups of equal affinity key,
+/// preserving first-seen order (shards of one request arrive adjacent
+/// from the batcher, so this is a single pass, no map).
+fn partition_by_affinity(batch: Batch) -> Vec<Batch> {
+    let mut groups: Vec<((u64, usize), Batch)> = Vec::new();
+    for env in batch {
+        let key = env.shard.affinity_key();
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, g)) => g.push(env),
+            None => groups.push((key, vec![env])),
+        }
+    }
+    groups.into_iter().map(|(_, g)| g).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::AttentionRequest;
+    use crate::coordinator::request::{AttentionRequest, Envelope};
+    use crate::coordinator::shard::explode;
 
-    fn env(id: u64) -> Envelope {
-        let m = vec![0.0f32; 8];
-        Envelope {
-            req: AttentionRequest::new(id, 2, 4, m.clone(), m.clone(), m),
+    /// Shards of a GQA request: `heads` query heads over `kv` KV heads.
+    fn shards(id: u64, heads: usize, kv: usize) -> Vec<ShardEnvelope> {
+        let (seq, d) = (2, 4);
+        let q = vec![0.0f32; heads * seq * d];
+        let m = vec![0.0f32; kv * seq * d];
+        explode(Envelope {
+            req: AttentionRequest::gqa(id, seq, d, heads, kv, q, m.clone(), m),
             reply: mpsc::channel().0,
             enqueued: std::time::Instant::now(),
-        }
+        })
     }
 
     fn handle(id: usize) -> (WorkerHandle, mpsc::Receiver<Batch>) {
@@ -89,10 +130,32 @@ mod tests {
         let (h1, rx1) = handle(1);
         h0.load.store(10, Ordering::Relaxed);
         let r = Router::new(vec![h0, h1.clone()]);
-        r.dispatch(vec![env(1), env(2)]);
-        assert_eq!(rx1.try_recv().unwrap().len(), 2);
+        r.dispatch(shards(1, 2, 2).into_iter().take(1).collect());
+        assert_eq!(rx1.try_recv().unwrap().len(), 1);
         assert!(rx0.try_recv().is_err());
-        assert_eq!(h1.load.load(Ordering::Relaxed), 2);
+        assert_eq!(h1.load.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn gqa_heads_scatter_but_kv_groups_stay_together() {
+        let (h0, rx0) = handle(0);
+        let (h1, rx1) = handle(1);
+        let r = Router::new(vec![h0.clone(), h1.clone()]);
+        // 8 query heads / 2 KV heads => two affinity groups of 4.
+        r.dispatch(shards(9, 8, 2));
+        let b0 = rx0.try_recv().expect("device 0 gets one KV group");
+        let b1 = rx1.try_recv().expect("device 1 gets the other");
+        assert_eq!(b0.len(), 4);
+        assert_eq!(b1.len(), 4);
+        // Each device's shards all share one kv_head, and the two
+        // devices hold different KV heads.
+        let kv0 = b0[0].shard.kv_head;
+        let kv1 = b1[0].shard.kv_head;
+        assert!(b0.iter().all(|s| s.shard.kv_head == kv0));
+        assert!(b1.iter().all(|s| s.shard.kv_head == kv1));
+        assert_ne!(kv0, kv1);
+        assert_eq!(h0.load.load(Ordering::Relaxed), 4);
+        assert_eq!(h1.load.load(Ordering::Relaxed), 4);
     }
 
     #[test]
@@ -101,8 +164,8 @@ mod tests {
         let (h1, rx1) = handle(1);
         drop(rx0); // worker 0 is gone
         let r = Router::new(vec![h0.clone(), h1]);
-        r.dispatch(vec![env(7)]);
-        assert_eq!(rx1.try_recv().unwrap()[0].req.id, 7);
+        r.dispatch(shards(7, 1, 1));
+        assert_eq!(rx1.try_recv().unwrap()[0].shard.req.id, 7);
         // Gauge on the dead worker was rolled back.
         assert_eq!(h0.load.load(Ordering::Relaxed), 0);
     }
@@ -112,6 +175,6 @@ mod tests {
         let (h0, rx0) = handle(0);
         drop(rx0);
         let r = Router::new(vec![h0]);
-        r.dispatch(vec![env(1)]);
+        r.dispatch(shards(1, 1, 1));
     }
 }

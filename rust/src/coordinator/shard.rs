@@ -1,0 +1,297 @@
+//! Head sharding + gather: the scatter/gather layer between one
+//! [`AttentionRequest`] and the per-head units of work the device pool
+//! actually executes.
+//!
+//! [`explode`] splits an ingress [`Envelope`] into one
+//! [`ShardEnvelope`] per query head, all sharing the request data
+//! behind an `Arc` (no Q/K/V copies) and one [`Gather`] cell.  Workers
+//! call [`Gather::complete`] per finished shard; the worker that lands
+//! the final shard assembles the whole-operator [`AttentionResponse`]
+//! — outputs re-interleaved head-major, cycle cost summed, the
+//! critical path and FLOPs/s utilization computed over the devices
+//! that actually served shards — and sends the reply.  A request is
+//! therefore answered exactly once, no matter how its shards were
+//! batched, chunked, or re-routed.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::AccelConfig;
+use crate::perfmodel::pool_utilization;
+
+use super::request::{AttentionRequest, AttentionResponse, Envelope};
+
+/// One query head of one request: the unit of routing and execution.
+pub struct HeadShard {
+    pub req: Arc<AttentionRequest>,
+    /// Query head index in `0..req.num_heads`.
+    pub head: usize,
+    /// KV head this query head attends over (`req.kv_head_for(head)`),
+    /// carried here because the router keys affinity on it.
+    pub kv_head: usize,
+}
+
+impl HeadShard {
+    /// Router affinity key: shards sharing a KV head under GQA want the
+    /// same device so the K/V tiles are fetched (and could be cached)
+    /// once per device rather than once per query head.
+    pub fn affinity_key(&self) -> (u64, usize) {
+        (self.req.id, self.kv_head)
+    }
+}
+
+/// A shard in flight: work item + its request's gather cell.
+pub struct ShardEnvelope {
+    pub shard: HeadShard,
+    pub gather: Arc<Gather>,
+    /// Copied from the ingress envelope so the batcher's timeout logic
+    /// works per shard without touching the gather.
+    pub enqueued: Instant,
+}
+
+/// What a device worker reports for one executed shard.
+pub struct ShardResult {
+    pub head: usize,
+    pub device_id: usize,
+    /// Simulated FSA device cycles for this head.
+    pub cycles: u64,
+    pub output: Result<Vec<f32>, String>,
+}
+
+struct GatherInner {
+    /// Per-head `(device_id, cycles, output)`, indexed by query head.
+    done: Vec<Option<(usize, u64, Result<Vec<f32>, String>)>>,
+    remaining: usize,
+}
+
+/// Per-request gather cell shared by all of the request's shards.
+pub struct Gather {
+    req: Arc<AttentionRequest>,
+    reply: mpsc::Sender<AttentionResponse>,
+    enqueued: Instant,
+    inner: Mutex<GatherInner>,
+}
+
+impl Gather {
+    /// Record one shard result.  Returns the assembled whole-operator
+    /// response if this was the request's final outstanding shard (so
+    /// the caller can record metrics before [`Gather::send`]), `None`
+    /// while shards are still in flight.  `cfg` supplies the clock and
+    /// peak-FLOPs constants for the whole-operator utilization metric.
+    pub fn complete_and_report(
+        &self,
+        result: ShardResult,
+        cfg: &AccelConfig,
+    ) -> Option<AttentionResponse> {
+        let mut inner = super::lock(&self.inner);
+        debug_assert!(inner.done[result.head].is_none(), "head completed twice");
+        if inner.done[result.head].is_none() {
+            inner.remaining -= 1;
+        }
+        inner.done[result.head] = Some((result.device_id, result.cycles, result.output));
+        if inner.remaining > 0 {
+            return None;
+        }
+        Some(self.assemble(&mut inner))
+    }
+
+    /// Deliver the gathered response to the submitter.  A vanished
+    /// client (dropped receiver) is not an error.
+    pub fn send(&self, response: AttentionResponse) {
+        let _ = self.reply.send(response);
+    }
+
+    /// Convenience for tests and simple callers: record, and send the
+    /// response if this shard completed the gather.
+    pub fn complete(&self, result: ShardResult, cfg: &AccelConfig) {
+        if let Some(resp) = self.complete_and_report(result, cfg) {
+            self.send(resp);
+        }
+    }
+
+    /// Build the whole-operator response from the completed shards.
+    fn assemble(&self, inner: &mut GatherInner) -> AttentionResponse {
+        let req = &self.req;
+        let head_elems = req.seq_len * req.d;
+
+        let mut output: Result<Vec<f32>, String> =
+            Ok(Vec::with_capacity(req.num_heads * head_elems));
+        let mut device_cycles = 0u64;
+        let mut per_device: Vec<(usize, u64)> = Vec::new();
+        let mut devices_used = Vec::new();
+        let mut device_id = 0usize;
+
+        for (head, slot) in inner.done.iter_mut().enumerate() {
+            let (dev, cycles, head_out) = slot.take().expect("gather complete with missing head");
+            if head == 0 {
+                device_id = dev;
+            }
+            device_cycles += cycles;
+            match per_device.iter_mut().find(|(d, _)| *d == dev) {
+                Some((_, c)) => *c += cycles,
+                None => {
+                    per_device.push((dev, cycles));
+                    devices_used.push(dev);
+                }
+            }
+            match head_out {
+                Ok(o) => {
+                    if let Ok(buf) = &mut output {
+                        debug_assert_eq!(o.len(), head_elems);
+                        buf.extend_from_slice(&o);
+                    }
+                }
+                // Keep the first failing head's error (head order).
+                Err(e) => {
+                    if output.is_ok() {
+                        output = Err(format!("head {head}: {e}"));
+                    }
+                }
+            }
+        }
+        devices_used.sort_unstable();
+
+        let critical_path_cycles =
+            per_device.iter().map(|&(_, c)| c).max().unwrap_or(0);
+        let cycles_by_device: Vec<u64> = per_device.iter().map(|&(_, c)| c).collect();
+        let utilization = pool_utilization(cfg, req.flops(), &cycles_by_device);
+
+        AttentionResponse {
+            id: req.id,
+            output,
+            num_heads: req.num_heads,
+            num_kv_heads: req.num_kv_heads,
+            shards: req.num_heads,
+            device_cycles,
+            critical_path_cycles,
+            device_time: Duration::from_nanos(
+                (critical_path_cycles as f64 / cfg.freq_ghz) as u64,
+            ),
+            utilization,
+            latency: self.enqueued.elapsed(),
+            device_id,
+            devices_used,
+            bucket: req.seq_len,
+        }
+    }
+}
+
+/// Split an ingress envelope into its per-head shards (one per query
+/// head), sharing the request behind an `Arc` and one gather cell.
+pub fn explode(env: Envelope) -> Vec<ShardEnvelope> {
+    let Envelope { req, reply, enqueued } = env;
+    let num_heads = req.num_heads;
+    let req = Arc::new(req);
+    let gather = Arc::new(Gather {
+        req: req.clone(),
+        reply,
+        enqueued,
+        inner: Mutex::new(GatherInner {
+            done: (0..num_heads).map(|_| None).collect(),
+            remaining: num_heads,
+        }),
+    });
+    (0..num_heads)
+        .map(|head| ShardEnvelope {
+            shard: HeadShard { req: req.clone(), head, kv_head: req.kv_head_for(head) },
+            gather: gather.clone(),
+            enqueued,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fsa() -> AccelConfig {
+        AccelConfig::builtin("fsa").unwrap()
+    }
+
+    fn gqa_envelope(
+        heads: usize,
+        kv_heads: usize,
+        seq: usize,
+        d: usize,
+    ) -> (Envelope, mpsc::Receiver<AttentionResponse>) {
+        let (tx, rx) = mpsc::channel();
+        let q = vec![0.5f32; heads * seq * d];
+        let kv = vec![0.25f32; kv_heads * seq * d];
+        let env = Envelope {
+            req: AttentionRequest::gqa(7, seq, d, heads, kv_heads, q, kv.clone(), kv),
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        (env, rx)
+    }
+
+    #[test]
+    fn explode_yields_one_shard_per_query_head() {
+        let (env, _rx) = gqa_envelope(8, 2, 4, 2);
+        let shards = explode(env);
+        assert_eq!(shards.len(), 8);
+        let kv: Vec<usize> = shards.iter().map(|s| s.shard.kv_head).collect();
+        assert_eq!(kv, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        // All shards share one request allocation and one gather cell.
+        assert!(Arc::ptr_eq(&shards[0].shard.req, &shards[7].shard.req));
+        assert!(Arc::ptr_eq(&shards[0].gather, &shards[7].gather));
+        assert_eq!(shards[3].shard.affinity_key(), (7, 0));
+        assert_eq!(shards[4].shard.affinity_key(), (7, 1));
+    }
+
+    #[test]
+    fn gather_assembles_head_major_output_and_pool_accounting() {
+        let (seq, d) = (2, 2);
+        let (env, rx) = gqa_envelope(4, 2, seq, d);
+        let shards = explode(env);
+        // Complete out of order, two devices, head h output = constant h.
+        for &h in &[2usize, 0, 3, 1] {
+            shards[h].gather.complete(
+                ShardResult {
+                    head: h,
+                    device_id: h % 2,
+                    cycles: 100,
+                    output: Ok(vec![h as f32; seq * d]),
+                },
+                &fsa(),
+            );
+        }
+        let resp = rx.try_recv().expect("gather must reply after last shard");
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.shards, 4);
+        assert_eq!(resp.num_heads, 4);
+        assert_eq!(resp.num_kv_heads, 2);
+        assert_eq!(resp.devices_used, vec![0, 1]);
+        assert_eq!(resp.device_id, 0); // head 0 ran on device 0
+        assert_eq!(resp.device_cycles, 400);
+        assert_eq!(resp.critical_path_cycles, 200); // 2 heads per device
+        let out = resp.output.unwrap();
+        // Head-major: head h occupies [h*4 .. (h+1)*4).
+        for h in 0..4 {
+            assert!(out[h * 4..(h + 1) * 4].iter().all(|&x| x == h as f32));
+        }
+        assert!(resp.utilization > 0.0);
+    }
+
+    #[test]
+    fn gather_surfaces_first_failing_head() {
+        let (env, rx) = gqa_envelope(2, 1, 2, 2);
+        let shards = explode(env);
+        for h in 0..2 {
+            shards[h].gather.complete(
+                ShardResult {
+                    head: h,
+                    device_id: 0,
+                    cycles: 10,
+                    output: if h == 1 { Err("boom".into()) } else { Ok(vec![0.0; 4]) },
+                },
+                &fsa(),
+            );
+        }
+        let resp = rx.try_recv().unwrap();
+        let err = resp.output.unwrap_err();
+        assert!(err.contains("head 1") && err.contains("boom"), "{err}");
+        assert_eq!(resp.device_cycles, 20);
+    }
+}

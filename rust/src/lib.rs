@@ -8,10 +8,12 @@
 //! **SystolicAttention** static schedule, instruction-level **performance
 //! models** of FSA and of the commercial baselines (TPUv5e-like,
 //! NeuronCore-v2-like), the **kernel programming model** of paper §5
-//! (typed tiles + JIT builder), a PJRT **runtime** that executes the
-//! JAX/Pallas AOT artifacts, and a serving **coordinator** (router,
-//! batcher, device pool) that puts it all on a request path with Python
-//! nowhere in sight.
+//! (typed tiles + JIT builder), a **runtime** that executes the
+//! JAX/Pallas AOT artifacts via PJRT (with an in-crate reference
+//! fallback), and a serving **coordinator** (router, batcher, device
+//! pool) that puts it all on a request path — full multi-head / GQA
+//! operators, sharded per head across the pool — with Python nowhere
+//! in sight.
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
@@ -19,12 +21,15 @@
 //! * [`isa`] — the 7-instruction FSA ISA with binary encode/decode.
 //! * [`schedule`] — SystolicAttention wavefront schedules + latency formulas.
 //! * [`sim`] — cycle-accurate array/accumulator/SRAM/DMA/controller model.
-//! * [`perfmodel`] — deterministic instruction-level timing for full workloads.
+//! * [`perfmodel`] — deterministic instruction-level timing for full
+//!   workloads, composed per head into whole-operator pool metrics.
 //! * [`accel`] — Table-1 accelerator configs + baseline pipeline models.
 //! * [`area`] — Table-3 area model.
 //! * [`kernel`] — §5 programming model: MTile/STile/ATile + KernelBuilder.
-//! * [`runtime`] — PJRT artifact loading/execution (HLO-text interchange).
-//! * [`coordinator`] — request router, batcher, device workers, metrics.
+//! * [`runtime`] — artifact loading + the per-head execution
+//!   [`runtime::Backend`] (PJRT HLO-text path or the reference twin).
+//! * [`coordinator`] — multi-head request path: head sharding/gather,
+//!   affinity router, batcher, device workers, metrics.
 //! * [`config`] — INI-style config system for machines and runs.
 //! * [`cli`], [`benchutil`], [`testutil`] — offline-environment stand-ins
 //!   for clap / criterion / proptest (see DESIGN.md §substitutions).

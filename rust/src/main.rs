@@ -29,7 +29,10 @@ Experiment commands (paper artifact regeneration):
 Device / serving commands:
   disasm  [--seq 512 --d 128]  compile + disassemble the flash kernel
   serve   [--requests 16 --devices 2 --seq 512 --artifacts DIR]
+          [--heads 1 --kv-heads 1 --backend pjrt|reference|auto]
                                boot the coordinator and serve a workload
+                               (multi-head/GQA requests are sharded
+                               per head across the device pool)
   help                         this text
 ";
 
@@ -107,30 +110,47 @@ fn serve(args: &Args) -> fsa::Result<()> {
     cfg.devices = args.get("devices", cfg.devices)?;
     cfg.max_batch = args.get("max-batch", cfg.max_batch)?;
     cfg.artifacts_dir = args.flag("artifacts").unwrap_or("artifacts").to_string();
+    cfg.backend = args.flag("backend").unwrap_or("pjrt").parse()?;
+    cfg.num_heads = args.get("heads", cfg.num_heads)?;
+    cfg.num_kv_heads = args.get("kv-heads", cfg.num_kv_heads)?;
     let n_req = args.get("requests", 16usize)?;
     let seq = args.get("seq", 512usize)?;
     let d = args.get("d", 128usize)?;
+    let (heads, kv_heads) = (cfg.num_heads, cfg.num_kv_heads);
+    // Head-count invariants are validated once by Coordinator::start
+    // (RunConfig::validate) before any request is constructed.
 
-    println!("booting coordinator: {} devices, artifacts at {}", cfg.devices, cfg.artifacts_dir);
+    println!(
+        "booting coordinator: {} devices, backend {}, artifacts at {}",
+        cfg.devices, cfg.backend, cfg.artifacts_dir
+    );
     let coord = Coordinator::start(cfg)?;
     let mut rng = SplitMix64::new(1);
     let mut pending = Vec::new();
     for id in 0..n_req as u64 {
-        let q = rng.normal_matrix(seq, d);
-        let k = rng.normal_matrix(seq, d);
-        let v = rng.normal_matrix(seq, d);
-        pending.push(coord.submit(AttentionRequest::new(id, seq, d, q, k, v))?);
+        let q = rng.normal_matrix(heads * seq, d);
+        let k = rng.normal_matrix(kv_heads * seq, d);
+        let v = rng.normal_matrix(kv_heads * seq, d);
+        pending.push(coord.submit(AttentionRequest::gqa(id, seq, d, heads, kv_heads, q, k, v))?);
     }
     let mut ok = 0;
+    let mut worst_util = f64::INFINITY;
     for rx in pending {
         let resp = rx.recv().map_err(|_| anyhow::anyhow!("worker dropped request"))?;
         if resp.output.is_ok() {
             ok += 1;
+            worst_util = worst_util.min(resp.utilization);
         } else if let Err(e) = &resp.output {
             eprintln!("request {} failed: {e}", resp.id);
         }
     }
-    println!("{}/{} requests served", ok, n_req);
+    println!(
+        "{}/{} requests served ({heads} heads / {kv_heads} KV heads each)",
+        ok, n_req
+    );
+    if ok > 0 {
+        println!("worst whole-operator FLOPs/s utilization: {:.1}%", 100.0 * worst_util);
+    }
     println!("{}", coord.metrics.summary());
     coord.shutdown();
     Ok(())

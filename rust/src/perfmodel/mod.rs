@@ -88,6 +88,98 @@ pub fn achieved_tflops(seq_len: usize, d: usize, perf: &FsaPerf) -> f64 {
     attention_flops(seq_len, d) as f64 / perf.seconds / 1e12
 }
 
+/// Whole-operator timing for a multi-head (or grouped-query) SDPA
+/// sharded across a pool of FSA devices — the granularity the paper's
+/// §6.1 baselines (TPUv5e, NeuronCore-v2) are measured at.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiHeadPerf {
+    /// Timing of one head on one array (all heads are identical work).
+    pub head: FsaPerf,
+    pub num_heads: usize,
+    pub num_kv_heads: usize,
+    /// Configured pool size.
+    pub devices: usize,
+    /// Devices one request can actually occupy: KV-head affinity pins a
+    /// whole KV group to one device, so `min(devices, num_kv_heads)`.
+    pub devices_used: usize,
+    /// Query heads the busiest device serves:
+    /// `(num_heads / num_kv_heads) * ceil(num_kv_heads / devices)`.
+    pub rounds: usize,
+    /// Device cycles *consumed* across the pool (cost):
+    /// `num_heads * head.total_cycles`.
+    pub total_cycles: u64,
+    /// Whole-operator latency in cycles (the busiest device):
+    /// `rounds * head.total_cycles`.
+    pub critical_path_cycles: u64,
+    /// Whole-operator achieved/peak FLOPs/s over the `devices_used`
+    /// devices for the critical-path duration — the same quantity
+    /// [`pool_utilization`] computes from the coordinator's gathered
+    /// measurements, comparable to Fig. 11 / Table 2, and degraded by
+    /// ragged KV-group/device splits exactly as the real router is.
+    pub utilization: f64,
+    /// Critical path at the config clock.
+    pub seconds: f64,
+}
+
+/// Compose [`fsa_flash_perf`] per-head timing into a whole multi-head
+/// operator scheduled the way the coordinator's router actually places
+/// it: shards are scattered least-loaded *per KV group* (GQA heads
+/// sharing a KV head stay on one device so K/V tiles are fetched once
+/// per device — the win is real when bandwidth-bound), which caps one
+/// request's parallelism at `num_kv_heads` devices.  A pool larger
+/// than `num_kv_heads` does not shorten a single operator's critical
+/// path; it adds capacity for *concurrent* requests instead.
+///
+/// `num_kv_heads` does not change FLOPs — every query head runs full
+/// `4 L² d` attention.
+pub fn multi_head_perf(
+    cfg: &AccelConfig,
+    seq_len: usize,
+    d: usize,
+    num_heads: usize,
+    num_kv_heads: usize,
+    devices: usize,
+    variant: Variant,
+    segments: usize,
+) -> MultiHeadPerf {
+    assert!(num_heads >= 1 && num_kv_heads >= 1 && devices >= 1);
+    assert_eq!(num_heads % num_kv_heads, 0, "GQA head counts must divide");
+    let head = fsa_flash_perf(cfg, seq_len, d, variant, segments);
+    let group_size = num_heads / num_kv_heads;
+    let devices_used = devices.min(num_kv_heads);
+    let rounds = group_size * num_kv_heads.div_ceil(devices);
+    let total_cycles = num_heads as u64 * head.total_cycles;
+    let critical_path_cycles = rounds as u64 * head.total_cycles;
+    let flops = num_heads as u64 * attention_flops(seq_len, d);
+    let peak_per_cycle = 2.0 * (cfg.array_size * cfg.array_size) as f64 * devices_used as f64;
+    MultiHeadPerf {
+        head,
+        num_heads,
+        num_kv_heads,
+        devices,
+        devices_used,
+        rounds,
+        total_cycles,
+        critical_path_cycles,
+        utilization: flops as f64 / (peak_per_cycle * critical_path_cycles as f64),
+        seconds: critical_path_cycles as f64 / (cfg.freq_ghz * 1e9),
+    }
+}
+
+/// Whole-operator FLOPs/s utilization from *observed* per-device cycle
+/// totals (what the coordinator's gather measures): achieved FLOPs over
+/// the pool's peak for the critical-path duration.  Returns 0 when no
+/// cycles were recorded.
+pub fn pool_utilization(cfg: &AccelConfig, total_flops: u64, per_device_cycles: &[u64]) -> f64 {
+    let critical = per_device_cycles.iter().copied().max().unwrap_or(0);
+    if critical == 0 || per_device_cycles.is_empty() {
+        return 0.0;
+    }
+    let peak_per_cycle =
+        2.0 * (cfg.array_size * cfg.array_size) as f64 * per_device_cycles.len() as f64;
+    total_flops as f64 / (peak_per_cycle * critical as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +232,57 @@ mod tests {
         let p = fsa_flash_perf(&cfg, 4096, 128, Variant::DualPath, 8);
         assert!(p.bandwidth_bound);
         assert!(p.utilization < 0.3);
+    }
+
+    #[test]
+    fn multi_head_scales_and_respects_affinity_and_ragged_tails() {
+        let cfg = fsa();
+        let one = fsa_flash_perf(&cfg, 4096, 128, Variant::DualPath, 8);
+        // 8 MHA heads on 1 device: 8x the cycles, same utilization.
+        let mh = multi_head_perf(&cfg, 4096, 128, 8, 8, 1, Variant::DualPath, 8);
+        assert_eq!((mh.devices_used, mh.rounds), (1, 8));
+        assert_eq!(mh.critical_path_cycles, 8 * one.total_cycles);
+        assert!((mh.utilization - one.utilization).abs() < 1e-12);
+        // 8 MHA heads on 4 devices: 2 rounds, same pool utilization,
+        // 4x faster wall clock.
+        let mh4 = multi_head_perf(&cfg, 4096, 128, 8, 8, 4, Variant::DualPath, 8);
+        assert_eq!((mh4.devices_used, mh4.rounds), (4, 2));
+        assert_eq!(mh4.total_cycles, mh.total_cycles);
+        assert!((mh4.seconds - mh.seconds / 4.0).abs() < 1e-12);
+        assert!((mh4.utilization - one.utilization).abs() < 1e-12);
+        // GQA 8q/2kv on 4 devices: KV affinity caps the request at 2
+        // devices, so the busiest device runs a whole 4-head group —
+        // a pool bigger than num_kv_heads doesn't cut this latency.
+        let gqa = multi_head_perf(&cfg, 4096, 128, 8, 2, 4, Variant::DualPath, 8);
+        assert_eq!((gqa.devices_used, gqa.rounds), (2, 4));
+        assert_eq!(gqa.critical_path_cycles, 4 * one.total_cycles);
+        assert!((gqa.utilization - one.utilization).abs() < 1e-12);
+        // Ragged: 8 MHA heads on 3 devices -> 3 rounds, tail 2/3 idle.
+        let mh3 = multi_head_perf(&cfg, 4096, 128, 8, 8, 3, Variant::DualPath, 8);
+        assert_eq!((mh3.devices_used, mh3.rounds), (3, 3));
+        let expect = one.utilization * 8.0 / 9.0;
+        assert!((mh3.utilization - expect).abs() < 1e-12, "{} vs {expect}", mh3.utilization);
+        // Ragged KV groups: 8q/4kv on 3 devices -> busiest device gets
+        // 2 groups of 2 heads = 4 rounds over 3 devices.
+        let gqa3 = multi_head_perf(&cfg, 4096, 128, 8, 4, 3, Variant::DualPath, 8);
+        assert_eq!((gqa3.devices_used, gqa3.rounds), (3, 4));
+        let expect3 = one.utilization * 8.0 / 12.0;
+        assert!((gqa3.utilization - expect3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_utilization_from_observed_cycles() {
+        let cfg = fsa();
+        let one = fsa_flash_perf(&cfg, 4096, 128, Variant::DualPath, 8);
+        let flops = 8 * crate::schedule::attention_flops(4096, 128);
+        // Perfectly balanced 8 heads over 4 devices matches the model.
+        let per_dev = vec![2 * one.total_cycles; 4];
+        let u = pool_utilization(&cfg, flops, &per_dev);
+        let model = multi_head_perf(&cfg, 4096, 128, 8, 8, 4, Variant::DualPath, 8);
+        assert!((u - model.utilization).abs() < 1e-12);
+        // Degenerate inputs.
+        assert_eq!(pool_utilization(&cfg, flops, &[]), 0.0);
+        assert_eq!(pool_utilization(&cfg, flops, &[0]), 0.0);
     }
 
     #[test]

@@ -13,6 +13,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, ensure, Context};
 
+use crate::config::{AccelConfig, BackendKind};
+use crate::numerics::reference::{flash_pwl, Mat};
+
 /// One manifest row.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactMeta {
@@ -182,7 +185,7 @@ impl Runtime {
         out.to_vec::<f32>().map_err(|e| anyhow!("reading result: {e:?}"))
     }
 
-    /// Convenience: run a single-head attention artifact on (L, d) Q/K/V.
+    /// Convenience: run a single-head attention artifact on `(L, d)` Q/K/V.
     pub fn execute_attention(
         &mut self,
         name: &str,
@@ -198,6 +201,109 @@ impl Runtime {
         ensure!(meta.heads == 1, "{name} is multi-head; use execute()");
         let dims = [meta.seq_len as i64, meta.d as i64];
         self.execute(name, &[(q, &dims), (k, &dims), (v, &dims)])
+    }
+}
+
+/// Numerics engine behind a device worker: where one head shard's
+/// Q/K/V actually gets multiplied.
+///
+/// The coordinator shards requests per query head (see
+/// [`crate::coordinator::shard`]); each shard is a single-head `(L, d)`
+/// attention — exactly the granularity the AOT artifacts are exported
+/// at, and the granularity the reference twin computes.  Which engine
+/// runs is chosen per [`BackendKind`] at worker start.
+pub enum Backend {
+    /// PJRT execution of the `fsa_attn` AOT artifact ladder.
+    Pjrt(Runtime),
+    /// In-crate reference numerics: [`flash_pwl`], the strict software
+    /// twin of the FSA device (PWL exp2 + fp16 operand quantization),
+    /// tiled at the array size.  Used when PJRT/artifacts are absent
+    /// (e.g. the offline `xla` stub build) and by tests that need the
+    /// serving path without `make artifacts`.
+    Reference {
+        /// Tile size cap (the FSA array dimension).
+        array_size: usize,
+        /// PWL exp2 segment count.
+        segments: usize,
+    },
+}
+
+impl Backend {
+    /// Resolve a [`BackendKind`] against the artifacts directory.
+    ///
+    /// `Auto` picks PJRT when a manifest is present and the PJRT client
+    /// boots, falling back to the reference twin otherwise; `Pjrt` is
+    /// strict and returns the boot error instead of falling back.
+    pub fn new(kind: BackendKind, artifacts: &Path, cfg: &AccelConfig) -> crate::Result<Backend> {
+        let reference = || Backend::Reference {
+            array_size: cfg.array_size,
+            segments: cfg.pwl_segments.max(1),
+        };
+        match kind {
+            BackendKind::Reference => Ok(reference()),
+            BackendKind::Pjrt => Ok(Backend::Pjrt(Runtime::new(artifacts)?)),
+            BackendKind::Auto => {
+                if artifacts.join("manifest.txt").exists() {
+                    match Runtime::new(artifacts) {
+                        Ok(rt) => Ok(Backend::Pjrt(rt)),
+                        Err(e) => {
+                            eprintln!(
+                                "backend auto: manifest present but PJRT boot failed \
+                                 ({e:#}); falling back to reference numerics"
+                            );
+                            Ok(reference())
+                        }
+                    }
+                } else {
+                    Ok(reference())
+                }
+            }
+        }
+    }
+
+    /// Engine name for logs and metrics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt(_) => "pjrt",
+            Backend::Reference { .. } => "reference",
+        }
+    }
+
+    /// Execute one head: row-major `(seq_len, d)` Q/K/V in, `(seq_len,
+    /// d)` output.  Errors are strings because they travel inside
+    /// [`crate::coordinator::request::AttentionResponse`].
+    pub fn execute_head(
+        &mut self,
+        seq_len: usize,
+        d: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        match self {
+            Backend::Pjrt(rt) => match rt.manifest.best_for("fsa_attn", seq_len, d) {
+                None => Err(format!("no fsa_attn artifact covers seq_len {seq_len} d {d}")),
+                Some(meta) if meta.seq_len != seq_len => Err(format!(
+                    "strict mode: need exact artifact for seq_len {} (nearest is {}); \
+                     pad client-side with AttentionRequest::padded",
+                    seq_len, meta.seq_len
+                )),
+                Some(meta) => {
+                    let name = meta.name.clone();
+                    rt.execute_attention(&name, q, k, v).map_err(|e| format!("{e:#}"))
+                }
+            },
+            Backend::Reference { array_size, segments } => {
+                // Tile at the array size when it divides the sequence,
+                // otherwise fall back to one whole-sequence tile
+                // (flash_forward requires exact tiling).
+                let tile = if seq_len % *array_size == 0 { *array_size } else { seq_len };
+                let qm = Mat::new(seq_len, d, q.to_vec());
+                let km = Mat::new(seq_len, d, k.to_vec());
+                let vm = Mat::new(seq_len, d, v.to_vec());
+                Ok(flash_pwl(&qm, &km, &vm, tile, tile, *segments).data)
+            }
+        }
     }
 }
 
@@ -254,5 +360,37 @@ mod tests {
         assert!(m.best_for("fsa_attn", 4096, 128).is_none());
         assert!(m.best_for("sdpa", 100, 64).is_none());
         assert_eq!(m.kinds(), vec!["fsa_attn", "sdpa"]);
+    }
+
+    #[test]
+    fn reference_backend_matches_flash_pwl_twin() {
+        use crate::numerics::SplitMix64;
+        let cfg = AccelConfig::builtin("fsa").unwrap();
+        let mut be =
+            Backend::new(BackendKind::Reference, Path::new("/nonexistent"), &cfg).unwrap();
+        assert_eq!(be.name(), "reference");
+        let (seq, d) = (32, 16);
+        let mut rng = SplitMix64::new(3);
+        let q = rng.normal_matrix(seq, d);
+        let k = rng.normal_matrix(seq, d);
+        let v = rng.normal_matrix(seq, d);
+        let got = be.execute_head(seq, d, &q, &k, &v).unwrap();
+        // seq (32) is not a multiple of the 128 array: one whole tile.
+        let want = flash_pwl(
+            &Mat::new(seq, d, q.clone()),
+            &Mat::new(seq, d, k.clone()),
+            &Mat::new(seq, d, v.clone()),
+            seq,
+            seq,
+            cfg.pwl_segments,
+        );
+        assert_eq!(got, want.data);
+    }
+
+    #[test]
+    fn auto_backend_without_manifest_is_reference() {
+        let cfg = AccelConfig::builtin("fsa").unwrap();
+        let be = Backend::new(BackendKind::Auto, Path::new("/nonexistent"), &cfg).unwrap();
+        assert_eq!(be.name(), "reference");
     }
 }

@@ -24,6 +24,12 @@ fn cfg(devices: usize) -> RunConfig {
         batch_timeout_cycles: 50_000,
         queue_depth: 64,
         artifacts_dir: "artifacts".into(),
+        // Strict PJRT: these tests exercise the artifact path and skip
+        // when `make artifacts` hasn't run (coordinator_gqa.rs covers
+        // the artifact-free reference path).
+        backend: fsa::config::BackendKind::Pjrt,
+        num_heads: 1,
+        num_kv_heads: 1,
     }
 }
 

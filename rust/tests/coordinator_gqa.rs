@@ -1,0 +1,149 @@
+//! End-to-end multi-head / GQA serving tests on the reference backend:
+//! no PJRT, no artifacts — the full coordinator path (ingress →
+//! batcher shard explosion → affinity router → device pool → gather)
+//! runs on the in-crate `flash_pwl` device twin, so these execute in
+//! every environment.
+
+use fsa::config::{BackendKind, RunConfig};
+use fsa::coordinator::request::AttentionRequest;
+use fsa::coordinator::Coordinator;
+use fsa::numerics::reference::{flash_pwl, Mat};
+use fsa::numerics::SplitMix64;
+
+fn cfg(devices: usize) -> RunConfig {
+    RunConfig {
+        devices,
+        max_batch: 8,
+        batch_timeout_cycles: 50_000,
+        queue_depth: 64,
+        artifacts_dir: "artifacts".into(),
+        backend: BackendKind::Reference,
+        num_heads: 8,
+        num_kv_heads: 2,
+    }
+}
+
+fn gqa_req(rng: &mut SplitMix64, id: u64, seq: usize, d: usize, heads: usize, kv: usize) -> AttentionRequest {
+    AttentionRequest::gqa(
+        id,
+        seq,
+        d,
+        heads,
+        kv,
+        rng.normal_matrix(heads * seq, d),
+        rng.normal_matrix(kv * seq, d),
+        rng.normal_matrix(kv * seq, d),
+    )
+}
+
+#[test]
+fn gqa_request_shards_across_devices_and_matches_single_device_reference() {
+    let (seq, d, heads, kv) = (64usize, 32usize, 8usize, 2usize);
+    let mut rng = SplitMix64::new(42);
+    let req = gqa_req(&mut rng, 1, seq, d, heads, kv);
+
+    // Serve the same request on a pool of 3 and on a single device.
+    let pool = Coordinator::start(cfg(3)).unwrap();
+    let resp = pool.submit_wait(req.clone()).unwrap();
+    let single = Coordinator::start(cfg(1)).unwrap();
+    let resp1 = single.submit_wait(req.clone()).unwrap();
+
+    // Sharded across >= 2 workers, gathered into one response.
+    assert!(
+        resp.devices_used.len() >= 2,
+        "expected scatter across devices, got {:?}",
+        resp.devices_used
+    );
+    assert_eq!(resp.shards, heads);
+    assert_eq!(resp.num_heads, heads);
+    assert_eq!(resp.num_kv_heads, kv);
+
+    // The gathered pool output is bitwise identical to the
+    // single-device run (deterministic numerics, same per-head path).
+    let out = resp.output.expect("pool numerics ok");
+    let out1 = resp1.output.expect("single-device numerics ok");
+    assert_eq!(out, out1, "head sharding must not change numerics");
+
+    // And both match the flash_pwl device twin computed head by head.
+    assert_eq!(out.len(), heads * seq * d);
+    for h in 0..heads {
+        let (k, v) = req.head_kv(req.kv_head_for(h));
+        let want = flash_pwl(
+            &Mat::new(seq, d, req.head_q(h).to_vec()),
+            &Mat::new(seq, d, k.to_vec()),
+            &Mat::new(seq, d, v.to_vec()),
+            seq,
+            seq,
+            8,
+        );
+        assert_eq!(&out[h * seq * d..(h + 1) * seq * d], &want.data[..], "head {h}");
+    }
+
+    // Whole-operator accounting: cost is summed per head, the critical
+    // path can't exceed it, and utilization is a sane ratio.
+    assert!(resp.device_cycles > 0);
+    assert_eq!(resp.device_cycles % heads as u64, 0, "identical per-head work");
+    assert!(resp.critical_path_cycles <= resp.device_cycles);
+    assert!(resp.critical_path_cycles >= resp.device_cycles / 3);
+    assert!(resp.utilization > 0.0 && resp.utilization < 1.0);
+    // Single device: critical path == total cost.
+    assert_eq!(resp1.critical_path_cycles, resp1.device_cycles);
+
+    // Shard-level metrics: 8 shards counted, request counted once, and
+    // per-shard cycle accounting agrees with the gathered aggregate.
+    let m = &pool.metrics;
+    let o = std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(m.head_shards.load(o), heads);
+    assert_eq!(m.completed.load(o), 1);
+    assert_eq!(m.multi_head_requests.load(o), 1);
+    assert_eq!(m.failed.load(o), 0);
+    assert_eq!(m.shard_cycles.load(o), m.device_cycles.load(o));
+
+    pool.shutdown();
+    single.shutdown();
+}
+
+#[test]
+fn mixed_single_and_multi_head_traffic_coexists() {
+    let coord = Coordinator::start(cfg(2)).unwrap();
+    let mut rng = SplitMix64::new(7);
+    let (seq, d) = (32usize, 16usize);
+
+    let single = gqa_req(&mut rng, 1, seq, d, 1, 1);
+    let multi = gqa_req(&mut rng, 2, seq, d, 4, 4);
+    let rx1 = coord.submit(single).unwrap();
+    let rx2 = coord.submit(multi).unwrap();
+    let r1 = rx1.recv().unwrap();
+    let r2 = rx2.recv().unwrap();
+
+    assert_eq!(r1.shards, 1);
+    assert_eq!(r1.output.as_ref().unwrap().len(), seq * d);
+    assert_eq!(r1.devices_used.len(), 1);
+    assert_eq!(r2.shards, 4);
+    assert_eq!(r2.output.as_ref().unwrap().len(), 4 * seq * d);
+
+    let o = std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(coord.metrics.head_shards.load(o), 5);
+    assert_eq!(coord.metrics.completed.load(o), 2);
+    assert_eq!(coord.metrics.multi_head_requests.load(o), 1);
+    coord.shutdown();
+}
+
+#[test]
+fn reference_backend_needs_no_artifacts_dir() {
+    let mut c = cfg(1);
+    c.artifacts_dir = "/nonexistent/path".into();
+    let coord = Coordinator::start(c).unwrap();
+    let mut rng = SplitMix64::new(9);
+    let resp = coord.submit_wait(gqa_req(&mut rng, 1, 16, 8, 2, 1)).unwrap();
+    assert!(resp.output.is_ok());
+    coord.shutdown();
+}
+
+#[test]
+fn pjrt_backend_still_fails_fast_without_artifacts() {
+    let mut c = cfg(1);
+    c.backend = BackendKind::Pjrt;
+    c.artifacts_dir = "/nonexistent/path".into();
+    assert!(Coordinator::start(c).is_err());
+}

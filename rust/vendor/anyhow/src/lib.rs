@@ -1,0 +1,195 @@
+//! Offline stand-in for the `anyhow` crate (DESIGN.md §substitutions).
+//!
+//! The build environment has no crates.io access, so this in-tree crate
+//! provides the subset of anyhow's API the repo uses with the same
+//! semantics:
+//!
+//! * [`Error`]: an opaque error carrying a context chain.  `Display`
+//!   shows the outermost message; `{:#}` (alternate) shows the whole
+//!   chain joined by `": "`, exactly like anyhow.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//! * [`Context`] for adding context to `Result<T, E>` — including
+//!   results that already carry an [`Error`].
+//! * A blanket `From<E: std::error::Error>` so `?` converts foreign
+//!   errors (IO, parse, ...) and captures their source chain.
+//!
+//! Not implemented (unused in this repo): downcasting, backtraces.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` alias, with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Opaque error: a chain of messages, outermost context first.
+pub struct Error {
+    /// `chain[0]` is the outermost message (what `Display` shows);
+    /// later entries are the causes, innermost last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (the `Context` entry point).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause messages, outermost first (anyhow's `chain()` analogue,
+    /// as strings).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, anyhow-style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any std error, capturing its source chain.  The
+// same blanket-vs-reflexive shape as real anyhow: valid because `Error`
+// itself does not implement `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment extension for `Result`.
+///
+/// Implemented over `E: Into<Error>` so it covers both foreign error
+/// types and results that already hold an [`Error`] — one blanket impl
+/// instead of anyhow's sealed-trait pair.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => { return Err($crate::anyhow!($($tt)*).into()) };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))).into());
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($tt)*).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ctx(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().context("parsing test integer")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = parse_ctx("nope").unwrap_err();
+        assert_eq!(e.to_string(), "parsing test integer");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("parsing test integer: "), "{full}");
+        assert!(full.contains("invalid digit"), "{full}");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        let owned: Error = anyhow!(String::from("owned message"));
+        assert_eq!(owned.to_string(), "owned message");
+    }
+
+    #[test]
+    fn question_mark_from_io_error() {
+        fn f() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        let e = f().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+}

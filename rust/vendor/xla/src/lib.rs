@@ -1,0 +1,150 @@
+//! Offline API-compatible stub of the `xla` crate (DESIGN.md
+//! §substitutions).
+//!
+//! The build image ships neither the `xla` Rust bindings nor the
+//! `xla_extension` shared library, so this in-tree crate mirrors the
+//! exact API surface `fsa::runtime` uses and fails at the *client
+//! construction* step: [`PjRtClient::cpu`] returns an error, every
+//! downstream type is unreachable at runtime but type-checks.  The
+//! serving stack detects the failure and falls back to the in-crate
+//! reference backend (`fsa::runtime::Backend::Reference`), so the full
+//! request path still runs; swap this vendor entry for the real
+//! bindings to light up PJRT execution of the AOT Pallas artifacts.
+
+use std::fmt;
+
+/// Stub error type (the real crate's `xla::Error` is also opaque here).
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT unavailable: in-tree xla stub (offline image has no xla_extension); \
+         use the reference backend"
+            .to_string(),
+    ))
+}
+
+/// Element types used by the artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F16,
+    F32,
+    F64,
+    S32,
+    S64,
+}
+
+/// Host literal (stub: never holds data — no client can produce one).
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute over per-device argument lists; result is
+    /// `[device][output]` buffers in the real crate.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub: construction always fails, which is how the
+/// serving stack discovers PJRT is absent).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_stub() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err:?}").contains("stub"));
+    }
+
+    #[test]
+    fn literal_pipeline_fails_cleanly() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.convert(PrimitiveType::F16).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}

@@ -1,0 +1,29 @@
+#!/bin/sh
+# Tier-1 verify entrypoint (ROADMAP.md): release build, tests, rustdoc.
+#
+# Runs the same recipe the driver and CI use:
+#   cargo build --release && cargo test -q && cargo doc --no-deps
+#
+# The rustdoc step is held to zero warnings (satellite requirement:
+# the public API docs must stay clean).
+set -eu
+cd "$(dirname "$0")"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify: cargo not found on PATH." >&2
+    echo "This image ships no Rust toolchain; run verify on a host with" >&2
+    echo "rustc >= 1.75 (no network needed: all deps are vendored in-tree" >&2
+    echo "under rust/vendor/, see DESIGN.md section 'substitutions')." >&2
+    exit 2
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo doc --no-deps (warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "verify OK"
