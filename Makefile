@@ -1,10 +1,19 @@
 # fsa — build/verify entry points (see README.md quickstart).
 
-.PHONY: verify build test doc artifacts artifacts-full serve clean
+.PHONY: verify build test doc artifacts artifacts-full serve bench-smoke clean
 
 # Tier-1 verification: release build + tests + clean rustdoc.
 verify:
 	./verify.sh
+
+# Every bench target at minimal iterations (FSA_BENCH_SMOKE shrinks
+# sweeps/budgets), asserting exit 0.  Optional verify stage: VERIFY_BENCH=1.
+BENCHES = ablation cycles decode fig1 fig11 fig12 hotpath multihead table2 table3
+bench-smoke:
+	@for b in $(BENCHES); do \
+		echo "== cargo bench --bench $$b (smoke) =="; \
+		FSA_BENCH_SMOKE=1 cargo bench --bench $$b || exit 1; \
+	done
 
 build:
 	cargo build --release

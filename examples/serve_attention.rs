@@ -58,6 +58,7 @@ fn main() -> fsa::Result<()> {
         backend: args.flag("backend").unwrap_or("auto").parse()?,
         num_heads: heads,
         num_kv_heads: kv_heads,
+        ..RunConfig::default()
     };
     let coord = Coordinator::start(cfg)?;
 

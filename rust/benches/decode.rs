@@ -1,0 +1,193 @@
+//! Bench: decode-phase serving — per-step cost of cached vs recompute
+//! decode across prefix lengths, pool-level cache-hit-aware
+//! utilization, and a live coordinator run over the paged KV caches.
+//!
+//! Three parts:
+//!
+//! 1. Model sweep (instant): `perfmodel::fsa_decode_perf` across
+//!    prefix lengths, cached vs recompute, with the scaling ratios
+//!    printed — cached per-step cost is O(L) in streamed bytes and
+//!    cycles (ratio ~2 per prefix doubling) while the miss recompute
+//!    is O(L²) in cycles (ratio ~4).
+//! 2. Capacity sweep: `decode_pool_perf` across hit rates — the
+//!    pool-level utilization/token-rate picture as cache capacity (and
+//!    thus steady-state hit rate) varies.
+//! 3. Live coordinator: sessions decoding round-robin over the real
+//!    per-device caches on the reference backend, ample cache vs a
+//!    thrashing cache (batch x prefix x capacity), reporting measured
+//!    hit rates and host token throughput.
+//!
+//!     cargo bench --bench decode
+
+use std::time::Instant;
+
+use fsa::benchutil::{smoke, Table};
+use fsa::config::{AccelConfig, BackendKind, EvictionPolicy, RunConfig};
+use fsa::coordinator::request::AttentionRequest;
+use fsa::coordinator::Coordinator;
+use fsa::numerics::SplitMix64;
+use fsa::perfmodel::{decode_pool_perf, fsa_decode_perf};
+use fsa::schedule::Variant;
+
+fn model_sweep(cfg: &AccelConfig) {
+    let mut t = Table::new(&[
+        "prefix L", "cached cycles", "cached KiB", "miss cycles", "miss/hit",
+        "hit cycle x", "hit byte x", "miss recompute x",
+    ]);
+    let ls = [512usize, 1024, 2048, 4096, 8192, 16384];
+    let mut prev: Option<(u64, u64, u64)> = None;
+    for &l in &ls {
+        let hit = fsa_decode_perf(cfg, l, 128, true, Variant::DualPath, 8);
+        let miss = fsa_decode_perf(cfg, l, 128, false, Variant::DualPath, 8);
+        let (cx, bx, rx) = match prev {
+            None => ("-".into(), "-".into(), "-".into()),
+            Some((pc, pb, pr)) => (
+                format!("{:.2}", hit.step_cycles as f64 / pc as f64),
+                format!("{:.2}", hit.bytes_streamed as f64 / pb as f64),
+                format!("{:.2}", miss.recompute_cycles as f64 / pr as f64),
+            ),
+        };
+        t.row(&[
+            l.to_string(),
+            hit.step_cycles.to_string(),
+            format!("{:.0}", hit.bytes_streamed as f64 / 1024.0),
+            miss.total_cycles.to_string(),
+            format!("{:.1}", miss.total_cycles as f64 / hit.total_cycles as f64),
+            cx,
+            bx,
+            rx,
+        ]);
+        prev = Some((hit.step_cycles, hit.bytes_streamed, miss.recompute_cycles));
+    }
+    println!("-- decode step model: cached O(L) vs recompute O(L^2) (d=128) --");
+    t.print();
+    println!("(per-doubling ratios: cached ~2x cycles and bytes, recompute ~4x cycles)");
+}
+
+fn pool_sweep(cfg: &AccelConfig) {
+    let mut t = Table::new(&[
+        "hit rate", "step cycles", "tokens/s/session", "pool util %", "KiB/step",
+    ]);
+    for &hr in &[1.0f64, 0.95, 0.8, 0.5, 0.0] {
+        let p = decode_pool_perf(cfg, 4096, 128, 8, 2, 4, hr, Variant::DualPath, 8);
+        t.row(&[
+            format!("{:.2}", hr),
+            format!("{:.0}", p.critical_path_cycles),
+            format!("{:.0}", p.tokens_per_sec),
+            format!("{:.3}", 100.0 * p.utilization),
+            format!("{:.0}", p.bytes_per_step / 1024.0),
+        ]);
+    }
+    println!("\n-- pool-level cache-hit-aware decode (L=4096, 8q/2kv heads, 4 devices) --");
+    t.print();
+}
+
+/// One live configuration: `sessions` sessions prefilled at `seq`,
+/// decoded `steps` steps round-robin on `devices` devices with
+/// `kv_pages` pages per device.  Returns (hit rate, tokens/s host).
+fn live_run(
+    sessions: usize,
+    steps: usize,
+    seq: usize,
+    devices: usize,
+    kv_pages: usize,
+) -> (f64, f64) {
+    let (d, heads, kv_heads) = (64usize, 4usize, 2usize);
+    let coord = Coordinator::start(RunConfig {
+        devices,
+        max_batch: 8,
+        batch_timeout_cycles: 50_000,
+        queue_depth: 1024,
+        artifacts_dir: "artifacts".into(),
+        backend: BackendKind::Reference,
+        num_heads: heads,
+        num_kv_heads: kv_heads,
+        kv_cache_pages: kv_pages,
+        kv_page_size: 16,
+        kv_eviction: EvictionPolicy::Lru,
+    })
+    .expect("coordinator boots on the reference backend");
+
+    let mut rng = SplitMix64::new(1234);
+    let mut id = 0u64;
+    for s in 0..sessions as u64 {
+        id += 1;
+        let resp = coord
+            .submit_wait(AttentionRequest::prefill(
+                id, s, seq, d, heads, kv_heads,
+                rng.normal_matrix(heads * seq, d),
+                rng.normal_matrix(kv_heads * seq, d),
+                rng.normal_matrix(kv_heads * seq, d),
+            ))
+            .expect("prefill");
+        assert!(resp.output.is_ok());
+    }
+    let t0 = Instant::now();
+    let (mut hits, mut misses) = (0usize, 0usize);
+    for step in 0..steps as u64 {
+        for s in 0..sessions as u64 {
+            id += 1;
+            let resp = coord
+                .submit_wait(AttentionRequest::decode(
+                    id, s, step, d, heads, kv_heads,
+                    rng.normal_matrix(heads, d),
+                    rng.normal_matrix(kv_heads, d),
+                    rng.normal_matrix(kv_heads, d),
+                ))
+                .expect("decode");
+            assert!(resp.output.is_ok());
+            hits += resp.kv_hits;
+            misses += resp.kv_misses;
+        }
+    }
+    let wall = t0.elapsed();
+    for s in 0..sessions as u64 {
+        id += 1;
+        coord.submit_wait(AttentionRequest::close(id, s)).expect("close");
+    }
+    coord.shutdown();
+    let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+    let tps = (sessions * steps) as f64 / wall.as_secs_f64();
+    (hit_rate, tps)
+}
+
+fn live_sweep() {
+    let steps = if smoke() { 4 } else { 24 };
+    let mut t = Table::new(&[
+        "sessions", "prefix L", "devices", "kv pages/dev", "measured hit %", "tokens/s (host)",
+    ]);
+    // batch (sessions) x prefix x cache capacity; the small-cache rows
+    // thrash (sessions' working sets exceed capacity -> evictions ->
+    // recompute misses), the ample rows run hot.
+    let cases: &[(usize, usize, usize, usize)] = if smoke() {
+        &[(2, 64, 1, 64), (2, 64, 1, 6)]
+    } else {
+        &[
+            (1, 128, 1, 64),
+            (4, 128, 2, 64),
+            (4, 256, 2, 128),
+            (4, 128, 1, 10),
+            (8, 128, 2, 12),
+        ]
+    };
+    for &(sessions, seq, devices, pages) in cases {
+        let (hr, tps) = live_run(sessions, steps, seq, devices, pages);
+        t.row(&[
+            sessions.to_string(),
+            seq.to_string(),
+            devices.to_string(),
+            pages.to_string(),
+            format!("{:.1}", 100.0 * hr),
+            format!("{:.0}", tps),
+        ]);
+    }
+    println!("\n-- live decode serving (reference backend, {steps} steps/session) --");
+    t.print();
+}
+
+fn main() {
+    let cfg = AccelConfig::builtin("fsa").unwrap();
+    model_sweep(&cfg);
+    pool_sweep(&cfg);
+    live_sweep();
+}

@@ -58,6 +58,7 @@ fn live_coordinator() {
         backend: BackendKind::Reference,
         num_heads: heads,
         num_kv_heads: kv_heads,
+        ..RunConfig::default()
     })
     .expect("coordinator boots on the reference backend");
 

@@ -45,7 +45,12 @@ pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
 }
 
 /// Adaptive variant: picks an iteration count so total time ~ `budget`.
+///
+/// Under `make bench-smoke` ([`smoke`]) the budget is capped at 20 ms
+/// so every bench target — all of them time through this function —
+/// runs its full code path at minimal iterations.
 pub fn bench_for<F: FnMut()>(budget: Duration, mut f: F) -> Stats {
+    let budget = if smoke() { budget.min(Duration::from_millis(20)) } else { budget };
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().max(Duration::from_nanos(100));
@@ -57,6 +62,13 @@ pub fn bench_for<F: FnMut()>(budget: Duration, mut f: F) -> Stats {
 #[inline]
 pub fn observe<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// True when the bench runs under `make bench-smoke` (`FSA_BENCH_SMOKE`
+/// set): targets shrink their sweeps/budgets to a quick exit-0 sanity
+/// pass so CI can exercise every bench without paying full runtimes.
+pub fn smoke() -> bool {
+    std::env::var_os("FSA_BENCH_SMOKE").is_some()
 }
 
 /// Simple fixed-width table printer for bench reports.

@@ -271,6 +271,41 @@ impl fmt::Display for BackendKind {
     }
 }
 
+/// What a device's KV cache does under capacity pressure
+/// (DESIGN.md §5).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Reap closed sessions, then evict whole least-recently-used
+    /// streams; evicted streams fall back to recompute and may be
+    /// re-placed.
+    #[default]
+    Lru,
+    /// Never evict: streams that do not fit are rejected and recompute
+    /// on every step (the no-cache-reuse baseline).
+    None,
+}
+
+impl std::str::FromStr for EvictionPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> crate::Result<EvictionPolicy> {
+        match s {
+            "lru" => Ok(EvictionPolicy::Lru),
+            "none" | "off" => Ok(EvictionPolicy::None),
+            other => bail!("unknown eviction policy {other:?} (try lru|none)"),
+        }
+    }
+}
+
+impl fmt::Display for EvictionPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            EvictionPolicy::Lru => "lru",
+            EvictionPolicy::None => "none",
+        })
+    }
+}
+
 /// Serving-run parameters (coordinator + e2e example).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -288,6 +323,15 @@ pub struct RunConfig {
     /// Default KV-head count for synthetic workloads; must divide
     /// `num_heads`.
     pub num_kv_heads: usize,
+    /// Per-device KV-cache capacity in pages (decode-phase serving).
+    /// At the defaults (4096 pages × 16 tokens × d=128 × 2 (K+V) ×
+    /// 2 B fp16 = 33,554,432 B) this models 32 MiB of device HBM set
+    /// aside for KV.
+    pub kv_cache_pages: usize,
+    /// Tokens per KV-cache page.
+    pub kv_page_size: usize,
+    /// Eviction policy of the per-device KV caches.
+    pub kv_eviction: EvictionPolicy,
 }
 
 impl Default for RunConfig {
@@ -301,6 +345,9 @@ impl Default for RunConfig {
             backend: BackendKind::Pjrt,
             num_heads: 1,
             num_kv_heads: 1,
+            kv_cache_pages: 4096,
+            kv_page_size: 16,
+            kv_eviction: EvictionPolicy::Lru,
         }
     }
 }
@@ -318,6 +365,12 @@ impl RunConfig {
             "num_heads {} must be a positive multiple of num_kv_heads {}",
             self.num_heads,
             self.num_kv_heads
+        );
+        ensure!(
+            self.kv_cache_pages >= 1 && self.kv_page_size >= 1,
+            "kv_cache_pages ({}) and kv_page_size ({}) must be >= 1",
+            self.kv_cache_pages,
+            self.kv_page_size
         );
         Ok(())
     }
@@ -348,6 +401,15 @@ impl RunConfig {
         }
         if let Some(v) = ini.get_parsed::<usize>(sec, "num_kv_heads")? {
             cfg.num_kv_heads = v;
+        }
+        if let Some(v) = ini.get_parsed::<usize>(sec, "kv_cache_pages")? {
+            cfg.kv_cache_pages = v;
+        }
+        if let Some(v) = ini.get_parsed::<usize>(sec, "kv_page_size")? {
+            cfg.kv_page_size = v;
+        }
+        if let Some(v) = ini.get_parsed::<EvictionPolicy>(sec, "kv_eviction")? {
+            cfg.kv_eviction = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -385,6 +447,26 @@ mod tests {
         assert!("gpu".parse::<BackendKind>().is_err());
         // GQA divisibility is validated at config load.
         let bad = "[run]\nnum_heads = 3\nnum_kv_heads = 2\n";
+        assert!(RunConfig::from_ini(&Ini::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_config_kv_cache_knobs() {
+        let text = "[run]\nkv_cache_pages = 64\nkv_page_size = 8\nkv_eviction = none\n";
+        let run = RunConfig::from_ini(&Ini::parse(text).unwrap()).unwrap();
+        assert_eq!(run.kv_cache_pages, 64);
+        assert_eq!(run.kv_page_size, 8);
+        assert_eq!(run.kv_eviction, EvictionPolicy::None);
+        // Defaults: LRU over 4096 x 16-token pages.
+        let dflt = RunConfig::default();
+        assert_eq!(dflt.kv_eviction, EvictionPolicy::Lru);
+        assert_eq!((dflt.kv_cache_pages, dflt.kv_page_size), (4096, 16));
+        assert_eq!("lru".parse::<EvictionPolicy>().unwrap(), EvictionPolicy::Lru);
+        assert_eq!("off".parse::<EvictionPolicy>().unwrap(), EvictionPolicy::None);
+        assert!("fifo".parse::<EvictionPolicy>().is_err());
+        assert_eq!(EvictionPolicy::Lru.to_string(), "lru");
+        // Zero-size caches are rejected at load.
+        let bad = "[run]\nkv_cache_pages = 0\n";
         assert!(RunConfig::from_ini(&Ini::parse(bad).unwrap()).is_err());
     }
 

@@ -7,14 +7,23 @@
 //! `num_heads` [`ShardEnvelope`]s; shards of *different* requests with
 //! the same `(seq_len, d)` shape share batches, so head-sharding and
 //! cross-request batching compose.
+//!
+//! The batcher is also the session lifecycle gate (DESIGN.md §5):
+//! prefill registers the session, decode validates step order and
+//! appends the new K/V row to the host tier *before* dispatch (so
+//! in-flight shards always find their prefix), and close is answered
+//! right here — sessions mean the batcher no longer ships full K/V
+//! copies per step: a decode envelope carries one row per KV head and
+//! the devices read the prefix from their page caches.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
 
 use super::metrics::Metrics;
-use super::request::Envelope;
+use super::request::{AttentionResponse, Envelope};
 use super::router::Router;
+use super::session::{SessionOp, SessionTable};
 use super::shard::{explode, ShardEnvelope};
 
 pub struct Batcher {
@@ -22,24 +31,40 @@ pub struct Batcher {
     /// Timeout expressed in simulated device cycles in the config; the
     /// batcher converts at the FSA clock (1.5 GHz) to a host duration.
     timeout: Duration,
+    /// Whether the pool's resolved backend can execute decode steps
+    /// (PJRT has no `fsa_decode` artifact kind — the coordinator
+    /// resolves this once at start, including the `auto` case).
+    /// Incapable pools reject decode *before* the step is consumed.
+    decode_capable: bool,
 }
 
 impl Batcher {
-    pub fn new(max_batch: usize, timeout_cycles: u64) -> Batcher {
+    pub fn new(max_batch: usize, timeout_cycles: u64, decode_capable: bool) -> Batcher {
         Batcher {
             max_batch: max_batch.max(1),
             timeout: Duration::from_nanos((timeout_cycles as f64 / 1.5) as u64),
+            decode_capable,
         }
     }
 
-    /// Main loop: drain the ingress channel, explode each request into
-    /// head shards, group shards by `(seq_len, d)`, and dispatch a
-    /// group when it reaches `max_batch` shards or its oldest member
-    /// exceeds the timeout.  Exits when the ingress disconnects.
-    pub fn run(&self, rx: mpsc::Receiver<Envelope>, router: Router, metrics: Arc<Metrics>) {
+    /// Main loop: drain the ingress channel, resolve session lifecycle
+    /// ops, explode each dispatched request into head shards, group
+    /// shards by `(seq_len, d)`, and dispatch a group when it reaches
+    /// `max_batch` shards or its oldest member exceeds the timeout.
+    /// Exits when the ingress disconnects.
+    pub fn run(
+        &self,
+        rx: mpsc::Receiver<Envelope>,
+        router: Router,
+        metrics: Arc<Metrics>,
+        sessions: Arc<SessionTable>,
+    ) {
         // (seq_len, d) -> pending shards.
         let mut groups: Vec<((usize, usize), Vec<ShardEnvelope>)> = Vec::new();
         let admit = |env: Envelope, groups: &mut Vec<((usize, usize), Vec<ShardEnvelope>)>| {
+            let Some(env) = admit_session_op(env, &sessions, &metrics, self.decode_capable) else {
+                return; // answered in place (close / lifecycle error)
+            };
             let key = (env.req.seq_len, env.req.d);
             let shards = explode(env);
             match groups.iter_mut().find(|(k, _)| *k == key) {
@@ -108,6 +133,97 @@ impl Batcher {
     }
 }
 
+/// Resolve a request's [`SessionOp`] against the session table.
+/// Returns the (possibly prefix-stamped) envelope when it should be
+/// dispatched to the pool, `None` when it was answered in place
+/// (close, or a lifecycle error).
+fn admit_session_op(
+    mut env: Envelope,
+    sessions: &SessionTable,
+    metrics: &Metrics,
+    decode_capable: bool,
+) -> Option<Envelope> {
+    let o = std::sync::atomic::Ordering::Relaxed;
+    match env.req.op {
+        SessionOp::Stateless => Some(env),
+        SessionOp::Prefill { session } => match sessions.open(session, &env.req) {
+            Ok(epoch) => {
+                env.req.epoch = epoch;
+                metrics.sessions_opened.fetch_add(1, o);
+                Some(env)
+            }
+            Err(msg) => {
+                reply_inline(env, Err(msg), metrics);
+                None
+            }
+        },
+        SessionOp::Decode { session, step } => {
+            // Reject before begin_decode consumes the step: a PJRT
+            // pool (including `auto` that resolved to PJRT) has no
+            // decode artifact kind, so admitting would burn the step
+            // on a guaranteed execution error.
+            if !decode_capable {
+                reply_inline(
+                    env,
+                    Err(format!(
+                        "session {session} decode step {step}: the pool's PJRT \
+                         backend has no `fsa_decode` artifact kind; restart with \
+                         backend=reference (DESIGN.md §5)"
+                    )),
+                    metrics,
+                );
+                return None;
+            }
+            match sessions.begin_decode(session, step, &env.req) {
+                Ok((prefix_len, epoch)) => {
+                    env.req.prefix_len = prefix_len;
+                    env.req.epoch = epoch;
+                    metrics.decode_steps.fetch_add(1, o);
+                    Some(env)
+                }
+                Err(msg) => {
+                    reply_inline(env, Err(msg), metrics);
+                    None
+                }
+            }
+        }
+        SessionOp::Close { session } => {
+            if sessions.close(session) {
+                metrics.sessions_closed.fetch_add(1, o);
+                reply_inline(env, Ok(Vec::new()), metrics);
+            } else {
+                reply_inline(env, Err(format!("session {session} is not open")), metrics);
+            }
+            None
+        }
+    }
+}
+
+/// Answer an envelope without touching the device pool (lifecycle
+/// replies and validation errors).  A vanished client is not an error.
+fn reply_inline(env: Envelope, output: Result<Vec<f32>, String>, metrics: &Metrics) {
+    let ok = output.is_ok();
+    let resp = AttentionResponse {
+        id: env.req.id,
+        output,
+        num_heads: env.req.num_heads,
+        num_kv_heads: env.req.num_kv_heads,
+        shards: 0,
+        device_cycles: 0,
+        critical_path_cycles: 0,
+        device_time: Duration::ZERO,
+        utilization: 0.0,
+        latency: env.enqueued.elapsed(),
+        device_id: 0,
+        devices_used: Vec::new(),
+        bucket: env.req.seq_len,
+        kv_hits: 0,
+        kv_misses: 0,
+    };
+    metrics.record(&resp, ok);
+    let _ = env.reply.send(resp);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,5 +274,65 @@ mod tests {
         let sizes: Vec<usize> =
             Batcher::chunks(shards, 3).iter().map(|c| c.len()).collect();
         assert_eq!(sizes, vec![3, 1]);
+    }
+
+    #[test]
+    fn session_ops_are_resolved_before_dispatch() {
+        let sessions = SessionTable::new();
+        let metrics = Metrics::new();
+        let d = 4;
+        let be = true; // decode-capable pool
+        let mk = |req: AttentionRequest| -> (Envelope, mpsc::Receiver<AttentionResponse>) {
+            let (tx, rx) = mpsc::channel();
+            (Envelope { req, reply: tx, enqueued: std::time::Instant::now() }, rx)
+        };
+
+        // Decode before prefill: answered in place with an error.
+        let (env, rx) = mk(AttentionRequest::decode(
+            1, 7, 0, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
+        ));
+        assert!(admit_session_op(env, &sessions, &metrics, be).is_none());
+        assert!(rx.try_recv().unwrap().output.is_err());
+
+        // Prefill opens the session and is stamped with its epoch.
+        let (env, _rx) = mk(AttentionRequest::prefill(
+            2, 7, 2, d, 2, 1, vec![0.0; 2 * 2 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
+        ));
+        let env2 = admit_session_op(env, &sessions, &metrics, be).unwrap();
+        assert!(env2.req.epoch > 0);
+        assert!(sessions.contains(7));
+
+        // A valid decode is stamped with the prefix length and epoch.
+        let (env, _rx) = mk(AttentionRequest::decode(
+            3, 7, 0, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
+        ));
+        let env = admit_session_op(env, &sessions, &metrics, be).unwrap();
+        assert_eq!(env.req.prefix_len, 3);
+        assert_eq!(env.req.epoch, env2.req.epoch);
+
+        // On a decode-incapable pool (PJRT, including auto resolved to
+        // PJRT) a decode is rejected BEFORE the step is consumed: no
+        // state mutation, retryable after a backend change.
+        let before = sessions.prefix_len(7);
+        let (env, rx2) = mk(AttentionRequest::decode(
+            9, 7, 1, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
+        ));
+        assert!(admit_session_op(env, &sessions, &metrics, false).is_none());
+        assert!(rx2.try_recv().unwrap().output.unwrap_err().contains("fsa_decode"));
+        assert_eq!(sessions.prefix_len(7), before, "rejected step must not consume state");
+
+        // Close is answered in place with an empty success.
+        let (env, rx) = mk(AttentionRequest::close(4, 7));
+        assert!(admit_session_op(env, &sessions, &metrics, be).is_none());
+        let resp = rx.try_recv().unwrap();
+        assert_eq!(resp.output.unwrap(), Vec::<f32>::new());
+        assert!(!sessions.contains(7));
+
+        let o = std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(metrics.sessions_opened.load(o), 1);
+        assert_eq!(metrics.sessions_closed.load(o), 1);
+        assert_eq!(metrics.decode_steps.load(o), 1);
+        assert_eq!(metrics.completed.load(o), 3); // two error replies + close
+        assert_eq!(metrics.failed.load(o), 2);
     }
 }

@@ -1,29 +1,39 @@
 //! Device worker: one thread owning a numerics [`Backend`] (PJRT
-//! artifacts or the in-crate reference twin) and the FSA performance
-//! model (simulated device timing).
+//! artifacts or the in-crate reference twin), the FSA performance
+//! model (simulated device timing), and — for decode-phase serving —
+//! a per-device paged KV cache (DESIGN.md §5).
 //!
 //! Each worker is a simulated FSA card.  The unit of work is one *head
 //! shard* (see [`super::shard`]): numerics execute through the backend
 //! (the `fsa_attn` AOT artifact — the numerics twin of the silicon,
 //! see DESIGN.md §3 — or the `flash_pwl` reference), while
 //! latency/throughput are accounted in device cycles from
-//! [`crate::perfmodel`] at the paper's 1.5 GHz clock.  The worker that
-//! finishes a request's final shard assembles and sends the gathered
-//! whole-operator response.
+//! [`crate::perfmodel`] at the paper's 1.5 GHz clock.
+//!
+//! Prefill shards additionally land their KV group's K/V prefix in the
+//! worker's page cache; decode shards serve the prefix from pages when
+//! cached (O(L) bytes streamed, [`fsa_decode_perf`] hit cost) and fall
+//! back to the session host tier otherwise (charged as a full O(L²)
+//! prefix recompute, then re-cached).  Evictions report back to the
+//! [`SessionTable`] so the router can re-place the stream.  The worker
+//! that finishes a request's final shard assembles and sends the
+//! gathered whole-operator response.
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use crate::config::{AccelConfig, BackendKind};
-use crate::perfmodel::fsa_flash_perf;
+use crate::config::{AccelConfig, RunConfig};
+use crate::perfmodel::{fsa_decode_perf, fsa_flash_perf};
 use crate::runtime::Backend;
 use crate::schedule::Variant;
 
+use super::kvcache::{Admit, KvCache, KvCacheConfig};
 use super::metrics::Metrics;
 use super::router::{Batch, WorkerHandle};
-use super::shard::ShardResult;
+use super::session::SessionTable;
+use super::shard::{CacheOutcome, ShardCtx, ShardEnvelope, ShardResult};
 
 pub struct DeviceWorker {
     handle: WorkerHandle,
@@ -36,16 +46,17 @@ impl DeviceWorker {
     /// first use via error responses.
     pub fn spawn(
         id: usize,
-        artifacts: PathBuf,
-        backend: BackendKind,
+        cfg: &RunConfig,
+        sessions: Arc<SessionTable>,
         metrics: Arc<Metrics>,
     ) -> crate::Result<DeviceWorker> {
         let (tx, rx) = mpsc::channel::<Batch>();
         let load = Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let handle = WorkerHandle { id, queue: tx, load: load.clone() };
+        let cfg = cfg.clone();
         let thread = std::thread::Builder::new()
             .name(format!("fsa-device-{id}"))
-            .spawn(move || worker_loop(id, artifacts, backend, rx, load, metrics))?;
+            .spawn(move || worker_loop(id, cfg, rx, load, metrics, sessions))?;
         Ok(DeviceWorker { handle, thread: Some(thread) })
     }
 
@@ -65,47 +76,49 @@ impl DeviceWorker {
 
 fn worker_loop(
     id: usize,
-    artifacts: PathBuf,
-    backend_kind: BackendKind,
+    run_cfg: RunConfig,
     rx: mpsc::Receiver<Batch>,
     load: Arc<std::sync::atomic::AtomicUsize>,
     metrics: Arc<Metrics>,
+    sessions: Arc<SessionTable>,
 ) {
     let cfg = AccelConfig::builtin("fsa").expect("builtin fsa config");
-    let mut backend = match Backend::new(backend_kind, &artifacts, &cfg) {
+    let artifacts = PathBuf::from(&run_cfg.artifacts_dir);
+    let mut backend = match Backend::new(run_cfg.backend, &artifacts, &cfg) {
         Ok(b) => Some(b),
         Err(e) => {
             eprintln!("device {id}: backend init failed: {e:#}");
             None
         }
     };
+    let mut cache = KvCache::new(KvCacheConfig {
+        pages: run_cfg.kv_cache_pages,
+        page_size: run_cfg.kv_page_size,
+        policy: run_cfg.kv_eviction,
+    });
 
     while let Ok(batch) = rx.recv() {
         let n = batch.len();
         for env in batch {
-            let shard = &env.shard;
-            let req = &shard.req;
-            // Per-head device timing: the head runs on one array, seq
-            // padded up to the array dim, head dim capped by it (§8.3).
-            let perf = fsa_flash_perf(
-                &cfg,
-                req.seq_len.max(cfg.array_size),
-                req.d.min(cfg.array_size),
-                Variant::DualPath,
-                cfg.pwl_segments,
-            );
-            let (k, v) = req.head_kv(shard.kv_head);
-            let output = match backend.as_mut() {
-                None => Err("device backend unavailable".to_string()),
-                Some(be) => be.execute_head(req.seq_len, req.d, shard.req.head_q(shard.head), k, v),
-            };
-            metrics.record_shard(perf.total_cycles);
+            let (cycles, cache_outcome, output) =
+                execute_shard(id, &cfg, backend.as_mut(), &mut cache, &sessions, &metrics, &env);
+            metrics.record_shard(cycles);
+            match cache_outcome {
+                CacheOutcome::Hit => {
+                    metrics.kv_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                CacheOutcome::Miss => {
+                    metrics.kv_misses.fetch_add(1, Ordering::Relaxed);
+                }
+                CacheOutcome::NotApplicable => {}
+            }
             let resp = env.gather.complete_and_report(
                 ShardResult {
-                    head: shard.head,
+                    head: env.shard.head,
                     device_id: id,
-                    cycles: perf.total_cycles,
+                    cycles,
                     output,
+                    cache: cache_outcome,
                 },
                 &cfg,
             );
@@ -115,5 +128,161 @@ fn worker_loop(
             }
         }
         load.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+/// Execute one shard on this device: numerics + device-cycle pricing +
+/// KV-cache bookkeeping.  Returns `(cycles, cache outcome, output)`.
+fn execute_shard(
+    id: usize,
+    cfg: &AccelConfig,
+    backend: Option<&mut Backend>,
+    cache: &mut KvCache,
+    sessions: &SessionTable,
+    metrics: &Metrics,
+    env: &ShardEnvelope,
+) -> (u64, CacheOutcome, Result<Vec<f32>, String>) {
+    let shard = &env.shard;
+    let req = &shard.req;
+    // A cached stream is live only while its session incarnation is:
+    // closed sessions and stale epochs (reused ids) both read as dead
+    // and become reapable capacity.
+    let live = |sid: u64, epoch: u64| sessions.epoch(sid) == Some(epoch);
+
+    match env.ctx {
+        ShardCtx::Stateless | ShardCtx::Prefill { .. } => {
+            // Per-head device timing: the head runs on one array, seq
+            // padded up to the array dim, head dim capped by it (§8.3).
+            let perf = fsa_flash_perf(
+                cfg,
+                req.seq_len.max(cfg.array_size),
+                req.d.min(cfg.array_size),
+                Variant::DualPath,
+                cfg.pwl_segments,
+            );
+            let (k, v) = req.head_kv(shard.kv_head);
+            let output = match backend {
+                None => Err("device backend unavailable".to_string()),
+                Some(be) => be.execute_head(req.seq_len, req.d, req.head_q(shard.head), k, v),
+            };
+            if let ShardCtx::Prefill { session, epoch } = env.ctx {
+                // Land the KV group's prefix in the page cache once —
+                // skipped only when a groupmate of THIS prefill (same
+                // epoch) already inserted it; a same-length leftover
+                // from a closed predecessor session (reused id, stale
+                // epoch) is replaced, never trusted.
+                if output.is_ok()
+                    && cache.cached_state(session, shard.kv_head) != Some((req.seq_len, epoch))
+                {
+                    if let Admit::Cached { evicted } =
+                        cache.insert(session, shard.kv_head, epoch, req.d, k, v, &live)
+                    {
+                        report_evictions(id, sessions, metrics, &evicted);
+                    }
+                }
+            }
+            (perf.total_cycles, CacheOutcome::NotApplicable, output)
+        }
+        ShardCtx::Decode { session, prefix_len, epoch } => {
+            // The request carries this step's appended K/V row; the
+            // prefix lives in pages (hit) or the host tier (miss).
+            // Only streams of this session incarnation (epoch) count —
+            // a stale same-id stream reads as a miss and is replaced.
+            let (k_row, v_row) = req.head_kv(shard.kv_head);
+            let cached = cache.cached_state(session, shard.kv_head);
+            let mut outcome = CacheOutcome::Miss;
+            let mut data: Option<(Vec<f32>, Vec<f32>)> = None;
+            if cached == Some((prefix_len, epoch)) {
+                // A groupmate shard already appended this step's row.
+                outcome = CacheOutcome::Hit;
+                data = cache.gather(session, shard.kv_head);
+            } else if prefix_len >= 1 && cached == Some((prefix_len - 1, epoch)) {
+                match cache.append(session, shard.kv_head, k_row, v_row, &live) {
+                    Admit::Cached { evicted } => {
+                        report_evictions(id, sessions, metrics, &evicted);
+                        outcome = CacheOutcome::Hit;
+                        data = cache.gather(session, shard.kv_head);
+                    }
+                    Admit::Rejected => {
+                        // Stream dropped (cache full, no eviction):
+                        // explicit fallback to recompute below.
+                        sessions.clear_placement(session, shard.kv_head, id);
+                    }
+                }
+            }
+            let (k_full, v_full) = match data {
+                Some(kv) => kv,
+                None => {
+                    // Miss: recompute from the authoritative host tier
+                    // (models the upstream model re-running its forward
+                    // pass over the prefix), then re-cache for the next
+                    // steps.
+                    outcome = CacheOutcome::Miss;
+                    match sessions.clone_prefix(session, shard.kv_head, prefix_len, epoch) {
+                        None => {
+                            let perf = fsa_decode_perf(
+                                cfg,
+                                prefix_len.max(1),
+                                req.d.min(cfg.array_size),
+                                false,
+                                Variant::DualPath,
+                                cfg.pwl_segments,
+                            );
+                            return (
+                                perf.total_cycles,
+                                CacheOutcome::Miss,
+                                Err(format!(
+                                    "session {session} closed or prefix unavailable \
+                                     (kv head {}, prefix {prefix_len})",
+                                    shard.kv_head
+                                )),
+                            );
+                        }
+                        Some((k, v)) => {
+                            if let Admit::Cached { evicted } =
+                                cache.insert(session, shard.kv_head, epoch, req.d, &k, &v, &live)
+                            {
+                                report_evictions(id, sessions, metrics, &evicted);
+                            }
+                            (k, v)
+                        }
+                    }
+                }
+            };
+            let perf = fsa_decode_perf(
+                cfg,
+                prefix_len.max(1),
+                req.d.min(cfg.array_size),
+                outcome == CacheOutcome::Hit,
+                Variant::DualPath,
+                cfg.pwl_segments,
+            );
+            let output = match backend {
+                None => Err("device backend unavailable".to_string()),
+                Some(be) => be.execute_decode_row(
+                    prefix_len,
+                    req.d,
+                    req.head_q(shard.head),
+                    &k_full,
+                    &v_full,
+                ),
+            };
+            (perf.total_cycles, outcome, output)
+        }
+    }
+}
+
+/// A stream was evicted from this device's cache: clear its sticky pin
+/// (if it still points here) so the router re-places the next step, and
+/// count it.
+fn report_evictions(
+    id: usize,
+    sessions: &SessionTable,
+    metrics: &Metrics,
+    evicted: &[(u64, usize)],
+) {
+    for &(sid, kv_head) in evicted {
+        sessions.clear_placement(sid, kv_head, id);
+        metrics.kv_evictions.fetch_add(1, Ordering::Relaxed);
     }
 }

@@ -1,0 +1,520 @@
+//! Per-device paged KV cache (DESIGN.md §5): the device-HBM tier behind
+//! decode-phase serving.
+//!
+//! Each device worker owns one [`KvCache`].  The cached unit is a
+//! *stream* — the K/V prefix of one `(session, kv_head)` pair, exactly
+//! the granularity the router's KV-head affinity pins to a device — and
+//! the allocation unit is a fixed-size *page* of `page_size` tokens
+//! (both the K and the V rows of those tokens, vLLM-style).  Capacity
+//! is accounted in pages; one page models
+//! `page_size · d · 2 (K+V) · 2 B (fp16)` of device HBM.
+//!
+//! Policies ([`EvictionPolicy`]):
+//!
+//! * `Lru` — when an insert/append needs pages beyond capacity, closed
+//!   sessions are reaped first, then whole least-recently-used streams
+//!   are evicted (never the stream being grown).  Evicted keys are
+//!   returned to the caller so it can clear the router's sticky pins —
+//!   the next decode step for that stream takes the explicit cache-miss
+//!   fallback (full recompute from the session host tier) and may be
+//!   re-placed on a less loaded device.
+//! * `None` — never evict: anything that does not fit is rejected and
+//!   every later step for that stream recomputes.  (The paper-shaped
+//!   baseline: no cache reuse across steps.)
+//!
+//! Whole-stream eviction (not page-granular) mirrors vLLM's sequence
+//! preemption: a partially evicted prefix is useless for attention, so
+//! pages of one stream live and die together.
+
+use crate::config::EvictionPolicy;
+
+use super::session::SessionId;
+
+/// Cache geometry + policy (from `RunConfig::{kv_cache_pages,
+/// kv_page_size, kv_eviction}`).
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// Total pages on this device.
+    pub pages: usize,
+    /// Tokens per page.
+    pub page_size: usize,
+    pub policy: EvictionPolicy,
+}
+
+/// One fixed-size page: the K and V rows of up to `page_size` tokens.
+struct Page {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// One cached `(session, kv_head)` K/V prefix.
+struct Stream {
+    session: SessionId,
+    kv_head: usize,
+    /// Session incarnation epoch the stream belongs to.  Session ids
+    /// may be reused after close and closed streams are reaped lazily,
+    /// so a same-id stream with a stale epoch must read as a miss —
+    /// never be appended to or served.
+    epoch: u64,
+    d: usize,
+    /// Tokens currently stored.
+    len: usize,
+    pages: Vec<Page>,
+    /// LRU stamp (monotonic access clock).
+    last_used: u64,
+}
+
+/// Monotonic counters, single-threaded per worker.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvCacheStats {
+    /// Decode lookups served from pages.
+    pub hits: u64,
+    /// Decode lookups that fell back to recompute.
+    pub misses: u64,
+    /// Whole streams inserted (prefill fills + miss re-caches).
+    pub inserts: u64,
+    /// Single-token appends.
+    pub appends: u64,
+    /// Live streams evicted under capacity pressure.
+    pub evictions: u64,
+    /// Closed-session streams reaped.
+    pub reaped: u64,
+    /// Inserts/appends refused for capacity (policy `None`, or a stream
+    /// larger than the whole cache).
+    pub rejected: u64,
+}
+
+/// Outcome of an insert/append.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// The stream is cached; `evicted` lists the `(session, kv_head)`
+    /// streams sacrificed to make room (their pins must be cleared).
+    Cached { evicted: Vec<(SessionId, usize)> },
+    /// The stream could not be admitted; the caller must serve from the
+    /// host tier (recompute fallback).
+    Rejected,
+}
+
+pub struct KvCache {
+    cfg: KvCacheConfig,
+    streams: Vec<Stream>,
+    used_pages: usize,
+    clock: u64,
+    pub stats: KvCacheStats,
+}
+
+impl KvCache {
+    pub fn new(cfg: KvCacheConfig) -> KvCache {
+        assert!(cfg.pages >= 1, "kv_cache_pages must be >= 1");
+        assert!(cfg.page_size >= 1, "kv_page_size must be >= 1");
+        KvCache { cfg, streams: Vec::new(), used_pages: 0, clock: 0, stats: KvCacheStats::default() }
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.cfg.pages
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.used_pages
+    }
+
+    pub fn stream_count(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.cfg.page_size)
+    }
+
+    fn find(&self, sid: SessionId, kv_head: usize) -> Option<usize> {
+        self.streams.iter().position(|s| s.session == sid && s.kv_head == kv_head)
+    }
+
+    /// Cached `(token count, epoch)` of a stream, touching its LRU
+    /// stamp.  Callers must match the epoch against the session's
+    /// current incarnation before trusting the length.
+    pub fn cached_state(&mut self, sid: SessionId, kv_head: usize) -> Option<(usize, u64)> {
+        self.clock += 1;
+        let clock = self.clock;
+        let i = self.find(sid, kv_head)?;
+        self.streams[i].last_used = clock;
+        Some((self.streams[i].len, self.streams[i].epoch))
+    }
+
+    /// Cached token count of a stream, touching its LRU stamp
+    /// (epoch-blind convenience; prefer [`KvCache::cached_state`] on
+    /// the serving path).
+    pub fn cached_len(&mut self, sid: SessionId, kv_head: usize) -> Option<usize> {
+        self.cached_state(sid, kv_head).map(|(len, _)| len)
+    }
+
+    /// Drop one stream (if present), freeing its pages.
+    pub fn remove(&mut self, sid: SessionId, kv_head: usize) -> bool {
+        match self.find(sid, kv_head) {
+            None => false,
+            Some(i) => {
+                let s = self.streams.swap_remove(i);
+                self.used_pages -= s.pages.len();
+                true
+            }
+        }
+    }
+
+    /// Free `need` pages: reap dead streams first (closed sessions and
+    /// stale incarnations, per `live(session, epoch)`), then LRU-evict
+    /// live streams.  `protect` is never reaped *or* evicted — the
+    /// stream being grown must survive even if its session was closed
+    /// mid-flight (the in-flight step still completes; the stream is
+    /// reaped on a later allocation).  Returns the evicted live keys,
+    /// or `Err` when the policy forbids eviction or nothing evictable
+    /// remains.
+    fn make_room(
+        &mut self,
+        need: usize,
+        protect: Option<(SessionId, usize)>,
+        live: &dyn Fn(SessionId, u64) -> bool,
+    ) -> Result<Vec<(SessionId, usize)>, ()> {
+        if self.used_pages + need > self.cfg.pages {
+            // Dead streams are free capacity whatever the policy.
+            let mut i = 0;
+            while i < self.streams.len() {
+                let s = &self.streams[i];
+                if !live(s.session, s.epoch) && protect != Some((s.session, s.kv_head)) {
+                    let s = self.streams.swap_remove(i);
+                    self.used_pages -= s.pages.len();
+                    self.stats.reaped += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let mut evicted = Vec::new();
+        while self.used_pages + need > self.cfg.pages {
+            if self.cfg.policy == EvictionPolicy::None {
+                return Err(());
+            }
+            let victim = self
+                .streams
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| protect != Some((s.session, s.kv_head)))
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(i, _)| i);
+            match victim {
+                None => return Err(()),
+                Some(i) => {
+                    let s = self.streams.swap_remove(i);
+                    self.used_pages -= s.pages.len();
+                    self.stats.evictions += 1;
+                    evicted.push((s.session, s.kv_head));
+                }
+            }
+        }
+        Ok(evicted)
+    }
+
+    /// Insert (or replace) a whole stream of `len = k.len() / d` tokens
+    /// belonging to session incarnation `epoch`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn insert(
+        &mut self,
+        sid: SessionId,
+        kv_head: usize,
+        epoch: u64,
+        d: usize,
+        k: &[f32],
+        v: &[f32],
+        live: &dyn Fn(SessionId, u64) -> bool,
+    ) -> Admit {
+        assert!(d >= 1);
+        assert_eq!(k.len() % d, 0, "K must be (len, d) row-major");
+        assert_eq!(k.len(), v.len());
+        let len = k.len() / d;
+        self.remove(sid, kv_head);
+        let need = self.pages_for(len);
+        if len == 0 || need > self.cfg.pages {
+            self.stats.rejected += 1;
+            return Admit::Rejected;
+        }
+        let evicted = match self.make_room(need, None, live) {
+            Ok(e) => e,
+            Err(()) => {
+                self.stats.rejected += 1;
+                return Admit::Rejected;
+            }
+        };
+        let rows_per_page = self.cfg.page_size;
+        let mut pages = Vec::with_capacity(need);
+        for p in 0..need {
+            let lo = p * rows_per_page * d;
+            let hi = ((p + 1) * rows_per_page * d).min(len * d);
+            pages.push(Page { k: k[lo..hi].to_vec(), v: v[lo..hi].to_vec() });
+        }
+        self.clock += 1;
+        self.streams.push(Stream {
+            session: sid,
+            kv_head,
+            epoch,
+            d,
+            len,
+            pages,
+            last_used: self.clock,
+        });
+        self.used_pages += need;
+        self.stats.inserts += 1;
+        Admit::Cached { evicted }
+    }
+
+    /// Append one token's K/V row to an existing stream, allocating a
+    /// new page when the last one is full.  On a capacity rejection the
+    /// (now stale) stream is dropped entirely — a prefix missing its
+    /// newest token is useless for this and every later step.
+    pub fn append(
+        &mut self,
+        sid: SessionId,
+        kv_head: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+        live: &dyn Fn(SessionId, u64) -> bool,
+    ) -> Admit {
+        let Some(i) = self.find(sid, kv_head) else {
+            return Admit::Rejected;
+        };
+        assert_eq!(k_row.len(), self.streams[i].d, "append row must be (1, d)");
+        assert_eq!(k_row.len(), v_row.len());
+        let needs_page = self.streams[i].len % self.cfg.page_size == 0;
+        let evicted = if needs_page {
+            match self.make_room(1, Some((sid, kv_head)), live) {
+                Ok(e) => e,
+                Err(()) => {
+                    self.remove(sid, kv_head);
+                    self.stats.rejected += 1;
+                    return Admit::Rejected;
+                }
+            }
+        } else {
+            Vec::new()
+        };
+        // Re-find: make_room may have swap-removed around our index.
+        // (It never touches the protected stream itself, but stay
+        // graceful — a worker thread must not die on a cache panic.)
+        let page_cap = self.cfg.page_size * k_row.len();
+        let Some(i) = self.find(sid, kv_head) else {
+            self.stats.rejected += 1;
+            return Admit::Rejected;
+        };
+        if needs_page {
+            self.streams[i].pages.push(Page {
+                k: Vec::with_capacity(page_cap),
+                v: Vec::with_capacity(page_cap),
+            });
+            self.used_pages += 1;
+        }
+        let page = self.streams[i].pages.last_mut().expect("stream has a page");
+        page.k.extend_from_slice(k_row);
+        page.v.extend_from_slice(v_row);
+        self.streams[i].len += 1;
+        self.clock += 1;
+        self.streams[i].last_used = self.clock;
+        self.stats.appends += 1;
+        Admit::Cached { evicted }
+    }
+
+    /// Copy a stream's pages into contiguous `(len, d)` K and V
+    /// matrices — the model of the device streaming its pages through
+    /// the array (the `O(len · d)` bytes `fsa_decode_perf` charges).
+    pub fn gather(&self, sid: SessionId, kv_head: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        let i = self.find(sid, kv_head)?;
+        let s = &self.streams[i];
+        let mut k = Vec::with_capacity(s.len * s.d);
+        let mut v = Vec::with_capacity(s.len * s.d);
+        for p in &s.pages {
+            k.extend_from_slice(&p.k);
+            v.extend_from_slice(&p.v);
+        }
+        Some((k, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(pages: usize, page_size: usize, policy: EvictionPolicy) -> KvCache {
+        KvCache::new(KvCacheConfig { pages, page_size, policy })
+    }
+
+    fn rows(len: usize, d: usize, base: f32) -> Vec<f32> {
+        (0..len * d).map(|x| base + x as f32).collect()
+    }
+
+    fn all_live(_: SessionId, _: u64) -> bool {
+        true
+    }
+    const LIVE: &fn(SessionId, u64) -> bool = &(all_live as fn(SessionId, u64) -> bool);
+
+    #[test]
+    fn insert_append_gather_round_trip() {
+        let d = 4;
+        let mut c = cache(8, 2, EvictionPolicy::Lru);
+        let (k, v) = (rows(3, d, 0.0), rows(3, d, 100.0));
+        assert_eq!(c.insert(1, 0, 1, d, &k, &v, LIVE), Admit::Cached { evicted: vec![] });
+        assert_eq!(c.cached_len(1, 0), Some(3));
+        assert_eq!(c.used_pages(), 2); // ceil(3/2)
+
+        // Append fills the half-full page, then allocates a new one.
+        assert_eq!(c.append(1, 0, &rows(1, d, 50.0), &rows(1, d, 60.0), LIVE), Admit::Cached { evicted: vec![] });
+        assert_eq!(c.used_pages(), 2);
+        assert_eq!(c.append(1, 0, &rows(1, d, 70.0), &rows(1, d, 80.0), LIVE), Admit::Cached { evicted: vec![] });
+        assert_eq!(c.used_pages(), 3);
+        assert_eq!(c.cached_len(1, 0), Some(5));
+
+        let (gk, gv) = c.gather(1, 0).unwrap();
+        assert_eq!(gk.len(), 5 * d);
+        assert_eq!(&gk[..3 * d], &k[..]);
+        assert_eq!(&gk[3 * d..4 * d], &rows(1, d, 50.0)[..]);
+        assert_eq!(&gk[4 * d..], &rows(1, d, 70.0)[..]);
+        assert_eq!(&gv[3 * d..4 * d], &rows(1, d, 60.0)[..]);
+        assert_eq!(c.stats.inserts, 1);
+        assert_eq!(c.stats.appends, 2);
+    }
+
+    #[test]
+    fn lru_evicts_coldest_stream_and_reports_keys() {
+        let d = 2;
+        let mut c = cache(4, 1, EvictionPolicy::Lru);
+        assert!(matches!(c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE), Admit::Cached { .. }));
+        assert!(matches!(c.insert(2, 0, 2, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE), Admit::Cached { .. }));
+        assert_eq!(c.used_pages(), 4);
+        // Touch stream 1 so stream 2 is LRU.
+        let _ = c.cached_len(1, 0);
+        match c.insert(3, 0, 3, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE) {
+            Admit::Cached { evicted } => assert_eq!(evicted, vec![(2, 0)]),
+            r => panic!("expected eviction, got {r:?}"),
+        }
+        assert!(c.cached_len(2, 0).is_none());
+        assert_eq!(c.cached_len(1, 0), Some(2));
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn append_never_evicts_its_own_stream() {
+        let d = 2;
+        let mut c = cache(2, 1, EvictionPolicy::Lru);
+        assert!(matches!(c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE), Admit::Cached { .. }));
+        // Growing the only stream beyond capacity must reject (and drop
+        // the stale stream), not evict-then-grow itself.
+        assert_eq!(c.append(1, 0, &rows(1, d, 9.0), &rows(1, d, 9.0), LIVE), Admit::Rejected);
+        assert!(c.cached_len(1, 0).is_none());
+        assert_eq!(c.used_pages(), 0);
+        assert_eq!(c.stats.rejected, 1);
+    }
+
+    #[test]
+    fn policy_none_rejects_instead_of_evicting() {
+        let d = 2;
+        let mut c = cache(2, 1, EvictionPolicy::None);
+        assert!(matches!(c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE), Admit::Cached { .. }));
+        assert_eq!(c.insert(2, 0, 2, d, &rows(1, d, 0.0), &rows(1, d, 0.0), LIVE), Admit::Rejected);
+        // The resident stream is untouched.
+        assert_eq!(c.cached_len(1, 0), Some(2));
+        assert_eq!(c.stats.evictions, 0);
+    }
+
+    #[test]
+    fn oversized_stream_is_uncacheable() {
+        let d = 2;
+        let mut c = cache(2, 1, EvictionPolicy::Lru);
+        assert_eq!(c.insert(1, 0, 1, d, &rows(3, d, 0.0), &rows(3, d, 0.0), LIVE), Admit::Rejected);
+        assert_eq!(c.used_pages(), 0);
+    }
+
+    #[test]
+    fn closed_sessions_are_reaped_before_live_evictions() {
+        let d = 2;
+        let mut c = cache(4, 1, EvictionPolicy::Lru);
+        assert!(matches!(c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE), Admit::Cached { .. }));
+        assert!(matches!(c.insert(2, 0, 2, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE), Admit::Cached { .. }));
+        // Session 1 is closed: its pages are reclaimed, session 2 keeps its.
+        let live = |sid: SessionId, _: u64| sid != 1;
+        match c.insert(3, 0, 3, d, &rows(2, d, 0.0), &rows(2, d, 0.0), &live) {
+            Admit::Cached { evicted } => assert!(evicted.is_empty(), "reap, not evict: {evicted:?}"),
+            r => panic!("{r:?}"),
+        }
+        assert_eq!(c.stats.reaped, 1);
+        assert_eq!(c.stats.evictions, 0);
+        assert_eq!(c.cached_len(2, 0), Some(2));
+        assert!(c.cached_len(1, 0).is_none());
+    }
+
+    #[test]
+    fn append_survives_its_session_closing_mid_flight() {
+        // The session was closed between admit and execution, and the
+        // append needs a page under full capacity: the reap pass must
+        // not take the protected (now-dead) stream out from under the
+        // append — no panic, and the grown stream still serves this
+        // in-flight step.
+        let d = 2;
+        let mut c = cache(3, 1, EvictionPolicy::Lru);
+        c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE);
+        let dead = |_: SessionId, _: u64| false;
+        match c.append(1, 0, &rows(1, d, 9.0), &rows(1, d, 9.0), &dead) {
+            Admit::Cached { evicted } => assert!(evicted.is_empty()),
+            r => panic!("append must survive a dead session: {r:?}"),
+        }
+        assert_eq!(c.cached_len(1, 0), Some(3));
+        // The dead stream is reaped on the next allocation pressure.
+        c.insert(2, 0, 2, d, &rows(2, d, 0.0), &rows(2, d, 0.0), &dead);
+        assert!(c.cached_len(1, 0).is_none());
+        assert!(c.stats.reaped >= 1);
+    }
+
+    #[test]
+    fn stale_epoch_streams_are_reaped_like_closed_sessions() {
+        let d = 2;
+        let mut c = cache(4, 1, EvictionPolicy::Lru);
+        c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE);
+        c.insert(2, 0, 2, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE);
+        // Session 1 was closed and its id reused under epoch 7: the
+        // epoch-1 stream is dead even though the id is live.
+        let live = |sid: SessionId, epoch: u64| match sid {
+            1 => epoch == 7,
+            _ => true,
+        };
+        match c.insert(3, 0, 3, d, &rows(2, d, 0.0), &rows(2, d, 0.0), &live) {
+            Admit::Cached { evicted } => assert!(evicted.is_empty(), "reap, not evict"),
+            r => panic!("{r:?}"),
+        }
+        assert!(c.cached_state(1, 0).is_none());
+        assert_eq!(c.cached_state(2, 0), Some((2, 2)));
+    }
+
+    #[test]
+    fn cached_state_exposes_the_stream_epoch() {
+        let d = 2;
+        let mut c = cache(8, 2, EvictionPolicy::Lru);
+        c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE);
+        assert_eq!(c.cached_state(1, 0), Some((2, 1)));
+        // A reused session id re-inserts under a fresh epoch; the old
+        // stream is replaced, not appended to.
+        c.insert(1, 0, 9, d, &rows(3, d, 5.0), &rows(3, d, 5.0), LIVE);
+        assert_eq!(c.cached_state(1, 0), Some((3, 9)));
+        assert_eq!(c.stream_count(), 1);
+        let (k, _) = c.gather(1, 0).unwrap();
+        assert_eq!(k, rows(3, d, 5.0));
+    }
+
+    #[test]
+    fn per_kv_head_streams_are_independent() {
+        let d = 2;
+        let mut c = cache(8, 2, EvictionPolicy::Lru);
+        c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE);
+        c.insert(1, 1, 1, d, &rows(4, d, 9.0), &rows(4, d, 9.0), LIVE);
+        assert_eq!(c.cached_len(1, 0), Some(2));
+        assert_eq!(c.cached_len(1, 1), Some(4));
+        assert_eq!(c.stream_count(), 2);
+        assert!(c.remove(1, 0));
+        assert_eq!(c.stream_count(), 1);
+        assert_eq!(c.used_pages(), 2);
+    }
+}

@@ -33,6 +33,19 @@ pub struct Metrics {
     /// equals `device_cycles` once all gathers have completed (asserted
     /// by the coordinator tests).
     pub shard_cycles: AtomicU64,
+    /// Sessions opened by prefill (decode-phase serving, DESIGN.md §5).
+    pub sessions_opened: AtomicUsize,
+    /// Sessions retired by close.
+    pub sessions_closed: AtomicUsize,
+    /// Decode steps admitted (one per validated decode request).
+    pub decode_steps: AtomicUsize,
+    /// Decode shards served from KV-cache pages.
+    pub kv_hits: AtomicU64,
+    /// Decode shards that took the recompute fallback.
+    pub kv_misses: AtomicU64,
+    /// Live KV streams evicted from device caches under capacity
+    /// pressure.
+    pub kv_evictions: AtomicU64,
     /// Host latencies in ns (bounded reservoir).
     latencies_ns: Mutex<Vec<u64>>,
 }
@@ -64,14 +77,20 @@ impl Metrics {
         }
     }
 
-    /// (p50, p95, max) host latency.
+    /// (p50, p95, max) host latency, nearest-rank selection: percentile
+    /// `p` of `n` samples is the `ceil(p·n)`-th smallest.  (The old
+    /// `((n-1)·p) as usize` truncation biased p95 low on small
+    /// reservoirs — e.g. the 9th of 10 samples instead of the 10th.)
     pub fn latency_percentiles(&self) -> (Duration, Duration, Duration) {
         let mut l = super::lock(&self.latencies_ns).clone();
         if l.is_empty() {
             return (Duration::ZERO, Duration::ZERO, Duration::ZERO);
         }
         l.sort_unstable();
-        let pick = |p: f64| Duration::from_nanos(l[((l.len() - 1) as f64 * p) as usize]);
+        let pick = |p: f64| {
+            let rank = ((p * l.len() as f64).ceil() as usize).clamp(1, l.len());
+            Duration::from_nanos(l[rank - 1])
+        };
         (pick(0.5), pick(0.95), pick(1.0))
     }
 
@@ -80,7 +99,8 @@ impl Metrics {
         let (p50, p95, max) = self.latency_percentiles();
         format!(
             "submitted {} completed {} failed {} batches {} head_shards {} \
-             multi_head {} device_cycles {} latency p50 {:?} p95 {:?} max {:?}",
+             multi_head {} device_cycles {} sessions {}/{} decode_steps {} \
+             kv hit/miss/evict {}/{}/{} latency p50 {:?} p95 {:?} max {:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -88,6 +108,12 @@ impl Metrics {
             self.head_shards.load(Ordering::Relaxed),
             self.multi_head_requests.load(Ordering::Relaxed),
             self.device_cycles.load(Ordering::Relaxed),
+            self.sessions_opened.load(Ordering::Relaxed),
+            self.sessions_closed.load(Ordering::Relaxed),
+            self.decode_steps.load(Ordering::Relaxed),
+            self.kv_hits.load(Ordering::Relaxed),
+            self.kv_misses.load(Ordering::Relaxed),
+            self.kv_evictions.load(Ordering::Relaxed),
             p50,
             p95,
             max,
@@ -114,6 +140,8 @@ mod tests {
             device_id: 0,
             devices_used: vec![0],
             bucket: 128,
+            kv_hits: 0,
+            kv_misses: 0,
         }
     }
 
@@ -150,5 +178,42 @@ mod tests {
     fn empty_percentiles_are_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_percentiles().0, Duration::ZERO);
+    }
+
+    /// Satellite: nearest-rank percentile selection, pinned on a known
+    /// 20-element reservoir (1..=20 ms).  p50 is the 10th smallest,
+    /// p95 the 19th, max the 20th.
+    #[test]
+    fn nearest_rank_percentiles_on_20_element_reservoir() {
+        let m = Metrics::new();
+        for ms in 1..=20u64 {
+            m.record(&resp(ms, 1), true);
+        }
+        let (p50, p95, max) = m.latency_percentiles();
+        assert_eq!(p50, Duration::from_millis(10));
+        assert_eq!(p95, Duration::from_millis(19));
+        assert_eq!(max, Duration::from_millis(20));
+    }
+
+    /// The old `((n-1)·p) as usize` truncation picked the 9th of 10
+    /// samples for p95; nearest rank (`ceil(0.95·10) = 10`) picks the
+    /// 10th.
+    #[test]
+    fn p95_is_not_truncated_low_on_small_reservoirs() {
+        let m = Metrics::new();
+        for ms in 1..=10u64 {
+            m.record(&resp(ms, 1), true);
+        }
+        let (p50, p95, _) = m.latency_percentiles();
+        assert_eq!(p50, Duration::from_millis(5));
+        assert_eq!(p95, Duration::from_millis(10));
+        // Single-sample reservoir: every percentile is that sample.
+        let one = Metrics::new();
+        one.record(&resp(3, 1), true);
+        assert_eq!(one.latency_percentiles(), (
+            Duration::from_millis(3),
+            Duration::from_millis(3),
+            Duration::from_millis(3),
+        ));
     }
 }

@@ -14,15 +14,23 @@
 //! [`metrics`] aggregates throughput/latency at both request and shard
 //! granularity.
 //!
+//! Decode-phase serving (DESIGN.md §5) rides the same path: [`session`]
+//! carries the prefill→decode→close lifecycle and the host-tier K/V,
+//! [`kvcache`] is the per-device paged KV cache the decode steps stream
+//! from, and the router pins a session's KV groups to the device
+//! holding their pages.
+//!
 //! Threads + channels stand in for tokio (offline environment, see
 //! DESIGN.md §substitutions); the structure is identical: bounded ingress
 //! queue, worker pool, per-request completion channels.
 
 pub mod batcher;
 pub mod device;
+pub mod kvcache;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod session;
 pub mod shard;
 
 use std::path::PathBuf;
@@ -31,12 +39,14 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, ensure};
 
-use crate::config::{BackendKind, RunConfig};
+use crate::config::{AccelConfig, BackendKind, RunConfig};
+use crate::runtime::Backend;
 use batcher::Batcher;
 use device::DeviceWorker;
 use metrics::Metrics;
 use request::{AttentionRequest, AttentionResponse};
 use router::Router;
+use session::SessionTable;
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
@@ -44,6 +54,9 @@ pub struct Coordinator {
     batcher_handle: Option<std::thread::JoinHandle<()>>,
     workers: Vec<DeviceWorker>,
     pub metrics: Arc<Metrics>,
+    /// Session registry (decode-phase serving): lifecycle state, the
+    /// host-tier K/V prefixes, and the sticky device placements.
+    pub sessions: Arc<SessionTable>,
 }
 
 impl Coordinator {
@@ -67,26 +80,48 @@ impl Coordinator {
             );
         }
 
+        let sessions = Arc::new(SessionTable::new());
         let mut workers = Vec::with_capacity(cfg.devices);
         for id in 0..cfg.devices {
-            workers.push(DeviceWorker::spawn(
-                id,
-                artifacts.clone(),
-                cfg.backend,
-                metrics.clone(),
-            )?);
+            workers.push(DeviceWorker::spawn(id, &cfg, sessions.clone(), metrics.clone())?);
         }
-        let router = Router::new(workers.iter().map(|w| w.handle()).collect());
+        let router = Router::new(
+            workers.iter().map(|w| w.handle()).collect(),
+            sessions.clone(),
+        );
+
+        // Resolve decode capability once for the pool: PJRT has no
+        // `fsa_decode` artifact kind, and `auto` lands on PJRT exactly
+        // when the manifest is present and the client boots — probe
+        // with the workers' own resolution logic so decode steps are
+        // rejected up front (never consumed) on an incapable pool.
+        let decode_capable = match cfg.backend {
+            BackendKind::Reference => true,
+            BackendKind::Pjrt => false,
+            BackendKind::Auto => {
+                let accel = AccelConfig::builtin("fsa")?;
+                Backend::new(BackendKind::Auto, &artifacts, &accel)
+                    .map(|b| b.name() == "reference")
+                    .unwrap_or(true)
+            }
+        };
 
         let (ingress, ingress_rx) = mpsc::sync_channel(cfg.queue_depth);
-        let batcher = Batcher::new(cfg.max_batch, cfg.batch_timeout_cycles);
+        let batcher = Batcher::new(cfg.max_batch, cfg.batch_timeout_cycles, decode_capable);
         let m2 = metrics.clone();
+        let s2 = sessions.clone();
         let batcher_handle = std::thread::Builder::new()
             .name("fsa-batcher".into())
-            .spawn(move || batcher.run(ingress_rx, router, m2))
+            .spawn(move || batcher.run(ingress_rx, router, m2, s2))
             .expect("spawning batcher");
 
-        Ok(Coordinator { ingress, batcher_handle: Some(batcher_handle), workers, metrics })
+        Ok(Coordinator {
+            ingress,
+            batcher_handle: Some(batcher_handle),
+            workers,
+            metrics,
+            sessions,
+        })
     }
 
     /// Submit a request (single-head or multi-head/GQA); the gathered

@@ -12,7 +12,9 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::schedule::attention_flops;
+use crate::schedule::{attention_flops, decode_attention_flops};
+
+use super::session::{SessionId, SessionOp};
 
 /// One attention operator: row-major per-head `(seq_len, d)` matrices.
 ///
@@ -35,6 +37,17 @@ pub struct AttentionRequest {
     pub q: Vec<f32>,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
+    /// Session lifecycle op (decode-phase serving, DESIGN.md §5).
+    /// `Stateless` for ordinary one-shot operators.
+    pub op: SessionOp,
+    /// Decode only: the prefix length (tokens attended over, including
+    /// this step's appended row).  Stamped by the batcher after session
+    /// validation; 0 elsewhere.
+    pub prefix_len: usize,
+    /// Prefill/decode only: the session's incarnation epoch (ids may be
+    /// reused after close; device caches match streams on it).  Stamped
+    /// by the batcher after session validation; 0 elsewhere.
+    pub epoch: u64,
 }
 
 impl AttentionRequest {
@@ -47,6 +60,7 @@ impl AttentionRequest {
     /// Multi-head / grouped-query request.  Panics on shape mismatch
     /// (requests are constructed by trusted in-process callers; the
     /// serving path proper returns errors, it never panics).
+    #[allow(clippy::too_many_arguments)]
     pub fn gqa(
         id: u64,
         seq_len: usize,
@@ -67,7 +81,78 @@ impl AttentionRequest {
         assert_eq!(q.len(), num_heads * seq_len * d, "Q shape mismatch");
         assert_eq!(k.len(), num_kv_heads * seq_len * d, "K shape mismatch");
         assert_eq!(v.len(), num_kv_heads * seq_len * d, "V shape mismatch");
-        AttentionRequest { id, seq_len, d, num_heads, num_kv_heads, q, k, v }
+        AttentionRequest {
+            id,
+            seq_len,
+            d,
+            num_heads,
+            num_kv_heads,
+            q,
+            k,
+            v,
+            op: SessionOp::Stateless,
+            prefix_len: 0,
+            epoch: 0,
+        }
+    }
+
+    /// Open a decode session: full-prefix attention whose K/V the
+    /// coordinator retains (host tier) and the serving device caches.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill(
+        id: u64,
+        session: SessionId,
+        seq_len: usize,
+        d: usize,
+        num_heads: usize,
+        num_kv_heads: usize,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Self {
+        let mut r = Self::gqa(id, seq_len, d, num_heads, num_kv_heads, q, k, v);
+        r.op = SessionOp::Prefill { session };
+        r
+    }
+
+    /// One decode step of an open session: one query row per head
+    /// (`q: (num_heads, 1, d)`) and the new token's K/V row per KV head
+    /// (`k, v: (num_kv_heads, 1, d)`).  Steps must be submitted in
+    /// order, starting at 0 after the prefill.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode(
+        id: u64,
+        session: SessionId,
+        step: u64,
+        d: usize,
+        num_heads: usize,
+        num_kv_heads: usize,
+        q_rows: Vec<f32>,
+        k_row: Vec<f32>,
+        v_row: Vec<f32>,
+    ) -> Self {
+        let mut r = Self::gqa(id, 1, d, num_heads, num_kv_heads, q_rows, k_row, v_row);
+        r.op = SessionOp::Decode { session, step };
+        r
+    }
+
+    /// Retire a session (frees host-tier K/V; device pages become
+    /// reapable).  Carries no tensors; answered with an empty-output
+    /// success response.
+    pub fn close(id: u64, session: SessionId) -> Self {
+        AttentionRequest {
+            id,
+            seq_len: 0,
+            d: 0,
+            num_heads: 1,
+            num_kv_heads: 1,
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            op: SessionOp::Close { session },
+            prefix_len: 0,
+            epoch: 0,
+        }
     }
 
     /// Query heads per KV head (the GQA group size; 1 for MHA).
@@ -98,9 +183,17 @@ impl AttentionRequest {
     }
 
     /// Whole-operator FLOPs: every query head runs full `4 L² d`
-    /// attention (KV sharing changes memory traffic, not FLOPs).
+    /// attention (KV sharing changes memory traffic, not FLOPs).  For a
+    /// decode step the per-head work is one query row over the whole
+    /// prefix, `4 L d` with `L = prefix_len`.
     pub fn flops(&self) -> u64 {
-        self.num_heads as u64 * attention_flops(self.seq_len, self.d)
+        match self.op {
+            SessionOp::Decode { .. } => {
+                self.num_heads as u64
+                    * decode_attention_flops(self.prefix_len.max(self.seq_len), self.d)
+            }
+            _ => self.num_heads as u64 * attention_flops(self.seq_len, self.d),
+        }
     }
 
     /// Zero-pad every head's Q/K/V to a bucketed sequence length.
@@ -136,6 +229,9 @@ impl AttentionRequest {
             q: pad(&self.q, self.num_heads),
             k: pad(&self.k, self.num_kv_heads),
             v: pad(&self.v, self.num_kv_heads),
+            op: self.op,
+            prefix_len: self.prefix_len,
+            epoch: self.epoch,
         }
     }
 }
@@ -175,6 +271,10 @@ pub struct AttentionResponse {
     pub devices_used: Vec<usize>,
     /// Padded bucket used.
     pub bucket: usize,
+    /// Decode shards served from device KV-cache pages.
+    pub kv_hits: usize,
+    /// Decode shards that took the cache-miss recompute fallback.
+    pub kv_misses: usize,
 }
 
 /// Internal envelope: request + reply channel + enqueue timestamp.
@@ -233,6 +333,33 @@ mod tests {
         assert_eq!(k1, &kv[6..12]);
         assert_eq!(v1, k1);
         assert_eq!(r.flops(), 8 * 4 * (seq as u64) * (seq as u64) * d as u64);
+    }
+
+    #[test]
+    fn session_ops_and_decode_flops() {
+        let d = 4;
+        let p = AttentionRequest::prefill(
+            1, 77, 2, d, 2, 1,
+            vec![0.0; 2 * 2 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
+        );
+        assert_eq!(p.op, SessionOp::Prefill { session: 77 });
+        assert_eq!(p.flops(), 2 * attention_flops(2, d));
+
+        let mut dec = AttentionRequest::decode(
+            2, 77, 0, d, 2, 1,
+            vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
+        );
+        assert_eq!(dec.op, SessionOp::Decode { session: 77, step: 0 });
+        assert_eq!(dec.seq_len, 1);
+        // Before the batcher stamps the prefix, flops fall back to the
+        // one-token shape; after stamping they cover the prefix.
+        assert_eq!(dec.flops(), 2 * decode_attention_flops(1, d));
+        dec.prefix_len = 3;
+        assert_eq!(dec.flops(), 2 * decode_attention_flops(3, d));
+
+        let c = AttentionRequest::close(3, 77);
+        assert_eq!(c.op, SessionOp::Close { session: 77 });
+        assert_eq!(c.flops(), 0);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Shard router over the device worker pool: least-loaded placement
-//! with KV-head affinity.
+//! with KV-head affinity, sticky for sessions.
 //!
 //! The routing unit is the per-head [`ShardEnvelope`].  Within one
 //! dispatched batch, shards are partitioned by their GQA affinity key
@@ -8,12 +8,21 @@
 //! partition independently goes to the least-loaded worker
 //! (round-robin among ties).  A multi-head request therefore fans out
 //! across the pool (scatter) while each KV group stays device-local.
+//!
+//! Session groups (prefill/decode, DESIGN.md §5) add stickiness on
+//! top: the first placement of a `(session, kv_head)` group is pinned
+//! in the [`SessionTable`] and every later decode step follows the pin
+//! to the device holding the cached pages.  The pin is dropped when
+//! that device evicts the stream (the worker clears it) or dies (the
+//! router invalidates every pin onto the dead device — its pages are
+//! gone, so the surviving device recomputes and re-caches).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use super::shard::ShardEnvelope;
+use super::session::{SessionId, SessionTable};
+use super::shard::{ShardCtx, ShardEnvelope};
 
 /// A batch of shards handed to one device worker.
 pub type Batch = Vec<ShardEnvelope>;
@@ -31,17 +40,18 @@ pub struct Router {
     workers: Vec<WorkerHandle>,
     /// Round-robin tiebreaker so equal-load workers share traffic.
     rr: AtomicUsize,
+    sessions: Arc<SessionTable>,
 }
 
 impl Router {
-    pub fn new(workers: Vec<WorkerHandle>) -> Router {
+    pub fn new(workers: Vec<WorkerHandle>, sessions: Arc<SessionTable>) -> Router {
         assert!(!workers.is_empty());
-        Router { workers, rr: AtomicUsize::new(0) }
+        Router { workers, rr: AtomicUsize::new(0), sessions }
     }
 
     /// Scatter a batch: partition by KV affinity, then send each
-    /// partition to the least-loaded worker.  Order within a partition
-    /// is preserved.
+    /// partition to its pinned device (session groups) or the
+    /// least-loaded worker.  Order within a partition is preserved.
     pub fn dispatch(&self, batch: Batch) {
         if batch.is_empty() {
             return;
@@ -51,12 +61,36 @@ impl Router {
         }
     }
 
-    /// Pick the least-loaded worker (round-robin among ties) and
-    /// enqueue one affinity group.  Shards for a dead worker are
-    /// bounced to the next-best one; if all workers are gone the
-    /// shards' gather cells drop, which callers observe as a
-    /// disconnected response channel.
+    /// Route one affinity group: follow the session pin when present
+    /// and alive, otherwise pick the least-loaded worker (round-robin
+    /// among ties) and record the pin for session groups.  Shards for
+    /// a dead worker are bounced to the next-best one (its session
+    /// pins are invalidated — the pages died with it); if all workers
+    /// are gone the shards' gather cells drop, which callers observe
+    /// as a disconnected response channel.
     fn dispatch_group(&self, group: Batch) {
+        let skey = session_key(&group);
+        let mut group = group;
+        if let Some((sid, kv_head)) = skey {
+            if let Some(dev) = self.sessions.placement(sid, kv_head) {
+                match self.workers.iter().find(|w| w.id == dev) {
+                    Some(w) => {
+                        w.load.fetch_add(group.len(), Ordering::Relaxed);
+                        match w.queue.send(group) {
+                            Ok(()) => return,
+                            Err(mpsc::SendError(g)) => {
+                                // Dead worker: its cached pages are
+                                // unreachable — drop every pin onto it.
+                                w.load.fetch_sub(g.len(), Ordering::Relaxed);
+                                self.sessions.invalidate_device(dev);
+                                group = g;
+                            }
+                        }
+                    }
+                    None => self.sessions.invalidate_device(dev),
+                }
+            }
+        }
         let start = self.rr.fetch_add(1, Ordering::Relaxed);
         let mut order: Vec<usize> = (0..self.workers.len()).collect();
         order.sort_by_key(|&i| {
@@ -65,12 +99,16 @@ impl Router {
                 (i + self.workers.len() - start % self.workers.len()) % self.workers.len(),
             )
         });
-        let mut group = group;
         for &i in &order {
             let w = &self.workers[i];
             w.load.fetch_add(group.len(), Ordering::Relaxed);
             match w.queue.send(group) {
-                Ok(()) => return,
+                Ok(()) => {
+                    if let Some((sid, kv_head)) = skey {
+                        self.sessions.place(sid, kv_head, w.id);
+                    }
+                    return;
+                }
                 Err(mpsc::SendError(g)) => {
                     // Worker died: undo the gauge and try the next one.
                     w.load.fetch_sub(g.len(), Ordering::Relaxed);
@@ -84,6 +122,18 @@ impl Router {
     pub fn worker_count(&self) -> usize {
         self.workers.len()
     }
+}
+
+/// Sticky-placement key of a group: present for prefill/decode shards
+/// (all shards of a group share one ctx and one kv_head by
+/// construction).
+fn session_key(group: &Batch) -> Option<(SessionId, usize)> {
+    group.first().and_then(|e| match e.ctx {
+        ShardCtx::Prefill { session, .. } | ShardCtx::Decode { session, .. } => {
+            Some((session, e.shard.kv_head))
+        }
+        ShardCtx::Stateless => None,
+    })
 }
 
 /// Split a batch into contiguous groups of equal affinity key,
@@ -104,8 +154,13 @@ fn partition_by_affinity(batch: Batch) -> Vec<Batch> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::AccelConfig;
     use crate::coordinator::request::{AttentionRequest, Envelope};
-    use crate::coordinator::shard::explode;
+    use crate::coordinator::shard::{explode, CacheOutcome, ShardResult};
+
+    fn table() -> Arc<SessionTable> {
+        Arc::new(SessionTable::new())
+    }
 
     /// Shards of a GQA request: `heads` query heads over `kv` KV heads.
     fn shards(id: u64, heads: usize, kv: usize) -> Vec<ShardEnvelope> {
@@ -129,7 +184,7 @@ mod tests {
         let (h0, rx0) = handle(0);
         let (h1, rx1) = handle(1);
         h0.load.store(10, Ordering::Relaxed);
-        let r = Router::new(vec![h0, h1.clone()]);
+        let r = Router::new(vec![h0, h1.clone()], table());
         r.dispatch(shards(1, 2, 2).into_iter().take(1).collect());
         assert_eq!(rx1.try_recv().unwrap().len(), 1);
         assert!(rx0.try_recv().is_err());
@@ -140,7 +195,7 @@ mod tests {
     fn gqa_heads_scatter_but_kv_groups_stay_together() {
         let (h0, rx0) = handle(0);
         let (h1, rx1) = handle(1);
-        let r = Router::new(vec![h0.clone(), h1.clone()]);
+        let r = Router::new(vec![h0.clone(), h1.clone()], table());
         // 8 query heads / 2 KV heads => two affinity groups of 4.
         r.dispatch(shards(9, 8, 2));
         let b0 = rx0.try_recv().expect("device 0 gets one KV group");
@@ -163,7 +218,7 @@ mod tests {
         let (h0, rx0) = handle(0);
         let (h1, rx1) = handle(1);
         drop(rx0); // worker 0 is gone
-        let r = Router::new(vec![h0.clone(), h1]);
+        let r = Router::new(vec![h0.clone(), h1], table());
         r.dispatch(shards(7, 1, 1));
         assert_eq!(rx1.try_recv().unwrap()[0].shard.req.id, 7);
         // Gauge on the dead worker was rolled back.
@@ -174,7 +229,123 @@ mod tests {
     fn all_dead_drops_batch_without_panic() {
         let (h0, rx0) = handle(0);
         drop(rx0);
-        let r = Router::new(vec![h0]);
+        let r = Router::new(vec![h0], table());
         r.dispatch(shards(1, 1, 1));
+    }
+
+    #[test]
+    fn session_groups_follow_the_pin() {
+        let sessions = table();
+        let (h0, rx0) = handle(0);
+        let (h1, rx1) = handle(1);
+        // Worker 1 is busier, but the session is pinned there.
+        h1.load.store(10, Ordering::Relaxed);
+        let r = Router::new(vec![h0, h1], sessions.clone());
+        let d = 4;
+        sessions
+            .open(
+                5,
+                &AttentionRequest::prefill(
+                    1, 5, 2, d, 2, 1,
+                    vec![0.0; 2 * 2 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
+                ),
+            )
+            .unwrap();
+        sessions.place(5, 0, 1);
+        let mut req = AttentionRequest::decode(
+            2, 5, 0, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
+        );
+        req.prefix_len = 3;
+        let envs = explode(Envelope {
+            req,
+            reply: mpsc::channel().0,
+            enqueued: std::time::Instant::now(),
+        });
+        r.dispatch(envs);
+        assert_eq!(rx1.try_recv().unwrap().len(), 2, "pin beats least-loaded");
+        assert!(rx0.try_recv().is_err());
+    }
+
+    /// Satellite: dead-worker failover under GQA affinity.  A worker
+    /// holding a pinned KV group dies mid-stream; the re-dispatched
+    /// group must land whole on one surviving device, the dead
+    /// device's pins must be invalidated, and the gathered response
+    /// must complete exactly once.
+    #[test]
+    fn dead_worker_failover_lands_group_whole_and_completes_once() {
+        let sessions = table();
+        let (h0, rx0) = handle(0);
+        let (h1, rx1) = handle(1);
+        let (h2, rx2) = handle(2);
+        let r = Router::new(vec![h0, h1, h2], sessions.clone());
+
+        // Open a GQA session: 4 query heads over 2 KV heads; both KV
+        // groups are pinned on worker 0 from a previous step.
+        let d = 4;
+        sessions
+            .open(
+                9,
+                &AttentionRequest::prefill(
+                    1, 9, 2, d, 4, 2,
+                    vec![0.0; 4 * 2 * d], vec![0.0; 2 * 2 * d], vec![0.0; 2 * 2 * d],
+                ),
+            )
+            .unwrap();
+        sessions.place(9, 0, 0);
+        sessions.place(9, 1, 0);
+
+        // Worker 0 dies mid-stream.
+        drop(rx0);
+
+        let mut req = AttentionRequest::decode(
+            2, 9, 0, d, 4, 2,
+            vec![0.0; 4 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
+        );
+        req.prefix_len = 3;
+        let (tx, resp_rx) = mpsc::channel();
+        let envs = explode(Envelope { req, reply: tx, enqueued: std::time::Instant::now() });
+        r.dispatch(envs);
+
+        // Each KV group was re-dispatched whole to one surviving device.
+        let mut delivered = Vec::new();
+        for rx in [&rx1, &rx2] {
+            while let Ok(batch) = rx.try_recv() {
+                let kv = batch[0].shard.kv_head;
+                assert!(
+                    batch.iter().all(|s| s.shard.kv_head == kv),
+                    "KV group split across devices"
+                );
+                assert_eq!(batch.len(), 2, "whole group of 2 query heads");
+                delivered.push(batch);
+            }
+        }
+        assert_eq!(delivered.len(), 2, "both KV groups re-dispatched");
+        // Pins moved off the dead device onto live ones.
+        for kv in 0..2 {
+            let pin = sessions.placement(9, kv).expect("re-pinned");
+            assert_ne!(pin, 0, "pin must leave the dead device");
+        }
+
+        // Complete every shard; the gathered response arrives exactly once.
+        let cfg = AccelConfig::builtin("fsa").unwrap();
+        for batch in delivered {
+            for env in batch {
+                let head = env.shard.head;
+                env.gather.complete(
+                    ShardResult {
+                        head,
+                        device_id: 1,
+                        cycles: 10,
+                        output: Ok(vec![0.0; d]),
+                        cache: CacheOutcome::Hit,
+                    },
+                    &cfg,
+                );
+            }
+        }
+        let resp = resp_rx.try_recv().expect("gather completes");
+        assert_eq!(resp.shards, 4);
+        assert_eq!(resp.kv_hits, 4);
+        assert!(resp_rx.try_recv().is_err(), "answered exactly once");
     }
 }

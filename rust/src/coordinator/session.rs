@@ -1,0 +1,405 @@
+//! Session lifecycle for decode-phase serving (DESIGN.md §5).
+//!
+//! A *session* is one autoregressive generation stream: a client opens
+//! it with a full-prefix [`SessionOp::Prefill`] operator, advances it
+//! one token at a time with [`SessionOp::Decode`] steps (single query
+//! row per head, one appended K/V row per KV head), and retires it with
+//! [`SessionOp::Close`].  The op rides on
+//! [`AttentionRequest`](super::request::AttentionRequest), so the whole
+//! existing scatter/gather path (per-head shards, affinity router,
+//! device pool) serves sessions without a second ingress.
+//!
+//! The [`SessionTable`] is the coordinator-global source of truth:
+//!
+//! * **lifecycle** — prefill registers a session, decode steps must
+//!   arrive in order (`step == next_step`), close retires it; every
+//!   violation is answered with an error response, never a panic;
+//! * **host tier** — the authoritative per-KV-head K/V prefix.  Device
+//!   workers hold the *cached* tier (paged HBM model,
+//!   [`super::kvcache`]); on a cache miss they fall back to this copy,
+//!   which models the upstream model re-running its forward pass to
+//!   regenerate K/V (charged as a full recompute by
+//!   [`crate::perfmodel::fsa_decode_perf`]);
+//! * **placement** — the sticky `(session, kv_head) → device` pin the
+//!   router consults so a session's decode steps keep landing on the
+//!   device that holds its pages.  Pins are cleared when a device
+//!   evicts the stream (eviction-aware re-placement) and when a worker
+//!   dies (dead-worker cache invalidation).
+//!
+//! Lock discipline: one mutex over the table, held only for short
+//! non-blocking critical sections (no channel sends, no numerics while
+//! locked).  Prefix clones on the miss path copy `O(len · d)` floats
+//! under the lock; at serving shapes this is far below the recompute
+//! work the miss itself implies.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::request::AttentionRequest;
+
+/// Session identifier, chosen by the client (must be unique among live
+/// sessions; reuse after close is allowed).
+pub type SessionId = u64;
+
+/// Lifecycle operation carried on an `AttentionRequest`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionOp {
+    /// One-shot whole operator, no session state — the pre-session
+    /// behavior and the default.
+    Stateless,
+    /// Open `session` with this request's full `(L, d)` prefix; the
+    /// response is ordinary full-prefix attention and the K/V prefix is
+    /// retained for decode.
+    Prefill { session: SessionId },
+    /// One decode step: the request carries one query row per head and
+    /// one new K/V row per KV head (`seq_len == 1`); attention runs
+    /// over the whole retained prefix *including* the appended row.
+    /// Steps must arrive strictly in order, starting at 0.  A step
+    /// that passes validation is *consumed* (at-most-once): the K/V
+    /// row is appended and the step counter advances before dispatch,
+    /// so a failure after admission surfaces in the response but the
+    /// step cannot be resubmitted — abandon the session on such
+    /// errors.  (Foreseeable failures are rejected *before* admission:
+    /// shape/order violations here, missing decode backend support in
+    /// the batcher.)
+    Decode { session: SessionId, step: u64 },
+    /// Retire the session: host-tier K/V is dropped immediately and
+    /// device pages become reapable.  Answered directly by the batcher
+    /// with an empty-output success response.
+    Close { session: SessionId },
+}
+
+/// One live session (internal representation).
+struct Session {
+    d: usize,
+    num_heads: usize,
+    num_kv_heads: usize,
+    /// Table-unique incarnation stamp (session ids may be reused after
+    /// close; the epoch tells a device cache whether a resident stream
+    /// belongs to *this* incarnation or a dead one).
+    epoch: u64,
+    /// Current prefix length in tokens (prefill length + appended
+    /// decode rows).
+    len: usize,
+    /// Next expected decode step.
+    next_step: u64,
+    /// Host-tier K/V, one growing `(len, d)` row-major matrix per KV
+    /// head.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Sticky placement per KV head: the device whose page cache holds
+    /// (or last held) this stream.  `None` = unplaced or invalidated.
+    placement: Vec<Option<usize>>,
+}
+
+/// Coordinator-global session registry shared by the batcher (lifecycle
+/// + host tier), the router (sticky placement) and the device workers
+/// (miss fallback + eviction notifications).
+#[derive(Default)]
+struct Inner {
+    sessions: HashMap<SessionId, Session>,
+    /// Monotonic epoch source (starts at 1 so 0 means "no epoch").
+    next_epoch: u64,
+}
+
+#[derive(Default)]
+pub struct SessionTable {
+    inner: Mutex<Inner>,
+}
+
+impl SessionTable {
+    pub fn new() -> SessionTable {
+        SessionTable::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        super::lock(&self.inner)
+    }
+
+    /// Register `sid` from a prefill request.  Returns the session's
+    /// fresh epoch (stamped onto the request so device caches can tell
+    /// this incarnation's streams from a closed predecessor's).  Errors
+    /// (as a response message, the serving path never panics) when the
+    /// id is already live or the request shape is unusable.
+    pub fn open(&self, sid: SessionId, req: &AttentionRequest) -> Result<u64, String> {
+        if req.seq_len == 0 {
+            return Err(format!("session {sid}: prefill needs a non-empty prefix"));
+        }
+        let mut t = self.lock();
+        if t.sessions.contains_key(&sid) {
+            return Err(format!("session {sid} is already open"));
+        }
+        t.next_epoch += 1;
+        let epoch = t.next_epoch;
+        let mut k = Vec::with_capacity(req.num_kv_heads);
+        let mut v = Vec::with_capacity(req.num_kv_heads);
+        for h in 0..req.num_kv_heads {
+            let (kh, vh) = req.head_kv(h);
+            k.push(kh.to_vec());
+            v.push(vh.to_vec());
+        }
+        t.sessions.insert(
+            sid,
+            Session {
+                d: req.d,
+                num_heads: req.num_heads,
+                num_kv_heads: req.num_kv_heads,
+                epoch,
+                len: req.seq_len,
+                next_step: 0,
+                k,
+                v,
+                placement: vec![None; req.num_kv_heads],
+            },
+        );
+        Ok(epoch)
+    }
+
+    /// Validate a decode request against the session and append its new
+    /// K/V row to the host tier.  Returns `(prefix_len, epoch)`: the
+    /// prefix length this step attends over (previous length + 1) and
+    /// the session's incarnation epoch.  Must be called exactly once
+    /// per step, before the step is dispatched, so in-flight shards
+    /// always find their prefix present.
+    pub fn begin_decode(
+        &self,
+        sid: SessionId,
+        step: u64,
+        req: &AttentionRequest,
+    ) -> Result<(usize, u64), String> {
+        let mut t = self.lock();
+        let s = t
+            .sessions
+            .get_mut(&sid)
+            .ok_or_else(|| format!("session {sid} is not open (decode step {step})"))?;
+        if req.seq_len != 1 {
+            return Err(format!(
+                "session {sid}: decode carries one token, got seq_len {}",
+                req.seq_len
+            ));
+        }
+        if req.d != s.d || req.num_heads != s.num_heads || req.num_kv_heads != s.num_kv_heads {
+            return Err(format!(
+                "session {sid}: decode shape ({} heads/{} kv, d {}) does not match \
+                 the prefilled shape ({} heads/{} kv, d {})",
+                req.num_heads, req.num_kv_heads, req.d, s.num_heads, s.num_kv_heads, s.d
+            ));
+        }
+        if step != s.next_step {
+            return Err(format!(
+                "session {sid}: expected decode step {}, got {step}",
+                s.next_step
+            ));
+        }
+        for h in 0..s.num_kv_heads {
+            let (kh, vh) = req.head_kv(h);
+            s.k[h].extend_from_slice(kh);
+            s.v[h].extend_from_slice(vh);
+        }
+        s.len += 1;
+        s.next_step += 1;
+        Ok((s.len, s.epoch))
+    }
+
+    /// Retire a session.  Returns false when it was not open.
+    pub fn close(&self, sid: SessionId) -> bool {
+        self.lock().sessions.remove(&sid).is_some()
+    }
+
+    pub fn contains(&self, sid: SessionId) -> bool {
+        self.lock().sessions.contains_key(&sid)
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.lock().sessions.len()
+    }
+
+    /// Current prefix length of a live session.
+    pub fn prefix_len(&self, sid: SessionId) -> Option<usize> {
+        self.lock().sessions.get(&sid).map(|s| s.len)
+    }
+
+    /// Current incarnation epoch of a live session (used by device
+    /// caches to tell live streams from dead-incarnation leftovers).
+    pub fn epoch(&self, sid: SessionId) -> Option<u64> {
+        self.lock().sessions.get(&sid).map(|s| s.epoch)
+    }
+
+    /// Clone the first `prefix_len` tokens of one KV head's host-tier
+    /// K/V (the miss-path fallback).  `None` when the session is gone
+    /// (closed mid-flight), the prefix is shorter than requested, or
+    /// `epoch` names a different incarnation — an in-flight shard of a
+    /// closed-and-reopened id must fail its step rather than silently
+    /// read the new incarnation's K/V.
+    pub fn clone_prefix(
+        &self,
+        sid: SessionId,
+        kv_head: usize,
+        prefix_len: usize,
+        epoch: u64,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
+        let t = self.lock();
+        let s = t.sessions.get(&sid)?;
+        if s.epoch != epoch || kv_head >= s.num_kv_heads || s.len < prefix_len {
+            return None;
+        }
+        let n = prefix_len * s.d;
+        Some((s.k[kv_head][..n].to_vec(), s.v[kv_head][..n].to_vec()))
+    }
+
+    /// Sticky placement of one KV group, if any.
+    pub fn placement(&self, sid: SessionId, kv_head: usize) -> Option<usize> {
+        self.lock().sessions.get(&sid)?.placement.get(kv_head).copied().flatten()
+    }
+
+    /// Pin a KV group to `device` (the router just dispatched there).
+    pub fn place(&self, sid: SessionId, kv_head: usize, device: usize) {
+        if let Some(s) = self.lock().sessions.get_mut(&sid) {
+            if let Some(p) = s.placement.get_mut(kv_head) {
+                *p = Some(device);
+            }
+        }
+    }
+
+    /// Clear a pin, but only if it still points at `device` — a worker
+    /// reporting an eviction must not un-pin a stream that has already
+    /// been re-placed elsewhere.
+    pub fn clear_placement(&self, sid: SessionId, kv_head: usize, device: usize) {
+        if let Some(s) = self.lock().sessions.get_mut(&sid) {
+            if let Some(p) = s.placement.get_mut(kv_head) {
+                if *p == Some(device) {
+                    *p = None;
+                }
+            }
+        }
+    }
+
+    /// Drop every pin onto `device` (dead-worker cache invalidation:
+    /// its pages are unreachable, so every pinned stream must re-place
+    /// and recompute).
+    pub fn invalidate_device(&self, device: usize) {
+        for s in self.lock().sessions.values_mut() {
+            for p in s.placement.iter_mut() {
+                if *p == Some(device) {
+                    *p = None;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prefill_req(sid: SessionId, seq: usize, d: usize, heads: usize, kv: usize) -> AttentionRequest {
+        AttentionRequest::prefill(
+            1,
+            sid,
+            seq,
+            d,
+            heads,
+            kv,
+            vec![0.5; heads * seq * d],
+            (0..kv * seq * d).map(|x| x as f32).collect(),
+            (0..kv * seq * d).map(|x| -(x as f32)).collect(),
+        )
+    }
+
+    fn decode_req(sid: SessionId, step: u64, d: usize, heads: usize, kv: usize) -> AttentionRequest {
+        AttentionRequest::decode(
+            2,
+            sid,
+            step,
+            d,
+            heads,
+            kv,
+            vec![1.0; heads * d],
+            vec![7.0; kv * d],
+            vec![8.0; kv * d],
+        )
+    }
+
+    #[test]
+    fn lifecycle_open_decode_close() {
+        let t = SessionTable::new();
+        let (d, heads, kv) = (4usize, 4usize, 2usize);
+        t.open(9, &prefill_req(9, 8, d, heads, kv)).unwrap();
+        assert!(t.contains(9));
+        assert_eq!(t.prefix_len(9), Some(8));
+        // Double open is rejected.
+        assert!(t.open(9, &prefill_req(9, 8, d, heads, kv)).is_err());
+
+        // Steps must be sequential; each returns (prefix, epoch).
+        assert!(t.begin_decode(9, 1, &decode_req(9, 1, d, heads, kv)).is_err());
+        let (p0, e0) = t.begin_decode(9, 0, &decode_req(9, 0, d, heads, kv)).unwrap();
+        let (p1, e1) = t.begin_decode(9, 1, &decode_req(9, 1, d, heads, kv)).unwrap();
+        assert_eq!((p0, p1), (9, 10));
+        assert_eq!(e0, e1);
+        assert_eq!(t.prefix_len(9), Some(10));
+
+        // Appended rows are visible in the host tier.
+        let (k, v) = t.clone_prefix(9, 1, 10, e0).unwrap();
+        assert_eq!(k.len(), 10 * d);
+        assert_eq!(&k[8 * d..], &[7.0; 8][..]);
+        assert_eq!(&v[8 * d..], &[8.0; 8][..]);
+        // Shorter prefixes slice the same data.
+        let (k8, _) = t.clone_prefix(9, 1, 8, e0).unwrap();
+        assert_eq!(k8, &k[..8 * d]);
+        // Over-long prefix, bad kv_head, and wrong incarnation are refused.
+        assert!(t.clone_prefix(9, 1, 11, e0).is_none());
+        assert!(t.clone_prefix(9, 2, 4, e0).is_none());
+        assert!(t.clone_prefix(9, 1, 8, e0 + 1).is_none());
+
+        assert!(t.close(9));
+        assert!(!t.close(9));
+        assert!(t.begin_decode(9, 2, &decode_req(9, 2, d, heads, kv)).is_err());
+    }
+
+    #[test]
+    fn decode_shape_mismatches_are_rejected() {
+        let t = SessionTable::new();
+        t.open(1, &prefill_req(1, 4, 4, 4, 2)).unwrap();
+        // Wrong head count.
+        assert!(t.begin_decode(1, 0, &decode_req(1, 0, 4, 2, 2)).is_err());
+        // Wrong d.
+        assert!(t.begin_decode(1, 0, &decode_req(1, 0, 8, 4, 2)).is_err());
+        // A failed step does not advance the counter.
+        assert_eq!(t.begin_decode(1, 0, &decode_req(1, 0, 4, 4, 2)).unwrap().0, 5);
+    }
+
+    #[test]
+    fn reused_session_ids_get_fresh_epochs() {
+        let t = SessionTable::new();
+        let e1 = t.open(3, &prefill_req(3, 4, 2, 2, 1)).unwrap();
+        assert!(t.close(3));
+        let e2 = t.open(3, &prefill_req(3, 4, 2, 2, 1)).unwrap();
+        assert_ne!(e1, e2, "a reused id must not look like its dead predecessor");
+        let (_, e_step) = t.begin_decode(3, 0, &decode_req(3, 0, 2, 2, 1)).unwrap();
+        assert_eq!(e_step, e2);
+    }
+
+    #[test]
+    fn placement_is_sticky_and_invalidatable() {
+        let t = SessionTable::new();
+        t.open(5, &prefill_req(5, 4, 2, 4, 2)).unwrap();
+        assert_eq!(t.placement(5, 0), None);
+        t.place(5, 0, 3);
+        t.place(5, 1, 1);
+        assert_eq!(t.placement(5, 0), Some(3));
+        // clear_placement is conditional on the device still matching.
+        t.clear_placement(5, 0, 2);
+        assert_eq!(t.placement(5, 0), Some(3));
+        t.clear_placement(5, 0, 3);
+        assert_eq!(t.placement(5, 0), None);
+        // Dead-worker invalidation clears every pin onto that device.
+        t.place(5, 0, 1);
+        t.invalidate_device(1);
+        assert_eq!(t.placement(5, 0), None);
+        assert_eq!(t.placement(5, 1), None);
+        // Unknown sessions are no-ops, not panics.
+        t.place(404, 0, 0);
+        t.clear_placement(404, 0, 0);
+        assert_eq!(t.placement(404, 0), None);
+    }
+}

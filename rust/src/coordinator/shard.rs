@@ -21,6 +21,7 @@ use crate::config::AccelConfig;
 use crate::perfmodel::pool_utilization;
 
 use super::request::{AttentionRequest, AttentionResponse, Envelope};
+use super::session::{SessionId, SessionOp};
 
 /// One query head of one request: the unit of routing and execution.
 pub struct HeadShard {
@@ -41,6 +42,34 @@ impl HeadShard {
     }
 }
 
+/// Session context a device worker needs to execute a shard, derived
+/// from the request's [`SessionOp`] at explode time (`Close` never
+/// reaches the device pool — the batcher answers it directly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardCtx {
+    /// One-shot operator: execute and forget.
+    Stateless,
+    /// Full-prefix attention whose K/V the worker inserts into its
+    /// paged cache after executing.  `epoch` is the session's
+    /// incarnation stamp (batcher-assigned) so caches never confuse a
+    /// reused id with its dead predecessor.
+    Prefill { session: SessionId, epoch: u64 },
+    /// Single-query-row attention over `prefix_len` tokens: pages on a
+    /// hit (same `epoch` only), host-tier recompute fallback on a miss.
+    Decode { session: SessionId, prefix_len: usize, epoch: u64 },
+}
+
+/// Whether a shard was served from KV-cache pages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Not a decode shard (stateless / prefill).
+    NotApplicable,
+    /// Decode served from pages (O(L) stream).
+    Hit,
+    /// Decode took the recompute fallback (O(L²) charge).
+    Miss,
+}
+
 /// A shard in flight: work item + its request's gather cell.
 pub struct ShardEnvelope {
     pub shard: HeadShard,
@@ -48,6 +77,9 @@ pub struct ShardEnvelope {
     /// Copied from the ingress envelope so the batcher's timeout logic
     /// works per shard without touching the gather.
     pub enqueued: Instant,
+    /// Session context for the executing worker and the router's
+    /// sticky placement.
+    pub ctx: ShardCtx,
 }
 
 /// What a device worker reports for one executed shard.
@@ -57,12 +89,16 @@ pub struct ShardResult {
     /// Simulated FSA device cycles for this head.
     pub cycles: u64,
     pub output: Result<Vec<f32>, String>,
+    /// KV-cache outcome (decode shards only).
+    pub cache: CacheOutcome,
 }
 
 struct GatherInner {
     /// Per-head `(device_id, cycles, output)`, indexed by query head.
     done: Vec<Option<(usize, u64, Result<Vec<f32>, String>)>>,
     remaining: usize,
+    kv_hits: usize,
+    kv_misses: usize,
 }
 
 /// Per-request gather cell shared by all of the request's shards.
@@ -88,6 +124,11 @@ impl Gather {
         debug_assert!(inner.done[result.head].is_none(), "head completed twice");
         if inner.done[result.head].is_none() {
             inner.remaining -= 1;
+            match result.cache {
+                CacheOutcome::Hit => inner.kv_hits += 1,
+                CacheOutcome::Miss => inner.kv_misses += 1,
+                CacheOutcome::NotApplicable => {}
+            }
         }
         inner.done[result.head] = Some((result.device_id, result.cycles, result.output));
         if inner.remaining > 0 {
@@ -173,6 +214,8 @@ impl Gather {
             device_id,
             devices_used,
             bucket: req.seq_len,
+            kv_hits: inner.kv_hits,
+            kv_misses: inner.kv_misses,
         }
     }
 }
@@ -182,6 +225,15 @@ impl Gather {
 pub fn explode(env: Envelope) -> Vec<ShardEnvelope> {
     let Envelope { req, reply, enqueued } = env;
     let num_heads = req.num_heads;
+    let ctx = match req.op {
+        SessionOp::Prefill { session } => ShardCtx::Prefill { session, epoch: req.epoch },
+        SessionOp::Decode { session, .. } => {
+            ShardCtx::Decode { session, prefix_len: req.prefix_len, epoch: req.epoch }
+        }
+        // Close is answered by the batcher and never dispatched; treat
+        // a stray one as stateless rather than panicking.
+        SessionOp::Stateless | SessionOp::Close { .. } => ShardCtx::Stateless,
+    };
     let req = Arc::new(req);
     let gather = Arc::new(Gather {
         req: req.clone(),
@@ -190,6 +242,8 @@ pub fn explode(env: Envelope) -> Vec<ShardEnvelope> {
         inner: Mutex::new(GatherInner {
             done: (0..num_heads).map(|_| None).collect(),
             remaining: num_heads,
+            kv_hits: 0,
+            kv_misses: 0,
         }),
     });
     (0..num_heads)
@@ -197,6 +251,7 @@ pub fn explode(env: Envelope) -> Vec<ShardEnvelope> {
             shard: HeadShard { req: req.clone(), head, kv_head: req.kv_head_for(head) },
             gather: gather.clone(),
             enqueued,
+            ctx,
         })
         .collect()
 }
@@ -253,6 +308,7 @@ mod tests {
                     device_id: h % 2,
                     cycles: 100,
                     output: Ok(vec![h as f32; seq * d]),
+                    cache: CacheOutcome::NotApplicable,
                 },
                 &fsa(),
             );
@@ -285,6 +341,7 @@ mod tests {
                     device_id: 0,
                     cycles: 10,
                     output: if h == 1 { Err("boom".into()) } else { Ok(vec![0.0; 4]) },
+                    cache: CacheOutcome::NotApplicable,
                 },
                 &fsa(),
             );
@@ -293,5 +350,39 @@ mod tests {
         let err = resp.output.unwrap_err();
         assert!(err.contains("head 1") && err.contains("boom"), "{err}");
         assert_eq!(resp.device_cycles, 20);
+    }
+
+    #[test]
+    fn decode_shards_carry_ctx_and_gather_counts_cache_outcomes() {
+        let d = 2;
+        let (tx, rx) = mpsc::channel();
+        let mut req = AttentionRequest::decode(
+            11, 42, 3, d, 4, 2,
+            vec![0.0; 4 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
+        );
+        req.prefix_len = 9; // batcher stamps
+        req.epoch = 5;
+        let shards = explode(Envelope { req, reply: tx, enqueued: Instant::now() });
+        assert_eq!(shards.len(), 4);
+        for s in &shards {
+            assert_eq!(s.ctx, ShardCtx::Decode { session: 42, prefix_len: 9, epoch: 5 });
+        }
+        for h in 0..4 {
+            shards[h].gather.complete(
+                ShardResult {
+                    head: h,
+                    device_id: 0,
+                    cycles: 7,
+                    output: Ok(vec![0.5; d]),
+                    cache: if h == 2 { CacheOutcome::Miss } else { CacheOutcome::Hit },
+                },
+                &fsa(),
+            );
+        }
+        let resp = rx.try_recv().unwrap();
+        assert_eq!(resp.kv_hits, 3);
+        assert_eq!(resp.kv_misses, 1);
+        // Decode output is one row per head.
+        assert_eq!(resp.output.unwrap().len(), 4 * d);
     }
 }

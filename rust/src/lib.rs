@@ -12,8 +12,9 @@
 //! JAX/Pallas AOT artifacts via PJRT (with an in-crate reference
 //! fallback), and a serving **coordinator** (router, batcher, device
 //! pool) that puts it all on a request path — full multi-head / GQA
-//! operators, sharded per head across the pool — with Python nowhere
-//! in sight.
+//! operators, sharded per head across the pool, plus decode-phase
+//! serving: a prefill→decode→close session lifecycle over per-device
+//! paged KV caches — with Python nowhere in sight.
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
@@ -29,7 +30,8 @@
 //! * [`runtime`] — artifact loading + the per-head execution
 //!   [`runtime::Backend`] (PJRT HLO-text path or the reference twin).
 //! * [`coordinator`] — multi-head request path: head sharding/gather,
-//!   affinity router, batcher, device workers, metrics.
+//!   affinity router, batcher, device workers, metrics; session
+//!   lifecycle + paged KV caches for decode-phase serving.
 //! * [`config`] — INI-style config system for machines and runs.
 //! * [`cli`], [`benchutil`], [`testutil`] — offline-environment stand-ins
 //!   for clap / criterion / proptest (see DESIGN.md §substitutions).

@@ -33,6 +33,14 @@ Device / serving commands:
                                boot the coordinator and serve a workload
                                (multi-head/GQA requests are sharded
                                per head across the device pool)
+          [--decode-steps 0 --sessions 1 --kv-pages 4096
+           --page-size 16 --eviction lru|none]
+                               with --decode-steps > 0: decode-phase
+                               serving — prefill --sessions sessions at
+                               --seq, interleave that many decode steps
+                               per session over the paged KV caches,
+                               close, and report hit/miss/eviction
+                               counters (backend reference|auto)
   help                         this text
 ";
 
@@ -113,18 +121,28 @@ fn serve(args: &Args) -> fsa::Result<()> {
     cfg.backend = args.flag("backend").unwrap_or("pjrt").parse()?;
     cfg.num_heads = args.get("heads", cfg.num_heads)?;
     cfg.num_kv_heads = args.get("kv-heads", cfg.num_kv_heads)?;
+    cfg.kv_cache_pages = args.get("kv-pages", cfg.kv_cache_pages)?;
+    cfg.kv_page_size = args.get("page-size", cfg.kv_page_size)?;
+    cfg.kv_eviction = args.flag("eviction").unwrap_or("lru").parse()?;
     let n_req = args.get("requests", 16usize)?;
     let seq = args.get("seq", 512usize)?;
     let d = args.get("d", 128usize)?;
+    let decode_steps = args.get("decode-steps", 0usize)?;
+    let n_sessions = args.get("sessions", 1usize)?;
     let (heads, kv_heads) = (cfg.num_heads, cfg.num_kv_heads);
     // Head-count invariants are validated once by Coordinator::start
     // (RunConfig::validate) before any request is constructed.
 
     println!(
-        "booting coordinator: {} devices, backend {}, artifacts at {}",
-        cfg.devices, cfg.backend, cfg.artifacts_dir
+        "booting coordinator: {} devices, backend {}, artifacts at {}, \
+         kv cache {} x {}-token pages ({})",
+        cfg.devices, cfg.backend, cfg.artifacts_dir,
+        cfg.kv_cache_pages, cfg.kv_page_size, cfg.kv_eviction
     );
     let coord = Coordinator::start(cfg)?;
+    if decode_steps > 0 {
+        return serve_decode(coord, n_sessions, decode_steps, seq, d, heads, kv_heads);
+    }
     let mut rng = SplitMix64::new(1);
     let mut pending = Vec::new();
     for id in 0..n_req as u64 {
@@ -151,6 +169,84 @@ fn serve(args: &Args) -> fsa::Result<()> {
     if ok > 0 {
         println!("worst whole-operator FLOPs/s utilization: {:.1}%", 100.0 * worst_util);
     }
+    println!("{}", coord.metrics.summary());
+    coord.shutdown();
+    Ok(())
+}
+
+/// Decode-phase serving loop: prefill `n_sessions` sessions, interleave
+/// `steps` decode steps per session (round-robin, so device KV caches
+/// juggle all sessions at once), close everything, and report the
+/// cache counters.
+fn serve_decode(
+    coord: Coordinator,
+    n_sessions: usize,
+    steps: usize,
+    seq: usize,
+    d: usize,
+    heads: usize,
+    kv_heads: usize,
+) -> fsa::Result<()> {
+    let mut rng = SplitMix64::new(7);
+    let mut id = 0u64;
+    let mut next_id = || {
+        id += 1;
+        id
+    };
+
+    for s in 0..n_sessions as u64 {
+        let resp = coord.submit_wait(AttentionRequest::prefill(
+            next_id(),
+            s,
+            seq,
+            d,
+            heads,
+            kv_heads,
+            rng.normal_matrix(heads * seq, d),
+            rng.normal_matrix(kv_heads * seq, d),
+            rng.normal_matrix(kv_heads * seq, d),
+        ))?;
+        resp.output.map_err(|e| anyhow::anyhow!("prefill of session {s} failed: {e}"))?;
+    }
+    println!("{n_sessions} sessions prefilled at L={seq}");
+
+    let t0 = std::time::Instant::now();
+    let (mut hits, mut misses) = (0usize, 0usize);
+    for step in 0..steps as u64 {
+        for s in 0..n_sessions as u64 {
+            let resp = coord.submit_wait(AttentionRequest::decode(
+                next_id(),
+                s,
+                step,
+                d,
+                heads,
+                kv_heads,
+                rng.normal_matrix(heads, d),
+                rng.normal_matrix(kv_heads, d),
+                rng.normal_matrix(kv_heads, d),
+            ))?;
+            resp.output
+                .map_err(|e| anyhow::anyhow!("decode step {step} of session {s} failed: {e}"))?;
+            hits += resp.kv_hits;
+            misses += resp.kv_misses;
+        }
+    }
+    let wall = t0.elapsed();
+
+    for s in 0..n_sessions as u64 {
+        coord.submit_wait(AttentionRequest::close(next_id(), s))?;
+    }
+
+    let total_tokens = n_sessions * steps;
+    println!(
+        "decoded {steps} steps x {n_sessions} sessions ({total_tokens} tokens) in {wall:.2?} \
+         host time ({:.0} tokens/s host)",
+        total_tokens as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "kv cache: {hits} hit / {misses} miss shards ({:.1}% hit rate)",
+        100.0 * hits as f64 / (hits + misses).max(1) as f64
+    );
     println!("{}", coord.metrics.summary());
     coord.shutdown();
     Ok(())

@@ -225,6 +225,107 @@ pub fn flash_forward(
     out
 }
 
+/// Single-query-row FlashAttention over a `(len, d)` K/V prefix — the
+/// decode-phase kernel (DESIGN.md §5).
+///
+/// This is the `br = 1` degeneration of [`flash_forward`], streaming
+/// the prefix in column tiles of `bc` tokens (a ragged final tile is
+/// allowed, so any prefix length works — decode prefixes grow by one
+/// token per step).  Every quantization point matches the prefill
+/// path: fp32 psums over quantized operands, fp16 parking of S, the
+/// PWL exp2 on the quantized argument, fp16 storage of P, and the
+/// same accumulation orders (k-descending first matmul, n-ascending
+/// rowsum/PV).  When `bc` divides `len` the output is **bitwise
+/// identical** to `flash_forward` with `br = 1` on the same inputs
+/// (pinned by a unit test) — which is exactly what makes cached
+/// decode, miss-path recompute, and stateless full-prefix
+/// recomputation agree bit-for-bit in the serving e2e tests.
+///
+/// Stateless recompute and the cached path both call this function —
+/// the cache changes where the K/V bytes come from (device pages vs
+/// host tier) and what the step costs, never the numerics.
+pub fn flash_decode_row(
+    qr: &[f32],
+    km: &[f32],
+    vm: &[f32],
+    d: usize,
+    bc: usize,
+    exp2: &Exp2,
+    prec: Precision,
+) -> Vec<f32> {
+    assert!(d >= 1 && bc >= 1);
+    assert_eq!(qr.len(), d, "q must be one (1, d) row");
+    assert_eq!(km.len() % d, 0, "K must be (len, d) row-major");
+    assert_eq!(km.len(), vm.len(), "K and V must agree");
+    let lk = km.len() / d;
+    assert!(lk >= 1, "need at least one prefix token");
+    let scale = (LOG2E / (d as f64).sqrt()) as f32;
+
+    let qq: Vec<f32> = qr.iter().map(|&x| q(x, prec)).collect();
+    let kq: Vec<f32> = km.iter().map(|&x| q(x, prec)).collect();
+    let vq: Vec<f32> = vm.iter().map(|&x| q(x, prec)).collect();
+
+    const NEG_INF: f32 = -1e30;
+    let mut m = NEG_INF;
+    let mut lsum = 0.0f32;
+    let mut acc = vec![0.0f32; d];
+    let mut s = vec![0.0f32; bc];
+    let mut p16 = vec![0.0f32; bc];
+
+    let mut k0 = 0;
+    while k0 < lk {
+        let bce = bc.min(lk - k0);
+        for c in 0..bce {
+            let krow = &kq[(k0 + c) * d..(k0 + c + 1) * d];
+            let mut ps = 0.0f32;
+            for k in (0..d).rev() {
+                ps += qq[k] * krow[k];
+            }
+            s[c] = ps;
+        }
+        let mut local_m = f32::NEG_INFINITY;
+        for c in 0..bce {
+            s[c] = q(s[c], prec);
+            local_m = local_m.max(s[c]);
+        }
+        let new_m = m.max(local_m);
+        let b = exp2.eval(scale * (m - new_m));
+        let mut local_l = 0.0f32;
+        for c in 0..bce {
+            let nv = q(s[c] - new_m, prec);
+            let pv = exp2.eval(q(scale * nv, prec));
+            p16[c] = q(pv, prec);
+            local_l += p16[c];
+        }
+        lsum = lsum * b + local_l;
+        m = new_m;
+        for a in acc.iter_mut() {
+            *a *= b;
+        }
+        for (h, a) in acc.iter_mut().enumerate() {
+            let mut ps = 0.0f32;
+            for n in 0..bce {
+                ps += p16[n] * vq[(k0 + n) * d + h];
+            }
+            *a += ps;
+        }
+        k0 += bce;
+    }
+    let inv = 1.0 / lsum;
+    acc.iter().map(|&a| a * inv).collect()
+}
+
+/// Convenience: the decode row with the paper's device numerics (PWL
+/// exp2, fp16 operand quantization) — the strict twin the device
+/// workers' reference backend runs for decode shards.
+pub fn decode_pwl(qr: &[f32], km: &[f32], vm: &[f32], d: usize, bc: usize, segments: usize) -> Vec<f32> {
+    flash_decode_row(
+        qr, km, vm, d, bc,
+        &Exp2::PwlF16(PwlExp2::new(segments)),
+        Precision::F16F32,
+    )
+}
+
 /// Convenience: PWL flash with the paper's defaults (used as the
 /// device-numerics oracle everywhere in the Rust tests).
 pub fn flash_pwl(qm: &Mat, km: &Mat, vm: &Mat, br: usize, bc: usize, segments: usize) -> Mat {
@@ -329,6 +430,71 @@ mod tests {
         let vm = rand_mat(&mut rng, l, d);
         let out = flash_pwl(&qm, &km, &vm, 8, 8, 8);
         assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_row_is_bitwise_flash_forward_br1() {
+        // When bc divides the prefix length, the decode kernel must be
+        // bit-for-bit the br=1 tiled flash — the invariant the serving
+        // e2e leans on (cached vs recompute vs stateless all agree).
+        // flash_decode_row intentionally duplicates flash_forward's
+        // inner loop (the original asserts exact tiling); this sweep is
+        // the lockstep guard — any change to either kernel's
+        // accumulation order or quantization points must keep it green.
+        let mut rng = SplitMix64::new(11);
+        for (case, &(lk, d, bc)) in
+            [(32usize, 16usize, 8usize), (24, 8, 24), (64, 32, 16), (16, 16, 4), (128, 64, 32)]
+                .iter()
+                .enumerate()
+        {
+            let qr = rng.normal_matrix(1, d);
+            let km = rng.normal_matrix(lk, d);
+            let vm = rng.normal_matrix(lk, d);
+            for (exp2, prec) in [
+                (Exp2::Exact, Precision::F32),
+                (Exp2::Pwl(PwlExp2::new(8)), Precision::F32),
+                (Exp2::PwlF16(PwlExp2::new(8)), Precision::F16F32),
+                (Exp2::PwlF16(PwlExp2::new(4)), Precision::F16F32),
+            ] {
+                let row = flash_decode_row(&qr, &km, &vm, d, bc, &exp2, prec);
+                let full = flash_forward(
+                    &Mat::new(1, d, qr.clone()),
+                    &Mat::new(lk, d, km.clone()),
+                    &Mat::new(lk, d, vm.clone()),
+                    1,
+                    bc,
+                    &exp2,
+                    prec,
+                );
+                assert_eq!(
+                    row, full.data,
+                    "case {case} (lk={lk} d={d} bc={bc}): decode row diverged from flash br=1"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_row_matches_dense_sdpa_row() {
+        // Ragged prefix (not a multiple of bc): still a valid decode.
+        let mut rng = SplitMix64::new(12);
+        let (lk, d, bc) = (37usize, 16usize, 8usize);
+        let qr = rng.normal_matrix(1, d);
+        let km = rng.normal_matrix(lk, d);
+        let vm = rng.normal_matrix(lk, d);
+        let row = flash_decode_row(&qr, &km, &vm, d, bc, &Exp2::Exact, Precision::F32);
+        let dense = sdpa(
+            &Mat::new(1, d, qr.clone()),
+            &Mat::new(lk, d, km.clone()),
+            &Mat::new(lk, d, vm.clone()),
+        );
+        let err = mat_error(&Mat::new(1, d, row.clone()), &dense);
+        assert!(err.max_abs < 1e-5, "{err:?}");
+        // And the PWL+fp16 twin stays inside the Table-2 error band.
+        let pwl = decode_pwl(&qr, &km, &vm, d, bc, 8);
+        let err = mat_error(&Mat::new(1, d, pwl), &dense);
+        assert!(err.mae < 2e-2, "{err:?}");
+        assert!(row.iter().all(|x| x.is_finite()));
     }
 
     #[test]

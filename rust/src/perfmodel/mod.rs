@@ -12,7 +12,10 @@
 //! two dataflow variants of §8.2.
 
 use crate::config::AccelConfig;
-use crate::schedule::{attention_flops, preload_latency, rescale_latency, InnerSchedule, Variant};
+use crate::schedule::{
+    attention_flops, decode_attention_flops, preload_latency, rescale_latency, InnerSchedule,
+    Variant,
+};
 use crate::sim::dma::DmaConfig;
 
 /// Timing breakdown for one attention head on FSA.
@@ -88,6 +91,174 @@ pub fn achieved_tflops(seq_len: usize, d: usize, perf: &FsaPerf) -> f64 {
     attention_flops(seq_len, d) as f64 / perf.seconds / 1e12
 }
 
+/// Timing of one decode step on one FSA device (DESIGN.md §5): a
+/// single query row attending over an `L = prefix_len` token prefix.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodePerf {
+    /// Total device cycles charged to the step (`step_cycles` plus the
+    /// miss-path recompute).
+    pub total_cycles: u64,
+    /// The one-row attention pass itself: `ceil(L/N)` column tiles at
+    /// the br=1 wave latency, paced by the slower of compute and the
+    /// K/V page stream (double-buffered), plus one epilogue.
+    pub step_cycles: u64,
+    /// Cache miss only: the full-prefix recompute charge (the upstream
+    /// model re-running its forward pass over the prefix to regenerate
+    /// K/V; we charge the attention share, O(L²) cycles via
+    /// [`fsa_flash_perf`]).  0 on a hit.
+    pub recompute_cycles: u64,
+    /// DMA cycles of the one-row pass (prefix K/V stream).
+    pub dma_cycles: u64,
+    /// Bytes moved for the step: the O(L) fp16 K/V prefix stream plus
+    /// the appended row (and, on a miss, the recompute's tile
+    /// traffic).
+    pub bytes_streamed: u64,
+    /// Whether the step was served from KV-cache pages.
+    pub cached: bool,
+    /// True when the K/V stream, not the array wave, paces the tiles.
+    pub bandwidth_bound: bool,
+    /// Achieved/peak FLOPs/s of the step — collapses exactly as §8.3
+    /// predicts (one useful row on an N-wide array).
+    pub utilization: f64,
+    pub seconds: f64,
+}
+
+/// One decode step for one head on FSA: `prefix_len` tokens of cached
+/// context, one query row, one appended K/V row.
+///
+/// Cached (`cached = true`): the device streams the `O(L)` fp16 K/V
+/// prefix from its pages through the array — per-step cost is linear
+/// in the prefix.  Miss (`cached = false`): the full-prefix recompute
+/// is charged on top (O(L²) cycles), which is the entire case for the
+/// cache: the ratio `miss/hit` grows linearly with the prefix.
+pub fn fsa_decode_perf(
+    cfg: &AccelConfig,
+    prefix_len: usize,
+    d: usize,
+    cached: bool,
+    variant: Variant,
+    segments: usize,
+) -> DecodePerf {
+    let n = cfg.array_size;
+    assert!(d <= n, "head dim {d} exceeds array size {n}");
+    assert!(prefix_len >= 1, "decode needs a non-empty prefix");
+    let sched = InnerSchedule::new(n, variant, segments);
+    let tile_compute = sched.decode_latency();
+    let t_c = prefix_len.div_ceil(n) as u64;
+
+    // Per column tile: stream N tokens of K and V (fp16) — only the d
+    // useful lanes travel on the wire, padding is array-local.
+    let dma = DmaConfig::for_bandwidth(cfg.mem_bw_gbs, cfg.freq_ghz, 4);
+    let bpc = cfg.mem_bw_gbs / cfg.freq_ghz;
+    let tile_bytes = (2 * n * d * 2) as f64;
+    let dma_per_tile = dma.setup_cycles + (tile_bytes / bpc).ceil() as u64;
+
+    let pace = tile_compute.max(dma_per_tile);
+    let bandwidth_bound = dma_per_tile > tile_compute;
+    let step_cycles = t_c * pace + rescale_latency(n) + dma.setup_cycles;
+
+    // O(L) bytes: the K+V prefix (fp16) plus this step's appended row.
+    let mut bytes_streamed = (2 * prefix_len * d * 2 + 2 * d * 2) as u64;
+    let mut recompute_cycles = 0u64;
+    if !cached {
+        let refill = fsa_flash_perf(cfg, prefix_len, d, variant, segments);
+        recompute_cycles = refill.total_cycles;
+        bytes_streamed += (refill.dma_cycles as f64 * bpc) as u64;
+    }
+    let total_cycles = step_cycles + recompute_cycles;
+
+    let flops = decode_attention_flops(prefix_len, d) as f64;
+    let peak_per_cycle = 2.0 * (n * n) as f64;
+    DecodePerf {
+        total_cycles,
+        step_cycles,
+        recompute_cycles,
+        dma_cycles: t_c * dma_per_tile,
+        bytes_streamed,
+        cached,
+        bandwidth_bound,
+        utilization: flops / (peak_per_cycle * total_cycles as f64),
+        seconds: total_cycles as f64 / (cfg.freq_ghz * 1e9),
+    }
+}
+
+/// Pool-level decode timing under a cache hit rate: the decode
+/// analogue of [`multi_head_perf`], with the same KV-affinity
+/// placement (a session's KV group stays on the device holding its
+/// pages, capping one session's parallelism at `num_kv_heads`
+/// devices).
+#[derive(Clone, Copy, Debug)]
+pub struct DecodePoolPerf {
+    /// Per-head step timing when served from pages.
+    pub hit: DecodePerf,
+    /// Per-head step timing on the recompute fallback.
+    pub miss: DecodePerf,
+    pub hit_rate: f64,
+    pub devices_used: usize,
+    /// Query heads the busiest device serves per step.
+    pub rounds: usize,
+    /// Expected per-head step cycles at the hit rate.
+    pub expected_head_cycles: f64,
+    /// Expected whole-operator step latency (busiest device).
+    pub critical_path_cycles: f64,
+    /// Cache-hit-aware whole-operator FLOPs/s utilization over the
+    /// devices used.
+    pub utilization: f64,
+    /// Decode throughput of one session at this prefix: steps (tokens)
+    /// per second.
+    pub tokens_per_sec: f64,
+    /// Expected whole-operator bytes per step: each KV head's stream is
+    /// fetched once per device thanks to affinity, so this scales with
+    /// `num_kv_heads`, not `num_heads`.
+    pub bytes_per_step: f64,
+}
+
+/// Compose [`fsa_decode_perf`] into a whole decode step of a
+/// `num_heads`/`num_kv_heads` operator on a `devices` pool with an
+/// expected KV-cache `hit_rate` (1.0 = steady-state resident session,
+/// 0.0 = every step recomputes — the no-cache baseline).
+#[allow(clippy::too_many_arguments)]
+pub fn decode_pool_perf(
+    cfg: &AccelConfig,
+    prefix_len: usize,
+    d: usize,
+    num_heads: usize,
+    num_kv_heads: usize,
+    devices: usize,
+    hit_rate: f64,
+    variant: Variant,
+    segments: usize,
+) -> DecodePoolPerf {
+    assert!(num_heads >= 1 && num_kv_heads >= 1 && devices >= 1);
+    assert_eq!(num_heads % num_kv_heads, 0, "GQA head counts must divide");
+    assert!((0.0..=1.0).contains(&hit_rate), "hit rate is a probability");
+    let hit = fsa_decode_perf(cfg, prefix_len, d, true, variant, segments);
+    let miss = fsa_decode_perf(cfg, prefix_len, d, false, variant, segments);
+    let group_size = num_heads / num_kv_heads;
+    let devices_used = devices.min(num_kv_heads);
+    let rounds = group_size * num_kv_heads.div_ceil(devices);
+    let expected_head_cycles =
+        hit_rate * hit.total_cycles as f64 + (1.0 - hit_rate) * miss.total_cycles as f64;
+    let critical_path_cycles = rounds as f64 * expected_head_cycles;
+    let flops = num_heads as f64 * decode_attention_flops(prefix_len, d) as f64;
+    let peak_per_cycle =
+        2.0 * (cfg.array_size * cfg.array_size) as f64 * devices_used as f64;
+    let expected_bytes =
+        hit_rate * hit.bytes_streamed as f64 + (1.0 - hit_rate) * miss.bytes_streamed as f64;
+    DecodePoolPerf {
+        hit,
+        miss,
+        hit_rate,
+        devices_used,
+        rounds,
+        expected_head_cycles,
+        critical_path_cycles,
+        utilization: flops / (peak_per_cycle * critical_path_cycles),
+        tokens_per_sec: cfg.freq_ghz * 1e9 / critical_path_cycles,
+        bytes_per_step: num_kv_heads as f64 * expected_bytes,
+    }
+}
+
 /// Whole-operator timing for a multi-head (or grouped-query) SDPA
 /// sharded across a pool of FSA devices — the granularity the paper's
 /// §6.1 baselines (TPUv5e, NeuronCore-v2) are measured at.
@@ -132,6 +303,7 @@ pub struct MultiHeadPerf {
 ///
 /// `num_kv_heads` does not change FLOPs — every query head runs full
 /// `4 L² d` attention.
+#[allow(clippy::too_many_arguments)]
 pub fn multi_head_perf(
     cfg: &AccelConfig,
     seq_len: usize,
@@ -283,6 +455,70 @@ mod tests {
         // Degenerate inputs.
         assert_eq!(pool_utilization(&cfg, flops, &[]), 0.0);
         assert_eq!(pool_utilization(&cfg, flops, &[0]), 0.0);
+    }
+
+    #[test]
+    fn cached_decode_is_linear_recompute_quadratic() {
+        let cfg = fsa();
+        // Doubling the prefix doubles the cached step (cycles and
+        // bytes) but quadruples the recompute charge — the O(L) vs
+        // O(L²) separation the KV cache exists for.
+        let l = 4096usize;
+        let hit1 = fsa_decode_perf(&cfg, l, 128, true, Variant::DualPath, 8);
+        let hit2 = fsa_decode_perf(&cfg, 2 * l, 128, true, Variant::DualPath, 8);
+        let byte_ratio = hit2.bytes_streamed as f64 / hit1.bytes_streamed as f64;
+        assert!((byte_ratio - 2.0).abs() < 0.01, "bytes ratio {byte_ratio}");
+        let cycle_ratio = hit2.step_cycles as f64 / hit1.step_cycles as f64;
+        assert!(cycle_ratio > 1.8 && cycle_ratio < 2.2, "cycle ratio {cycle_ratio}");
+
+        let miss1 = fsa_decode_perf(&cfg, l, 128, false, Variant::DualPath, 8);
+        let miss2 = fsa_decode_perf(&cfg, 2 * l, 128, false, Variant::DualPath, 8);
+        let rc_ratio = miss2.recompute_cycles as f64 / miss1.recompute_cycles as f64;
+        assert!(rc_ratio > 3.5 && rc_ratio < 4.5, "recompute ratio {rc_ratio}");
+        // The miss premium dwarfs the cached step and grows with L.
+        assert!(miss1.total_cycles > 10 * hit1.total_cycles);
+        assert!(
+            miss2.total_cycles as f64 / hit2.total_cycles as f64
+                > miss1.total_cycles as f64 / hit1.total_cycles as f64
+        );
+        // Hit carries no recompute and the step cost is shared.
+        assert_eq!(hit1.recompute_cycles, 0);
+        assert_eq!(hit1.step_cycles, miss1.step_cycles);
+        // One-row utilization collapses (§8.3): over an order of
+        // magnitude below the prefill utilization at the same prefix.
+        let prefill = fsa_flash_perf(&cfg, l, 128, Variant::DualPath, 8);
+        assert!(hit1.utilization < prefill.utilization / 20.0);
+    }
+
+    #[test]
+    fn decode_pool_perf_is_hit_rate_aware() {
+        let cfg = fsa();
+        let (l, d) = (4096usize, 128usize);
+        let all_hit = decode_pool_perf(&cfg, l, d, 8, 2, 4, 1.0, Variant::DualPath, 8);
+        let all_miss = decode_pool_perf(&cfg, l, d, 8, 2, 4, 0.0, Variant::DualPath, 8);
+        let half = decode_pool_perf(&cfg, l, d, 8, 2, 4, 0.5, Variant::DualPath, 8);
+        // Affinity caps a session at num_kv_heads devices; the busiest
+        // runs a whole 4-head group per step.
+        assert_eq!((all_hit.devices_used, all_hit.rounds), (2, 4));
+        assert_eq!(
+            all_hit.critical_path_cycles,
+            4.0 * all_hit.hit.total_cycles as f64
+        );
+        assert_eq!(
+            all_miss.critical_path_cycles,
+            4.0 * all_miss.miss.total_cycles as f64
+        );
+        let mid = 0.5 * (all_hit.critical_path_cycles + all_miss.critical_path_cycles);
+        assert!((half.critical_path_cycles - mid).abs() < 1.0);
+        // Hits mean fewer cycles for the same FLOPs: better utilization
+        // and more tokens per second.
+        assert!(all_hit.utilization > 5.0 * all_miss.utilization);
+        assert!(all_hit.tokens_per_sec > 5.0 * all_miss.tokens_per_sec);
+        assert!(half.tokens_per_sec < all_hit.tokens_per_sec);
+        // Bytes scale with KV heads (affinity fetches each stream once).
+        assert!(
+            (all_hit.bytes_per_step - 2.0 * all_hit.hit.bytes_streamed as f64).abs() < 1.0
+        );
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, ensure, Context};
 
 use crate::config::{AccelConfig, BackendKind};
-use crate::numerics::reference::{flash_pwl, Mat};
+use crate::numerics::reference::{decode_pwl, flash_pwl, Mat};
 
 /// One manifest row.
 #[derive(Clone, Debug, PartialEq)]
@@ -305,6 +305,43 @@ impl Backend {
             }
         }
     }
+
+    /// Execute one decode step of one head: a single `(1, d)` query row
+    /// over a `(prefix_len, d)` K/V prefix (cached pages or the
+    /// host-tier fallback — numerically identical by construction).
+    ///
+    /// The reference twin tiles the prefix at the array size with a
+    /// ragged tail ([`decode_pwl`]), matching the stateless oracle
+    /// bit-for-bit.  PJRT has no decode artifact kind yet (`fsa_decode`
+    /// would carry `(1, d) × (L, d)` signatures); exporting one is
+    /// listed in DESIGN.md §future-work, so the strict backend reports
+    /// the gap instead of silently changing numerics.
+    pub fn execute_decode_row(
+        &mut self,
+        prefix_len: usize,
+        d: usize,
+        q_row: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        if q_row.len() != d || k.len() != prefix_len * d || v.len() != k.len() {
+            return Err(format!(
+                "decode shape mismatch: q {} k {} v {} for prefix {prefix_len} d {d}",
+                q_row.len(),
+                k.len(),
+                v.len()
+            ));
+        }
+        match self {
+            Backend::Pjrt(_) => Err(format!(
+                "no `fsa_decode` artifact kind is exported yet (prefix {prefix_len}, d {d}); \
+                 decode serving needs backend=reference|auto (DESIGN.md §5)"
+            )),
+            Backend::Reference { array_size, segments } => {
+                Ok(decode_pwl(q_row, k, v, d, *array_size, *segments))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -392,5 +429,24 @@ mod tests {
         let cfg = AccelConfig::builtin("fsa").unwrap();
         let be = Backend::new(BackendKind::Auto, Path::new("/nonexistent"), &cfg).unwrap();
         assert_eq!(be.name(), "reference");
+    }
+
+    #[test]
+    fn reference_decode_row_matches_oracle_and_validates_shapes() {
+        use crate::numerics::SplitMix64;
+        let cfg = AccelConfig::builtin("fsa").unwrap();
+        let mut be =
+            Backend::new(BackendKind::Reference, Path::new("/nonexistent"), &cfg).unwrap();
+        let (prefix, d) = (37usize, 16usize);
+        let mut rng = SplitMix64::new(21);
+        let q = rng.normal_matrix(1, d);
+        let k = rng.normal_matrix(prefix, d);
+        let v = rng.normal_matrix(prefix, d);
+        let got = be.execute_decode_row(prefix, d, &q, &k, &v).unwrap();
+        // Same tiling as the device path: array-size columns, ragged tail.
+        let want = decode_pwl(&q, &k, &v, d, cfg.array_size, cfg.pwl_segments);
+        assert_eq!(got, want);
+        // Shape mismatches are reported, not panicked.
+        assert!(be.execute_decode_row(prefix, d, &q, &k[..d], &v).is_err());
     }
 }

@@ -131,6 +131,29 @@ impl InnerSchedule {
     pub fn last_cycle(&self) -> u64 {
         self.o_exit(self.n - 1, self.n - 1)
     }
+
+    /// Inner-iteration latency with a single live query row — the
+    /// decode-phase degeneration of the §3.5 wave (one stationary Q
+    /// column, §8.3's `d < N` concern taken to its extreme).
+    ///
+    /// Model assumption (not a paper formula, and below the
+    /// cycle-accurate simulator's granularity, which schedules full
+    /// tiles): with `br = 1` the park stream and the PV psum chain no
+    /// longer span the `N` query columns, collapsing the two
+    /// column-indexed `+N` spans of the `5N + 10` derivation — K still
+    /// streams `N` rows up, the elementwise window is unchanged, and
+    /// the single output row drains in `O(d)`; `3N + 2 + segments`
+    /// dual-path, one extra `N` single-path (wait for the whole P row
+    /// before PV, §8.2).  The decode perfmodel and its O(L)-per-step
+    /// claim only require this to be Θ(N) per column tile.
+    pub fn decode_latency(&self) -> u64 {
+        let n = self.n as u64;
+        let elementwise = 2 + self.segments as u64;
+        match self.variant {
+            Variant::DualPath => 3 * n + elementwise,
+            Variant::SinglePath => 4 * n + elementwise,
+        }
+    }
 }
 
 /// Outer-loop (per Q row-block) epilogue: Reciprocal + AttnLseNorm.
@@ -168,6 +191,14 @@ pub fn inner_flops(n: usize) -> u64 {
 /// `4 * SeqLen^2 * d` (§6.1).
 pub fn attention_flops(seq_len: usize, d: usize) -> u64 {
     4 * (seq_len as u64) * (seq_len as u64) * d as u64
+}
+
+/// FLOPs of one decode step per head: a single query row over an
+/// `L`-token prefix — `2 L d` for the score row plus `2 L d` for PV.
+/// Linear in the prefix, which is why decode is paced by the memory
+/// system and not the array (§8.3, DESIGN.md §5).
+pub fn decode_attention_flops(prefix_len: usize, d: usize) -> u64 {
+    4 * (prefix_len as u64) * d as u64
 }
 
 /// End-to-end FSA cycle count for one attention head of `seq_len` with

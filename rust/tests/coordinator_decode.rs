@@ -1,0 +1,314 @@
+//! End-to-end decode-phase serving tests (DESIGN.md §5) on the
+//! reference backend: the full coordinator path — session lifecycle in
+//! the batcher, sticky affinity routing, per-device paged KV caches,
+//! single-query-row device numerics, whole-operator gather — with no
+//! PJRT and no artifacts, so these run in every environment.
+//!
+//! The load-bearing invariant (ISSUE acceptance): a session prefilled
+//! at L=256 and decoded for 64+ steps produces outputs **bitwise
+//! identical** to stateless full-prefix recomputation at every step,
+//! including across an eviction → recompute → re-cache cycle.
+
+use fsa::config::{BackendKind, EvictionPolicy, RunConfig};
+use fsa::coordinator::request::AttentionRequest;
+use fsa::coordinator::Coordinator;
+use fsa::numerics::reference::decode_pwl;
+use fsa::numerics::SplitMix64;
+use fsa::perfmodel::fsa_decode_perf;
+use fsa::schedule::Variant;
+
+/// Array dim / PWL segments of the builtin `fsa` device config the
+/// workers run: the stateless oracle must tile the same way.
+const ARRAY: usize = 128;
+const SEGMENTS: usize = 8;
+
+fn cfg(devices: usize, kv_pages: usize, page_size: usize) -> RunConfig {
+    RunConfig {
+        devices,
+        max_batch: 8,
+        batch_timeout_cycles: 50_000,
+        queue_depth: 64,
+        artifacts_dir: "artifacts".into(),
+        backend: BackendKind::Reference,
+        num_heads: 4,
+        num_kv_heads: 2,
+        kv_cache_pages: kv_pages,
+        kv_page_size: page_size,
+        kv_eviction: EvictionPolicy::Lru,
+    }
+}
+
+/// Client-side mirror of one session: the full K/V history per KV
+/// head, used for stateless full-prefix recomputation.
+struct Mirror {
+    session: u64,
+    heads: usize,
+    kv_heads: usize,
+    d: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    step: u64,
+}
+
+impl Mirror {
+    fn new(session: u64, heads: usize, kv_heads: usize, d: usize) -> Mirror {
+        Mirror {
+            session,
+            heads,
+            kv_heads,
+            d,
+            k: vec![Vec::new(); kv_heads],
+            v: vec![Vec::new(); kv_heads],
+            step: 0,
+        }
+    }
+
+    fn prefill(&mut self, rng: &mut SplitMix64, id: u64, seq: usize) -> AttentionRequest {
+        let q = rng.normal_matrix(self.heads * seq, self.d);
+        let k = rng.normal_matrix(self.kv_heads * seq, self.d);
+        let v = rng.normal_matrix(self.kv_heads * seq, self.d);
+        for h in 0..self.kv_heads {
+            self.k[h].extend_from_slice(&k[h * seq * self.d..(h + 1) * seq * self.d]);
+            self.v[h].extend_from_slice(&v[h * seq * self.d..(h + 1) * seq * self.d]);
+        }
+        AttentionRequest::prefill(id, self.session, seq, self.d, self.heads, self.kv_heads, q, k, v)
+    }
+
+    /// Build the next decode request and return it with the per-head
+    /// stateless oracle outputs over the full prefix (computed exactly
+    /// as the device's reference backend computes them: `decode_pwl`
+    /// tiled at the array size).
+    fn decode(&mut self, rng: &mut SplitMix64, id: u64) -> (AttentionRequest, Vec<f32>) {
+        let d = self.d;
+        let q = rng.normal_matrix(self.heads, d);
+        let k = rng.normal_matrix(self.kv_heads, d);
+        let v = rng.normal_matrix(self.kv_heads, d);
+        for h in 0..self.kv_heads {
+            self.k[h].extend_from_slice(&k[h * d..(h + 1) * d]);
+            self.v[h].extend_from_slice(&v[h * d..(h + 1) * d]);
+        }
+        let group = self.heads / self.kv_heads;
+        let mut want = Vec::with_capacity(self.heads * d);
+        for head in 0..self.heads {
+            let kv = head / group;
+            want.extend_from_slice(&decode_pwl(
+                &q[head * d..(head + 1) * d],
+                &self.k[kv],
+                &self.v[kv],
+                d,
+                ARRAY,
+                SEGMENTS,
+            ));
+        }
+        let req =
+            AttentionRequest::decode(id, self.session, self.step, d, self.heads, self.kv_heads, q, k, v);
+        self.step += 1;
+        (req, want)
+    }
+}
+
+/// ISSUE acceptance: prefill at L=256, decode 64 steps, every step
+/// bitwise-identical to stateless recomputation; all steps after the
+/// prefill are cache hits on an ample cache.
+#[test]
+fn decode_session_is_bitwise_stateless_recompute() {
+    let (seq, d, steps) = (256usize, 32usize, 64usize);
+    let coord = Coordinator::start(cfg(2, 256, 16)).unwrap();
+    let mut rng = SplitMix64::new(2027);
+    let mut mirror = Mirror::new(1, 4, 2, d);
+
+    let resp = coord.submit_wait(mirror.prefill(&mut rng, 1, seq)).unwrap();
+    assert!(resp.output.is_ok(), "{:?}", resp.output);
+    assert_eq!(resp.shards, 4);
+
+    let mut hits = 0usize;
+    let mut devices_seen = Vec::new();
+    for i in 0..steps {
+        let (req, want) = mirror.decode(&mut rng, 100 + i as u64);
+        let resp = coord.submit_wait(req).unwrap();
+        let got = resp.output.expect("decode step succeeds");
+        assert_eq!(got, want, "step {i} diverged from stateless recompute");
+        assert_eq!(resp.shards, 4);
+        hits += resp.kv_hits;
+        devices_seen.push(resp.devices_used.clone());
+    }
+    // Every decode shard after the prefill was served from pages.
+    assert_eq!(hits, 4 * steps, "expected pure hits on an ample cache");
+    // Sticky placement: each step lands on the same device set.
+    assert!(devices_seen.windows(2).all(|w| w[0] == w[1]), "{devices_seen:?}");
+
+    // Lifecycle: close succeeds once, then the session is gone.
+    let resp = coord.submit_wait(AttentionRequest::close(900, 1)).unwrap();
+    assert!(resp.output.is_ok());
+    assert!(!coord.sessions.contains(1));
+    let resp = coord.submit_wait(AttentionRequest::close(901, 1)).unwrap();
+    assert!(resp.output.is_err(), "double close must error");
+
+    let o = std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(coord.metrics.sessions_opened.load(o), 1);
+    assert_eq!(coord.metrics.sessions_closed.load(o), 1);
+    assert_eq!(coord.metrics.decode_steps.load(o), steps);
+    assert_eq!(coord.metrics.kv_hits.load(o), (4 * steps) as u64);
+    assert_eq!(coord.metrics.kv_misses.load(o), 0);
+    coord.shutdown();
+}
+
+/// The eviction → recompute → re-cache cycle: a second session's
+/// prefill evicts the first from a tiny cache; the first session's
+/// next step misses (recompute fallback, still bitwise-exact) and
+/// re-caches, so the step after that hits again.
+#[test]
+fn eviction_recompute_recache_cycle_stays_bitwise_exact() {
+    let (seq, d) = (64usize, 16usize);
+    // One device so placement is deterministic.  Each session needs
+    // ceil(64/16) = 4 pages per KV stream x 2 KV heads = 8 pages (+1
+    // as it grows); 12 pages cannot hold two sessions.
+    let coord = Coordinator::start(cfg(1, 12, 16)).unwrap();
+    let mut rng = SplitMix64::new(99);
+    let mut a = Mirror::new(10, 4, 2, d);
+    let mut b = Mirror::new(20, 4, 2, d);
+
+    assert!(coord.submit_wait(a.prefill(&mut rng, 1, seq)).unwrap().output.is_ok());
+
+    // A decodes warm: pure hits.
+    let (req, want) = a.decode(&mut rng, 2);
+    let resp = coord.submit_wait(req).unwrap();
+    assert_eq!(resp.output.unwrap(), want);
+    assert_eq!((resp.kv_hits, resp.kv_misses), (4, 0));
+
+    // B's prefill forces A's streams out (LRU).
+    assert!(coord.submit_wait(b.prefill(&mut rng, 3, seq)).unwrap().output.is_ok());
+    let o = std::sync::atomic::Ordering::Relaxed;
+    assert!(coord.metrics.kv_evictions.load(o) > 0, "B must evict A");
+
+    // A's next step: each KV group's first shard misses, recomputes
+    // from the host tier and re-caches; its groupmate then hits the
+    // re-cached stream.  Outputs stay identical either way.
+    let (req, want) = a.decode(&mut rng, 4);
+    let resp = coord.submit_wait(req).unwrap();
+    assert_eq!(resp.output.unwrap(), want, "miss path diverged");
+    assert_eq!(
+        (resp.kv_misses, resp.kv_hits),
+        (2, 2),
+        "one miss + one groupmate hit per KV group"
+    );
+
+    // Re-cached: the following step hits again (B in turn was evicted
+    // by A's re-cache, completing the cycle).
+    let (req, want) = a.decode(&mut rng, 5);
+    let resp = coord.submit_wait(req).unwrap();
+    assert_eq!(resp.output.unwrap(), want);
+    assert_eq!((resp.kv_hits, resp.kv_misses), (4, 0));
+
+    // And B now misses, recomputes, stays exact.
+    let (req, want) = b.decode(&mut rng, 6);
+    let resp = coord.submit_wait(req).unwrap();
+    assert_eq!(resp.output.unwrap(), want);
+    assert_eq!(resp.kv_misses, 2);
+
+    coord.shutdown();
+}
+
+/// Session-id reuse after close: device caches reap closed streams
+/// lazily, so a same-length leftover of the dead predecessor can
+/// still be resident when the reused id prefills on the same device.
+/// The incarnation epoch must keep it from ever being served.
+#[test]
+fn reused_session_id_never_serves_the_dead_predecessors_kv() {
+    let (seq, d) = (64usize, 16usize);
+    // One device, ample cache: the old streams stay resident (no
+    // capacity pressure ever reaps them) — the worst case for reuse.
+    let coord = Coordinator::start(cfg(1, 64, 16)).unwrap();
+    let mut rng = SplitMix64::new(7);
+
+    // First incarnation of id 5: prefill, then close immediately —
+    // the resident dead stream keeps exactly the prefill length, so
+    // an epoch-blind "groupmate already inserted" length check would
+    // skip the new prefill's insert (the original bug).
+    let mut first = Mirror::new(5, 4, 2, d);
+    assert!(coord.submit_wait(first.prefill(&mut rng, 1, seq)).unwrap().output.is_ok());
+    assert!(coord.submit_wait(AttentionRequest::close(3, 5)).unwrap().output.is_ok());
+
+    // Second incarnation, same id, same shapes, fresh K/V.  Its
+    // prefill has the same length as the resident dead stream — the
+    // epoch check must force a replace, not a skip.
+    let mut second = Mirror::new(5, 4, 2, d);
+    assert!(coord.submit_wait(second.prefill(&mut rng, 4, seq)).unwrap().output.is_ok());
+    for i in 0..3 {
+        let (req, want) = second.decode(&mut rng, 10 + i);
+        let resp = coord.submit_wait(req).unwrap();
+        assert_eq!(
+            resp.output.unwrap(),
+            want,
+            "step {i} of the reused id served stale predecessor K/V"
+        );
+        assert_eq!((resp.kv_hits, resp.kv_misses), (4, 0), "fresh streams must hit");
+    }
+    coord.shutdown();
+}
+
+/// Lifecycle validation is answered with error responses, never
+/// panics, and never touches the pool.
+#[test]
+fn lifecycle_violations_get_error_responses() {
+    let d = 8;
+    let coord = Coordinator::start(cfg(1, 32, 4)).unwrap();
+    let mut rng = SplitMix64::new(5);
+
+    // Decode before prefill.
+    let req = AttentionRequest::decode(
+        1, 7, 0, d, 4, 2,
+        rng.normal_matrix(4, d), rng.normal_matrix(2, d), rng.normal_matrix(2, d),
+    );
+    let resp = coord.submit_wait(req).unwrap();
+    assert!(resp.output.unwrap_err().contains("not open"));
+
+    // Prefill, then a double prefill and an out-of-order step.
+    let mut m = Mirror::new(7, 4, 2, d);
+    assert!(coord.submit_wait(m.prefill(&mut rng, 2, 8)).unwrap().output.is_ok());
+    let mut m2 = Mirror::new(7, 4, 2, d);
+    let resp = coord.submit_wait(m2.prefill(&mut rng, 3, 8)).unwrap();
+    assert!(resp.output.unwrap_err().contains("already open"));
+
+    let req = AttentionRequest::decode(
+        4, 7, 5, d, 4, 2,
+        rng.normal_matrix(4, d), rng.normal_matrix(2, d), rng.normal_matrix(2, d),
+    );
+    let resp = coord.submit_wait(req).unwrap();
+    assert!(resp.output.unwrap_err().contains("expected decode step 0"));
+
+    // The valid step still works after the rejected ones.
+    let (req, want) = m.decode(&mut rng, 5);
+    assert_eq!(coord.submit_wait(req).unwrap().output.unwrap(), want);
+
+    let o = std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(coord.metrics.failed.load(o), 3);
+    coord.shutdown();
+}
+
+/// The perfmodel backs the bench's scaling claim: cached decode cost
+/// and bytes are O(L) while the miss recompute is O(L²) — doubling the
+/// prefix doubles one and quadruples the other.
+#[test]
+fn decode_perfmodel_scaling_is_linear_vs_quadratic() {
+    let cfg = fsa::config::AccelConfig::builtin("fsa").unwrap();
+    let ls = [1024usize, 2048, 4096, 8192];
+    let hit: Vec<_> = ls
+        .iter()
+        .map(|&l| fsa_decode_perf(&cfg, l, 128, true, Variant::DualPath, 8))
+        .collect();
+    let miss: Vec<_> = ls
+        .iter()
+        .map(|&l| fsa_decode_perf(&cfg, l, 128, false, Variant::DualPath, 8))
+        .collect();
+    for w in hit.windows(2) {
+        let bytes = w[1].bytes_streamed as f64 / w[0].bytes_streamed as f64;
+        let cycles = w[1].step_cycles as f64 / w[0].step_cycles as f64;
+        assert!((bytes - 2.0).abs() < 0.05, "O(L) bytes: {bytes}");
+        assert!(cycles > 1.7 && cycles < 2.3, "O(L) cycles: {cycles}");
+    }
+    for w in miss.windows(2) {
+        let rc = w[1].recompute_cycles as f64 / w[0].recompute_cycles as f64;
+        assert!(rc > 3.4 && rc < 4.6, "O(L²) recompute: {rc}");
+    }
+}

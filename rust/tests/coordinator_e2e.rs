@@ -30,6 +30,7 @@ fn cfg(devices: usize) -> RunConfig {
         backend: fsa::config::BackendKind::Pjrt,
         num_heads: 1,
         num_kv_heads: 1,
+        ..RunConfig::default()
     }
 }
 

@@ -20,6 +20,7 @@ fn cfg(devices: usize) -> RunConfig {
         backend: BackendKind::Reference,
         num_heads: 8,
         num_kv_heads: 2,
+        ..RunConfig::default()
     }
 }
 

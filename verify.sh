@@ -26,4 +26,18 @@ cargo test -q
 echo "== cargo doc --no-deps (warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
+# Lint when clippy is installed (optional in minimal toolchains).
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy (warnings are errors) =="
+    cargo clippy -- -D warnings
+else
+    echo "== cargo clippy not installed; skipping lint =="
+fi
+
+# Optional stage: every bench target at smoke iterations (exit 0 check).
+if [ "${VERIFY_BENCH:-0}" = "1" ]; then
+    echo "== make bench-smoke (VERIFY_BENCH=1) =="
+    make bench-smoke
+fi
+
 echo "verify OK"
