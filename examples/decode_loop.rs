@@ -56,6 +56,7 @@ fn main() -> fsa::Result<()> {
         kv_cache_pages: kv_pages,
         kv_page_size: page_size,
         kv_eviction: EvictionPolicy::Lru,
+        ..RunConfig::default()
     })?;
 
     // Client-side mirror: full K/V history per KV head, for stateless

@@ -20,7 +20,7 @@
 //! Results are recorded in EXPERIMENTS.md.
 //!
 //!     cargo run --release --example serve_attention -- \
-//!         [--devices 2 --heads 8 --kv-heads 2 --backend auto]
+//!         [--devices 2 --heads 8 --kv-heads 2 --backend auto --mask none|causal]
 
 use std::time::Instant;
 
@@ -28,9 +28,10 @@ use fsa::cli::Args;
 use fsa::config::{AccelConfig, RunConfig};
 use fsa::coordinator::request::AttentionRequest;
 use fsa::coordinator::Coordinator;
-use fsa::numerics::reference::{mat_error, sdpa, Mat};
+use fsa::mask::MaskKind;
+use fsa::numerics::reference::{mat_error, sdpa_masked, Mat};
 use fsa::numerics::SplitMix64;
-use fsa::perfmodel::multi_head_perf;
+use fsa::perfmodel::multi_head_perf_masked;
 use fsa::schedule::Variant;
 
 fn main() -> fsa::Result<()> {
@@ -40,12 +41,13 @@ fn main() -> fsa::Result<()> {
     let heads = args.get("heads", 8usize)?;
     let kv_heads = args.get("kv-heads", 2usize)?;
     let artifacts = args.flag("artifacts").unwrap_or("artifacts").to_string();
+    let mask: MaskKind = args.flag("mask").unwrap_or("none").parse()?;
     let d = 128usize;
     let buckets = args.get_list("buckets", &[128, 512])?;
 
     println!("== FSA end-to-end serving driver ==");
     println!(
-        "devices={devices} buckets={buckets:?} heads={heads}/{kv_heads} requests={}",
+        "devices={devices} buckets={buckets:?} heads={heads}/{kv_heads} mask={mask} requests={}",
         per_bucket * buckets.len()
     );
 
@@ -58,6 +60,7 @@ fn main() -> fsa::Result<()> {
         backend: args.flag("backend").unwrap_or("auto").parse()?,
         num_heads: heads,
         num_kv_heads: kv_heads,
+        mask,
         ..RunConfig::default()
     };
     let coord = Coordinator::start(cfg)?;
@@ -69,16 +72,19 @@ fn main() -> fsa::Result<()> {
     for (i, &seq) in buckets.iter().enumerate() {
         for j in 0..per_bucket {
             let id = (i * per_bucket + j) as u64;
-            requests.push(AttentionRequest::gqa(
-                id,
-                seq,
-                d,
-                heads,
-                kv_heads,
-                rng.spiky_matrix(heads * seq, d),
-                rng.spiky_matrix(kv_heads * seq, d),
-                rng.spiky_matrix(kv_heads * seq, d),
-            ));
+            requests.push(
+                AttentionRequest::gqa(
+                    id,
+                    seq,
+                    d,
+                    heads,
+                    kv_heads,
+                    rng.spiky_matrix(heads * seq, d),
+                    rng.spiky_matrix(kv_heads * seq, d),
+                    rng.spiky_matrix(kv_heads * seq, d),
+                )
+                .with_mask(mask),
+            );
         }
     }
 
@@ -108,10 +114,11 @@ fn main() -> fsa::Result<()> {
         let head_elems = req.seq_len * d;
         for h in 0..heads {
             let (k, v) = req.head_kv(req.kv_head_for(h));
-            let want = sdpa(
+            let want = sdpa_masked(
                 &Mat::new(req.seq_len, d, req.head_q(h).to_vec()),
                 &Mat::new(req.seq_len, d, k.to_vec()),
                 &Mat::new(req.seq_len, d, v.to_vec()),
+                req.mask,
             );
             let got = Mat::new(
                 req.seq_len,
@@ -158,7 +165,9 @@ fn main() -> fsa::Result<()> {
         device_seconds * 1e3
     );
     for &seq in &buckets {
-        let model = multi_head_perf(&fsa, seq, d, heads, kv_heads, devices, Variant::DualPath, fsa.pwl_segments);
+        let model = multi_head_perf_masked(
+            &fsa, seq, d, heads, kv_heads, devices, Variant::DualPath, fsa.pwl_segments, mask,
+        );
         let measured: Vec<f64> = responses
             .iter()
             .filter(|(r, _)| r.seq_len == seq)

@@ -105,6 +105,7 @@ fn live_run(
         kv_cache_pages: kv_pages,
         kv_page_size: 16,
         kv_eviction: EvictionPolicy::Lru,
+        ..RunConfig::default()
     })
     .expect("coordinator boots on the reference backend");
 

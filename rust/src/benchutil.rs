@@ -33,13 +33,33 @@ pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
         f();
         samples.push(t0.elapsed());
     }
+    stats_from(samples)
+}
+
+/// Nearest-rank selection on an ascending-sorted slice: percentile `p`
+/// of `n` samples is the `ceil(p·n)`-th smallest (rank clamped into
+/// range, so `p = 0` returns the minimum and `p = 1` the maximum).
+/// The single implementation shared by [`Stats`] and the serving-side
+/// `Metrics::latency_percentiles`, so bench and serving metrics report
+/// the same statistic.
+pub fn nearest_rank<T: Copy>(sorted: &[T], p: f64) -> T {
+    assert!(!sorted.is_empty(), "need at least one sample");
+    sorted[((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1]
+}
+
+/// Reduce raw samples to [`Stats`] with [`nearest_rank`] percentile
+/// selection.  (The old floor-rank indexing (`samples[iters / 2]`,
+/// `samples[iters * 95 / 100]`) was off by one position on exact-rank
+/// sample counts.)
+fn stats_from(mut samples: Vec<Duration>) -> Stats {
     samples.sort();
+    let n = samples.len();
     let sum: Duration = samples.iter().sum();
     Stats {
-        iters,
-        mean: sum / iters as u32,
-        median: samples[iters / 2],
-        p95: samples[(iters * 95 / 100).min(iters - 1)],
+        iters: n,
+        mean: sum / n as u32,
+        median: nearest_rank(&samples, 0.5),
+        p95: nearest_rank(&samples, 0.95),
         min: samples[0],
     }
 }
@@ -147,6 +167,34 @@ mod tests {
         assert_eq!(st.iters, 16);
         assert!(st.min <= st.median && st.median <= st.p95);
         assert!(st.mean.as_nanos() > 0);
+    }
+
+    /// Satellite: nearest-rank selection pinned on fixed vectors, the
+    /// same style as the Metrics::latency_percentiles regression tests.
+    #[test]
+    fn nearest_rank_on_fixed_sample_vectors() {
+        let ms = |v: &[u64]| v.iter().map(|&x| Duration::from_millis(x)).collect::<Vec<_>>();
+        // 20 samples 1..=20: p50 is the 10th smallest, p95 the 19th.
+        let st = stats_from(ms(&(1..=20).collect::<Vec<_>>()));
+        assert_eq!(st.median, Duration::from_millis(10));
+        assert_eq!(st.p95, Duration::from_millis(19));
+        assert_eq!(st.min, Duration::from_millis(1));
+        // 10 samples: the old floor rank picked the 6th for the median
+        // and nearest rank picks the 5th; p95 is the 10th either way.
+        let st = stats_from(ms(&(1..=10).collect::<Vec<_>>()));
+        assert_eq!(st.median, Duration::from_millis(5));
+        assert_eq!(st.p95, Duration::from_millis(10));
+        // Single sample: every statistic is that sample.
+        let st = stats_from(ms(&[7]));
+        assert_eq!((st.median, st.p95, st.min), (
+            Duration::from_millis(7),
+            Duration::from_millis(7),
+            Duration::from_millis(7),
+        ));
+        // Unsorted input is sorted before selection.
+        let st = stats_from(ms(&[9, 1, 5]));
+        assert_eq!(st.median, Duration::from_millis(5));
+        assert_eq!(st.iters, 3);
     }
 
     #[test]

@@ -11,6 +11,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, ensure, Context};
 
+use crate::mask::MaskKind;
+
 /// Parsed INI document: section -> key -> value (last write wins).
 #[derive(Clone, Debug, Default)]
 pub struct Ini {
@@ -22,7 +24,7 @@ impl Ini {
         let mut doc = Ini::default();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
-            let line = raw.split(|c| c == '#' || c == ';').next().unwrap_or("").trim();
+            let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
@@ -68,6 +70,21 @@ impl Ini {
                 .map_err(|e| anyhow!("[{section}] {key} = {v:?}: {e}")),
         }
     }
+}
+
+/// Strip an INI comment: `#`/`;` starts a comment only at the start of
+/// the line or after whitespace, so values that legitimately contain
+/// them (paths, `artifact_dir = runs#3`) survive.  (The old
+/// split-at-first-occurrence corrupted such values.)
+fn strip_comment(raw: &str) -> &str {
+    let mut prev_is_ws = true;
+    for (i, ch) in raw.char_indices() {
+        if (ch == '#' || ch == ';') && prev_is_ws {
+            return &raw[..i];
+        }
+        prev_is_ws = ch.is_whitespace();
+    }
+    raw
 }
 
 /// Vector/scalar unit description for baseline machines (paper Fig. 1 &
@@ -332,6 +349,20 @@ pub struct RunConfig {
     pub kv_page_size: usize,
     /// Eviction policy of the per-device KV caches.
     pub kv_eviction: EvictionPolicy,
+    /// Mask the *drivers* (`fsa serve --mask`, examples, benches) stamp
+    /// onto the synthetic requests they generate.  This is a
+    /// driver-side convenience only: the coordinator itself never
+    /// applies it — a request is served with exactly the mask it
+    /// carries (`AttentionRequest::with_mask`), and library callers
+    /// must stamp their own.  `causal` is transformer prefill; padding
+    /// masks are stamped per request by `AttentionRequest::padded`,
+    /// not configured here.
+    pub mask: MaskKind,
+    /// Simulated device clock in GHz: converts `batch_timeout_cycles`
+    /// to host time and prices device seconds.  Defaults to the paper's
+    /// 1.5 GHz FSA clock (the batcher used to hard-code it, silently
+    /// flushing batches early for any other configured clock).
+    pub freq_ghz: f64,
 }
 
 impl Default for RunConfig {
@@ -348,6 +379,8 @@ impl Default for RunConfig {
             kv_cache_pages: 4096,
             kv_page_size: 16,
             kv_eviction: EvictionPolicy::Lru,
+            mask: MaskKind::None,
+            freq_ghz: 1.5,
         }
     }
 }
@@ -371,6 +404,11 @@ impl RunConfig {
             "kv_cache_pages ({}) and kv_page_size ({}) must be >= 1",
             self.kv_cache_pages,
             self.kv_page_size
+        );
+        ensure!(
+            self.freq_ghz > 0.0,
+            "freq_ghz must be positive, got {}",
+            self.freq_ghz
         );
         Ok(())
     }
@@ -410,6 +448,12 @@ impl RunConfig {
         }
         if let Some(v) = ini.get_parsed::<EvictionPolicy>(sec, "kv_eviction")? {
             cfg.kv_eviction = v;
+        }
+        if let Some(v) = ini.get_parsed::<MaskKind>(sec, "mask")? {
+            cfg.mask = v;
+        }
+        if let Some(v) = ini.get_parsed::<f64>(sec, "freq_ghz")? {
+            cfg.freq_ghz = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -475,6 +519,39 @@ mod tests {
         assert!(Ini::parse("[unterminated\n").is_err());
         assert!(Ini::parse("novalue\n").is_err());
         assert!(Ini::parse("= empty\n").is_err());
+    }
+
+    #[test]
+    fn comment_markers_inside_values_survive() {
+        // Regression (satellite): `#`/`;` only open a comment at line
+        // start or after whitespace — values containing them are legal.
+        let text = "[run]\nartifacts_dir = runs#3\npath = a;b#c\n";
+        let ini = Ini::parse(text).unwrap();
+        assert_eq!(ini.get("run", "artifacts_dir"), Some("runs#3"));
+        assert_eq!(ini.get("run", "path"), Some("a;b#c"));
+    }
+
+    #[test]
+    fn trailing_and_full_line_comments_still_work() {
+        let text = "# leading\n  ; indented comment\n[run]\ndevices = 4 # trailing\nmax_batch = 2 ; semi\n";
+        let ini = Ini::parse(text).unwrap();
+        assert_eq!(ini.get("run", "devices"), Some("4"));
+        assert_eq!(ini.get("run", "max_batch"), Some("2"));
+    }
+
+    #[test]
+    fn run_config_mask_and_freq_knobs() {
+        let text = "[run]\nmask = causal\nfreq_ghz = 1.0\n";
+        let run = RunConfig::from_ini(&Ini::parse(text).unwrap()).unwrap();
+        assert_eq!(run.mask, MaskKind::Causal);
+        assert_eq!(run.freq_ghz, 1.0);
+        // Defaults: unmasked at the paper's 1.5 GHz.
+        let dflt = RunConfig::default();
+        assert_eq!(dflt.mask, MaskKind::None);
+        assert_eq!(dflt.freq_ghz, 1.5);
+        // Bad values are rejected at load.
+        assert!(RunConfig::from_ini(&Ini::parse("[run]\nmask = diag\n").unwrap()).is_err());
+        assert!(RunConfig::from_ini(&Ini::parse("[run]\nfreq_ghz = 0\n").unwrap()).is_err());
     }
 
     #[test]

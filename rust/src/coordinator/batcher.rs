@@ -5,8 +5,9 @@
 //!
 //! A multi-head request enters as one [`Envelope`] and leaves as
 //! `num_heads` [`ShardEnvelope`]s; shards of *different* requests with
-//! the same `(seq_len, d)` shape share batches, so head-sharding and
-//! cross-request batching compose.
+//! the same `(seq_len, d, mask)` shape share batches, so head-sharding
+//! and cross-request batching compose (masked and unmasked shards are
+//! different kernels and never share a batch).
 //!
 //! The batcher is also the session lifecycle gate (DESIGN.md §5):
 //! prefill registers the session, decode validates step order and
@@ -20,38 +21,66 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::mask::MaskKind;
+
 use super::metrics::Metrics;
 use super::request::{AttentionResponse, Envelope};
 use super::router::Router;
 use super::session::{SessionOp, SessionTable};
 use super::shard::{explode, ShardEnvelope};
 
+/// Batch compatibility key: shards sharing it may run in one device
+/// batch (same kernel shape) — sequence length, head dim, and mask
+/// *kind* (`std::mem::Discriminant`): masked and unmasked shards are
+/// different kernels, but two `PaddingKeys` requests with different
+/// `valid` prefixes share one (execution is per-shard with the shard's
+/// own mask, so batching them together is safe — keying on the exact
+/// `valid` would put every padded length in its own group and defeat
+/// cross-request batching on exactly the padded traffic).
+type GroupKey = (usize, usize, std::mem::Discriminant<MaskKind>);
+
 pub struct Batcher {
     max_batch: usize,
     /// Timeout expressed in simulated device cycles in the config; the
-    /// batcher converts at the FSA clock (1.5 GHz) to a host duration.
+    /// batcher converts at the *configured* clock (`RunConfig::freq_ghz`)
+    /// to a host duration.  (It used to hard-code the paper's 1.5 GHz,
+    /// silently flushing batches 1.5x early on a 1.0 GHz config.)
     timeout: Duration,
     /// Whether the pool's resolved backend can execute decode steps
     /// (PJRT has no `fsa_decode` artifact kind — the coordinator
     /// resolves this once at start, including the `auto` case).
     /// Incapable pools reject decode *before* the step is consumed.
     decode_capable: bool,
+    /// Whether the pool's resolved backend can execute masked shards
+    /// (the AOT artifacts take no mask input, DESIGN.md §6).  Incapable
+    /// pools reject masked requests at admission — critically *before*
+    /// a masked prefill opens a session that every shard would then
+    /// fail, which would leave the session orphaned-open.
+    mask_capable: bool,
 }
 
 impl Batcher {
-    pub fn new(max_batch: usize, timeout_cycles: u64, decode_capable: bool) -> Batcher {
+    pub fn new(
+        max_batch: usize,
+        timeout_cycles: u64,
+        freq_ghz: f64,
+        decode_capable: bool,
+        mask_capable: bool,
+    ) -> Batcher {
+        assert!(freq_ghz > 0.0, "clock must be positive (RunConfig::validate)");
         Batcher {
             max_batch: max_batch.max(1),
-            timeout: Duration::from_nanos((timeout_cycles as f64 / 1.5) as u64),
+            timeout: Duration::from_nanos((timeout_cycles as f64 / freq_ghz) as u64),
             decode_capable,
+            mask_capable,
         }
     }
 
     /// Main loop: drain the ingress channel, resolve session lifecycle
     /// ops, explode each dispatched request into head shards, group
-    /// shards by `(seq_len, d)`, and dispatch a group when it reaches
-    /// `max_batch` shards or its oldest member exceeds the timeout.
-    /// Exits when the ingress disconnects.
+    /// shards by `(seq_len, d, mask)`, and dispatch a group when it
+    /// reaches `max_batch` shards or its oldest member exceeds the
+    /// timeout.  Exits when the ingress disconnects.
     pub fn run(
         &self,
         rx: mpsc::Receiver<Envelope>,
@@ -59,13 +88,18 @@ impl Batcher {
         metrics: Arc<Metrics>,
         sessions: Arc<SessionTable>,
     ) {
-        // (seq_len, d) -> pending shards.
-        let mut groups: Vec<((usize, usize), Vec<ShardEnvelope>)> = Vec::new();
-        let admit = |env: Envelope, groups: &mut Vec<((usize, usize), Vec<ShardEnvelope>)>| {
-            let Some(env) = admit_session_op(env, &sessions, &metrics, self.decode_capable) else {
+        let mut groups: Vec<(GroupKey, Vec<ShardEnvelope>)> = Vec::new();
+        let admit = |env: Envelope, groups: &mut Vec<(GroupKey, Vec<ShardEnvelope>)>| {
+            let Some(env) = admit_session_op(
+                env,
+                &sessions,
+                &metrics,
+                self.decode_capable,
+                self.mask_capable,
+            ) else {
                 return; // answered in place (close / lifecycle error)
             };
-            let key = (env.req.seq_len, env.req.d);
+            let key = (env.req.seq_len, env.req.d, std::mem::discriminant(&env.req.mask));
             let shards = explode(env);
             match groups.iter_mut().find(|(k, _)| *k == key) {
                 Some((_, g)) => g.extend(shards),
@@ -136,14 +170,32 @@ impl Batcher {
 /// Resolve a request's [`SessionOp`] against the session table.
 /// Returns the (possibly prefix-stamped) envelope when it should be
 /// dispatched to the pool, `None` when it was answered in place
-/// (close, or a lifecycle error).
+/// (close, or a lifecycle/capability error).
 fn admit_session_op(
     mut env: Envelope,
     sessions: &SessionTable,
     metrics: &Metrics,
     decode_capable: bool,
+    mask_capable: bool,
 ) -> Option<Envelope> {
     let o = std::sync::atomic::Ordering::Relaxed;
+    // Reject masked requests on a mask-incapable (PJRT) pool up front:
+    // every shard would fail at the device anyway, and a masked
+    // *prefill* must not get as far as opening a session it can never
+    // serve (the session would be left orphaned-open).
+    if !mask_capable && !env.req.mask.is_none() {
+        let mask = env.req.mask;
+        reply_inline(
+            env,
+            Err(format!(
+                "the pool's PJRT backend takes no attention mask (got {mask}); \
+                 restart with backend=reference, or export masked artifacts \
+                 (DESIGN.md §6)"
+            )),
+            metrics,
+        );
+        return None;
+    }
     match env.req.op {
         SessionOp::Stateless => Some(env),
         SessionOp::Prefill { session } => match sessions.open(session, &env.req) {
@@ -243,6 +295,75 @@ mod tests {
             .collect()
     }
 
+    /// Satellite: the batch timeout converts cycles at the configured
+    /// clock, not a hard-coded 1.5 GHz — 150k cycles are 100 µs at
+    /// 1.5 GHz but 150 µs at 1.0 GHz (the old code flushed 1.5× early).
+    #[test]
+    fn timeout_converts_at_the_configured_clock() {
+        let at = |ghz: f64| Batcher::new(4, 150_000, ghz, true, true).timeout;
+        assert_eq!(at(1.5), Duration::from_nanos(100_000));
+        assert_eq!(at(1.0), Duration::from_nanos(150_000));
+        assert_eq!(at(3.0), Duration::from_nanos(50_000));
+    }
+
+    #[test]
+    fn group_keys_split_on_mask_kind_but_not_padding_valid() {
+        // Masked and unmasked shards are different kernels and must not
+        // share a batch; two key-padding requests padded to the same
+        // bucket from different original lengths MUST share one (else
+        // every padded length waits out its own batch timeout).
+        let key = |m: MaskKind| std::mem::discriminant(&m);
+        assert_ne!(key(MaskKind::None), key(MaskKind::Causal));
+        assert_ne!(key(MaskKind::None), key(MaskKind::PaddingKeys { valid: 7 }));
+        assert_eq!(
+            key(MaskKind::PaddingKeys { valid: 100 }),
+            key(MaskKind::PaddingKeys { valid: 101 })
+        );
+    }
+
+    #[test]
+    fn masked_requests_rejected_on_mask_incapable_pools_before_any_state() {
+        let sessions = SessionTable::new();
+        let metrics = Metrics::new();
+        let d = 4;
+        let mk = |req: AttentionRequest| -> (Envelope, mpsc::Receiver<AttentionResponse>) {
+            let (tx, rx) = mpsc::channel();
+            (Envelope { req, reply: tx, enqueued: std::time::Instant::now() }, rx)
+        };
+        // A causal prefill on a PJRT pool must be rejected WITHOUT
+        // opening the session (else it would be orphaned-open: every
+        // shard fails at the device, but the id stays registered).
+        let (env, rx) = mk(
+            AttentionRequest::prefill(
+                1, 7, 2, d, 2, 1,
+                vec![0.0; 2 * 2 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
+            )
+            .with_mask(MaskKind::Causal),
+        );
+        assert!(admit_session_op(env, &sessions, &metrics, false, false).is_none());
+        assert!(rx.try_recv().unwrap().output.unwrap_err().contains("no attention mask"));
+        assert!(!sessions.contains(7), "rejected prefill must not open the session");
+
+        // Stateless masked traffic is rejected at admission too.
+        let (env, rx) = mk(
+            AttentionRequest::new(2, 2, d, vec![0.0; 2 * d], vec![0.0; 2 * d], vec![0.0; 2 * d])
+                .with_mask(MaskKind::PaddingKeys { valid: 1 }),
+        );
+        assert!(admit_session_op(env, &sessions, &metrics, false, false).is_none());
+        assert!(rx.try_recv().unwrap().output.is_err());
+
+        // The same requests pass admission on a mask-capable pool.
+        let (env, _rx) = mk(
+            AttentionRequest::prefill(
+                3, 7, 2, d, 2, 1,
+                vec![0.0; 2 * 2 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
+            )
+            .with_mask(MaskKind::Causal),
+        );
+        assert!(admit_session_op(env, &sessions, &metrics, true, true).is_some());
+        assert!(sessions.contains(7));
+    }
+
     #[test]
     fn chunking_respects_max_batch() {
         let g = envs(10, 8);
@@ -291,14 +412,14 @@ mod tests {
         let (env, rx) = mk(AttentionRequest::decode(
             1, 7, 0, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
         ));
-        assert!(admit_session_op(env, &sessions, &metrics, be).is_none());
+        assert!(admit_session_op(env, &sessions, &metrics, be, true).is_none());
         assert!(rx.try_recv().unwrap().output.is_err());
 
         // Prefill opens the session and is stamped with its epoch.
         let (env, _rx) = mk(AttentionRequest::prefill(
             2, 7, 2, d, 2, 1, vec![0.0; 2 * 2 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
         ));
-        let env2 = admit_session_op(env, &sessions, &metrics, be).unwrap();
+        let env2 = admit_session_op(env, &sessions, &metrics, be, true).unwrap();
         assert!(env2.req.epoch > 0);
         assert!(sessions.contains(7));
 
@@ -306,7 +427,7 @@ mod tests {
         let (env, _rx) = mk(AttentionRequest::decode(
             3, 7, 0, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
         ));
-        let env = admit_session_op(env, &sessions, &metrics, be).unwrap();
+        let env = admit_session_op(env, &sessions, &metrics, be, true).unwrap();
         assert_eq!(env.req.prefix_len, 3);
         assert_eq!(env.req.epoch, env2.req.epoch);
 
@@ -317,13 +438,13 @@ mod tests {
         let (env, rx2) = mk(AttentionRequest::decode(
             9, 7, 1, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
         ));
-        assert!(admit_session_op(env, &sessions, &metrics, false).is_none());
+        assert!(admit_session_op(env, &sessions, &metrics, false, true).is_none());
         assert!(rx2.try_recv().unwrap().output.unwrap_err().contains("fsa_decode"));
         assert_eq!(sessions.prefix_len(7), before, "rejected step must not consume state");
 
         // Close is answered in place with an empty success.
         let (env, rx) = mk(AttentionRequest::close(4, 7));
-        assert!(admit_session_op(env, &sessions, &metrics, be).is_none());
+        assert!(admit_session_op(env, &sessions, &metrics, be, true).is_none());
         let resp = rx.try_recv().unwrap();
         assert_eq!(resp.output.unwrap(), Vec::<f32>::new());
         assert!(!sessions.contains(7));

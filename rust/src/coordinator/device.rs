@@ -25,7 +25,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::config::{AccelConfig, RunConfig};
-use crate::perfmodel::{fsa_decode_perf, fsa_flash_perf};
+use crate::perfmodel::{fsa_decode_perf, fsa_flash_perf_masked};
 use crate::runtime::Backend;
 use crate::schedule::Variant;
 
@@ -82,7 +82,10 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     sessions: Arc<SessionTable>,
 ) {
-    let cfg = AccelConfig::builtin("fsa").expect("builtin fsa config");
+    let mut cfg = AccelConfig::builtin("fsa").expect("builtin fsa config");
+    // Device timing runs at the configured clock (also used by the
+    // batcher's timeout conversion — one clock everywhere).
+    cfg.freq_ghz = run_cfg.freq_ghz;
     let artifacts = PathBuf::from(&run_cfg.artifacts_dir);
     let mut backend = match Backend::new(run_cfg.backend, &artifacts, &cfg) {
         Ok(b) => Some(b),
@@ -152,18 +155,23 @@ fn execute_shard(
     match env.ctx {
         ShardCtx::Stateless | ShardCtx::Prefill { .. } => {
             // Per-head device timing: the head runs on one array, seq
-            // padded up to the array dim, head dim capped by it (§8.3).
-            let perf = fsa_flash_perf(
+            // padded up to the array dim, head dim capped by it (§8.3);
+            // the mask prices only the tiles the skipping schedule
+            // issues (≈2x fewer for causal, DESIGN.md §6).
+            let perf = fsa_flash_perf_masked(
                 cfg,
                 req.seq_len.max(cfg.array_size),
                 req.d.min(cfg.array_size),
                 Variant::DualPath,
                 cfg.pwl_segments,
+                req.mask,
             );
             let (k, v) = req.head_kv(shard.kv_head);
             let output = match backend {
                 None => Err("device backend unavailable".to_string()),
-                Some(be) => be.execute_head(req.seq_len, req.d, req.head_q(shard.head), k, v),
+                Some(be) => {
+                    be.execute_head(req.seq_len, req.d, req.head_q(shard.head), k, v, req.mask)
+                }
             };
             if let ShardCtx::Prefill { session, epoch } = env.ctx {
                 // Land the KV group's prefix in the page cache once —

@@ -78,19 +78,19 @@ impl Metrics {
     }
 
     /// (p50, p95, max) host latency, nearest-rank selection: percentile
-    /// `p` of `n` samples is the `ceil(p·n)`-th smallest.  (The old
-    /// `((n-1)·p) as usize` truncation biased p95 low on small
-    /// reservoirs — e.g. the 9th of 10 samples instead of the 10th.)
+    /// `p` of `n` samples is the `ceil(p·n)`-th smallest — one shared
+    /// implementation with the bench harness
+    /// ([`crate::benchutil::nearest_rank`]) so both report the same
+    /// statistic.  (The old `((n-1)·p) as usize` truncation biased p95
+    /// low on small reservoirs — e.g. the 9th of 10 samples instead of
+    /// the 10th.)
     pub fn latency_percentiles(&self) -> (Duration, Duration, Duration) {
         let mut l = super::lock(&self.latencies_ns).clone();
         if l.is_empty() {
             return (Duration::ZERO, Duration::ZERO, Duration::ZERO);
         }
         l.sort_unstable();
-        let pick = |p: f64| {
-            let rank = ((p * l.len() as f64).ceil() as usize).clamp(1, l.len());
-            Duration::from_nanos(l[rank - 1])
-        };
+        let pick = |p: f64| Duration::from_nanos(crate::benchutil::nearest_rank(&l, p));
         (pick(0.5), pick(0.95), pick(1.0))
     }
 

@@ -90,12 +90,18 @@ impl Coordinator {
             sessions.clone(),
         );
 
-        // Resolve decode capability once for the pool: PJRT has no
-        // `fsa_decode` artifact kind, and `auto` lands on PJRT exactly
-        // when the manifest is present and the client boots — probe
-        // with the workers' own resolution logic so decode steps are
-        // rejected up front (never consumed) on an incapable pool.
-        let decode_capable = match cfg.backend {
+        // Resolve the pool's backend capabilities once: PJRT has no
+        // `fsa_decode` artifact kind and its artifacts take no mask
+        // input, and `auto` lands on PJRT exactly when the manifest is
+        // present and the client boots — probe with the workers' own
+        // resolution logic so decode steps and masked requests are
+        // rejected up front on an incapable pool (a decode step is
+        // never consumed, a masked prefill never opens a session its
+        // shards cannot serve).  Both capabilities currently coincide
+        // with "runs on the reference twin"; they are carried
+        // separately because masked-artifact export (DESIGN.md
+        // §future-work) would split them.
+        let on_reference = match cfg.backend {
             BackendKind::Reference => true,
             BackendKind::Pjrt => false,
             BackendKind::Auto => {
@@ -105,9 +111,16 @@ impl Coordinator {
                     .unwrap_or(true)
             }
         };
+        let (decode_capable, mask_capable) = (on_reference, on_reference);
 
         let (ingress, ingress_rx) = mpsc::sync_channel(cfg.queue_depth);
-        let batcher = Batcher::new(cfg.max_batch, cfg.batch_timeout_cycles, decode_capable);
+        let batcher = Batcher::new(
+            cfg.max_batch,
+            cfg.batch_timeout_cycles,
+            cfg.freq_ghz,
+            decode_capable,
+            mask_capable,
+        );
         let m2 = metrics.clone();
         let s2 = sessions.clone();
         let batcher_handle = std::thread::Builder::new()

@@ -12,7 +12,8 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::schedule::{attention_flops, decode_attention_flops};
+use crate::mask::MaskKind;
+use crate::schedule::{decode_attention_flops, masked_attention_flops};
 
 use super::session::{SessionId, SessionOp};
 
@@ -48,6 +49,11 @@ pub struct AttentionRequest {
     /// reused after close; device caches match streams on it).  Stamped
     /// by the batcher after session validation; 0 elsewhere.
     pub epoch: u64,
+    /// Attention mask of this operator (DESIGN.md §6): `Causal` for
+    /// transformer prefill, `PaddingKeys` stamped by [`Self::padded`]
+    /// so bucket padding is exact.  Decode steps take no mask (the step
+    /// row attends the whole prefix); the batcher rejects masked ones.
+    pub mask: MaskKind,
 }
 
 impl AttentionRequest {
@@ -93,7 +99,15 @@ impl AttentionRequest {
             op: SessionOp::Stateless,
             prefix_len: 0,
             epoch: 0,
+            mask: MaskKind::None,
         }
+    }
+
+    /// Builder: set the attention mask (constructors default to
+    /// [`MaskKind::None`], the original unmasked behavior).
+    pub fn with_mask(mut self, mask: MaskKind) -> Self {
+        self.mask = mask;
+        self
     }
 
     /// Open a decode session: full-prefix attention whose K/V the
@@ -152,6 +166,7 @@ impl AttentionRequest {
             op: SessionOp::Close { session },
             prefix_len: 0,
             epoch: 0,
+            mask: MaskKind::None,
         }
     }
 
@@ -182,31 +197,49 @@ impl AttentionRequest {
         )
     }
 
-    /// Whole-operator FLOPs: every query head runs full `4 L² d`
-    /// attention (KV sharing changes memory traffic, not FLOPs).  For a
-    /// decode step the per-head work is one query row over the whole
-    /// prefix, `4 L d` with `L = prefix_len`.
+    /// Whole-operator FLOPs: every query head runs `4 L² d` attention
+    /// when unmasked, mask-reduced counts otherwise (causal ≈ half; see
+    /// [`masked_attention_flops`]).  KV sharing changes memory traffic,
+    /// not FLOPs.  For a decode step the per-head work is one query row
+    /// over the whole prefix, `4 L d` with `L = prefix_len`.
     pub fn flops(&self) -> u64 {
         match self.op {
             SessionOp::Decode { .. } => {
                 self.num_heads as u64
                     * decode_attention_flops(self.prefix_len.max(self.seq_len), self.d)
             }
-            _ => self.num_heads as u64 * attention_flops(self.seq_len, self.d),
+            _ => self.num_heads as u64 * masked_attention_flops(self.seq_len, self.d, self.mask),
         }
     }
 
     /// Zero-pad every head's Q/K/V to a bucketed sequence length.
     ///
-    /// APPROXIMATE for keys: the AOT artifacts take no mask, so padded
-    /// key rows score 0 and receive a small residual softmax weight
-    /// (their V rows are zero, so the output error is a bounded
-    /// denominator inflation).  Padded *query* rows are exact — they are
-    /// sliced away.  The coordinator therefore runs in strict mode by
-    /// default (exact-bucket artifacts only) and callers opt into padding
-    /// explicitly; masked artifacts are listed as future work in
-    /// DESIGN.md §future-work.
+    /// EXACT: the padded request carries a mask that excludes the padded
+    /// key rows from the softmax entirely — an unmasked request is
+    /// stamped `PaddingKeys { valid: seq_len }`, a causal request stays
+    /// causal (its real query rows `i < seq_len` can never see keys
+    /// `j > i`, so the padded tail is already invisible to them).  The
+    /// reference backend's output rows `0..seq_len` are therefore
+    /// bitwise identical to the unpadded request's (pinned by
+    /// `rust/tests/coordinator_masked.rs`); padded *query* rows are the
+    /// caller's to slice away, as before.  (Historical note: padding
+    /// used to be approximate — padded keys scored 0 and took residual
+    /// softmax weight.  The mask removed that, DESIGN.md §6.)  The
+    /// mask-free PJRT artifacts reject masked requests, so strict PJRT
+    /// pools still require exact-bucket artifacts.
+    ///
+    /// Stateless requests only (panics otherwise, like the shape
+    /// asserts — trusted in-process callers): a session prefill's K/V
+    /// becomes the *retained* prefix that every decode step attends, so
+    /// padded zero rows must never enter it — open sessions at their
+    /// exact length instead (the reference backend, which decode
+    /// requires anyway, serves any length).
     pub fn padded(&self, bucket: usize) -> AttentionRequest {
+        assert!(
+            matches!(self.op, SessionOp::Stateless),
+            "padded() is for stateless requests; a session's K/V prefix is retained \
+             for decode, so open sessions at their exact length (DESIGN.md §6)"
+        );
         assert!(bucket >= self.seq_len);
         if bucket == self.seq_len {
             return self.clone();
@@ -232,6 +265,12 @@ impl AttentionRequest {
             op: self.op,
             prefix_len: self.prefix_len,
             epoch: self.epoch,
+            mask: match self.mask {
+                // Mask out the padded keys; re-padding keeps the
+                // original valid prefix.
+                MaskKind::None => MaskKind::PaddingKeys { valid: self.seq_len },
+                m => m,
+            },
         }
     }
 }
@@ -287,6 +326,7 @@ pub struct Envelope {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::schedule::attention_flops;
 
     #[test]
     fn padding_preserves_prefix() {
@@ -296,9 +336,41 @@ mod tests {
         assert_eq!(&p.q[..4], &[1., 2., 3., 4.]);
         assert_eq!(&p.q[4..], &[0.0; 4]);
         assert_eq!(p.id, 1);
-        // No-op when already at bucket size.
+        // Exactness: the padded keys are masked out, not approximated.
+        assert_eq!(p.mask, MaskKind::PaddingKeys { valid: 2 });
+        // No-op when already at bucket size (and no mask stamped).
         let same = r.padded(2);
         assert_eq!(same.q, r.q);
+        assert_eq!(same.mask, MaskKind::None);
+    }
+
+    #[test]
+    fn padding_keeps_existing_masks() {
+        let r = AttentionRequest::new(
+            1, 2, 2, vec![0.0; 4], vec![0.0; 4], vec![0.0; 4],
+        );
+        // A causal request stays causal: its real query rows already
+        // cannot see the padded tail.
+        let causal = r.clone().with_mask(MaskKind::Causal).padded(4);
+        assert_eq!(causal.mask, MaskKind::Causal);
+        // Re-padding keeps the original valid prefix.
+        let twice = r.padded(4).padded(8);
+        assert_eq!(twice.mask, MaskKind::PaddingKeys { valid: 2 });
+        assert_eq!(twice.seq_len, 8);
+    }
+
+    #[test]
+    fn masked_flops_accounting() {
+        let (seq, d) = (8usize, 4usize);
+        let m = vec![0.0f32; seq * d];
+        let r = AttentionRequest::new(1, seq, d, m.clone(), m.clone(), m);
+        assert_eq!(r.flops(), attention_flops(seq, d));
+        let causal = r.clone().with_mask(MaskKind::Causal);
+        assert_eq!(causal.flops(), 2 * 8 * 9 * 4);
+        assert!(causal.flops() < r.flops());
+        let padded = r.clone().with_mask(MaskKind::PaddingKeys { valid: 3 });
+        assert_eq!(padded.flops(), 4 * 8 * 3 * 4);
+        assert_eq!(r.mask, MaskKind::None, "constructors default unmasked");
     }
 
     #[test]
@@ -360,6 +432,21 @@ mod tests {
         let c = AttentionRequest::close(3, 77);
         assert_eq!(c.op, SessionOp::Close { session: 77 });
         assert_eq!(c.flops(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "padded() is for stateless requests")]
+    fn padding_a_session_prefill_is_refused() {
+        // A causal prefill padded to a bucket would retain zero K/V
+        // rows in the session prefix that every decode step then
+        // attends — the exact poisoning the mask work eliminates.
+        let d = 2;
+        AttentionRequest::prefill(
+            1, 7, 2, d, 1, 1,
+            vec![0.0; 2 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
+        )
+        .with_mask(MaskKind::Causal)
+        .padded(4);
     }
 
     #[test]

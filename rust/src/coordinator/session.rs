@@ -35,6 +35,8 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::mask::MaskKind;
+
 use super::request::AttentionRequest;
 
 /// Session identifier, chosen by the client (must be unique among live
@@ -48,8 +50,12 @@ pub enum SessionOp {
     /// behavior and the default.
     Stateless,
     /// Open `session` with this request's full `(L, d)` prefix; the
-    /// response is ordinary full-prefix attention and the K/V prefix is
-    /// retained for decode.
+    /// response is ordinary full-prefix attention (causal when the
+    /// request carries `MaskKind::Causal` — the transformer-prefill
+    /// regime, DESIGN.md §6) and the K/V prefix is retained for decode.
+    /// Key-padding masks are rejected (a padded prefix would poison the
+    /// host tier with zero K/V rows) — open sessions at their exact
+    /// length.
     Prefill { session: SessionId },
     /// One decode step: the request carries one query row per head and
     /// one new K/V row per KV head (`seq_len == 1`); attention runs
@@ -74,6 +80,11 @@ struct Session {
     d: usize,
     num_heads: usize,
     num_kv_heads: usize,
+    /// Mask the session was prefilled with (`None` or `Causal`): decode
+    /// steps are mask-free by construction — each step's row attends
+    /// the whole retained prefix, which IS the causal row for a
+    /// causal-prefilled session.
+    mask: MaskKind,
     /// Table-unique incarnation stamp (session ids may be reused after
     /// close; the epoch tells a device cache whether a resident stream
     /// belongs to *this* incarnation or a dead one).
@@ -125,6 +136,13 @@ impl SessionTable {
         if req.seq_len == 0 {
             return Err(format!("session {sid}: prefill needs a non-empty prefix"));
         }
+        if let MaskKind::PaddingKeys { .. } = req.mask {
+            return Err(format!(
+                "session {sid}: prefill cannot carry a key-padding mask (the padded \
+                 K/V rows would enter the retained prefix) — open the session at its \
+                 exact length; mask none|causal"
+            ));
+        }
         let mut t = self.lock();
         if t.sessions.contains_key(&sid) {
             return Err(format!("session {sid} is already open"));
@@ -144,6 +162,7 @@ impl SessionTable {
                 d: req.d,
                 num_heads: req.num_heads,
                 num_kv_heads: req.num_kv_heads,
+                mask: req.mask,
                 epoch,
                 len: req.seq_len,
                 next_step: 0,
@@ -176,6 +195,13 @@ impl SessionTable {
             return Err(format!(
                 "session {sid}: decode carries one token, got seq_len {}",
                 req.seq_len
+            ));
+        }
+        if req.mask != MaskKind::None {
+            return Err(format!(
+                "session {sid}: decode steps take no mask ({}) — the step row \
+                 attends the whole retained prefix, which already is the causal row",
+                req.mask
             ));
         }
         if req.d != s.d || req.num_heads != s.num_heads || req.num_kv_heads != s.num_kv_heads {
@@ -223,6 +249,11 @@ impl SessionTable {
     /// caches to tell live streams from dead-incarnation leftovers).
     pub fn epoch(&self, sid: SessionId) -> Option<u64> {
         self.lock().sessions.get(&sid).map(|s| s.epoch)
+    }
+
+    /// Mask the session was prefilled with (`None` or `Causal`).
+    pub fn mask(&self, sid: SessionId) -> Option<MaskKind> {
+        self.lock().sessions.get(&sid).map(|s| s.mask)
     }
 
     /// Clone the first `prefix_len` tokens of one KV head's host-tier
@@ -366,6 +397,26 @@ mod tests {
         assert!(t.begin_decode(1, 0, &decode_req(1, 0, 8, 4, 2)).is_err());
         // A failed step does not advance the counter.
         assert_eq!(t.begin_decode(1, 0, &decode_req(1, 0, 4, 4, 2)).unwrap().0, 5);
+    }
+
+    #[test]
+    fn session_mask_rules() {
+        let t = SessionTable::new();
+        // Padding-masked prefill is rejected before any state mutates.
+        let bad = prefill_req(1, 4, 4, 4, 2).with_mask(MaskKind::PaddingKeys { valid: 2 });
+        assert!(t.open(1, &bad).unwrap_err().contains("key-padding"));
+        assert!(!t.contains(1));
+        // Causal prefill opens normally and the mask is remembered.
+        let causal = prefill_req(1, 4, 4, 4, 2).with_mask(MaskKind::Causal);
+        t.open(1, &causal).unwrap();
+        assert_eq!(t.mask(1), Some(MaskKind::Causal));
+        // Masked decode steps are rejected without consuming the step.
+        let masked_step = decode_req(1, 0, 4, 4, 2).with_mask(MaskKind::Causal);
+        assert!(t.begin_decode(1, 0, &masked_step).unwrap_err().contains("no mask"));
+        assert_eq!(t.prefix_len(1), Some(4));
+        // The unmasked step then succeeds.
+        assert_eq!(t.begin_decode(1, 0, &decode_req(1, 0, 4, 4, 2)).unwrap().0, 5);
+        assert_eq!(t.mask(404), None);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use anyhow::ensure;
 
 use crate::isa::{Program, Space, TileDesc};
 use crate::kernel::builder::{ATile, Alloc, KernelBuilder, MTile, STile};
+use crate::mask::{MaskKind, TileCoverage};
 
 /// Static workload description.
 #[derive(Clone, Copy, Debug)]
@@ -53,6 +54,27 @@ impl FlashLayout {
 /// loads, per-row-block Q preload, the attn_score/attn_value inner loop,
 /// and the reciprocal + lse-norm + store epilogue.
 pub fn flash_attention_program(p: &FlashParams, layout: &FlashLayout) -> crate::Result<Program> {
+    flash_attention_program_masked(p, layout, MaskKind::None)
+}
+
+/// Masked variant with the tile-skipping schedule (DESIGN.md §6): fully
+/// masked `(row block, column block)` tiles are never emitted — no K/V
+/// load, no attn_score/attn_value — which is exact because a fully
+/// masked tile contributes nothing to any row's online-softmax state.
+/// For causal this halves the instruction stream (the `t(t-1)/2` upper
+/// triangle disappears; asserted by the unit tests).
+///
+/// Partially masked tiles (causal diagonal, padding boundary) are
+/// emitted unchanged here: the element-wise mask wave that zeroes their
+/// invalid lanes is a controller wave below the ISA's instruction
+/// granularity, priced by `schedule::InnerSchedule::masked_inner_latency`
+/// and modeled exactly by the reference numerics — encoding it as an ISA
+/// flag is listed in DESIGN.md §future-work alongside masked artifacts.
+pub fn flash_attention_program_masked(
+    p: &FlashParams,
+    layout: &FlashLayout,
+    mask: MaskKind,
+) -> crate::Result<Program> {
     let n = p.d;
     ensure!(p.seq_len % n == 0, "seq_len {} must be a multiple of d {}", p.seq_len, n);
     let tiles = p.seq_len / n;
@@ -82,13 +104,23 @@ pub fn flash_attention_program(p: &FlashParams, layout: &FlashLayout) -> crate::
     let mut b = KernelBuilder::new();
     for (i, q_i) in q_blocks.iter().enumerate() {
         b.load_tile(*q_i, q_st[i % 2])?;
+        // Tile-skipping schedule: only issue column tiles the mask
+        // leaves at least partially live; ping-pong buffers alternate
+        // over *issued* tiles, and the `first` accumulate-reset flag
+        // belongs to the first issued tile of the row block.
+        let mut issued = 0usize;
         for (j, (k_j, v_j)) in k_blocks.iter().zip(&v_blocks).enumerate() {
+            if mask.coverage(i * n, n, j * n, n) == TileCoverage::Empty {
+                continue;
+            }
             b.load_stationary(q_st[i % 2]);
-            b.load_tile(*k_j, k_st[j % 2])?;
-            b.attn_score(k_st[j % 2], lse, j == 0);
-            b.load_tile(*v_j, v_st[j % 2])?;
-            b.attn_value(v_st[j % 2], ot, j == 0);
+            b.load_tile(*k_j, k_st[issued % 2])?;
+            b.attn_score(k_st[issued % 2], lse, issued == 0);
+            b.load_tile(*v_j, v_st[issued % 2])?;
+            b.attn_value(v_st[issued % 2], ot, issued == 0);
+            issued += 1;
         }
+        ensure!(issued > 0, "mask leaves row block {i} without any live tile");
         b.reciprocal(lse);
         b.attn_lse_norm(ot, lse);
         // O^T block i -> main memory.
@@ -157,6 +189,46 @@ mod tests {
             })
             .collect();
         assert_eq!(firsts, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn causal_program_skips_the_upper_triangle() {
+        let p = FlashParams { seq_len: 512, d: 128, spad_elems: 6 * 128 * 128, accum_elems: 128 * 129 };
+        let layout = FlashLayout::packed(&p);
+        let square = flash_attention_program(&p, &layout).unwrap();
+        let causal = flash_attention_program_masked(&p, &layout, MaskKind::Causal).unwrap();
+        let t = 512 / 128;
+        // Row block i issues i+1 column tiles instead of t: the inner
+        // loop shrinks from t² = 16 to t(t+1)/2 = 10 iterations.
+        let issued = t * (t + 1) / 2;
+        assert_eq!(causal.len(), t * (1 + 3) + issued * 5);
+        assert!(causal.len() < square.len());
+        let (loads, stores, computes) = causal.class_counts();
+        assert_eq!(loads, t + 2 * issued, "1 Q load per block + K/V per issued tile");
+        assert_eq!(stores, t);
+        assert_eq!(computes, 3 * issued + 2 * t);
+        // The accumulate-reset flag moves to the first *issued* tile of
+        // each row block — exactly one reset per block.
+        let firsts: Vec<bool> = causal
+            .instructions
+            .iter()
+            .filter_map(|i| match i {
+                Instruction::AttnScore { first, .. } => Some(*first),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(firsts.len(), issued);
+        assert_eq!(firsts.iter().filter(|&&f| f).count(), t);
+        // An unmasked mask reproduces the Listing-2 program exactly.
+        let none = flash_attention_program_masked(&p, &layout, MaskKind::None).unwrap();
+        assert_eq!(none.len(), square.len());
+        // A fully-masking padding mask is rejected, not miscompiled.
+        assert!(flash_attention_program_masked(
+            &p,
+            &layout,
+            MaskKind::PaddingKeys { valid: 0 }
+        )
+        .is_err());
     }
 
     #[test]

@@ -19,6 +19,8 @@
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`numerics`] — software fp16, PWL exp2 (the Split-unit contract), RNG.
+//! * [`mask`] — attention mask kinds (causal / key padding) shared by
+//!   numerics, schedule, perfmodel and the serving path (DESIGN.md §6).
 //! * [`isa`] — the 7-instruction FSA ISA with binary encode/decode.
 //! * [`schedule`] — SystolicAttention wavefront schedules + latency formulas.
 //! * [`sim`] — cycle-accurate array/accumulator/SRAM/DMA/controller model.
@@ -44,6 +46,7 @@ pub mod config;
 pub mod coordinator;
 pub mod isa;
 pub mod kernel;
+pub mod mask;
 pub mod numerics;
 pub mod perfmodel;
 pub mod runtime;

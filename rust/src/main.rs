@@ -30,9 +30,15 @@ Device / serving commands:
   disasm  [--seq 512 --d 128]  compile + disassemble the flash kernel
   serve   [--requests 16 --devices 2 --seq 512 --artifacts DIR]
           [--heads 1 --kv-heads 1 --backend pjrt|reference|auto]
+          [--mask none|causal --freq-ghz 1.5]
                                boot the coordinator and serve a workload
                                (multi-head/GQA requests are sharded
-                               per head across the device pool)
+                               per head across the device pool; --mask
+                               causal serves exact causal prefill with
+                               the tile-skipping schedule and needs
+                               --backend reference — the AOT artifacts
+                               take no mask, and auto picks PJRT
+                               whenever artifacts exist)
           [--decode-steps 0 --sessions 1 --kv-pages 4096
            --page-size 16 --eviction lru|none]
                                with --decode-steps > 0: decode-phase
@@ -124,24 +130,26 @@ fn serve(args: &Args) -> fsa::Result<()> {
     cfg.kv_cache_pages = args.get("kv-pages", cfg.kv_cache_pages)?;
     cfg.kv_page_size = args.get("page-size", cfg.kv_page_size)?;
     cfg.kv_eviction = args.flag("eviction").unwrap_or("lru").parse()?;
+    cfg.mask = args.flag("mask").unwrap_or("none").parse()?;
+    cfg.freq_ghz = args.get("freq-ghz", cfg.freq_ghz)?;
     let n_req = args.get("requests", 16usize)?;
     let seq = args.get("seq", 512usize)?;
     let d = args.get("d", 128usize)?;
     let decode_steps = args.get("decode-steps", 0usize)?;
     let n_sessions = args.get("sessions", 1usize)?;
-    let (heads, kv_heads) = (cfg.num_heads, cfg.num_kv_heads);
+    let (heads, kv_heads, mask) = (cfg.num_heads, cfg.num_kv_heads, cfg.mask);
     // Head-count invariants are validated once by Coordinator::start
     // (RunConfig::validate) before any request is constructed.
 
     println!(
         "booting coordinator: {} devices, backend {}, artifacts at {}, \
-         kv cache {} x {}-token pages ({})",
-        cfg.devices, cfg.backend, cfg.artifacts_dir,
+         mask {}, {:.2} GHz, kv cache {} x {}-token pages ({})",
+        cfg.devices, cfg.backend, cfg.artifacts_dir, cfg.mask, cfg.freq_ghz,
         cfg.kv_cache_pages, cfg.kv_page_size, cfg.kv_eviction
     );
     let coord = Coordinator::start(cfg)?;
     if decode_steps > 0 {
-        return serve_decode(coord, n_sessions, decode_steps, seq, d, heads, kv_heads);
+        return serve_decode(coord, n_sessions, decode_steps, seq, d, heads, kv_heads, mask);
     }
     let mut rng = SplitMix64::new(1);
     let mut pending = Vec::new();
@@ -149,7 +157,9 @@ fn serve(args: &Args) -> fsa::Result<()> {
         let q = rng.normal_matrix(heads * seq, d);
         let k = rng.normal_matrix(kv_heads * seq, d);
         let v = rng.normal_matrix(kv_heads * seq, d);
-        pending.push(coord.submit(AttentionRequest::gqa(id, seq, d, heads, kv_heads, q, k, v))?);
+        pending.push(coord.submit(
+            AttentionRequest::gqa(id, seq, d, heads, kv_heads, q, k, v).with_mask(mask),
+        )?);
     }
     let mut ok = 0;
     let mut worst_util = f64::INFINITY;
@@ -174,10 +184,12 @@ fn serve(args: &Args) -> fsa::Result<()> {
     Ok(())
 }
 
-/// Decode-phase serving loop: prefill `n_sessions` sessions, interleave
+/// Decode-phase serving loop: prefill `n_sessions` sessions (causal
+/// when `--mask causal` — the transformer-prefill regime), interleave
 /// `steps` decode steps per session (round-robin, so device KV caches
 /// juggle all sessions at once), close everything, and report the
 /// cache counters.
+#[allow(clippy::too_many_arguments)]
 fn serve_decode(
     coord: Coordinator,
     n_sessions: usize,
@@ -186,6 +198,7 @@ fn serve_decode(
     d: usize,
     heads: usize,
     kv_heads: usize,
+    mask: fsa::mask::MaskKind,
 ) -> fsa::Result<()> {
     let mut rng = SplitMix64::new(7);
     let mut id = 0u64;
@@ -195,20 +208,23 @@ fn serve_decode(
     };
 
     for s in 0..n_sessions as u64 {
-        let resp = coord.submit_wait(AttentionRequest::prefill(
-            next_id(),
-            s,
-            seq,
-            d,
-            heads,
-            kv_heads,
-            rng.normal_matrix(heads * seq, d),
-            rng.normal_matrix(kv_heads * seq, d),
-            rng.normal_matrix(kv_heads * seq, d),
-        ))?;
+        let resp = coord.submit_wait(
+            AttentionRequest::prefill(
+                next_id(),
+                s,
+                seq,
+                d,
+                heads,
+                kv_heads,
+                rng.normal_matrix(heads * seq, d),
+                rng.normal_matrix(kv_heads * seq, d),
+                rng.normal_matrix(kv_heads * seq, d),
+            )
+            .with_mask(mask),
+        )?;
         resp.output.map_err(|e| anyhow::anyhow!("prefill of session {s} failed: {e}"))?;
     }
-    println!("{n_sessions} sessions prefilled at L={seq}");
+    println!("{n_sessions} sessions prefilled at L={seq} (mask {mask})");
 
     let t0 = std::time::Instant::now();
     let (mut hits, mut misses) = (0usize, 0usize);

@@ -1,0 +1,199 @@
+//! Attention mask kinds, threaded end to end (DESIGN.md §6).
+//!
+//! A mask names which `(query row i, key j)` pairs participate in the
+//! softmax.  Both non-trivial kinds are *column-prefix* masks: for every
+//! query row the valid keys form a prefix `j < valid_keys(i)` of the key
+//! sequence.  That structural fact is what makes the tile-skipping
+//! schedule exact — a tile whose keys all fall outside every covered
+//! row's prefix can be skipped without touching the online-softmax
+//! state, and a partially covered tile needs only an element-wise mask
+//! pass over its invalid lanes — see
+//! [`flash_forward_masked`](crate::numerics::reference::flash_forward_masked)
+//! and the legality argument in DESIGN.md §6.
+
+use std::fmt;
+
+use anyhow::bail;
+
+/// Which `(query, key)` pairs an attention operator may attend.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MaskKind {
+    /// Unmasked square attention (the original behavior).
+    #[default]
+    None,
+    /// Causal SDPA: query row `i` attends keys `j <= i` — transformer
+    /// prefill.  Skips the upper-triangular tiles entirely (≈2× fewer
+    /// tile-cycles at large L, [`crate::perfmodel::fsa_flash_perf_masked`]).
+    Causal,
+    /// Only the first `valid` keys are real; the rest are zero padding
+    /// (stamped by [`AttentionRequest::padded`], which makes bucket
+    /// padding *exact* instead of the old residual-weight approximation).
+    ///
+    /// [`AttentionRequest::padded`]: crate::coordinator::request::AttentionRequest::padded
+    PaddingKeys { valid: usize },
+}
+
+/// How a mask covers one `rows × cols` tile of the score matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileCoverage {
+    /// Every element valid: the tile runs the unmasked schedule.
+    Full,
+    /// Mixed: the tile runs with an element-wise mask pass.
+    Partial,
+    /// No element valid: the tile is skipped entirely (exact — it would
+    /// contribute nothing to any row's online-softmax state).
+    Empty,
+}
+
+impl MaskKind {
+    /// Whether query row `i` may attend key `j`.
+    pub fn allows(&self, i: usize, j: usize) -> bool {
+        match self {
+            MaskKind::None => true,
+            MaskKind::Causal => j <= i,
+            MaskKind::PaddingKeys { valid } => j < *valid,
+        }
+    }
+
+    /// Number of valid keys of query row `i` over an `lk`-key sequence.
+    /// Valid keys always form the prefix `0..valid_keys(i, lk)`.
+    pub fn valid_keys(&self, i: usize, lk: usize) -> usize {
+        match self {
+            MaskKind::None => lk,
+            MaskKind::Causal => (i + 1).min(lk),
+            MaskKind::PaddingKeys { valid } => (*valid).min(lk),
+        }
+    }
+
+    /// Classify the tile `[r0, r0+rows) × [c0, c0+cols)`.
+    pub fn coverage(&self, r0: usize, rows: usize, c0: usize, cols: usize) -> TileCoverage {
+        debug_assert!(rows >= 1 && cols >= 1);
+        match self {
+            MaskKind::None => TileCoverage::Full,
+            MaskKind::Causal => {
+                if c0 + cols <= r0 + 1 {
+                    TileCoverage::Full // last key <= first row
+                } else if c0 > r0 + rows - 1 {
+                    TileCoverage::Empty // first key > last row
+                } else {
+                    TileCoverage::Partial // straddles the diagonal
+                }
+            }
+            MaskKind::PaddingKeys { valid } => {
+                if c0 + cols <= *valid {
+                    TileCoverage::Full
+                } else if c0 >= *valid {
+                    TileCoverage::Empty
+                } else {
+                    TileCoverage::Partial
+                }
+            }
+        }
+    }
+
+    /// True for [`MaskKind::None`] (the only kind the mask-free PJRT
+    /// artifacts can execute).
+    pub fn is_none(&self) -> bool {
+        matches!(self, MaskKind::None)
+    }
+}
+
+impl std::str::FromStr for MaskKind {
+    type Err = anyhow::Error;
+
+    /// `none | causal | padding:<valid>` — the last mostly for
+    /// completeness; padding masks are normally stamped by
+    /// `AttentionRequest::padded`, not configured.
+    fn from_str(s: &str) -> crate::Result<MaskKind> {
+        match s {
+            "none" => Ok(MaskKind::None),
+            "causal" => Ok(MaskKind::Causal),
+            other => match other.strip_prefix("padding:").map(str::parse::<usize>) {
+                Some(Ok(valid)) => Ok(MaskKind::PaddingKeys { valid }),
+                _ => bail!("unknown mask {other:?} (try none|causal|padding:<valid>)"),
+            },
+        }
+    }
+}
+
+impl fmt::Display for MaskKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MaskKind::None => f.write_str("none"),
+            MaskKind::Causal => f.write_str("causal"),
+            MaskKind::PaddingKeys { valid } => write!(f, "padding:{valid}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allows_and_valid_key_prefixes_agree() {
+        for mask in [MaskKind::None, MaskKind::Causal, MaskKind::PaddingKeys { valid: 5 }] {
+            for i in 0..8 {
+                let vk = mask.valid_keys(i, 8);
+                for j in 0..8 {
+                    assert_eq!(mask.allows(i, j), j < vk, "{mask:?} i={i} j={j}");
+                }
+            }
+        }
+        assert_eq!(MaskKind::Causal.valid_keys(100, 8), 8, "clamped to lk");
+        assert_eq!(MaskKind::PaddingKeys { valid: 0 }.valid_keys(3, 8), 0);
+    }
+
+    #[test]
+    fn causal_tile_coverage_splits_at_the_diagonal() {
+        let m = MaskKind::Causal;
+        // 4x4 tiles on a 16x16 matrix: below-diagonal full, diagonal
+        // partial, above-diagonal empty.
+        for i in 0..4usize {
+            for j in 0..4usize {
+                let want = if j < i {
+                    TileCoverage::Full
+                } else if j == i {
+                    TileCoverage::Partial
+                } else {
+                    TileCoverage::Empty
+                };
+                assert_eq!(m.coverage(i * 4, 4, j * 4, 4), want, "tile ({i},{j})");
+            }
+        }
+        // A 1x1 tile exactly on the diagonal is fully valid.
+        assert_eq!(m.coverage(3, 1, 3, 1), TileCoverage::Full);
+        assert_eq!(m.coverage(3, 1, 4, 1), TileCoverage::Empty);
+    }
+
+    #[test]
+    fn padding_tile_coverage_splits_at_the_boundary() {
+        let m = MaskKind::PaddingKeys { valid: 100 };
+        assert_eq!(m.coverage(0, 128, 0, 100), TileCoverage::Full);
+        assert_eq!(m.coverage(0, 128, 0, 128), TileCoverage::Partial);
+        assert_eq!(m.coverage(0, 128, 100, 28), TileCoverage::Empty);
+        assert_eq!(m.coverage(0, 128, 128, 128), TileCoverage::Empty);
+        assert_eq!(
+            MaskKind::PaddingKeys { valid: 0 }.coverage(0, 8, 0, 8),
+            TileCoverage::Empty
+        );
+        assert_eq!(MaskKind::None.coverage(0, 8, 0, 8), TileCoverage::Full);
+    }
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        for (s, m) in [
+            ("none", MaskKind::None),
+            ("causal", MaskKind::Causal),
+            ("padding:37", MaskKind::PaddingKeys { valid: 37 }),
+        ] {
+            assert_eq!(s.parse::<MaskKind>().unwrap(), m);
+            assert_eq!(m.to_string(), s);
+        }
+        assert!("triangular".parse::<MaskKind>().is_err());
+        assert!("padding:x".parse::<MaskKind>().is_err());
+        assert!(MaskKind::None.is_none());
+        assert!(!MaskKind::Causal.is_none());
+        assert_eq!(MaskKind::default(), MaskKind::None);
+    }
+}

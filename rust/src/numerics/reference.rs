@@ -6,6 +6,7 @@
 //! FlashAttention with the PWL exp2 (the strict twin of both the Pallas
 //! kernel and the FSA device).
 
+use crate::mask::{MaskKind, TileCoverage};
 use crate::numerics::f16::quantize_ftz_f32 as quantize_f32;
 use crate::numerics::pwl::PwlExp2;
 use crate::numerics::LOG2E;
@@ -67,6 +68,14 @@ fn q(x: f32, p: Precision) -> f32 {
 
 /// Dense fp32 SDPA: softmax(Q K^T / sqrt(d)) V.  Exact reference.
 pub fn sdpa(qm: &Mat, km: &Mat, vm: &Mat) -> Mat {
+    sdpa_masked(qm, km, vm, MaskKind::None)
+}
+
+/// Masked dense SDPA: masked `(i, j)` pairs are *excluded* from the
+/// softmax (weight exactly zero — not a large-negative approximation),
+/// so this is the exact semantic reference for every [`MaskKind`].
+/// Rows with no valid keys produce a zero output row by definition.
+pub fn sdpa_masked(qm: &Mat, km: &Mat, vm: &Mat, mask: MaskKind) -> Mat {
     let (l, d) = (qm.rows, qm.cols);
     let lk = km.rows;
     assert_eq!(km.cols, d);
@@ -75,8 +84,13 @@ pub fn sdpa(qm: &Mat, km: &Mat, vm: &Mat) -> Mat {
     let mut out = Mat::zeros(l, vm.cols);
     let mut row = vec![0.0f64; lk];
     for i in 0..l {
+        // Valid keys are a prefix (see MaskKind::valid_keys).
+        let vk = mask.valid_keys(i, lk);
+        if vk == 0 {
+            continue; // fully-masked row: zero output
+        }
         let mut maxv = f64::NEG_INFINITY;
-        for j in 0..lk {
+        for j in 0..vk {
             let mut s = 0.0f64;
             for k in 0..d {
                 s += qm.at(i, k) as f64 * km.at(j, k) as f64;
@@ -86,13 +100,13 @@ pub fn sdpa(qm: &Mat, km: &Mat, vm: &Mat) -> Mat {
             maxv = maxv.max(s);
         }
         let mut denom = 0.0f64;
-        for j in 0..lk {
+        for j in 0..vk {
             row[j] = (row[j] - maxv).exp();
             denom += row[j];
         }
         for h in 0..vm.cols {
             let mut acc = 0.0f64;
-            for j in 0..lk {
+            for j in 0..vk {
                 acc += row[j] * vm.at(j, h) as f64;
             }
             out.set(i, h, (acc / denom) as f32);
@@ -125,7 +139,9 @@ impl Exp2 {
 /// exact or PWL exp2 and fp16-or-f32 matmul operands.  Bit-order faithful:
 /// the first matmul accumulates over k descending (the upward systolic
 /// path sums from the bottom row up), rowsum and PV accumulate over n
-/// ascending (downward path).
+/// ascending (downward path).  Exact tiling required (the original API);
+/// [`flash_forward_masked`] additionally supports masks and ragged final
+/// tiles.
 pub fn flash_forward(
     qm: &Mat,
     km: &Mat,
@@ -135,13 +151,50 @@ pub fn flash_forward(
     exp2: &Exp2,
     prec: Precision,
 ) -> Mat {
+    assert!(
+        qm.rows % br == 0 && km.rows % bc == 0,
+        "tile sizes must divide seq lens"
+    );
+    flash_forward_masked(qm, km, vm, br, bc, exp2, prec, MaskKind::None)
+}
+
+/// Masked tiled FlashAttention with the tile-skipping schedule
+/// (DESIGN.md §6).  Generalizes [`flash_forward`]:
+///
+/// * **Mask before the update.**  Within each tile the mask is applied
+///   *before* the online-softmax update: masked lanes are excluded from
+///   the tile row-max and their stored P is zeroed (the device's
+///   element-wise mask wave), so the paper's FP operation order over the
+///   valid lanes is untouched — masking is exact, not a large-negative
+///   approximation.
+/// * **Tile skipping.**  A fully-masked tile is skipped outright; a row
+///   with no valid key in a tile leaves its `(m, l, O)` state untouched.
+///   Both are exact because a fully-masked tile/row contributes nothing
+///   to any online-softmax state (legality argument in DESIGN.md §6).
+///   For causal this drops the whole upper triangle — ≈2× fewer tiles.
+/// * **Ragged tiles.**  The final row/column tile may be short (same
+///   rule as [`flash_decode_row`]), so any sequence length tiles at the
+///   array size.  With exact tiling and `MaskKind::None` the arithmetic
+///   is operation-for-operation that of the original kernel.
+/// * **Fully-masked rows** (no valid key anywhere) produce a zero output
+///   row by definition (their `l` stays 0, which would otherwise 0/0).
+#[allow(clippy::too_many_arguments)]
+pub fn flash_forward_masked(
+    qm: &Mat,
+    km: &Mat,
+    vm: &Mat,
+    br: usize,
+    bc: usize,
+    exp2: &Exp2,
+    prec: Precision,
+    mask: MaskKind,
+) -> Mat {
     let (l, d) = (qm.rows, qm.cols);
     let lk = km.rows;
     assert_eq!(km.cols, d);
     assert_eq!(vm.rows, lk);
-    assert!(l % br == 0 && lk % bc == 0, "tile sizes must divide seq lens");
+    assert!(br >= 1 && bc >= 1, "tile sizes must be >= 1");
     let scale = (LOG2E / (d as f64).sqrt()) as f32;
-    let (tr, tc) = (l / br, lk / bc);
 
     let mut out = Mat::zeros(l, d);
     let mut s = vec![0.0f32; br * bc];
@@ -158,18 +211,32 @@ pub fn flash_forward(
     // Finite -inf stand-in (same convention as the Pallas kernel): a true
     // -inf would feed NaN through the Split unit's `x - ceil(x)`.
     const NEG_INF: f32 = -1e30;
-    for i in 0..tr {
-        let q0 = i * br;
-        let mut m = vec![NEG_INF; br];
-        let mut lsum = vec![0.0f32; br];
-        let mut acc = vec![0.0f32; br * d];
-        for j in 0..tc {
-            let k0 = j * bc;
-            // S = Q K^T, fp32 psums, k-descending accumulation order
-            // (upward path starts at the bottom row of the array).
-            for r in 0..br {
+    let mut q0 = 0;
+    while q0 < l {
+        let bre = br.min(l - q0);
+        let mut m = vec![NEG_INF; bre];
+        let mut lsum = vec![0.0f32; bre];
+        let mut acc = vec![0.0f32; bre * d];
+        let mut k0 = 0;
+        while k0 < lk {
+            let bce = bc.min(lk - k0);
+            // Tile-skipping schedule: a fully-masked tile touches no row
+            // state, so skipping it is exact.
+            if mask.coverage(q0, bre, k0, bce) == TileCoverage::Empty {
+                k0 += bce;
+                continue;
+            }
+            for r in 0..bre {
+                // Valid keys form a per-row prefix of the tile's columns
+                // (both mask kinds are column-prefix masks).
+                let vc = mask.valid_keys(q0 + r, lk).saturating_sub(k0).min(bce);
+                if vc == 0 {
+                    continue; // row fully masked in this tile: state untouched
+                }
+                // S = Q K^T, fp32 psums, k-descending accumulation order
+                // (upward path starts at the bottom row of the array).
                 let qrow = &qm.data[(q0 + r) * d..(q0 + r + 1) * d];
-                for c in 0..bc {
+                for c in 0..vc {
                     let krow = &km.data[(k0 + c) * d..(k0 + c + 1) * d];
                     let mut ps = 0.0f32;
                     for k in (0..d).rev() {
@@ -177,23 +244,27 @@ pub fn flash_forward(
                     }
                     s[r * bc + c] = ps;
                 }
-            }
-            for r in 0..br {
                 // The device parks S in fp16 result registers; rowmax and
                 // the whole elementwise chain run on those values, and the
-                // rowsum sums the *stored* (quantized, flushed) P.
+                // rowsum sums the *stored* (quantized, flushed) P.  Masked
+                // lanes are excluded from the rowmax and their P is zeroed
+                // (the mask wave) before the rowsum.
                 let mut local_m = f32::NEG_INFINITY;
-                for c in 0..bc {
+                for c in 0..vc {
                     s[r * bc + c] = q(s[r * bc + c], prec);
                     local_m = local_m.max(s[r * bc + c]);
                 }
                 let new_m = m[r].max(local_m);
                 let b = exp2.eval(scale * (m[r] - new_m));
                 let mut local_l = 0.0f32;
-                for c in 0..bc {
+                for c in 0..vc {
                     let nv = q(s[r * bc + c] - new_m, prec);
                     let pv = exp2.eval(q(scale * nv, prec));
                     p16[r * bc + c] = q(pv, prec);
+                    local_l += p16[r * bc + c];
+                }
+                for c in vc..bce {
+                    p16[r * bc + c] = 0.0;
                     local_l += p16[r * bc + c];
                 }
                 lsum[r] = lsum[r] * b + local_l;
@@ -204,23 +275,32 @@ pub fn flash_forward(
                     acc[r * d + h] *= b;
                 }
             }
-            // O += P V, n-ascending (downward path, top row first).
-            for r in 0..br {
+            // O += P V, n-ascending (downward path, top row first); the
+            // masked lanes ride along with P = 0, exactly as on the array.
+            for r in 0..bre {
+                if mask.valid_keys(q0 + r, lk) <= k0 {
+                    continue; // row skipped above: stale P, state untouched
+                }
                 for h in 0..d {
                     let mut ps = 0.0f32;
-                    for n in 0..bc {
+                    for n in 0..bce {
                         ps += p16[r * bc + n] * vm.at(k0 + n, h);
                     }
                     acc[r * d + h] += ps;
                 }
             }
+            k0 += bce;
         }
-        for r in 0..br {
+        for r in 0..bre {
+            if lsum[r] == 0.0 {
+                continue; // fully-masked row: defined zero output
+            }
             let inv = 1.0 / lsum[r];
             for h in 0..d {
                 out.set(q0 + r, h, acc[r * d + h] * inv);
             }
         }
+        q0 += bre;
     }
     out
 }
@@ -333,6 +413,26 @@ pub fn flash_pwl(qm: &Mat, km: &Mat, vm: &Mat, br: usize, bc: usize, segments: u
         qm, km, vm, br, bc,
         &Exp2::PwlF16(PwlExp2::new(segments)),
         Precision::F16F32,
+    )
+}
+
+/// Convenience: masked PWL flash with the paper's device numerics —
+/// the strict twin the device workers' reference backend runs for
+/// masked shards (ragged tiling allowed, see [`flash_forward_masked`]).
+pub fn flash_pwl_masked(
+    qm: &Mat,
+    km: &Mat,
+    vm: &Mat,
+    br: usize,
+    bc: usize,
+    segments: usize,
+    mask: MaskKind,
+) -> Mat {
+    flash_forward_masked(
+        qm, km, vm, br, bc,
+        &Exp2::PwlF16(PwlExp2::new(segments)),
+        Precision::F16F32,
+        mask,
     )
 }
 
@@ -495,6 +595,128 @@ mod tests {
         let err = mat_error(&Mat::new(1, d, pwl), &dense);
         assert!(err.mae < 2e-2, "{err:?}");
         assert!(row.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn masked_flash_matches_masked_dense_across_shapes_and_modes() {
+        // Satellite coverage: masked flash vs masked dense parity across
+        // shapes x numerics modes.  Exact exp2/f32 pins tight; the PWL +
+        // fp16 modes stay inside the Table-2 error band.
+        let mut rng = SplitMix64::new(31);
+        for &(l, d, br, bc) in &[(32usize, 16usize, 8usize, 8usize), (48, 8, 16, 8), (40, 16, 16, 16), (64, 32, 32, 16)]
+        {
+            let qm = rand_mat(&mut rng, l, d);
+            let km = rand_mat(&mut rng, l, d);
+            let vm = rand_mat(&mut rng, l, d);
+            for mask in [
+                MaskKind::Causal,
+                MaskKind::PaddingKeys { valid: l - 7 },
+                MaskKind::PaddingKeys { valid: 3 },
+                MaskKind::None,
+            ] {
+                let dense = sdpa_masked(&qm, &km, &vm, mask);
+                for (exp2, prec, mae, max_abs) in [
+                    (Exp2::Exact, Precision::F32, 1e-5, 1e-5),
+                    (Exp2::Pwl(PwlExp2::new(8)), Precision::F32, 2e-2, 2e-1),
+                    (Exp2::PwlF16(PwlExp2::new(8)), Precision::F16F32, 2e-2, 2e-1),
+                    (Exp2::PwlF16(PwlExp2::new(4)), Precision::F16F32, 5e-2, 5e-1),
+                ] {
+                    let flash = flash_forward_masked(&qm, &km, &vm, br, bc, &exp2, prec, mask);
+                    let err = mat_error(&flash, &dense);
+                    assert!(
+                        err.mae < mae && err.max_abs < max_abs,
+                        "L={l} d={d} br={br} bc={bc} {mask:?}: {err:?}"
+                    );
+                    assert!(flash.data.iter().all(|x| x.is_finite()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_flash_with_none_is_bitwise_the_original_kernel() {
+        // The masked kernel with MaskKind::None and exact tiling must be
+        // operation-for-operation the original flash_forward (which now
+        // delegates) — pinned against the independently-implemented
+        // decode kernel via the br=1 lockstep test below, and here
+        // against ragged whole-tile degeneration: one ragged tile of
+        // size lk equals one exact tile of size lk.
+        let mut rng = SplitMix64::new(33);
+        let (l, d) = (40usize, 16usize);
+        let qm = rand_mat(&mut rng, l, d);
+        let km = rand_mat(&mut rng, l, d);
+        let vm = rand_mat(&mut rng, l, d);
+        let whole = flash_pwl(&qm, &km, &vm, l, l, 8);
+        let ragged = flash_pwl_masked(&qm, &km, &vm, 64, 64, 8, MaskKind::None);
+        assert_eq!(whole.data, ragged.data, "oversized ragged tile == whole tile");
+    }
+
+    #[test]
+    fn key_padding_mask_is_bitwise_exact_vs_unpadded() {
+        // The tentpole exactness claim at the numerics layer: zero-pad
+        // K/V rows beyond `valid`, stamp PaddingKeys, and the valid
+        // output rows are bitwise those of the unpadded run — the old
+        // residual-softmax-weight approximation is gone.  Ragged tiling
+        // makes the padded and unpadded runs tile identically.
+        let mut rng = SplitMix64::new(34);
+        for &(l, bucket, bc) in &[(100usize, 128usize, 128usize), (37, 64, 16), (150, 256, 128)] {
+            let d = 16;
+            let qm = rand_mat(&mut rng, l, d);
+            let km = rand_mat(&mut rng, l, d);
+            let vm = rand_mat(&mut rng, l, d);
+            let pad = |m: &Mat| {
+                let mut data = m.data.clone();
+                data.resize(bucket * d, 0.0);
+                Mat::new(bucket, d, data)
+            };
+            for mask in [MaskKind::None, MaskKind::Causal] {
+                let want = flash_pwl_masked(&qm, &km, &vm, bc, bc, 8, mask);
+                // Padded run: padded *keys* masked out (None becomes
+                // PaddingKeys; causal already excludes them for every
+                // real query row), padded query rows sliced away.
+                let padded_mask = match mask {
+                    MaskKind::None => MaskKind::PaddingKeys { valid: l },
+                    m => m,
+                };
+                let got =
+                    flash_pwl_masked(&pad(&qm), &pad(&km), &pad(&vm), bc, bc, 8, padded_mask);
+                assert_eq!(
+                    &got.data[..l * d],
+                    &want.data[..],
+                    "L={l} bucket={bucket} bc={bc} {mask:?}: padding changed the numerics"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn causal_flash_exact_matches_causal_dense() {
+        let mut rng = SplitMix64::new(35);
+        let (l, d) = (64usize, 16usize);
+        let qm = rand_mat(&mut rng, l, d);
+        let km = rand_mat(&mut rng, l, d);
+        let vm = rand_mat(&mut rng, l, d);
+        let dense = sdpa_masked(&qm, &km, &vm, MaskKind::Causal);
+        // Row 0 attends only key 0: softmax weight 1 on V row 0.
+        for h in 0..d {
+            assert!((dense.at(0, h) - vm.at(0, h)).abs() < 1e-6);
+        }
+        let flash =
+            flash_forward_masked(&qm, &km, &vm, 8, 16, &Exp2::Exact, Precision::F32, MaskKind::Causal);
+        assert!(mat_error(&flash, &dense).max_abs < 1e-5);
+    }
+
+    #[test]
+    fn fully_masked_rows_are_zero() {
+        let mut rng = SplitMix64::new(36);
+        let (l, d) = (16usize, 8usize);
+        let qm = rand_mat(&mut rng, l, d);
+        let km = rand_mat(&mut rng, l, d);
+        let vm = rand_mat(&mut rng, l, d);
+        let mask = MaskKind::PaddingKeys { valid: 0 };
+        assert!(sdpa_masked(&qm, &km, &vm, mask).data.iter().all(|&x| x == 0.0));
+        let flash = flash_pwl_masked(&qm, &km, &vm, 8, 8, 8, mask);
+        assert!(flash.data.iter().all(|&x| x == 0.0), "no NaN from 0/0");
     }
 
     #[test]

@@ -12,9 +12,10 @@
 //! two dataflow variants of §8.2.
 
 use crate::config::AccelConfig;
+use crate::mask::MaskKind;
 use crate::schedule::{
-    attention_flops, decode_attention_flops, preload_latency, rescale_latency, InnerSchedule,
-    Variant,
+    attention_flops, decode_attention_flops, masked_attention_flops, masked_tile_counts,
+    preload_latency, rescale_latency, InnerSchedule, Variant,
 };
 use crate::sim::dma::DmaConfig;
 
@@ -44,15 +45,37 @@ pub fn fsa_flash_perf(
     variant: Variant,
     segments: usize,
 ) -> FsaPerf {
+    fsa_flash_perf_masked(cfg, seq_len, d, variant, segments, MaskKind::None)
+}
+
+/// Masked [`fsa_flash_perf`]: the tile-skipping schedule prices only the
+/// tiles actually issued ([`masked_tile_counts`]) — fully-masked tiles
+/// cost nothing (their K/V tiles are never fetched either), partially
+/// masked tiles (causal diagonal, padding boundary) take the one-cycle
+/// element-wise mask wave ([`InnerSchedule::masked_inner_latency`]).
+/// For causal this is ≈2× fewer tile-cycles than square attention at the
+/// same L (asserted by the unit tests), matching the ≈2× FLOP reduction,
+/// so utilization stays in the same band.  `MaskKind::None` is exactly
+/// [`fsa_flash_perf`].
+pub fn fsa_flash_perf_masked(
+    cfg: &AccelConfig,
+    seq_len: usize,
+    d: usize,
+    variant: Variant,
+    segments: usize,
+    mask: MaskKind,
+) -> FsaPerf {
     let n = cfg.array_size;
     assert!(d <= n, "head dim {d} exceeds array size {n}");
     let sched = InnerSchedule::new(n, variant, segments);
     let ii = sched.inner_latency();
+    let ii_masked = sched.masked_inner_latency();
 
     let t = seq_len.div_ceil(n) as u64; // row and column tiles (padded)
+    let (full, partial, _skipped) = masked_tile_counts(seq_len, n, mask);
 
-    // DMA traffic per inner iteration: one K tile + one V tile (Q is
-    // loaded once per row block), fp16 on the wire.
+    // DMA traffic per issued inner iteration: one K tile + one V tile
+    // (Q is loaded once per row block), fp16 on the wire.
     let dma = DmaConfig::for_bandwidth(cfg.mem_bw_gbs, cfg.freq_ghz, 4);
     let tile_bytes = (n * n * 2) as f64;
     let bpc = cfg.mem_bw_gbs / cfg.freq_ghz;
@@ -60,26 +83,28 @@ pub fn fsa_flash_perf(
 
     // Double buffering: iteration pace is the slower of compute and DMA.
     let ii_eff = ii.max(dma_per_iter);
+    let ii_masked_eff = ii_masked.max(dma_per_iter);
     let bandwidth_bound = dma_per_iter > ii;
 
-    let inner = t * ii_eff;
+    let inner = full * ii_eff + partial * ii_masked_eff;
     let outer = rescale_latency(n);
     // Q-block DMA overlaps the previous epilogue; the first fill and the
     // stationary preload are exposed once.
     let startup = preload_latency(n) + dma_per_iter + dma.setup_cycles;
-    let total = t * (inner + outer) + startup;
+    let total = inner + t * outer + startup;
 
-    // Useful FLOPs pad-corrected: the array computes N-wide tiles but only
-    // d lanes carry real data.
-    let flops = attention_flops(seq_len, d) as f64;
+    // Useful FLOPs mask- and pad-corrected: the array computes N-wide
+    // tiles but only d lanes carry real data and only valid (query, key)
+    // pairs count.
+    let flops = masked_attention_flops(seq_len, d, mask) as f64;
     let peak_per_cycle = 2.0 * (n * n) as f64;
     let utilization = flops / (peak_per_cycle * total as f64);
 
-    let array_active = t * t * ii + t * preload_latency(n);
+    let array_active = full * ii + partial * ii_masked + t * preload_latency(n);
     FsaPerf {
         total_cycles: total,
         array_active_cycles: array_active.min(total),
-        dma_cycles: t * t * dma_per_iter,
+        dma_cycles: (full + partial) * dma_per_iter,
         utilization,
         seconds: total as f64 / (cfg.freq_ghz * 1e9),
         bandwidth_bound,
@@ -314,15 +339,37 @@ pub fn multi_head_perf(
     variant: Variant,
     segments: usize,
 ) -> MultiHeadPerf {
+    multi_head_perf_masked(
+        cfg, seq_len, d, num_heads, num_kv_heads, devices, variant, segments, MaskKind::None,
+    )
+}
+
+/// Masked [`multi_head_perf`]: every head carries the same mask (one
+/// operator, one mask), so per-head timing comes from
+/// [`fsa_flash_perf_masked`] and the whole-operator FLOPs from
+/// [`masked_attention_flops`].  `MaskKind::None` is exactly
+/// [`multi_head_perf`].
+#[allow(clippy::too_many_arguments)]
+pub fn multi_head_perf_masked(
+    cfg: &AccelConfig,
+    seq_len: usize,
+    d: usize,
+    num_heads: usize,
+    num_kv_heads: usize,
+    devices: usize,
+    variant: Variant,
+    segments: usize,
+    mask: MaskKind,
+) -> MultiHeadPerf {
     assert!(num_heads >= 1 && num_kv_heads >= 1 && devices >= 1);
     assert_eq!(num_heads % num_kv_heads, 0, "GQA head counts must divide");
-    let head = fsa_flash_perf(cfg, seq_len, d, variant, segments);
+    let head = fsa_flash_perf_masked(cfg, seq_len, d, variant, segments, mask);
     let group_size = num_heads / num_kv_heads;
     let devices_used = devices.min(num_kv_heads);
     let rounds = group_size * num_kv_heads.div_ceil(devices);
     let total_cycles = num_heads as u64 * head.total_cycles;
     let critical_path_cycles = rounds as u64 * head.total_cycles;
-    let flops = num_heads as u64 * attention_flops(seq_len, d);
+    let flops = num_heads as u64 * masked_attention_flops(seq_len, d, mask);
     let peak_per_cycle = 2.0 * (cfg.array_size * cfg.array_size) as f64 * devices_used as f64;
     MultiHeadPerf {
         head,
@@ -440,6 +487,73 @@ mod tests {
         assert_eq!((gqa3.devices_used, gqa3.rounds), (3, 4));
         let expect3 = one.utilization * 8.0 / 12.0;
         assert!((gqa3.utilization - expect3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn causal_mask_halves_tile_cycles_at_matched_utilization() {
+        // Acceptance: the tile-skipping schedule must report ≈2x fewer
+        // causal tile-cycles than square at the same L — the (t²-t(t+1)/2)
+        // skipped upper-triangle tiles, with the diagonal paying only the
+        // one-cycle mask wave.
+        let cfg = fsa();
+        for &l in &[2048usize, 4096, 8192, 16384] {
+            let square = fsa_flash_perf(&cfg, l, 128, Variant::DualPath, 8);
+            let causal =
+                fsa_flash_perf_masked(&cfg, l, 128, Variant::DualPath, 8, MaskKind::Causal);
+            let ratio = causal.total_cycles as f64 / square.total_cycles as f64;
+            // (t(t+1)/2) / t² -> 1/2 from above as t grows; epilogues and
+            // startup add a little.
+            assert!(ratio > 0.5 && ratio < 0.62, "L={l}: cycle ratio {ratio}");
+            // FLOPs halve with the cycles, so utilization stays in band.
+            assert!(
+                (causal.utilization - square.utilization).abs() < 0.05,
+                "L={l}: {} vs {}",
+                causal.utilization,
+                square.utilization
+            );
+            // Skipped tiles are never fetched: DMA traffic drops too.
+            assert!(causal.dma_cycles < square.dma_cycles * 3 / 5);
+        }
+    }
+
+    #[test]
+    fn unmasked_wrappers_are_bitwise_the_masked_model() {
+        let cfg = fsa();
+        let a = fsa_flash_perf(&cfg, 4096, 128, Variant::DualPath, 8);
+        let b = fsa_flash_perf_masked(&cfg, 4096, 128, Variant::DualPath, 8, MaskKind::None);
+        assert_eq!(
+            (a.total_cycles, a.array_active_cycles, a.dma_cycles),
+            (b.total_cycles, b.array_active_cycles, b.dma_cycles)
+        );
+        assert_eq!(a.utilization, b.utilization);
+        let m = multi_head_perf(&cfg, 4096, 128, 8, 2, 4, Variant::DualPath, 8);
+        let mm = multi_head_perf_masked(
+            &cfg, 4096, 128, 8, 2, 4, Variant::DualPath, 8, MaskKind::None,
+        );
+        assert_eq!(m.critical_path_cycles, mm.critical_path_cycles);
+        assert_eq!(m.utilization, mm.utilization);
+    }
+
+    #[test]
+    fn padding_mask_prices_only_the_valid_prefix() {
+        let cfg = fsa();
+        // A 512-bucket request with 300 valid keys: per row-block, 2 full
+        // + 1 boundary tile instead of 4 — cheaper than square, and the
+        // fully-padded column tile is neither computed nor fetched.
+        let square = fsa_flash_perf(&cfg, 512, 128, Variant::DualPath, 8);
+        let padded = fsa_flash_perf_masked(
+            &cfg, 512, 128, Variant::DualPath, 8,
+            MaskKind::PaddingKeys { valid: 300 },
+        );
+        assert!(padded.total_cycles < square.total_cycles);
+        assert!(padded.dma_cycles < square.dma_cycles);
+        // valid == seq_len degenerates to square exactly.
+        let same = fsa_flash_perf_masked(
+            &cfg, 512, 128, Variant::DualPath, 8,
+            MaskKind::PaddingKeys { valid: 512 },
+        );
+        assert_eq!(same.total_cycles, square.total_cycles);
+        assert_eq!(same.utilization, square.utilization);
     }
 
     #[test]

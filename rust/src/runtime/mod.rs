@@ -14,7 +14,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, ensure, Context};
 
 use crate::config::{AccelConfig, BackendKind};
-use crate::numerics::reference::{decode_pwl, flash_pwl, Mat};
+use crate::mask::MaskKind;
+use crate::numerics::reference::{decode_pwl, flash_pwl_masked, Mat};
 
 /// One manifest row.
 #[derive(Clone, Debug, PartialEq)]
@@ -270,8 +271,10 @@ impl Backend {
     }
 
     /// Execute one head: row-major `(seq_len, d)` Q/K/V in, `(seq_len,
-    /// d)` output.  Errors are strings because they travel inside
+    /// d)` output, mask applied exactly (DESIGN.md §6).  Errors are
+    /// strings because they travel inside
     /// [`crate::coordinator::request::AttentionResponse`].
+    #[allow(clippy::too_many_arguments)]
     pub fn execute_head(
         &mut self,
         seq_len: usize,
@@ -279,29 +282,50 @@ impl Backend {
         q: &[f32],
         k: &[f32],
         v: &[f32],
+        mask: MaskKind,
     ) -> Result<Vec<f32>, String> {
         match self {
-            Backend::Pjrt(rt) => match rt.manifest.best_for("fsa_attn", seq_len, d) {
-                None => Err(format!("no fsa_attn artifact covers seq_len {seq_len} d {d}")),
-                Some(meta) if meta.seq_len != seq_len => Err(format!(
-                    "strict mode: need exact artifact for seq_len {} (nearest is {}); \
-                     pad client-side with AttentionRequest::padded",
-                    seq_len, meta.seq_len
-                )),
-                Some(meta) => {
-                    let name = meta.name.clone();
-                    rt.execute_attention(&name, q, k, v).map_err(|e| format!("{e:#}"))
+            Backend::Pjrt(rt) => {
+                // The AOT artifacts take no mask input: reject masked
+                // shards instead of silently dropping the mask (masked
+                // artifact export is DESIGN.md §future-work).
+                if !mask.is_none() {
+                    // Note: `auto` resolves to PJRT whenever artifacts
+                    // exist, so the advice must be `reference`
+                    // explicitly — recommending auto would loop the
+                    // user straight back here.
+                    return Err(format!(
+                        "the AOT artifacts take no attention mask (got {mask}); \
+                         masked serving needs backend=reference, or masked \
+                         artifact export (DESIGN.md §6)"
+                    ));
                 }
-            },
+                match rt.manifest.best_for("fsa_attn", seq_len, d) {
+                    None => Err(format!("no fsa_attn artifact covers seq_len {seq_len} d {d}")),
+                    Some(meta) if meta.seq_len != seq_len => Err(format!(
+                        "strict mode: need exact artifact for seq_len {} (nearest is {}); \
+                         pad client-side with AttentionRequest::padded and serve on \
+                         backend=reference (exact, DESIGN.md §6; auto resolves to PJRT \
+                         while artifacts exist), or export an exact-bucket artifact",
+                        seq_len, meta.seq_len
+                    )),
+                    Some(meta) => {
+                        let name = meta.name.clone();
+                        rt.execute_attention(&name, q, k, v).map_err(|e| format!("{e:#}"))
+                    }
+                }
+            }
             Backend::Reference { array_size, segments } => {
-                // Tile at the array size when it divides the sequence,
-                // otherwise fall back to one whole-sequence tile
-                // (flash_forward requires exact tiling).
-                let tile = if seq_len % *array_size == 0 { *array_size } else { seq_len };
+                // Tile at the array size with a ragged final tile, like
+                // the device itself (and like the decode path).  This is
+                // what makes bucket padding bitwise-exact: a padded
+                // request and its unpadded original tile identically
+                // over the valid region, and the mask excludes the rest.
                 let qm = Mat::new(seq_len, d, q.to_vec());
                 let km = Mat::new(seq_len, d, k.to_vec());
                 let vm = Mat::new(seq_len, d, v.to_vec());
-                Ok(flash_pwl(&qm, &km, &vm, tile, tile, *segments).data)
+                Ok(flash_pwl_masked(&qm, &km, &vm, *array_size, *array_size, *segments, mask)
+                    .data)
             }
         }
     }
@@ -401,6 +425,7 @@ mod tests {
 
     #[test]
     fn reference_backend_matches_flash_pwl_twin() {
+        use crate::numerics::reference::flash_pwl;
         use crate::numerics::SplitMix64;
         let cfg = AccelConfig::builtin("fsa").unwrap();
         let mut be =
@@ -411,8 +436,9 @@ mod tests {
         let q = rng.normal_matrix(seq, d);
         let k = rng.normal_matrix(seq, d);
         let v = rng.normal_matrix(seq, d);
-        let got = be.execute_head(seq, d, &q, &k, &v).unwrap();
-        // seq (32) is not a multiple of the 128 array: one whole tile.
+        let got = be.execute_head(seq, d, &q, &k, &v, MaskKind::None).unwrap();
+        // seq (32) is below the 128 array dim: one ragged tile, which is
+        // exactly one whole-sequence tile.
         let want = flash_pwl(
             &Mat::new(seq, d, q.clone()),
             &Mat::new(seq, d, k.clone()),
@@ -422,6 +448,19 @@ mod tests {
             cfg.pwl_segments,
         );
         assert_eq!(got, want.data);
+        // Masked execution is the masked twin, bit for bit.
+        let causal = be.execute_head(seq, d, &q, &k, &v, MaskKind::Causal).unwrap();
+        let want = flash_pwl_masked(
+            &Mat::new(seq, d, q.clone()),
+            &Mat::new(seq, d, k.clone()),
+            &Mat::new(seq, d, v.clone()),
+            cfg.array_size,
+            cfg.array_size,
+            cfg.pwl_segments,
+            MaskKind::Causal,
+        );
+        assert_eq!(causal, want.data);
+        assert_ne!(causal, got, "the mask must change the output");
     }
 
     #[test]

@@ -31,6 +31,8 @@
 //! | O[m,h] received by the accumulator      | `3N + m + h + 12`          |
 //! | last output (m = h = N-1)               | `5N + 10` exactly          |
 
+use crate::mask::{MaskKind, TileCoverage};
+
 /// Dataflow variant (§8.2): the full FSA uses both directions; the
 /// area-optimized variant has a single (downward) accumulation path and
 /// must wait for the whole P matrix before starting O = P V.
@@ -132,6 +134,16 @@ impl InnerSchedule {
         self.o_exit(self.n - 1, self.n - 1)
     }
 
+    /// Iteration latency of a *partially masked* tile (causal diagonal
+    /// tiles, the padding boundary tile): one extra element-wise wave —
+    /// the mask wave that parks the finite `-inf` stand-in on masked
+    /// lanes and zeroes their P — widens the `2 + segments` window by
+    /// one cycle.  Fully-masked tiles cost nothing: the tile-skipping
+    /// schedule never issues them (DESIGN.md §6).
+    pub fn masked_inner_latency(&self) -> u64 {
+        self.inner_latency() + 1
+    }
+
     /// Inner-iteration latency with a single live query row — the
     /// decode-phase degeneration of the §3.5 wave (one stationary Q
     /// column, §8.3's `d < N` concern taken to its extreme).
@@ -191,6 +203,50 @@ pub fn inner_flops(n: usize) -> u64 {
 /// `4 * SeqLen^2 * d` (§6.1).
 pub fn attention_flops(seq_len: usize, d: usize) -> u64 {
     4 * (seq_len as u64) * (seq_len as u64) * d as u64
+}
+
+/// Tile census of a masked `(seq_len, seq_len)` score matrix at the
+/// paper's `Br = Bc = N` tiling (sequence padded up to whole tiles, as
+/// the array computes them): `(full, partial, skipped)` tile counts.
+/// Skipped tiles are never issued by the tile-skipping schedule; partial
+/// tiles take the element-wise mask pass
+/// ([`InnerSchedule::masked_inner_latency`]).  For causal this is the
+/// `t(t-1)/2` lower triangle + `t` diagonal tiles + `t(t-1)/2` skipped —
+/// the ≈2× tile reduction.
+pub fn masked_tile_counts(seq_len: usize, n: usize, mask: MaskKind) -> (u64, u64, u64) {
+    assert!(n >= 1 && seq_len >= 1);
+    let t = seq_len.div_ceil(n);
+    let (mut full, mut partial, mut skipped) = (0u64, 0u64, 0u64);
+    for i in 0..t {
+        for j in 0..t {
+            match mask.coverage(i * n, n, j * n, n) {
+                TileCoverage::Full => full += 1,
+                TileCoverage::Partial => partial += 1,
+                TileCoverage::Empty => skipped += 1,
+            }
+        }
+    }
+    (full, partial, skipped)
+}
+
+/// Masked attention FLOPs for one `(seq_len, d)` head: only the valid
+/// `(query, key)` pairs count as useful work (score + PV, 2 FLOPs per
+/// MAC each).  `None` recovers the paper's `4 L² d`; causal is
+/// `4 d Σ(i+1) = 2 L (L+1) d` (≈half); key padding is `4 L·valid·d`
+/// (every computed query row over the `valid` real keys — padded query
+/// rows are the caller's to slice, so they still count as computed
+/// work).
+pub fn masked_attention_flops(seq_len: usize, d: usize, mask: MaskKind) -> u64 {
+    match mask {
+        MaskKind::None => attention_flops(seq_len, d),
+        MaskKind::Causal => {
+            let l = seq_len as u64;
+            2 * l * (l + 1) * d as u64
+        }
+        MaskKind::PaddingKeys { valid } => {
+            4 * seq_len as u64 * valid.min(seq_len) as u64 * d as u64
+        }
+    }
 }
 
 /// FLOPs of one decode step per head: a single query row over an
@@ -297,6 +353,53 @@ mod tests {
     fn flops_formulas() {
         assert_eq!(inner_flops(128), 4 * 128u64.pow(3));
         assert_eq!(attention_flops(2048, 128), 4 * 2048 * 2048 * 128);
+    }
+
+    #[test]
+    fn masked_flops_formulas() {
+        assert_eq!(
+            masked_attention_flops(2048, 128, MaskKind::None),
+            attention_flops(2048, 128)
+        );
+        // Causal: sum over rows of 4·(i+1)·d = 2·L·(L+1)·d, just over
+        // half of the square count.
+        let causal = masked_attention_flops(2048, 128, MaskKind::Causal);
+        assert_eq!(causal, 2 * 2048 * 2049 * 128);
+        assert!(causal > attention_flops(2048, 128) / 2);
+        assert!(causal < attention_flops(2048, 128) / 2 + 4 * 2048 * 128);
+        // Padding: every computed row over the valid prefix, clamped.
+        assert_eq!(
+            masked_attention_flops(128, 16, MaskKind::PaddingKeys { valid: 100 }),
+            4 * 128 * 100 * 16
+        );
+        assert_eq!(
+            masked_attention_flops(128, 16, MaskKind::PaddingKeys { valid: 1000 }),
+            attention_flops(128, 16)
+        );
+    }
+
+    #[test]
+    fn masked_tile_census() {
+        // Square: every tile full.
+        assert_eq!(masked_tile_counts(1024, 128, MaskKind::None), (64, 0, 0));
+        // Causal at t=8: 28 lower-triangle full, 8 diagonal partial, 28
+        // skipped — the ≈2x tile reduction the schedule banks on.
+        let t = 8u64;
+        assert_eq!(
+            masked_tile_counts(1024, 128, MaskKind::Causal),
+            (t * (t - 1) / 2, t, t * (t - 1) / 2)
+        );
+        // Padding at valid=300 over 512 (t=4): per row, 2 full + 1
+        // boundary partial + 1 skipped column tiles.
+        assert_eq!(
+            masked_tile_counts(512, 128, MaskKind::PaddingKeys { valid: 300 }),
+            (8, 4, 4)
+        );
+        // Ragged seq pads up to whole tiles.
+        assert_eq!(masked_tile_counts(100, 128, MaskKind::Causal), (0, 1, 0));
+        // The mask wave is one extra cycle in the elementwise window.
+        let s = InnerSchedule::new(128, Variant::DualPath, 8);
+        assert_eq!(s.masked_inner_latency(), s.inner_latency() + 1);
     }
 
     #[test]

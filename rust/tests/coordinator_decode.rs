@@ -35,6 +35,7 @@ fn cfg(devices: usize, kv_pages: usize, page_size: usize) -> RunConfig {
         kv_cache_pages: kv_pages,
         kv_page_size: page_size,
         kv_eviction: EvictionPolicy::Lru,
+        ..RunConfig::default()
     }
 }
 

@@ -98,26 +98,28 @@ fn unknown_seq_len_fails_cleanly_without_poisoning_the_pool() {
 }
 
 #[test]
-fn client_side_padding_recovers_odd_lengths() {
+fn padded_requests_are_rejected_by_mask_free_artifacts() {
     if !artifacts_ready() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     }
     let coord = Coordinator::start(cfg(1)).unwrap();
     let mut rng = SplitMix64::new(10);
+    // `padded()` is now exact: it stamps a PaddingKeys mask so the
+    // padded key rows are excluded from the softmax (DESIGN.md §6).
+    // The AOT artifacts take no mask input, so a strict PJRT pool
+    // rejects the request with an explicit error instead of silently
+    // serving the old residual-weight approximation; the reference
+    // backend serves it bitwise-exactly (rust/tests/coordinator_masked.rs).
     let original = req(&mut rng, 3, 100);
     let padded = original.padded(128);
+    assert!(!padded.mask.is_none(), "padded() must stamp the mask");
     let resp = coord.submit_wait(padded).unwrap();
-    let out = resp.output.expect("padded request should serve");
-    // Approximate (documented): padded keys take residual weight; real
-    // query rows must still be close to the unpadded reference.
-    let mut verifier = Runtime::new(Path::new("artifacts")).unwrap();
-    let p = original.padded(128);
-    let want = verifier
-        .execute_attention("sdpa_L128_d128", &p.q, &p.k, &p.v)
-        .unwrap();
-    let err = mat_error(&Mat::new(128, 128, out), &Mat::new(128, 128, want));
-    assert!(err.mae < 1e-2, "{err:?}");
+    let err = resp.output.expect_err("mask-free artifacts must reject");
+    assert!(err.contains("no attention mask"), "{err}");
+    // The pool still serves exact-bucket requests afterwards.
+    let good = coord.submit_wait(req(&mut rng, 4, 128)).unwrap();
+    assert!(good.output.is_ok());
     coord.shutdown();
 }
 

@@ -1,0 +1,252 @@
+//! End-to-end masked-attention serving tests (DESIGN.md §6) on the
+//! reference backend: causal prefill through the full coordinator path,
+//! exact (bitwise) bucket padding via `PaddingKeys`, and causal
+//! prefill → decode sessions against stateless causal recomputation.
+//! No PJRT and no artifacts, so these run in every environment.
+
+use fsa::config::{BackendKind, RunConfig};
+use fsa::coordinator::request::AttentionRequest;
+use fsa::coordinator::Coordinator;
+use fsa::mask::MaskKind;
+use fsa::numerics::reference::{flash_pwl_masked, mat_error, sdpa_masked, Mat};
+use fsa::numerics::SplitMix64;
+
+/// Array dim / PWL segments of the builtin `fsa` device config the
+/// workers run: the oracles must tile the same way.
+const ARRAY: usize = 128;
+const SEGMENTS: usize = 8;
+
+fn cfg(devices: usize) -> RunConfig {
+    RunConfig {
+        devices,
+        max_batch: 8,
+        batch_timeout_cycles: 50_000,
+        queue_depth: 64,
+        backend: BackendKind::Reference,
+        num_heads: 4,
+        num_kv_heads: 2,
+        ..RunConfig::default()
+    }
+}
+
+fn gqa_req(
+    rng: &mut SplitMix64,
+    id: u64,
+    seq: usize,
+    d: usize,
+    heads: usize,
+    kv: usize,
+) -> AttentionRequest {
+    AttentionRequest::gqa(
+        id,
+        seq,
+        d,
+        heads,
+        kv,
+        rng.normal_matrix(heads * seq, d),
+        rng.normal_matrix(kv * seq, d),
+        rng.normal_matrix(kv * seq, d),
+    )
+}
+
+/// Causal GQA serving end to end: sharded across the pool, every head
+/// bitwise the masked device twin, parity with masked dense SDPA, and
+/// mask-aware (≈halved) FLOP accounting.
+#[test]
+fn causal_request_serves_exactly_across_the_pool() {
+    let (seq, d, heads, kv) = (64usize, 32usize, 4usize, 2usize);
+    let mut rng = SplitMix64::new(61);
+    let req = gqa_req(&mut rng, 1, seq, d, heads, kv).with_mask(MaskKind::Causal);
+    let square_flops = gqa_req(&mut rng, 9, seq, d, heads, kv).flops();
+    assert!(req.flops() < square_flops, "causal FLOPs must be ~half");
+
+    let coord = Coordinator::start(cfg(2)).unwrap();
+    let resp = coord.submit_wait(req.clone()).unwrap();
+    let out = resp.output.expect("causal serving succeeds");
+    assert_eq!(resp.shards, heads);
+    assert!(resp.utilization > 0.0 && resp.utilization < 1.0);
+
+    for h in 0..heads {
+        let (k, v) = req.head_kv(req.kv_head_for(h));
+        let qh = Mat::new(seq, d, req.head_q(h).to_vec());
+        let km = Mat::new(seq, d, k.to_vec());
+        let vm = Mat::new(seq, d, v.to_vec());
+        // Bitwise: the device twin with the same mask and tiling.
+        let want = flash_pwl_masked(&qh, &km, &vm, ARRAY, ARRAY, SEGMENTS, MaskKind::Causal);
+        assert_eq!(&out[h * seq * d..(h + 1) * seq * d], &want.data[..], "head {h}");
+        // Parity: the exact masked dense reference (Table-2 band).
+        let dense = sdpa_masked(&qh, &km, &vm, MaskKind::Causal);
+        let got = Mat::new(seq, d, out[h * seq * d..(h + 1) * seq * d].to_vec());
+        let err = mat_error(&got, &dense);
+        assert!(err.mae < 2e-2, "head {h}: {err:?}");
+    }
+    coord.shutdown();
+}
+
+/// The tentpole exactness claim end to end: a `padded()` request served
+/// through the coordinator is bitwise the unpadded request on its real
+/// query rows — for unmasked (stamped `PaddingKeys`) and causal
+/// requests alike.  The old residual-softmax-weight approximation is
+/// gone.
+#[test]
+fn padded_request_is_bitwise_equal_to_unpadded() {
+    let (d, heads, kv) = (16usize, 4usize, 2usize);
+    let coord = Coordinator::start(cfg(2)).unwrap();
+    let mut rng = SplitMix64::new(62);
+    for &(seq, bucket) in &[(100usize, 128usize), (150, 256), (37, 64)] {
+        for mask in [MaskKind::None, MaskKind::Causal] {
+            let original = gqa_req(&mut rng, 1, seq, d, heads, kv).with_mask(mask);
+            let padded = original.padded(bucket);
+            match mask {
+                MaskKind::None => {
+                    assert_eq!(padded.mask, MaskKind::PaddingKeys { valid: seq });
+                }
+                m => assert_eq!(padded.mask, m),
+            }
+
+            let want = coord.submit_wait(original).unwrap().output.unwrap();
+            let resp = coord.submit_wait(padded).unwrap();
+            assert_eq!(resp.bucket, bucket);
+            let got = resp.output.unwrap();
+            // Slice the padded query rows away per head (head-major).
+            for h in 0..heads {
+                assert_eq!(
+                    &got[h * bucket * d..h * bucket * d + seq * d],
+                    &want[h * seq * d..(h + 1) * seq * d],
+                    "seq {seq} bucket {bucket} {mask:?} head {h}: padding changed numerics"
+                );
+            }
+        }
+    }
+    coord.shutdown();
+}
+
+/// Causal prefill → decode session: every decode step is bitwise the
+/// last row of a stateless *causal* recomputation over the grown
+/// sequence — decode needs no mask because the newest row's causal row
+/// IS the whole prefix.
+#[test]
+fn causal_prefill_decode_session_matches_stateless_causal_recompute() {
+    let (seq, d, heads, kv, steps) = (32usize, 16usize, 4usize, 2usize, 6usize);
+    let coord = Coordinator::start(cfg(2)).unwrap();
+    let mut rng = SplitMix64::new(63);
+
+    // Client-side mirror of the full Q/K/V history, per head / KV head.
+    let mut qh: Vec<Vec<f32>> = vec![Vec::new(); heads];
+    let mut kh: Vec<Vec<f32>> = vec![Vec::new(); kv];
+    let mut vh: Vec<Vec<f32>> = vec![Vec::new(); kv];
+
+    let q = rng.normal_matrix(heads * seq, d);
+    let k = rng.normal_matrix(kv * seq, d);
+    let v = rng.normal_matrix(kv * seq, d);
+    for h in 0..heads {
+        qh[h].extend_from_slice(&q[h * seq * d..(h + 1) * seq * d]);
+    }
+    for h in 0..kv {
+        kh[h].extend_from_slice(&k[h * seq * d..(h + 1) * seq * d]);
+        vh[h].extend_from_slice(&v[h * seq * d..(h + 1) * seq * d]);
+    }
+    let prefill = AttentionRequest::prefill(1, 5, seq, d, heads, kv, q, k, v)
+        .with_mask(MaskKind::Causal);
+    let resp = coord.submit_wait(prefill).unwrap();
+    let out = resp.output.expect("causal prefill succeeds");
+    assert_eq!(coord.sessions.mask(5), Some(MaskKind::Causal));
+    // The prefill response is the causal attention over the prefix.
+    for h in 0..heads {
+        let want = flash_pwl_masked(
+            &Mat::new(seq, d, qh[h].clone()),
+            &Mat::new(seq, d, kh[h / (heads / kv)].clone()),
+            &Mat::new(seq, d, vh[h / (heads / kv)].clone()),
+            ARRAY,
+            ARRAY,
+            SEGMENTS,
+            MaskKind::Causal,
+        );
+        assert_eq!(&out[h * seq * d..(h + 1) * seq * d], &want.data[..], "prefill head {h}");
+    }
+
+    for step in 0..steps as u64 {
+        let q = rng.normal_matrix(heads, d);
+        let k = rng.normal_matrix(kv, d);
+        let v = rng.normal_matrix(kv, d);
+        for h in 0..heads {
+            qh[h].extend_from_slice(&q[h * d..(h + 1) * d]);
+        }
+        for h in 0..kv {
+            kh[h].extend_from_slice(&k[h * d..(h + 1) * d]);
+            vh[h].extend_from_slice(&v[h * d..(h + 1) * d]);
+        }
+        let req = AttentionRequest::decode(100 + step, 5, step, d, heads, kv, q, k, v);
+        let resp = coord.submit_wait(req).unwrap();
+        let got = resp.output.expect("decode step succeeds");
+
+        // Stateless causal recompute over the grown sequence; its last
+        // row per head must be bitwise the decode output.
+        let grown = seq + 1 + step as usize;
+        for h in 0..heads {
+            let kvh = h / (heads / kv);
+            let full = flash_pwl_masked(
+                &Mat::new(grown, d, qh[h].clone()),
+                &Mat::new(grown, d, kh[kvh].clone()),
+                &Mat::new(grown, d, vh[kvh].clone()),
+                ARRAY,
+                ARRAY,
+                SEGMENTS,
+                MaskKind::Causal,
+            );
+            assert_eq!(
+                &got[h * d..(h + 1) * d],
+                &full.data[(grown - 1) * d..],
+                "step {step} head {h} diverged from stateless causal recompute"
+            );
+        }
+    }
+
+    // Masked decode steps are rejected as error responses.
+    let bad = AttentionRequest::decode(
+        900, 5, steps as u64, d, heads, kv,
+        rng.normal_matrix(heads, d),
+        rng.normal_matrix(kv, d),
+        rng.normal_matrix(kv, d),
+    )
+    .with_mask(MaskKind::Causal);
+    let resp = coord.submit_wait(bad).unwrap();
+    assert!(resp.output.unwrap_err().contains("no mask"));
+
+    coord.shutdown();
+}
+
+/// Padding-masked prefill is rejected (it would poison the host tier
+/// with zero K/V rows), and a key-padding mask round-trips on stateless
+/// traffic.
+#[test]
+fn padded_prefill_rejected_and_padding_mask_roundtrips() {
+    let (seq, d) = (16usize, 8usize);
+    let coord = Coordinator::start(cfg(1)).unwrap();
+    let mut rng = SplitMix64::new(64);
+
+    let padded_prefill = AttentionRequest::prefill(
+        1, 3, seq, d, 2, 1,
+        rng.normal_matrix(2 * seq, d),
+        rng.normal_matrix(seq, d),
+        rng.normal_matrix(seq, d),
+    )
+    .with_mask(MaskKind::PaddingKeys { valid: 8 });
+    let resp = coord.submit_wait(padded_prefill).unwrap();
+    assert!(resp.output.unwrap_err().contains("key-padding"));
+    assert!(!coord.sessions.contains(3));
+
+    // Stateless key-padding works and matches the masked dense oracle.
+    let req = gqa_req(&mut rng, 2, seq, d, 1, 1).with_mask(MaskKind::PaddingKeys { valid: 7 });
+    let resp = coord.submit_wait(req.clone()).unwrap();
+    let out = resp.output.unwrap();
+    let dense = sdpa_masked(
+        &Mat::new(seq, d, req.q.clone()),
+        &Mat::new(seq, d, req.k.clone()),
+        &Mat::new(seq, d, req.v.clone()),
+        MaskKind::PaddingKeys { valid: 7 },
+    );
+    let err = mat_error(&Mat::new(seq, d, out), &dense);
+    assert!(err.mae < 2e-2, "{err:?}");
+    coord.shutdown();
+}

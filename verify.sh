@@ -20,6 +20,9 @@ fi
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== cargo build --examples (warnings are errors) =="
+RUSTFLAGS="${RUSTFLAGS:-} -D warnings" cargo build --examples
+
 echo "== cargo test -q =="
 cargo test -q
 
