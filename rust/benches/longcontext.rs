@@ -1,0 +1,165 @@
+//! Bench: sequence-parallel long-context serving (DESIGN.md §7) —
+//! where splitting one sequence across devices beats a single device.
+//!
+//! Three parts:
+//!
+//! 1. Model sweep (instant): `perfmodel::seqpar_perf` over L × shard
+//!    counts — per-chunk span, merge + communication overhead, and the
+//!    speedup vs one device, with the modeled crossover L printed and
+//!    asserted (short sequences lose to the overhead, long ones
+//!    approach the shard-count-fold reduction).
+//! 2. Pool sweep: `seqpar_pool_perf` over devices × shards at a GQA
+//!    shape — sequence sharding lifting the `num_kv_heads` device
+//!    ceiling that head-sharding alone is stuck at.
+//! 3. Live serving: the real coordinator on the reference backend,
+//!    identical requests served at seq_shards ∈ {1, 2, 4} on 1 and 2
+//!    devices — asserting the gathered outputs are bitwise identical
+//!    across device counts (the placement-invariance contract) and
+//!    reporting host throughput.
+//!
+//!     cargo bench --bench longcontext
+
+use std::time::Instant;
+
+use fsa::benchutil::{smoke, Table};
+use fsa::config::{AccelConfig, BackendKind, RunConfig};
+use fsa::coordinator::request::AttentionRequest;
+use fsa::coordinator::Coordinator;
+use fsa::mask::MaskKind;
+use fsa::numerics::SplitMix64;
+use fsa::perfmodel::{seqpar_crossover, seqpar_perf, seqpar_pool_perf};
+use fsa::schedule::Variant;
+
+fn model_sweep(cfg: &AccelConfig) {
+    let d = 128;
+    let ls: &[usize] =
+        if smoke() { &[256, 2048, 16384] } else { &[256, 512, 1024, 2048, 4096, 8192, 16384] };
+    for mask in [MaskKind::None, MaskKind::Causal] {
+        let mut t = Table::new(&[
+            "L", "shards", "chunk max kc", "merge kc", "comm kc", "1-dev kc", "speedup",
+        ]);
+        for &l in ls {
+            for shards in [2usize, 4, 8] {
+                let p = seqpar_perf(cfg, l, d, shards, Variant::DualPath, 8, mask);
+                t.row(&[
+                    l.to_string(),
+                    shards.to_string(),
+                    format!("{:.1}", p.chunk_cycles_max as f64 / 1e3),
+                    format!("{:.1}", p.merge_cycles as f64 / 1e3),
+                    format!("{:.1}", p.comm_cycles as f64 / 1e3),
+                    format!("{:.1}", p.single_device_cycles as f64 / 1e3),
+                    format!("{:.2}x", p.speedup),
+                ]);
+            }
+        }
+        println!("\n-- sequence-parallel model (d=128, mask {mask}) --");
+        t.print();
+    }
+    let sweep = [128usize, 256, 512, 1024, 2048, 4096, 8192, 16384];
+    let crossover =
+        seqpar_crossover(cfg, d, 4, Variant::DualPath, 8, MaskKind::None, &sweep)
+            .expect("4-way sharding must win somewhere");
+    println!("\nmodeled crossover: 4-way sequence sharding wins from L = {crossover}");
+    assert!(
+        seqpar_perf(cfg, 16384, d, 4, Variant::DualPath, 8, MaskKind::None).speedup > 2.0,
+        "long-context speedup must be substantial"
+    );
+}
+
+fn pool_sweep(cfg: &AccelConfig) {
+    let (l, d, heads, kv) = (16384usize, 128usize, 8usize, 2usize);
+    let mut t = Table::new(&["devices", "seq shards", "devices used", "latency kc", "util %"]);
+    for &devices in &[2usize, 4, 8] {
+        for &shards in &[1usize, 2, 4] {
+            let p = seqpar_pool_perf(
+                cfg, l, d, heads, kv, devices, shards, Variant::DualPath, 8, MaskKind::None,
+            );
+            t.row(&[
+                devices.to_string(),
+                shards.to_string(),
+                p.devices_used.to_string(),
+                format!("{:.0}", p.critical_path_cycles as f64 / 1e3),
+                format!("{:.1}", 100.0 * p.utilization),
+            ]);
+        }
+    }
+    println!("\n-- pool model: L=16384 8q/2kv — sequence shards lift the KV-head ceiling --");
+    t.print();
+}
+
+/// Serve `n_req` identical requests and return the gathered outputs
+/// (plus host tokens/s).  Outputs must not depend on `devices` — the
+/// bitwise placement-invariance contract asserted by the caller.
+fn live_run(
+    devices: usize,
+    seq_shards: usize,
+    seq: usize,
+    n_req: usize,
+    mask: MaskKind,
+) -> (Vec<Vec<f32>>, f64) {
+    let (d, heads, kv_heads) = (32usize, 4usize, 2usize);
+    let coord = Coordinator::start(RunConfig {
+        devices,
+        backend: BackendKind::Reference,
+        num_heads: heads,
+        num_kv_heads: kv_heads,
+        seq_shards,
+        ..RunConfig::default()
+    })
+    .expect("coordinator boots on the reference backend");
+
+    // Same seed for every configuration: identical request tensors.
+    let mut rng = SplitMix64::new(42);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for id in 0..n_req as u64 {
+        let q = rng.normal_matrix(heads * seq, d);
+        let k = rng.normal_matrix(kv_heads * seq, d);
+        let v = rng.normal_matrix(kv_heads * seq, d);
+        pending.push(
+            coord
+                .submit(
+                    AttentionRequest::gqa(id, seq, d, heads, kv_heads, q, k, v).with_mask(mask),
+                )
+                .expect("submit"),
+        );
+    }
+    let outs: Vec<Vec<f32>> = pending
+        .into_iter()
+        .map(|rx| rx.recv().expect("response").output.expect("request served"))
+        .collect();
+    let wall = t0.elapsed();
+    coord.shutdown();
+    (outs, n_req as f64 * seq as f64 / wall.as_secs_f64())
+}
+
+fn live_sweep() {
+    let (seq, n_req) = if smoke() { (64, 2) } else { (256, 8) };
+    let mut t = Table::new(&["mask", "seq shards", "1-dev tok/s", "2-dev tok/s", "bitwise"]);
+    for mask in [MaskKind::None, MaskKind::Causal] {
+        for shards in [1usize, 2, 4] {
+            let (a, tps1) = live_run(1, shards, seq, n_req, mask);
+            let (b, tps2) = live_run(2, shards, seq, n_req, mask);
+            assert_eq!(
+                a, b,
+                "mask {mask} shards {shards}: output depends on device count"
+            );
+            t.row(&[
+                mask.to_string(),
+                shards.to_string(),
+                format!("{tps1:.0}"),
+                format!("{tps2:.0}"),
+                "ok".into(),
+            ]);
+        }
+    }
+    println!("\n-- live serving: outputs bitwise-invariant to pool size ({n_req} reqs, L={seq}) --");
+    t.print();
+}
+
+fn main() {
+    let cfg = AccelConfig::builtin("fsa").unwrap();
+    model_sweep(&cfg);
+    pool_sweep(&cfg);
+    live_sweep();
+}

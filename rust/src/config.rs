@@ -363,6 +363,13 @@ pub struct RunConfig {
     /// 1.5 GHz FSA clock (the batcher used to hard-code it, silently
     /// flushing batches early for any other configured clock).
     pub freq_ghz: f64,
+    /// Sequence-parallel shard count (DESIGN.md §7): split every
+    /// request's K/V into this many contiguous chunks, execute each
+    /// chunk's partial `(O~, m, l)` on its own device, and merge the
+    /// partials in chunk order at gather.  `1` (the default) is the
+    /// legacy whole-sequence path, bit for bit.  Values `> 1` require
+    /// the reference backend (the AOT artifacts emit no partial state).
+    pub seq_shards: usize,
 }
 
 impl Default for RunConfig {
@@ -381,6 +388,7 @@ impl Default for RunConfig {
             kv_eviction: EvictionPolicy::Lru,
             mask: MaskKind::None,
             freq_ghz: 1.5,
+            seq_shards: 1,
         }
     }
 }
@@ -409,6 +417,11 @@ impl RunConfig {
             self.freq_ghz > 0.0,
             "freq_ghz must be positive, got {}",
             self.freq_ghz
+        );
+        ensure!(
+            self.seq_shards >= 1,
+            "seq_shards must be >= 1, got {}",
+            self.seq_shards
         );
         Ok(())
     }
@@ -454,6 +467,9 @@ impl RunConfig {
         }
         if let Some(v) = ini.get_parsed::<f64>(sec, "freq_ghz")? {
             cfg.freq_ghz = v;
+        }
+        if let Some(v) = ini.get_parsed::<usize>(sec, "seq_shards")? {
+            cfg.seq_shards = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -552,6 +568,17 @@ mod tests {
         // Bad values are rejected at load.
         assert!(RunConfig::from_ini(&Ini::parse("[run]\nmask = diag\n").unwrap()).is_err());
         assert!(RunConfig::from_ini(&Ini::parse("[run]\nfreq_ghz = 0\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_config_seq_shards_knob() {
+        let run =
+            RunConfig::from_ini(&Ini::parse("[run]\nseq_shards = 4\n").unwrap()).unwrap();
+        assert_eq!(run.seq_shards, 4);
+        // Default: the legacy whole-sequence path.
+        assert_eq!(RunConfig::default().seq_shards, 1);
+        // Zero shards is rejected at load.
+        assert!(RunConfig::from_ini(&Ini::parse("[run]\nseq_shards = 0\n").unwrap()).is_err());
     }
 
     #[test]

@@ -4,10 +4,12 @@
 //! timeout so short queues still make progress.
 //!
 //! A multi-head request enters as one [`Envelope`] and leaves as
-//! `num_heads` [`ShardEnvelope`]s; shards of *different* requests with
-//! the same `(seq_len, d, mask)` shape share batches, so head-sharding
-//! and cross-request batching compose (masked and unmasked shards are
-//! different kernels and never share a batch).
+//! `num_heads · live_chunks` [`ShardEnvelope`]s (the `(head, kv-range)`
+//! grid of DESIGN.md §7; one chunk per head on the legacy
+//! `seq_shards = 1` path); shards of *different* requests with the
+//! same `(seq_len, d, mask)` shape share batches, so head-sharding,
+//! sequence-sharding, and cross-request batching compose (masked and
+//! unmasked shards are different kernels and never share a batch).
 //!
 //! The batcher is also the session lifecycle gate (DESIGN.md §5):
 //! prefill registers the session, decode validates step order and
@@ -39,6 +41,31 @@ use super::shard::{explode, ShardEnvelope};
 /// cross-request batching on exactly the padded traffic).
 type GroupKey = (usize, usize, std::mem::Discriminant<MaskKind>);
 
+/// What the pool's resolved backend can execute, probed once at
+/// [`Coordinator::start`](super::Coordinator::start).  Incapable pools
+/// reject the corresponding traffic at admission — before any session
+/// state mutates.  All three currently coincide with "runs on the
+/// reference twin"; they are carried separately because artifact export
+/// (DESIGN.md §future-work) would split them.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolCapabilities {
+    /// Decode steps (PJRT has no `fsa_decode` artifact kind).
+    pub decode: bool,
+    /// Masked shards (the AOT artifacts take no mask input,
+    /// DESIGN.md §6).
+    pub mask: bool,
+    /// Sequence-parallel partial shards (the AOT artifacts emit no
+    /// `(O~, m, l)` state, DESIGN.md §7).
+    pub seqpar: bool,
+}
+
+impl PoolCapabilities {
+    /// Everything-on (the reference backend).
+    pub fn reference() -> PoolCapabilities {
+        PoolCapabilities { decode: true, mask: true, seqpar: true }
+    }
+}
+
 pub struct Batcher {
     max_batch: usize,
     /// Timeout expressed in simulated device cycles in the config; the
@@ -46,17 +73,11 @@ pub struct Batcher {
     /// to a host duration.  (It used to hard-code the paper's 1.5 GHz,
     /// silently flushing batches 1.5x early on a 1.0 GHz config.)
     timeout: Duration,
-    /// Whether the pool's resolved backend can execute decode steps
-    /// (PJRT has no `fsa_decode` artifact kind — the coordinator
-    /// resolves this once at start, including the `auto` case).
-    /// Incapable pools reject decode *before* the step is consumed.
-    decode_capable: bool,
-    /// Whether the pool's resolved backend can execute masked shards
-    /// (the AOT artifacts take no mask input, DESIGN.md §6).  Incapable
-    /// pools reject masked requests at admission — critically *before*
-    /// a masked prefill opens a session that every shard would then
-    /// fail, which would leave the session orphaned-open.
-    mask_capable: bool,
+    /// Sequence-parallel shard count every admitted request explodes at
+    /// (`RunConfig::seq_shards`; 1 = legacy whole-sequence shards).
+    seq_shards: usize,
+    /// Resolved backend capabilities (see [`PoolCapabilities`]).
+    caps: PoolCapabilities,
 }
 
 impl Batcher {
@@ -64,15 +85,15 @@ impl Batcher {
         max_batch: usize,
         timeout_cycles: u64,
         freq_ghz: f64,
-        decode_capable: bool,
-        mask_capable: bool,
+        seq_shards: usize,
+        caps: PoolCapabilities,
     ) -> Batcher {
         assert!(freq_ghz > 0.0, "clock must be positive (RunConfig::validate)");
         Batcher {
             max_batch: max_batch.max(1),
             timeout: Duration::from_nanos((timeout_cycles as f64 / freq_ghz) as u64),
-            decode_capable,
-            mask_capable,
+            seq_shards: seq_shards.max(1),
+            caps,
         }
     }
 
@@ -90,17 +111,13 @@ impl Batcher {
     ) {
         let mut groups: Vec<(GroupKey, Vec<ShardEnvelope>)> = Vec::new();
         let admit = |env: Envelope, groups: &mut Vec<(GroupKey, Vec<ShardEnvelope>)>| {
-            let Some(env) = admit_session_op(
-                env,
-                &sessions,
-                &metrics,
-                self.decode_capable,
-                self.mask_capable,
-            ) else {
+            let Some(env) =
+                admit_session_op(env, &sessions, &metrics, self.caps, self.seq_shards)
+            else {
                 return; // answered in place (close / lifecycle error)
             };
             let key = (env.req.seq_len, env.req.d, std::mem::discriminant(&env.req.mask));
-            let shards = explode(env);
+            let shards = explode(env, self.seq_shards);
             match groups.iter_mut().find(|(k, _)| *k == key) {
                 Some((_, g)) => g.extend(shards),
                 None => groups.push((key, shards)),
@@ -175,15 +192,15 @@ fn admit_session_op(
     mut env: Envelope,
     sessions: &SessionTable,
     metrics: &Metrics,
-    decode_capable: bool,
-    mask_capable: bool,
+    caps: PoolCapabilities,
+    seq_shards: usize,
 ) -> Option<Envelope> {
     let o = std::sync::atomic::Ordering::Relaxed;
     // Reject masked requests on a mask-incapable (PJRT) pool up front:
     // every shard would fail at the device anyway, and a masked
     // *prefill* must not get as far as opening a session it can never
     // serve (the session would be left orphaned-open).
-    if !mask_capable && !env.req.mask.is_none() {
+    if !caps.mask && !env.req.mask.is_none() {
         let mask = env.req.mask;
         reply_inline(
             env,
@@ -196,25 +213,44 @@ fn admit_session_op(
         );
         return None;
     }
+    // Reject sequence-sharded serving on a seqpar-incapable (PJRT) pool
+    // the same way — the AOT artifacts emit normalized outputs, not the
+    // partial (O~, m, l) state the gather merge needs (DESIGN.md §7).
+    // Close is exempt: it executes no kernel and must stay idempotent
+    // (answered below with its usual empty-success/not-open reply).
+    if !caps.seqpar && seq_shards > 1 && !matches!(env.req.op, SessionOp::Close { .. }) {
+        reply_inline(
+            env,
+            Err(format!(
+                "the pool's PJRT backend emits no partial (O~, m, l) state \
+                 (seq_shards = {seq_shards}); restart with backend=reference, \
+                 or export partial artifacts (DESIGN.md §7)"
+            )),
+            metrics,
+        );
+        return None;
+    }
     match env.req.op {
         SessionOp::Stateless => Some(env),
-        SessionOp::Prefill { session } => match sessions.open(session, &env.req) {
-            Ok(epoch) => {
-                env.req.epoch = epoch;
-                metrics.sessions_opened.fetch_add(1, o);
-                Some(env)
+        SessionOp::Prefill { session } => {
+            match sessions.open(session, &env.req, seq_shards) {
+                Ok(epoch) => {
+                    env.req.epoch = epoch;
+                    metrics.sessions_opened.fetch_add(1, o);
+                    Some(env)
+                }
+                Err(msg) => {
+                    reply_inline(env, Err(msg), metrics);
+                    None
+                }
             }
-            Err(msg) => {
-                reply_inline(env, Err(msg), metrics);
-                None
-            }
-        },
+        }
         SessionOp::Decode { session, step } => {
             // Reject before begin_decode consumes the step: a PJRT
             // pool (including `auto` that resolved to PJRT) has no
             // decode artifact kind, so admitting would burn the step
             // on a guaranteed execution error.
-            if !decode_capable {
+            if !caps.decode {
                 reply_inline(
                     env,
                     Err(format!(
@@ -227,9 +263,10 @@ fn admit_session_op(
                 return None;
             }
             match sessions.begin_decode(session, step, &env.req) {
-                Ok((prefix_len, epoch)) => {
-                    env.req.prefix_len = prefix_len;
-                    env.req.epoch = epoch;
+                Ok(admit) => {
+                    env.req.prefix_len = admit.prefix_len;
+                    env.req.prefill_len = admit.prefill_len;
+                    env.req.epoch = admit.epoch;
                     metrics.decode_steps.fetch_add(1, o);
                     Some(env)
                 }
@@ -261,6 +298,8 @@ fn reply_inline(env: Envelope, output: Result<Vec<f32>, String>, metrics: &Metri
         num_heads: env.req.num_heads,
         num_kv_heads: env.req.num_kv_heads,
         shards: 0,
+        seq_chunks: 0,
+        merge_steps: 0,
         device_cycles: 0,
         critical_path_cycles: 0,
         device_time: Duration::ZERO,
@@ -286,11 +325,14 @@ mod tests {
         (0..n)
             .flat_map(|id| {
                 let m = vec![0.0f32; seq * d];
-                explode(Envelope {
-                    req: AttentionRequest::new(id, seq, d, m.clone(), m.clone(), m),
-                    reply: mpsc::channel().0,
-                    enqueued: std::time::Instant::now(),
-                })
+                explode(
+                    Envelope {
+                        req: AttentionRequest::new(id, seq, d, m.clone(), m.clone(), m),
+                        reply: mpsc::channel().0,
+                        enqueued: std::time::Instant::now(),
+                    },
+                    1,
+                )
             })
             .collect()
     }
@@ -300,10 +342,56 @@ mod tests {
     /// 1.5 GHz but 150 µs at 1.0 GHz (the old code flushed 1.5× early).
     #[test]
     fn timeout_converts_at_the_configured_clock() {
-        let at = |ghz: f64| Batcher::new(4, 150_000, ghz, true, true).timeout;
+        let at = |ghz: f64| {
+            Batcher::new(4, 150_000, ghz, 1, PoolCapabilities::reference()).timeout
+        };
         assert_eq!(at(1.5), Duration::from_nanos(100_000));
         assert_eq!(at(1.0), Duration::from_nanos(150_000));
         assert_eq!(at(3.0), Duration::from_nanos(50_000));
+    }
+
+    #[test]
+    fn seqpar_requests_need_a_partial_capable_pool() {
+        let sessions = SessionTable::new();
+        let metrics = Metrics::new();
+        let d = 4;
+        let caps_pjrt = PoolCapabilities { decode: false, mask: false, seqpar: false };
+        let mk = || -> (Envelope, mpsc::Receiver<AttentionResponse>) {
+            let (tx, rx) = mpsc::channel();
+            let m = vec![0.0f32; 8 * d];
+            (
+                Envelope {
+                    req: AttentionRequest::new(1, 8, d, m.clone(), m.clone(), m),
+                    reply: tx,
+                    enqueued: std::time::Instant::now(),
+                },
+                rx,
+            )
+        };
+        // seq_shards > 1 on a PJRT pool: rejected at admission with the
+        // partial-state explanation.
+        let (env, rx) = mk();
+        assert!(admit_session_op(env, &sessions, &metrics, caps_pjrt, 2).is_none());
+        let err = rx.try_recv().unwrap().output.unwrap_err();
+        assert!(err.contains("partial") && err.contains("seq_shards"), "{err}");
+        // The same request passes on a reference pool, and at
+        // seq_shards = 1 even the PJRT pool admits it.
+        let (env, _rx) = mk();
+        assert!(admit_session_op(env, &sessions, &metrics, PoolCapabilities::reference(), 2)
+            .is_some());
+        let (env, _rx) = mk();
+        assert!(admit_session_op(env, &sessions, &metrics, caps_pjrt, 1).is_some());
+        // Close executes no kernel: it must keep its normal idempotent
+        // reply shape even on the incapable pool (not the seqpar error).
+        let (tx, rx) = mpsc::channel();
+        let env = Envelope {
+            req: AttentionRequest::close(9, 404),
+            reply: tx,
+            enqueued: std::time::Instant::now(),
+        };
+        assert!(admit_session_op(env, &sessions, &metrics, caps_pjrt, 2).is_none());
+        let err = rx.try_recv().unwrap().output.unwrap_err();
+        assert!(err.contains("not open"), "close must be answered as close: {err}");
     }
 
     #[test]
@@ -333,6 +421,7 @@ mod tests {
         // A causal prefill on a PJRT pool must be rejected WITHOUT
         // opening the session (else it would be orphaned-open: every
         // shard fails at the device, but the id stays registered).
+        let incapable = PoolCapabilities { decode: false, mask: false, seqpar: false };
         let (env, rx) = mk(
             AttentionRequest::prefill(
                 1, 7, 2, d, 2, 1,
@@ -340,7 +429,7 @@ mod tests {
             )
             .with_mask(MaskKind::Causal),
         );
-        assert!(admit_session_op(env, &sessions, &metrics, false, false).is_none());
+        assert!(admit_session_op(env, &sessions, &metrics, incapable, 1).is_none());
         assert!(rx.try_recv().unwrap().output.unwrap_err().contains("no attention mask"));
         assert!(!sessions.contains(7), "rejected prefill must not open the session");
 
@@ -349,7 +438,7 @@ mod tests {
             AttentionRequest::new(2, 2, d, vec![0.0; 2 * d], vec![0.0; 2 * d], vec![0.0; 2 * d])
                 .with_mask(MaskKind::PaddingKeys { valid: 1 }),
         );
-        assert!(admit_session_op(env, &sessions, &metrics, false, false).is_none());
+        assert!(admit_session_op(env, &sessions, &metrics, incapable, 1).is_none());
         assert!(rx.try_recv().unwrap().output.is_err());
 
         // The same requests pass admission on a mask-capable pool.
@@ -360,7 +449,10 @@ mod tests {
             )
             .with_mask(MaskKind::Causal),
         );
-        assert!(admit_session_op(env, &sessions, &metrics, true, true).is_some());
+        assert!(
+            admit_session_op(env, &sessions, &metrics, PoolCapabilities::reference(), 1)
+                .is_some()
+        );
         assert!(sessions.contains(7));
     }
 
@@ -386,11 +478,14 @@ mod tests {
         let (seq, d, heads) = (8, 4, 4);
         let q = vec![0.0f32; heads * seq * d];
         let kv = vec![0.0f32; seq * d];
-        let shards = explode(Envelope {
-            req: AttentionRequest::gqa(1, seq, d, heads, 1, q, kv.clone(), kv),
-            reply: mpsc::channel().0,
-            enqueued: std::time::Instant::now(),
-        });
+        let shards = explode(
+            Envelope {
+                req: AttentionRequest::gqa(1, seq, d, heads, 1, q, kv.clone(), kv),
+                reply: mpsc::channel().0,
+                enqueued: std::time::Instant::now(),
+            },
+            1,
+        );
         // One 4-head request + batch limit 3 => chunks of 3 + 1.
         let sizes: Vec<usize> =
             Batcher::chunks(shards, 3).iter().map(|c| c.len()).collect();
@@ -402,7 +497,7 @@ mod tests {
         let sessions = SessionTable::new();
         let metrics = Metrics::new();
         let d = 4;
-        let be = true; // decode-capable pool
+        let caps = PoolCapabilities::reference();
         let mk = |req: AttentionRequest| -> (Envelope, mpsc::Receiver<AttentionResponse>) {
             let (tx, rx) = mpsc::channel();
             (Envelope { req, reply: tx, enqueued: std::time::Instant::now() }, rx)
@@ -412,23 +507,25 @@ mod tests {
         let (env, rx) = mk(AttentionRequest::decode(
             1, 7, 0, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
         ));
-        assert!(admit_session_op(env, &sessions, &metrics, be, true).is_none());
+        assert!(admit_session_op(env, &sessions, &metrics, caps, 1).is_none());
         assert!(rx.try_recv().unwrap().output.is_err());
 
         // Prefill opens the session and is stamped with its epoch.
         let (env, _rx) = mk(AttentionRequest::prefill(
             2, 7, 2, d, 2, 1, vec![0.0; 2 * 2 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
         ));
-        let env2 = admit_session_op(env, &sessions, &metrics, be, true).unwrap();
+        let env2 = admit_session_op(env, &sessions, &metrics, caps, 1).unwrap();
         assert!(env2.req.epoch > 0);
         assert!(sessions.contains(7));
 
-        // A valid decode is stamped with the prefix length and epoch.
+        // A valid decode is stamped with the prefix length, the
+        // chunk-grid basis, and the epoch.
         let (env, _rx) = mk(AttentionRequest::decode(
             3, 7, 0, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
         ));
-        let env = admit_session_op(env, &sessions, &metrics, be, true).unwrap();
+        let env = admit_session_op(env, &sessions, &metrics, caps, 1).unwrap();
         assert_eq!(env.req.prefix_len, 3);
+        assert_eq!(env.req.prefill_len, 2);
         assert_eq!(env.req.epoch, env2.req.epoch);
 
         // On a decode-incapable pool (PJRT, including auto resolved to
@@ -438,13 +535,14 @@ mod tests {
         let (env, rx2) = mk(AttentionRequest::decode(
             9, 7, 1, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
         ));
-        assert!(admit_session_op(env, &sessions, &metrics, false, true).is_none());
+        let no_decode = PoolCapabilities { decode: false, mask: true, seqpar: true };
+        assert!(admit_session_op(env, &sessions, &metrics, no_decode, 1).is_none());
         assert!(rx2.try_recv().unwrap().output.unwrap_err().contains("fsa_decode"));
         assert_eq!(sessions.prefix_len(7), before, "rejected step must not consume state");
 
         // Close is answered in place with an empty success.
         let (env, rx) = mk(AttentionRequest::close(4, 7));
-        assert!(admit_session_op(env, &sessions, &metrics, be, true).is_none());
+        assert!(admit_session_op(env, &sessions, &metrics, caps, 1).is_none());
         let resp = rx.try_recv().unwrap();
         assert_eq!(resp.output.unwrap(), Vec::<f32>::new());
         assert!(!sessions.contains(7));

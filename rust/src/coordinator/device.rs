@@ -25,7 +25,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::config::{AccelConfig, RunConfig};
-use crate::perfmodel::{fsa_decode_perf, fsa_flash_perf_masked};
+use crate::perfmodel::{fsa_decode_perf, fsa_flash_chunk_perf, fsa_flash_perf_masked};
 use crate::runtime::Backend;
 use crate::schedule::Variant;
 
@@ -33,7 +33,7 @@ use super::kvcache::{Admit, KvCache, KvCacheConfig};
 use super::metrics::Metrics;
 use super::router::{Batch, WorkerHandle};
 use super::session::SessionTable;
-use super::shard::{CacheOutcome, ShardCtx, ShardEnvelope, ShardResult};
+use super::shard::{CacheOutcome, ShardCtx, ShardEnvelope, ShardOut, ShardResult};
 
 pub struct DeviceWorker {
     handle: WorkerHandle,
@@ -99,13 +99,18 @@ fn worker_loop(
         page_size: run_cfg.kv_page_size,
         policy: run_cfg.kv_eviction,
     });
+    let seq_shards = run_cfg.seq_shards.max(1);
 
     while let Ok(batch) = rx.recv() {
         let n = batch.len();
         for env in batch {
-            let (cycles, cache_outcome, output) =
-                execute_shard(id, &cfg, backend.as_mut(), &mut cache, &sessions, &metrics, &env);
+            let (cycles, cache_outcome, output) = execute_shard(
+                id, &cfg, backend.as_mut(), &mut cache, &sessions, &metrics, &env, seq_shards,
+            );
             metrics.record_shard(cycles);
+            if env.shard.is_partial() {
+                metrics.seq_chunk_shards.fetch_add(1, Ordering::Relaxed);
+            }
             match cache_outcome {
                 CacheOutcome::Hit => {
                     metrics.kv_hits.fetch_add(1, Ordering::Relaxed);
@@ -118,6 +123,7 @@ fn worker_loop(
             let resp = env.gather.complete_and_report(
                 ShardResult {
                     head: env.shard.head,
+                    chunk_pos: env.shard.chunk_pos,
                     device_id: id,
                     cycles,
                     output,
@@ -136,6 +142,14 @@ fn worker_loop(
 
 /// Execute one shard on this device: numerics + device-cycle pricing +
 /// KV-cache bookkeeping.  Returns `(cycles, cache outcome, output)`.
+///
+/// Sequence-sharded shards (`shard.is_partial()`, DESIGN.md §7)
+/// execute only their `kv_range` chunk and emit [`ShardOut::Partial`];
+/// their cache unit is the `(session, kv_head, chunk)` stream, keyed in
+/// this device's [`KvCache`] as `kv_head * seq_shards + chunk` (one
+/// device never legitimately holds two chunks under one key — and if
+/// routing ever colocates them, distinct keys keep the streams apart).
+#[allow(clippy::too_many_arguments)]
 fn execute_shard(
     id: usize,
     cfg: &AccelConfig,
@@ -144,9 +158,14 @@ fn execute_shard(
     sessions: &SessionTable,
     metrics: &Metrics,
     env: &ShardEnvelope,
-) -> (u64, CacheOutcome, Result<Vec<f32>, String>) {
+    seq_shards: usize,
+) -> (u64, CacheOutcome, Result<ShardOut, String>) {
     let shard = &env.shard;
     let req = &shard.req;
+    let (start, len) = shard.kv_range;
+    // The KvCache stream id of this (kv_head, chunk) pair; equals
+    // kv_head on the legacy path (chunk 0, seq_shards 1).
+    let stream = shard.kv_head * seq_shards + shard.chunk;
     // A cached stream is live only while its session incarnation is:
     // closed sessions and stale epochs (reused ids) both read as dead
     // and become reapable capacity.
@@ -157,35 +176,67 @@ fn execute_shard(
             // Per-head device timing: the head runs on one array, seq
             // padded up to the array dim, head dim capped by it (§8.3);
             // the mask prices only the tiles the skipping schedule
-            // issues (≈2x fewer for causal, DESIGN.md §6).
-            let perf = fsa_flash_perf_masked(
-                cfg,
-                req.seq_len.max(cfg.array_size),
-                req.d.min(cfg.array_size),
-                Variant::DualPath,
-                cfg.pwl_segments,
-                req.mask,
-            );
+            // issues (≈2x fewer for causal, DESIGN.md §6), and a
+            // sequence chunk prices only its own key range (§7).
+            let perf = if shard.is_partial() {
+                fsa_flash_chunk_perf(
+                    cfg,
+                    req.seq_len.max(cfg.array_size),
+                    req.d.min(cfg.array_size),
+                    start,
+                    len.max(1),
+                    Variant::DualPath,
+                    cfg.pwl_segments,
+                    req.mask,
+                )
+            } else {
+                fsa_flash_perf_masked(
+                    cfg,
+                    req.seq_len.max(cfg.array_size),
+                    req.d.min(cfg.array_size),
+                    Variant::DualPath,
+                    cfg.pwl_segments,
+                    req.mask,
+                )
+            };
             let (k, v) = req.head_kv(shard.kv_head);
+            let (k_chunk, v_chunk) =
+                (&k[start * req.d..(start + len) * req.d], &v[start * req.d..(start + len) * req.d]);
             let output = match backend {
                 None => Err("device backend unavailable".to_string()),
                 Some(be) => {
-                    be.execute_head(req.seq_len, req.d, req.head_q(shard.head), k, v, req.mask)
+                    if shard.is_partial() {
+                        be.execute_head_partial(
+                            req.seq_len,
+                            req.d,
+                            req.head_q(shard.head),
+                            k_chunk,
+                            v_chunk,
+                            req.mask,
+                            start,
+                            req.seq_len,
+                        )
+                        .map(ShardOut::Partial)
+                    } else {
+                        be.execute_head(
+                            req.seq_len, req.d, req.head_q(shard.head), k, v, req.mask,
+                        )
+                        .map(ShardOut::Full)
+                    }
                 }
             };
             if let ShardCtx::Prefill { session, epoch } = env.ctx {
-                // Land the KV group's prefix in the page cache once —
-                // skipped only when a groupmate of THIS prefill (same
-                // epoch) already inserted it; a same-length leftover
-                // from a closed predecessor session (reused id, stale
-                // epoch) is replaced, never trusted.
-                if output.is_ok()
-                    && cache.cached_state(session, shard.kv_head) != Some((req.seq_len, epoch))
-                {
+                // Land this chunk of the KV group's prefix in the page
+                // cache once — skipped only when a groupmate of THIS
+                // prefill (same epoch) already inserted it; a
+                // same-length leftover from a closed predecessor
+                // session (reused id, stale epoch) is replaced, never
+                // trusted.
+                if output.is_ok() && cache.cached_state(session, stream) != Some((len, epoch)) {
                     if let Admit::Cached { evicted } =
-                        cache.insert(session, shard.kv_head, epoch, req.d, k, v, &live)
+                        cache.insert(session, stream, epoch, req.d, k_chunk, v_chunk, &live)
                     {
-                        report_evictions(id, sessions, metrics, &evicted);
+                        report_evictions(id, sessions, metrics, seq_shards, &evicted);
                     }
                 }
             }
@@ -193,28 +244,33 @@ fn execute_shard(
         }
         ShardCtx::Decode { session, prefix_len, epoch } => {
             // The request carries this step's appended K/V row; the
-            // prefix lives in pages (hit) or the host tier (miss).
-            // Only streams of this session incarnation (epoch) count —
-            // a stale same-id stream reads as a miss and is replaced.
+            // chunk's range lives in pages (hit) or the host tier
+            // (miss).  Only streams of this session incarnation
+            // (epoch) count — a stale same-id stream reads as a miss
+            // and is replaced.  A chunk whose range ends at the grown
+            // prefix owns this step's appended row (last-chunk-grows);
+            // fixed-boundary chunks just stream their pages.
             let (k_row, v_row) = req.head_kv(shard.kv_head);
-            let cached = cache.cached_state(session, shard.kv_head);
+            let growing = start + len == prefix_len;
+            let cached = cache.cached_state(session, stream);
             let mut outcome = CacheOutcome::Miss;
             let mut data: Option<(Vec<f32>, Vec<f32>)> = None;
-            if cached == Some((prefix_len, epoch)) {
-                // A groupmate shard already appended this step's row.
+            if cached == Some((len, epoch)) {
+                // Range already resident (fixed chunk, or a groupmate
+                // shard already appended this step's row).
                 outcome = CacheOutcome::Hit;
-                data = cache.gather(session, shard.kv_head);
-            } else if prefix_len >= 1 && cached == Some((prefix_len - 1, epoch)) {
-                match cache.append(session, shard.kv_head, k_row, v_row, &live) {
+                data = cache.gather(session, stream);
+            } else if growing && len >= 1 && cached == Some((len - 1, epoch)) {
+                match cache.append(session, stream, k_row, v_row, &live) {
                     Admit::Cached { evicted } => {
-                        report_evictions(id, sessions, metrics, &evicted);
+                        report_evictions(id, sessions, metrics, seq_shards, &evicted);
                         outcome = CacheOutcome::Hit;
-                        data = cache.gather(session, shard.kv_head);
+                        data = cache.gather(session, stream);
                     }
                     Admit::Rejected => {
                         // Stream dropped (cache full, no eviction):
                         // explicit fallback to recompute below.
-                        sessions.clear_placement(session, shard.kv_head, id);
+                        sessions.clear_placement(session, shard.kv_head, shard.chunk, id);
                     }
                 }
             }
@@ -223,14 +279,14 @@ fn execute_shard(
                 None => {
                     // Miss: recompute from the authoritative host tier
                     // (models the upstream model re-running its forward
-                    // pass over the prefix), then re-cache for the next
+                    // pass over the range), then re-cache for the next
                     // steps.
                     outcome = CacheOutcome::Miss;
-                    match sessions.clone_prefix(session, shard.kv_head, prefix_len, epoch) {
+                    match sessions.clone_range(session, shard.kv_head, start, len, epoch) {
                         None => {
                             let perf = fsa_decode_perf(
                                 cfg,
-                                prefix_len.max(1),
+                                len.max(1),
                                 req.d.min(cfg.array_size),
                                 false,
                                 Variant::DualPath,
@@ -241,16 +297,19 @@ fn execute_shard(
                                 CacheOutcome::Miss,
                                 Err(format!(
                                     "session {session} closed or prefix unavailable \
-                                     (kv head {}, prefix {prefix_len})",
-                                    shard.kv_head
+                                     (kv head {}, chunk {} range [{start}, {}), \
+                                     prefix {prefix_len})",
+                                    shard.kv_head,
+                                    shard.chunk,
+                                    start + len
                                 )),
                             );
                         }
                         Some((k, v)) => {
                             if let Admit::Cached { evicted } =
-                                cache.insert(session, shard.kv_head, epoch, req.d, &k, &v, &live)
+                                cache.insert(session, stream, epoch, req.d, &k, &v, &live)
                             {
-                                report_evictions(id, sessions, metrics, &evicted);
+                                report_evictions(id, sessions, metrics, seq_shards, &evicted);
                             }
                             (k, v)
                         }
@@ -259,7 +318,7 @@ fn execute_shard(
             };
             let perf = fsa_decode_perf(
                 cfg,
-                prefix_len.max(1),
+                len.max(1),
                 req.d.min(cfg.array_size),
                 outcome == CacheOutcome::Hit,
                 Variant::DualPath,
@@ -267,13 +326,27 @@ fn execute_shard(
             );
             let output = match backend {
                 None => Err("device backend unavailable".to_string()),
-                Some(be) => be.execute_decode_row(
-                    prefix_len,
-                    req.d,
-                    req.head_q(shard.head),
-                    &k_full,
-                    &v_full,
-                ),
+                Some(be) => {
+                    if shard.is_partial() {
+                        be.execute_decode_row_partial(
+                            len,
+                            req.d,
+                            req.head_q(shard.head),
+                            &k_full,
+                            &v_full,
+                        )
+                        .map(ShardOut::Partial)
+                    } else {
+                        be.execute_decode_row(
+                            prefix_len,
+                            req.d,
+                            req.head_q(shard.head),
+                            &k_full,
+                            &v_full,
+                        )
+                        .map(ShardOut::Full)
+                    }
+                }
             };
             (perf.total_cycles, outcome, output)
         }
@@ -282,15 +355,17 @@ fn execute_shard(
 
 /// A stream was evicted from this device's cache: clear its sticky pin
 /// (if it still points here) so the router re-places the next step, and
-/// count it.
+/// count it.  Cache keys carry the chunk folded into the stream id
+/// (`kv_head * seq_shards + chunk`); decompose before clearing.
 fn report_evictions(
     id: usize,
     sessions: &SessionTable,
     metrics: &Metrics,
+    seq_shards: usize,
     evicted: &[(u64, usize)],
 ) {
-    for &(sid, kv_head) in evicted {
-        sessions.clear_placement(sid, kv_head, id);
+    for &(sid, stream) in evicted {
+        sessions.clear_placement(sid, stream / seq_shards, stream % seq_shards, id);
         metrics.kv_evictions.fetch_add(1, Ordering::Relaxed);
     }
 }

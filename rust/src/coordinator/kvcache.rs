@@ -9,6 +9,12 @@
 //! is accounted in pages; one page models
 //! `page_size · d · 2 (K+V) · 2 B (fp16)` of device HBM.
 //!
+//! Sequence-parallel serving (DESIGN.md §7) caches one *chunk* of a
+//! stream per device; the worker folds the chunk index into the stream
+//! key it passes as `kv_head` (`kv_head · seq_shards + chunk`), so this
+//! cache stays chunk-agnostic — a stream is whatever contiguous K/V
+//! range its owner decided to pin here.
+//!
 //! Policies ([`EvictionPolicy`]):
 //!
 //! * `Lru` — when an insert/append needs pages beyond capacity, closed

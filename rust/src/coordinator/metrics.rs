@@ -1,11 +1,15 @@
 //! Serving metrics: counters + latency reservoir, lock-light.
 //!
-//! Two granularities are tracked, matching the sharded request path:
+//! Three granularities are tracked, matching the sharded request path:
 //! whole requests (`submitted`/`completed`/`failed`, latency
-//! percentiles, aggregate device cycles) and per-head shards
-//! (`head_shards`, `shard_cycles`) so head-sharded multi-head serving
-//! is observable — e.g. an 8-head GQA request counts once in
-//! `completed` and eight times in `head_shards`.
+//! percentiles, aggregate device cycles), executed shards
+//! (`head_shards`, `shard_cycles`), and — distinctly — the
+//! sequence-parallel dimension (`seqpar_requests`, `seq_chunk_shards`,
+//! `merge_steps`, DESIGN.md §7), so an 8-head request sharded 4 ways
+//! along the sequence counts once in `completed`, 32 times in
+//! `head_shards`, 32 times in `seq_chunk_shards`, and 24 times in
+//! `merge_steps`.  (Before sequence sharding, `head_shards` silently
+//! conflated every future shard kind.)
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -23,10 +27,20 @@ pub struct Metrics {
     pub failed: AtomicUsize,
     /// Device batches dispatched by the batcher.
     pub batches: AtomicUsize,
-    /// Per-head shards executed by device workers.
+    /// Shards executed by device workers (one per `(head, chunk)` grid
+    /// cell).
     pub head_shards: AtomicUsize,
     /// Requests with more than one query head.
     pub multi_head_requests: AtomicUsize,
+    /// Requests served sequence-sharded (`seq_chunks > 1`,
+    /// DESIGN.md §7).
+    pub seqpar_requests: AtomicUsize,
+    /// Sequence-chunk shards executed by device workers (partial
+    /// results merged at gather) — counted distinctly from
+    /// `head_shards`, which they are a subset of.
+    pub seq_chunk_shards: AtomicUsize,
+    /// Online-softmax merge steps performed at gather.
+    pub merge_steps: AtomicU64,
     /// Total simulated device cycles consumed (summed across shards).
     pub device_cycles: AtomicU64,
     /// Simulated device cycles as counted per shard at execution time;
@@ -70,6 +84,10 @@ impl Metrics {
         if resp.num_heads > 1 {
             self.multi_head_requests.fetch_add(1, Ordering::Relaxed);
         }
+        if resp.seq_chunks > 1 {
+            self.seqpar_requests.fetch_add(1, Ordering::Relaxed);
+        }
+        self.merge_steps.fetch_add(resp.merge_steps as u64, Ordering::Relaxed);
         self.device_cycles.fetch_add(resp.device_cycles, Ordering::Relaxed);
         let mut l = super::lock(&self.latencies_ns);
         if l.len() < 65536 {
@@ -99,7 +117,8 @@ impl Metrics {
         let (p50, p95, max) = self.latency_percentiles();
         format!(
             "submitted {} completed {} failed {} batches {} head_shards {} \
-             multi_head {} device_cycles {} sessions {}/{} decode_steps {} \
+             multi_head {} seqpar {} seq_chunk_shards {} merge_steps {} \
+             device_cycles {} sessions {}/{} decode_steps {} \
              kv hit/miss/evict {}/{}/{} latency p50 {:?} p95 {:?} max {:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -107,6 +126,9 @@ impl Metrics {
             self.batches.load(Ordering::Relaxed),
             self.head_shards.load(Ordering::Relaxed),
             self.multi_head_requests.load(Ordering::Relaxed),
+            self.seqpar_requests.load(Ordering::Relaxed),
+            self.seq_chunk_shards.load(Ordering::Relaxed),
+            self.merge_steps.load(Ordering::Relaxed),
             self.device_cycles.load(Ordering::Relaxed),
             self.sessions_opened.load(Ordering::Relaxed),
             self.sessions_closed.load(Ordering::Relaxed),
@@ -132,6 +154,8 @@ mod tests {
             num_heads: heads,
             num_kv_heads: heads,
             shards: heads,
+            seq_chunks: 1,
+            merge_steps: 0,
             device_cycles: 100,
             critical_path_cycles: 100,
             device_time: Duration::from_micros(1),
@@ -178,6 +202,31 @@ mod tests {
     fn empty_percentiles_are_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_percentiles().0, Duration::ZERO);
+    }
+
+    /// Satellite: sequence shards and merge steps are counted
+    /// distinctly from head shards — a sequence-sharded response bumps
+    /// `seqpar_requests`/`merge_steps`, a plain multi-head one does not.
+    #[test]
+    fn sequence_shards_and_merges_counted_distinctly() {
+        let m = Metrics::new();
+        let mut r = resp(1, 4);
+        r.seq_chunks = 4;
+        r.shards = 16;
+        r.merge_steps = 12;
+        m.record(&r, true);
+        m.record(&resp(1, 4), true); // legacy multi-head response
+        let o = Ordering::Relaxed;
+        assert_eq!(m.seqpar_requests.load(o), 1);
+        assert_eq!(m.merge_steps.load(o), 12);
+        assert_eq!(m.multi_head_requests.load(o), 2);
+        // Worker-side shard counters stay independent.
+        m.record_shard(10);
+        m.seq_chunk_shards.fetch_add(1, o);
+        assert_eq!(m.head_shards.load(o), 1);
+        assert_eq!(m.seq_chunk_shards.load(o), 1);
+        let s = m.summary();
+        assert!(s.contains("seqpar 1") && s.contains("merge_steps 12"), "{s}");
     }
 
     /// Satellite: nearest-rank percentile selection, pinned on a known

@@ -91,16 +91,17 @@ impl Coordinator {
         );
 
         // Resolve the pool's backend capabilities once: PJRT has no
-        // `fsa_decode` artifact kind and its artifacts take no mask
-        // input, and `auto` lands on PJRT exactly when the manifest is
-        // present and the client boots — probe with the workers' own
-        // resolution logic so decode steps and masked requests are
-        // rejected up front on an incapable pool (a decode step is
+        // `fsa_decode` artifact kind, its artifacts take no mask input
+        // and emit no partial (O~, m, l) state, and `auto` lands on
+        // PJRT exactly when the manifest is present and the client
+        // boots — probe with the workers' own resolution logic so
+        // decode steps, masked requests, and sequence-sharded serving
+        // are rejected up front on an incapable pool (a decode step is
         // never consumed, a masked prefill never opens a session its
-        // shards cannot serve).  Both capabilities currently coincide
-        // with "runs on the reference twin"; they are carried
-        // separately because masked-artifact export (DESIGN.md
-        // §future-work) would split them.
+        // shards cannot serve).  All three capabilities currently
+        // coincide with "runs on the reference twin"; they are carried
+        // separately because artifact export (DESIGN.md §future-work)
+        // would split them.
         let on_reference = match cfg.backend {
             BackendKind::Reference => true,
             BackendKind::Pjrt => false,
@@ -111,15 +112,19 @@ impl Coordinator {
                     .unwrap_or(true)
             }
         };
-        let (decode_capable, mask_capable) = (on_reference, on_reference);
+        let caps = batcher::PoolCapabilities {
+            decode: on_reference,
+            mask: on_reference,
+            seqpar: on_reference,
+        };
 
         let (ingress, ingress_rx) = mpsc::sync_channel(cfg.queue_depth);
         let batcher = Batcher::new(
             cfg.max_batch,
             cfg.batch_timeout_cycles,
             cfg.freq_ghz,
-            decode_capable,
-            mask_capable,
+            cfg.seq_shards,
+            caps,
         );
         let m2 = metrics.clone();
         let s2 = sessions.clone();

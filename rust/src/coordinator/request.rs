@@ -45,6 +45,12 @@ pub struct AttentionRequest {
     /// this step's appended row).  Stamped by the batcher after session
     /// validation; 0 elsewhere.
     pub prefix_len: usize,
+    /// Decode only: the session's *prefill* length — the fixed basis of
+    /// the sequence-parallel chunk grid, so split-KV decode keeps the
+    /// same chunk boundaries across steps while the last chunk grows
+    /// ([`crate::schedule::chunk_ranges`], DESIGN.md §7).  Stamped by
+    /// the batcher after session validation; 0 elsewhere.
+    pub prefill_len: usize,
     /// Prefill/decode only: the session's incarnation epoch (ids may be
     /// reused after close; device caches match streams on it).  Stamped
     /// by the batcher after session validation; 0 elsewhere.
@@ -98,6 +104,7 @@ impl AttentionRequest {
             v,
             op: SessionOp::Stateless,
             prefix_len: 0,
+            prefill_len: 0,
             epoch: 0,
             mask: MaskKind::None,
         }
@@ -165,6 +172,7 @@ impl AttentionRequest {
             v: Vec::new(),
             op: SessionOp::Close { session },
             prefix_len: 0,
+            prefill_len: 0,
             epoch: 0,
             mask: MaskKind::None,
         }
@@ -264,6 +272,7 @@ impl AttentionRequest {
             v: pad(&self.v, self.num_kv_heads),
             op: self.op,
             prefix_len: self.prefix_len,
+            prefill_len: self.prefill_len,
             epoch: self.epoch,
             mask: match self.mask {
                 // Mask out the padded keys; re-padding keeps the
@@ -287,8 +296,15 @@ pub struct AttentionResponse {
     /// Query/KV head counts echoed from the request.
     pub num_heads: usize,
     pub num_kv_heads: usize,
-    /// Per-head shards gathered into this response.
+    /// Shards gathered into this response (`num_heads · seq_chunks`).
     pub shards: usize,
+    /// Sequence chunks each head was split into (DESIGN.md §7); 1 on
+    /// the legacy whole-sequence path, 0 for inline lifecycle replies.
+    pub seq_chunks: usize,
+    /// Partial-merge steps the gather performed (`num_heads ·
+    /// (seq_chunks − 1)` when sequence-sharded, else 0) — counted
+    /// distinctly from head shards in [`super::metrics::Metrics`].
+    pub merge_steps: usize,
     /// Total simulated FSA device cycles *consumed* across all shards
     /// (the cost metric: what the pool spent).
     pub device_cycles: u64,

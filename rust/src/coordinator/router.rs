@@ -1,21 +1,24 @@
 //! Shard router over the device worker pool: least-loaded placement
 //! with KV-head affinity, sticky for sessions.
 //!
-//! The routing unit is the per-head [`ShardEnvelope`].  Within one
-//! dispatched batch, shards are partitioned by their GQA affinity key
-//! `(request, kv_head)` — query heads that share a KV head travel
-//! together so a device fetches each K/V pair once — and every
-//! partition independently goes to the least-loaded worker
-//! (round-robin among ties).  A multi-head request therefore fans out
-//! across the pool (scatter) while each KV group stays device-local.
+//! The routing unit is the per-`(head, chunk)` [`ShardEnvelope`].
+//! Within one dispatched batch, shards are partitioned by their
+//! affinity key `(request, kv_head, chunk)` — query heads that share a
+//! KV head *and* attend the same sequence chunk travel together so a
+//! device fetches each chunk's K/V once — and every partition
+//! independently goes to the least-loaded worker (round-robin among
+//! ties).  A multi-head request therefore fans out across the pool
+//! (scatter) while each KV group stays device-local; sequence-sharded
+//! requests additionally scatter their chunks, which is what lifts the
+//! `num_kv_heads` device ceiling (DESIGN.md §7).
 //!
 //! Session groups (prefill/decode, DESIGN.md §5) add stickiness on
-//! top: the first placement of a `(session, kv_head)` group is pinned
-//! in the [`SessionTable`] and every later decode step follows the pin
-//! to the device holding the cached pages.  The pin is dropped when
-//! that device evicts the stream (the worker clears it) or dies (the
-//! router invalidates every pin onto the dead device — its pages are
-//! gone, so the surviving device recomputes and re-caches).
+//! top: the first placement of a `(session, kv_head, chunk)` group is
+//! pinned in the [`SessionTable`] and every later decode step follows
+//! the pin to the device holding the cached pages.  The pin is dropped
+//! when that device evicts the stream (the worker clears it) or dies
+//! (the router invalidates every pin onto the dead device — its pages
+//! are gone, so the surviving device recomputes and re-caches).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -71,8 +74,8 @@ impl Router {
     fn dispatch_group(&self, group: Batch) {
         let skey = session_key(&group);
         let mut group = group;
-        if let Some((sid, kv_head)) = skey {
-            if let Some(dev) = self.sessions.placement(sid, kv_head) {
+        if let Some((sid, kv_head, chunk)) = skey {
+            if let Some(dev) = self.sessions.placement(sid, kv_head, chunk) {
                 match self.workers.iter().find(|w| w.id == dev) {
                     Some(w) => {
                         w.load.fetch_add(group.len(), Ordering::Relaxed);
@@ -104,8 +107,8 @@ impl Router {
             w.load.fetch_add(group.len(), Ordering::Relaxed);
             match w.queue.send(group) {
                 Ok(()) => {
-                    if let Some((sid, kv_head)) = skey {
-                        self.sessions.place(sid, kv_head, w.id);
+                    if let Some((sid, kv_head, chunk)) = skey {
+                        self.sessions.place(sid, kv_head, chunk, w.id);
                     }
                     return;
                 }
@@ -125,12 +128,12 @@ impl Router {
 }
 
 /// Sticky-placement key of a group: present for prefill/decode shards
-/// (all shards of a group share one ctx and one kv_head by
+/// (all shards of a group share one ctx, one kv_head, and one chunk by
 /// construction).
-fn session_key(group: &Batch) -> Option<(SessionId, usize)> {
+fn session_key(group: &Batch) -> Option<(SessionId, usize, usize)> {
     group.first().and_then(|e| match e.ctx {
         ShardCtx::Prefill { session, .. } | ShardCtx::Decode { session, .. } => {
-            Some((session, e.shard.kv_head))
+            Some((session, e.shard.kv_head, e.shard.chunk))
         }
         ShardCtx::Stateless => None,
     })
@@ -140,7 +143,7 @@ fn session_key(group: &Batch) -> Option<(SessionId, usize)> {
 /// preserving first-seen order (shards of one request arrive adjacent
 /// from the batcher, so this is a single pass, no map).
 fn partition_by_affinity(batch: Batch) -> Vec<Batch> {
-    let mut groups: Vec<((u64, usize), Batch)> = Vec::new();
+    let mut groups: Vec<((u64, usize, usize), Batch)> = Vec::new();
     for env in batch {
         let key = env.shard.affinity_key();
         match groups.iter_mut().find(|(k, _)| *k == key) {
@@ -156,7 +159,7 @@ mod tests {
     use super::*;
     use crate::config::AccelConfig;
     use crate::coordinator::request::{AttentionRequest, Envelope};
-    use crate::coordinator::shard::{explode, CacheOutcome, ShardResult};
+    use crate::coordinator::shard::{explode, CacheOutcome, ShardOut, ShardResult};
 
     fn table() -> Arc<SessionTable> {
         Arc::new(SessionTable::new())
@@ -167,11 +170,14 @@ mod tests {
         let (seq, d) = (2, 4);
         let q = vec![0.0f32; heads * seq * d];
         let m = vec![0.0f32; kv * seq * d];
-        explode(Envelope {
-            req: AttentionRequest::gqa(id, seq, d, heads, kv, q, m.clone(), m),
-            reply: mpsc::channel().0,
-            enqueued: std::time::Instant::now(),
-        })
+        explode(
+            Envelope {
+                req: AttentionRequest::gqa(id, seq, d, heads, kv, q, m.clone(), m),
+                reply: mpsc::channel().0,
+                enqueued: std::time::Instant::now(),
+            },
+            1,
+        )
     }
 
     fn handle(id: usize) -> (WorkerHandle, mpsc::Receiver<Batch>) {
@@ -249,21 +255,50 @@ mod tests {
                     1, 5, 2, d, 2, 1,
                     vec![0.0; 2 * 2 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
                 ),
+                1,
             )
             .unwrap();
-        sessions.place(5, 0, 1);
+        sessions.place(5, 0, 0, 1);
         let mut req = AttentionRequest::decode(
             2, 5, 0, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
         );
         req.prefix_len = 3;
-        let envs = explode(Envelope {
-            req,
-            reply: mpsc::channel().0,
-            enqueued: std::time::Instant::now(),
-        });
+        let envs = explode(
+            Envelope {
+                req,
+                reply: mpsc::channel().0,
+                enqueued: std::time::Instant::now(),
+            },
+            1,
+        );
         r.dispatch(envs);
         assert_eq!(rx1.try_recv().unwrap().len(), 2, "pin beats least-loaded");
         assert!(rx0.try_recv().is_err());
+    }
+
+    #[test]
+    fn sequence_chunks_scatter_across_devices() {
+        // One single-head request sharded 2 ways must land its chunks
+        // on different (least-loaded) devices — sequence parallelism is
+        // exactly this scatter.
+        let (h0, rx0) = handle(0);
+        let (h1, rx1) = handle(1);
+        let r = Router::new(vec![h0, h1], table());
+        let (seq, d) = (8, 4);
+        let m = vec![0.0f32; seq * d];
+        let envs = explode(
+            Envelope {
+                req: AttentionRequest::new(4, seq, d, m.clone(), m.clone(), m),
+                reply: mpsc::channel().0,
+                enqueued: std::time::Instant::now(),
+            },
+            2,
+        );
+        assert_eq!(envs.len(), 2);
+        r.dispatch(envs);
+        let b0 = rx0.try_recv().expect("chunk on device 0");
+        let b1 = rx1.try_recv().expect("chunk on device 1");
+        assert_ne!(b0[0].shard.chunk, b1[0].shard.chunk);
     }
 
     /// Satellite: dead-worker failover under GQA affinity.  A worker
@@ -289,10 +324,11 @@ mod tests {
                     1, 9, 2, d, 4, 2,
                     vec![0.0; 4 * 2 * d], vec![0.0; 2 * 2 * d], vec![0.0; 2 * 2 * d],
                 ),
+                1,
             )
             .unwrap();
-        sessions.place(9, 0, 0);
-        sessions.place(9, 1, 0);
+        sessions.place(9, 0, 0, 0);
+        sessions.place(9, 1, 0, 0);
 
         // Worker 0 dies mid-stream.
         drop(rx0);
@@ -303,7 +339,10 @@ mod tests {
         );
         req.prefix_len = 3;
         let (tx, resp_rx) = mpsc::channel();
-        let envs = explode(Envelope { req, reply: tx, enqueued: std::time::Instant::now() });
+        let envs = explode(
+            Envelope { req, reply: tx, enqueued: std::time::Instant::now() },
+            1,
+        );
         r.dispatch(envs);
 
         // Each KV group was re-dispatched whole to one surviving device.
@@ -322,7 +361,7 @@ mod tests {
         assert_eq!(delivered.len(), 2, "both KV groups re-dispatched");
         // Pins moved off the dead device onto live ones.
         for kv in 0..2 {
-            let pin = sessions.placement(9, kv).expect("re-pinned");
+            let pin = sessions.placement(9, kv, 0).expect("re-pinned");
             assert_ne!(pin, 0, "pin must leave the dead device");
         }
 
@@ -334,9 +373,10 @@ mod tests {
                 env.gather.complete(
                     ShardResult {
                         head,
+                        chunk_pos: 0,
                         device_id: 1,
                         cycles: 10,
-                        output: Ok(vec![0.0; d]),
+                        output: Ok(ShardOut::Full(vec![0.0; d])),
                         cache: CacheOutcome::Hit,
                     },
                     &cfg,

@@ -75,6 +75,19 @@ pub enum SessionOp {
     Close { session: SessionId },
 }
 
+/// What a validated decode step tells the batcher (stamped onto the
+/// request before dispatch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeAdmit {
+    /// Prefix length this step attends (previous length + 1).
+    pub prefix_len: usize,
+    /// The session's incarnation epoch.
+    pub epoch: u64,
+    /// The session's prefill length — the fixed chunk-grid basis for
+    /// sequence-parallel split-KV decode (DESIGN.md §7).
+    pub prefill_len: usize,
+}
+
 /// One live session (internal representation).
 struct Session {
     d: usize,
@@ -92,14 +105,21 @@ struct Session {
     /// Current prefix length in tokens (prefill length + appended
     /// decode rows).
     len: usize,
+    /// Prefill length at open — the fixed basis of the sequence-chunk
+    /// grid (DESIGN.md §7).
+    prefill_len: usize,
+    /// Sequence-shard count the pool serves this session with (fixed at
+    /// open from `RunConfig::seq_shards`; 1 = legacy).
+    seq_shards: usize,
     /// Next expected decode step.
     next_step: u64,
     /// Host-tier K/V, one growing `(len, d)` row-major matrix per KV
     /// head.
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
-    /// Sticky placement per KV head: the device whose page cache holds
-    /// (or last held) this stream.  `None` = unplaced or invalidated.
+    /// Sticky placement per `(kv_head, chunk)` stream — index `kv_head ·
+    /// seq_shards + chunk`: the device whose page cache holds (or last
+    /// held) that chunk of the stream.  `None` = unplaced/invalidated.
     placement: Vec<Option<usize>>,
 }
 
@@ -127,12 +147,22 @@ impl SessionTable {
         super::lock(&self.inner)
     }
 
-    /// Register `sid` from a prefill request.  Returns the session's
-    /// fresh epoch (stamped onto the request so device caches can tell
-    /// this incarnation's streams from a closed predecessor's).  Errors
-    /// (as a response message, the serving path never panics) when the
-    /// id is already live or the request shape is unusable.
-    pub fn open(&self, sid: SessionId, req: &AttentionRequest) -> Result<u64, String> {
+    /// Register `sid` from a prefill request served at `seq_shards`
+    /// sequence shards (1 = legacy; the pool's `RunConfig::seq_shards`,
+    /// fixed for the session's lifetime so chunk placements and cached
+    /// chunk streams stay consistent across steps).  Returns the
+    /// session's fresh epoch (stamped onto the request so device caches
+    /// can tell this incarnation's streams from a closed
+    /// predecessor's).  Errors (as a response message, the serving path
+    /// never panics) when the id is already live or the request shape
+    /// is unusable.
+    pub fn open(
+        &self,
+        sid: SessionId,
+        req: &AttentionRequest,
+        seq_shards: usize,
+    ) -> Result<u64, String> {
+        assert!(seq_shards >= 1, "seq_shards is validated at config load");
         if req.seq_len == 0 {
             return Err(format!("session {sid}: prefill needs a non-empty prefix"));
         }
@@ -165,27 +195,28 @@ impl SessionTable {
                 mask: req.mask,
                 epoch,
                 len: req.seq_len,
+                prefill_len: req.seq_len,
+                seq_shards,
                 next_step: 0,
                 k,
                 v,
-                placement: vec![None; req.num_kv_heads],
+                placement: vec![None; req.num_kv_heads * seq_shards],
             },
         );
         Ok(epoch)
     }
 
     /// Validate a decode request against the session and append its new
-    /// K/V row to the host tier.  Returns `(prefix_len, epoch)`: the
-    /// prefix length this step attends over (previous length + 1) and
-    /// the session's incarnation epoch.  Must be called exactly once
-    /// per step, before the step is dispatched, so in-flight shards
-    /// always find their prefix present.
+    /// K/V row to the host tier.  Returns the [`DecodeAdmit`] stamp
+    /// (prefix length, epoch, and the chunk-grid basis).  Must be
+    /// called exactly once per step, before the step is dispatched, so
+    /// in-flight shards always find their prefix present.
     pub fn begin_decode(
         &self,
         sid: SessionId,
         step: u64,
         req: &AttentionRequest,
-    ) -> Result<(usize, u64), String> {
+    ) -> Result<DecodeAdmit, String> {
         let mut t = self.lock();
         let s = t
             .sessions
@@ -224,7 +255,7 @@ impl SessionTable {
         }
         s.len += 1;
         s.next_step += 1;
-        Ok((s.len, s.epoch))
+        Ok(DecodeAdmit { prefix_len: s.len, epoch: s.epoch, prefill_len: s.prefill_len })
     }
 
     /// Retire a session.  Returns false when it was not open.
@@ -269,25 +300,54 @@ impl SessionTable {
         prefix_len: usize,
         epoch: u64,
     ) -> Option<(Vec<f32>, Vec<f32>)> {
+        self.clone_range(sid, kv_head, 0, prefix_len, epoch)
+    }
+
+    /// Clone the token range `[start, start + len)` of one KV head's
+    /// host-tier K/V — the sequence-parallel miss-path fallback
+    /// (DESIGN.md §7): a chunk device recomputes exactly its range.
+    /// Same epoch/shape guards as [`SessionTable::clone_prefix`] (which
+    /// delegates here with `start = 0`).
+    pub fn clone_range(
+        &self,
+        sid: SessionId,
+        kv_head: usize,
+        start: usize,
+        len: usize,
+        epoch: u64,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
         let t = self.lock();
         let s = t.sessions.get(&sid)?;
-        if s.epoch != epoch || kv_head >= s.num_kv_heads || s.len < prefix_len {
+        if s.epoch != epoch || kv_head >= s.num_kv_heads || s.len < start + len {
             return None;
         }
-        let n = prefix_len * s.d;
-        Some((s.k[kv_head][..n].to_vec(), s.v[kv_head][..n].to_vec()))
+        let (lo, hi) = (start * s.d, (start + len) * s.d);
+        Some((s.k[kv_head][lo..hi].to_vec(), s.v[kv_head][lo..hi].to_vec()))
     }
 
-    /// Sticky placement of one KV group, if any.
-    pub fn placement(&self, sid: SessionId, kv_head: usize) -> Option<usize> {
-        self.lock().sessions.get(&sid)?.placement.get(kv_head).copied().flatten()
+    /// Placement slot of one `(kv_head, chunk)` stream.
+    fn slot(s: &Session, kv_head: usize, chunk: usize) -> Option<usize> {
+        if kv_head >= s.num_kv_heads || chunk >= s.seq_shards {
+            return None;
+        }
+        Some(kv_head * s.seq_shards + chunk)
     }
 
-    /// Pin a KV group to `device` (the router just dispatched there).
-    pub fn place(&self, sid: SessionId, kv_head: usize, device: usize) {
+    /// Sticky placement of one `(kv_head, chunk)` stream, if any
+    /// (`chunk = 0` on the legacy unsharded path).
+    pub fn placement(&self, sid: SessionId, kv_head: usize, chunk: usize) -> Option<usize> {
+        let t = self.lock();
+        let s = t.sessions.get(&sid)?;
+        let slot = Self::slot(s, kv_head, chunk)?;
+        s.placement[slot]
+    }
+
+    /// Pin a `(kv_head, chunk)` stream to `device` (the router just
+    /// dispatched there).
+    pub fn place(&self, sid: SessionId, kv_head: usize, chunk: usize, device: usize) {
         if let Some(s) = self.lock().sessions.get_mut(&sid) {
-            if let Some(p) = s.placement.get_mut(kv_head) {
-                *p = Some(device);
+            if let Some(slot) = Self::slot(s, kv_head, chunk) {
+                s.placement[slot] = Some(device);
             }
         }
     }
@@ -295,11 +355,11 @@ impl SessionTable {
     /// Clear a pin, but only if it still points at `device` — a worker
     /// reporting an eviction must not un-pin a stream that has already
     /// been re-placed elsewhere.
-    pub fn clear_placement(&self, sid: SessionId, kv_head: usize, device: usize) {
+    pub fn clear_placement(&self, sid: SessionId, kv_head: usize, chunk: usize, device: usize) {
         if let Some(s) = self.lock().sessions.get_mut(&sid) {
-            if let Some(p) = s.placement.get_mut(kv_head) {
-                if *p == Some(device) {
-                    *p = None;
+            if let Some(slot) = Self::slot(s, kv_head, chunk) {
+                if s.placement[slot] == Some(device) {
+                    s.placement[slot] = None;
                 }
             }
         }
@@ -355,19 +415,22 @@ mod tests {
     fn lifecycle_open_decode_close() {
         let t = SessionTable::new();
         let (d, heads, kv) = (4usize, 4usize, 2usize);
-        t.open(9, &prefill_req(9, 8, d, heads, kv)).unwrap();
+        t.open(9, &prefill_req(9, 8, d, heads, kv), 1).unwrap();
         assert!(t.contains(9));
         assert_eq!(t.prefix_len(9), Some(8));
         // Double open is rejected.
-        assert!(t.open(9, &prefill_req(9, 8, d, heads, kv)).is_err());
+        assert!(t.open(9, &prefill_req(9, 8, d, heads, kv), 1).is_err());
 
-        // Steps must be sequential; each returns (prefix, epoch).
+        // Steps must be sequential; each returns the admit stamp.
         assert!(t.begin_decode(9, 1, &decode_req(9, 1, d, heads, kv)).is_err());
-        let (p0, e0) = t.begin_decode(9, 0, &decode_req(9, 0, d, heads, kv)).unwrap();
-        let (p1, e1) = t.begin_decode(9, 1, &decode_req(9, 1, d, heads, kv)).unwrap();
-        assert_eq!((p0, p1), (9, 10));
-        assert_eq!(e0, e1);
+        let a0 = t.begin_decode(9, 0, &decode_req(9, 0, d, heads, kv)).unwrap();
+        let a1 = t.begin_decode(9, 1, &decode_req(9, 1, d, heads, kv)).unwrap();
+        assert_eq!((a0.prefix_len, a1.prefix_len), (9, 10));
+        assert_eq!(a0.epoch, a1.epoch);
+        // The chunk-grid basis stays the prefill length as the prefix grows.
+        assert_eq!((a0.prefill_len, a1.prefill_len), (8, 8));
         assert_eq!(t.prefix_len(9), Some(10));
+        let e0 = a0.epoch;
 
         // Appended rows are visible in the host tier.
         let (k, v) = t.clone_prefix(9, 1, 10, e0).unwrap();
@@ -377,8 +440,14 @@ mod tests {
         // Shorter prefixes slice the same data.
         let (k8, _) = t.clone_prefix(9, 1, 8, e0).unwrap();
         assert_eq!(k8, &k[..8 * d]);
-        // Over-long prefix, bad kv_head, and wrong incarnation are refused.
+        // Mid-sequence ranges slice the same data (split-KV decode).
+        let (kr, vr) = t.clone_range(9, 1, 8, 2, e0).unwrap();
+        assert_eq!(kr, &k[8 * d..]);
+        assert_eq!(vr, &v[8 * d..]);
+        // Over-long prefix/range, bad kv_head, and wrong incarnation are
+        // refused.
         assert!(t.clone_prefix(9, 1, 11, e0).is_none());
+        assert!(t.clone_range(9, 1, 8, 3, e0).is_none());
         assert!(t.clone_prefix(9, 2, 4, e0).is_none());
         assert!(t.clone_prefix(9, 1, 8, e0 + 1).is_none());
 
@@ -390,13 +459,16 @@ mod tests {
     #[test]
     fn decode_shape_mismatches_are_rejected() {
         let t = SessionTable::new();
-        t.open(1, &prefill_req(1, 4, 4, 4, 2)).unwrap();
+        t.open(1, &prefill_req(1, 4, 4, 4, 2), 1).unwrap();
         // Wrong head count.
         assert!(t.begin_decode(1, 0, &decode_req(1, 0, 4, 2, 2)).is_err());
         // Wrong d.
         assert!(t.begin_decode(1, 0, &decode_req(1, 0, 8, 4, 2)).is_err());
         // A failed step does not advance the counter.
-        assert_eq!(t.begin_decode(1, 0, &decode_req(1, 0, 4, 4, 2)).unwrap().0, 5);
+        assert_eq!(
+            t.begin_decode(1, 0, &decode_req(1, 0, 4, 4, 2)).unwrap().prefix_len,
+            5
+        );
     }
 
     #[test]
@@ -404,53 +476,84 @@ mod tests {
         let t = SessionTable::new();
         // Padding-masked prefill is rejected before any state mutates.
         let bad = prefill_req(1, 4, 4, 4, 2).with_mask(MaskKind::PaddingKeys { valid: 2 });
-        assert!(t.open(1, &bad).unwrap_err().contains("key-padding"));
+        assert!(t.open(1, &bad, 1).unwrap_err().contains("key-padding"));
         assert!(!t.contains(1));
         // Causal prefill opens normally and the mask is remembered.
         let causal = prefill_req(1, 4, 4, 4, 2).with_mask(MaskKind::Causal);
-        t.open(1, &causal).unwrap();
+        t.open(1, &causal, 1).unwrap();
         assert_eq!(t.mask(1), Some(MaskKind::Causal));
         // Masked decode steps are rejected without consuming the step.
         let masked_step = decode_req(1, 0, 4, 4, 2).with_mask(MaskKind::Causal);
         assert!(t.begin_decode(1, 0, &masked_step).unwrap_err().contains("no mask"));
         assert_eq!(t.prefix_len(1), Some(4));
         // The unmasked step then succeeds.
-        assert_eq!(t.begin_decode(1, 0, &decode_req(1, 0, 4, 4, 2)).unwrap().0, 5);
+        assert_eq!(
+            t.begin_decode(1, 0, &decode_req(1, 0, 4, 4, 2)).unwrap().prefix_len,
+            5
+        );
         assert_eq!(t.mask(404), None);
     }
 
     #[test]
     fn reused_session_ids_get_fresh_epochs() {
         let t = SessionTable::new();
-        let e1 = t.open(3, &prefill_req(3, 4, 2, 2, 1)).unwrap();
+        let e1 = t.open(3, &prefill_req(3, 4, 2, 2, 1), 1).unwrap();
         assert!(t.close(3));
-        let e2 = t.open(3, &prefill_req(3, 4, 2, 2, 1)).unwrap();
+        let e2 = t.open(3, &prefill_req(3, 4, 2, 2, 1), 1).unwrap();
         assert_ne!(e1, e2, "a reused id must not look like its dead predecessor");
-        let (_, e_step) = t.begin_decode(3, 0, &decode_req(3, 0, 2, 2, 1)).unwrap();
-        assert_eq!(e_step, e2);
+        let admit = t.begin_decode(3, 0, &decode_req(3, 0, 2, 2, 1)).unwrap();
+        assert_eq!(admit.epoch, e2);
     }
 
     #[test]
     fn placement_is_sticky_and_invalidatable() {
         let t = SessionTable::new();
-        t.open(5, &prefill_req(5, 4, 2, 4, 2)).unwrap();
-        assert_eq!(t.placement(5, 0), None);
-        t.place(5, 0, 3);
-        t.place(5, 1, 1);
-        assert_eq!(t.placement(5, 0), Some(3));
+        t.open(5, &prefill_req(5, 4, 2, 4, 2), 1).unwrap();
+        assert_eq!(t.placement(5, 0, 0), None);
+        t.place(5, 0, 0, 3);
+        t.place(5, 1, 0, 1);
+        assert_eq!(t.placement(5, 0, 0), Some(3));
         // clear_placement is conditional on the device still matching.
-        t.clear_placement(5, 0, 2);
-        assert_eq!(t.placement(5, 0), Some(3));
-        t.clear_placement(5, 0, 3);
-        assert_eq!(t.placement(5, 0), None);
+        t.clear_placement(5, 0, 0, 2);
+        assert_eq!(t.placement(5, 0, 0), Some(3));
+        t.clear_placement(5, 0, 0, 3);
+        assert_eq!(t.placement(5, 0, 0), None);
         // Dead-worker invalidation clears every pin onto that device.
-        t.place(5, 0, 1);
+        t.place(5, 0, 0, 1);
         t.invalidate_device(1);
-        assert_eq!(t.placement(5, 0), None);
-        assert_eq!(t.placement(5, 1), None);
-        // Unknown sessions are no-ops, not panics.
-        t.place(404, 0, 0);
-        t.clear_placement(404, 0, 0);
-        assert_eq!(t.placement(404, 0), None);
+        assert_eq!(t.placement(5, 0, 0), None);
+        assert_eq!(t.placement(5, 1, 0), None);
+        // Unknown sessions, out-of-range chunks are no-ops, not panics.
+        t.place(404, 0, 0, 0);
+        t.clear_placement(404, 0, 0, 0);
+        assert_eq!(t.placement(404, 0, 0), None);
+        t.place(5, 0, 7, 2); // chunk >= seq_shards: ignored
+        assert_eq!(t.placement(5, 0, 7), None);
+    }
+
+    #[test]
+    fn chunk_placements_are_independent_streams() {
+        // Sequence-sharded sessions pin every (kv_head, chunk) stream
+        // separately — the router follows each chunk to the device
+        // holding its pages.
+        let t = SessionTable::new();
+        let e = t.open(6, &prefill_req(6, 8, 2, 4, 2), 3).unwrap();
+        t.place(6, 0, 0, 0);
+        t.place(6, 0, 2, 2);
+        t.place(6, 1, 1, 1);
+        assert_eq!(t.placement(6, 0, 0), Some(0));
+        assert_eq!(t.placement(6, 0, 1), None);
+        assert_eq!(t.placement(6, 0, 2), Some(2));
+        assert_eq!(t.placement(6, 1, 1), Some(1));
+        // Clearing one chunk leaves its siblings pinned.
+        t.clear_placement(6, 0, 2, 2);
+        assert_eq!(t.placement(6, 0, 0), Some(0));
+        assert_eq!(t.placement(6, 0, 2), None);
+        // Dead-worker invalidation sweeps chunk pins too.
+        t.invalidate_device(1);
+        assert_eq!(t.placement(6, 1, 1), None);
+        // The admit stamp carries the fixed chunk basis.
+        let admit = t.begin_decode(6, 0, &decode_req(6, 0, 2, 4, 2)).unwrap();
+        assert_eq!(admit, DecodeAdmit { prefix_len: 9, epoch: e, prefill_len: 8 });
     }
 }

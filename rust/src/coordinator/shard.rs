@@ -1,29 +1,45 @@
-//! Head sharding + gather: the scatter/gather layer between one
-//! [`AttentionRequest`] and the per-head units of work the device pool
-//! actually executes.
+//! Head × sequence-chunk sharding + gather: the scatter/gather layer
+//! between one [`AttentionRequest`] and the units of work the device
+//! pool actually executes.
 //!
-//! [`explode`] splits an ingress [`Envelope`] into one
-//! [`ShardEnvelope`] per query head, all sharing the request data
-//! behind an `Arc` (no Q/K/V copies) and one [`Gather`] cell.  Workers
-//! call [`Gather::complete`] per finished shard; the worker that lands
-//! the final shard assembles the whole-operator [`AttentionResponse`]
-//! — outputs re-interleaved head-major, cycle cost summed, the
-//! critical path and FLOPs/s utilization computed over the devices
-//! that actually served shards — and sends the reply.  A request is
-//! therefore answered exactly once, no matter how its shards were
-//! batched, chunked, or re-routed.
+//! [`explode`] splits an ingress [`Envelope`] into a `(head, kv-range)`
+//! grid of [`ShardEnvelope`]s: one shard per query head per *live*
+//! sequence chunk ([`crate::schedule::chunk_ranges`], DESIGN.md §7),
+//! all sharing the request data behind an `Arc` (no Q/K/V copies) and
+//! one [`Gather`] cell.  With `seq_shards = 1` (the default) the grid
+//! degenerates to the legacy one-shard-per-head layout, bit for bit.
+//! Fully-masked chunks (a padding mask's dead tail) are never
+//! dispatched — their partial would be the merge identity.
+//!
+//! Workers call [`Gather::complete`] per finished shard; sequence-
+//! sharded shards report a partial `(O~, m, l)` triple
+//! ([`ShardOut::Partial`]) which the worker that lands the final shard
+//! merges **in chunk order** with the online-softmax merge operator
+//! ([`FlashPartial::merge_from`]) before normalizing — so the gathered
+//! output is a pure function of the chunk grid, bitwise-invariant to
+//! which device served which chunk.  The assembled whole-operator
+//! [`AttentionResponse`] re-interleaves heads head-major, sums cycle
+//! cost, and computes the critical path and FLOPs/s utilization over
+//! the devices that actually served shards.  A request is therefore
+//! answered exactly once, no matter how its shards were batched,
+//! chunked, or re-routed.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::AccelConfig;
+use crate::mask::MaskKind;
+use crate::numerics::pwl::PwlExp2;
+use crate::numerics::reference::{Exp2, FlashPartial};
 use crate::perfmodel::pool_utilization;
+use crate::schedule::live_chunk_ranges;
 
 use super::request::{AttentionRequest, AttentionResponse, Envelope};
 use super::session::{SessionId, SessionOp};
 
-/// One query head of one request: the unit of routing and execution.
+/// One query head × one sequence chunk of one request: the unit of
+/// routing and execution.
 pub struct HeadShard {
     pub req: Arc<AttentionRequest>,
     /// Query head index in `0..req.num_heads`.
@@ -31,14 +47,32 @@ pub struct HeadShard {
     /// KV head this query head attends over (`req.kv_head_for(head)`),
     /// carried here because the router keys affinity on it.
     pub kv_head: usize,
+    /// Global sequence-chunk index in the request's chunk grid (0 on
+    /// the legacy unsharded path).
+    pub chunk: usize,
+    /// Position among the request's *live* (dispatched) chunks — the
+    /// gather slot coordinate.
+    pub chunk_pos: usize,
+    /// Global K/V token range `[start, start + len)` this shard
+    /// attends (the whole sequence on the legacy path).
+    pub kv_range: (usize, usize),
+    /// Live chunks per head (`1` = legacy whole-sequence shard; workers
+    /// emit [`ShardOut::Partial`] iff this is `> 1`).
+    pub live_chunks: usize,
 }
 
 impl HeadShard {
-    /// Router affinity key: shards sharing a KV head under GQA want the
-    /// same device so the K/V tiles are fetched (and could be cached)
-    /// once per device rather than once per query head.
-    pub fn affinity_key(&self) -> (u64, usize) {
-        (self.req.id, self.kv_head)
+    /// Router affinity key: shards sharing a KV head *and* chunk under
+    /// GQA want the same device so each chunk's K/V tiles are fetched
+    /// (and could be cached) once per device — while distinct chunks
+    /// scatter, which is the whole point of sequence parallelism.
+    pub fn affinity_key(&self) -> (u64, usize, usize) {
+        (self.req.id, self.kv_head, self.chunk)
+    }
+
+    /// Whether this shard computes a partial (sequence-sharded) result.
+    pub fn is_partial(&self) -> bool {
+        self.live_chunks > 1
     }
 }
 
@@ -70,6 +104,17 @@ pub enum CacheOutcome {
     Miss,
 }
 
+/// What a shard's execution produced.
+#[derive(Clone, Debug)]
+pub enum ShardOut {
+    /// The legacy whole-sequence result: `(seq_len, d)` for
+    /// stateless/prefill, one `(1, d)` row for decode.
+    Full(Vec<f32>),
+    /// A sequence chunk's partial online-softmax state, merged at
+    /// gather (DESIGN.md §7).
+    Partial(FlashPartial),
+}
+
 /// A shard in flight: work item + its request's gather cell.
 pub struct ShardEnvelope {
     pub shard: HeadShard,
@@ -85,17 +130,20 @@ pub struct ShardEnvelope {
 /// What a device worker reports for one executed shard.
 pub struct ShardResult {
     pub head: usize,
+    /// The shard's `chunk_pos` (0 on the legacy path).
+    pub chunk_pos: usize,
     pub device_id: usize,
-    /// Simulated FSA device cycles for this head.
+    /// Simulated FSA device cycles for this shard.
     pub cycles: u64,
-    pub output: Result<Vec<f32>, String>,
+    pub output: Result<ShardOut, String>,
     /// KV-cache outcome (decode shards only).
     pub cache: CacheOutcome,
 }
 
 struct GatherInner {
-    /// Per-head `(device_id, cycles, output)`, indexed by query head.
-    done: Vec<Option<(usize, u64, Result<Vec<f32>, String>)>>,
+    /// Per-shard `(device_id, cycles, output)`, indexed by
+    /// `head * live_chunks + chunk_pos`.
+    done: Vec<Option<(usize, u64, Result<ShardOut, String>)>>,
     remaining: usize,
     kv_hits: usize,
     kv_misses: usize,
@@ -106,6 +154,10 @@ pub struct Gather {
     req: Arc<AttentionRequest>,
     reply: mpsc::Sender<AttentionResponse>,
     enqueued: Instant,
+    /// Live chunks per head (1 = legacy layout).
+    live_chunks: usize,
+    /// Global chunk index of each live slot (for error messages).
+    chunk_ids: Vec<usize>,
     inner: Mutex<GatherInner>,
 }
 
@@ -114,15 +166,19 @@ impl Gather {
     /// response if this was the request's final outstanding shard (so
     /// the caller can record metrics before [`Gather::send`]), `None`
     /// while shards are still in flight.  `cfg` supplies the clock and
-    /// peak-FLOPs constants for the whole-operator utilization metric.
+    /// peak-FLOPs constants for the whole-operator utilization metric —
+    /// and, for sequence-sharded requests, the PWL segment count the
+    /// in-order partial merge evaluates `exp2` with (the same device
+    /// numerics the chunks were computed with).
     pub fn complete_and_report(
         &self,
         result: ShardResult,
         cfg: &AccelConfig,
     ) -> Option<AttentionResponse> {
+        let slot = result.head * self.live_chunks + result.chunk_pos;
         let mut inner = super::lock(&self.inner);
-        debug_assert!(inner.done[result.head].is_none(), "head completed twice");
-        if inner.done[result.head].is_none() {
+        debug_assert!(inner.done[slot].is_none(), "shard completed twice");
+        if inner.done[slot].is_none() {
             inner.remaining -= 1;
             match result.cache {
                 CacheOutcome::Hit => inner.kv_hits += 1,
@@ -130,11 +186,11 @@ impl Gather {
                 CacheOutcome::NotApplicable => {}
             }
         }
-        inner.done[result.head] = Some((result.device_id, result.cycles, result.output));
+        inner.done[slot] = Some((result.device_id, result.cycles, result.output));
         if inner.remaining > 0 {
             return None;
         }
-        Some(self.assemble(&mut inner))
+        Some(self.assemble(&mut inner, cfg))
     }
 
     /// Deliver the gathered response to the submitter.  A vanished
@@ -151,43 +207,78 @@ impl Gather {
         }
     }
 
-    /// Build the whole-operator response from the completed shards.
-    fn assemble(&self, inner: &mut GatherInner) -> AttentionResponse {
+    /// Build the whole-operator response from the completed shards:
+    /// per head, either the legacy whole result or the in-chunk-order
+    /// merge of the sequence partials.
+    fn assemble(&self, inner: &mut GatherInner, cfg: &AccelConfig) -> AttentionResponse {
         let req = &self.req;
         let head_elems = req.seq_len * req.d;
+        let live = self.live_chunks;
+        // The merge evaluates exp2 exactly like the reference backend
+        // that produced the partials (PWL + fp16 MAC, DESIGN.md §7).
+        let exp2 = Exp2::PwlF16(PwlExp2::new(cfg.pwl_segments.max(1)));
 
         let mut output: Result<Vec<f32>, String> =
             Ok(Vec::with_capacity(req.num_heads * head_elems));
+        let mut merge_steps = 0usize;
         let mut device_cycles = 0u64;
         let mut per_device: Vec<(usize, u64)> = Vec::new();
         let mut devices_used = Vec::new();
         let mut device_id = 0usize;
 
-        for (head, slot) in inner.done.iter_mut().enumerate() {
-            let (dev, cycles, head_out) = slot.take().expect("gather complete with missing head");
-            if head == 0 {
-                device_id = dev;
-            }
-            device_cycles += cycles;
-            match per_device.iter_mut().find(|(d, _)| *d == dev) {
-                Some((_, c)) => *c += cycles,
-                None => {
-                    per_device.push((dev, cycles));
-                    devices_used.push(dev);
+        for head in 0..req.num_heads {
+            let mut state: Option<FlashPartial> = None;
+            for pos in 0..live {
+                let slot = head * live + pos;
+                let (dev, cycles, out) =
+                    inner.done[slot].take().expect("gather complete with missing shard");
+                if head == 0 && pos == 0 {
+                    device_id = dev;
                 }
-            }
-            match head_out {
-                Ok(o) => {
-                    if let Ok(buf) = &mut output {
-                        debug_assert_eq!(o.len(), head_elems);
-                        buf.extend_from_slice(&o);
+                device_cycles += cycles;
+                match per_device.iter_mut().find(|(d, _)| *d == dev) {
+                    Some((_, c)) => *c += cycles,
+                    None => {
+                        per_device.push((dev, cycles));
+                        devices_used.push(dev);
                     }
                 }
-                // Keep the first failing head's error (head order).
-                Err(e) => {
+                // Keep the first failing shard's error (grid order).
+                let fail = |output: &mut Result<Vec<f32>, String>, e: String| {
                     if output.is_ok() {
-                        output = Err(format!("head {head}: {e}"));
+                        *output = Err(format!(
+                            "head {head} chunk {}: {e}",
+                            self.chunk_ids[pos]
+                        ));
                     }
+                };
+                match out {
+                    Ok(ShardOut::Full(o)) if live == 1 => {
+                        if let Ok(buf) = &mut output {
+                            debug_assert_eq!(o.len(), head_elems);
+                            buf.extend_from_slice(&o);
+                        }
+                    }
+                    Ok(ShardOut::Partial(p)) if live > 1 => {
+                        if let Some(s) = state.as_mut() {
+                            s.merge_from(&p, &exp2);
+                            merge_steps += 1;
+                        } else {
+                            state = Some(p); // chunk 0: adopted, like flash's init
+                        }
+                    }
+                    Ok(_) => fail(
+                        &mut output,
+                        "shard output kind does not match the chunk grid".into(),
+                    ),
+                    Err(e) => fail(&mut output, e),
+                }
+            }
+            if live > 1 {
+                if let (Ok(buf), Some(s)) = (&mut output, state) {
+                    let merged = s.finalize();
+                    debug_assert_eq!(merged.data.len(), head_elems);
+                    buf.extend_from_slice(&merged.data);
                 }
             }
         }
@@ -203,7 +294,9 @@ impl Gather {
             output,
             num_heads: req.num_heads,
             num_kv_heads: req.num_kv_heads,
-            shards: req.num_heads,
+            shards: req.num_heads * live,
+            seq_chunks: live,
+            merge_steps,
             device_cycles,
             critical_path_cycles,
             device_time: Duration::from_nanos(
@@ -220,9 +313,38 @@ impl Gather {
     }
 }
 
-/// Split an ingress envelope into its per-head shards (one per query
-/// head), sharing the request behind an `Arc` and one gather cell.
-pub fn explode(env: Envelope) -> Vec<ShardEnvelope> {
+/// The request's sequence-chunk grid: the global index, range, and
+/// liveness of every chunk, from the shared
+/// [`live_chunk_ranges`] rule the perfmodel prices with
+/// (DESIGN.md §7).  Stateless and prefill requests split their
+/// `seq_len` evenly; decode splits the grown `prefix_len` on the
+/// prefill-time basis (so earlier chunk boundaries never move) and
+/// carries no mask.  When no chunk survives (a fully-masked operator)
+/// the whole sequence is served as one legacy shard, which produces
+/// the defined zero output.
+fn live_chunk_grid(req: &AttentionRequest, seq_shards: usize) -> Vec<(usize, (usize, usize))> {
+    let (total, basis, mask) = match req.op {
+        // Decode steps carry no mask: every token of the prefix counts.
+        SessionOp::Decode { .. } => (
+            req.prefix_len.max(req.seq_len),
+            req.prefill_len.max(1),
+            MaskKind::None,
+        ),
+        _ => (req.seq_len, req.seq_len, req.mask),
+    };
+    let mut live = live_chunk_ranges(req.seq_len, total, basis, seq_shards, mask);
+    if live.is_empty() {
+        // Fully-masked (or empty) operator: one legacy whole shard.
+        live.push((0, (0, total)));
+    }
+    live
+}
+
+/// Split an ingress envelope into its `(head, chunk)` shard grid,
+/// sharing the request behind an `Arc` and one gather cell.
+/// `seq_shards = 1` (the legacy path) yields exactly one whole-sequence
+/// shard per query head.
+pub fn explode(env: Envelope, seq_shards: usize) -> Vec<ShardEnvelope> {
     let Envelope { req, reply, enqueued } = env;
     let num_heads = req.num_heads;
     let ctx = match req.op {
@@ -234,31 +356,50 @@ pub fn explode(env: Envelope) -> Vec<ShardEnvelope> {
         // a stray one as stateless rather than panicking.
         SessionOp::Stateless | SessionOp::Close { .. } => ShardCtx::Stateless,
     };
+    let grid = live_chunk_grid(&req, seq_shards.max(1));
+    let live = grid.len();
     let req = Arc::new(req);
     let gather = Arc::new(Gather {
         req: req.clone(),
         reply,
         enqueued,
+        live_chunks: live,
+        chunk_ids: grid.iter().map(|&(c, _)| c).collect(),
         inner: Mutex::new(GatherInner {
-            done: (0..num_heads).map(|_| None).collect(),
-            remaining: num_heads,
+            done: (0..num_heads * live).map(|_| None).collect(),
+            remaining: num_heads * live,
             kv_hits: 0,
             kv_misses: 0,
         }),
     });
-    (0..num_heads)
-        .map(|head| ShardEnvelope {
-            shard: HeadShard { req: req.clone(), head, kv_head: req.kv_head_for(head) },
-            gather: gather.clone(),
-            enqueued,
-            ctx,
-        })
-        .collect()
+    let mut shards = Vec::with_capacity(num_heads * live);
+    for head in 0..num_heads {
+        for (pos, &(chunk, kv_range)) in grid.iter().enumerate() {
+            shards.push(ShardEnvelope {
+                shard: HeadShard {
+                    req: req.clone(),
+                    head,
+                    kv_head: req.kv_head_for(head),
+                    chunk,
+                    chunk_pos: pos,
+                    kv_range,
+                    live_chunks: live,
+                },
+                gather: gather.clone(),
+                enqueued,
+                ctx,
+            });
+        }
+    }
+    shards
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mask::MaskKind;
+    use crate::numerics::reference::{flash_pwl_masked, flash_pwl_partial, Mat};
+    use crate::numerics::SplitMix64;
 
     fn fsa() -> AccelConfig {
         AccelConfig::builtin("fsa").unwrap()
@@ -281,41 +422,90 @@ mod tests {
         (env, rx)
     }
 
+    fn full(head: usize, dev: usize, cycles: u64, out: Vec<f32>) -> ShardResult {
+        ShardResult {
+            head,
+            chunk_pos: 0,
+            device_id: dev,
+            cycles,
+            output: Ok(ShardOut::Full(out)),
+            cache: CacheOutcome::NotApplicable,
+        }
+    }
+
     #[test]
     fn explode_yields_one_shard_per_query_head() {
         let (env, _rx) = gqa_envelope(8, 2, 4, 2);
-        let shards = explode(env);
+        let shards = explode(env, 1);
         assert_eq!(shards.len(), 8);
         let kv: Vec<usize> = shards.iter().map(|s| s.shard.kv_head).collect();
         assert_eq!(kv, vec![0, 0, 0, 0, 1, 1, 1, 1]);
         // All shards share one request allocation and one gather cell.
         assert!(Arc::ptr_eq(&shards[0].shard.req, &shards[7].shard.req));
         assert!(Arc::ptr_eq(&shards[0].gather, &shards[7].gather));
-        assert_eq!(shards[3].shard.affinity_key(), (7, 0));
-        assert_eq!(shards[4].shard.affinity_key(), (7, 1));
+        assert_eq!(shards[3].shard.affinity_key(), (7, 0, 0));
+        assert_eq!(shards[4].shard.affinity_key(), (7, 1, 0));
+        // Legacy layout: one whole-sequence chunk, not partial.
+        assert!(shards.iter().all(|s| s.shard.kv_range == (0, 4)));
+        assert!(shards.iter().all(|s| !s.shard.is_partial()));
+    }
+
+    #[test]
+    fn explode_builds_the_head_chunk_grid() {
+        let (env, _rx) = gqa_envelope(4, 2, 64, 2);
+        let shards = explode(env, 4);
+        assert_eq!(shards.len(), 16, "4 heads x 4 chunks");
+        // Head-major, chunk-minor order with even 16-token ranges.
+        let s0: Vec<_> = shards[..4].iter().map(|s| s.shard.kv_range).collect();
+        assert_eq!(s0, vec![(0, 16), (16, 16), (32, 16), (48, 16)]);
+        assert!(shards.iter().all(|s| s.shard.is_partial()));
+        // Chunks of one head have distinct affinity keys (they scatter);
+        // the same chunk of two grouped heads shares one (they travel
+        // together).
+        assert_ne!(shards[0].shard.affinity_key(), shards[1].shard.affinity_key());
+        assert_eq!(shards[0].shard.affinity_key(), shards[4].shard.affinity_key());
+        assert_eq!(shards[0].shard.chunk_pos, 0);
+        assert_eq!(shards[3].shard.chunk, 3);
+    }
+
+    #[test]
+    fn fully_masked_chunks_are_never_dispatched() {
+        let (env, _rx) = gqa_envelope(2, 1, 64, 2);
+        let mut env = env;
+        // Keys beyond 20 are padding: chunks 2 and 3 ([32,48), [48,64))
+        // are dead; chunk 1 ([16,32)) is partially live.
+        env.req.mask = MaskKind::PaddingKeys { valid: 20 };
+        let shards = explode(env, 4);
+        assert_eq!(shards.len(), 4, "2 heads x 2 live chunks");
+        let ranges: Vec<_> = shards[..2].iter().map(|s| s.shard.kv_range).collect();
+        assert_eq!(ranges, vec![(0, 16), (16, 16)]);
+        assert_eq!(shards[0].shard.live_chunks, 2);
+
+        // A fully-masked operator degenerates to one legacy shard per
+        // head (defined zero output), never zero shards.
+        let (env, _rx) = gqa_envelope(2, 1, 64, 2);
+        let mut env = env;
+        env.req.mask = MaskKind::PaddingKeys { valid: 0 };
+        let shards = explode(env, 4);
+        assert_eq!(shards.len(), 2);
+        assert!(!shards[0].shard.is_partial());
+        assert_eq!(shards[0].shard.kv_range, (0, 64));
     }
 
     #[test]
     fn gather_assembles_head_major_output_and_pool_accounting() {
         let (seq, d) = (2, 2);
         let (env, rx) = gqa_envelope(4, 2, seq, d);
-        let shards = explode(env);
+        let shards = explode(env, 1);
         // Complete out of order, two devices, head h output = constant h.
         for &h in &[2usize, 0, 3, 1] {
-            shards[h].gather.complete(
-                ShardResult {
-                    head: h,
-                    device_id: h % 2,
-                    cycles: 100,
-                    output: Ok(vec![h as f32; seq * d]),
-                    cache: CacheOutcome::NotApplicable,
-                },
-                &fsa(),
-            );
+            shards[h].gather.complete(full(h, h % 2, 100, vec![h as f32; seq * d]), &fsa());
         }
         let resp = rx.try_recv().expect("gather must reply after last shard");
         assert_eq!(resp.id, 7);
         assert_eq!(resp.shards, 4);
+        assert_eq!(resp.seq_chunks, 1);
+        assert_eq!(resp.merge_steps, 0);
         assert_eq!(resp.num_heads, 4);
         assert_eq!(resp.num_kv_heads, 2);
         assert_eq!(resp.devices_used, vec![0, 1]);
@@ -331,16 +521,92 @@ mod tests {
     }
 
     #[test]
+    fn sequence_sharded_gather_merges_partials_in_chunk_order() {
+        // Two chunks per head, completed in *reverse* order across two
+        // devices: the merged output must still be the in-chunk-order
+        // fold — bitwise the host-side oracle — proving completion
+        // order and placement cannot perturb the numerics.
+        let (seq, d, heads) = (32usize, 8usize, 2usize);
+        let cfg = fsa();
+        let mut rng = SplitMix64::new(91);
+        let (tx, rx) = mpsc::channel();
+        let q = rng.normal_matrix(heads * seq, d);
+        let kv = rng.normal_matrix(seq, d);
+        let req = AttentionRequest::gqa(3, seq, d, heads, 1, q.clone(), kv.clone(), kv.clone());
+        let shards = explode(
+            Envelope { req, reply: tx, enqueued: Instant::now() },
+            2,
+        );
+        assert_eq!(shards.len(), 4);
+
+        // Host-side oracle: per-head partials over the same grid.
+        let oracle_part = |head: usize, (start, len): (usize, usize)| {
+            let qm = Mat::new(seq, d, q[head * seq * d..(head + 1) * seq * d].to_vec());
+            let km = Mat::new(len, d, kv[start * d..(start + len) * d].to_vec());
+            let vm = Mat::new(len, d, kv[start * d..(start + len) * d].to_vec());
+            flash_pwl_partial(
+                &qm, &km, &vm,
+                cfg.array_size, cfg.array_size, cfg.pwl_segments,
+                MaskKind::None, start, seq,
+            )
+        };
+        // Complete chunk 1 before chunk 0 on different devices.
+        for env in shards.iter().rev() {
+            let s = &env.shard;
+            env.gather.complete(
+                ShardResult {
+                    head: s.head,
+                    chunk_pos: s.chunk_pos,
+                    device_id: s.chunk_pos, // chunk -> its own device
+                    cycles: 10,
+                    output: Ok(ShardOut::Partial(oracle_part(s.head, s.kv_range))),
+                    cache: CacheOutcome::NotApplicable,
+                },
+                &cfg,
+            );
+        }
+        let resp = rx.try_recv().expect("gather replies once all shards land");
+        assert_eq!(resp.shards, 4);
+        assert_eq!(resp.seq_chunks, 2);
+        assert_eq!(resp.merge_steps, heads * 1, "one merge per head");
+        assert_eq!(resp.devices_used, vec![0, 1]);
+        let out = resp.output.unwrap();
+        // The merged result equals the ordered host-side fold, which for
+        // these inputs is within the PWL band of the whole kernel — and
+        // bitwise equal to merging the oracle partials directly.
+        use crate::numerics::reference::merge_partials;
+        let exp2 = Exp2::PwlF16(PwlExp2::new(cfg.pwl_segments));
+        for h in 0..heads {
+            let want = merge_partials(
+                &[oracle_part(h, (0, 16)), oracle_part(h, (16, 16))],
+                &exp2,
+            );
+            assert_eq!(&out[h * seq * d..(h + 1) * seq * d], &want.data[..], "head {h}");
+            // Sanity: the merge is numerically the whole-head kernel.
+            let qm = Mat::new(seq, d, q[h * seq * d..(h + 1) * seq * d].to_vec());
+            let km = Mat::new(seq, d, kv.clone());
+            let whole = flash_pwl_masked(&qm, &km, &km, 128, 128, 8, MaskKind::None);
+            let err = crate::numerics::reference::mat_error(&want, &whole);
+            assert!(err.mae < 3e-2, "head {h}: {err:?}");
+        }
+    }
+
+    #[test]
     fn gather_surfaces_first_failing_head() {
         let (env, rx) = gqa_envelope(2, 1, 2, 2);
-        let shards = explode(env);
+        let shards = explode(env, 1);
         for h in 0..2 {
             shards[h].gather.complete(
                 ShardResult {
                     head: h,
+                    chunk_pos: 0,
                     device_id: 0,
                     cycles: 10,
-                    output: if h == 1 { Err("boom".into()) } else { Ok(vec![0.0; 4]) },
+                    output: if h == 1 {
+                        Err("boom".into())
+                    } else {
+                        Ok(ShardOut::Full(vec![0.0; 4]))
+                    },
                     cache: CacheOutcome::NotApplicable,
                 },
                 &fsa(),
@@ -362,18 +628,20 @@ mod tests {
         );
         req.prefix_len = 9; // batcher stamps
         req.epoch = 5;
-        let shards = explode(Envelope { req, reply: tx, enqueued: Instant::now() });
+        let shards = explode(Envelope { req, reply: tx, enqueued: Instant::now() }, 1);
         assert_eq!(shards.len(), 4);
         for s in &shards {
             assert_eq!(s.ctx, ShardCtx::Decode { session: 42, prefix_len: 9, epoch: 5 });
+            assert_eq!(s.shard.kv_range, (0, 9), "legacy decode covers the prefix");
         }
         for h in 0..4 {
             shards[h].gather.complete(
                 ShardResult {
                     head: h,
+                    chunk_pos: 0,
                     device_id: 0,
                     cycles: 7,
-                    output: Ok(vec![0.5; d]),
+                    output: Ok(ShardOut::Full(vec![0.5; d])),
                     cache: if h == 2 { CacheOutcome::Miss } else { CacheOutcome::Hit },
                 },
                 &fsa(),
@@ -384,5 +652,25 @@ mod tests {
         assert_eq!(resp.kv_misses, 1);
         // Decode output is one row per head.
         assert_eq!(resp.output.unwrap().len(), 4 * d);
+    }
+
+    #[test]
+    fn decode_chunk_grid_uses_the_prefill_basis() {
+        // Prefill basis 8, prefix grown to 11 by decode: the first
+        // chunk keeps its prefill-time boundary, the last absorbs the
+        // appended tokens (last-chunk-grows, DESIGN.md §7).
+        let d = 2;
+        let (tx, _rx) = mpsc::channel();
+        let mut req = AttentionRequest::decode(
+            1, 9, 2, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
+        );
+        req.prefix_len = 11;
+        req.prefill_len = 8;
+        req.epoch = 1;
+        let shards = explode(Envelope { req, reply: tx, enqueued: Instant::now() }, 2);
+        assert_eq!(shards.len(), 4, "2 heads x 2 chunks");
+        let ranges: Vec<_> = shards[..2].iter().map(|s| s.shard.kv_range).collect();
+        assert_eq!(ranges, vec![(0, 4), (4, 7)]);
+        assert!(shards.iter().all(|s| s.shard.is_partial()));
     }
 }

@@ -30,7 +30,7 @@ Device / serving commands:
   disasm  [--seq 512 --d 128]  compile + disassemble the flash kernel
   serve   [--requests 16 --devices 2 --seq 512 --artifacts DIR]
           [--heads 1 --kv-heads 1 --backend pjrt|reference|auto]
-          [--mask none|causal --freq-ghz 1.5]
+          [--mask none|causal --freq-ghz 1.5 --seq-shards 1]
                                boot the coordinator and serve a workload
                                (multi-head/GQA requests are sharded
                                per head across the device pool; --mask
@@ -38,7 +38,11 @@ Device / serving commands:
                                the tile-skipping schedule and needs
                                --backend reference — the AOT artifacts
                                take no mask, and auto picks PJRT
-                               whenever artifacts exist)
+                               whenever artifacts exist; --seq-shards N
+                               additionally splits every K/V into N
+                               sequence chunks merged exactly at gather
+                               — long-context serving past one device,
+                               reference backend only)
           [--decode-steps 0 --sessions 1 --kv-pages 4096
            --page-size 16 --eviction lru|none]
                                with --decode-steps > 0: decode-phase
@@ -132,6 +136,7 @@ fn serve(args: &Args) -> fsa::Result<()> {
     cfg.kv_eviction = args.flag("eviction").unwrap_or("lru").parse()?;
     cfg.mask = args.flag("mask").unwrap_or("none").parse()?;
     cfg.freq_ghz = args.get("freq-ghz", cfg.freq_ghz)?;
+    cfg.seq_shards = args.get("seq-shards", cfg.seq_shards)?;
     let n_req = args.get("requests", 16usize)?;
     let seq = args.get("seq", 512usize)?;
     let d = args.get("d", 128usize)?;
@@ -143,9 +148,9 @@ fn serve(args: &Args) -> fsa::Result<()> {
 
     println!(
         "booting coordinator: {} devices, backend {}, artifacts at {}, \
-         mask {}, {:.2} GHz, kv cache {} x {}-token pages ({})",
+         mask {}, {:.2} GHz, {} seq shard(s), kv cache {} x {}-token pages ({})",
         cfg.devices, cfg.backend, cfg.artifacts_dir, cfg.mask, cfg.freq_ghz,
-        cfg.kv_cache_pages, cfg.kv_page_size, cfg.kv_eviction
+        cfg.seq_shards, cfg.kv_cache_pages, cfg.kv_page_size, cfg.kv_eviction
     );
     let coord = Coordinator::start(cfg)?;
     if decode_steps > 0 {

@@ -158,6 +158,125 @@ pub fn flash_forward(
     flash_forward_masked(qm, km, vm, br, bc, exp2, prec, MaskKind::None)
 }
 
+/// Partial online-softmax state of a flash forward pass over a key/value
+/// *chunk* — the unit sequence-parallel attention ships between devices
+/// (DESIGN.md §7).
+///
+/// Per query row `r` the triple is exactly flash's running state after
+/// the chunk's tiles: `m[r]` the running (scaled-domain) row max, `l[r]`
+/// the running rowsum of stored P, and `acc[r*d..]` the *unnormalized*
+/// output accumulator (`diag(l) O` in paper notation).  A row the chunk
+/// never touched (fully masked there) keeps `l == 0` and the finite
+/// `-inf` stand-in in `m` — the state a fresh kernel starts from, which
+/// is what makes merging such a row the identity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlashPartial {
+    pub rows: usize,
+    pub d: usize,
+    /// Row-major `(rows, d)` unnormalized accumulator.
+    pub acc: Vec<f32>,
+    /// Per-row running max (finite `-inf` stand-in when untouched).
+    pub m: Vec<f32>,
+    /// Per-row running rowsum (`0` = row untouched / fully masked).
+    pub l: Vec<f32>,
+}
+
+/// Finite `-inf` stand-in shared by every flash kernel here (a true
+/// `-inf` would feed NaN through the Split unit's `x - ceil(x)`).
+pub const NEG_INF: f32 = -1e30;
+
+impl FlashPartial {
+    /// The empty state every flash pass starts from (`l = 0` rows).
+    pub fn empty(rows: usize, d: usize) -> FlashPartial {
+        FlashPartial {
+            rows,
+            d,
+            acc: vec![0.0; rows * d],
+            m: vec![NEG_INF; rows],
+            l: vec![0.0; rows],
+        }
+    }
+
+    /// Merge `other` (the next chunk, in chunk order) into this running
+    /// state with flash's own outer-loop update rule: take the new row
+    /// max, rescale both sides by `exp2(scale · (old_max − new_max))`,
+    /// and add.  Exactness structure (pinned by unit tests):
+    ///
+    /// * a fully-masked (`l == 0`) incoming row is skipped — merging it
+    ///   is the identity, the same legality argument as tile skipping;
+    /// * the first live chunk of a row is *adopted* bitwise (flash's own
+    ///   initialization — its first tile's state is not "merged into"
+    ///   anything either);
+    /// * the fold is defined over chunk order `0..n` — merging in tree
+    ///   order is a different FP reassociation and is NOT the contract.
+    ///
+    /// The merged result is therefore a pure function of the chunk
+    /// boundaries — bitwise-invariant to which device computed which
+    /// chunk — and degenerates bitwise to the plain kernel for a single
+    /// chunk.  (Across *different* chunkings it is mathematically equal
+    /// but, like any FP reassociation — or a tile-size change — not
+    /// bitwise; DESIGN.md §7.)
+    pub fn merge_from(&mut self, other: &FlashPartial, exp2: &Exp2) {
+        assert_eq!(
+            (self.rows, self.d),
+            (other.rows, other.d),
+            "partial shapes must agree"
+        );
+        let scale = (LOG2E / (self.d as f64).sqrt()) as f32;
+        for r in 0..self.rows {
+            if other.l[r] == 0.0 {
+                continue; // fully-masked chunk row: merging is the identity
+            }
+            let (lo, hi) = (r * self.d, (r + 1) * self.d);
+            if self.l[r] == 0.0 {
+                // First live chunk: adopt bitwise (flash's initial state).
+                self.m[r] = other.m[r];
+                self.l[r] = other.l[r];
+                self.acc[lo..hi].copy_from_slice(&other.acc[lo..hi]);
+                continue;
+            }
+            let new_m = self.m[r].max(other.m[r]);
+            let b_run = exp2.eval(scale * (self.m[r] - new_m));
+            let b_inc = exp2.eval(scale * (other.m[r] - new_m));
+            self.l[r] = self.l[r] * b_run + other.l[r] * b_inc;
+            for h in lo..hi {
+                self.acc[h] = self.acc[h] * b_run + other.acc[h] * b_inc;
+            }
+            self.m[r] = new_m;
+        }
+    }
+
+    /// Normalize into the final output: `out[r] = acc[r] / l[r]`, with
+    /// fully-masked rows (`l == 0`) a defined zero row — the exact final
+    /// block of the tiled kernel, so `partial.finalize()` over a whole
+    /// sequence IS the kernel, operation for operation.
+    pub fn finalize(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.d);
+        for r in 0..self.rows {
+            if self.l[r] == 0.0 {
+                continue; // fully-masked row: defined zero output
+            }
+            let inv = 1.0 / self.l[r];
+            for h in 0..self.d {
+                out.set(r, h, self.acc[r * self.d + h] * inv);
+            }
+        }
+        out
+    }
+}
+
+/// Fold partials in chunk order `0..n` and normalize — the gather-side
+/// merge of sequence-parallel serving (DESIGN.md §7).  One partial
+/// degenerates bitwise to the plain kernel output.
+pub fn merge_partials(parts: &[FlashPartial], exp2: &Exp2) -> Mat {
+    assert!(!parts.is_empty(), "need at least one partial");
+    let mut state = FlashPartial::empty(parts[0].rows, parts[0].d);
+    for p in parts {
+        state.merge_from(p, exp2);
+    }
+    state.finalize()
+}
+
 /// Masked tiled FlashAttention with the tile-skipping schedule
 /// (DESIGN.md §6).  Generalizes [`flash_forward`]:
 ///
@@ -189,14 +308,46 @@ pub fn flash_forward_masked(
     prec: Precision,
     mask: MaskKind,
 ) -> Mat {
+    flash_forward_partial(qm, km, vm, br, bc, exp2, prec, mask, 0, km.rows).finalize()
+}
+
+/// One sequence-parallel *chunk* of [`flash_forward_masked`]
+/// (DESIGN.md §7): run the tiled kernel over the key/value chunk
+/// `km`/`vm`, which covers *global* key indices `[key_offset,
+/// key_offset + km.rows)` of a `total_keys`-key sequence, and return the
+/// per-row partial `(acc, m, l)` state instead of normalizing.  The mask
+/// is evaluated at global key coordinates, so per-chunk masking (causal
+/// intersection, padding boundaries, whole-chunk skips) is exactly the
+/// tile-skipping schedule restricted to the chunk.  With `key_offset = 0`
+/// and the whole key sequence this is operation-for-operation the body
+/// of [`flash_forward_masked`] (which delegates here), so
+/// `finalize()` of a single whole-range chunk IS the plain kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_forward_partial(
+    qm: &Mat,
+    km: &Mat,
+    vm: &Mat,
+    br: usize,
+    bc: usize,
+    exp2: &Exp2,
+    prec: Precision,
+    mask: MaskKind,
+    key_offset: usize,
+    total_keys: usize,
+) -> FlashPartial {
     let (l, d) = (qm.rows, qm.cols);
     let lk = km.rows;
     assert_eq!(km.cols, d);
     assert_eq!(vm.rows, lk);
     assert!(br >= 1 && bc >= 1, "tile sizes must be >= 1");
+    assert!(
+        key_offset + lk <= total_keys,
+        "chunk [{key_offset}, {}) exceeds the {total_keys}-key sequence",
+        key_offset + lk
+    );
     let scale = (LOG2E / (d as f64).sqrt()) as f32;
 
-    let mut out = Mat::zeros(l, d);
+    let mut part = FlashPartial::empty(l, d);
     let mut s = vec![0.0f32; br * bc];
     let mut p16 = vec![0.0f32; br * bc];
 
@@ -208,28 +359,29 @@ pub fn flash_forward_masked(
     };
     let (qm, km, vm) = (&qq, &kq, &vq);
 
-    // Finite -inf stand-in (same convention as the Pallas kernel): a true
-    // -inf would feed NaN through the Split unit's `x - ceil(x)`.
-    const NEG_INF: f32 = -1e30;
     let mut q0 = 0;
     while q0 < l {
         let bre = br.min(l - q0);
-        let mut m = vec![NEG_INF; bre];
-        let mut lsum = vec![0.0f32; bre];
-        let mut acc = vec![0.0f32; bre * d];
+        let m = &mut part.m[q0..q0 + bre];
+        let lsum = &mut part.l[q0..q0 + bre];
+        let acc = &mut part.acc[q0 * d..(q0 + bre) * d];
         let mut k0 = 0;
         while k0 < lk {
             let bce = bc.min(lk - k0);
             // Tile-skipping schedule: a fully-masked tile touches no row
-            // state, so skipping it is exact.
-            if mask.coverage(q0, bre, k0, bce) == TileCoverage::Empty {
+            // state, so skipping it is exact.  Coverage and valid-key
+            // prefixes are evaluated at *global* key coordinates.
+            if mask.coverage(q0, bre, key_offset + k0, bce) == TileCoverage::Empty {
                 k0 += bce;
                 continue;
             }
             for r in 0..bre {
                 // Valid keys form a per-row prefix of the tile's columns
                 // (both mask kinds are column-prefix masks).
-                let vc = mask.valid_keys(q0 + r, lk).saturating_sub(k0).min(bce);
+                let vc = mask
+                    .valid_keys(q0 + r, total_keys)
+                    .saturating_sub(key_offset + k0)
+                    .min(bce);
                 if vc == 0 {
                     continue; // row fully masked in this tile: state untouched
                 }
@@ -278,7 +430,7 @@ pub fn flash_forward_masked(
             // O += P V, n-ascending (downward path, top row first); the
             // masked lanes ride along with P = 0, exactly as on the array.
             for r in 0..bre {
-                if mask.valid_keys(q0 + r, lk) <= k0 {
+                if mask.valid_keys(q0 + r, total_keys) <= key_offset + k0 {
                     continue; // row skipped above: stale P, state untouched
                 }
                 for h in 0..d {
@@ -291,18 +443,9 @@ pub fn flash_forward_masked(
             }
             k0 += bce;
         }
-        for r in 0..bre {
-            if lsum[r] == 0.0 {
-                continue; // fully-masked row: defined zero output
-            }
-            let inv = 1.0 / lsum[r];
-            for h in 0..d {
-                out.set(q0 + r, h, acc[r * d + h] * inv);
-            }
-        }
         q0 += bre;
     }
-    out
+    part
 }
 
 /// Single-query-row FlashAttention over a `(len, d)` K/V prefix — the
@@ -333,6 +476,32 @@ pub fn flash_decode_row(
     exp2: &Exp2,
     prec: Precision,
 ) -> Vec<f32> {
+    let part = flash_decode_row_partial(qr, km, vm, d, bc, exp2, prec);
+    // Normalization kept verbatim from the original kernel (not
+    // `finalize()`): decode has no masked rows, so `l` is never the
+    // defined-zero case and the historical `1/l` behavior is preserved
+    // bit for bit.
+    let inv = 1.0 / part.l[0];
+    part.acc.iter().map(|&a| a * inv).collect()
+}
+
+/// One sequence-parallel K/V *range* of [`flash_decode_row`] — the
+/// flash-decode-style split-KV unit (DESIGN.md §7): the single query row
+/// attends a contiguous slice of the prefix and emits its partial
+/// `(acc, m, l)` row instead of normalizing.  Decode takes no mask (the
+/// step row attends the whole prefix), so unlike
+/// [`flash_forward_partial`] the range carries no global key offset —
+/// scores are offset-invariant.  The whole-prefix range normalized is
+/// bitwise [`flash_decode_row`] (which delegates here).
+pub fn flash_decode_row_partial(
+    qr: &[f32],
+    km: &[f32],
+    vm: &[f32],
+    d: usize,
+    bc: usize,
+    exp2: &Exp2,
+    prec: Precision,
+) -> FlashPartial {
     assert!(d >= 1 && bc >= 1);
     assert_eq!(qr.len(), d, "q must be one (1, d) row");
     assert_eq!(km.len() % d, 0, "K must be (len, d) row-major");
@@ -345,7 +514,6 @@ pub fn flash_decode_row(
     let kq: Vec<f32> = km.iter().map(|&x| q(x, prec)).collect();
     let vq: Vec<f32> = vm.iter().map(|&x| q(x, prec)).collect();
 
-    const NEG_INF: f32 = -1e30;
     let mut m = NEG_INF;
     let mut lsum = 0.0f32;
     let mut acc = vec![0.0f32; d];
@@ -391,8 +559,7 @@ pub fn flash_decode_row(
         }
         k0 += bce;
     }
-    let inv = 1.0 / lsum;
-    acc.iter().map(|&a| a * inv).collect()
+    FlashPartial { rows: 1, d, acc, m: vec![m], l: vec![lsum] }
 }
 
 /// Convenience: the decode row with the paper's device numerics (PWL
@@ -433,6 +600,49 @@ pub fn flash_pwl_masked(
         &Exp2::PwlF16(PwlExp2::new(segments)),
         Precision::F16F32,
         mask,
+    )
+}
+
+/// Convenience: one sequence chunk with the paper's device numerics —
+/// the strict twin the device workers' reference backend runs for
+/// sequence-sharded shards (DESIGN.md §7).
+#[allow(clippy::too_many_arguments)]
+pub fn flash_pwl_partial(
+    qm: &Mat,
+    km: &Mat,
+    vm: &Mat,
+    br: usize,
+    bc: usize,
+    segments: usize,
+    mask: MaskKind,
+    key_offset: usize,
+    total_keys: usize,
+) -> FlashPartial {
+    flash_forward_partial(
+        qm, km, vm, br, bc,
+        &Exp2::PwlF16(PwlExp2::new(segments)),
+        Precision::F16F32,
+        mask,
+        key_offset,
+        total_keys,
+    )
+}
+
+/// Convenience: one split-KV decode range with the paper's device
+/// numerics — the strict twin the reference backend runs for
+/// sequence-sharded decode shards (DESIGN.md §7).
+pub fn decode_pwl_partial(
+    qr: &[f32],
+    km: &[f32],
+    vm: &[f32],
+    d: usize,
+    bc: usize,
+    segments: usize,
+) -> FlashPartial {
+    flash_decode_row_partial(
+        qr, km, vm, d, bc,
+        &Exp2::PwlF16(PwlExp2::new(segments)),
+        Precision::F16F32,
     )
 }
 
@@ -717,6 +927,215 @@ mod tests {
         assert!(sdpa_masked(&qm, &km, &vm, mask).data.iter().all(|&x| x == 0.0));
         let flash = flash_pwl_masked(&qm, &km, &vm, 8, 8, 8, mask);
         assert!(flash.data.iter().all(|&x| x == 0.0), "no NaN from 0/0");
+    }
+
+    /// Split a key sequence into `n` even chunks and return the per-chunk
+    /// partials (the host-side oracle of sequence-parallel serving).
+    #[allow(clippy::too_many_arguments)]
+    fn chunked_partials(
+        qm: &Mat,
+        km: &Mat,
+        vm: &Mat,
+        bc: usize,
+        exp2: &Exp2,
+        prec: Precision,
+        mask: MaskKind,
+        n: usize,
+    ) -> Vec<FlashPartial> {
+        let lk = km.rows;
+        let w = lk.div_ceil(n).max(1);
+        let mut parts = Vec::new();
+        let mut start = 0;
+        while start < lk {
+            let len = w.min(lk - start);
+            let slice = |m: &Mat| {
+                Mat::new(len, m.cols, m.data[start * m.cols..(start + len) * m.cols].to_vec())
+            };
+            parts.push(flash_forward_partial(
+                qm, &slice(km), &slice(vm), bc, bc, exp2, prec, mask, start, lk,
+            ));
+            start += len;
+        }
+        parts
+    }
+
+    #[test]
+    fn seq_chunked_merge_matches_reference_across_shapes_and_modes() {
+        // Tentpole numerics: K/V chunked into 2 and 4 sequence shards,
+        // each chunk's partial computed independently, merged in chunk
+        // order — parity with masked dense SDPA in every numerics mode,
+        // and (exact exp2) tight agreement with the unchunked kernel.
+        let mut rng = SplitMix64::new(71);
+        for &(l, d, bc) in &[(64usize, 16usize, 8usize), (48, 8, 16), (96, 32, 16)] {
+            let qm = rand_mat(&mut rng, l, d);
+            let km = rand_mat(&mut rng, l, d);
+            let vm = rand_mat(&mut rng, l, d);
+            for mask in [MaskKind::None, MaskKind::Causal, MaskKind::PaddingKeys { valid: l - 5 }] {
+                let dense = sdpa_masked(&qm, &km, &vm, mask);
+                for n in [2usize, 4] {
+                    for (exp2, prec, mae, max_abs) in [
+                        (Exp2::Exact, Precision::F32, 2e-5, 2e-5),
+                        (Exp2::Pwl(PwlExp2::new(8)), Precision::F32, 3e-2, 3e-1),
+                        (Exp2::PwlF16(PwlExp2::new(8)), Precision::F16F32, 3e-2, 3e-1),
+                        (Exp2::PwlF16(PwlExp2::new(4)), Precision::F16F32, 6e-2, 6e-1),
+                    ] {
+                        let parts = chunked_partials(&qm, &km, &vm, bc, &exp2, prec, mask, n);
+                        let merged = merge_partials(&parts, &exp2);
+                        let err = mat_error(&merged, &dense);
+                        assert!(
+                            err.mae < mae && err.max_abs < max_abs,
+                            "L={l} d={d} bc={bc} n={n} {mask:?}: {err:?}"
+                        );
+                        assert!(merged.data.iter().all(|x| x.is_finite()));
+                        if matches!(exp2, Exp2::Exact) {
+                            // Exact exp2: the only divergence from the
+                            // unchunked kernel is FP reassociation at the
+                            // chunk seams.
+                            let whole = flash_forward_masked(
+                                &qm, &km, &vm, bc, bc, &exp2, prec, mask,
+                            );
+                            assert!(mat_error(&merged, &whole).max_abs < 1e-5);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_chunk_merge_is_bitwise_the_plain_kernel() {
+        // Satellite: one chunk covering the whole key range, adopted by
+        // the merge and normalized, must be operation-for-operation the
+        // plain kernel — for every mask kind.
+        let mut rng = SplitMix64::new(72);
+        let (l, d, bc) = (40usize, 16usize, 16usize);
+        let qm = rand_mat(&mut rng, l, d);
+        let km = rand_mat(&mut rng, l, d);
+        let vm = rand_mat(&mut rng, l, d);
+        let exp2 = Exp2::PwlF16(PwlExp2::new(8));
+        for mask in [MaskKind::None, MaskKind::Causal, MaskKind::PaddingKeys { valid: 7 }] {
+            let part = flash_forward_partial(
+                &qm, &km, &vm, bc, bc, &exp2, Precision::F16F32, mask, 0, l,
+            );
+            let merged = merge_partials(&[part], &exp2);
+            let whole = flash_pwl_masked(&qm, &km, &vm, bc, bc, 8, mask);
+            assert_eq!(merged.data, whole.data, "{mask:?}");
+        }
+    }
+
+    #[test]
+    fn merging_a_fully_masked_partial_is_the_identity() {
+        // Satellite: a zero-`l` partial (its chunk fully masked for
+        // every row) must leave the running state bitwise untouched, in
+        // either merge position.
+        let mut rng = SplitMix64::new(73);
+        let (l, d, bc) = (32usize, 8usize, 8usize);
+        let qm = rand_mat(&mut rng, l, d);
+        let km = rand_mat(&mut rng, l, d);
+        let vm = rand_mat(&mut rng, l, d);
+        let exp2 = Exp2::PwlF16(PwlExp2::new(8));
+        let live = flash_forward_partial(
+            &qm, &km, &vm, bc, bc, &exp2, Precision::F16F32, MaskKind::None, 0, 2 * l,
+        );
+        // The second half of a PaddingKeys{valid: l} sequence is fully
+        // masked: its partial must be all-zero state.
+        let masked = flash_forward_partial(
+            &qm, &km, &vm, bc, bc, &exp2, Precision::F16F32,
+            MaskKind::PaddingKeys { valid: l }, l, 2 * l,
+        );
+        assert!(masked.l.iter().all(|&x| x == 0.0));
+        assert!(masked.acc.iter().all(|&x| x == 0.0));
+
+        let mut state = live.clone();
+        state.merge_from(&masked, &exp2);
+        assert_eq!(state, live, "zero-l merge must be the identity");
+        // And in front: adopting after a skipped chunk equals adopting
+        // directly.
+        let mut front = FlashPartial::empty(l, d);
+        front.merge_from(&masked, &exp2);
+        front.merge_from(&live, &exp2);
+        assert_eq!(front, live);
+    }
+
+    #[test]
+    fn merge_order_is_pinned_to_chunk_order_not_tree_order() {
+        // Satellite: the contract is the sequential fold over chunk
+        // order 0..n.  Tree-order merging is a different FP
+        // reassociation — this input is constructed so the two differ
+        // in the last ULP deterministically (X just above half an ULP
+        // of 1.0: (1+X)+X rounds up twice, 1+(X+X) only once).
+        const X: f32 = 6.5e-8;
+        let exp2 = Exp2::Exact;
+        let part = |l: f32| FlashPartial {
+            rows: 1,
+            d: 1,
+            acc: vec![l],
+            m: vec![0.0],
+            l: vec![l],
+        };
+        let fold = |ls: &[f32]| {
+            let mut s = FlashPartial::empty(1, 1);
+            for &l in ls {
+                s.merge_from(&part(l), &exp2);
+            }
+            s
+        };
+        let sequential = fold(&[1.0, X, X]);
+        // Tree order: (1.0) ⊕ (X ⊕ X).
+        let mut tree = fold(&[1.0]);
+        tree.merge_from(&fold(&[X, X]), &exp2);
+        assert_eq!(sequential.l[0], (1.0f32 + X) + X);
+        assert_eq!(tree.l[0], 1.0f32 + (X + X));
+        assert_ne!(
+            sequential.l[0], tree.l[0],
+            "tree-order merge must not be mistaken for the pinned sequential fold"
+        );
+    }
+
+    #[test]
+    fn decode_split_kv_merge_matches_full_row() {
+        // Split-KV decode (DESIGN.md §7): partial rows over prefix
+        // ranges merged in range order.  The whole-range partial
+        // normalized is bitwise the decode kernel, and multi-range
+        // merges stay within the Table-2 band of the dense row.
+        let mut rng = SplitMix64::new(74);
+        let (lk, d, bc) = (96usize, 16usize, 16usize);
+        let qr = rng.normal_matrix(1, d);
+        let km = rng.normal_matrix(lk, d);
+        let vm = rng.normal_matrix(lk, d);
+        let exp2 = Exp2::PwlF16(PwlExp2::new(8));
+
+        let whole = flash_decode_row(&qr, &km, &vm, d, bc, &exp2, Precision::F16F32);
+        let single = flash_decode_row_partial(&qr, &km, &vm, d, bc, &exp2, Precision::F16F32);
+        let inv = 1.0 / single.l[0];
+        let normalized: Vec<f32> = single.acc.iter().map(|&a| a * inv).collect();
+        assert_eq!(normalized, whole, "whole-range partial == decode kernel");
+
+        let dense = sdpa(
+            &Mat::new(1, d, qr.clone()),
+            &Mat::new(lk, d, km.clone()),
+            &Mat::new(lk, d, vm.clone()),
+        );
+        for ranges in [vec![(0usize, 48usize), (48, 48)], vec![(0, 24), (24, 24), (48, 48)]] {
+            let parts: Vec<FlashPartial> = ranges
+                .iter()
+                .map(|&(start, len)| {
+                    decode_pwl_partial(
+                        &qr,
+                        &km[start * d..(start + len) * d],
+                        &vm[start * d..(start + len) * d],
+                        d,
+                        bc,
+                        8,
+                    )
+                })
+                .collect();
+            let merged = merge_partials(&parts, &exp2);
+            let err = mat_error(&merged, &dense);
+            assert!(err.mae < 3e-2, "{ranges:?}: {err:?}");
+            let vs_whole = mat_error(&merged, &Mat::new(1, d, whole.clone()));
+            assert!(vs_whole.mae < 3e-2, "{ranges:?}: {vs_whole:?}");
+        }
     }
 
     #[test]

@@ -14,8 +14,9 @@
 use crate::config::AccelConfig;
 use crate::mask::MaskKind;
 use crate::schedule::{
-    attention_flops, decode_attention_flops, masked_attention_flops, masked_tile_counts,
-    preload_latency, rescale_latency, InnerSchedule, Variant,
+    attention_flops, decode_attention_flops, live_chunk_ranges, masked_attention_flops,
+    masked_attention_flops_range, masked_tile_counts, masked_tile_counts_range, preload_latency,
+    rescale_latency, InnerSchedule, Variant,
 };
 use crate::sim::dma::DmaConfig;
 
@@ -385,6 +386,282 @@ pub fn multi_head_perf_masked(
     }
 }
 
+/// Timing of one sequence-parallel K/V *chunk* of one head
+/// (DESIGN.md §7): the full query sequence against global keys
+/// `[key_start, key_start + key_len)`.  Identical structure to
+/// [`fsa_flash_perf_masked`] — tile-skipping schedule, double-buffered
+/// DMA, per-row-block epilogue — but the tile census and useful FLOPs
+/// are restricted to the chunk ([`masked_tile_counts_range`] /
+/// [`masked_attention_flops_range`]).  With the whole key range and
+/// tile-aligned boundaries this reproduces the unsharded model exactly
+/// (pinned by a unit test).
+#[allow(clippy::too_many_arguments)]
+pub fn fsa_flash_chunk_perf(
+    cfg: &AccelConfig,
+    seq_len: usize,
+    d: usize,
+    key_start: usize,
+    key_len: usize,
+    variant: Variant,
+    segments: usize,
+    mask: MaskKind,
+) -> FsaPerf {
+    let n = cfg.array_size;
+    assert!(d <= n, "head dim {d} exceeds array size {n}");
+    assert!(key_len >= 1, "chunk must cover at least one key");
+    let sched = InnerSchedule::new(n, variant, segments);
+    let ii = sched.inner_latency();
+    let ii_masked = sched.masked_inner_latency();
+
+    let t_r = seq_len.div_ceil(n) as u64;
+    let (full, partial, _skipped) = masked_tile_counts_range(seq_len, n, mask, key_start, key_len);
+
+    let dma = DmaConfig::for_bandwidth(cfg.mem_bw_gbs, cfg.freq_ghz, 4);
+    let tile_bytes = (n * n * 2) as f64;
+    let bpc = cfg.mem_bw_gbs / cfg.freq_ghz;
+    let dma_per_iter = dma.setup_cycles + (2.0 * tile_bytes / bpc).ceil() as u64;
+
+    let ii_eff = ii.max(dma_per_iter);
+    let ii_masked_eff = ii_masked.max(dma_per_iter);
+    let bandwidth_bound = dma_per_iter > ii;
+
+    let inner = full * ii_eff + partial * ii_masked_eff;
+    let outer = rescale_latency(n);
+    let startup = preload_latency(n) + dma_per_iter + dma.setup_cycles;
+    let total = inner + t_r * outer + startup;
+
+    let flops = masked_attention_flops_range(seq_len, d, mask, key_start, key_len) as f64;
+    let peak_per_cycle = 2.0 * (n * n) as f64;
+    let utilization = flops / (peak_per_cycle * total as f64);
+
+    let array_active = full * ii + partial * ii_masked + t_r * preload_latency(n);
+    FsaPerf {
+        total_cycles: total,
+        array_active_cycles: array_active.min(total),
+        dma_cycles: (full + partial) * dma_per_iter,
+        utilization,
+        seconds: total as f64 / (cfg.freq_ghz * 1e9),
+        bandwidth_bound,
+    }
+}
+
+/// Timing of one sequence-parallel head (DESIGN.md §7): the K/V split
+/// into `seq_shards` even chunks computed concurrently, their partial
+/// `(O~, m, l)` triples shipped to the gathering device and merged in
+/// chunk order.
+#[derive(Clone, Copy, Debug)]
+pub struct SeqParPerf {
+    pub seq_shards: usize,
+    /// Chunks actually issued (fully-masked chunks are never
+    /// dispatched — zero compute, zero DMA, zero communication).
+    pub live_chunks: usize,
+    /// The slowest chunk's cycles — the parallel phase's span.  Under a
+    /// causal mask chunk 0 is the critical one (it owns the most
+    /// below-diagonal tiles), a real load imbalance the even split
+    /// accepts (DESIGN.md §7).
+    pub chunk_cycles_max: u64,
+    /// Cycles consumed across all chunks (the pool cost).
+    pub chunk_cycles_total: u64,
+    /// Gather-side merge: `live − 1` online-softmax merge steps over
+    /// `seq_len` rows of `(d + 2)`-wide state, priced at `N` elementwise
+    /// lanes per cycle (§3.3-style wave, ~3 ops per element).
+    pub merge_cycles: u64,
+    /// Partial-state traffic to the gathering device: `live − 1`
+    /// partials of `seq_len · (d + 2)` f32 values.
+    pub comm_bytes: u64,
+    pub comm_cycles: u64,
+    /// Whole-head latency: slowest chunk, then communication, then the
+    /// in-order merge.
+    pub critical_path_cycles: u64,
+    /// The unsharded single-device baseline ([`fsa_flash_perf_masked`]).
+    pub single_device_cycles: u64,
+    /// `single_device_cycles / critical_path_cycles` — > 1 when
+    /// sequence sharding wins; the crossover L is where this passes 1.
+    pub speedup: f64,
+    /// Whole-head achieved/peak FLOPs/s over the `live_chunks` devices
+    /// for the critical-path duration.
+    pub utilization: f64,
+    pub seconds: f64,
+}
+
+/// Model one head sharded `seq_shards` ways across the sequence
+/// (DESIGN.md §7).  `seq_shards = 1` degenerates to
+/// [`fsa_flash_perf_masked`] with zero merge/communication.
+pub fn seqpar_perf(
+    cfg: &AccelConfig,
+    seq_len: usize,
+    d: usize,
+    seq_shards: usize,
+    variant: Variant,
+    segments: usize,
+    mask: MaskKind,
+) -> SeqParPerf {
+    assert!(seq_shards >= 1);
+    let n = cfg.array_size;
+    let single = fsa_flash_perf_masked(cfg, seq_len, d, variant, segments, mask);
+    if seq_shards == 1 {
+        // Unsharded degeneration: the legacy whole-head path, no merge,
+        // no communication.
+        return SeqParPerf {
+            seq_shards,
+            live_chunks: 1,
+            chunk_cycles_max: single.total_cycles,
+            chunk_cycles_total: single.total_cycles,
+            merge_cycles: 0,
+            comm_bytes: 0,
+            comm_cycles: 0,
+            critical_path_cycles: single.total_cycles,
+            single_device_cycles: single.total_cycles,
+            speedup: 1.0,
+            utilization: single.utilization,
+            seconds: single.seconds,
+        };
+    }
+
+    // The same liveness rule the coordinator dispatches with
+    // ([`live_chunk_ranges`]): dead chunks are neither dispatched nor
+    // priced, and a fully-masked operator falls back to one legacy
+    // shard.
+    let grid = live_chunk_ranges(seq_len, seq_len, seq_len, seq_shards, mask);
+    let mut chunk_max = 0u64;
+    let mut chunk_total = 0u64;
+    let mut live = grid.len();
+    for &(_, (start, len)) in &grid {
+        let c = fsa_flash_chunk_perf(cfg, seq_len, d, start, len, variant, segments, mask);
+        chunk_max = chunk_max.max(c.total_cycles);
+        chunk_total += c.total_cycles;
+    }
+    if live == 0 {
+        chunk_max = single.total_cycles;
+        chunk_total = single.total_cycles;
+        live = 1;
+    }
+
+    let (merge_cycles, comm_bytes) = if live > 1 {
+        let rows = seq_len as u64;
+        let state = (d + 2) as u64; // acc row + m + l
+        (
+            ((live as u64 - 1) * rows * 3 * state).div_ceil(n as u64),
+            (live as u64 - 1) * rows * state * 4,
+        )
+    } else {
+        (0, 0)
+    };
+    let bpc = cfg.mem_bw_gbs / cfg.freq_ghz;
+    let dma = DmaConfig::for_bandwidth(cfg.mem_bw_gbs, cfg.freq_ghz, 4);
+    let comm_cycles = if live > 1 {
+        (comm_bytes as f64 / bpc).ceil() as u64 + (live as u64 - 1) * dma.setup_cycles
+    } else {
+        0
+    };
+
+    let critical = chunk_max + comm_cycles + merge_cycles;
+    let flops = masked_attention_flops(seq_len, d, mask) as f64;
+    let peak_per_cycle = 2.0 * (n * n) as f64 * live as f64;
+    SeqParPerf {
+        seq_shards,
+        live_chunks: live,
+        chunk_cycles_max: chunk_max,
+        chunk_cycles_total: chunk_total,
+        merge_cycles,
+        comm_bytes,
+        comm_cycles,
+        critical_path_cycles: critical,
+        single_device_cycles: single.total_cycles,
+        speedup: single.total_cycles as f64 / critical as f64,
+        utilization: flops / (peak_per_cycle * critical as f64),
+        seconds: critical as f64 / (cfg.freq_ghz * 1e9),
+    }
+}
+
+/// The modeled crossover: the smallest `L` in `ls` where `seq_shards`-way
+/// sequence sharding beats the single-device latency
+/// (`seqpar_perf(..).speedup > 1`).  `None` when sharding never wins in
+/// the sweep — e.g. at tile-quantized short sequences where the merge
+/// and communication terms dominate.
+pub fn seqpar_crossover(
+    cfg: &AccelConfig,
+    d: usize,
+    seq_shards: usize,
+    variant: Variant,
+    segments: usize,
+    mask: MaskKind,
+    ls: &[usize],
+) -> Option<usize> {
+    ls.iter()
+        .copied()
+        .find(|&l| seqpar_perf(cfg, l, d, seq_shards, variant, segments, mask).speedup > 1.0)
+}
+
+/// Pool-level sequence-parallel timing of a whole multi-head operator:
+/// the sequence-sharded analogue of [`multi_head_perf_masked`].
+#[derive(Clone, Copy, Debug)]
+pub struct SeqParPoolPerf {
+    /// Per-head sharding model (chunk span, merge, communication).
+    pub head: SeqParPerf,
+    pub num_heads: usize,
+    pub num_kv_heads: usize,
+    pub devices: usize,
+    /// Routing units one request scatters into: `(kv_head, chunk)`
+    /// affinity groups — sequence sharding multiplies a request's
+    /// parallelism by `live_chunks`, which is exactly how it beats the
+    /// `num_kv_heads`-device ceiling of head sharding alone.
+    pub devices_used: usize,
+    /// Chunk executions the busiest device serves.
+    pub rounds: usize,
+    /// Whole-operator latency: `rounds` chunk spans plus one round of
+    /// per-head merge + communication on the gathering device.
+    pub critical_path_cycles: u64,
+    pub total_cycles: u64,
+    pub utilization: f64,
+    pub seconds: f64,
+}
+
+/// Compose [`seqpar_perf`] per-head chunks into a whole operator the way
+/// the router actually places them: one `(kv_head, chunk)` group — all
+/// `group_size` query heads of a KV head attending one chunk — per
+/// device, least-loaded.  `seq_shards = 1` reproduces
+/// [`multi_head_perf_masked`] (pinned by a unit test).
+#[allow(clippy::too_many_arguments)]
+pub fn seqpar_pool_perf(
+    cfg: &AccelConfig,
+    seq_len: usize,
+    d: usize,
+    num_heads: usize,
+    num_kv_heads: usize,
+    devices: usize,
+    seq_shards: usize,
+    variant: Variant,
+    segments: usize,
+    mask: MaskKind,
+) -> SeqParPoolPerf {
+    assert!(num_heads >= 1 && num_kv_heads >= 1 && devices >= 1);
+    assert_eq!(num_heads % num_kv_heads, 0, "GQA head counts must divide");
+    let head = seqpar_perf(cfg, seq_len, d, seq_shards, variant, segments, mask);
+    let group_size = num_heads / num_kv_heads;
+    let groups = num_kv_heads * head.live_chunks;
+    let devices_used = devices.min(groups);
+    let rounds = group_size * groups.div_ceil(devices);
+    let merge_overhead = (head.merge_cycles + head.comm_cycles) * group_size as u64;
+    let critical_path_cycles = rounds as u64 * head.chunk_cycles_max + merge_overhead;
+    let total_cycles =
+        num_heads as u64 * (head.chunk_cycles_total + head.merge_cycles + head.comm_cycles);
+    let flops = num_heads as u64 * masked_attention_flops(seq_len, d, mask);
+    let peak_per_cycle = 2.0 * (cfg.array_size * cfg.array_size) as f64 * devices_used as f64;
+    SeqParPoolPerf {
+        head,
+        num_heads,
+        num_kv_heads,
+        devices,
+        devices_used,
+        rounds,
+        critical_path_cycles,
+        total_cycles,
+        utilization: flops as f64 / (peak_per_cycle * critical_path_cycles as f64),
+        seconds: critical_path_cycles as f64 / (cfg.freq_ghz * 1e9),
+    }
+}
+
 /// Whole-operator FLOPs/s utilization from *observed* per-device cycle
 /// totals (what the coordinator's gather measures): achieved FLOPs over
 /// the pool's peak for the critical-path duration.  Returns 0 when no
@@ -633,6 +910,106 @@ mod tests {
         assert!(
             (all_hit.bytes_per_step - 2.0 * all_hit.hit.bytes_streamed as f64).abs() < 1.0
         );
+    }
+
+    #[test]
+    fn chunk_perf_reproduces_the_masked_model_on_the_whole_range() {
+        let cfg = fsa();
+        for mask in [MaskKind::None, MaskKind::Causal, MaskKind::PaddingKeys { valid: 3000 }] {
+            let whole = fsa_flash_perf_masked(&cfg, 4096, 128, Variant::DualPath, 8, mask);
+            let chunk =
+                fsa_flash_chunk_perf(&cfg, 4096, 128, 0, 4096, Variant::DualPath, 8, mask);
+            assert_eq!(chunk.total_cycles, whole.total_cycles, "{mask:?}");
+            assert_eq!(chunk.dma_cycles, whole.dma_cycles, "{mask:?}");
+            assert_eq!(chunk.utilization, whole.utilization, "{mask:?}");
+        }
+        // A quarter chunk prices ~a quarter of the inner work (plus its
+        // own epilogues/startup), and chunks of a partition cover all
+        // the single-device tiles.
+        let whole = fsa_flash_perf(&cfg, 4096, 128, Variant::DualPath, 8);
+        let quarter =
+            fsa_flash_chunk_perf(&cfg, 4096, 128, 1024, 1024, Variant::DualPath, 8, MaskKind::None);
+        assert!(quarter.total_cycles < whole.total_cycles / 3);
+        let sum: u64 = (0..4)
+            .map(|c| {
+                fsa_flash_chunk_perf(
+                    &cfg, 4096, 128, c * 1024, 1024, Variant::DualPath, 8, MaskKind::None,
+                )
+                .total_cycles
+            })
+            .sum();
+        assert!(sum >= whole.total_cycles, "chunks re-pay epilogues/startup");
+    }
+
+    #[test]
+    fn seqpar_speedup_crosses_over_with_sequence_length() {
+        // Acceptance: the crossover L where 4-way sequence sharding
+        // beats single-device latency is a modeled, asserted quantity —
+        // short sequences lose to the merge/communication overhead
+        // (tile-quantized chunks don't even shrink the span), long ones
+        // approach the seq_shards-fold span reduction.
+        let cfg = fsa();
+        let ls = [128usize, 256, 512, 1024, 2048, 4096, 8192, 16384];
+        let crossover = seqpar_crossover(
+            &cfg, 128, 4, Variant::DualPath, 8, MaskKind::None, &ls,
+        )
+        .expect("4-way sharding must win somewhere in the sweep");
+        assert!(
+            (257..=1024).contains(&crossover),
+            "crossover L = {crossover} out of the expected band"
+        );
+        let short = seqpar_perf(&cfg, 128, 128, 4, Variant::DualPath, 8, MaskKind::None);
+        assert!(short.speedup < 1.0, "short sequences must not win: {}", short.speedup);
+        let long = seqpar_perf(&cfg, 16384, 128, 4, Variant::DualPath, 8, MaskKind::None);
+        assert!(long.speedup > 2.0, "long sequences must win big: {}", long.speedup);
+        assert!(long.speedup < 4.0, "speedup is bounded by the shard count");
+        // Unmasked even chunks are identical work: the span is exactly
+        // the per-chunk cost.
+        assert_eq!(long.chunk_cycles_max * long.live_chunks as u64, long.chunk_cycles_total);
+        // Causal chunks are imbalanced: chunk 0 owns the most
+        // below-diagonal tiles and sets the span.
+        let causal = seqpar_perf(&cfg, 16384, 128, 4, Variant::DualPath, 8, MaskKind::Causal);
+        assert!(
+            causal.chunk_cycles_max as f64
+                > 1.5 * causal.chunk_cycles_total as f64 / causal.live_chunks as f64,
+            "causal even split must be imbalanced"
+        );
+        // Degeneration: one shard is the legacy model, no overhead.
+        let one = seqpar_perf(&cfg, 4096, 128, 1, Variant::DualPath, 8, MaskKind::None);
+        let legacy = fsa_flash_perf(&cfg, 4096, 128, Variant::DualPath, 8);
+        assert_eq!(one.critical_path_cycles, legacy.total_cycles);
+        assert_eq!((one.merge_cycles, one.comm_cycles, one.live_chunks), (0, 0, 1));
+        assert_eq!(one.speedup, 1.0);
+    }
+
+    #[test]
+    fn seqpar_pool_degenerates_to_multi_head_and_beats_the_kv_ceiling() {
+        let cfg = fsa();
+        let (l, d) = (8192usize, 128usize);
+        // seq_shards = 1 reproduces the head-sharded model exactly.
+        let mh = multi_head_perf(&cfg, l, d, 8, 2, 8, Variant::DualPath, 8);
+        let sp1 = seqpar_pool_perf(
+            &cfg, l, d, 8, 2, 8, 1, Variant::DualPath, 8, MaskKind::None,
+        );
+        assert_eq!(sp1.critical_path_cycles, mh.critical_path_cycles);
+        assert_eq!((sp1.devices_used, sp1.rounds), (mh.devices_used, mh.rounds));
+        assert_eq!(sp1.utilization, mh.utilization);
+        // 4-way sequence sharding lifts the num_kv_heads device ceiling:
+        // the same 8q/2kv operator now scatters into 8 (kv_head, chunk)
+        // groups and actually uses all 8 devices.
+        let sp4 = seqpar_pool_perf(
+            &cfg, l, d, 8, 2, 8, 4, Variant::DualPath, 8, MaskKind::None,
+        );
+        assert_eq!(sp4.devices_used, 8);
+        assert!(
+            sp4.critical_path_cycles < mh.critical_path_cycles / 2,
+            "sequence sharding must beat the KV-affinity latency ceiling: {} vs {}",
+            sp4.critical_path_cycles,
+            mh.critical_path_cycles
+        );
+        // Cost is conserved up to merge/communication overhead.
+        assert!(sp4.total_cycles >= mh.total_cycles);
+        assert!(sp4.utilization > 0.0 && sp4.utilization < 1.0);
     }
 
     #[test]

@@ -15,7 +15,9 @@ use anyhow::{anyhow, bail, ensure, Context};
 
 use crate::config::{AccelConfig, BackendKind};
 use crate::mask::MaskKind;
-use crate::numerics::reference::{decode_pwl, flash_pwl_masked, Mat};
+use crate::numerics::reference::{
+    decode_pwl, decode_pwl_partial, flash_pwl_masked, flash_pwl_partial, FlashPartial, Mat,
+};
 
 /// One manifest row.
 #[derive(Clone, Debug, PartialEq)]
@@ -330,6 +332,59 @@ impl Backend {
         }
     }
 
+    /// Execute one sequence-parallel chunk of one head (DESIGN.md §7):
+    /// the full `(seq_len, d)` Q against the `(chunk_len, d)` K/V chunk
+    /// covering global keys `[key_offset, key_offset + chunk_len)` of a
+    /// `total_keys`-key sequence, emitting the partial `(O~, m, l)`
+    /// state the gather merges in chunk order.
+    ///
+    /// The reference twin runs [`flash_pwl_partial`] tiled at the array
+    /// size — the same kernel whose single-chunk degeneration is
+    /// bitwise [`Backend::execute_head`].  The AOT artifacts emit only
+    /// normalized outputs (no partial-state signature is exported), so
+    /// the strict PJRT backend reports the gap instead of silently
+    /// merging incompatible numerics.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_head_partial(
+        &mut self,
+        seq_len: usize,
+        d: usize,
+        q: &[f32],
+        k_chunk: &[f32],
+        v_chunk: &[f32],
+        mask: MaskKind,
+        key_offset: usize,
+        total_keys: usize,
+    ) -> Result<FlashPartial, String> {
+        if k_chunk.len() % d != 0 || k_chunk.len() != v_chunk.len() || q.len() != seq_len * d {
+            return Err(format!(
+                "partial shape mismatch: q {} k {} v {} for seq {seq_len} d {d}",
+                q.len(),
+                k_chunk.len(),
+                v_chunk.len()
+            ));
+        }
+        match self {
+            Backend::Pjrt(_) => Err(format!(
+                "no partial (`fsa_attn_partial`) artifact kind is exported yet \
+                 (chunk [{key_offset}, {}) of {total_keys} keys); sequence-parallel \
+                 serving needs backend=reference (DESIGN.md §7)",
+                key_offset + k_chunk.len() / d
+            )),
+            Backend::Reference { array_size, segments } => {
+                let chunk_len = k_chunk.len() / d;
+                let qm = Mat::new(seq_len, d, q.to_vec());
+                let km = Mat::new(chunk_len, d, k_chunk.to_vec());
+                let vm = Mat::new(chunk_len, d, v_chunk.to_vec());
+                Ok(flash_pwl_partial(
+                    &qm, &km, &vm,
+                    *array_size, *array_size, *segments,
+                    mask, key_offset, total_keys,
+                ))
+            }
+        }
+    }
+
     /// Execute one decode step of one head: a single `(1, d)` query row
     /// over a `(prefix_len, d)` K/V prefix (cached pages or the
     /// host-tier fallback — numerically identical by construction).
@@ -363,6 +418,39 @@ impl Backend {
             )),
             Backend::Reference { array_size, segments } => {
                 Ok(decode_pwl(q_row, k, v, d, *array_size, *segments))
+            }
+        }
+    }
+
+    /// Execute one split-KV decode range of one head (DESIGN.md §7):
+    /// the `(1, d)` query row against a `(range_len, d)` slice of the
+    /// prefix, emitting the one-row partial the gather merges in range
+    /// order.  Same shape/backed-ness rules as
+    /// [`Backend::execute_decode_row`].
+    pub fn execute_decode_row_partial(
+        &mut self,
+        range_len: usize,
+        d: usize,
+        q_row: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<FlashPartial, String> {
+        if q_row.len() != d || k.len() != range_len * d || v.len() != k.len() {
+            return Err(format!(
+                "decode range shape mismatch: q {} k {} v {} for range {range_len} d {d}",
+                q_row.len(),
+                k.len(),
+                v.len()
+            ));
+        }
+        match self {
+            Backend::Pjrt(_) => Err(format!(
+                "no `fsa_decode` partial artifact kind is exported yet (range \
+                 {range_len}, d {d}); split-KV decode needs backend=reference \
+                 (DESIGN.md §7)"
+            )),
+            Backend::Reference { array_size, segments } => {
+                Ok(decode_pwl_partial(q_row, k, v, d, *array_size, *segments))
             }
         }
     }
@@ -461,6 +549,52 @@ mod tests {
         );
         assert_eq!(causal, want.data);
         assert_ne!(causal, got, "the mask must change the output");
+    }
+
+    #[test]
+    fn reference_backend_partials_match_the_numerics_twin() {
+        use crate::numerics::reference::{merge_partials, Exp2};
+        use crate::numerics::pwl::PwlExp2;
+        use crate::numerics::SplitMix64;
+        let cfg = AccelConfig::builtin("fsa").unwrap();
+        let mut be =
+            Backend::new(BackendKind::Reference, Path::new("/nonexistent"), &cfg).unwrap();
+        let (seq, d) = (32usize, 16usize);
+        let mut rng = SplitMix64::new(5);
+        let q = rng.normal_matrix(seq, d);
+        let k = rng.normal_matrix(seq, d);
+        let v = rng.normal_matrix(seq, d);
+        // Two chunks through the backend == the flash_pwl_partial twin,
+        // and their in-order merge == the whole-head execute path
+        // within the PWL band.
+        let p0 = be
+            .execute_head_partial(seq, d, &q, &k[..16 * d], &v[..16 * d], MaskKind::None, 0, seq)
+            .unwrap();
+        let p1 = be
+            .execute_head_partial(seq, d, &q, &k[16 * d..], &v[16 * d..], MaskKind::None, 16, seq)
+            .unwrap();
+        let want = flash_pwl_partial(
+            &Mat::new(seq, d, q.clone()),
+            &Mat::new(16, d, k[..16 * d].to_vec()),
+            &Mat::new(16, d, v[..16 * d].to_vec()),
+            cfg.array_size, cfg.array_size, cfg.pwl_segments,
+            MaskKind::None, 0, seq,
+        );
+        assert_eq!(p0, want);
+        let merged = merge_partials(&[p0, p1], &Exp2::PwlF16(PwlExp2::new(cfg.pwl_segments)));
+        let whole = be.execute_head(seq, d, &q, &k, &v, MaskKind::None).unwrap();
+        let err = crate::numerics::reference::mat_error(
+            &merged,
+            &Mat::new(seq, d, whole),
+        );
+        assert!(err.mae < 3e-2, "{err:?}");
+        // Decode range partial == the decode_pwl_partial twin.
+        let qr = rng.normal_matrix(1, d);
+        let dp = be.execute_decode_row_partial(16, d, &qr, &k[..16 * d], &v[..16 * d]).unwrap();
+        assert_eq!(dp, decode_pwl_partial(&qr, &k[..16 * d], &v[..16 * d], d, cfg.array_size, cfg.pwl_segments));
+        // Shape mismatches are reported, not panicked.
+        assert!(be.execute_head_partial(seq, d, &q, &k[..d - 1], &v[..d - 1], MaskKind::None, 0, seq).is_err());
+        assert!(be.execute_decode_row_partial(16, d, &qr, &k[..8 * d], &v[..8 * d]).is_err());
     }
 
     #[test]

@@ -229,6 +229,63 @@ pub fn masked_tile_counts(seq_len: usize, n: usize, mask: MaskKind) -> (u64, u64
     (full, partial, skipped)
 }
 
+/// Range-restricted [`masked_tile_counts`]: the tile census of one
+/// sequence-parallel K/V *chunk* covering global keys `[key_start,
+/// key_start + key_len)` (DESIGN.md §7).  Row tiles span the whole
+/// query sequence (every device computes all rows of its chunk); column
+/// tiles start at the chunk boundary (the device tiles its chunk
+/// locally, ragged final tile allowed) but coverage is classified at
+/// global key coordinates, so causal intersection and padding
+/// boundaries skip exactly the tiles the device skips.  With the whole
+/// key range and tile-aligned boundaries this reproduces
+/// [`masked_tile_counts`].
+pub fn masked_tile_counts_range(
+    seq_len: usize,
+    n: usize,
+    mask: MaskKind,
+    key_start: usize,
+    key_len: usize,
+) -> (u64, u64, u64) {
+    assert!(n >= 1 && seq_len >= 1 && key_len >= 1);
+    let t_r = seq_len.div_ceil(n);
+    let t_c = key_len.div_ceil(n);
+    let (mut full, mut partial, mut skipped) = (0u64, 0u64, 0u64);
+    for i in 0..t_r {
+        for j in 0..t_c {
+            let c0 = key_start + j * n;
+            let w = n.min(key_start + key_len - c0);
+            match mask.coverage(i * n, n, c0, w) {
+                TileCoverage::Full => full += 1,
+                TileCoverage::Partial => partial += 1,
+                TileCoverage::Empty => skipped += 1,
+            }
+        }
+    }
+    (full, partial, skipped)
+}
+
+/// Range-restricted [`masked_attention_flops`]: useful FLOPs of the
+/// valid `(query, key)` pairs whose key falls in `[key_start,
+/// key_start + key_len)` — the per-chunk share of the whole operator's
+/// work.  Chunks of a partition sum exactly to the whole-operator
+/// count (pinned by a unit test).
+pub fn masked_attention_flops_range(
+    seq_len: usize,
+    d: usize,
+    mask: MaskKind,
+    key_start: usize,
+    key_len: usize,
+) -> u64 {
+    let end = key_start + key_len;
+    let mut pairs = 0u64;
+    for i in 0..seq_len {
+        // valid_keys clamps at its `lk` argument, so evaluating it at
+        // the range end gives min(global valid prefix, range end).
+        pairs += mask.valid_keys(i, end).saturating_sub(key_start) as u64;
+    }
+    4 * pairs * d as u64
+}
+
 /// Masked attention FLOPs for one `(seq_len, d)` head: only the valid
 /// `(query, key)` pairs count as useful work (score + PV, 2 FLOPs per
 /// MAC each).  `None` recovers the paper's `4 L² d`; causal is
@@ -247,6 +304,56 @@ pub fn masked_attention_flops(seq_len: usize, d: usize, mask: MaskKind) -> u64 {
             4 * seq_len as u64 * valid.min(seq_len) as u64 * d as u64
         }
     }
+}
+
+/// Sequence-parallel chunk grid (DESIGN.md §7): split `total` tokens
+/// into `n` contiguous ranges `(start, len)`.  The chunk width is
+/// `ceil(basis / n)` — `basis == total` for prefill/stateless even
+/// splits; for decode, `basis` is the session's *prefill* length, so
+/// the first `n − 1` chunk boundaries stay fixed across decode steps
+/// (their devices' cached pages stay valid) and the final chunk absorbs
+/// every appended token (last-chunk-grows).  Trailing chunks may be
+/// empty (`len == 0`) when `total < n·width`; callers skip them.  The
+/// grid is a pure function of `(total, basis, n)` — the foundation of
+/// the placement-invariance bitwise contract.
+pub fn chunk_ranges(total: usize, basis: usize, n: usize) -> Vec<(usize, usize)> {
+    assert!(n >= 1, "need at least one chunk");
+    if n == 1 {
+        return vec![(0, total)];
+    }
+    let w = basis.div_ceil(n).max(1);
+    (0..n)
+        .map(|c| {
+            let start = (c * w).min(total);
+            let end = if c == n - 1 { total } else { ((c + 1) * w).min(total) };
+            (start, end - start)
+        })
+        .collect()
+}
+
+/// The *live* (dispatchable) entries of a chunk grid: `(chunk, (start,
+/// len))` for every [`chunk_ranges`] entry that has tokens and is not
+/// fully masked for every one of the `rows` query rows
+/// ([`TileCoverage::Empty`]) — a dead chunk's partial would be the
+/// merge identity, so it is neither dispatched (coordinator) nor
+/// priced (perfmodel); this single helper keeps the two in lockstep.
+/// Pass [`MaskKind::None`] for decode steps (they carry no mask).  May
+/// return an empty vec (a fully-masked operator); callers fall back to
+/// one legacy whole-sequence shard.
+pub fn live_chunk_ranges(
+    rows: usize,
+    total: usize,
+    basis: usize,
+    n: usize,
+    mask: MaskKind,
+) -> Vec<(usize, (usize, usize))> {
+    chunk_ranges(total, basis, n)
+        .into_iter()
+        .enumerate()
+        .filter(|&(_, (start, len))| {
+            len > 0 && mask.coverage(0, rows.max(1), start, len) != TileCoverage::Empty
+        })
+        .collect()
 }
 
 /// FLOPs of one decode step per head: a single query row over an
@@ -406,5 +513,107 @@ mod tests {
     #[should_panic(expected = "multiple")]
     fn rejects_ragged_seq() {
         fsa_total_cycles(100, 128, Variant::DualPath, 8);
+    }
+
+    #[test]
+    fn chunk_grid_partitions_and_grows_at_the_tail() {
+        // Even split when basis == total.
+        assert_eq!(chunk_ranges(1024, 1024, 4), vec![(0, 256), (256, 256), (512, 256), (768, 256)]);
+        assert_eq!(chunk_ranges(1024, 1024, 1), vec![(0, 1024)]);
+        // Decode: boundaries fixed at the prefill basis, the last chunk
+        // absorbs appended tokens.
+        assert_eq!(chunk_ranges(1030, 1024, 4), vec![(0, 256), (256, 256), (512, 256), (768, 262)]);
+        // Ragged basis rounds the width up; trailing chunks may start
+        // empty and fill in as the sequence grows.
+        assert_eq!(chunk_ranges(5, 5, 4), vec![(0, 2), (2, 2), (4, 1), (5, 0)]);
+        assert_eq!(chunk_ranges(6, 5, 4), vec![(0, 2), (2, 2), (4, 2), (6, 0)]);
+        assert_eq!(chunk_ranges(7, 5, 4), vec![(0, 2), (2, 2), (4, 2), (6, 1)]);
+        // Partition property: concatenated ranges tile [0, total)
+        // exactly, for growing totals over a fixed basis.
+        for total in [5usize, 9, 16, 40] {
+            let mut expect = 0;
+            for (start, len) in chunk_ranges(total, 9, 3) {
+                assert_eq!(start, expect);
+                expect += len;
+            }
+            assert_eq!(expect, total);
+        }
+        // Liveness: empty chunks drop, a padding mask's dead tail is
+        // never live, and a fully-masked operator yields no live chunks
+        // (callers fall back to one legacy shard).
+        assert_eq!(
+            live_chunk_ranges(5, 5, 5, 4, MaskKind::None),
+            vec![(0, (0, 2)), (1, (2, 2)), (2, (4, 1))]
+        );
+        assert_eq!(
+            live_chunk_ranges(64, 64, 64, 4, MaskKind::PaddingKeys { valid: 20 }),
+            vec![(0, (0, 16)), (1, (16, 16))]
+        );
+        assert!(live_chunk_ranges(64, 64, 64, 4, MaskKind::PaddingKeys { valid: 0 }).is_empty());
+        assert_eq!(
+            live_chunk_ranges(64, 64, 64, 1, MaskKind::Causal),
+            vec![(0, (0, 64))]
+        );
+    }
+
+    #[test]
+    fn range_tile_census_partitions_the_square() {
+        // A tile-aligned partition of the key range sums to the whole
+        // census for every mask kind.
+        let (l, n) = (1024usize, 128usize);
+        for mask in [
+            MaskKind::None,
+            MaskKind::Causal,
+            MaskKind::PaddingKeys { valid: 300 },
+        ] {
+            let whole = masked_tile_counts(l, n, mask);
+            let mut sum = (0u64, 0u64, 0u64);
+            for c in 0..4 {
+                let (f, p, s) = masked_tile_counts_range(l, n, mask, c * 256, 256);
+                sum = (sum.0 + f, sum.1 + p, sum.2 + s);
+            }
+            assert_eq!(sum, whole, "{mask:?}");
+        }
+        // Whole-range call reproduces the square census directly.
+        assert_eq!(
+            masked_tile_counts_range(1024, 128, MaskKind::Causal, 0, 1024),
+            masked_tile_counts(1024, 128, MaskKind::Causal)
+        );
+        // Ragged chunk boundaries: a 100-key chunk is one ragged column
+        // tile per row block; a causal second chunk skips its upper
+        // (row-tile-0) tile and runs its diagonal tile with the mask
+        // wave.
+        assert_eq!(
+            masked_tile_counts_range(256, 128, MaskKind::None, 300, 100),
+            (2, 0, 0)
+        );
+        assert_eq!(
+            masked_tile_counts_range(256, 128, MaskKind::Causal, 128, 128),
+            (0, 1, 1)
+        );
+    }
+
+    #[test]
+    fn range_flops_partition_the_whole_operator() {
+        let (l, d) = (512usize, 64usize);
+        for mask in [
+            MaskKind::None,
+            MaskKind::Causal,
+            MaskKind::PaddingKeys { valid: 300 },
+        ] {
+            let whole = masked_attention_flops(l, d, mask);
+            // Uneven partition (not tile aligned): still sums exactly.
+            let ranges = [(0usize, 100usize), (100, 200), (300, 212)];
+            let sum: u64 = ranges
+                .iter()
+                .map(|&(s, len)| masked_attention_flops_range(l, d, mask, s, len))
+                .sum();
+            assert_eq!(sum, whole, "{mask:?}");
+        }
+        // Causal chunk beyond the last row's prefix has zero useful work.
+        assert_eq!(
+            masked_attention_flops_range(128, 16, MaskKind::Causal, 128, 64),
+            0
+        );
     }
 }

@@ -1,0 +1,324 @@
+//! End-to-end sequence-parallel serving tests (DESIGN.md §7) on the
+//! reference backend: K/V split into tile-aligned chunks across the
+//! pool, per-chunk partials merged exactly at gather.
+//!
+//! The bitwise contract under test: the gathered output is a pure
+//! function of the chunk grid — **invariant to the device count and to
+//! which device served which chunk** — and equals the host-side
+//! chunked oracle bit for bit; `seq_shards = 1` stays bitwise the
+//! legacy path.  (Across *different* shard counts the result is
+//! mathematically equal but, like any FP reassociation, not bitwise —
+//! parity with dense SDPA is asserted instead.)  No PJRT and no
+//! artifacts, so these run in every environment.
+
+use fsa::config::{BackendKind, RunConfig};
+use fsa::coordinator::request::{AttentionRequest, AttentionResponse};
+use fsa::coordinator::Coordinator;
+use fsa::mask::MaskKind;
+use fsa::numerics::pwl::PwlExp2;
+use fsa::numerics::reference::{
+    decode_pwl_partial, flash_pwl_masked, flash_pwl_partial, mat_error, merge_partials, sdpa_masked,
+    Exp2, FlashPartial, Mat,
+};
+use fsa::numerics::SplitMix64;
+use fsa::schedule::live_chunk_ranges;
+
+/// Array dim / PWL segments of the builtin `fsa` device config the
+/// workers run: the oracle must tile and merge the same way.
+const ARRAY: usize = 128;
+const SEGMENTS: usize = 8;
+
+fn cfg(devices: usize, seq_shards: usize) -> RunConfig {
+    RunConfig {
+        devices,
+        max_batch: 8,
+        batch_timeout_cycles: 50_000,
+        queue_depth: 64,
+        backend: BackendKind::Reference,
+        num_heads: 4,
+        num_kv_heads: 2,
+        seq_shards,
+        ..RunConfig::default()
+    }
+}
+
+fn gqa_req(
+    rng: &mut SplitMix64,
+    id: u64,
+    seq: usize,
+    d: usize,
+    heads: usize,
+    kv: usize,
+) -> AttentionRequest {
+    AttentionRequest::gqa(
+        id,
+        seq,
+        d,
+        heads,
+        kv,
+        rng.normal_matrix(heads * seq, d),
+        rng.normal_matrix(kv * seq, d),
+        rng.normal_matrix(kv * seq, d),
+    )
+}
+
+/// Host-side oracle of one head served at `seq_shards`: per-chunk
+/// partials over the same grid the batcher builds, merged in chunk
+/// order with the same PWL exp2 — what the pool must reproduce bitwise.
+fn oracle_head(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    seq: usize,
+    d: usize,
+    mask: MaskKind,
+    seq_shards: usize,
+) -> Vec<f32> {
+    if seq_shards == 1 {
+        let qm = Mat::new(seq, d, q.to_vec());
+        let km = Mat::new(seq, d, k.to_vec());
+        let vm = Mat::new(seq, d, v.to_vec());
+        return flash_pwl_masked(&qm, &km, &vm, ARRAY, ARRAY, SEGMENTS, mask).data;
+    }
+    let parts: Vec<FlashPartial> = live_chunk_ranges(seq, seq, seq, seq_shards, mask)
+        .into_iter()
+        .map(|(_, (start, len))| {
+            flash_pwl_partial(
+                &Mat::new(seq, d, q.to_vec()),
+                &Mat::new(len, d, k[start * d..(start + len) * d].to_vec()),
+                &Mat::new(len, d, v[start * d..(start + len) * d].to_vec()),
+                ARRAY,
+                ARRAY,
+                SEGMENTS,
+                mask,
+                start,
+                seq,
+            )
+        })
+        .collect();
+    merge_partials(&parts, &Exp2::PwlF16(PwlExp2::new(SEGMENTS))).data
+}
+
+fn serve_one(devices: usize, seq_shards: usize, req: AttentionRequest) -> AttentionResponse {
+    let coord = Coordinator::start(cfg(devices, seq_shards)).unwrap();
+    let resp = coord.submit_wait(req).unwrap();
+    coord.shutdown();
+    resp
+}
+
+/// Acceptance: seq_shards ∈ {2, 4} serving is bitwise identical to
+/// single-device serving (same shard count — the chunk grid, not the
+/// placement, defines the numerics) for {none, causal} across three
+/// shapes, and bitwise equal to the host-side chunked oracle; the
+/// merged result stays within the Table-2 band of masked dense SDPA.
+#[test]
+fn seq_sharded_serving_is_bitwise_placement_invariant() {
+    let mut rng = SplitMix64::new(81);
+    for &(seq, d, heads, kv) in &[(64usize, 16usize, 4usize, 2usize), (96, 32, 2, 1), (40, 16, 4, 4)]
+    {
+        for mask in [MaskKind::None, MaskKind::Causal] {
+            let req = gqa_req(&mut rng, 1, seq, d, heads, kv).with_mask(mask);
+            for shards in [2usize, 4] {
+                let single = serve_one(1, shards, req.clone());
+                let multi = serve_one(3, shards, req.clone());
+                let out1 = single.output.expect("1-device serving succeeds");
+                let out3 = multi.output.expect("3-device serving succeeds");
+                assert_eq!(
+                    out1, out3,
+                    "L={seq} d={d} {mask:?} shards={shards}: output depends on placement"
+                );
+                assert_eq!(multi.seq_chunks, shards.min(seq));
+                assert_eq!(multi.shards, heads * multi.seq_chunks);
+                assert_eq!(multi.merge_steps, heads * (multi.seq_chunks - 1));
+                assert!(
+                    multi.devices_used.len() > 1,
+                    "chunks must actually scatter across the pool"
+                );
+
+                for h in 0..heads {
+                    let kvh = h / (heads / kv);
+                    let stride = seq * d;
+                    let want = oracle_head(
+                        &req.q[h * stride..(h + 1) * stride],
+                        &req.k[kvh * stride..(kvh + 1) * stride],
+                        &req.v[kvh * stride..(kvh + 1) * stride],
+                        seq,
+                        d,
+                        mask,
+                        shards,
+                    );
+                    assert_eq!(
+                        &out1[h * stride..(h + 1) * stride],
+                        &want[..],
+                        "L={seq} {mask:?} shards={shards} head {h}: diverged from the oracle"
+                    );
+                    // Numerics parity: the merged result is the same
+                    // attention, inside the PWL error band.
+                    let dense = sdpa_masked(
+                        &Mat::new(seq, d, req.q[h * stride..(h + 1) * stride].to_vec()),
+                        &Mat::new(seq, d, req.k[kvh * stride..(kvh + 1) * stride].to_vec()),
+                        &Mat::new(seq, d, req.v[kvh * stride..(kvh + 1) * stride].to_vec()),
+                        mask,
+                    );
+                    let got = Mat::new(seq, d, want);
+                    let err = mat_error(&got, &dense);
+                    assert!(err.mae < 3e-2, "head {h}: {err:?}");
+                }
+            }
+            // seq_shards = 1 stays bitwise the legacy whole-head path.
+            let legacy = serve_one(2, 1, req.clone()).output.unwrap();
+            let h0 = oracle_head(
+                &req.q[..seq * d],
+                &req.k[..seq * d],
+                &req.v[..seq * d],
+                seq,
+                d,
+                mask,
+                1,
+            );
+            assert_eq!(&legacy[..seq * d], &h0[..]);
+        }
+    }
+}
+
+/// A key-padding mask with a dead tail: fully-masked chunks are never
+/// dispatched, the live chunks still produce the exact (bitwise) padded
+/// result.
+#[test]
+fn dead_chunks_are_skipped_and_padding_stays_exact() {
+    let (seq, d, heads, kv) = (64usize, 16usize, 4usize, 2usize);
+    let mut rng = SplitMix64::new(82);
+    // valid=20 kills chunks [32,48) and [48,64) of a 4-way split.
+    let req =
+        gqa_req(&mut rng, 1, seq, d, heads, kv).with_mask(MaskKind::PaddingKeys { valid: 20 });
+    let resp = serve_one(2, 4, req.clone());
+    assert_eq!(resp.seq_chunks, 2, "two live chunks out of four");
+    assert_eq!(resp.shards, heads * 2);
+    let out = resp.output.unwrap();
+    for h in 0..heads {
+        let kvh = h / (heads / kv);
+        let stride = seq * d;
+        let want = oracle_head(
+            &req.q[h * stride..(h + 1) * stride],
+            &req.k[kvh * stride..(kvh + 1) * stride],
+            &req.v[kvh * stride..(kvh + 1) * stride],
+            seq,
+            d,
+            MaskKind::PaddingKeys { valid: 20 },
+            4,
+        );
+        assert_eq!(&out[h * stride..(h + 1) * stride], &want[..], "head {h}");
+    }
+
+    // A fully-masked operator (valid = 0) degenerates to one legacy
+    // shard per head and the defined zero output.
+    let req = gqa_req(&mut rng, 2, seq, d, heads, kv).with_mask(MaskKind::PaddingKeys { valid: 0 });
+    let resp = serve_one(2, 4, req);
+    assert_eq!(resp.seq_chunks, 1);
+    assert!(resp.output.unwrap().iter().all(|&x| x == 0.0));
+}
+
+/// Acceptance: a causal prefill → split-KV decode session.  Every
+/// decode step runs one partial row per chunk device over the session's
+/// pages (the prefill-fixed chunk grid, last chunk growing) and the
+/// merged step output is bitwise invariant to the pool size — and
+/// bitwise equal to the host-side split-KV oracle.
+#[test]
+fn causal_prefill_split_kv_decode_is_bitwise_placement_invariant() {
+    let (seq, d, heads, kv, steps, shards) = (32usize, 16usize, 4usize, 2usize, 5usize, 2usize);
+    let run = |devices: usize| -> (Vec<Vec<f32>>, usize, usize) {
+        let coord = Coordinator::start(cfg(devices, shards)).unwrap();
+        let mut rng = SplitMix64::new(83); // same tensors per pool size
+        let prefill = AttentionRequest::prefill(
+            1,
+            9,
+            seq,
+            d,
+            heads,
+            kv,
+            rng.normal_matrix(heads * seq, d),
+            rng.normal_matrix(kv * seq, d),
+            rng.normal_matrix(kv * seq, d),
+        )
+        .with_mask(MaskKind::Causal);
+        let mut outs = vec![coord.submit_wait(prefill).unwrap().output.expect("prefill")];
+        let (mut hits, mut misses) = (0usize, 0usize);
+        for step in 0..steps as u64 {
+            let resp = coord
+                .submit_wait(AttentionRequest::decode(
+                    100 + step,
+                    9,
+                    step,
+                    d,
+                    heads,
+                    kv,
+                    rng.normal_matrix(heads, d),
+                    rng.normal_matrix(kv, d),
+                    rng.normal_matrix(kv, d),
+                ))
+                .unwrap();
+            hits += resp.kv_hits;
+            misses += resp.kv_misses;
+            assert_eq!(resp.seq_chunks, shards, "split-KV decode runs one row per chunk");
+            outs.push(resp.output.expect("decode step"));
+        }
+        coord.submit_wait(AttentionRequest::close(999, 9)).unwrap();
+        coord.shutdown();
+        (outs, hits, misses)
+    };
+
+    let (one, hits1, _) = run(1);
+    let (two, hits2, _) = run(2);
+    assert_eq!(one, two, "decode outputs depend on the pool size");
+    // The per-chunk page streams serve most shards from cache.
+    assert!(hits1 > 0 && hits2 > 0, "split-KV decode must hit its chunk pages");
+
+    // Host-side split-KV oracle: client mirror of the K/V history,
+    // ranges on the prefill basis, one partial per range, merged in
+    // range order.
+    let mut rng = SplitMix64::new(83);
+    let mut kh: Vec<Vec<f32>> = vec![Vec::new(); kv];
+    let mut vh: Vec<Vec<f32>> = vec![Vec::new(); kv];
+    // Mirror the prefill draws in order (q unused by the decode oracle).
+    let _q = rng.normal_matrix(heads * seq, d);
+    let k = rng.normal_matrix(kv * seq, d);
+    let v = rng.normal_matrix(kv * seq, d);
+    for h in 0..kv {
+        kh[h].extend_from_slice(&k[h * seq * d..(h + 1) * seq * d]);
+        vh[h].extend_from_slice(&v[h * seq * d..(h + 1) * seq * d]);
+    }
+    let exp2 = Exp2::PwlF16(PwlExp2::new(SEGMENTS));
+    for (step, got) in one.iter().skip(1).enumerate() {
+        let qs = rng.normal_matrix(heads, d);
+        let ks = rng.normal_matrix(kv, d);
+        let vs = rng.normal_matrix(kv, d);
+        for h in 0..kv {
+            kh[h].extend_from_slice(&ks[h * d..(h + 1) * d]);
+            vh[h].extend_from_slice(&vs[h * d..(h + 1) * d]);
+        }
+        let prefix = seq + 1 + step;
+        for h in 0..heads {
+            let kvh = h / (heads / kv);
+            let parts: Vec<FlashPartial> =
+                live_chunk_ranges(1, prefix, seq, shards, MaskKind::None)
+                    .into_iter()
+                    .map(|(_, (start, len))| {
+                        decode_pwl_partial(
+                            &qs[h * d..(h + 1) * d],
+                            &kh[kvh][start * d..(start + len) * d],
+                            &vh[kvh][start * d..(start + len) * d],
+                            d,
+                            ARRAY,
+                            SEGMENTS,
+                        )
+                    })
+                    .collect();
+            let want = merge_partials(&parts, &exp2);
+            assert_eq!(
+                &got[h * d..(h + 1) * d],
+                &want.data[..],
+                "step {step} head {h}: diverged from the split-KV oracle"
+            );
+        }
+    }
+}

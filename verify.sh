@@ -1,8 +1,10 @@
 #!/bin/sh
 # Tier-1 verify entrypoint (ROADMAP.md): release build, tests, rustdoc.
 #
-# Runs the same recipe the driver and CI use:
+# Runs the same recipe the driver and CI (.github/workflows/ci.yml)
+# use:
 #   cargo build --release && cargo test -q && cargo doc --no-deps
+# plus clippy and `cargo fmt --check` when those tools are installed.
 #
 # The rustdoc step is held to zero warnings (satellite requirement:
 # the public API docs must stay clean).
@@ -35,6 +37,14 @@ if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy -- -D warnings
 else
     echo "== cargo clippy not installed; skipping lint =="
+fi
+
+# Format check when rustfmt is installed (mirrors the CI fmt gate).
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "== rustfmt not installed; skipping format check =="
 fi
 
 # Optional stage: every bench target at smoke iterations (exit 0 check).
