@@ -8,7 +8,7 @@ verify:
 
 # Every bench target at minimal iterations (FSA_BENCH_SMOKE shrinks
 # sweeps/budgets), asserting exit 0.  Optional verify stage: VERIFY_BENCH=1.
-BENCHES = ablation causal cycles decode fig1 fig11 fig12 hotpath longcontext multihead table2 table3
+BENCHES = ablation causal cycles decode fig1 fig11 fig12 hotpath longcontext multihead simcycles table2 table3
 bench-smoke:
 	@for b in $(BENCHES); do \
 		echo "== cargo bench --bench $$b (smoke) =="; \

@@ -20,7 +20,10 @@
 //! Results are recorded in EXPERIMENTS.md.
 //!
 //!     cargo run --release --example serve_attention -- \
-//!         [--devices 2 --heads 8 --kv-heads 2 --backend auto --mask none|causal]
+//!         [--devices 2 --heads 8 --kv-heads 2 --mask none|causal]
+//!         [--backend auto|reference|sim|pjrt]   (sim = the cycle-accurate
+//!          machine, bitwise vs reference, measured-cycle pricing — slow at
+//!          the default 128-array; see `fsa serve --array-size`)
 
 use std::time::Instant;
 

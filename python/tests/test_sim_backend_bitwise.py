@@ -1,0 +1,419 @@
+"""Bitwise contract of the `backend=sim` serving path (DESIGN.md section 8).
+
+Operation-level float32/float16 mirror of BOTH sides of the Rust claim:
+
+  * `ref_partial` mirrors `numerics/reference.rs::flash_forward_partial`
+    with PWL-f16 exp2 and fp16 operand quantization (the reference
+    backend's kernel, ragged tiles + masks at global key coordinates);
+  * `sim_partial` mirrors the arithmetic the cycle simulator performs
+    when executing `kernel::flash_chunk_program` on `sim::Machine` with
+    the section-8 mask wave: K/V/Q zero-padded to whole N x N tiles, a
+    per-column CMP lane boundary (`MaskBound` + the AttnScore mask
+    flag) that excludes masked lanes from the rowmax and parks them as
+    zero via the PE masked latch, rowsum/PV accumulating the zeroed
+    lanes, and the accumulator's `b = exp2(scale * (old_m - new_m))`
+    rescale (b = 0 on `first`).
+
+The test asserts the two produce BITWISE-identical outputs (u32 bit
+patterns) over shapes x masks x chunk offsets, including the br = 1
+decode degeneration and the unnormalized partial (acc, m, l) state the
+sequence-parallel gather merges.  This is the machine-checkable core of
+the PR's acceptance criterion (`backend=sim` e2e outputs bitwise-equal
+to `backend=reference`); the Rust e2e tests pin the same claim through
+the coordinator.
+
+Run directly (no pytest needed):  python3 python/tests/test_sim_backend_bitwise.py
+"""
+
+import math
+
+import numpy as np
+
+F32 = np.float32
+LOG2E = 1.4426950408889634
+NEG_INF = F32(-1e30)
+
+
+# ----------------------------------------------------------------------
+# fp16 helpers (mirror rust/src/numerics/f16.rs)
+# ----------------------------------------------------------------------
+
+def f16_round(x):
+    """F16::from_f32().to_f32(): IEEE RNE, NO subnormal flush."""
+    return np.asarray(x, F32).astype(np.float16).astype(F32)
+
+
+def q16(x):
+    """quantize_ftz_f32: RNE + flush-to-zero on f16 subnormals (sign kept)."""
+    h = np.asarray(x, F32).astype(np.float16)
+    sub = (h != 0) & (np.abs(h.astype(F32)) < F32(2.0 ** -14))
+    h = np.where(sub, np.copysign(np.float16(0.0), h), h)
+    return h.astype(F32)
+
+
+# ----------------------------------------------------------------------
+# PWL exp2 (mirror rust/src/numerics/pwl.rs)
+# ----------------------------------------------------------------------
+
+class Pwl:
+    def __init__(self, segments=8):
+        self.s = segments
+        self.slopes, self.intercepts = [], []
+        for k in range(segments):
+            b = -k / segments
+            a = -(k + 1) / segments
+            slope = (2.0 ** b - 2.0 ** a) / (b - a)
+            self.slopes.append(slope)
+            self.intercepts.append(2.0 ** a - slope * a)
+
+    def segment(self, xf):
+        k = math.floor(-float(xf) * self.s)
+        return min(max(k, 0), self.s - 1)
+
+    def eval_f16_mac(self, x):
+        """Reference evaluator (f16_round, no FTZ on xf/frac)."""
+        x = F32(x)
+        xi = F32(np.ceil(x))
+        xf = f16_round(x - xi)
+        k = self.segment(xf)
+        slope = f16_round(F32(self.slopes[k]))
+        intercept = f16_round(F32(self.intercepts[k]))
+        frac = f16_round(F32(slope * xf) + intercept)
+        return F32(frac * F32(np.exp2(F32(np.clip(xi, -126.0, 127.0)))))
+
+    def sim_pe(self, x):
+        """The PE Split-unit path (array.rs, q_res = quantize_ftz):
+        res = q16(frac * 2^xi) with xf/frac through q16."""
+        x = F32(x)
+        xi = F32(np.ceil(x))
+        xf = q16(x - xi)
+        k = self.segment(xf)
+        slope = q16(F32(self.slopes[k]))        # injected operand, quantized
+        intercept = q16(F32(self.intercepts[k]))
+        frac = q16(F32(slope * xf) + intercept)
+        return q16(F32(frac * F32(np.exp2(F32(np.clip(xi, -126.0, 127.0))))))
+
+
+PWL = Pwl(8)
+
+
+def valid_keys(mask, i, lk):
+    kind, arg = mask
+    if kind == "none":
+        return lk
+    if kind == "causal":
+        return min(i + 1, lk)
+    return min(arg, lk)  # padding
+
+
+# ----------------------------------------------------------------------
+# Reference mirror: flash_forward_partial (PwlF16 + F16F32, ragged tiles)
+# ----------------------------------------------------------------------
+
+def ref_partial(q, k, v, br, bc, mask, key_offset, total_keys):
+    l_rows, d = q.shape
+    lk = k.shape[0]
+    scale = F32(LOG2E / math.sqrt(d))
+    qq, kq, vq = q16(q), q16(k), q16(v)
+    m = np.full(l_rows, NEG_INF, F32)
+    lsum = np.zeros(l_rows, F32)
+    acc = np.zeros((l_rows, d), F32)
+
+    q0 = 0
+    while q0 < l_rows:
+        bre = min(br, l_rows - q0)
+        k0 = 0
+        while k0 < lk:
+            bce = min(bc, lk - k0)
+            # tile-skipping: coverage at global key coords
+            any_live = any(
+                valid_keys(mask, q0 + r, total_keys) - (key_offset + k0) > 0
+                for r in range(bre)
+            )
+            if not any_live:
+                k0 += bce
+                continue
+            p16 = np.zeros((bre, bce), F32)
+            bvec = np.zeros(bre, F32)
+            touched = np.zeros(bre, bool)
+            for r in range(bre):
+                vc = min(max(valid_keys(mask, q0 + r, total_keys) - (key_offset + k0), 0), bce)
+                if vc == 0:
+                    continue
+                touched[r] = True
+                s = np.zeros(vc, F32)
+                for c in range(vc):
+                    ps = F32(0.0)
+                    for kk in reversed(range(d)):
+                        ps = F32(ps + F32(qq[q0 + r, kk] * kq[k0 + c, kk]))
+                    s[c] = ps
+                s = q16(s)
+                local_m = s.max()
+                new_m = max(m[q0 + r], local_m)
+                b = PWL.eval_f16_mac(F32(scale * F32(m[q0 + r] - new_m)))
+                local_l = F32(0.0)
+                for c in range(vc):
+                    nv = q16(F32(s[c] - new_m))
+                    pv = PWL.eval_f16_mac(q16(F32(scale * nv)))
+                    p16[r, c] = q16(pv)
+                    local_l = F32(local_l + p16[r, c])
+                for c in range(vc, bce):
+                    p16[r, c] = F32(0.0)
+                    local_l = F32(local_l + p16[r, c])
+                lsum[q0 + r] = F32(F32(lsum[q0 + r] * b) + local_l)
+                m[q0 + r] = new_m
+                bvec[r] = b
+            for r in range(bre):
+                if not touched[r]:
+                    continue
+                acc[q0 + r, :] = F32(acc[q0 + r, :] * bvec[r])
+                for h in range(d):
+                    ps = F32(0.0)
+                    for c in range(bce):
+                        ps = F32(ps + F32(p16[r, c] * vq[k0 + c, h]))
+                    acc[q0 + r, h] = F32(acc[q0 + r, h] + ps)
+            k0 += bce
+        q0 += bre
+    return acc, m, lsum
+
+
+def ref_finalize(acc, lsum):
+    out = np.zeros_like(acc)
+    for r in range(acc.shape[0]):
+        if lsum[r] == 0.0:
+            continue
+        inv = F32(F32(1.0) / lsum[r])
+        out[r, :] = F32(acc[r, :] * inv)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Sim mirror: the arithmetic of flash_chunk_program on sim::Machine
+# ----------------------------------------------------------------------
+
+def pad_to(mat, rows, cols):
+    out = np.zeros((rows, cols), F32)
+    out[: mat.shape[0], : mat.shape[1]] = mat
+    return out
+
+
+def sim_partial(q, k, v, n, mask, key_offset, total_keys, scale_dim):
+    """One head on the padded array: q (valid_q, d) etc; returns the
+    (padded) acc/m/l arrays the caller slices."""
+    valid_q, d = q.shape
+    valid_k = k.shape[0]
+    lq = -(-valid_q // n) * n
+    lkp = -(-valid_k // n) * n
+    qp = q16(pad_to(q, lq, n))   # DMA-load quantization
+    kp = q16(pad_to(k, lkp, n))
+    vp = q16(pad_to(v, lkp, n))
+    scale = F32(LOG2E / math.sqrt(scale_dim))
+
+    acc = np.zeros((lq, n), F32)   # O rows (de-transposed view)
+    mcol = np.full(lq, NEG_INF, F32)
+    lvec = np.zeros(lq, F32)
+
+    for blk in range(lq // n):
+        gq0 = blk * n
+        stat = qp[gq0 : gq0 + n, :]          # stationary Q tile
+        run_m = np.full(n, NEG_INF, F32)     # CMP new_m after reset
+        first = True
+        rows_real = min(n, valid_q - gq0)
+        for j in range(lkp // n):
+            lk0 = j * n
+            w = min(n, valid_k - lk0)
+            if w <= 0:
+                continue
+            bound = np.array(
+                [
+                    min(max(valid_keys(mask, gq0 + mm, total_keys) - (key_offset + lk0), 0), w)
+                    for mm in range(n)
+                ]
+            )
+            if not any(bound[mm] > 0 for mm in range(rows_real)):
+                continue  # tile never issued
+            kt = kp[lk0 : lk0 + n, :]
+            vt = vp[lk0 : lk0 + n, :]
+            # first matmul: psum over kdim descending (upward path)
+            ps = np.zeros((n, n), F32)  # ps[m, nn]
+            for kk in reversed(range(n)):
+                ps = F32(ps + F32(stat[:, kk][:, None] * kt[:, kk][None, :]))
+            s_q = q16(ps)  # CMP fp16 register quantization
+            lane_ok = np.arange(n)[None, :] < bound[:, None]  # [m, nn]
+            # CMP rowmax over valid lanes only
+            masked_s = np.where(lane_ok, s_q, NEG_INF)
+            tile_max = masked_s.max(axis=1)
+            new_m = np.maximum(run_m, tile_max)
+            # park: masked lanes park 0 and latch masked
+            res = np.where(lane_ok, s_q, F32(0.0))
+            # elementwise chain skips masked PEs
+            res = np.where(lane_ok, q16(F32(res + (-new_m)[:, None])), res)
+            res = np.where(lane_ok, q16(F32(res * scale)), res)
+            pwl_res = np.zeros_like(res)
+            for mm in range(n):
+                for nn in range(int(bound[mm])):
+                    pwl_res[mm, nn] = PWL.sim_pe(res[mm, nn])
+            res = np.where(lane_ok, pwl_res, res)
+            # rowsum wave: ascending over nn, masked lanes contribute 0.0
+            local_l = np.zeros(n, F32)
+            for nn in range(n):
+                local_l = F32(local_l + res[:, nn])
+            # accumulator: a = old_m - new_m, b = eval(scale * a); first -> 0
+            if first:
+                b = np.zeros(n, F32)
+            else:
+                a = F32(run_m - new_m)
+                b = np.array([PWL.eval_f16_mac(F32(scale * a[mm])) for mm in range(n)], F32)
+            lvec[gq0 : gq0 + n] = F32(F32(lvec[gq0 : gq0 + n] * b) + local_l)
+            # PV: psums ascending over nn; masked lanes ride P = 0
+            ps_o = np.zeros((n, n), F32)  # [m, h]
+            for nn in range(n):
+                ps_o = F32(ps_o + F32(res[:, nn][:, None] * vt[nn, :][None, :]))
+            acc[gq0 : gq0 + n, :] = F32(
+                F32(acc[gq0 : gq0 + n, :] * b[:, None]) + ps_o
+            )
+            run_m = new_m
+            first = False
+        mcol[gq0 : gq0 + n] = run_m
+    return acc, mcol, lvec
+
+
+def sim_finalize(acc, lvec):
+    """Epilogue: Reciprocal (1/0 flushed to 0, the defined-zero rule for
+    fully-masked rows) + AttnLseNorm."""
+    inv = np.where(lvec == 0.0, F32(0.0), F32(F32(1.0) / lvec))
+    return F32(acc * inv[:, None])
+
+
+# ----------------------------------------------------------------------
+# The assertions
+# ----------------------------------------------------------------------
+
+def bits(x):
+    return np.ascontiguousarray(np.asarray(x, F32)).view(np.uint32)
+
+
+def assert_bitwise(a, b, what):
+    if not np.array_equal(bits(a), bits(b)):
+        diff = np.argwhere(bits(a) != bits(b))
+        raise AssertionError(
+            f"{what}: {len(diff)} of {a.size} elements differ; first at "
+            f"{diff[0]}: {np.asarray(a).flat[np.ravel_multi_index(tuple(diff[0]), np.asarray(a).shape)]} "
+            f"vs {np.asarray(b).flat[np.ravel_multi_index(tuple(diff[0]), np.asarray(b).shape)]}"
+        )
+
+
+def check_case(rng, l_rows, d, n, mask, key_offset=0, total=None, chunk=None):
+    total = total if total is not None else l_rows
+    q = rng.standard_normal((l_rows, d)).astype(F32)
+    lk = chunk if chunk is not None else total - key_offset
+    k = rng.standard_normal((lk, d)).astype(F32)
+    v = rng.standard_normal((lk, d)).astype(F32)
+
+    r_acc, r_m, r_l = ref_partial(q, k, v, n, n, mask, key_offset, total)
+    s_acc, s_m, s_l = sim_partial(q, k, v, n, mask, key_offset, total, d)
+    what = f"L={l_rows} d={d} n={n} mask={mask} off={key_offset} lk={lk}"
+    assert_bitwise(s_acc[:l_rows, :d], r_acc, f"{what}: partial acc")
+    assert_bitwise(s_m[:l_rows], r_m, f"{what}: partial m")
+    assert_bitwise(s_l[:l_rows], r_l, f"{what}: partial l")
+    out_ref = ref_finalize(r_acc, r_l)
+    out_sim = sim_finalize(s_acc, s_l)[:l_rows, :d]
+    assert_bitwise(out_sim, out_ref, f"{what}: normalized output")
+    print(f"  ok  {what}")
+
+
+def test_exp2_at_zero_is_one():
+    # The b = 1.0 identity for columns masked in one tile but live in
+    # another: eval_f16_mac(0) must be exactly 1.0.
+    assert float(PWL.eval_f16_mac(F32(0.0))) == 1.0
+    assert float(PWL.sim_pe(F32(0.0))) == 1.0
+
+
+def test_sim_bitwise_matches_reference():
+    rng = np.random.default_rng(0xF5A)
+    # Whole-head shapes: exact tiles, ragged queries/keys, padded d < n.
+    check_case(rng, 64, 32, 32, ("none", 0))
+    check_case(rng, 64, 32, 32, ("causal", 0))
+    check_case(rng, 64, 32, 32, ("padding", 40))
+    check_case(rng, 40, 16, 32, ("none", 0))       # ragged rows+cols, d < n
+    check_case(rng, 40, 16, 32, ("causal", 0))
+    check_case(rng, 100, 32, 32, ("padding", 70))  # boundary mid-tile
+    check_case(rng, 33, 8, 16, ("causal", 0))      # heavy padding
+    # Sequence-parallel chunks at global coordinates (incl. a chunk the
+    # causal mask partially kills: rows 0..31 see none of keys 32..63).
+    check_case(rng, 64, 32, 32, ("none", 0), key_offset=32, total=64, chunk=32)
+    check_case(rng, 64, 32, 32, ("causal", 0), key_offset=32, total=64, chunk=32)
+    check_case(rng, 64, 32, 32, ("padding", 40), key_offset=32, total=64, chunk=32)
+    check_case(rng, 64, 16, 32, ("causal", 0), key_offset=16, total=64, chunk=48)
+    # br = 1 decode rows (ragged prefix; the decode program shape).
+    check_case(rng, 1, 32, 32, ("none", 0), total=37, chunk=37)
+    check_case(rng, 1, 16, 32, ("none", 0), total=64, chunk=64)
+    # split-KV decode range
+    check_case(rng, 1, 32, 32, ("none", 0), key_offset=16, total=48, chunk=32)
+
+
+def rust_lane_bound(mask, n, valid_q, valid_k, key_offset, total, block, col_tile):
+    """Mirror of kernel::ChunkParams::tile_bound (the LaneBound the Rust
+    kernel encodes into MaskBound): returns (live, bound_fn)."""
+    gq0, lk0 = block * n, col_tile * n
+    w = min(n, max(valid_k - lk0, 0))
+    gk0 = key_offset + lk0
+    kind = mask[0]
+    if kind == "causal":
+        base, diag, cap = gq0 + 1 - gk0, 1, w
+    elif kind == "none":
+        base, diag, cap = w, 0, w
+    else:
+        base, diag, cap = min(max(mask[1] - gk0, 0), w), 0, w
+
+    def bound(m):
+        return min(max(base + diag * m, 0), cap)
+
+    rows_real = min(n, max(valid_q - gq0, 0))
+    live = w > 0 and any(bound(m) > 0 for m in range(rows_real))
+    return live, bound
+
+
+def test_rust_lane_bound_matches_reference_formula():
+    """The LaneBound encoding must reproduce, for every REAL query row,
+    the reference kernel's valid-lane prefix clamp(valid_keys(q) -
+    key_offset - lk0, 0, w) — and classify liveness identically."""
+    for n in (16, 32):
+        for valid_q in (1, 33, 40, 64):
+            for key_offset, valid_k, total in ((0, 64, 64), (32, 32, 64), (16, 48, 64), (0, 37, 37)):
+                for mask in (("none", 0), ("causal", 0), ("padding", 40), ("padding", 20)):
+                    blocks = -(-valid_q // n)
+                    tiles = -(-valid_k // n)
+                    for b in range(blocks):
+                        for j in range(tiles):
+                            live, bound = rust_lane_bound(
+                                mask, n, valid_q, valid_k, key_offset, total, b, j
+                            )
+                            w = min(n, valid_k - j * n)
+                            rows_real = min(n, valid_q - b * n)
+                            ref = [
+                                min(
+                                    max(
+                                        valid_keys(mask, b * n + m, total)
+                                        - (key_offset + j * n),
+                                        0,
+                                    ),
+                                    w,
+                                )
+                                for m in range(rows_real)
+                            ]
+                            got = [bound(m) for m in range(rows_real)]
+                            assert got == ref, (
+                                f"n={n} vq={valid_q} off={key_offset} vk={valid_k} "
+                                f"mask={mask} tile=({b},{j}): {got} != {ref}"
+                            )
+                            assert live == any(x > 0 for x in ref)
+    print("rust LaneBound formula matches the reference prefix everywhere")
+
+
+if __name__ == "__main__":
+    test_exp2_at_zero_is_one()
+    print("exp2(0) == 1.0 ok")
+    test_rust_lane_bound_matches_reference_formula()
+    test_sim_bitwise_matches_reference()
+    print("ALL BITWISE CHECKS PASSED")

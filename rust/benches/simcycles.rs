@@ -1,0 +1,73 @@
+//! Bench: measured vs modeled cycles of the `backend=sim` serving path
+//! (DESIGN.md §8) — the cross-validation sweep that keeps the analytic
+//! `perfmodel` honest against the cycle-accurate machine.  For each
+//! `(seq_len, mask)` shape the sweep compiles the masked chunk program,
+//! runs it on `sim::Machine`, and asserts the measured/modeled ratio
+//! stays inside `perfmodel::SIM_MODEL_BAND`; it also times one sim-
+//! backend head execution (the per-shard cost `sim_max_seq` guards).
+
+use std::time::Duration;
+
+use fsa::benchutil::{bench_for, fmt_duration, smoke, Table};
+use fsa::config::AccelConfig;
+use fsa::mask::MaskKind;
+use fsa::numerics::SplitMix64;
+use fsa::perfmodel::{sim_cross_check, SIM_MODEL_BAND};
+use fsa::runtime::SimBackend;
+
+fn main() {
+    // A shrunken FSA (32-array) keeps the cycle-accurate runs fast; the
+    // bandwidth/clock stay the paper's, so the DMA/compute balance is
+    // representative.
+    let mut cfg = AccelConfig::builtin("fsa").unwrap();
+    cfg.array_size = 32;
+    let n = cfg.array_size;
+
+    let seqs: &[usize] = if smoke() { &[64, 96] } else { &[64, 96, 128, 192, 256] };
+    let masks = [
+        MaskKind::None,
+        MaskKind::Causal,
+        MaskKind::PaddingKeys { valid: 40 },
+    ];
+
+    let mut t = Table::new(&["seq", "mask", "modeled", "measured", "ratio"]);
+    for &l in seqs {
+        for mask in masks {
+            let c = sim_cross_check(&cfg, l, mask, cfg.pwl_segments).unwrap();
+            assert!(
+                c.within_band(),
+                "L={l} {mask}: ratio {:.3} outside {SIM_MODEL_BAND:?}",
+                c.ratio
+            );
+            t.row(&[
+                l.to_string(),
+                mask.to_string(),
+                c.modeled.to_string(),
+                c.measured.to_string(),
+                format!("{:.3}", c.ratio),
+            ]);
+        }
+    }
+    println!(
+        "simcycles — measured sim cycles vs perfmodel tile-cycles \
+         (band {:?}, N = {n})\n{}",
+        SIM_MODEL_BAND,
+        t.to_string()
+    );
+
+    // Host cost of one sim-backend head shard (what `sim_max_seq`
+    // bounds): a causal L=96 head on the 32-array.
+    let mut be = SimBackend::new(&cfg);
+    let mut rng = SplitMix64::new(5);
+    let (l, d) = (96usize, 32usize);
+    let q = rng.normal_matrix(l, d);
+    let k = rng.normal_matrix(l, d);
+    let v = rng.normal_matrix(l, d);
+    let st = bench_for(Duration::from_secs(2), || {
+        be.execute_head(l, d, &q, &k, &v, MaskKind::Causal).unwrap();
+    });
+    println!(
+        "[bench] sim-backend causal head (L={l}, d={d}, N={n}): median {}",
+        fmt_duration(st.median)
+    );
+}

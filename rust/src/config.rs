@@ -260,6 +260,12 @@ pub enum BackendKind {
     /// In-crate `flash_pwl` reference numerics (the device's software
     /// twin); no artifacts or PJRT needed.  Exact sequence lengths only.
     Reference,
+    /// The cycle-accurate simulator as the execution engine
+    /// (DESIGN.md §8): shards compile to ISA programs and run on
+    /// `sim::Machine`, bitwise-equal to the reference twin, priced by
+    /// *measured* cycles.  O(L²·N) PE-steps per shard — guarded by
+    /// [`RunConfig::sim_max_seq`].
+    Sim,
     /// PJRT when the artifacts manifest is present, reference
     /// otherwise.
     Auto,
@@ -272,8 +278,9 @@ impl std::str::FromStr for BackendKind {
         match s {
             "pjrt" => Ok(BackendKind::Pjrt),
             "reference" | "ref" => Ok(BackendKind::Reference),
+            "sim" => Ok(BackendKind::Sim),
             "auto" => Ok(BackendKind::Auto),
-            other => bail!("unknown backend {other:?} (try pjrt|reference|auto)"),
+            other => bail!("unknown backend {other:?} (try pjrt|reference|sim|auto)"),
         }
     }
 }
@@ -283,6 +290,7 @@ impl fmt::Display for BackendKind {
         f.write_str(match self {
             BackendKind::Pjrt => "pjrt",
             BackendKind::Reference => "reference",
+            BackendKind::Sim => "sim",
             BackendKind::Auto => "auto",
         })
     }
@@ -368,8 +376,24 @@ pub struct RunConfig {
     /// chunk's partial `(O~, m, l)` on its own device, and merge the
     /// partials in chunk order at gather.  `1` (the default) is the
     /// legacy whole-sequence path, bit for bit.  Values `> 1` require
-    /// the reference backend (the AOT artifacts emit no partial state).
+    /// the reference or sim backend (the AOT artifacts emit no partial
+    /// state).
     pub seq_shards: usize,
+    /// Longest `seq_len` a `backend=sim` pool admits (DESIGN.md §8).
+    /// The cycle model is O(L²·N) PE-steps per head shard — a 4096-token
+    /// head on the 128-array is ~10¹⁰ stepped PEs — so long requests
+    /// (and decode steps whose *grown prefix* has reached the guard;
+    /// each step runs a decode-row program over the whole prefix) are
+    /// rejected at admission with an error naming this knob
+    /// (`[run] sim_max_seq` / `--sim-max-seq`) instead of wedging a
+    /// worker for minutes.  Ignored by every other backend.
+    pub sim_max_seq: usize,
+    /// Array dimension of the simulated devices (tiling for the
+    /// reference backend, machine size for the sim backend, tile census
+    /// for pricing).  Defaults to the paper's 128; tests shrink it so
+    /// the cycle-accurate backend runs in milliseconds.  Must be a
+    /// power of two (`AccelConfig::validate`'s rule).
+    pub array_size: usize,
 }
 
 impl Default for RunConfig {
@@ -389,6 +413,8 @@ impl Default for RunConfig {
             mask: MaskKind::None,
             freq_ghz: 1.5,
             seq_shards: 1,
+            sim_max_seq: 1024,
+            array_size: 128,
         }
     }
 }
@@ -422,6 +448,16 @@ impl RunConfig {
             self.seq_shards >= 1,
             "seq_shards must be >= 1, got {}",
             self.seq_shards
+        );
+        ensure!(
+            self.sim_max_seq >= 1,
+            "sim_max_seq must be >= 1, got {}",
+            self.sim_max_seq
+        );
+        ensure!(
+            self.array_size >= 2 && self.array_size.is_power_of_two(),
+            "array_size must be a power of two >= 2, got {}",
+            self.array_size
         );
         Ok(())
     }
@@ -470,6 +506,12 @@ impl RunConfig {
         }
         if let Some(v) = ini.get_parsed::<usize>(sec, "seq_shards")? {
             cfg.seq_shards = v;
+        }
+        if let Some(v) = ini.get_parsed::<usize>(sec, "sim_max_seq")? {
+            cfg.sim_max_seq = v;
+        }
+        if let Some(v) = ini.get_parsed::<usize>(sec, "array_size")? {
+            cfg.array_size = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -568,6 +610,26 @@ mod tests {
         // Bad values are rejected at load.
         assert!(RunConfig::from_ini(&Ini::parse("[run]\nmask = diag\n").unwrap()).is_err());
         assert!(RunConfig::from_ini(&Ini::parse("[run]\nfreq_ghz = 0\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_config_sim_backend_knobs() {
+        // Satellite: the sim backend parses, and the O(L²) guard plus
+        // the device array dim are INI-plumbed and validated.
+        let text = "[run]\nbackend = sim\nsim_max_seq = 256\narray_size = 32\n";
+        let run = RunConfig::from_ini(&Ini::parse(text).unwrap()).unwrap();
+        assert_eq!(run.backend, BackendKind::Sim);
+        assert_eq!(run.sim_max_seq, 256);
+        assert_eq!(run.array_size, 32);
+        assert_eq!("sim".parse::<BackendKind>().unwrap(), BackendKind::Sim);
+        assert_eq!(BackendKind::Sim.to_string(), "sim");
+        // Defaults: 1024-token guard on the paper's 128-array.
+        let dflt = RunConfig::default();
+        assert_eq!((dflt.sim_max_seq, dflt.array_size), (1024, 128));
+        // Degenerate values are rejected at load.
+        assert!(RunConfig::from_ini(&Ini::parse("[run]\nsim_max_seq = 0\n").unwrap()).is_err());
+        assert!(RunConfig::from_ini(&Ini::parse("[run]\narray_size = 48\n").unwrap()).is_err());
+        assert!(RunConfig::from_ini(&Ini::parse("[run]\narray_size = 1\n").unwrap()).is_err());
     }
 
     #[test]

@@ -44,9 +44,9 @@ type GroupKey = (usize, usize, std::mem::Discriminant<MaskKind>);
 /// What the pool's resolved backend can execute, probed once at
 /// [`Coordinator::start`](super::Coordinator::start).  Incapable pools
 /// reject the corresponding traffic at admission — before any session
-/// state mutates.  All three currently coincide with "runs on the
-/// reference twin"; they are carried separately because artifact export
-/// (DESIGN.md §future-work) would split them.
+/// state mutates.  The three booleans currently coincide with "runs on
+/// the reference or sim backend"; they are carried separately because
+/// artifact export (DESIGN.md §future-work) would split them.
 #[derive(Clone, Copy, Debug)]
 pub struct PoolCapabilities {
     /// Decode steps (PJRT has no `fsa_decode` artifact kind).
@@ -57,12 +57,30 @@ pub struct PoolCapabilities {
     /// Sequence-parallel partial shards (the AOT artifacts emit no
     /// `(O~, m, l)` state, DESIGN.md §7).
     pub seqpar: bool,
+    /// Longest admissible `seq_len`, when the backend's cost model
+    /// demands a guard: `Some(RunConfig::sim_max_seq)` on the
+    /// cycle-accurate sim pool (O(L²·N) PE-steps per shard,
+    /// DESIGN.md §8), `None` everywhere else.
+    pub max_seq: Option<usize>,
 }
 
 impl PoolCapabilities {
-    /// Everything-on (the reference backend).
+    /// Everything-on, unguarded (the reference backend).
     pub fn reference() -> PoolCapabilities {
-        PoolCapabilities { decode: true, mask: true, seqpar: true }
+        PoolCapabilities { decode: true, mask: true, seqpar: true, max_seq: None }
+    }
+
+    /// The cycle-accurate sim backend: mask ✓, decode ✓, seqpar ✓ —
+    /// everything the reference twin serves, since the §8 mask wave and
+    /// the decode/partial program variants all run on the array — but
+    /// guarded at `sim_max_seq` tokens.
+    pub fn sim(max_seq: usize) -> PoolCapabilities {
+        PoolCapabilities { decode: true, mask: true, seqpar: true, max_seq: Some(max_seq) }
+    }
+
+    /// The strict PJRT artifact pool (no decode/mask/partial kinds).
+    pub fn pjrt() -> PoolCapabilities {
+        PoolCapabilities { decode: false, mask: false, seqpar: false, max_seq: None }
     }
 }
 
@@ -196,6 +214,27 @@ fn admit_session_op(
     seq_shards: usize,
 ) -> Option<Envelope> {
     let o = std::sync::atomic::Ordering::Relaxed;
+    // The sim pool's O(L²) guard (DESIGN.md §8): reject over-long
+    // requests at admission — before a prefill opens a session — with
+    // an error naming the knob.  Close is exempt (it executes no
+    // kernel); decode steps carry seq_len = 1 and pass (their prefix
+    // was admitted at prefill time).
+    if let Some(cap) = caps.max_seq {
+        if env.req.seq_len > cap && !matches!(env.req.op, SessionOp::Close { .. }) {
+            let seq = env.req.seq_len;
+            reply_inline(
+                env,
+                Err(format!(
+                    "seq_len {seq} exceeds sim_max_seq ({cap}): the cycle-accurate \
+                     sim backend is O(L²·N) PE-steps per head shard; raise \
+                     `[run] sim_max_seq` / `--sim-max-seq`, or serve long \
+                     sequences on backend=reference (DESIGN.md §8)"
+                )),
+                metrics,
+            );
+            return None;
+        }
+    }
     // Reject masked requests on a mask-incapable (PJRT) pool up front:
     // every shard would fail at the device anyway, and a masked
     // *prefill* must not get as far as opening a session it can never
@@ -246,6 +285,30 @@ fn admit_session_op(
             }
         }
         SessionOp::Decode { session, step } => {
+            // The sim pool's O(L²) guard also bounds the *prefix*: each
+            // decode step executes a decode-row program over the grown
+            // prefix, so without this check a 1-token step could grow a
+            // session arbitrarily far past `sim_max_seq` and recreate
+            // the worker-wedging cost the guard exists to prevent.
+            // Checked BEFORE begin_decode so the rejected step is never
+            // consumed (retryable on a reference pool).  An unknown
+            // session falls through to begin_decode's lifecycle error.
+            if let (Some(cap), Some(prefix)) = (caps.max_seq, sessions.prefix_len(session)) {
+                if prefix >= cap {
+                    reply_inline(
+                        env,
+                        Err(format!(
+                            "session {session} decode step {step}: prefix {prefix} has \
+                             reached sim_max_seq ({cap}) — the cycle-accurate sim \
+                             backend is O(prefix·N²) PE-steps per decode shard; raise \
+                             `[run] sim_max_seq` / `--sim-max-seq`, or serve long \
+                             sessions on backend=reference (DESIGN.md §8)"
+                        )),
+                        metrics,
+                    );
+                    return None;
+                }
+            }
             // Reject before begin_decode consumes the step: a PJRT
             // pool (including `auto` that resolved to PJRT) has no
             // decode artifact kind, so admitting would burn the step
@@ -310,6 +373,7 @@ fn reply_inline(env: Envelope, output: Result<Vec<f32>, String>, metrics: &Metri
         bucket: env.req.seq_len,
         kv_hits: 0,
         kv_misses: 0,
+        measured_shards: 0,
     };
     metrics.record(&resp, ok);
     let _ = env.reply.send(resp);
@@ -355,7 +419,7 @@ mod tests {
         let sessions = SessionTable::new();
         let metrics = Metrics::new();
         let d = 4;
-        let caps_pjrt = PoolCapabilities { decode: false, mask: false, seqpar: false };
+        let caps_pjrt = PoolCapabilities::pjrt();
         let mk = || -> (Envelope, mpsc::Receiver<AttentionResponse>) {
             let (tx, rx) = mpsc::channel();
             let m = vec![0.0f32; 8 * d];
@@ -394,6 +458,72 @@ mod tests {
         assert!(err.contains("not open"), "close must be answered as close: {err}");
     }
 
+    /// Satellite: the sim pool's O(L²) guard rejects over-long requests
+    /// at admission with an error naming the knob; close stays exempt
+    /// and a prefill is refused before it can open a session.
+    #[test]
+    fn sim_pool_rejects_seq_len_above_the_guard() {
+        let sessions = SessionTable::new();
+        let metrics = Metrics::new();
+        let d = 4;
+        let caps = PoolCapabilities::sim(8);
+        let mk = |req: AttentionRequest| -> (Envelope, mpsc::Receiver<AttentionResponse>) {
+            let (tx, rx) = mpsc::channel();
+            (Envelope { req, reply: tx, enqueued: std::time::Instant::now() }, rx)
+        };
+        // At the guard: admitted.
+        let m = vec![0.0f32; 8 * d];
+        let (env, _rx) = mk(AttentionRequest::new(1, 8, d, m.clone(), m.clone(), m));
+        assert!(admit_session_op(env, &sessions, &metrics, caps, 1).is_some());
+        // Above it: rejected, and the error names the flag.
+        let m = vec![0.0f32; 9 * d];
+        let (env, rx) = mk(AttentionRequest::new(2, 9, d, m.clone(), m.clone(), m));
+        assert!(admit_session_op(env, &sessions, &metrics, caps, 1).is_none());
+        let err = rx.try_recv().unwrap().output.unwrap_err();
+        assert!(err.contains("sim_max_seq") && err.contains("9"), "{err}");
+        // An over-long prefill must not open its session.
+        let m = vec![0.0f32; 9 * d];
+        let (env, rx) = mk(AttentionRequest::prefill(3, 77, 9, d, 1, 1, m.clone(), m.clone(), m));
+        assert!(admit_session_op(env, &sessions, &metrics, caps, 1).is_none());
+        assert!(rx.try_recv().unwrap().output.is_err());
+        assert!(!sessions.contains(77));
+        // Close is exempt (executes no kernel; idempotent reply shape).
+        let (env, rx) = mk(AttentionRequest::close(4, 77));
+        assert!(admit_session_op(env, &sessions, &metrics, caps, 1).is_none());
+        assert!(rx.try_recv().unwrap().output.unwrap_err().contains("not open"));
+        // Decode steps (seq_len = 1) pass while the prefix stays under
+        // the guard — but the guard also bounds the *grown prefix*: a
+        // session prefilled at 4 admits 4 steps (prefix 4..7), and the
+        // step that would push past sim_max_seq = 8 is rejected before
+        // being consumed.
+        let m = vec![0.0f32; 4 * d];
+        let (env, _rx) = mk(AttentionRequest::prefill(5, 9, 4, d, 1, 1, m.clone(), m.clone(), m));
+        assert!(admit_session_op(env, &sessions, &metrics, caps, 1).is_some());
+        for step in 0..4u64 {
+            let (env, _rx) = mk(AttentionRequest::decode(
+                6 + step, 9, step, d, 1, 1, vec![0.0; d], vec![0.0; d], vec![0.0; d],
+            ));
+            assert!(
+                admit_session_op(env, &sessions, &metrics, caps, 1).is_some(),
+                "step {step} (prefix under the guard) must be admitted"
+            );
+        }
+        assert_eq!(sessions.prefix_len(9), Some(8));
+        let (env, rx) = mk(AttentionRequest::decode(
+            10, 9, 4, d, 1, 1, vec![0.0; d], vec![0.0; d], vec![0.0; d],
+        ));
+        assert!(admit_session_op(env, &sessions, &metrics, caps, 1).is_none());
+        let err = rx.try_recv().unwrap().output.unwrap_err();
+        assert!(err.contains("sim_max_seq") && err.contains("prefix 8"), "{err}");
+        // The rejected step was not consumed: it is retryable (e.g.
+        // after raising the guard).
+        let unguarded = PoolCapabilities::reference();
+        let (env, _rx) = mk(AttentionRequest::decode(
+            11, 9, 4, d, 1, 1, vec![0.0; d], vec![0.0; d], vec![0.0; d],
+        ));
+        assert!(admit_session_op(env, &sessions, &metrics, unguarded, 1).is_some());
+    }
+
     #[test]
     fn group_keys_split_on_mask_kind_but_not_padding_valid() {
         // Masked and unmasked shards are different kernels and must not
@@ -421,7 +551,7 @@ mod tests {
         // A causal prefill on a PJRT pool must be rejected WITHOUT
         // opening the session (else it would be orphaned-open: every
         // shard fails at the device, but the id stays registered).
-        let incapable = PoolCapabilities { decode: false, mask: false, seqpar: false };
+        let incapable = PoolCapabilities::pjrt();
         let (env, rx) = mk(
             AttentionRequest::prefill(
                 1, 7, 2, d, 2, 1,
@@ -535,7 +665,7 @@ mod tests {
         let (env, rx2) = mk(AttentionRequest::decode(
             9, 7, 1, d, 2, 1, vec![0.0; 2 * d], vec![0.0; d], vec![0.0; d],
         ));
-        let no_decode = PoolCapabilities { decode: false, mask: true, seqpar: true };
+        let no_decode = PoolCapabilities { decode: false, mask: true, seqpar: true, max_seq: None };
         assert!(admit_session_op(env, &sessions, &metrics, no_decode, 1).is_none());
         assert!(rx2.try_recv().unwrap().output.unwrap_err().contains("fsa_decode"));
         assert_eq!(sessions.prefix_len(7), before, "rejected step must not consume state");

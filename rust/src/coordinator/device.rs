@@ -84,8 +84,11 @@ fn worker_loop(
 ) {
     let mut cfg = AccelConfig::builtin("fsa").expect("builtin fsa config");
     // Device timing runs at the configured clock (also used by the
-    // batcher's timeout conversion — one clock everywhere).
+    // batcher's timeout conversion — one clock everywhere), and the
+    // configured array dim (tiling for the reference backend, machine
+    // size for the sim backend, tile census for pricing).
     cfg.freq_ghz = run_cfg.freq_ghz;
+    cfg.array_size = run_cfg.array_size;
     let artifacts = PathBuf::from(&run_cfg.artifacts_dir);
     let mut backend = match Backend::new(run_cfg.backend, &artifacts, &cfg) {
         Ok(b) => Some(b),
@@ -94,6 +97,9 @@ fn worker_loop(
             None
         }
     };
+    // The engine name is fixed at resolution; counted per dispatched
+    // shard (satellite: per-backend-kind dispatch metrics).
+    let backend_name = backend.as_ref().map(|b| b.name());
     let mut cache = KvCache::new(KvCacheConfig {
         pages: run_cfg.kv_cache_pages,
         page_size: run_cfg.kv_page_size,
@@ -104,10 +110,13 @@ fn worker_loop(
     while let Ok(batch) = rx.recv() {
         let n = batch.len();
         for env in batch {
-            let (cycles, cache_outcome, output) = execute_shard(
+            let (cycles, cache_outcome, output, measured) = execute_shard(
                 id, &cfg, backend.as_mut(), &mut cache, &sessions, &metrics, &env, seq_shards,
             );
             metrics.record_shard(cycles);
+            if let Some(name) = backend_name {
+                metrics.record_dispatch(name);
+            }
             if env.shard.is_partial() {
                 metrics.seq_chunk_shards.fetch_add(1, Ordering::Relaxed);
             }
@@ -126,6 +135,7 @@ fn worker_loop(
                     chunk_pos: env.shard.chunk_pos,
                     device_id: id,
                     cycles,
+                    measured,
                     output,
                     cache: cache_outcome,
                 },
@@ -141,7 +151,17 @@ fn worker_loop(
 }
 
 /// Execute one shard on this device: numerics + device-cycle pricing +
-/// KV-cache bookkeeping.  Returns `(cycles, cache outcome, output)`.
+/// KV-cache bookkeeping.  Returns `(cycles, cache outcome, output,
+/// measured)`.
+///
+/// Pricing (DESIGN.md §8): backends that *measure* device time (the
+/// cycle-accurate sim) report it via [`Backend::take_measured`], and
+/// those cycles replace the perfmodel's prediction — `measured = true`
+/// marks the shard so the gathered response can report how much of its
+/// cost was measured rather than modeled.  On a decode cache miss the
+/// modeled recompute charge (the upstream model re-running its forward
+/// pass, which no backend executes) is added on top of the measured
+/// step.
 ///
 /// Sequence-sharded shards (`shard.is_partial()`, DESIGN.md §7)
 /// execute only their `kv_range` chunk and emit [`ShardOut::Partial`];
@@ -159,7 +179,7 @@ fn execute_shard(
     metrics: &Metrics,
     env: &ShardEnvelope,
     seq_shards: usize,
-) -> (u64, CacheOutcome, Result<ShardOut, String>) {
+) -> (u64, CacheOutcome, Result<ShardOut, String>, bool) {
     let shard = &env.shard;
     let req = &shard.req;
     let (start, len) = shard.kv_range;
@@ -202,10 +222,11 @@ fn execute_shard(
             let (k, v) = req.head_kv(shard.kv_head);
             let (k_chunk, v_chunk) =
                 (&k[start * req.d..(start + len) * req.d], &v[start * req.d..(start + len) * req.d]);
+            let mut measured = None;
             let output = match backend {
                 None => Err("device backend unavailable".to_string()),
                 Some(be) => {
-                    if shard.is_partial() {
+                    let out = if shard.is_partial() {
                         be.execute_head_partial(
                             req.seq_len,
                             req.d,
@@ -222,7 +243,9 @@ fn execute_shard(
                             req.seq_len, req.d, req.head_q(shard.head), k, v, req.mask,
                         )
                         .map(ShardOut::Full)
-                    }
+                    };
+                    measured = be.take_measured();
+                    out
                 }
             };
             if let ShardCtx::Prefill { session, epoch } = env.ctx {
@@ -240,7 +263,12 @@ fn execute_shard(
                     }
                 }
             }
-            (perf.total_cycles, CacheOutcome::NotApplicable, output)
+            (
+                measured.unwrap_or(perf.total_cycles),
+                CacheOutcome::NotApplicable,
+                output,
+                measured.is_some(),
+            )
         }
         ShardCtx::Decode { session, prefix_len, epoch } => {
             // The request carries this step's appended K/V row; the
@@ -303,6 +331,7 @@ fn execute_shard(
                                     shard.chunk,
                                     start + len
                                 )),
+                                false,
                             );
                         }
                         Some((k, v)) => {
@@ -324,10 +353,11 @@ fn execute_shard(
                 Variant::DualPath,
                 cfg.pwl_segments,
             );
+            let mut measured = None;
             let output = match backend {
                 None => Err("device backend unavailable".to_string()),
                 Some(be) => {
-                    if shard.is_partial() {
+                    let out = if shard.is_partial() {
                         be.execute_decode_row_partial(
                             len,
                             req.d,
@@ -345,10 +375,18 @@ fn execute_shard(
                             &v_full,
                         )
                         .map(ShardOut::Full)
-                    }
+                    };
+                    measured = be.take_measured();
+                    out
                 }
             };
-            (perf.total_cycles, outcome, output)
+            // Measured cycles cover the attention pass; the miss-path
+            // recompute (the upstream model's forward pass over the
+            // prefix) is not executed by any backend and stays modeled.
+            let cycles = measured
+                .map(|m| m + perf.recompute_cycles)
+                .unwrap_or(perf.total_cycles);
+            (cycles, outcome, output, measured.is_some())
         }
     }
 }

@@ -53,6 +53,15 @@ pub struct Metrics {
     pub sessions_closed: AtomicUsize,
     /// Decode steps admitted (one per validated decode request).
     pub decode_steps: AtomicUsize,
+    /// Shards dispatched to the cycle-accurate sim backend
+    /// (DESIGN.md §8).  The three dispatch counters split
+    /// `head_shards` by executing engine, so a mixed fleet (or a
+    /// config mistake) is visible in the summary.
+    pub sim_dispatches: AtomicUsize,
+    /// Shards dispatched to the in-crate reference twin.
+    pub reference_dispatches: AtomicUsize,
+    /// Shards dispatched to the PJRT artifact runtime.
+    pub pjrt_dispatches: AtomicUsize,
     /// Decode shards served from KV-cache pages.
     pub kv_hits: AtomicU64,
     /// Decode shards that took the recompute fallback.
@@ -73,6 +82,18 @@ impl Metrics {
     pub fn record_shard(&self, cycles: u64) {
         self.head_shards.fetch_add(1, Ordering::Relaxed);
         self.shard_cycles.fetch_add(cycles, Ordering::Relaxed);
+    }
+
+    /// Count one shard dispatch against the executing backend kind
+    /// (`Backend::name`): `sim`, `reference` or `pjrt`.  Unknown names
+    /// are ignored rather than panicking a worker.
+    pub fn record_dispatch(&self, backend: &str) {
+        match backend {
+            "sim" => self.sim_dispatches.fetch_add(1, Ordering::Relaxed),
+            "reference" => self.reference_dispatches.fetch_add(1, Ordering::Relaxed),
+            "pjrt" => self.pjrt_dispatches.fetch_add(1, Ordering::Relaxed),
+            _ => 0,
+        };
     }
 
     /// Record one gathered response (called by the completing worker).
@@ -118,7 +139,8 @@ impl Metrics {
         format!(
             "submitted {} completed {} failed {} batches {} head_shards {} \
              multi_head {} seqpar {} seq_chunk_shards {} merge_steps {} \
-             device_cycles {} sessions {}/{} decode_steps {} \
+             device_cycles {} dispatch sim/ref/pjrt {}/{}/{} \
+             sessions {}/{} decode_steps {} \
              kv hit/miss/evict {}/{}/{} latency p50 {:?} p95 {:?} max {:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -130,6 +152,9 @@ impl Metrics {
             self.seq_chunk_shards.load(Ordering::Relaxed),
             self.merge_steps.load(Ordering::Relaxed),
             self.device_cycles.load(Ordering::Relaxed),
+            self.sim_dispatches.load(Ordering::Relaxed),
+            self.reference_dispatches.load(Ordering::Relaxed),
+            self.pjrt_dispatches.load(Ordering::Relaxed),
             self.sessions_opened.load(Ordering::Relaxed),
             self.sessions_closed.load(Ordering::Relaxed),
             self.decode_steps.load(Ordering::Relaxed),
@@ -166,6 +191,7 @@ mod tests {
             bucket: 128,
             kv_hits: 0,
             kv_misses: 0,
+            measured_shards: 0,
         }
     }
 
@@ -202,6 +228,24 @@ mod tests {
     fn empty_percentiles_are_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_percentiles().0, Duration::ZERO);
+    }
+
+    /// Satellite: dispatches are counted per backend kind, split out of
+    /// `head_shards`, and surfaced in the summary.
+    #[test]
+    fn dispatches_counted_per_backend_kind() {
+        let m = Metrics::new();
+        for _ in 0..3 {
+            m.record_dispatch("sim");
+        }
+        m.record_dispatch("reference");
+        m.record_dispatch("pjrt");
+        m.record_dispatch("quantum"); // unknown: ignored, not a panic
+        let o = Ordering::Relaxed;
+        assert_eq!(m.sim_dispatches.load(o), 3);
+        assert_eq!(m.reference_dispatches.load(o), 1);
+        assert_eq!(m.pjrt_dispatches.load(o), 1);
+        assert!(m.summary().contains("dispatch sim/ref/pjrt 3/1/1"), "{}", m.summary());
     }
 
     /// Satellite: sequence shards and merge steps are counted

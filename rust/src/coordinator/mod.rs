@@ -98,24 +98,25 @@ impl Coordinator {
         // decode steps, masked requests, and sequence-sharded serving
         // are rejected up front on an incapable pool (a decode step is
         // never consumed, a masked prefill never opens a session its
-        // shards cannot serve).  All three capabilities currently
-        // coincide with "runs on the reference twin"; they are carried
-        // separately because artifact export (DESIGN.md §future-work)
-        // would split them.
-        let on_reference = match cfg.backend {
-            BackendKind::Reference => true,
-            BackendKind::Pjrt => false,
+        // shards cannot serve).  The sim backend serves everything the
+        // reference twin does (the §8 mask wave + decode/partial
+        // program variants run on the array) but carries the O(L²)
+        // `sim_max_seq` admission guard.
+        let caps = match cfg.backend {
+            BackendKind::Reference => batcher::PoolCapabilities::reference(),
+            BackendKind::Sim => batcher::PoolCapabilities::sim(cfg.sim_max_seq),
+            BackendKind::Pjrt => batcher::PoolCapabilities::pjrt(),
             BackendKind::Auto => {
                 let accel = AccelConfig::builtin("fsa")?;
-                Backend::new(BackendKind::Auto, &artifacts, &accel)
+                let on_reference = Backend::new(BackendKind::Auto, &artifacts, &accel)
                     .map(|b| b.name() == "reference")
-                    .unwrap_or(true)
+                    .unwrap_or(true);
+                if on_reference {
+                    batcher::PoolCapabilities::reference()
+                } else {
+                    batcher::PoolCapabilities::pjrt()
+                }
             }
-        };
-        let caps = batcher::PoolCapabilities {
-            decode: on_reference,
-            mask: on_reference,
-            seqpar: on_reference,
         };
 
         let (ingress, ingress_rx) = mpsc::sync_channel(cfg.queue_depth);

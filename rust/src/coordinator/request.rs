@@ -330,6 +330,11 @@ pub struct AttentionResponse {
     pub kv_hits: usize,
     /// Decode shards that took the cache-miss recompute fallback.
     pub kv_misses: usize,
+    /// Shards whose `device_cycles` share was *measured* on the
+    /// cycle-accurate machine (`backend=sim`, DESIGN.md §8) rather than
+    /// predicted by the perfmodel — `shards` on a sim pool, 0 on the
+    /// modeled backends.
+    pub measured_shards: usize,
 }
 
 /// Internal envelope: request + reply channel + enqueue timestamp.

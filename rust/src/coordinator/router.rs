@@ -376,6 +376,7 @@ mod tests {
                         chunk_pos: 0,
                         device_id: 1,
                         cycles: 10,
+                        measured: false,
                         output: Ok(ShardOut::Full(vec![0.0; d])),
                         cache: CacheOutcome::Hit,
                     },

@@ -135,6 +135,10 @@ pub struct ShardResult {
     pub device_id: usize,
     /// Simulated FSA device cycles for this shard.
     pub cycles: u64,
+    /// Whether `cycles` was *measured* by the executing backend (the
+    /// cycle-accurate sim, DESIGN.md §8) rather than predicted by the
+    /// perfmodel.
+    pub measured: bool,
     pub output: Result<ShardOut, String>,
     /// KV-cache outcome (decode shards only).
     pub cache: CacheOutcome,
@@ -147,6 +151,9 @@ struct GatherInner {
     remaining: usize,
     kv_hits: usize,
     kv_misses: usize,
+    /// Shards whose cycles were measured on the sim machine rather
+    /// than modeled (DESIGN.md §8).
+    measured_shards: usize,
 }
 
 /// Per-request gather cell shared by all of the request's shards.
@@ -184,6 +191,9 @@ impl Gather {
                 CacheOutcome::Hit => inner.kv_hits += 1,
                 CacheOutcome::Miss => inner.kv_misses += 1,
                 CacheOutcome::NotApplicable => {}
+            }
+            if result.measured {
+                inner.measured_shards += 1;
             }
         }
         inner.done[slot] = Some((result.device_id, result.cycles, result.output));
@@ -309,6 +319,7 @@ impl Gather {
             bucket: req.seq_len,
             kv_hits: inner.kv_hits,
             kv_misses: inner.kv_misses,
+            measured_shards: inner.measured_shards,
         }
     }
 }
@@ -370,6 +381,7 @@ pub fn explode(env: Envelope, seq_shards: usize) -> Vec<ShardEnvelope> {
             remaining: num_heads * live,
             kv_hits: 0,
             kv_misses: 0,
+            measured_shards: 0,
         }),
     });
     let mut shards = Vec::with_capacity(num_heads * live);
@@ -428,6 +440,7 @@ mod tests {
             chunk_pos: 0,
             device_id: dev,
             cycles,
+            measured: false,
             output: Ok(ShardOut::Full(out)),
             cache: CacheOutcome::NotApplicable,
         }
@@ -559,6 +572,7 @@ mod tests {
                     chunk_pos: s.chunk_pos,
                     device_id: s.chunk_pos, // chunk -> its own device
                     cycles: 10,
+                    measured: false,
                     output: Ok(ShardOut::Partial(oracle_part(s.head, s.kv_range))),
                     cache: CacheOutcome::NotApplicable,
                 },
@@ -602,6 +616,7 @@ mod tests {
                     chunk_pos: 0,
                     device_id: 0,
                     cycles: 10,
+                    measured: false,
                     output: if h == 1 {
                         Err("boom".into())
                     } else {
@@ -641,6 +656,7 @@ mod tests {
                     chunk_pos: 0,
                     device_id: 0,
                     cycles: 7,
+                    measured: h == 0,
                     output: Ok(ShardOut::Full(vec![0.5; d])),
                     cache: if h == 2 { CacheOutcome::Miss } else { CacheOutcome::Hit },
                 },
@@ -650,6 +666,7 @@ mod tests {
         let resp = rx.try_recv().unwrap();
         assert_eq!(resp.kv_hits, 3);
         assert_eq!(resp.kv_misses, 1);
+        assert_eq!(resp.measured_shards, 1, "one shard priced from measured cycles");
         // Decode output is one row per head.
         assert_eq!(resp.output.unwrap().len(), 4 * d);
     }

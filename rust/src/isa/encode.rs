@@ -11,7 +11,7 @@
 
 use anyhow::{bail, ensure};
 
-use super::{Instruction, Program, Space, TileDesc};
+use super::{Instruction, LaneBound, Program, Space, TileDesc};
 
 const OP_LOAD_TILE: u8 = 1;
 const OP_STORE_TILE: u8 = 2;
@@ -20,8 +20,13 @@ const OP_ATTN_SCORE: u8 = 4;
 const OP_ATTN_VALUE: u8 = 5;
 const OP_RECIPROCAL: u8 = 6;
 const OP_ATTN_LSE_NORM: u8 = 7;
+const OP_MASK_BOUND: u8 = 8;
 
 const FLAG_FIRST: u8 = 1 << 0;
+/// AttnScore: apply the boundary register as the §8 mask wave.
+const FLAG_MASKED: u8 = 1 << 1;
+/// MaskBound: the boundary advances with the stationary column (causal).
+const FLAG_DIAG: u8 = 1 << 2;
 
 fn space_code(s: Space) -> u8 {
     match s {
@@ -63,13 +68,24 @@ fn dec_dim(code: u64) -> u16 {
 /// word0: opcode:8 | flags:8 | in_space:2 | out_space:2 | in_stride:20 | out_stride:20
 /// word1: in_addr:24 | out_addr:24 | log2-dims:16 (in.rows, in.cols, out.rows, out.cols)
 pub fn encode(i: &Instruction) -> crate::Result<[u64; 2]> {
+    // MaskBound carries no tiles: word1 packs the boundary register
+    // payload instead (base:32 | cap:16), the diag bit rides in flags.
+    if let Instruction::MaskBound { bound } = *i {
+        let flags = if bound.diag { FLAG_DIAG } else { 0 };
+        let word0 = (OP_MASK_BOUND as u64) | ((flags as u64) << 8);
+        let word1 = (bound.base as u32 as u64) | ((bound.cap as u64) << 32);
+        return Ok([word0, word1]);
+    }
     let (op, flags, input, output) = match *i {
         Instruction::LoadTile { src, dst } => (OP_LOAD_TILE, 0, src, Some(dst)),
         Instruction::StoreTile { src, dst } => (OP_STORE_TILE, 0, src, Some(dst)),
         Instruction::LoadStationary { src } => (OP_LOAD_STATIONARY, 0, src, None),
-        Instruction::AttnScore { k, lse, first } => {
-            (OP_ATTN_SCORE, if first { FLAG_FIRST } else { 0 }, k, Some(lse))
-        }
+        Instruction::AttnScore { k, lse, first, masked } => (
+            OP_ATTN_SCORE,
+            if first { FLAG_FIRST } else { 0 } | if masked { FLAG_MASKED } else { 0 },
+            k,
+            Some(lse),
+        ),
         Instruction::AttnValue { v, out, first } => {
             (OP_ATTN_VALUE, if first { FLAG_FIRST } else { 0 }, v, Some(out))
         }
@@ -101,6 +117,15 @@ pub fn encode(i: &Instruction) -> crate::Result<[u64; 2]> {
 pub fn decode(words: [u64; 2]) -> crate::Result<Instruction> {
     let op = (words[0] & 0xFF) as u8;
     let flags = ((words[0] >> 8) & 0xFF) as u8;
+    if op == OP_MASK_BOUND {
+        return Ok(Instruction::MaskBound {
+            bound: LaneBound {
+                base: (words[1] & 0xFFFF_FFFF) as u32 as i32,
+                diag: flags & FLAG_DIAG != 0,
+                cap: ((words[1] >> 32) & 0xFFFF) as u16,
+            },
+        });
+    }
     let in_space = space_from(((words[0] >> 16) & 0x3) as u8)?;
     let out_space = space_from(((words[0] >> 18) & 0x3) as u8)?;
     let in_stride = ((words[0] >> 20) & 0xF_FFFF) as u32;
@@ -123,11 +148,12 @@ pub fn decode(words: [u64; 2]) -> crate::Result<Instruction> {
         stride: out_stride,
     };
     let first = flags & FLAG_FIRST != 0;
+    let masked = flags & FLAG_MASKED != 0;
     Ok(match op {
         OP_LOAD_TILE => Instruction::LoadTile { src: input, dst: output },
         OP_STORE_TILE => Instruction::StoreTile { src: input, dst: output },
         OP_LOAD_STATIONARY => Instruction::LoadStationary { src: input },
-        OP_ATTN_SCORE => Instruction::AttnScore { k: input, lse: output, first },
+        OP_ATTN_SCORE => Instruction::AttnScore { k: input, lse: output, first, masked },
         OP_ATTN_VALUE => Instruction::AttnValue { v: input, out: output, first },
         OP_RECIPROCAL => Instruction::Reciprocal { l: input },
         OP_ATTN_LSE_NORM => Instruction::AttnLseNorm { out: output, l: input },
@@ -181,14 +207,22 @@ mod tests {
             let b = rand_tile(&mut r, Space::Accum);
             let m = rand_tile(&mut r, Space::Main);
             let first = r.next_below(2) == 0;
+            let masked = r.next_below(2) == 0;
             let insns = [
                 Instruction::LoadTile { src: m, dst: a },
                 Instruction::StoreTile { src: b, dst: m },
                 Instruction::LoadStationary { src: a },
-                Instruction::AttnScore { k: a, lse: b, first },
+                Instruction::AttnScore { k: a, lse: b, first, masked },
                 Instruction::AttnValue { v: a, out: b, first },
                 Instruction::Reciprocal { l: b },
                 Instruction::AttnLseNorm { out: b, l: b },
+                Instruction::MaskBound {
+                    bound: LaneBound {
+                        base: r.next_below(1 << 16) as i32 - (1 << 15),
+                        diag: masked,
+                        cap: r.next_below(1024) as u16,
+                    },
+                },
             ];
             let i = insns[(trial % insns.len()) as usize];
             let enc = encode(&i).unwrap();
@@ -203,10 +237,13 @@ mod tests {
         let t = TileDesc::contiguous(Space::Spad, 0x40, 128, 128);
         let l = TileDesc::contiguous(Space::Accum, 0, 1, 128);
         p.push(Instruction::LoadStationary { src: t });
-        p.push(Instruction::AttnScore { k: t, lse: l, first: true });
+        p.push(Instruction::MaskBound {
+            bound: LaneBound { base: -7, diag: true, cap: 128 },
+        });
+        p.push(Instruction::AttnScore { k: t, lse: l, first: true, masked: true });
         p.push(Instruction::Reciprocal { l });
         let words = encode_program(&p).unwrap();
-        assert_eq!(words.len(), 6);
+        assert_eq!(words.len(), 8);
         assert_eq!(decode_program(&words).unwrap(), p);
     }
 

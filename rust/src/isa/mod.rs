@@ -59,6 +59,38 @@ impl TileDesc {
     }
 }
 
+/// The mask-wave boundary of one partially masked tile (DESIGN.md §8):
+/// the value a [`Instruction::MaskBound`] writes into the controller's
+/// boundary register.  For stationary (query) column `m`, key lanes
+/// `>= clamp(base + diag·m, 0, cap)` are *masked*: the CMP row excludes
+/// them from the running rowmax and re-streams them as zero with the
+/// masked sideband bit set, so their P is exactly 0 through the rowsum
+/// and PV waves.  Both mask kinds and zero-padded ragged tails are
+/// linear in `m`: a causal diagonal tile is `base = q0 + 1 - k0`,
+/// `diag = true`; a padding boundary or ragged tail is a uniform
+/// `base = bound`, `diag = false`; `cap` is the number of real key
+/// lanes in the tile (`< N` when a short tail rides in zero-padded).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneBound {
+    pub base: i32,
+    pub diag: bool,
+    pub cap: u16,
+}
+
+impl LaneBound {
+    /// Valid-lane count of stationary column `m`.
+    pub fn bound(&self, m: usize) -> u16 {
+        let b = self.base + if self.diag { m as i32 } else { 0 };
+        b.clamp(0, self.cap as i32) as u16
+    }
+
+    /// True when every lane of an `n`-wide tile is valid for every
+    /// column — such a bound needs no mask wave and no `MaskBound`.
+    pub fn is_full(&self, n: usize) -> bool {
+        self.cap as usize == n && (0..n).all(|m| self.bound(m) as usize == n)
+    }
+}
+
 /// The instruction set.  Operand conventions follow Listing 1 of the
 /// paper; every compute instruction implicitly targets the systolic array
 /// + accumulator of its device.
@@ -70,11 +102,19 @@ pub enum Instruction {
     StoreTile { src: TileDesc, dst: TileDesc },
     /// Preload the stationary matrix (Q tile) into the PE array.
     LoadStationary { src: TileDesc },
+    /// Program the controller's mask boundary register (DESIGN.md §8);
+    /// consumed by the next [`Instruction::AttnScore`] with
+    /// `masked = true`.  Zero-latency: a control-register write the
+    /// sequencer folds into the score's issue.
+    MaskBound { bound: LaneBound },
     /// First matmul S = Q K^T fused with online softmax: rowmax via the
     /// CMP row, in-place subtract/scale/exp2, rowsum; leaves P resident in
     /// the array and accumulates the (log-)exponent sum into `lse`.
     /// `first` resets the running max/denominator (j == 0 of Algorithm 1).
-    AttnScore { k: TileDesc, lse: TileDesc, first: bool },
+    /// `masked` applies the boundary register programmed by the
+    /// preceding [`Instruction::MaskBound`] as the §8 mask wave (one
+    /// extra element-wise cycle, `InnerSchedule::masked_inner_latency`).
+    AttnScore { k: TileDesc, lse: TileDesc, first: bool, masked: bool },
     /// Second matmul O += P V into the accumulator (with diag(b) rescale).
     AttnValue { v: TileDesc, out: TileDesc, first: bool },
     /// Accumulator-local reciprocal of the exponent sum.
@@ -100,12 +140,19 @@ impl Instruction {
         }
     }
 
+    /// Whether this is a masked [`Instruction::AttnScore`] (the §8 mask
+    /// wave applies, costing one extra element-wise cycle).
+    pub fn is_masked_score(&self) -> bool {
+        matches!(self, Instruction::AttnScore { masked: true, .. })
+    }
+
     /// Human-readable mnemonic (used by the disassembler and traces).
     pub fn mnemonic(&self) -> &'static str {
         match self {
             Instruction::LoadTile { .. } => "load_tile",
             Instruction::StoreTile { .. } => "store_tile",
             Instruction::LoadStationary { .. } => "load_stationary",
+            Instruction::MaskBound { .. } => "mask_bound",
             Instruction::AttnScore { .. } => "attn_score",
             Instruction::AttnValue { .. } => "attn_value",
             Instruction::Reciprocal { .. } => "reciprocal",
@@ -114,12 +161,14 @@ impl Instruction {
     }
 
     /// The SRAM tile this instruction reads (compute instructions read
-    /// exactly one input tile — the §4.2 "one-tile-in" rule).
+    /// exactly one input tile — the §4.2 "one-tile-in" rule;
+    /// `MaskBound` is a register write and reads none).
     pub fn input_tile(&self) -> Option<&TileDesc> {
         match self {
             Instruction::LoadTile { src, .. } => Some(src),
             Instruction::StoreTile { src, .. } => Some(src),
             Instruction::LoadStationary { src } => Some(src),
+            Instruction::MaskBound { .. } => None,
             Instruction::AttnScore { k, .. } => Some(k),
             Instruction::AttnValue { v, .. } => Some(v),
             Instruction::Reciprocal { l } => Some(l),
@@ -132,7 +181,7 @@ impl Instruction {
         match self {
             Instruction::LoadTile { dst, .. } => Some(dst),
             Instruction::StoreTile { dst, .. } => Some(dst),
-            Instruction::LoadStationary { .. } => None,
+            Instruction::LoadStationary { .. } | Instruction::MaskBound { .. } => None,
             Instruction::AttnScore { lse, .. } => Some(lse),
             Instruction::AttnValue { out, .. } => Some(out),
             Instruction::Reciprocal { l } => Some(l),
@@ -201,8 +250,12 @@ fn disasm_one(i: &Instruction) -> String {
         Instruction::LoadTile { src, dst } => format!("load_tile {} -> {}", t(src), t(dst)),
         Instruction::StoreTile { src, dst } => format!("store_tile {} -> {}", t(src), t(dst)),
         Instruction::LoadStationary { src } => format!("load_stationary {}", t(src)),
-        Instruction::AttnScore { k, lse, first } => {
-            format!("attn_score k={} lse={} first={first}", t(k), t(lse))
+        Instruction::MaskBound { bound } => format!(
+            "mask_bound base={} diag={} cap={}",
+            bound.base, bound.diag, bound.cap
+        ),
+        Instruction::AttnScore { k, lse, first, masked } => {
+            format!("attn_score k={} lse={} first={first} masked={masked}", t(k), t(lse))
         }
         Instruction::AttnValue { v, out, first } => {
             format!("attn_value v={} out={} first={first}", t(v), t(out))
@@ -225,13 +278,45 @@ mod tests {
     #[test]
     fn classes_route_correctly() {
         let load = Instruction::LoadTile { src: tile(0, 4, 4), dst: tile(0, 4, 4) };
-        let comp = Instruction::AttnScore { k: tile(0, 4, 4), lse: tile(0, 1, 4), first: true };
+        let comp = Instruction::AttnScore {
+            k: tile(0, 4, 4),
+            lse: tile(0, 1, 4),
+            first: true,
+            masked: false,
+        };
+        let bound = Instruction::MaskBound { bound: LaneBound { base: 1, diag: true, cap: 4 } };
         assert_eq!(load.class(), Class::Load);
         assert_eq!(comp.class(), Class::Compute);
+        assert_eq!(bound.class(), Class::Compute);
+        assert!(bound.input_tile().is_none() && bound.output_tile().is_none());
+        assert!(!comp.is_masked_score());
         let mut p = Program::new();
         p.push(load);
         p.push(comp);
         assert_eq!(p.class_counts(), (1, 0, 1));
+    }
+
+    #[test]
+    fn lane_bound_arithmetic() {
+        // Causal diagonal tile: column m attends m+1 lanes.
+        let diag = LaneBound { base: 1, diag: true, cap: 8 };
+        assert_eq!(diag.bound(0), 1);
+        assert_eq!(diag.bound(7), 8);
+        assert!(!diag.is_full(8));
+        // Uniform padding boundary: every column attends 5 lanes.
+        let pad = LaneBound { base: 5, diag: false, cap: 8 };
+        assert!((0..8).all(|m| pad.bound(m) == 5));
+        // Negative bases clamp to zero (a chunk's pre-diagonal rows).
+        let neg = LaneBound { base: -3, diag: true, cap: 8 };
+        assert_eq!(neg.bound(0), 0);
+        assert_eq!(neg.bound(4), 2);
+        // A saturated bound over full-width lanes is "no mask"; a
+        // short cap (ragged tail) never is, even when every column
+        // saturates at it.
+        assert!(LaneBound { base: 8, diag: false, cap: 8 }.is_full(8));
+        assert!(!LaneBound { base: 8, diag: false, cap: 6 }.is_full(8));
+        assert!(LaneBound { base: 1, diag: true, cap: 1 }.is_full(1));
+        assert!(!LaneBound { base: 1, diag: true, cap: 8 }.is_full(8));
     }
 
     #[test]

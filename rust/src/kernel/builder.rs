@@ -2,7 +2,7 @@
 
 use anyhow::ensure;
 
-use crate::isa::{Instruction, Program, Space, TileDesc};
+use crate::isa::{Instruction, LaneBound, Program, Space, TileDesc};
 
 /// Main-memory tensor handle (paper's `MTile`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -114,7 +114,15 @@ impl KernelBuilder {
 
     /// `attn_score(K: STile, l: ATile)` — fused S = QK^T + online softmax.
     pub fn attn_score(&mut self, k: STile, l: ATile, first: bool) {
-        self.program.push(Instruction::AttnScore { k: k.0, lse: l.0, first });
+        self.program.push(Instruction::AttnScore { k: k.0, lse: l.0, first, masked: false });
+    }
+
+    /// Masked `attn_score` (DESIGN.md §8): programs the boundary
+    /// register and sets the score's mask flag, so the controller runs
+    /// the element-wise mask wave over the tile's invalid lanes.
+    pub fn masked_attn_score(&mut self, k: STile, l: ATile, first: bool, bound: LaneBound) {
+        self.program.push(Instruction::MaskBound { bound });
+        self.program.push(Instruction::AttnScore { k: k.0, lse: l.0, first, masked: true });
     }
 
     /// `attn_value(V: STile, O: ATile)` — O += P V.

@@ -10,9 +10,9 @@
 
 use anyhow::ensure;
 
-use crate::isa::{Program, Space, TileDesc};
+use crate::isa::{LaneBound, Program, Space, TileDesc};
 use crate::kernel::builder::{ATile, Alloc, KernelBuilder, MTile, STile};
-use crate::mask::{MaskKind, TileCoverage};
+use crate::mask::MaskKind;
 
 /// Static workload description.
 #[derive(Clone, Copy, Debug)]
@@ -65,11 +65,12 @@ pub fn flash_attention_program(p: &FlashParams, layout: &FlashLayout) -> crate::
 /// triangle disappears; asserted by the unit tests).
 ///
 /// Partially masked tiles (causal diagonal, padding boundary) are
-/// emitted unchanged here: the element-wise mask wave that zeroes their
-/// invalid lanes is a controller wave below the ISA's instruction
-/// granularity, priced by `schedule::InnerSchedule::masked_inner_latency`
-/// and modeled exactly by the reference numerics — encoding it as an ISA
-/// flag is listed in DESIGN.md §future-work alongside masked artifacts.
+/// emitted with the §8 mask wave encoded ([`crate::isa::LaneBound`] via
+/// `MaskBound` + the AttnScore mask flag), so running the program on
+/// the cycle simulator computes them bit-exactly — the CMP row excludes
+/// masked lanes from the rowmax and parks them as zero.  Priced by
+/// `schedule::InnerSchedule::masked_inner_latency` (one extra
+/// element-wise cycle), matching the perfmodel.
 pub fn flash_attention_program_masked(
     p: &FlashParams,
     layout: &FlashLayout,
@@ -77,63 +78,335 @@ pub fn flash_attention_program_masked(
 ) -> crate::Result<Program> {
     let n = p.d;
     ensure!(p.seq_len % n == 0, "seq_len {} must be a multiple of d {}", p.seq_len, n);
-    let tiles = p.seq_len / n;
-    let nn = n as u16;
+    let cp = ChunkParams {
+        n,
+        valid_queries: p.seq_len,
+        valid_keys: p.seq_len,
+        key_offset: 0,
+        total_keys: p.seq_len,
+        mask,
+        spad_elems: p.spad_elems,
+        accum_elems: p.accum_elems,
+    };
+    let cl = ChunkLayout {
+        q_addr: layout.q_addr,
+        k_addr: layout.k_addr,
+        v_addr: layout.v_addr,
+        o_addr: layout.o_addr,
+        // The legacy layout carries no l region; normalized programs
+        // never store it.
+        l_addr: layout.o_addr,
+    };
+    flash_chunk_program(&cp, &cl)
+}
 
-    let q_mem = MTile(TileDesc::contiguous(Space::Main, layout.q_addr, p.seq_len as u16, nn));
-    let k_mem = MTile(TileDesc::contiguous(Space::Main, layout.k_addr, p.seq_len as u16, nn));
-    let v_mem = MTile(TileDesc::contiguous(Space::Main, layout.v_addr, p.seq_len as u16, nn));
+// ---------------------------------------------------------------------
+// Serving-shaped program variants (DESIGN.md §8): the units the sim
+// backend executes.  Q/K/V live zero-padded to whole N x N tiles; the
+// §8 mask wave covers partial tiles AND the zero-padded ragged tails,
+// so any (seq_len, d <= N) shape runs on the array bit-exactly.
+// ---------------------------------------------------------------------
 
-    let q_blocks = q_mem.split_rows(nn);
-    let k_blocks = k_mem.split_rows(nn);
-    let v_blocks = v_mem.split_rows(nn);
+/// One serving-shaped workload: the (zero-padded) query sequence
+/// against one key/value chunk at *global* key coordinates — the whole
+/// sequence for stateless/prefill heads (`key_offset = 0`,
+/// `valid_keys == total_keys`), a sub-range for sequence-parallel
+/// chunks, and a single query row for decode
+/// ([`ChunkParams::decode_row`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkParams {
+    /// Array dim N (tile size; the head dim rides zero-padded to it).
+    pub n: usize,
+    /// Real query rows (the rest of the last row block is zero padding;
+    /// its columns compute garbage the caller never reads).
+    pub valid_queries: usize,
+    /// Real key rows in this chunk.
+    pub valid_keys: usize,
+    /// Global key index of the chunk's first key.
+    pub key_offset: usize,
+    /// Real keys of the whole sequence (mask coordinates).
+    pub total_keys: usize,
+    pub mask: MaskKind,
+    pub spad_elems: u32,
+    pub accum_elems: u32,
+}
 
-    // Double buffering (Listing 2): ping-pong STile pairs for Q, K, V.
+impl ChunkParams {
+    /// Whole-sequence params for one `(seq_len, d)` head on an `n`-array
+    /// with the default 6-tile scratchpad / lse+O^T accumulator budget.
+    pub fn whole(n: usize, seq_len: usize, mask: MaskKind) -> ChunkParams {
+        ChunkParams {
+            n,
+            valid_queries: seq_len,
+            valid_keys: seq_len,
+            key_offset: 0,
+            total_keys: seq_len,
+            mask,
+            spad_elems: (6 * n * n) as u32,
+            accum_elems: (n * n + n) as u32,
+        }
+    }
+
+    /// The `br = 1` decode-row degeneration: one real query row over a
+    /// `prefix_len`-key prefix, no mask (the step row attends the whole
+    /// prefix; a ragged final tile rides zero-padded under the wave).
+    pub fn decode_row(n: usize, prefix_len: usize) -> ChunkParams {
+        let mut p = ChunkParams::whole(n, prefix_len, MaskKind::None);
+        p.valid_queries = 1;
+        p
+    }
+
+    /// Sequence-parallel chunk params: keys `[key_offset, key_offset +
+    /// chunk_len)` of a `total_keys` sequence (DESIGN.md §7).
+    pub fn chunk(
+        n: usize,
+        seq_len: usize,
+        mask: MaskKind,
+        key_offset: usize,
+        chunk_len: usize,
+        total_keys: usize,
+    ) -> ChunkParams {
+        let mut p = ChunkParams::whole(n, seq_len, mask);
+        p.valid_keys = chunk_len;
+        p.key_offset = key_offset;
+        p.total_keys = total_keys;
+        p
+    }
+
+    /// Query rows padded up to whole row blocks.
+    pub fn padded_queries(&self) -> usize {
+        self.valid_queries.div_ceil(self.n).max(1) * self.n
+    }
+
+    /// Key rows padded up to whole column tiles.
+    pub fn padded_keys(&self) -> usize {
+        self.valid_keys.div_ceil(self.n).max(1) * self.n
+    }
+
+    /// Row blocks of the padded query sequence.
+    pub fn row_blocks(&self) -> usize {
+        self.padded_queries() / self.n
+    }
+
+    /// The §8 lane boundary of tile `(row block i, column tile j)` and
+    /// whether the tile is issued at all (live for at least one *real*
+    /// query row).  The boundary is exactly the reference kernel's
+    /// per-row valid-lane prefix, `clamp(valid_keys(q) - key_offset -
+    /// lk0, 0, w)` with `w` the tile's real key lanes — linear in the
+    /// stationary column for both mask kinds.
+    pub fn tile_bound(&self, block: usize, col_tile: usize) -> (bool, LaneBound) {
+        let n = self.n;
+        let gq0 = block * n;
+        let lk0 = col_tile * n;
+        let w = n.min(self.valid_keys.saturating_sub(lk0));
+        let gk0 = (self.key_offset + lk0) as i64;
+        let bound = match self.mask {
+            MaskKind::Causal => LaneBound {
+                base: (gq0 as i64 + 1 - gk0).clamp(i32::MIN as i64, i32::MAX as i64) as i32,
+                diag: true,
+                cap: w as u16,
+            },
+            MaskKind::None => LaneBound { base: w as i32, diag: false, cap: w as u16 },
+            MaskKind::PaddingKeys { valid } => LaneBound {
+                base: (valid as i64 - gk0).clamp(0, w as i64) as i32,
+                diag: false,
+                cap: w as u16,
+            },
+        };
+        let rows_real = n.min(self.valid_queries.saturating_sub(gq0));
+        let live = w > 0 && (0..rows_real).any(|m| bound.bound(m) > 0);
+        (live, bound)
+    }
+}
+
+/// Where a chunk program's operands live in device main memory, all
+/// zero-padded `(padded rows, n)` row-major: Q `(padded_queries, n)`,
+/// K/V `(padded_keys, n)`, O^T blocks (`[n, n]` per row block) at
+/// `o_addr`, and — partial programs only — the per-block accumulated
+/// `l` vectors (`[1, n]` each) at `l_addr`.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkLayout {
+    pub q_addr: u32,
+    pub k_addr: u32,
+    pub v_addr: u32,
+    pub o_addr: u32,
+    pub l_addr: u32,
+}
+
+impl ChunkLayout {
+    /// Packed default layout for a workload.
+    pub fn packed(p: &ChunkParams) -> ChunkLayout {
+        let n = p.n as u32;
+        let q = (p.padded_queries() as u32) * n;
+        let k = (p.padded_keys() as u32) * n;
+        ChunkLayout {
+            q_addr: 0,
+            k_addr: q,
+            v_addr: q + k,
+            o_addr: q + 2 * k,
+            l_addr: 2 * q + 2 * k,
+        }
+    }
+
+    /// Total main-memory elements the program touches.
+    pub fn mem_elems(&self, p: &ChunkParams) -> usize {
+        self.l_addr as usize + p.row_blocks() * p.n
+    }
+}
+
+/// Emit one row block's inner loop (Q load, tile-skipping K/V stream
+/// with the §8 mask wave) into `b`.  Returns the number of issued
+/// tiles.
+#[allow(clippy::too_many_arguments)]
+fn emit_row_block(
+    b: &mut KernelBuilder,
+    p: &ChunkParams,
+    q_block: MTile,
+    k_blocks: &[MTile],
+    v_blocks: &[MTile],
+    st: &BlockTiles,
+    block: usize,
+) -> crate::Result<usize> {
+    let n = p.n;
+    b.load_tile(q_block, st.q[block % 2])?;
+    let mut issued = 0usize;
+    for (j, (k_j, v_j)) in k_blocks.iter().zip(v_blocks).enumerate() {
+        if j * n >= p.valid_keys {
+            break; // pure-padding column tiles are never issued
+        }
+        let (live, bound) = p.tile_bound(block, j);
+        if !live {
+            continue;
+        }
+        b.load_stationary(st.q[block % 2]);
+        b.load_tile(*k_j, st.k[issued % 2])?;
+        if bound.is_full(n) {
+            b.attn_score(st.k[issued % 2], st.lse, issued == 0);
+        } else {
+            b.masked_attn_score(st.k[issued % 2], st.lse, issued == 0, bound);
+        }
+        b.load_tile(*v_j, st.v[issued % 2])?;
+        b.attn_value(st.v[issued % 2], st.ot, issued == 0);
+        issued += 1;
+    }
+    Ok(issued)
+}
+
+/// The double-buffered scratchpad tiles + accumulator tiles one chunk
+/// program works in.
+struct BlockTiles {
+    q: [STile; 2],
+    k: [STile; 2],
+    v: [STile; 2],
+    lse: ATile,
+    ot: ATile,
+}
+
+fn alloc_tiles(p: &ChunkParams) -> crate::Result<BlockTiles> {
+    let nn = p.n as u16;
     let mut spad = Alloc::new(Space::Spad, p.spad_elems);
-    let q_st = [STile(spad.tile(nn, nn)?), STile(spad.tile(nn, nn)?)];
-    let k_st = [STile(spad.tile(nn, nn)?), STile(spad.tile(nn, nn)?)];
-    let v_st = [STile(spad.tile(nn, nn)?), STile(spad.tile(nn, nn)?)];
-
-    // Accumulator: log-exp-sum vector + O^T tile (reused per row block —
-    // legal because the epilogue store completes before the next block's
-    // first attn_value, which the machine scoreboards).
+    let q = [STile(spad.tile(nn, nn)?), STile(spad.tile(nn, nn)?)];
+    let k = [STile(spad.tile(nn, nn)?), STile(spad.tile(nn, nn)?)];
+    let v = [STile(spad.tile(nn, nn)?), STile(spad.tile(nn, nn)?)];
     let mut accum = Alloc::new(Space::Accum, p.accum_elems);
     let lse = ATile(accum.tile(1, nn)?);
     let ot = ATile(accum.tile(nn, nn)?);
+    Ok(BlockTiles { q, k, v, lse, ot })
+}
 
+fn mem_blocks(p: &ChunkParams, l: &ChunkLayout) -> (Vec<MTile>, Vec<MTile>, Vec<MTile>) {
+    let nn = p.n as u16;
+    let q = MTile(TileDesc::contiguous(Space::Main, l.q_addr, p.padded_queries() as u16, nn));
+    let k = MTile(TileDesc::contiguous(Space::Main, l.k_addr, p.padded_keys() as u16, nn));
+    let v = MTile(TileDesc::contiguous(Space::Main, l.v_addr, p.padded_keys() as u16, nn));
+    (q.split_rows(nn), k.split_rows(nn), v.split_rows(nn))
+}
+
+/// The full chunk program with the normalizing epilogue — the sim
+/// backend's unit for stateless/prefill heads and (via
+/// [`ChunkParams::decode_row`]) decode steps.  Errors when the mask
+/// leaves a row block without any live tile (a fully-masked operator;
+/// callers return the defined zero output without running the array).
+pub fn flash_chunk_program(p: &ChunkParams, layout: &ChunkLayout) -> crate::Result<Program> {
+    let n = p.n;
+    let st = alloc_tiles(p)?;
+    let (q_blocks, k_blocks, v_blocks) = mem_blocks(p, layout);
     let mut b = KernelBuilder::new();
     for (i, q_i) in q_blocks.iter().enumerate() {
-        b.load_tile(*q_i, q_st[i % 2])?;
-        // Tile-skipping schedule: only issue column tiles the mask
-        // leaves at least partially live; ping-pong buffers alternate
-        // over *issued* tiles, and the `first` accumulate-reset flag
-        // belongs to the first issued tile of the row block.
-        let mut issued = 0usize;
-        for (j, (k_j, v_j)) in k_blocks.iter().zip(&v_blocks).enumerate() {
-            if mask.coverage(i * n, n, j * n, n) == TileCoverage::Empty {
-                continue;
-            }
-            b.load_stationary(q_st[i % 2]);
-            b.load_tile(*k_j, k_st[issued % 2])?;
-            b.attn_score(k_st[issued % 2], lse, issued == 0);
-            b.load_tile(*v_j, v_st[issued % 2])?;
-            b.attn_value(v_st[issued % 2], ot, issued == 0);
-            issued += 1;
-        }
+        let issued = emit_row_block(&mut b, p, *q_i, &k_blocks, &v_blocks, &st, i)?;
         ensure!(issued > 0, "mask leaves row block {i} without any live tile");
-        b.reciprocal(lse);
-        b.attn_lse_norm(ot, lse);
-        // O^T block i -> main memory.
+        b.reciprocal(st.lse);
+        b.attn_lse_norm(st.ot, st.lse);
         let o_dst = MTile(TileDesc::contiguous(
             Space::Main,
             layout.o_addr + (i * n * n) as u32,
-            nn,
-            nn,
+            n as u16,
+            n as u16,
         ));
-        b.store_tile(ot, o_dst)?;
-        let _ = tiles;
+        b.store_tile(st.ot, o_dst)?;
     }
     Ok(b.build())
+}
+
+/// One row block of the *partial-state* variant (DESIGN.md §8): no
+/// reciprocal/norm — the unnormalized O^T block and the accumulated
+/// `l` vector are stored raw, and the per-row running max `m` is read
+/// from the CMP registers after the run (which is why partial programs
+/// are per-row-block: the CMP row holds one block's state at a time).
+/// `Ok(None)` when the chunk leaves the block without any live tile —
+/// the partial stays the empty `(0, -inf, 0)` state, the merge
+/// identity.
+pub fn flash_chunk_partial_program(
+    p: &ChunkParams,
+    layout: &ChunkLayout,
+    block: usize,
+) -> crate::Result<Option<Program>> {
+    let n = p.n;
+    ensure!(block < p.row_blocks(), "row block {block} out of range");
+    let st = alloc_tiles(p)?;
+    let (q_blocks, k_blocks, v_blocks) = mem_blocks(p, layout);
+    let mut b = KernelBuilder::new();
+    let issued = emit_row_block(&mut b, p, q_blocks[block], &k_blocks, &v_blocks, &st, block)?;
+    if issued == 0 {
+        return Ok(None);
+    }
+    let o_dst = MTile(TileDesc::contiguous(
+        Space::Main,
+        layout.o_addr + (block * n * n) as u32,
+        n as u16,
+        n as u16,
+    ));
+    b.store_tile(st.ot, o_dst)?;
+    let l_dst = MTile(TileDesc::contiguous(
+        Space::Main,
+        layout.l_addr + (block * n) as u32,
+        1,
+        n as u16,
+    ));
+    b.store_tile(st.lse, l_dst)?;
+    Ok(Some(b.build()))
+}
+
+/// The `br = 1` decode-row program (normalized): convenience wrapper
+/// over [`flash_chunk_program`] at [`ChunkParams::decode_row`] shape.
+pub fn flash_decode_row_program(n: usize, prefix_len: usize) -> crate::Result<(ChunkParams, ChunkLayout, Program)> {
+    let p = ChunkParams::decode_row(n, prefix_len);
+    let layout = ChunkLayout::packed(&p);
+    let prog = flash_chunk_program(&p, &layout)?;
+    Ok((p, layout, prog))
+}
+
+/// The split-KV decode-range program (partial state, single row
+/// block): the unit `Backend::execute_decode_row_partial` runs.
+pub fn flash_decode_row_partial_program(
+    n: usize,
+    range_len: usize,
+) -> crate::Result<(ChunkParams, ChunkLayout, Program)> {
+    let p = ChunkParams::decode_row(n, range_len);
+    let layout = ChunkLayout::packed(&p);
+    let prog = flash_chunk_partial_program(&p, &layout, 0)?
+        .expect("an unmasked decode range always has live tiles");
+    Ok((p, layout, prog))
 }
 
 /// De-transpose the stored `[d, Br]` output blocks into a row-major
@@ -199,14 +472,26 @@ mod tests {
         let causal = flash_attention_program_masked(&p, &layout, MaskKind::Causal).unwrap();
         let t = 512 / 128;
         // Row block i issues i+1 column tiles instead of t: the inner
-        // loop shrinks from t² = 16 to t(t+1)/2 = 10 iterations.
+        // loop shrinks from t² = 16 to t(t+1)/2 = 10 iterations.  The t
+        // diagonal tiles each add one MaskBound register write (the §8
+        // mask wave encoding).
         let issued = t * (t + 1) / 2;
-        assert_eq!(causal.len(), t * (1 + 3) + issued * 5);
+        assert_eq!(causal.len(), t * (1 + 3) + issued * 5 + t);
         assert!(causal.len() < square.len());
         let (loads, stores, computes) = causal.class_counts();
         assert_eq!(loads, t + 2 * issued, "1 Q load per block + K/V per issued tile");
         assert_eq!(stores, t);
-        assert_eq!(computes, 3 * issued + 2 * t);
+        assert_eq!(computes, 3 * issued + 2 * t + t, "+t diagonal MaskBounds");
+        // Exactly the diagonal scores carry the mask flag, each paired
+        // with the MaskBound programming its boundary register.
+        let masked_scores =
+            causal.instructions.iter().filter(|i| i.is_masked_score()).count();
+        let bounds = causal
+            .instructions
+            .iter()
+            .filter(|i| matches!(i, Instruction::MaskBound { .. }))
+            .count();
+        assert_eq!((masked_scores, bounds), (t, t));
         // The accumulate-reset flag moves to the first *issued* tile of
         // each row block — exactly one reset per block.
         let firsts: Vec<bool> = causal
@@ -248,6 +533,98 @@ mod tests {
         // One fp16 element less of scratchpad must fail: the budget is tight.
         let q = FlashParams { spad_elems: 192 * 1024 / 2 - 1, ..p };
         assert!(flash_attention_program(&q, &FlashLayout::packed(&q)).is_err());
+    }
+
+    #[test]
+    fn chunk_params_cover_ragged_padded_and_chunked_shapes() {
+        // Ragged: 40 queries / 40 keys on a 32-array pad to 64 each.
+        let p = ChunkParams::whole(32, 40, MaskKind::None);
+        assert_eq!((p.padded_queries(), p.padded_keys(), p.row_blocks()), (64, 64, 2));
+        // The ragged tail tile masks its 24 padded lanes uniformly.
+        let (live, b) = p.tile_bound(0, 1);
+        assert!(live);
+        assert_eq!((b.base, b.diag, b.cap), (8, false, 8));
+        assert!(!b.is_full(32));
+        // Full interior tile needs no wave.
+        let (live, b) = p.tile_bound(0, 0);
+        assert!(live && b.is_full(32));
+
+        // Causal diagonal tile: boundary advances with the column.
+        let c = ChunkParams::whole(32, 64, MaskKind::Causal);
+        let (live, b) = c.tile_bound(1, 1);
+        assert!(live);
+        assert_eq!((b.base, b.diag, b.cap), (1, true, 32));
+        // Above-diagonal tile is never issued.
+        assert!(!c.tile_bound(0, 1).0);
+        // Below-diagonal tile runs unmasked.
+        assert!(c.tile_bound(1, 0).1.is_full(32));
+
+        // A sequence-parallel chunk evaluates the mask at global key
+        // coordinates: the second 32-key chunk of a 64-key causal
+        // sequence is dead for row block 0 and diagonal for block 1.
+        let ch = ChunkParams::chunk(32, 64, MaskKind::Causal, 32, 32, 64);
+        assert!(!ch.tile_bound(0, 0).0);
+        let (live, b) = ch.tile_bound(1, 0);
+        assert!(live);
+        assert_eq!((b.base, b.diag), (1, true));
+
+        // Decode row: one real query, ragged prefix.
+        let d = ChunkParams::decode_row(32, 37);
+        assert_eq!((d.valid_queries, d.row_blocks(), d.padded_keys()), (1, 1, 64));
+        assert_eq!(d.tile_bound(0, 1).1.bound(0), 5);
+    }
+
+    #[test]
+    fn chunk_and_partial_programs_have_serving_shapes() {
+        // Normalized chunk program == the legacy masked program on the
+        // legacy shape (exact tiles, whole range).
+        let p = FlashParams { seq_len: 256, d: 128, spad_elems: 6 * 128 * 128, accum_elems: 128 * 129 };
+        let legacy = flash_attention_program_masked(&p, &FlashLayout::packed(&p), MaskKind::Causal)
+            .unwrap();
+        let cp = ChunkParams {
+            spad_elems: p.spad_elems,
+            accum_elems: p.accum_elems,
+            ..ChunkParams::whole(128, 256, MaskKind::Causal)
+        };
+        let fl = FlashLayout::packed(&p);
+        let cl = ChunkLayout {
+            q_addr: fl.q_addr,
+            k_addr: fl.k_addr,
+            v_addr: fl.v_addr,
+            o_addr: fl.o_addr,
+            l_addr: fl.o_addr,
+        };
+        assert_eq!(flash_chunk_program(&cp, &cl).unwrap(), legacy);
+
+        // Partial program: one row block, stores O^T + l raw, no
+        // reciprocal / lse-norm.
+        let cp = ChunkParams::whole(32, 64, MaskKind::None);
+        let cl = ChunkLayout::packed(&cp);
+        let part = flash_chunk_partial_program(&cp, &cl, 1).unwrap().unwrap();
+        assert!(!part
+            .instructions
+            .iter()
+            .any(|i| matches!(i, Instruction::Reciprocal { .. } | Instruction::AttnLseNorm { .. })));
+        let (_, stores, _) = part.class_counts();
+        assert_eq!(stores, 2, "O^T block + l vector");
+
+        // A block the chunk fully masks yields no program (the merge
+        // identity): causal chunk [32, 64) for row block 0.
+        let dead = ChunkParams::chunk(32, 64, MaskKind::Causal, 32, 32, 64);
+        assert!(flash_chunk_partial_program(&dead, &ChunkLayout::packed(&dead), 0)
+            .unwrap()
+            .is_none());
+        assert!(flash_chunk_partial_program(&dead, &ChunkLayout::packed(&dead), 1)
+            .unwrap()
+            .is_some());
+
+        // Decode-row wrappers: single row block, ragged prefix padded.
+        let (dp, dl, prog) = flash_decode_row_program(32, 37).unwrap();
+        assert_eq!(dp.row_blocks(), 1);
+        assert!(dl.mem_elems(&dp) > 0);
+        assert!(!prog.is_empty());
+        let (_, _, partial) = flash_decode_row_partial_program(32, 37).unwrap();
+        assert!(partial.len() < prog.len(), "partial drops the epilogue");
     }
 
     #[test]

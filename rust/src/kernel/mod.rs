@@ -17,4 +17,8 @@ pub mod builder;
 pub mod flash;
 
 pub use builder::{ATile, KernelBuilder, MTile, STile};
-pub use flash::{flash_attention_program, FlashLayout, FlashParams};
+pub use flash::{
+    flash_attention_program, flash_attention_program_masked, flash_chunk_partial_program,
+    flash_chunk_program, flash_decode_row_partial_program, flash_decode_row_program,
+    ChunkLayout, ChunkParams, FlashLayout, FlashParams,
+};

@@ -21,7 +21,8 @@
 //! * [`numerics`] — software fp16, PWL exp2 (the Split-unit contract), RNG.
 //! * [`mask`] — attention mask kinds (causal / key padding) shared by
 //!   numerics, schedule, perfmodel and the serving path (DESIGN.md §6).
-//! * [`isa`] — the 7-instruction FSA ISA with binary encode/decode.
+//! * [`isa`] — the 8-instruction FSA ISA (incl. the §8 `MaskBound`
+//!   boundary register) with binary encode/decode.
 //! * [`schedule`] — SystolicAttention wavefront schedules + latency formulas.
 //! * [`sim`] — cycle-accurate array/accumulator/SRAM/DMA/controller model.
 //! * [`perfmodel`] — deterministic instruction-level timing for full
@@ -30,7 +31,8 @@
 //! * [`area`] — Table-3 area model.
 //! * [`kernel`] — §5 programming model: MTile/STile/ATile + KernelBuilder.
 //! * [`runtime`] — artifact loading + the per-head execution
-//!   [`runtime::Backend`] (PJRT HLO-text path or the reference twin).
+//!   [`runtime::Backend`] (PJRT HLO-text path, the reference twin, or
+//!   the cycle-accurate sim backend with measured-cycle pricing, §8).
 //! * [`coordinator`] — multi-head request path: head sharding/gather,
 //!   affinity router, batcher, device workers, metrics; session
 //!   lifecycle + paged KV caches for decode-phase serving.

@@ -29,20 +29,27 @@ Experiment commands (paper artifact regeneration):
 Device / serving commands:
   disasm  [--seq 512 --d 128]  compile + disassemble the flash kernel
   serve   [--requests 16 --devices 2 --seq 512 --artifacts DIR]
-          [--heads 1 --kv-heads 1 --backend pjrt|reference|auto]
+          [--heads 1 --kv-heads 1 --backend pjrt|reference|sim|auto]
           [--mask none|causal --freq-ghz 1.5 --seq-shards 1]
+          [--sim-max-seq 1024 --array-size 128]
                                boot the coordinator and serve a workload
                                (multi-head/GQA requests are sharded
                                per head across the device pool; --mask
                                causal serves exact causal prefill with
                                the tile-skipping schedule and needs
-                               --backend reference — the AOT artifacts
-                               take no mask, and auto picks PJRT
-                               whenever artifacts exist; --seq-shards N
-                               additionally splits every K/V into N
-                               sequence chunks merged exactly at gather
-                               — long-context serving past one device,
-                               reference backend only)
+                               --backend reference|sim — the AOT
+                               artifacts take no mask, and auto picks
+                               PJRT whenever artifacts exist;
+                               --seq-shards N additionally splits every
+                               K/V into N sequence chunks merged exactly
+                               at gather — long-context serving past one
+                               device, reference|sim backends only;
+                               --backend sim executes every shard on the
+                               cycle-accurate machine, bitwise-equal to
+                               reference, priced by MEASURED cycles —
+                               O(L²) per shard, guarded by
+                               --sim-max-seq; --array-size shrinks the
+                               simulated array for fast sim runs)
           [--decode-steps 0 --sessions 1 --kv-pages 4096
            --page-size 16 --eviction lru|none]
                                with --decode-steps > 0: decode-phase
@@ -137,6 +144,8 @@ fn serve(args: &Args) -> fsa::Result<()> {
     cfg.mask = args.flag("mask").unwrap_or("none").parse()?;
     cfg.freq_ghz = args.get("freq-ghz", cfg.freq_ghz)?;
     cfg.seq_shards = args.get("seq-shards", cfg.seq_shards)?;
+    cfg.sim_max_seq = args.get("sim-max-seq", cfg.sim_max_seq)?;
+    cfg.array_size = args.get("array-size", cfg.array_size)?;
     let n_req = args.get("requests", 16usize)?;
     let seq = args.get("seq", 512usize)?;
     let d = args.get("d", 128usize)?;

@@ -662,6 +662,73 @@ pub fn seqpar_pool_perf(
     }
 }
 
+/// One modeled-vs-measured comparison (DESIGN.md §8): the analytic
+/// tile-cycle prediction of [`fsa_flash_perf_masked`] against the
+/// cycles the cycle-accurate machine actually takes executing the same
+/// masked program shape.
+#[derive(Clone, Copy, Debug)]
+pub struct SimCrossCheck {
+    pub seq_len: usize,
+    pub mask: MaskKind,
+    /// `fsa_flash_perf_masked(..).total_cycles`.
+    pub modeled: u64,
+    /// `sim::RunStats::cycles` of the compiled program on the machine.
+    pub measured: u64,
+    /// `measured / modeled`.
+    pub ratio: f64,
+}
+
+/// The pinned agreement band of [`sim_cross_check`]: the model prices
+/// issued tiles at the §3.5 chained latencies plus DMA
+/// startup/epilogues, while the machine additionally exposes real
+/// scoreboard stalls and the final store drain — they must agree within
+/// ±15% or one of them has drifted (asserted by the perfmodel tests,
+/// the `simcycles` bench, and the coordinator e2e).
+pub const SIM_MODEL_BAND: (f64, f64) = (0.85, 1.15);
+
+impl SimCrossCheck {
+    pub fn within_band(&self) -> bool {
+        self.ratio >= SIM_MODEL_BAND.0 && self.ratio <= SIM_MODEL_BAND.1
+    }
+}
+
+/// Cross-validate the analytic model against the machine: compile the
+/// `(seq_len, mask)` head at the config's array size, run it on a
+/// [`crate::sim::Machine`] built from the same config (same DMA
+/// bandwidth, clock, PWL segments), and compare cycle counts.  Timing
+/// is data-independent, so the device memory stays zeroed.  This is the
+/// §8 contract that keeps the perfmodel honest — `backend=sim` prices
+/// shards with the measured number, and this function is how tests
+/// assert the modeled number tracks it.
+pub fn sim_cross_check(
+    cfg: &AccelConfig,
+    seq_len: usize,
+    mask: MaskKind,
+    segments: usize,
+) -> crate::Result<SimCrossCheck> {
+    use crate::kernel::flash::{flash_chunk_program, ChunkLayout, ChunkParams};
+    use crate::sim::{Machine, MachineConfig};
+
+    let n = cfg.array_size;
+    let modeled =
+        fsa_flash_perf_masked(cfg, seq_len, n, Variant::DualPath, segments, mask).total_cycles;
+    let p = ChunkParams::whole(n, seq_len, mask);
+    let layout = ChunkLayout::packed(&p);
+    let prog = flash_chunk_program(&p, &layout)?;
+    let mut mc = MachineConfig::from_accel(cfg);
+    mc.segments = segments;
+    mc.mem_elems = layout.mem_elems(&p).max(1 << 12);
+    let mut machine = Machine::new(mc);
+    let stats = machine.run_program(&prog)?;
+    Ok(SimCrossCheck {
+        seq_len,
+        mask,
+        modeled,
+        measured: stats.cycles,
+        ratio: stats.cycles as f64 / modeled.max(1) as f64,
+    })
+}
+
 /// Whole-operator FLOPs/s utilization from *observed* per-device cycle
 /// totals (what the coordinator's gather measures): achieved FLOPs over
 /// the pool's peak for the critical-path duration.  Returns 0 when no
@@ -1010,6 +1077,45 @@ mod tests {
         // Cost is conserved up to merge/communication overhead.
         assert!(sp4.total_cycles >= mh.total_cycles);
         assert!(sp4.utilization > 0.0 && sp4.utilization < 1.0);
+    }
+
+    /// Acceptance: measured sim cycles track the modeled tile-cycles
+    /// within the pinned band on at least 3 shapes — the §8
+    /// cross-validation that keeps the analytic model from silently
+    /// drifting away from the machine it describes.
+    #[test]
+    fn modeled_cycles_match_measured_sim_cycles_within_band() {
+        // A shrunken FSA (32-array) so the cycle-accurate runs stay in
+        // the millisecond range; bandwidth/clock are the paper's.
+        let mut cfg = fsa();
+        cfg.array_size = 32;
+        let shapes = [
+            (64usize, MaskKind::None),
+            (96, MaskKind::Causal),
+            (64, MaskKind::PaddingKeys { valid: 40 }),
+            (128, MaskKind::None),
+        ];
+        for &(l, mask) in &shapes {
+            let c = sim_cross_check(&cfg, l, mask, 8).unwrap();
+            assert!(
+                c.within_band(),
+                "L={l} {mask:?}: measured {} vs modeled {} (ratio {:.3}) outside {:?}",
+                c.measured,
+                c.modeled,
+                c.ratio,
+                SIM_MODEL_BAND
+            );
+        }
+        // The masked model prices fewer tiles, and the machine takes
+        // correspondingly fewer cycles: both sides must agree that
+        // causal ≈ halves the square cost at the same L.
+        let square = sim_cross_check(&cfg, 128, MaskKind::None, 8).unwrap();
+        let causal = sim_cross_check(&cfg, 128, MaskKind::Causal, 8).unwrap();
+        let measured_ratio = causal.measured as f64 / square.measured as f64;
+        assert!(
+            measured_ratio > 0.45 && measured_ratio < 0.75,
+            "measured causal/square = {measured_ratio}"
+        );
     }
 
     #[test]

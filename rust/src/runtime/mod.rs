@@ -8,6 +8,8 @@
 //! `python/compile/aot.py`) indexes every artifact with its workload
 //! metadata; [`Runtime`] compiles lazily and caches executables.
 
+pub mod sim_backend;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -18,6 +20,8 @@ use crate::mask::MaskKind;
 use crate::numerics::reference::{
     decode_pwl, decode_pwl_partial, flash_pwl_masked, flash_pwl_partial, FlashPartial, Mat,
 };
+
+pub use sim_backend::SimBackend;
 
 /// One manifest row.
 #[derive(Clone, Debug, PartialEq)]
@@ -229,6 +233,11 @@ pub enum Backend {
         /// PWL exp2 segment count.
         segments: usize,
     },
+    /// The cycle-accurate machine (DESIGN.md §8): shards compile to ISA
+    /// programs and execute on [`crate::sim::Machine`], bitwise-equal
+    /// to the reference twin, with *measured* cycles replacing the
+    /// modeled latency ([`Backend::take_measured`]).
+    Sim(SimBackend),
 }
 
 impl Backend {
@@ -244,6 +253,7 @@ impl Backend {
         };
         match kind {
             BackendKind::Reference => Ok(reference()),
+            BackendKind::Sim => Ok(Backend::Sim(SimBackend::new(cfg))),
             BackendKind::Pjrt => Ok(Backend::Pjrt(Runtime::new(artifacts)?)),
             BackendKind::Auto => {
                 if artifacts.join("manifest.txt").exists() {
@@ -269,6 +279,19 @@ impl Backend {
         match self {
             Backend::Pjrt(_) => "pjrt",
             Backend::Reference { .. } => "reference",
+            Backend::Sim(_) => "sim",
+        }
+    }
+
+    /// Measured device cycles of the last execution, when this backend
+    /// measures rather than models (the sim backend).  Workers call
+    /// this immediately after an `execute_*` and price the shard with
+    /// the measured number, falling back to the perfmodel prediction
+    /// on `None` (DESIGN.md §8's measured-vs-modeled contract).
+    pub fn take_measured(&mut self) -> Option<u64> {
+        match self {
+            Backend::Sim(s) => s.take_measured(),
+            _ => None,
         }
     }
 
@@ -329,6 +352,7 @@ impl Backend {
                 Ok(flash_pwl_masked(&qm, &km, &vm, *array_size, *array_size, *segments, mask)
                     .data)
             }
+            Backend::Sim(s) => s.execute_head(seq_len, d, q, k, v, mask),
         }
     }
 
@@ -382,6 +406,9 @@ impl Backend {
                     mask, key_offset, total_keys,
                 ))
             }
+            Backend::Sim(s) => s.execute_head_partial(
+                seq_len, d, q, k_chunk, v_chunk, mask, key_offset, total_keys,
+            ),
         }
     }
 
@@ -419,6 +446,7 @@ impl Backend {
             Backend::Reference { array_size, segments } => {
                 Ok(decode_pwl(q_row, k, v, d, *array_size, *segments))
             }
+            Backend::Sim(s) => s.execute_decode_row(prefix_len, d, q_row, k, v),
         }
     }
 
@@ -452,6 +480,7 @@ impl Backend {
             Backend::Reference { array_size, segments } => {
                 Ok(decode_pwl_partial(q_row, k, v, d, *array_size, *segments))
             }
+            Backend::Sim(s) => s.execute_decode_row_partial(range_len, d, q_row, k, v),
         }
     }
 }

@@ -1,0 +1,308 @@
+//! The cycle-accurate serving backend (`backend=sim`, DESIGN.md §8):
+//! executes attention shards by compiling an ISA program
+//! ([`crate::kernel::flash`]'s chunk / decode-row / partial variants)
+//! and running it on the [`crate::sim::Machine`] — the same dataflow
+//! model that validates the paper's §3.5 schedule, now on the request
+//! path.
+//!
+//! Two contracts distinguish it from the analytic path:
+//!
+//! * **Bitwise numerics.**  Outputs are bitwise-equal to the reference
+//!   twin (`flash_pwl_masked` tiled at the array size): both sides share
+//!   the PWL exp2, the fp16 quantization points and the accumulation
+//!   orders, and the §8 mask wave makes partially-masked tiles and
+//!   zero-padded ragged tails exact.  Pinned by `rust/tests/sim_backend.rs`
+//!   and end-to-end by `rust/tests/coordinator_sim.rs`, and machine-
+//!   verified by the float32 port in
+//!   `python/tests/test_sim_backend_bitwise.py`.
+//! * **Measured cycles.**  Every execution returns the machine's
+//!   [`RunStats::cycles`]; device workers price shards with the
+//!   *measured* number instead of the perfmodel's prediction
+//!   ([`SimBackend::take_measured`]), and the perfmodel cross-validates
+//!   against it (`perfmodel::sim_cross_check`) so the analytic model
+//!   can never silently drift from the machine it claims to describe.
+//!
+//! Shapes: the head dim rides zero-padded to the array size (`d <= N`;
+//! the softmax scale stays `log2(e)/sqrt(d)` via
+//! [`MachineConfig::scale_dim`]), and any sequence length tiles with the
+//! mask wave covering the padded tail.  Cost is the real reason for the
+//! `sim_max_seq` admission guard: a program is O(L²/N²) tiles of
+//! ~`5N+10` cycles, each cycle stepping N² PEs — O(L²·N) PE-steps per
+//! head shard.
+
+use crate::config::AccelConfig;
+use crate::kernel::flash::{
+    flash_chunk_partial_program, flash_chunk_program, ChunkLayout, ChunkParams,
+};
+use crate::mask::MaskKind;
+use crate::numerics::reference::FlashPartial;
+use crate::sim::{Machine, MachineConfig, RunStats};
+
+/// One simulated FSA card behind a device worker.
+pub struct SimBackend {
+    /// Machine template: array dim, PWL segments, DMA bandwidth.
+    cfg: MachineConfig,
+    /// Measured cycles of the most recent execution (consumed by the
+    /// worker for pricing; [`SimBackend::take_measured`]).
+    measured: Option<u64>,
+}
+
+impl SimBackend {
+    pub fn new(accel: &AccelConfig) -> SimBackend {
+        SimBackend { cfg: MachineConfig::from_accel(accel), measured: None }
+    }
+
+    pub fn array_size(&self) -> usize {
+        self.cfg.n
+    }
+
+    /// The measured device cycles of the last `execute_*` call, if it
+    /// ran (cleared by the take).  Workers call this right after an
+    /// execution to replace the modeled latency with the measured one.
+    pub fn take_measured(&mut self) -> Option<u64> {
+        self.measured.take()
+    }
+
+    /// Build the machine for one shard: workload-sized memory, the
+    /// shard's real head dim as the softmax-scale dim.
+    fn machine(&self, p: &ChunkParams, layout: &ChunkLayout, d: usize) -> Machine {
+        let mut cfg = self.cfg.clone();
+        cfg.scale_dim = d;
+        cfg.spad_elems = cfg.spad_elems.max(p.spad_elems as usize);
+        cfg.accum_elems = cfg.accum_elems.max(p.accum_elems as usize);
+        cfg.mem_elems = layout.mem_elems(p).max(1 << 12);
+        Machine::new(cfg)
+    }
+
+    /// Write a `(rows, d)` row-major host matrix into device memory as
+    /// the zero-padded `(padded_rows, n)` layout the programs expect
+    /// (device memory is zero-initialized, so only real data moves).
+    fn write_padded(m: &mut Machine, addr: u32, data: &[f32], rows: usize, d: usize) {
+        let n = m.cfg.n;
+        for r in 0..rows {
+            m.write_mem(addr + (r * n) as u32, &data[r * d..(r + 1) * d]);
+        }
+    }
+
+    /// Read the de-transposed `(valid_queries, d)` output of a
+    /// normalized chunk program.
+    fn read_output(m: &Machine, p: &ChunkParams, layout: &ChunkLayout, d: usize) -> Vec<f32> {
+        let n = p.n;
+        let mut out = vec![0.0f32; p.valid_queries * d];
+        for blk in 0..p.row_blocks() {
+            let base = layout.o_addr as usize + blk * n * n;
+            for mcol in 0..n {
+                let row = blk * n + mcol;
+                if row >= p.valid_queries {
+                    break;
+                }
+                for h in 0..d {
+                    out[row * d + h] = m.read_mem((base + h * n + mcol) as u32, 1)[0];
+                }
+            }
+        }
+        out
+    }
+
+    fn run(&mut self, m: &mut Machine, prog: &crate::isa::Program) -> Result<RunStats, String> {
+        m.run_program(prog).map_err(|e| format!("sim backend: {e:#}"))
+    }
+
+    /// One whole head: `(seq_len, d)` Q/K/V, masked exactly.  Returns
+    /// the output and records measured cycles.
+    pub fn execute_head(
+        &mut self,
+        seq_len: usize,
+        d: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        mask: MaskKind,
+    ) -> Result<Vec<f32>, String> {
+        self.measured = None;
+        self.check_dims(seq_len, d)?;
+        if q.len() != seq_len * d || k.len() != seq_len * d || v.len() != k.len() {
+            return Err(format!(
+                "sim backend: shape mismatch q {} k {} v {} for ({seq_len}, {d})",
+                q.len(),
+                k.len(),
+                v.len()
+            ));
+        }
+        // A fully-masked operator has no live tile in any row block:
+        // the defined output is all-zero without running the array
+        // (the same rule as `FlashPartial::finalize`).
+        if (0..seq_len).all(|i| mask.valid_keys(i, seq_len) == 0) {
+            self.measured = Some(0);
+            return Ok(vec![0.0; seq_len * d]);
+        }
+        let p = ChunkParams::whole(self.cfg.n, seq_len, mask);
+        let layout = ChunkLayout::packed(&p);
+        let prog = flash_chunk_program(&p, &layout).map_err(|e| format!("sim backend: {e:#}"))?;
+        let mut m = self.machine(&p, &layout, d);
+        Self::write_padded(&mut m, layout.q_addr, q, seq_len, d);
+        Self::write_padded(&mut m, layout.k_addr, k, seq_len, d);
+        Self::write_padded(&mut m, layout.v_addr, v, seq_len, d);
+        let stats = self.run(&mut m, &prog)?;
+        self.measured = Some(stats.cycles);
+        Ok(Self::read_output(&m, &p, &layout, d))
+    }
+
+    /// One sequence-parallel chunk of one head (DESIGN.md §7 shapes on
+    /// the §8 programs): per-row-block partial programs — the CMP row
+    /// holds one block's running max at a time, so the backend runs a
+    /// block, reads `(O~, l)` from memory and `m` from the CMP
+    /// registers, then moves on.  Measured cycles sum the block runs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_head_partial(
+        &mut self,
+        seq_len: usize,
+        d: usize,
+        q: &[f32],
+        k_chunk: &[f32],
+        v_chunk: &[f32],
+        mask: MaskKind,
+        key_offset: usize,
+        total_keys: usize,
+    ) -> Result<FlashPartial, String> {
+        self.measured = None;
+        self.check_dims(seq_len, d)?;
+        if k_chunk.len() % d != 0 || k_chunk.len() != v_chunk.len() || q.len() != seq_len * d {
+            return Err(format!(
+                "sim backend: partial shape mismatch q {} k {} v {} for ({seq_len}, {d})",
+                q.len(),
+                k_chunk.len(),
+                v_chunk.len()
+            ));
+        }
+        let chunk_len = k_chunk.len() / d;
+        if chunk_len == 0 || key_offset + chunk_len > total_keys {
+            return Err(format!(
+                "sim backend: chunk [{key_offset}, {}) outside the {total_keys}-key sequence",
+                key_offset + chunk_len
+            ));
+        }
+        let n = self.cfg.n;
+        let p = ChunkParams::chunk(n, seq_len, mask, key_offset, chunk_len, total_keys);
+        let layout = ChunkLayout::packed(&p);
+        let mut m = self.machine(&p, &layout, d);
+        Self::write_padded(&mut m, layout.q_addr, q, seq_len, d);
+        Self::write_padded(&mut m, layout.k_addr, k_chunk, chunk_len, d);
+        Self::write_padded(&mut m, layout.v_addr, v_chunk, chunk_len, d);
+
+        let mut part = FlashPartial::empty(seq_len, d);
+        let mut cycles = 0u64;
+        for blk in 0..p.row_blocks() {
+            let prog = match flash_chunk_partial_program(&p, &layout, blk)
+                .map_err(|e| format!("sim backend: {e:#}"))?
+            {
+                // Block fully masked in this chunk: its rows keep the
+                // empty (0, -inf, 0) state — the merge identity.
+                None => continue,
+                Some(prog) => prog,
+            };
+            let stats = self.run(&mut m, &prog)?;
+            cycles += stats.cycles;
+            let o_base = layout.o_addr as usize + blk * n * n;
+            let l_base = layout.l_addr as usize + blk * n;
+            for mcol in 0..n {
+                let row = blk * n + mcol;
+                if row >= seq_len {
+                    break;
+                }
+                part.m[row] = m.array.cmp_new_m(mcol);
+                part.l[row] = m.read_mem((l_base + mcol) as u32, 1)[0];
+                for h in 0..d {
+                    part.acc[row * d + h] = m.read_mem((o_base + h * n + mcol) as u32, 1)[0];
+                }
+            }
+        }
+        self.measured = Some(cycles);
+        Ok(part)
+    }
+
+    /// One decode step (`br = 1`): a single query row over the
+    /// `(prefix_len, d)` prefix, normalized on-device.
+    pub fn execute_decode_row(
+        &mut self,
+        prefix_len: usize,
+        d: usize,
+        q_row: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        self.measured = None;
+        self.check_dims(prefix_len, d)?;
+        if q_row.len() != d || k.len() != prefix_len * d || v.len() != k.len() {
+            return Err(format!(
+                "sim backend: decode shape mismatch q {} k {} v {} for prefix {prefix_len} d {d}",
+                q_row.len(),
+                k.len(),
+                v.len()
+            ));
+        }
+        let p = ChunkParams::decode_row(self.cfg.n, prefix_len);
+        let layout = ChunkLayout::packed(&p);
+        let prog = flash_chunk_program(&p, &layout).map_err(|e| format!("sim backend: {e:#}"))?;
+        let mut m = self.machine(&p, &layout, d);
+        Self::write_padded(&mut m, layout.q_addr, q_row, 1, d);
+        Self::write_padded(&mut m, layout.k_addr, k, prefix_len, d);
+        Self::write_padded(&mut m, layout.v_addr, v, prefix_len, d);
+        let stats = self.run(&mut m, &prog)?;
+        self.measured = Some(stats.cycles);
+        Ok(Self::read_output(&m, &p, &layout, d))
+    }
+
+    /// One split-KV decode range (`br = 1`, partial state).
+    pub fn execute_decode_row_partial(
+        &mut self,
+        range_len: usize,
+        d: usize,
+        q_row: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<FlashPartial, String> {
+        self.measured = None;
+        self.check_dims(range_len, d)?;
+        if q_row.len() != d || k.len() != range_len * d || v.len() != k.len() {
+            return Err(format!(
+                "sim backend: decode range shape mismatch q {} k {} v {} for range {range_len} d {d}",
+                q_row.len(),
+                k.len(),
+                v.len()
+            ));
+        }
+        let n = self.cfg.n;
+        let p = ChunkParams::decode_row(n, range_len);
+        let layout = ChunkLayout::packed(&p);
+        let prog = flash_chunk_partial_program(&p, &layout, 0)
+            .map_err(|e| format!("sim backend: {e:#}"))?
+            .expect("an unmasked decode range always has live tiles");
+        let mut m = self.machine(&p, &layout, d);
+        Self::write_padded(&mut m, layout.q_addr, q_row, 1, d);
+        Self::write_padded(&mut m, layout.k_addr, k, range_len, d);
+        Self::write_padded(&mut m, layout.v_addr, v, range_len, d);
+        let stats = self.run(&mut m, &prog)?;
+        self.measured = Some(stats.cycles);
+        let mut part = FlashPartial::empty(1, d);
+        part.m[0] = m.array.cmp_new_m(0);
+        part.l[0] = m.read_mem(layout.l_addr, 1)[0];
+        for h in 0..d {
+            part.acc[h] = m.read_mem(layout.o_addr + (h * n) as u32, 1)[0];
+        }
+        Ok(part)
+    }
+
+    fn check_dims(&self, seq_len: usize, d: usize) -> Result<(), String> {
+        if d > self.cfg.n {
+            return Err(format!(
+                "sim backend: head dim {d} exceeds the {}-wide array",
+                self.cfg.n
+            ));
+        }
+        if seq_len == 0 {
+            return Err("sim backend: empty sequence".into());
+        }
+        Ok(())
+    }
+}

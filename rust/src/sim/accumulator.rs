@@ -110,10 +110,19 @@ impl Accumulator {
     }
 
     /// Reciprocal instruction: l <- 1/l over an N-vector (outer loop).
+    ///
+    /// `1/0` is flushed to 0: an exactly-zero exponent sum means the §8
+    /// mask wave zeroed every lane of the column (a fully-masked query
+    /// row, or a zero-padded garbage column), and the defined output for
+    /// such a row is zero (`FlashPartial::finalize`'s rule) — an `inf`
+    /// here would poison the reused accumulator tile through the next
+    /// row block's `b = 0` reset (`0 · inf = NaN`).  Live columns always
+    /// have `l >= exp2(0) = 1` for their max lane, so this never
+    /// triggers on real data.
     pub fn reciprocal(&mut self, l_addr: u32, len: usize) {
         for i in 0..len {
             let a = l_addr as usize + i;
-            self.sram[a] = 1.0 / self.sram[a];
+            self.sram[a] = if self.sram[a] == 0.0 { 0.0 } else { 1.0 / self.sram[a] };
         }
     }
 
@@ -201,5 +210,21 @@ mod tests {
         acc.reciprocal(0, 2);
         acc.lse_norm(4, 2, 2, 0);
         assert_eq!(acc.read(4, 4), &[1.0, 1.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn reciprocal_of_zero_is_the_defined_zero() {
+        // §8: a fully-masked column's exponent sum is exactly 0; the
+        // reciprocal flushes 1/0 to 0 so the norm yields the defined
+        // zero output instead of inf (which would NaN-poison the reused
+        // tile through the next block's b = 0 reset).
+        let mut acc = Accumulator::new(2, 8, 1.0, 16);
+        acc.sram[0] = 0.0;
+        acc.sram[1] = 4.0;
+        acc.sram[4..8].copy_from_slice(&[0.0, 4.0, 0.0, 8.0]);
+        acc.reciprocal(0, 2);
+        assert_eq!(acc.read(0, 2), &[0.0, 0.25]);
+        acc.lse_norm(4, 2, 2, 0);
+        assert_eq!(acc.read(4, 4), &[0.0, 1.0, 0.0, 2.0]);
     }
 }

@@ -43,7 +43,11 @@ pub enum LeftTag {
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum DownMsg {
     /// S value re-streamed from the CMP row; parks in `hops` more rows.
-    Park { val: f32, hops: u16 },
+    /// `masked` is the §8 mask-wave sideband bit: the lane fell at or
+    /// beyond the CMP boundary register, so it parks as zero and sets
+    /// the PE's masked latch (its P stays exactly 0 through the
+    /// element-wise chain, the rowsum and the PV wave).
+    Park { val: f32, hops: u16, masked: bool },
     /// -new_m broadcast: every PE on the way applies res += val.
     AddBroadcast { val: f32 },
     /// a = old_m - new_m passing through to the accumulator.
@@ -74,7 +78,11 @@ struct LeftOp {
 }
 
 /// One comparison unit (top row, paper §3.1): tracks old/new row max and
-/// re-streams S downward.
+/// re-streams S downward.  The §8 mask wave rides here: `bound` is the
+/// boundary register ([`crate::isa::LaneBound`] resolved per column by
+/// the controller) — arrivals at `seen >= bound` are masked lanes,
+/// excluded from the running max and re-streamed as zero with the
+/// masked sideband bit.
 #[derive(Clone, Copy, Debug)]
 struct CmpUnit {
     old_m: f32,
@@ -82,6 +90,9 @@ struct CmpUnit {
     /// Arrival counter: how many S elements of the current iteration have
     /// passed through (the park hop count).
     seen: u16,
+    /// Valid-lane boundary of the current iteration (`u16::MAX` =
+    /// unmasked).
+    bound: u16,
 }
 
 /// Finite stand-in for -inf: keeps the Split unit NaN-free (same
@@ -90,7 +101,7 @@ pub const NEG_INF: f32 = -1e30;
 
 impl CmpUnit {
     fn new() -> CmpUnit {
-        CmpUnit { old_m: NEG_INF, new_m: NEG_INF, seen: 0 }
+        CmpUnit { old_m: NEG_INF, new_m: NEG_INF, seen: 0, bound: u16::MAX }
     }
 }
 
@@ -106,6 +117,10 @@ pub struct Array {
     // State, all row-major [row * n + col]:
     stat: Vec<f32>,
     res: Vec<f32>,
+    /// Per-PE masked latch (§8 mask wave): set by a masked park, cleared
+    /// by the next unmasked one.  While set, the element-wise waves skip
+    /// the PE so its parked zero stays exactly zero.
+    masked: Vec<bool>,
     /// Left operands *arriving* at each PE this cycle.
     ops: Vec<Option<LeftOp>>,
     /// Upward psums arriving this cycle (from the row below).
@@ -142,6 +157,7 @@ impl Array {
             quantize_inputs,
             stat: vec![0.0; n * n],
             res: vec![0.0; n * n],
+            masked: vec![false; n * n],
             ops: vec![None; n * n],
             up: vec![None; n * n],
             down: vec![None; n * n],
@@ -207,6 +223,14 @@ impl Array {
         c.seen = 0;
     }
 
+    /// Program CMP `col`'s boundary register for the coming iteration
+    /// (§8 mask wave): arrivals at `seen >= bound` are masked.  The
+    /// controller emits this for every AttnScore — `n` (all lanes
+    /// valid) when the score is unmasked.
+    pub fn cmp_set_bound(&mut self, col: usize, bound: u16) {
+        self.cmp[col].bound = bound;
+    }
+
     /// CMP row emits the -new_m broadcast into column `col`.
     pub fn cmp_emit_sub(&mut self, col: usize) {
         let v = -self.cmp[col].new_m;
@@ -256,10 +280,20 @@ impl Array {
                 // above zero and skip the Split unit's sign-guarded PWL).
                 let s = self.q_res(s);
                 let c = &mut self.cmp[col];
-                c.new_m = c.new_m.max(s);
+                // §8 mask wave: a lane at or beyond the boundary register
+                // is excluded from the running max and parks as zero with
+                // the masked sideband bit set.
+                let masked = c.seen >= c.bound;
+                if !masked {
+                    c.new_m = c.new_m.max(s);
+                }
                 let hops = c.seen;
                 c.seen += 1;
-                next_down[self.idx(0, col)] = Some(DownMsg::Park { val: s, hops });
+                next_down[self.idx(0, col)] = Some(DownMsg::Park {
+                    val: if masked { 0.0 } else { s },
+                    hops,
+                    masked,
+                });
             }
         }
 
@@ -292,8 +326,10 @@ impl Array {
                             }
                         }
                         LeftTag::MulConst => {
-                            self.res[i] = self.q_res(self.res[i] * op.val);
-                            self.mac_ops += 1;
+                            if !self.masked[i] {
+                                self.res[i] = self.q_res(self.res[i] * op.val);
+                                self.mac_ops += 1;
+                            }
                         }
                         LeftTag::Pwl { seg, intercept } => {
                             // Split unit: decompose the resident value.
@@ -301,11 +337,13 @@ impl Array {
                             // always <= 0 and outputs always > 0, so a PE
                             // whose register is already positive has
                             // consumed its pair (cheap hardware: sign bit).
+                            // The §8 masked latch overrides: a masked
+                            // lane's parked zero must stay exactly zero.
                             let x = self.res[i];
                             let xi = x.ceil();
                             let xf = self.q_res(x - xi);
                             let k = self.pwl.segment(xf as f64) as u8;
-                            if x <= 0.0 && k == seg {
+                            if !self.masked[i] && x <= 0.0 && k == seg {
                                 // fp16 interpolation MAC (PE datapath).
                                 let frac = self.q_res(op.val * xf + intercept);
                                 self.res[i] =
@@ -380,13 +418,15 @@ impl Array {
                 // ---- Downward path (non-operand-coupled messages) ----
                 if let Some(msg) = self.down[i].take() {
                     match msg {
-                        DownMsg::Park { val, hops } => {
+                        DownMsg::Park { val, hops, masked } => {
                             if hops == 0 {
-                                // fp16 result registers (FTZ) in f16 mode.
-                                self.res[i] = self.q_res(val);
+                                // fp16 result registers (FTZ) in f16 mode;
+                                // a masked lane parks exactly 0 and latches.
+                                self.res[i] = if masked { 0.0 } else { self.q_res(val) };
+                                self.masked[i] = masked;
                             } else if row + 1 < n {
                                 next_down[self.idx(row + 1, col)] =
-                                    Some(DownMsg::Park { val, hops: hops - 1 });
+                                    Some(DownMsg::Park { val, hops: hops - 1, masked });
                             } else {
                                 panic!(
                                     "park value fell off column {col} cycle {}",
@@ -395,8 +435,10 @@ impl Array {
                             }
                         }
                         DownMsg::AddBroadcast { val } => {
-                            self.res[i] = self.q_res(self.res[i] + val);
-                            self.mac_ops += 1;
+                            if !self.masked[i] {
+                                self.res[i] = self.q_res(self.res[i] + val);
+                                self.mac_ops += 1;
+                            }
                             if row + 1 < n {
                                 next_down[self.idx(row + 1, col)] =
                                     Some(DownMsg::AddBroadcast { val });
@@ -672,6 +714,53 @@ mod tests {
             let want: f32 = (0..n).map(|r| (1 + r + c) as f32).sum();
             assert_eq!(sums[c], want, "col {c}");
         }
+    }
+
+    #[test]
+    fn mask_wave_excludes_lanes_from_max_and_parks_zero() {
+        // Drive the same matmul as `upward_matmul_and_park`, but with
+        // column 1's boundary register set to 2: lanes 2..3 must be
+        // excluded from the CMP max, park as exact zero, and stay zero
+        // through a subsequent broadcast/const wave (the masked latch).
+        let n = 4;
+        let mut a = Array::new(n, 8, false);
+        for m in 0..n {
+            for kk in 0..n {
+                a.set_stationary(kk, m, if m == kk { 1.0 } else { 0.0 }); // Q = I
+            }
+        }
+        let k = [[5.0f32, 1.0, 1.0, 1.0],
+                 [1.0, 6.0, 1.0, 1.0],
+                 [1.0, 1.0, 7.0, 1.0],
+                 [1.0, 1.0, 1.0, 8.0]];
+        for col in 0..n {
+            a.cmp_set_bound(col, if col == 1 { 2 } else { n as u16 });
+        }
+        for cycle in 0..6 * n as u64 {
+            for kk in 0..n {
+                let nn = cycle as i64 - (n - 1 - kk) as i64;
+                if (0..n as i64).contains(&nn) {
+                    a.inject_left(kk, k[nn as usize][kk], LeftTag::MacUp);
+                }
+            }
+            a.step();
+        }
+        // With Q = I, S[m][nn] = K[nn][m].  Column 1 sees 1, 6, 1, 1;
+        // bound 2 keeps lanes {0, 1} -> max 6; unmasked col 3 keeps 8.
+        assert_eq!(a.cmp_new_m(1), 6.0);
+        assert_eq!(a.cmp_new_m(3), 8.0);
+        // Masked lanes parked exactly zero; valid lanes parked normally.
+        assert_eq!(a.resident(2, 1), 0.0);
+        assert_eq!(a.resident(3, 1), 0.0);
+        assert_eq!(a.resident(1, 1), 6.0);
+        assert_eq!(a.resident(2, 3), 1.0);
+        // The masked latch pins them through elementwise waves.
+        a.inject_top(1, DownMsg::AddBroadcast { val: 100.0 });
+        for _ in 0..n + 1 {
+            a.step();
+        }
+        assert_eq!(a.resident(1, 1), 106.0, "valid lane takes the wave");
+        assert_eq!(a.resident(2, 1), 0.0, "masked lane stays zero");
     }
 
     #[test]

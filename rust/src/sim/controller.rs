@@ -35,6 +35,11 @@ pub enum Signal {
     /// CMP bookkeeping at iteration start.
     CmpNextIter { col: usize },
     CmpReset { col: usize },
+    /// Program CMP `col`'s §8 boundary register for the iteration (the
+    /// resolved [`crate::isa::LaneBound`] value; `n` when unmasked).
+    /// Emitted by the machine *after* the reset/next-iter events of the
+    /// same cycle.
+    CmpSetBound { col: usize, bound: u16 },
     /// CMP emissions (−new_m broadcast; a = old_m − new_m pass-down).
     CmpEmitSub { col: usize },
     CmpEmitA { col: usize },

@@ -17,10 +17,12 @@
 
 use anyhow::{bail, ensure, Context};
 
-use crate::isa::{Instruction, Program, Space, TileDesc};
+use crate::config::AccelConfig;
+use crate::isa::{Instruction, LaneBound, Program, Space, TileDesc};
+use crate::mask::MaskKind;
 use crate::numerics::f16::quantize_ftz_f32 as quantize_f32;
 use crate::numerics::LOG2E;
-use crate::schedule::{InnerSchedule, Variant};
+use crate::schedule::{masked_tile_counts, InnerSchedule, Variant};
 use crate::sim::accumulator::Accumulator;
 use crate::sim::array::{Array, LeftTag};
 use crate::sim::controller::{self, Signal};
@@ -29,8 +31,14 @@ use crate::sim::sram::Sram;
 
 #[derive(Clone, Debug)]
 pub struct MachineConfig {
-    /// Array dimension N (= head dim d = Br = Bc, §3.5 tiling).
+    /// Array dimension N (= Br = Bc, §3.5 tiling).
     pub n: usize,
+    /// Head dim of the softmax scale `log2(e)/sqrt(d)`.  Equal to `n`
+    /// on the paper's native tiling; smaller when the serving backend
+    /// zero-pads a `d < N` head up to the array (DESIGN.md §8) — the
+    /// padded lanes contribute exact zeros, but the scale must stay the
+    /// real head's.
+    pub scale_dim: usize,
     pub segments: usize,
     pub variant: Variant,
     /// Quantize activations through fp16 (Table-1 numerics) or keep f32.
@@ -46,6 +54,7 @@ impl MachineConfig {
     pub fn small(n: usize) -> MachineConfig {
         MachineConfig {
             n,
+            scale_dim: n,
             segments: 8,
             variant: Variant::DualPath,
             quantize: true,
@@ -61,6 +70,27 @@ impl MachineConfig {
         let mut c = MachineConfig::small(128);
         c.mem_elems = 1 << 26;
         c
+    }
+
+    /// A machine mirroring an [`AccelConfig`]: same array dim, PWL
+    /// segment count, and DMA bandwidth at the configured clock — the
+    /// config the serving backend and the perfmodel cross-validation
+    /// (DESIGN.md §8) build from.  Memory sizes default to the 6-tile
+    /// scratchpad / lse+O^T accumulator budget; callers grow
+    /// `mem_elems` to their workload.
+    pub fn from_accel(cfg: &AccelConfig) -> MachineConfig {
+        let n = cfg.array_size;
+        MachineConfig {
+            n,
+            scale_dim: n,
+            segments: cfg.pwl_segments.max(1),
+            variant: Variant::DualPath,
+            quantize: true,
+            mem_elems: 1 << 16,
+            spad_elems: 6 * n * n,
+            accum_elems: n * n + n,
+            dma: DmaConfig::for_bandwidth(cfg.mem_bw_gbs, cfg.freq_ghz, 4),
+        }
     }
 }
 
@@ -80,11 +110,36 @@ pub struct RunStats {
 
 impl RunStats {
     /// FLOPs/s utilization vs the 2N^2/cycle peak (paper §6.1 metric).
+    ///
+    /// Note the numerator is the *measured* MAC counter, which counts
+    /// every streamed lane — masked lanes of a partially-masked tile
+    /// stream through the array like any other, so on masked programs
+    /// this overstates useful work; use [`RunStats::masked_utilization`]
+    /// there.
     pub fn utilization(&self, n: usize) -> f64 {
         if self.cycles == 0 {
             return 0.0;
         }
         self.matmul_macs as f64 / ((n * n) as f64 * self.cycles as f64)
+    }
+
+    /// Mask-aware utilization (DESIGN.md §8): achieved cycles vs the
+    /// tile work the tile-skipping schedule actually *issues* — the
+    /// `full + partial` census of [`masked_tile_counts`] at `2·N³` MACs
+    /// per issued tile — instead of assuming the full square grid or
+    /// trusting the streamed-MAC counter (which counts masked lanes as
+    /// work).  With `MaskKind::None` and exact tiling this equals
+    /// [`RunStats::utilization`] bit for bit (the census and the
+    /// counter agree); under a causal mask it credits only the issued
+    /// triangle, so a perfectly-scheduled causal run scores the same
+    /// utilization as its square sibling rather than double.
+    pub fn masked_utilization(&self, n: usize, seq_len: usize, mask: MaskKind) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let (full, partial, _) = masked_tile_counts(seq_len, n, mask);
+        let issued_macs = (full + partial) * 2 * (n as u64).pow(3);
+        issued_macs as f64 / ((n * n) as f64 * self.cycles as f64)
     }
 }
 
@@ -109,7 +164,7 @@ pub struct Machine {
 
 impl Machine {
     pub fn new(cfg: MachineConfig) -> Machine {
-        let scale = (LOG2E / (cfg.n as f64).sqrt()) as f32;
+        let scale = (LOG2E / (cfg.scale_dim as f64).sqrt()) as f32;
         let mut accum = Accumulator::new(cfg.n, cfg.segments, scale, cfg.accum_elems);
         accum.f16_mode = cfg.quantize;
         Machine {
@@ -141,8 +196,12 @@ impl Machine {
         let mut store_q = DmaQueue::new();
         let mut compute_free: u64 = 0;
         let mut last_score_t: Option<u64> = None;
+        let mut last_score_ii: u64 = 0;
         let mut pending_q: Option<TileDesc> = None;
         let mut stationary_loaded = false;
+        // §8 mask wave: the boundary register programmed by MaskBound,
+        // consumed by the next masked AttnScore.
+        let mut pending_bound: Option<LaneBound> = None;
         // Completion cycle of writes into accumulator regions (for stores)
         // and of stores reading them (for subsequent compute reuse).
         let mut accum_writes: Vec<(TileDesc, u64)> = Vec::new();
@@ -202,11 +261,35 @@ impl Machine {
                         "stationary tile must be {n}x{n}, got {src:?}");
                     pending_q = Some(src);
                 }
-                Instruction::AttnScore { k, lse, first } => {
+                Instruction::MaskBound { bound } => {
+                    // Zero-latency control-register write, folded into
+                    // the next masked score's issue.
+                    ensure!(pending_bound.is_none(),
+                        "mask_bound already pending (unconsumed by any attn_score)");
+                    pending_bound = Some(bound);
+                }
+                Instruction::AttnScore { k, lse, first, masked } => {
                     ensure!(k.space == Space::Spad && lse.space == Space::Accum,
                         "attn_score reads spad K, writes accum lse");
                     ensure!(k.rows as usize == n && k.cols as usize == n,
                         "K tile must be {n}x{n}, got {k:?}");
+                    // Resolve the §8 boundary register: masked scores
+                    // consume the pending MaskBound; unmasked ones must
+                    // not leave one dangling (it would silently apply to
+                    // a later tile).
+                    let bound = if masked {
+                        Some(pending_bound.take().ok_or_else(|| anyhow::anyhow!(
+                            "masked attn_score without a preceding mask_bound"
+                        ))?)
+                    } else {
+                        ensure!(pending_bound.is_none(),
+                            "mask_bound pending before an unmasked attn_score");
+                        None
+                    };
+                    // The mask wave is one extra element-wise cycle
+                    // (schedule::masked_inner_latency) in the chaining
+                    // interval.
+                    let ii = if masked { sched.masked_inner_latency() } else { ii };
                     // Pair with the next *compute-class* instruction when
                     // it is the AttnValue (Listing 2 interleaves DMA loads
                     // between score and value — different queues, §4.1);
@@ -260,7 +343,8 @@ impl Machine {
                             }
                             _ => {
                                 // Standalone: wait for array drain + data.
-                                let drained = last_score_t.map(|lt| lt + ii).unwrap_or(0);
+                                let drained =
+                                    last_score_t.map(|lt| lt + last_score_ii).unwrap_or(0);
                                 let start = q_ready.max(drained).max(compute_free.saturating_sub(0));
                                 for (c, sig) in controller::preload_events_standalone(n) {
                                     events.push((start + c,
@@ -289,9 +373,21 @@ impl Machine {
                             }));
                         }
                     }
+                    // Program the CMP boundary registers for this
+                    // iteration — pushed after the reset/next-iter
+                    // events of the same cycle (stable sort keeps the
+                    // order).  Unmasked scores restore the full width.
+                    for col in 0..n {
+                        let b = bound.map(|lb| lb.bound(col)).unwrap_or(n as u16);
+                        events.push((t, Ev::Sig {
+                            sig: Signal::CmpSetBound { col, bound: b },
+                            k_tile: k, v_tile: k, q_tile: k,
+                        }));
+                    }
                     accum_writes.push((lse, t + ii));
                     spad_reads.push((k, t + ii));
                     last_score_t = Some(t);
+                    last_score_ii = ii;
                     compute_free = t + ii;
                     compute_busy += ii;
 
@@ -342,6 +438,7 @@ impl Machine {
             }
             idx += 1;
         }
+        ensure!(pending_bound.is_none(), "trailing mask_bound never consumed");
 
         // ---------------- Phase 2: execute ----------------
         events.sort_by_key(|&(c, _)| c);
@@ -356,7 +453,7 @@ impl Machine {
             + 8 * n as u64
             + 64; // drain margin
 
-        let scale = (LOG2E / (n as f64).sqrt()) as f32;
+        let scale = (LOG2E / (self.cfg.scale_dim as f64).sqrt()) as f32;
         let trace = std::env::var_os("FSA_TRACE").is_some();
         let mut ei = 0usize;
         for cycle in 0..end_cycle {
@@ -422,6 +519,7 @@ impl Machine {
                 }
                 Signal::CmpReset { col } => self.array.cmp_reset(col),
                 Signal::CmpNextIter { col } => self.array.cmp_next_iter(col),
+                Signal::CmpSetBound { col, bound } => self.array.cmp_set_bound(col, bound),
                 Signal::CmpEmitSub { col } => self.array.cmp_emit_sub(col),
                 Signal::CmpEmitA { col } => self.array.cmp_emit_a(col),
                 Signal::AccumBegin => unreachable!("resolved at schedule time"),

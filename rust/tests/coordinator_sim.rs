@@ -1,0 +1,239 @@
+//! End-to-end `backend=sim` serving (DESIGN.md §8): the cycle-accurate
+//! machine as a first-class pool backend.  The acceptance contract:
+//!
+//! * causal-masked prefill, decode steps, and `seq_shards = 2` chunked
+//!   serving all produce outputs BITWISE-equal to the same requests on
+//!   a `backend=reference` pool (same seeds, same array size);
+//! * responses are priced from *measured* machine cycles
+//!   (`measured_shards == shards`), and those measured cycles agree
+//!   with the perfmodel's tile-cycle predictions within the pinned
+//!   `SIM_MODEL_BAND`;
+//! * per-backend dispatch metrics count every shard under `sim`;
+//! * the `sim_max_seq` O(L²) guard rejects over-long requests with an
+//!   error naming the knob.
+//!
+//! Everything runs on a 32-wide array (`RunConfig::array_size`) so the
+//! cycle-accurate executions stay in the millisecond range.
+
+use fsa::config::{AccelConfig, BackendKind, RunConfig};
+use fsa::coordinator::request::{AttentionRequest, AttentionResponse};
+use fsa::coordinator::Coordinator;
+use fsa::mask::MaskKind;
+use fsa::numerics::SplitMix64;
+use fsa::perfmodel::{multi_head_perf_masked, SIM_MODEL_BAND};
+use fsa::schedule::Variant;
+
+const N: usize = 32;
+
+fn cfg(backend: BackendKind, devices: usize, seq_shards: usize) -> RunConfig {
+    RunConfig {
+        devices,
+        max_batch: 8,
+        batch_timeout_cycles: 50_000,
+        queue_depth: 64,
+        backend,
+        num_heads: 4,
+        num_kv_heads: 2,
+        seq_shards,
+        sim_max_seq: 256,
+        array_size: N,
+        ..RunConfig::default()
+    }
+}
+
+fn gqa_req(seed: u64, id: u64, seq: usize, d: usize, heads: usize, kv: usize) -> AttentionRequest {
+    let mut rng = SplitMix64::new(seed);
+    AttentionRequest::gqa(
+        id,
+        seq,
+        d,
+        heads,
+        kv,
+        rng.normal_matrix(heads * seq, d),
+        rng.normal_matrix(kv * seq, d),
+        rng.normal_matrix(kv * seq, d),
+    )
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Acceptance: stateless serving (unmasked, causal, ragged+padded) on
+/// the sim pool is bitwise the reference pool, priced from measured
+/// cycles, with the modeled prediction inside the pinned band.
+#[test]
+fn sim_pool_matches_reference_pool_bitwise_and_prices_measured_cycles() {
+    let (heads, kv) = (4usize, 2usize);
+    let sim = Coordinator::start(cfg(BackendKind::Sim, 2, 1)).unwrap();
+    let reference = Coordinator::start(cfg(BackendKind::Reference, 2, 1)).unwrap();
+
+    let mut checked = 0usize;
+    for &(seq, d, mask) in &[
+        (64usize, 32usize, MaskKind::None),
+        (64, 32, MaskKind::Causal),
+        (96, 32, MaskKind::Causal),
+        (40, 16, MaskKind::None), // ragged seq, padded head dim
+        (64, 32, MaskKind::PaddingKeys { valid: 40 }),
+    ] {
+        let req = gqa_req(1000 + checked as u64, 1, seq, d, heads, kv).with_mask(mask);
+        let got: AttentionResponse = sim.submit_wait(req.clone()).unwrap();
+        let want = reference.submit_wait(req).unwrap();
+        assert_eq!(
+            bits(&got.output.expect("sim serving succeeds")),
+            bits(&want.output.expect("reference serving succeeds")),
+            "seq={seq} d={d} {mask:?}: sim pool diverged from reference pool"
+        );
+        // Every shard was priced from measured machine cycles…
+        assert_eq!(got.measured_shards, got.shards, "seq={seq} {mask:?}");
+        assert_eq!(want.measured_shards, 0, "reference pool models, never measures");
+        // …and measured disagrees with the model by less than the band
+        // while not being the model (it is a genuine measurement).
+        let accel = {
+            let mut a = AccelConfig::builtin("fsa").unwrap();
+            a.array_size = N;
+            a
+        };
+        let modeled = multi_head_perf_masked(
+            &accel, seq, d.min(N), heads, kv, 1, Variant::DualPath, accel.pwl_segments, mask,
+        );
+        // Whole-operator cost: heads × per-head cycles (cost metric, not
+        // critical path — both pools sum shard cycles the same way).
+        let ratio = got.device_cycles as f64 / modeled.total_cycles as f64;
+        assert!(
+            ratio >= SIM_MODEL_BAND.0 && ratio <= SIM_MODEL_BAND.1,
+            "seq={seq} {mask:?}: measured {} vs modeled {} (ratio {ratio:.3})",
+            got.device_cycles,
+            modeled.total_cycles
+        );
+        checked += 1;
+    }
+    assert!(checked >= 3, "acceptance needs at least 3 shapes");
+
+    // Dispatch metrics: every sim shard counted under `sim`, none under
+    // `reference`/`pjrt` (and vice versa on the reference pool).
+    let o = std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(
+        sim.metrics.sim_dispatches.load(o),
+        sim.metrics.head_shards.load(o)
+    );
+    assert_eq!(sim.metrics.reference_dispatches.load(o), 0);
+    assert_eq!(sim.metrics.pjrt_dispatches.load(o), 0);
+    assert_eq!(
+        reference.metrics.reference_dispatches.load(o),
+        reference.metrics.head_shards.load(o)
+    );
+    assert_eq!(reference.metrics.sim_dispatches.load(o), 0);
+    assert!(sim.metrics.summary().contains("dispatch sim/ref/pjrt"));
+
+    sim.shutdown();
+    reference.shutdown();
+}
+
+/// Acceptance: causal prefill → decode steps through sessions + paged
+/// KV caches on the sim pool, bitwise the reference pool step for step.
+#[test]
+fn sim_decode_session_is_bitwise_the_reference_pool() {
+    let (seq, d, heads, kv, steps) = (64usize, 32usize, 2usize, 1usize, 3usize);
+    let sim = Coordinator::start(cfg(BackendKind::Sim, 2, 1)).unwrap();
+    let reference = Coordinator::start(cfg(BackendKind::Reference, 2, 1)).unwrap();
+
+    let run = |coord: &Coordinator| -> Vec<Vec<f32>> {
+        let mut rng = SplitMix64::new(4242);
+        let mut outs = Vec::new();
+        let prefill = AttentionRequest::prefill(
+            1,
+            7,
+            seq,
+            d,
+            heads,
+            kv,
+            rng.normal_matrix(heads * seq, d),
+            rng.normal_matrix(kv * seq, d),
+            rng.normal_matrix(kv * seq, d),
+        )
+        .with_mask(MaskKind::Causal);
+        let resp = coord.submit_wait(prefill).unwrap();
+        outs.push(resp.output.expect("prefill succeeds"));
+        for step in 0..steps as u64 {
+            let dec = AttentionRequest::decode(
+                2 + step,
+                7,
+                step,
+                d,
+                heads,
+                kv,
+                rng.normal_matrix(heads, d),
+                rng.normal_matrix(kv, d),
+                rng.normal_matrix(kv, d),
+            );
+            let resp = coord.submit_wait(dec).unwrap();
+            outs.push(resp.output.expect("decode step succeeds"));
+        }
+        coord.submit_wait(AttentionRequest::close(99, 7)).unwrap();
+        outs
+    };
+
+    let got = run(&sim);
+    let want = run(&reference);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(bits(g), bits(w), "stage {i} (0 = prefill) diverged");
+    }
+    let o = std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(sim.metrics.decode_steps.load(o), steps);
+    assert!(sim.metrics.kv_hits.load(o) > 0, "decode must use the page caches");
+    sim.shutdown();
+    reference.shutdown();
+}
+
+/// Acceptance: `seq_shards = 2` chunked serving on the sim pool —
+/// partial (O~, m, l) states computed on the array, merged in chunk
+/// order at gather — bitwise the reference pool.
+#[test]
+fn sim_seqpar_serving_is_bitwise_the_reference_pool() {
+    let (seq, d, heads, kv) = (64usize, 32usize, 4usize, 2usize);
+    let sim = Coordinator::start(cfg(BackendKind::Sim, 3, 2)).unwrap();
+    let reference = Coordinator::start(cfg(BackendKind::Reference, 3, 2)).unwrap();
+    for (i, mask) in [MaskKind::None, MaskKind::Causal].into_iter().enumerate() {
+        let req = gqa_req(7000 + i as u64, 1, seq, d, heads, kv).with_mask(mask);
+        let got = sim.submit_wait(req.clone()).unwrap();
+        let want = reference.submit_wait(req).unwrap();
+        assert_eq!(got.seq_chunks, 2, "{mask:?}");
+        assert_eq!(got.shards, heads * 2, "{mask:?}");
+        assert_eq!(
+            bits(&got.output.expect("sim seqpar succeeds")),
+            bits(&want.output.expect("reference seqpar succeeds")),
+            "{mask:?}: chunked sim serving diverged"
+        );
+        assert_eq!(got.measured_shards, got.shards, "{mask:?}");
+        assert_eq!(got.merge_steps, want.merge_steps, "{mask:?}");
+    }
+    let o = std::sync::atomic::Ordering::Relaxed;
+    assert!(sim.metrics.seq_chunk_shards.load(o) >= heads * 2);
+    sim.shutdown();
+    reference.shutdown();
+}
+
+/// Satellite e2e: the O(L²) guard — an over-long request on the sim
+/// pool is rejected at admission with an error naming `sim_max_seq`,
+/// and the same request is served after raising the knob's headroom on
+/// a reference pool.
+#[test]
+fn sim_max_seq_guard_rejects_long_requests() {
+    let sim = Coordinator::start(cfg(BackendKind::Sim, 1, 1)).unwrap();
+    let (seq, d) = (512usize, 32usize); // > sim_max_seq = 256
+    let req = gqa_req(9, 1, seq, d, 1, 1);
+    let resp = sim.submit_wait(req.clone()).unwrap();
+    let err = resp.output.unwrap_err();
+    assert!(
+        err.contains("sim_max_seq") && err.contains("512"),
+        "guard error must name the knob: {err}"
+    );
+    assert_eq!(resp.shards, 0, "rejected before sharding");
+    sim.shutdown();
+
+    let reference = Coordinator::start(cfg(BackendKind::Reference, 1, 1)).unwrap();
+    assert!(reference.submit_wait(req).unwrap().output.is_ok());
+    reference.shutdown();
+}

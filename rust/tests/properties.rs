@@ -2,7 +2,7 @@
 //! harness in `fsa::testutil`).
 
 use fsa::isa::encode::{decode_program, encode_program};
-use fsa::isa::{Instruction, Program, Space, TileDesc};
+use fsa::isa::{Instruction, LaneBound, Program, Space, TileDesc};
 use fsa::numerics::f16::{quantize_f32, quantize_ftz_f32, F16};
 use fsa::numerics::pwl::PwlExp2;
 use fsa::numerics::reference::{flash_forward, mat_error, sdpa, Exp2, Mat, Precision};
@@ -61,13 +61,20 @@ fn prop_isa_roundtrip_fuzz() {
         let b = tile(g, Space::Accum);
         let m = tile(g, Space::Main);
         let first = g.bool();
-        let insn = match g.usize_in(0, 6) {
+        let insn = match g.usize_in(0, 7) {
             0 => Instruction::LoadTile { src: m, dst: a },
             1 => Instruction::StoreTile { src: b, dst: m },
             2 => Instruction::LoadStationary { src: a },
-            3 => Instruction::AttnScore { k: a, lse: b, first },
+            3 => Instruction::AttnScore { k: a, lse: b, first, masked: g.bool() },
             4 => Instruction::AttnValue { v: a, out: b, first },
             5 => Instruction::Reciprocal { l: b },
+            6 => Instruction::MaskBound {
+                bound: LaneBound {
+                    base: g.usize_in(0, 1 << 20) as i32 - (1 << 19),
+                    diag: g.bool(),
+                    cap: g.usize_in(0, 1024) as u16,
+                },
+            },
             _ => Instruction::AttnLseNorm { out: b, l: b },
         };
         let mut p = Program::new();
