@@ -1,6 +1,6 @@
 # fsa — build/verify entry points (see README.md quickstart).
 
-.PHONY: verify build test doc artifacts artifacts-full serve bench-smoke clean
+.PHONY: verify build test doc artifacts artifacts-full serve bench-smoke bench-json clean
 
 # Tier-1 verification: release build + tests + clean rustdoc.
 verify:
@@ -14,6 +14,12 @@ bench-smoke:
 		echo "== cargo bench --bench $$b (smoke) =="; \
 		FSA_BENCH_SMOKE=1 cargo bench --bench $$b || exit 1; \
 	done
+
+# Refresh BENCH_simcycles.json (the sim-throughput perf record; see
+# EXPERIMENTS.md §Perf log).  Honors FSA_BENCH_SMOKE=1 for a quick pass
+# that still writes the JSON (flagged "smoke": true).
+bench-json:
+	cargo bench --bench simcycles
 
 build:
 	cargo build --release

@@ -350,6 +350,11 @@ def test_sim_bitwise_matches_reference():
     check_case(rng, 1, 16, 32, ("none", 0), total=64, chunk=64)
     # split-KV decode range
     check_case(rng, 1, 32, 32, ("none", 0), key_offset=16, total=48, chunk=32)
+    # Larger shapes (satellite of the vectorization PR: the raised
+    # sim_max_seq default means longer heads ride the sim path, so the
+    # bitwise contract gets pinned on multi-block multi-tile runs too).
+    check_case(rng, 160, 32, 32, ("causal", 0))
+    check_case(rng, 224, 32, 32, ("padding", 150), key_offset=64, total=224, chunk=96)
 
 
 def rust_lane_bound(mask, n, valid_q, valid_k, key_offset, total, block, col_tile):

@@ -1,10 +1,15 @@
 //! Bench: measured vs modeled cycles of the `backend=sim` serving path
 //! (DESIGN.md §8) — the cross-validation sweep that keeps the analytic
-//! `perfmodel` honest against the cycle-accurate machine.  For each
-//! `(seq_len, mask)` shape the sweep compiles the masked chunk program,
-//! runs it on `sim::Machine`, and asserts the measured/modeled ratio
-//! stays inside `perfmodel::SIM_MODEL_BAND`; it also times one sim-
-//! backend head execution (the per-shard cost `sim_max_seq` guards).
+//! `perfmodel` honest against the cycle-accurate machine — plus the
+//! vectorization sweep: the same head shards stepped by the frozen
+//! scalar-reference path and by the SoA vectorized path, reported as
+//! PE-steps/s (cycles × N² per host second).  Cycle counts and outputs
+//! must agree exactly between the two steppers; only the host time may
+//! differ.
+//!
+//! Emits `BENCH_simcycles.json` (shapes, cycles, PE-steps/s both paths,
+//! host wall times) so the perf trajectory is diffable across PRs; see
+//! EXPERIMENTS.md §Perf log.  `make bench-json` runs just this target.
 
 use std::time::Duration;
 
@@ -14,6 +19,30 @@ use fsa::mask::MaskKind;
 use fsa::numerics::SplitMix64;
 use fsa::perfmodel::{sim_cross_check, SIM_MODEL_BAND};
 use fsa::runtime::SimBackend;
+
+struct SweepRow {
+    seq: usize,
+    d: usize,
+    mask: MaskKind,
+    cycles: u64,
+    scalar_wall_s: f64,
+    vector_wall_s: f64,
+}
+
+impl SweepRow {
+    fn pe_steps(&self, n: usize) -> f64 {
+        self.cycles as f64 * (n * n) as f64
+    }
+    fn scalar_rate(&self, n: usize) -> f64 {
+        self.pe_steps(n) / self.scalar_wall_s
+    }
+    fn vector_rate(&self, n: usize) -> f64 {
+        self.pe_steps(n) / self.vector_wall_s
+    }
+    fn speedup(&self) -> f64 {
+        self.scalar_wall_s / self.vector_wall_s
+    }
+}
 
 fn main() {
     // A shrunken FSA (32-array) keeps the cycle-accurate runs fast; the
@@ -55,19 +84,114 @@ fn main() {
         t.to_string()
     );
 
+    // Old-vs-new stepper sweep: identical shards through the frozen
+    // scalar-reference path and the vectorized SoA path.  The cycle
+    // counts and the output bits are asserted equal — the vectorization
+    // is only allowed to change host time.
+    let shapes: &[(usize, usize, MaskKind)] = if smoke() {
+        &[(64, 32, MaskKind::Causal)]
+    } else {
+        &[
+            (64, 32, MaskKind::None),
+            (96, 32, MaskKind::Causal),
+            (128, 32, MaskKind::Causal),
+            (192, 32, MaskKind::None),
+        ]
+    };
+    let budget = Duration::from_millis(1500);
+    let mut sca = SimBackend::new(&cfg);
+    sca.set_scalar_reference(true);
+    let mut vec_be = SimBackend::new(&cfg);
+    let mut rows: Vec<SweepRow> = Vec::new();
+    let mut t2 = Table::new(&[
+        "seq", "mask", "cycles", "scalar PE/s", "vector PE/s", "speedup",
+    ]);
+    for &(l, d, mask) in shapes {
+        let mut rng = SplitMix64::new(6);
+        let q = rng.normal_matrix(l, d);
+        let k = rng.normal_matrix(l, d);
+        let v = rng.normal_matrix(l, d);
+        let out_s = sca.execute_head(l, d, &q, &k, &v, mask).unwrap();
+        let cyc_s = sca.take_measured().unwrap();
+        let out_v = vec_be.execute_head(l, d, &q, &k, &v, mask).unwrap();
+        let cyc_v = vec_be.take_measured().unwrap();
+        assert_eq!(cyc_s, cyc_v, "L={l} {mask}: steppers disagree on cycles");
+        let bs: Vec<u32> = out_s.iter().map(|x| x.to_bits()).collect();
+        let bv: Vec<u32> = out_v.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bs, bv, "L={l} {mask}: steppers disagree bitwise");
+        let st_s = bench_for(budget, || {
+            sca.execute_head(l, d, &q, &k, &v, mask).unwrap();
+        });
+        let st_v = bench_for(budget, || {
+            vec_be.execute_head(l, d, &q, &k, &v, mask).unwrap();
+        });
+        let row = SweepRow {
+            seq: l,
+            d,
+            mask,
+            cycles: cyc_v,
+            scalar_wall_s: st_s.median.as_secs_f64(),
+            vector_wall_s: st_v.median.as_secs_f64(),
+        };
+        t2.row(&[
+            l.to_string(),
+            mask.to_string(),
+            cyc_v.to_string(),
+            format!("{:.3e}", row.scalar_rate(n)),
+            format!("{:.3e}", row.vector_rate(n)),
+            format!("{:.2}x", row.speedup()),
+        ]);
+        rows.push(row);
+    }
+    println!(
+        "simcycles — scalar-reference vs vectorized stepper, PE-steps/s \
+         (N = {n}, equal cycles asserted)\n{}",
+        t2.to_string()
+    );
+
     // Host cost of one sim-backend head shard (what `sim_max_seq`
     // bounds): a causal L=96 head on the 32-array.
-    let mut be = SimBackend::new(&cfg);
     let mut rng = SplitMix64::new(5);
     let (l, d) = (96usize, 32usize);
     let q = rng.normal_matrix(l, d);
     let k = rng.normal_matrix(l, d);
     let v = rng.normal_matrix(l, d);
     let st = bench_for(Duration::from_secs(2), || {
-        be.execute_head(l, d, &q, &k, &v, MaskKind::Causal).unwrap();
+        vec_be.execute_head(l, d, &q, &k, &v, MaskKind::Causal).unwrap();
     });
     println!(
         "[bench] sim-backend causal head (L={l}, d={d}, N={n}): median {}",
         fmt_duration(st.median)
     );
+
+    // Machine-readable perf record, diffable across PRs (no serde in
+    // the tree — the format is flat enough to hand-roll).
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"simcycles\",\n");
+    json.push_str(&format!("  \"array_size\": {n},\n"));
+    json.push_str(&format!("  \"smoke\": {},\n", smoke()));
+    json.push_str("  \"entries\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"seq\": {}, \"d\": {}, \"mask\": \"{}\", \"cycles\": {}, \
+             \"pe_steps\": {:.0}, \"scalar_pe_steps_per_s\": {:.4e}, \
+             \"vector_pe_steps_per_s\": {:.4e}, \"scalar_wall_s\": {:.6e}, \
+             \"vector_wall_s\": {:.6e}, \"speedup\": {:.3}}}{}\n",
+            r.seq,
+            r.d,
+            r.mask,
+            r.cycles,
+            r.pe_steps(n),
+            r.scalar_rate(n),
+            r.vector_rate(n),
+            r.scalar_wall_s,
+            r.vector_wall_s,
+            r.speedup(),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = "BENCH_simcycles.json";
+    std::fs::write(path, &json).expect("write bench json");
+    println!("[bench] wrote {path}");
 }

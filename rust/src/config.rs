@@ -380,14 +380,22 @@ pub struct RunConfig {
     /// state).
     pub seq_shards: usize,
     /// Longest `seq_len` a `backend=sim` pool admits (DESIGN.md §8).
-    /// The cycle model is O(L²·N) PE-steps per head shard — a 4096-token
-    /// head on the 128-array is ~10¹⁰ stepped PEs — so long requests
-    /// (and decode steps whose *grown prefix* has reached the guard;
-    /// each step runs a decode-row program over the whole prefix) are
-    /// rejected at admission with an error naming this knob
+    /// The cycle model is O(L²·N) PE-steps per head shard, so long
+    /// requests (and decode steps whose *grown prefix* has reached the
+    /// guard; each step runs a decode-row program over the whole
+    /// prefix) are rejected at admission with an error naming this knob
     /// (`[run] sim_max_seq` / `--sim-max-seq`) instead of wedging a
-    /// worker for minutes.  Ignored by every other backend.
+    /// worker for minutes.  The vectorized array (DESIGN.md §8's SoA
+    /// waves + shard batching) moved the default from 1024 to 8192 at
+    /// N = 128.  Ignored by every other backend.
     pub sim_max_seq: usize,
+    /// How many independent sim-backend shards share one machine
+    /// between [`hazard fences`](crate::sim::Machine::reset_for_reuse)
+    /// (DESIGN.md §8): the fence zeroes every memory and register, so a
+    /// batched run is bitwise and cycle-for-cycle identical to fresh
+    /// machines while skipping the per-shard allocations.  `1` disables
+    /// reuse.  Ignored by every other backend.
+    pub sim_batch_shards: usize,
     /// Array dimension of the simulated devices (tiling for the
     /// reference backend, machine size for the sim backend, tile census
     /// for pricing).  Defaults to the paper's 128; tests shrink it so
@@ -413,7 +421,8 @@ impl Default for RunConfig {
             mask: MaskKind::None,
             freq_ghz: 1.5,
             seq_shards: 1,
-            sim_max_seq: 1024,
+            sim_max_seq: 8192,
+            sim_batch_shards: 8,
             array_size: 128,
         }
     }
@@ -453,6 +462,11 @@ impl RunConfig {
             self.sim_max_seq >= 1,
             "sim_max_seq must be >= 1, got {}",
             self.sim_max_seq
+        );
+        ensure!(
+            self.sim_batch_shards >= 1,
+            "sim_batch_shards must be >= 1, got {}",
+            self.sim_batch_shards
         );
         ensure!(
             self.array_size >= 2 && self.array_size.is_power_of_two(),
@@ -509,6 +523,9 @@ impl RunConfig {
         }
         if let Some(v) = ini.get_parsed::<usize>(sec, "sim_max_seq")? {
             cfg.sim_max_seq = v;
+        }
+        if let Some(v) = ini.get_parsed::<usize>(sec, "sim_batch_shards")? {
+            cfg.sim_batch_shards = v;
         }
         if let Some(v) = ini.get_parsed::<usize>(sec, "array_size")? {
             cfg.array_size = v;
@@ -616,18 +633,24 @@ mod tests {
     fn run_config_sim_backend_knobs() {
         // Satellite: the sim backend parses, and the O(L²) guard plus
         // the device array dim are INI-plumbed and validated.
-        let text = "[run]\nbackend = sim\nsim_max_seq = 256\narray_size = 32\n";
+        let text = "[run]\nbackend = sim\nsim_max_seq = 256\nsim_batch_shards = 4\narray_size = 32\n";
         let run = RunConfig::from_ini(&Ini::parse(text).unwrap()).unwrap();
         assert_eq!(run.backend, BackendKind::Sim);
         assert_eq!(run.sim_max_seq, 256);
+        assert_eq!(run.sim_batch_shards, 4);
         assert_eq!(run.array_size, 32);
         assert_eq!("sim".parse::<BackendKind>().unwrap(), BackendKind::Sim);
         assert_eq!(BackendKind::Sim.to_string(), "sim");
-        // Defaults: 1024-token guard on the paper's 128-array.
+        // Defaults: 8192-token guard (the vectorized array's budget) on
+        // the paper's 128-array, 8 shards per machine between fences.
         let dflt = RunConfig::default();
-        assert_eq!((dflt.sim_max_seq, dflt.array_size), (1024, 128));
+        assert_eq!((dflt.sim_max_seq, dflt.array_size), (8192, 128));
+        assert_eq!(dflt.sim_batch_shards, 8);
         // Degenerate values are rejected at load.
         assert!(RunConfig::from_ini(&Ini::parse("[run]\nsim_max_seq = 0\n").unwrap()).is_err());
+        assert!(
+            RunConfig::from_ini(&Ini::parse("[run]\nsim_batch_shards = 0\n").unwrap()).is_err()
+        );
         assert!(RunConfig::from_ini(&Ini::parse("[run]\narray_size = 48\n").unwrap()).is_err());
         assert!(RunConfig::from_ini(&Ini::parse("[run]\narray_size = 1\n").unwrap()).is_err());
     }

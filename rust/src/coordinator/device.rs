@@ -91,7 +91,12 @@ fn worker_loop(
     cfg.array_size = run_cfg.array_size;
     let artifacts = PathBuf::from(&run_cfg.artifacts_dir);
     let mut backend = match Backend::new(run_cfg.backend, &artifacts, &cfg) {
-        Ok(b) => Some(b),
+        Ok(mut b) => {
+            // Shard batching for the sim backend (no-op elsewhere):
+            // how many shards share one machine between hazard fences.
+            b.set_sim_batch_shards(run_cfg.sim_batch_shards);
+            Some(b)
+        }
         Err(e) => {
             eprintln!("device {id}: backend init failed: {e:#}");
             None

@@ -31,7 +31,7 @@ Device / serving commands:
   serve   [--requests 16 --devices 2 --seq 512 --artifacts DIR]
           [--heads 1 --kv-heads 1 --backend pjrt|reference|sim|auto]
           [--mask none|causal --freq-ghz 1.5 --seq-shards 1]
-          [--sim-max-seq 1024 --array-size 128]
+          [--sim-max-seq 8192 --sim-batch-shards 8 --array-size 128]
                                boot the coordinator and serve a workload
                                (multi-head/GQA requests are sharded
                                per head across the device pool; --mask
@@ -48,8 +48,11 @@ Device / serving commands:
                                cycle-accurate machine, bitwise-equal to
                                reference, priced by MEASURED cycles —
                                O(L²) per shard, guarded by
-                               --sim-max-seq; --array-size shrinks the
-                               simulated array for fast sim runs)
+                               --sim-max-seq; --sim-batch-shards N lets
+                               N shards share one machine between
+                               hazard fences (1 disables reuse);
+                               --array-size shrinks the simulated array
+                               for fast sim runs)
           [--decode-steps 0 --sessions 1 --kv-pages 4096
            --page-size 16 --eviction lru|none]
                                with --decode-steps > 0: decode-phase
@@ -145,6 +148,7 @@ fn serve(args: &Args) -> fsa::Result<()> {
     cfg.freq_ghz = args.get("freq-ghz", cfg.freq_ghz)?;
     cfg.seq_shards = args.get("seq-shards", cfg.seq_shards)?;
     cfg.sim_max_seq = args.get("sim-max-seq", cfg.sim_max_seq)?;
+    cfg.sim_batch_shards = args.get("sim-batch-shards", cfg.sim_batch_shards)?;
     cfg.array_size = args.get("array-size", cfg.array_size)?;
     let n_req = args.get("requests", 16usize)?;
     let seq = args.get("seq", 512usize)?;

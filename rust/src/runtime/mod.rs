@@ -295,6 +295,15 @@ impl Backend {
         }
     }
 
+    /// Forward the `sim_batch_shards` knob to the sim backend (how many
+    /// independent shards share one machine between hazard fences;
+    /// no-op for backends that don't simulate).
+    pub fn set_sim_batch_shards(&mut self, shards: usize) {
+        if let Backend::Sim(s) = self {
+            s.set_batch_shards(shards);
+        }
+    }
+
     /// Execute one head: row-major `(seq_len, d)` Q/K/V in, `(seq_len,
     /// d)` output, mask applied exactly (DESIGN.md §6).  Errors are
     /// strings because they travel inside

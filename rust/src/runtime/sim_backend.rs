@@ -38,6 +38,10 @@ use crate::mask::MaskKind;
 use crate::numerics::reference::FlashPartial;
 use crate::sim::{Machine, MachineConfig, RunStats};
 
+/// Default shards per machine between hazard fences
+/// ([`crate::config::RunConfig::sim_batch_shards`]'s default).
+pub const DEFAULT_BATCH_SHARDS: usize = 8;
+
 /// One simulated FSA card behind a device worker.
 pub struct SimBackend {
     /// Machine template: array dim, PWL segments, DMA bandwidth.
@@ -45,11 +49,28 @@ pub struct SimBackend {
     /// Measured cycles of the most recent execution (consumed by the
     /// worker for pricing; [`SimBackend::take_measured`]).
     measured: Option<u64>,
+    /// Shard-batching machine cache (DESIGN.md §8): up to `batch_shards`
+    /// independent shards share one machine, separated by
+    /// [`Machine::reset_for_reuse`] hazard fences — every program ends
+    /// array-quiescent and the fence zeroes all memories, registers and
+    /// the DMA scoreboard, so a reused run is bitwise and
+    /// cycle-for-cycle a fresh one, minus the ~3 large allocations per
+    /// shard.
+    cached: Option<Machine>,
+    /// Shards served by the cached machine since it was built.
+    cached_uses: usize,
+    batch_shards: usize,
 }
 
 impl SimBackend {
     pub fn new(accel: &AccelConfig) -> SimBackend {
-        SimBackend { cfg: MachineConfig::from_accel(accel), measured: None }
+        SimBackend {
+            cfg: MachineConfig::from_accel(accel),
+            measured: None,
+            cached: None,
+            cached_uses: 0,
+            batch_shards: DEFAULT_BATCH_SHARDS,
+        }
     }
 
     pub fn array_size(&self) -> usize {
@@ -63,15 +84,62 @@ impl SimBackend {
         self.measured.take()
     }
 
-    /// Build the machine for one shard: workload-sized memory, the
-    /// shard's real head dim as the softmax-scale dim.
-    fn machine(&self, p: &ChunkParams, layout: &ChunkLayout, d: usize) -> Machine {
+    /// Set how many independent shards may share one machine between
+    /// hazard fences (the `sim_batch_shards` knob; 1 disables reuse so
+    /// every shard gets a freshly allocated machine).
+    pub fn set_batch_shards(&mut self, shards: usize) {
+        self.batch_shards = shards.max(1);
+        if self.batch_shards == 1 {
+            self.cached = None;
+        }
+        self.cached_uses = 0;
+    }
+
+    /// Route array stepping through the frozen pre-refactor scalar path
+    /// ([`crate::sim::MachineConfig::scalar_reference`]) — the
+    /// differential harness and the old-vs-new bench sweep use this; it
+    /// must never change outputs or measured cycles.
+    pub fn set_scalar_reference(&mut self, on: bool) {
+        self.cfg.scalar_reference = on;
+        self.cached = None;
+        self.cached_uses = 0;
+    }
+
+    /// A machine for one shard: workload-sized memory, the shard's real
+    /// head dim as the softmax-scale dim.  Reuses the cached machine
+    /// across a hazard fence when batching is on and its capacities
+    /// cover the shard (zeroed surplus memory behaves exactly like a
+    /// tighter fit); otherwise allocates fresh.
+    fn machine_for(&mut self, p: &ChunkParams, layout: &ChunkLayout, d: usize) -> Machine {
         let mut cfg = self.cfg.clone();
         cfg.scale_dim = d;
         cfg.spad_elems = cfg.spad_elems.max(p.spad_elems as usize);
         cfg.accum_elems = cfg.accum_elems.max(p.accum_elems as usize);
         cfg.mem_elems = layout.mem_elems(p).max(1 << 12);
+        if self.batch_shards > 1 && self.cached_uses < self.batch_shards {
+            if let Some(mut m) = self.cached.take() {
+                if m.cfg.mem_elems >= cfg.mem_elems
+                    && m.cfg.spad_elems >= cfg.spad_elems
+                    && m.cfg.accum_elems >= cfg.accum_elems
+                {
+                    m.reset_for_reuse(d);
+                    self.cached_uses += 1;
+                    return m;
+                }
+            }
+        }
+        self.cached_uses = 1;
         Machine::new(cfg)
+    }
+
+    /// Return a machine to the cache after its shard completed (its
+    /// program left the array quiescent; the next [`Self::machine_for`]
+    /// re-fences it).  Machines whose run errored are dropped instead —
+    /// they never reach this call.
+    fn retire(&mut self, m: Machine) {
+        if self.batch_shards > 1 {
+            self.cached = Some(m);
+        }
     }
 
     /// Write a `(rows, d)` row-major host matrix into device memory as
@@ -139,13 +207,15 @@ impl SimBackend {
         let p = ChunkParams::whole(self.cfg.n, seq_len, mask);
         let layout = ChunkLayout::packed(&p);
         let prog = flash_chunk_program(&p, &layout).map_err(|e| format!("sim backend: {e:#}"))?;
-        let mut m = self.machine(&p, &layout, d);
+        let mut m = self.machine_for(&p, &layout, d);
         Self::write_padded(&mut m, layout.q_addr, q, seq_len, d);
         Self::write_padded(&mut m, layout.k_addr, k, seq_len, d);
         Self::write_padded(&mut m, layout.v_addr, v, seq_len, d);
         let stats = self.run(&mut m, &prog)?;
         self.measured = Some(stats.cycles);
-        Ok(Self::read_output(&m, &p, &layout, d))
+        let out = Self::read_output(&m, &p, &layout, d);
+        self.retire(m);
+        Ok(out)
     }
 
     /// One sequence-parallel chunk of one head (DESIGN.md §7 shapes on
@@ -185,7 +255,7 @@ impl SimBackend {
         let n = self.cfg.n;
         let p = ChunkParams::chunk(n, seq_len, mask, key_offset, chunk_len, total_keys);
         let layout = ChunkLayout::packed(&p);
-        let mut m = self.machine(&p, &layout, d);
+        let mut m = self.machine_for(&p, &layout, d);
         Self::write_padded(&mut m, layout.q_addr, q, seq_len, d);
         Self::write_padded(&mut m, layout.k_addr, k_chunk, chunk_len, d);
         Self::write_padded(&mut m, layout.v_addr, v_chunk, chunk_len, d);
@@ -218,6 +288,7 @@ impl SimBackend {
             }
         }
         self.measured = Some(cycles);
+        self.retire(m);
         Ok(part)
     }
 
@@ -244,13 +315,15 @@ impl SimBackend {
         let p = ChunkParams::decode_row(self.cfg.n, prefix_len);
         let layout = ChunkLayout::packed(&p);
         let prog = flash_chunk_program(&p, &layout).map_err(|e| format!("sim backend: {e:#}"))?;
-        let mut m = self.machine(&p, &layout, d);
+        let mut m = self.machine_for(&p, &layout, d);
         Self::write_padded(&mut m, layout.q_addr, q_row, 1, d);
         Self::write_padded(&mut m, layout.k_addr, k, prefix_len, d);
         Self::write_padded(&mut m, layout.v_addr, v, prefix_len, d);
         let stats = self.run(&mut m, &prog)?;
         self.measured = Some(stats.cycles);
-        Ok(Self::read_output(&m, &p, &layout, d))
+        let out = Self::read_output(&m, &p, &layout, d);
+        self.retire(m);
+        Ok(out)
     }
 
     /// One split-KV decode range (`br = 1`, partial state).
@@ -278,7 +351,7 @@ impl SimBackend {
         let prog = flash_chunk_partial_program(&p, &layout, 0)
             .map_err(|e| format!("sim backend: {e:#}"))?
             .expect("an unmasked decode range always has live tiles");
-        let mut m = self.machine(&p, &layout, d);
+        let mut m = self.machine_for(&p, &layout, d);
         Self::write_padded(&mut m, layout.q_addr, q_row, 1, d);
         Self::write_padded(&mut m, layout.k_addr, k, range_len, d);
         Self::write_padded(&mut m, layout.v_addr, v, range_len, d);
@@ -290,6 +363,7 @@ impl SimBackend {
         for h in 0..d {
             part.acc[h] = m.read_mem(layout.o_addr + (h * n) as u32, 1)[0];
         }
+        self.retire(m);
         Ok(part)
     }
 

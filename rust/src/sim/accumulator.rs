@@ -59,6 +59,21 @@ impl Accumulator {
         }
     }
 
+    /// Reset to the just-constructed state for machine reuse across
+    /// shards (the shard-batching hazard fence, DESIGN.md §8): zero the
+    /// accumulation SRAM and per-iteration state, rebind the softmax
+    /// scale of the next shard.
+    pub fn reset(&mut self, scale: f32) {
+        self.scale = scale;
+        self.sram.fill(0.0);
+        self.b.fill(0.0);
+        self.pv_seen.fill(0);
+        self.first = true;
+        self.l_addr = 0;
+        self.o_addr = 0;
+        self.o_stride = self.n as u32;
+    }
+
     /// Bind the accumulation targets for the current inner iteration and
     /// reset per-iteration state.  `first` marks j == 0 of Algorithm 1.
     pub fn begin_iteration(&mut self, l_addr: u32, o_addr: u32, o_stride: u32, first: bool) {

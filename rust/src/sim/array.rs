@@ -15,6 +15,19 @@
 //! an occupied slot is a *structural hazard* and panics with a diagnostic
 //! — the cycle-model tests rely on this to prove the SystolicAttention
 //! schedule is legal.
+//!
+//! ## Struct-of-arrays layout (DESIGN.md §8)
+//!
+//! The three wave buffers are stored as separate lane vectors (tag/kind
+//! byte + payload lanes + hop counters + the §8 masked-sideband bits)
+//! rather than `Vec<Option<enum>>`: the hot row/column advance then runs
+//! as contiguous slice copies and tag-homogeneous runs the autovectorizer
+//! can take.  [`Array::step`] dispatches to the vectorized path;
+//! [`Array::scalar_reference_step`] keeps the frozen pre-refactor per-lane
+//! control flow as the differential-reference twin
+//! (`tests/sim_differential.rs`, `benches/simcycles.rs`).  The two paths
+//! are bitwise-equal in state and emit the same structural-hazard panics
+//! at the same cycles for single-fault scenarios.
 
 use crate::numerics::f16::quantize_ftz_f32 as quantize_f32;
 use crate::numerics::pwl::PwlExp2;
@@ -77,35 +90,187 @@ struct LeftOp {
     tag: LeftTag,
 }
 
-/// One comparison unit (top row, paper §3.1): tracks old/new row max and
-/// re-streams S downward.  The §8 mask wave rides here: `bound` is the
-/// boundary register ([`crate::isa::LaneBound`] resolved per column by
-/// the controller) — arrivals at `seen >= bound` are masked lanes,
-/// excluded from the running max and re-streamed as zero with the
-/// masked sideband bit.
-#[derive(Clone, Copy, Debug)]
-struct CmpUnit {
-    old_m: f32,
-    new_m: f32,
-    /// Arrival counter: how many S elements of the current iteration have
-    /// passed through (the park hop count).
-    seen: u16,
-    /// Valid-lane boundary of the current iteration (`u16::MAX` =
-    /// unmasked).
-    bound: u16,
+// Operand-wave tag bytes (struct-of-arrays encoding of `LeftTag`).
+const OP_NONE: u8 = 0;
+const OP_MAC_UP: u8 = 1;
+const OP_MUL_CONST: u8 = 2;
+const OP_PWL: u8 = 3;
+const OP_ROW_SUM: u8 = 4;
+const OP_MAC_DOWN: u8 = 5;
+
+// Downward-wave kind bytes (struct-of-arrays encoding of `DownMsg`).
+const DOWN_NONE: u8 = 0;
+const DOWN_PARK: u8 = 1;
+const DOWN_ADD_BROADCAST: u8 = 2;
+const DOWN_AVAL: u8 = 3;
+const DOWN_ROW_SUM: u8 = 4;
+const DOWN_PV: u8 = 5;
+const DOWN_PRELOAD: u8 = 6;
+
+/// Left-operand wave, one lane per PE: tag byte + payload (`val`), the
+/// PWL intercept in a second payload lane (`aux`) and the PWL segment
+/// index (`seg`).  Payload lanes of `OP_NONE` slots are dead (every read
+/// is tag-guarded), so the one-hop-right advance is a plain slice shift.
+#[derive(Default)]
+struct OpWave {
+    tag: Vec<u8>,
+    val: Vec<f32>,
+    aux: Vec<f32>,
+    seg: Vec<u8>,
+}
+
+impl OpWave {
+    fn new(len: usize) -> OpWave {
+        OpWave {
+            tag: vec![OP_NONE; len],
+            val: vec![0.0; len],
+            aux: vec![0.0; len],
+            seg: vec![0; len],
+        }
+    }
+
+    fn clear(&mut self) {
+        self.tag.fill(OP_NONE);
+    }
+
+    fn set(&mut self, i: usize, op: LeftOp) {
+        self.val[i] = op.val;
+        self.tag[i] = match op.tag {
+            LeftTag::MacUp => OP_MAC_UP,
+            LeftTag::MulConst => OP_MUL_CONST,
+            LeftTag::Pwl { seg, intercept } => {
+                self.seg[i] = seg;
+                self.aux[i] = intercept;
+                OP_PWL
+            }
+            LeftTag::RowSum => OP_ROW_SUM,
+            LeftTag::MacDown => OP_MAC_DOWN,
+        };
+    }
+
+    fn decode(&self, i: usize) -> Option<LeftOp> {
+        let tag = match self.tag[i] {
+            OP_NONE => return None,
+            OP_MAC_UP => LeftTag::MacUp,
+            OP_MUL_CONST => LeftTag::MulConst,
+            OP_PWL => LeftTag::Pwl { seg: self.seg[i], intercept: self.aux[i] },
+            OP_ROW_SUM => LeftTag::RowSum,
+            OP_MAC_DOWN => LeftTag::MacDown,
+            t => unreachable!("bad op tag {t}"),
+        };
+        Some(LeftOp { val: self.val[i], tag })
+    }
+}
+
+/// Upward-psum wave.  Invariant: `val[i] == 0.0` whenever `!live[i]`, so
+/// the MacUp accumulate (`val + stat * op`) is the old `unwrap_or(0.0)`
+/// without a branch.
+#[derive(Default)]
+struct UpWave {
+    live: Vec<bool>,
+    val: Vec<f32>,
+}
+
+impl UpWave {
+    fn new(len: usize) -> UpWave {
+        UpWave { live: vec![false; len], val: vec![0.0; len] }
+    }
+
+    fn clear(&mut self) {
+        self.live.fill(false);
+        self.val.fill(0.0);
+    }
+}
+
+/// Downward wave: kind byte + payload + park/preload hop counter + the
+/// §8 masked-sideband bit.  Payload lanes of `DOWN_NONE` slots are dead.
+#[derive(Default)]
+struct DownWave {
+    kind: Vec<u8>,
+    val: Vec<f32>,
+    hops: Vec<u16>,
+    masked: Vec<bool>,
+}
+
+impl DownWave {
+    fn new(len: usize) -> DownWave {
+        DownWave {
+            kind: vec![DOWN_NONE; len],
+            val: vec![0.0; len],
+            hops: vec![0; len],
+            masked: vec![false; len],
+        }
+    }
+
+    fn clear(&mut self) {
+        self.kind.fill(DOWN_NONE);
+    }
+
+    fn set(&mut self, i: usize, msg: DownMsg) {
+        self.kind[i] = match msg {
+            DownMsg::Park { val, hops, masked } => {
+                self.val[i] = val;
+                self.hops[i] = hops;
+                self.masked[i] = masked;
+                DOWN_PARK
+            }
+            DownMsg::AddBroadcast { val } => {
+                self.val[i] = val;
+                DOWN_ADD_BROADCAST
+            }
+            DownMsg::AVal { val } => {
+                self.val[i] = val;
+                DOWN_AVAL
+            }
+            DownMsg::RowSum { val } => {
+                self.val[i] = val;
+                DOWN_ROW_SUM
+            }
+            DownMsg::Pv { val } => {
+                self.val[i] = val;
+                DOWN_PV
+            }
+            DownMsg::Preload { val, hops } => {
+                self.val[i] = val;
+                self.hops[i] = hops;
+                DOWN_PRELOAD
+            }
+        };
+    }
+
+    /// Rebuild the enum for a live lane (cold paths only: panic
+    /// diagnostics must format exactly like the pre-refactor messages).
+    fn msg(&self, i: usize) -> DownMsg {
+        match self.kind[i] {
+            DOWN_PARK => DownMsg::Park {
+                val: self.val[i],
+                hops: self.hops[i],
+                masked: self.masked[i],
+            },
+            DOWN_ADD_BROADCAST => DownMsg::AddBroadcast { val: self.val[i] },
+            DOWN_AVAL => DownMsg::AVal { val: self.val[i] },
+            DOWN_ROW_SUM => DownMsg::RowSum { val: self.val[i] },
+            DOWN_PV => DownMsg::Pv { val: self.val[i] },
+            DOWN_PRELOAD => DownMsg::Preload { val: self.val[i], hops: self.hops[i] },
+            k => unreachable!("bad down kind {k}"),
+        }
+    }
+
+    fn decode(&self, i: usize) -> Option<DownMsg> {
+        if self.kind[i] == DOWN_NONE {
+            None
+        } else {
+            Some(self.msg(i))
+        }
+    }
 }
 
 /// Finite stand-in for -inf: keeps the Split unit NaN-free (same
 /// convention as the Pallas kernel and flash references).
 pub const NEG_INF: f32 = -1e30;
 
-impl CmpUnit {
-    fn new() -> CmpUnit {
-        CmpUnit { old_m: NEG_INF, new_m: NEG_INF, seen: 0, bound: u16::MAX }
-    }
-}
-
-/// The PE grid + CMP row.  See module docs for the stepping contract.
+/// The PE grid + CMP row.  See module docs for the stepping contract and
+/// the struct-of-arrays layout.
 pub struct Array {
     pub n: usize,
     /// PWL segments for the Split-unit exp2.
@@ -113,6 +278,10 @@ pub struct Array {
     /// Softmax scale log2(e)/sqrt(d) applied by the MulConst wave
     /// (kept here for the CMP a-value handoff; the wave carries it too).
     pub quantize_inputs: bool,
+    /// Step with the frozen pre-refactor per-lane path instead of the
+    /// vectorized one ([`MachineConfig::scalar_reference`]
+    /// (crate::sim::MachineConfig::scalar_reference) plumbs it here).
+    pub scalar_reference: bool,
 
     // State, all row-major [row * n + col]:
     stat: Vec<f32>,
@@ -122,15 +291,25 @@ pub struct Array {
     /// the PE so its parked zero stays exactly zero.
     masked: Vec<bool>,
     /// Left operands *arriving* at each PE this cycle.
-    ops: Vec<Option<LeftOp>>,
+    ops: OpWave,
     /// Upward psums arriving this cycle (from the row below).
-    up: Vec<Option<f32>>,
+    up: UpWave,
     /// Downward values arriving this cycle (from the row above).
-    down: Vec<Option<DownMsg>>,
-    cmp: Vec<CmpUnit>,
+    down: DownWave,
+
+    // CMP row (paper §3.1), one lane per column: running old/new row max,
+    // the arrival counter (park hop count) and the §8 boundary register
+    // ([`crate::isa::LaneBound`] resolved per column by the controller) —
+    // arrivals at `seen >= bound` are masked lanes, excluded from the
+    // running max and re-streamed as zero with the masked sideband bit.
+    cmp_old: Vec<f32>,
+    cmp_new: Vec<f32>,
+    cmp_seen: Vec<u16>,
+    cmp_bound: Vec<u16>,
     /// S values that exited the top last cycle, processed by the CMP row
     /// this cycle (one-cycle CMP latency, matching §3.2's timing).
-    cmp_inbox: Vec<Option<f32>>,
+    cmp_inbox_live: Vec<bool>,
+    cmp_inbox_val: Vec<f32>,
 
     /// Pending edge injections for the *next* step: left[row], top[col].
     inject_left: Vec<Option<LeftOp>>,
@@ -138,9 +317,16 @@ pub struct Array {
 
     // Double buffers reused across cycles (perf: avoids 3 x n^2 Vec
     // allocations per simulated cycle — see EXPERIMENTS.md §Perf).
-    next_ops: Vec<Option<LeftOp>>,
-    next_up: Vec<Option<f32>>,
-    next_down: Vec<Option<DownMsg>>,
+    next_ops: OpWave,
+    next_up: UpWave,
+    next_down: DownWave,
+
+    // Per-step scratch (n lanes): top exits staged for the CMP inbox, and
+    // bottom exits staged per column so the vectorized two-pass row sweep
+    // emits them in the same column-ascending order as the per-lane path.
+    up_exit_live: Vec<bool>,
+    up_exit_val: Vec<f32>,
+    bottom: Vec<Option<BottomOut>>,
 
     pub cycle: u64,
     /// Busy-PE count accumulated per cycle (utilization accounting).
@@ -155,23 +341,60 @@ impl Array {
             n,
             pwl: PwlExp2::new(segments),
             quantize_inputs,
+            scalar_reference: false,
             stat: vec![0.0; n * n],
             res: vec![0.0; n * n],
             masked: vec![false; n * n],
-            ops: vec![None; n * n],
-            up: vec![None; n * n],
-            down: vec![None; n * n],
-            cmp: vec![CmpUnit::new(); n],
-            cmp_inbox: vec![None; n],
+            ops: OpWave::new(n * n),
+            up: UpWave::new(n * n),
+            down: DownWave::new(n * n),
+            cmp_old: vec![NEG_INF; n],
+            cmp_new: vec![NEG_INF; n],
+            cmp_seen: vec![0; n],
+            cmp_bound: vec![u16::MAX; n],
+            cmp_inbox_live: vec![false; n],
+            cmp_inbox_val: vec![0.0; n],
             inject_left: vec![None; n],
             inject_top: vec![None; n],
-            next_ops: vec![None; n * n],
-            next_up: vec![None; n * n],
-            next_down: vec![None; n * n],
+            next_ops: OpWave::new(n * n),
+            next_up: UpWave::new(n * n),
+            next_down: DownWave::new(n * n),
+            up_exit_live: vec![false; n],
+            up_exit_val: vec![0.0; n],
+            bottom: vec![None; n],
             cycle: 0,
             mac_ops: 0,
             matmul_macs: 0,
         }
+    }
+
+    /// Reset every register, wave buffer and counter to the
+    /// just-constructed state.  This is the shard-batching hazard fence
+    /// (DESIGN.md §8): a machine reused across independent shards calls
+    /// this between programs so the next run is bitwise the run a fresh
+    /// machine would produce.
+    pub fn reset(&mut self) {
+        self.stat.fill(0.0);
+        self.res.fill(0.0);
+        self.masked.fill(false);
+        self.ops.clear();
+        self.up.clear();
+        self.down.clear();
+        self.next_ops.clear();
+        self.next_up.clear();
+        self.next_down.clear();
+        self.cmp_old.fill(NEG_INF);
+        self.cmp_new.fill(NEG_INF);
+        self.cmp_seen.fill(0);
+        self.cmp_bound.fill(u16::MAX);
+        self.cmp_inbox_live.fill(false);
+        self.inject_left.fill(None);
+        self.inject_top.fill(None);
+        self.up_exit_live.fill(false);
+        self.bottom.fill(None);
+        self.cycle = 0;
+        self.mac_ops = 0;
+        self.matmul_macs = 0;
     }
 
     /// Queue a left-edge injection for row `row` (consumed by the next
@@ -212,15 +435,17 @@ impl Array {
     /// Reset CMP unit `col` for a new row block (AttnScore with
     /// `first = true`): old max becomes -inf.
     pub fn cmp_reset(&mut self, col: usize) {
-        self.cmp[col] = CmpUnit::new();
+        self.cmp_old[col] = NEG_INF;
+        self.cmp_new[col] = NEG_INF;
+        self.cmp_seen[col] = 0;
+        self.cmp_bound[col] = u16::MAX;
     }
 
     /// Begin a new inner iteration at CMP `col`: the running max of the
     /// previous iteration becomes old_m, the arrival counter clears.
     pub fn cmp_next_iter(&mut self, col: usize) {
-        let c = &mut self.cmp[col];
-        c.old_m = c.new_m;
-        c.seen = 0;
+        self.cmp_old[col] = self.cmp_new[col];
+        self.cmp_seen[col] = 0;
     }
 
     /// Program CMP `col`'s boundary register for the coming iteration
@@ -228,19 +453,19 @@ impl Array {
     /// controller emits this for every AttnScore — `n` (all lanes
     /// valid) when the score is unmasked.
     pub fn cmp_set_bound(&mut self, col: usize, bound: u16) {
-        self.cmp[col].bound = bound;
+        self.cmp_bound[col] = bound;
     }
 
     /// CMP row emits the -new_m broadcast into column `col`.
     pub fn cmp_emit_sub(&mut self, col: usize) {
-        let v = -self.cmp[col].new_m;
+        let v = -self.cmp_new[col];
         self.inject_top(col, DownMsg::AddBroadcast { val: v });
     }
 
     /// CMP row emits a = old_m - new_m toward the accumulator.
     pub fn cmp_emit_a(&mut self, col: usize) {
-        let c = self.cmp[col];
-        self.inject_top(col, DownMsg::AVal { val: c.old_m - c.new_m });
+        let v = self.cmp_old[col] - self.cmp_new[col];
+        self.inject_top(col, DownMsg::AVal { val: v });
     }
 
     #[inline]
@@ -262,67 +487,420 @@ impl Array {
     /// Advance one clock cycle.  Returns every value that left the bottom
     /// edge this cycle (routed to the accumulator by the machine).
     pub fn step(&mut self) -> Vec<BottomOut> {
-        let n = self.n;
         let mut outs = Vec::new();
+        self.step_into(&mut outs);
+        outs
+    }
 
-        // Reuse the double buffers (cleared from the previous cycle).
-        let mut next_ops = std::mem::take(&mut self.next_ops);
-        let mut next_up = std::mem::take(&mut self.next_up);
-        let mut next_down = std::mem::take(&mut self.next_down);
+    /// [`Self::step`] into a caller-owned buffer (the machine's per-cycle
+    /// loop reuses one Vec instead of allocating each cycle).
+    pub fn step_into(&mut self, outs: &mut Vec<BottomOut>) {
+        outs.clear();
+        if self.scalar_reference {
+            self.scalar_step_into(outs);
+        } else {
+            self.vector_step_into(outs);
+        }
+    }
 
-        // 1. CMP row: process last cycle's top exits (one-cycle latency):
-        //    update the running max and re-stream S down the column.
-        for col in 0..n {
-            if let Some(s) = self.cmp_inbox[col].take() {
+    /// CMP row: process last cycle's top exits (one-cycle latency):
+    /// update the running max and re-stream S down the column.  Shared
+    /// verbatim by both stepping paths.
+    fn cmp_phase(&mut self, next_down: &mut DownWave) {
+        for col in 0..self.n {
+            if self.cmp_inbox_live[col] {
+                self.cmp_inbox_live[col] = false;
                 // The fp32 psum is quantized to the fp16 register width
                 // *here* so the tracked max and the parked value are the
                 // same number (otherwise the max row's N could land just
                 // above zero and skip the Split unit's sign-guarded PWL).
-                let s = self.q_res(s);
-                let c = &mut self.cmp[col];
+                let s = self.q_res(self.cmp_inbox_val[col]);
                 // §8 mask wave: a lane at or beyond the boundary register
                 // is excluded from the running max and parks as zero with
                 // the masked sideband bit set.
-                let masked = c.seen >= c.bound;
+                let masked = self.cmp_seen[col] >= self.cmp_bound[col];
                 if !masked {
-                    c.new_m = c.new_m.max(s);
+                    self.cmp_new[col] = self.cmp_new[col].max(s);
                 }
-                let hops = c.seen;
-                c.seen += 1;
-                next_down[self.idx(0, col)] = Some(DownMsg::Park {
-                    val: if masked { 0.0 } else { s },
-                    hops,
-                    masked,
-                });
+                let hops = self.cmp_seen[col];
+                self.cmp_seen[col] += 1;
+                next_down.set(
+                    col, // row 0
+                    DownMsg::Park { val: if masked { 0.0 } else { s }, hops, masked },
+                );
+            }
+        }
+    }
+
+    /// Stage this cycle's top exits for CMP processing next cycle, then
+    /// apply the edge injections queued for this boundary.  Shared
+    /// verbatim by both stepping paths.
+    fn edges_phase(&mut self, next_ops: &mut OpWave, next_down: &mut DownWave) {
+        let n = self.n;
+        for col in 0..n {
+            if self.up_exit_live[col] {
+                self.up_exit_live[col] = false;
+                assert!(
+                    !self.cmp_inbox_live[col],
+                    "structural hazard: CMP inbox col {col} cycle {}",
+                    self.cycle
+                );
+                self.cmp_inbox_live[col] = true;
+                self.cmp_inbox_val[col] = self.up_exit_val[col];
+            }
+        }
+        for row in 0..n {
+            if let Some(op) = self.inject_left[row].take() {
+                assert!(
+                    next_ops.tag[row * n] == OP_NONE,
+                    "structural hazard: left edge row {row} cycle {}",
+                    self.cycle
+                );
+                next_ops.set(row * n, op);
+            }
+        }
+        for col in 0..n {
+            if let Some(msg) = self.inject_top[col].take() {
+                assert!(
+                    next_down.kind[col] == DOWN_NONE,
+                    "structural hazard: top edge col {col} cycle {}",
+                    self.cycle
+                );
+                next_down.set(col, msg);
+            }
+        }
+    }
+
+    /// Vectorized per-PE advance: the operand wave moves one hop right as
+    /// a whole-row slice shift, then each row is processed as contiguous
+    /// tag-homogeneous runs (operand pass, then downward pass) — the
+    /// run bodies are branch-light loops over adjacent lanes that the
+    /// autovectorizer can take.  Lane arithmetic is the exact per-lane
+    /// fp32/fp16 expression of the scalar path, so state stays bitwise
+    /// identical.
+    fn vector_step_into(&mut self, outs: &mut Vec<BottomOut>) {
+        let n = self.n;
+        let ops = std::mem::take(&mut self.ops);
+        let up = std::mem::take(&mut self.up);
+        let mut down = std::mem::take(&mut self.down);
+        let mut next_ops = std::mem::take(&mut self.next_ops);
+        let mut next_up = std::mem::take(&mut self.next_up);
+        let mut next_down = std::mem::take(&mut self.next_down);
+
+        self.cmp_phase(&mut next_down);
+
+        for row in 0..n {
+            let base = row * n;
+
+            // Operand wave forward: ops[r][c] -> next_ops[r][c+1], the
+            // whole row at once (NONE lanes copy harmlessly; column 0 of
+            // the next buffer is left for the edge injection below).
+            if n > 1 {
+                next_ops.tag[base + 1..base + n].copy_from_slice(&ops.tag[base..base + n - 1]);
+                next_ops.val[base + 1..base + n].copy_from_slice(&ops.val[base..base + n - 1]);
+                next_ops.aux[base + 1..base + n].copy_from_slice(&ops.aux[base..base + n - 1]);
+                next_ops.seg[base + 1..base + n].copy_from_slice(&ops.seg[base..base + n - 1]);
+            }
+
+            // ---- Operand pass, in tag-homogeneous runs ----
+            let mut c0 = 0usize;
+            while c0 < n {
+                let tag = ops.tag[base + c0];
+                let mut c1 = c0 + 1;
+                while c1 < n && ops.tag[base + c1] == tag {
+                    c1 += 1;
+                }
+                match tag {
+                    OP_NONE => {
+                        // An upward psum with no matching operand would
+                        // mean a skew bug: MacUp operands and psums
+                        // travel together.
+                        for col in c0..c1 {
+                            let i = base + col;
+                            if up.live[i] {
+                                panic!(
+                                    "orphan upward psum {} at ({row},{col}) cycle {}",
+                                    up.val[i], self.cycle
+                                );
+                            }
+                        }
+                    }
+                    OP_MAC_UP => {
+                        self.mac_ops += (c1 - c0) as u64;
+                        self.matmul_macs += (c1 - c0) as u64;
+                        if row == 0 {
+                            for col in c0..c1 {
+                                let i = base + col;
+                                self.up_exit_val[col] = up.val[i] + self.stat[i] * ops.val[i];
+                                self.up_exit_live[col] = true;
+                            }
+                        } else {
+                            for col in c0..c1 {
+                                let i = base + col;
+                                next_up.val[i - n] = up.val[i] + self.stat[i] * ops.val[i];
+                                next_up.live[i - n] = true;
+                            }
+                        }
+                    }
+                    OP_MUL_CONST => {
+                        for col in c0..c1 {
+                            let i = base + col;
+                            if !self.masked[i] {
+                                self.res[i] = self.q_res(self.res[i] * ops.val[i]);
+                                self.mac_ops += 1;
+                            }
+                        }
+                    }
+                    OP_PWL => {
+                        // Split unit: decompose the resident value.  Sign
+                        // guard = one-shot latch: exp2 inputs are always
+                        // <= 0 and outputs always > 0, so a PE whose
+                        // register is already positive has consumed its
+                        // pair (cheap hardware: sign bit).  The §8 masked
+                        // latch overrides: a masked lane's parked zero
+                        // must stay exactly zero.
+                        for col in c0..c1 {
+                            let i = base + col;
+                            let x = self.res[i];
+                            let xi = x.ceil();
+                            let xf = self.q_res(x - xi);
+                            let k = self.pwl.segment(xf as f64) as u8;
+                            if !self.masked[i] && x <= 0.0 && k == ops.seg[i] {
+                                // fp16 interpolation MAC (PE datapath).
+                                let frac = self.q_res(ops.val[i] * xf + ops.aux[i]);
+                                self.res[i] =
+                                    self.q_res(frac * xi.clamp(-126.0, 127.0).exp2());
+                                self.mac_ops += 1;
+                            }
+                        }
+                    }
+                    OP_ROW_SUM => {
+                        self.mac_ops += (c1 - c0) as u64;
+                        for col in c0..c1 {
+                            let i = base + col;
+                            let acc_in = match down.kind[i] {
+                                DOWN_ROW_SUM => down.val[i],
+                                DOWN_NONE => 0.0,
+                                _ => panic!(
+                                    "rowsum wave met unexpected down value {:?} \
+                                     at ({row},{col}) cycle {}",
+                                    down.decode(i),
+                                    self.cycle
+                                ),
+                            };
+                            down.kind[i] = DOWN_NONE;
+                            let out = acc_in + self.res[i];
+                            if row + 1 < n {
+                                next_down.kind[i + n] = DOWN_ROW_SUM;
+                                next_down.val[i + n] = out;
+                            } else {
+                                self.bottom[col] = Some(BottomOut::RowSum { col, val: out });
+                            }
+                        }
+                    }
+                    OP_MAC_DOWN => {
+                        self.mac_ops += (c1 - c0) as u64;
+                        self.matmul_macs += (c1 - c0) as u64;
+                        for col in c0..c1 {
+                            let i = base + col;
+                            // PV psums are born at row 0 (downward path).
+                            let acc_in = match down.kind[i] {
+                                DOWN_PV => down.val[i],
+                                DOWN_NONE => {
+                                    assert_eq!(
+                                        row, 0,
+                                        "PV operand without psum below row 0 \
+                                         at ({row},{col}) cycle {}",
+                                        self.cycle
+                                    );
+                                    0.0
+                                }
+                                _ => panic!(
+                                    "PV wave met unexpected down value {:?} \
+                                     at ({row},{col}) cycle {}",
+                                    down.decode(i),
+                                    self.cycle
+                                ),
+                            };
+                            down.kind[i] = DOWN_NONE;
+                            let p = if self.quantize_inputs {
+                                quantize_f32(self.res[i])
+                            } else {
+                                self.res[i]
+                            };
+                            let out = acc_in + p * ops.val[i];
+                            if row + 1 < n {
+                                next_down.kind[i + n] = DOWN_PV;
+                                next_down.val[i + n] = out;
+                            } else {
+                                self.bottom[col] = Some(BottomOut::Pv { col, val: out });
+                            }
+                        }
+                    }
+                    t => unreachable!("bad op tag {t}"),
+                }
+                c0 = c1;
+            }
+
+            // ---- Downward pass (non-operand-coupled messages), in
+            // kind-homogeneous runs; lanes consumed by the operand pass
+            // above are DOWN_NONE by now ----
+            let mut c0 = 0usize;
+            while c0 < n {
+                let kind = down.kind[base + c0];
+                let mut c1 = c0 + 1;
+                while c1 < n && down.kind[base + c1] == kind {
+                    c1 += 1;
+                }
+                match kind {
+                    DOWN_NONE => {}
+                    DOWN_PARK => {
+                        for col in c0..c1 {
+                            let i = base + col;
+                            if down.hops[i] == 0 {
+                                // fp16 result registers (FTZ) in f16
+                                // mode; a masked lane parks exactly 0
+                                // and latches.
+                                let m = down.masked[i];
+                                self.res[i] = if m { 0.0 } else { self.q_res(down.val[i]) };
+                                self.masked[i] = m;
+                            } else if row + 1 < n {
+                                next_down.kind[i + n] = DOWN_PARK;
+                                next_down.val[i + n] = down.val[i];
+                                next_down.hops[i + n] = down.hops[i] - 1;
+                                next_down.masked[i + n] = down.masked[i];
+                            } else {
+                                panic!(
+                                    "park value fell off column {col} cycle {}",
+                                    self.cycle
+                                );
+                            }
+                        }
+                    }
+                    DOWN_ADD_BROADCAST => {
+                        for col in c0..c1 {
+                            let i = base + col;
+                            if !self.masked[i] {
+                                self.res[i] = self.q_res(self.res[i] + down.val[i]);
+                                self.mac_ops += 1;
+                            }
+                        }
+                        if row + 1 < n {
+                            next_down.kind[base + n + c0..base + n + c1]
+                                .fill(DOWN_ADD_BROADCAST);
+                            next_down.val[base + n + c0..base + n + c1]
+                                .copy_from_slice(&down.val[base + c0..base + c1]);
+                        }
+                    }
+                    DOWN_AVAL => {
+                        if row + 1 < n {
+                            next_down.kind[base + n + c0..base + n + c1].fill(DOWN_AVAL);
+                            next_down.val[base + n + c0..base + n + c1]
+                                .copy_from_slice(&down.val[base + c0..base + c1]);
+                        } else {
+                            for col in c0..c1 {
+                                self.bottom[col] =
+                                    Some(BottomOut::AVal { col, val: down.val[base + col] });
+                            }
+                        }
+                    }
+                    DOWN_PRELOAD => {
+                        for col in c0..c1 {
+                            let i = base + col;
+                            if down.hops[i] == 0 {
+                                self.stat[i] = down.val[i];
+                            } else if row + 1 < n {
+                                next_down.kind[i + n] = DOWN_PRELOAD;
+                                next_down.val[i + n] = down.val[i];
+                                next_down.hops[i + n] = down.hops[i] - 1;
+                            } else {
+                                panic!(
+                                    "preload value fell off column {col} cycle {}",
+                                    self.cycle
+                                );
+                            }
+                        }
+                    }
+                    DOWN_ROW_SUM | DOWN_PV => {
+                        // These must always be consumed by an operand in
+                        // the operand pass above.
+                        let col = c0;
+                        panic!(
+                            "unconsumed {:?} at ({row},{col}) cycle {} — \
+                             operand wave and psum wave desynchronized",
+                            down.msg(base + col),
+                            self.cycle
+                        );
+                    }
+                    k => unreachable!("bad down kind {k}"),
+                }
+                c0 = c1;
             }
         }
 
-        // 2. Per-PE processing, row by row.  Movement semantics:
-        //    ops[r][c] (arriving this cycle) -> next_ops[r][c+1];
-        //    up[r][c] is the psum arriving at (r, c) this cycle from
-        //    (r+1, c); after row r adds its term it becomes next_up[r-1][c]
-        //    (or exits to CMP when r == 0).  Down likewise, top-down.
-        let mut up_exit: Vec<Option<f32>> = vec![None; n];
+        // Bottom exits, in the per-lane path's column-ascending order (at
+        // most one exit per column per cycle: an operand that emits
+        // downward consumed the lane's down slot or panicked, so the two
+        // passes can never both stage the same column).
+        for col in 0..n {
+            if let Some(o) = self.bottom[col].take() {
+                outs.push(o);
+            }
+        }
+
+        self.edges_phase(&mut next_ops, &mut next_down);
+        self.finish_step(ops, up, down, next_ops, next_up, next_down);
+    }
+
+    /// The frozen pre-refactor per-lane stepping path, kept verbatim as
+    /// the differential-reference twin: `tests/sim_differential.rs` pins
+    /// the vectorized path bitwise against it, and `benches/simcycles.rs`
+    /// sweeps old-vs-new host throughput.  Not `#[cfg(test)]` precisely
+    /// so the bench (a non-test build) can drive it.
+    pub fn scalar_reference_step(&mut self) -> Vec<BottomOut> {
+        let mut outs = Vec::new();
+        self.scalar_step_into(&mut outs);
+        outs
+    }
+
+    fn scalar_step_into(&mut self, outs: &mut Vec<BottomOut>) {
+        let n = self.n;
+        let ops = std::mem::take(&mut self.ops);
+        let up = std::mem::take(&mut self.up);
+        let mut down = std::mem::take(&mut self.down);
+        let mut next_ops = std::mem::take(&mut self.next_ops);
+        let mut next_up = std::mem::take(&mut self.next_up);
+        let mut next_down = std::mem::take(&mut self.next_down);
+
+        self.cmp_phase(&mut next_down);
+
+        // Per-PE processing, lane by lane in row-major order.  Movement
+        // semantics: ops[r][c] (arriving this cycle) -> next_ops[r][c+1];
+        // up[r][c] is the psum arriving at (r, c) this cycle from
+        // (r+1, c); after row r adds its term it becomes next_up[r-1][c]
+        // (or exits to CMP when r == 0).  Down likewise, top-down.
         for row in 0..n {
             for col in 0..n {
-                let i = self.idx(row, col);
+                let i = row * n + col;
                 // ---- Left operand path ----
-                if let Some(op) = self.ops[i] {
+                if let Some(op) = ops.decode(i) {
                     // Forward right (unless at the last column).
                     if col + 1 < n {
-                        next_ops[self.idx(row, col + 1)] = Some(op);
+                        next_ops.set(i + 1, op);
                     }
                     match op.tag {
                         LeftTag::MacUp => {
-                            let acc_in = self.up[i].unwrap_or(0.0);
+                            let acc_in = if up.live[i] { up.val[i] } else { 0.0 };
                             let term = self.stat[i] * op.val;
                             let out = acc_in + term;
                             self.mac_ops += 1;
                             self.matmul_macs += 1;
                             if row == 0 {
-                                up_exit[col] = Some(out);
+                                self.up_exit_val[col] = out;
+                                self.up_exit_live[col] = true;
                             } else {
-                                next_up[self.idx(row - 1, col)] = Some(out);
+                                next_up.val[i - n] = out;
+                                next_up.live[i - n] = true;
                             }
                         }
                         LeftTag::MulConst => {
@@ -332,19 +910,11 @@ impl Array {
                             }
                         }
                         LeftTag::Pwl { seg, intercept } => {
-                            // Split unit: decompose the resident value.
-                            // Sign guard = one-shot latch: exp2 inputs are
-                            // always <= 0 and outputs always > 0, so a PE
-                            // whose register is already positive has
-                            // consumed its pair (cheap hardware: sign bit).
-                            // The §8 masked latch overrides: a masked
-                            // lane's parked zero must stay exactly zero.
                             let x = self.res[i];
                             let xi = x.ceil();
                             let xf = self.q_res(x - xi);
                             let k = self.pwl.segment(xf as f64) as u8;
                             if !self.masked[i] && x <= 0.0 && k == seg {
-                                // fp16 interpolation MAC (PE datapath).
                                 let frac = self.q_res(op.val * xf + intercept);
                                 self.res[i] =
                                     self.q_res(frac * xi.clamp(-126.0, 127.0).exp2());
@@ -352,7 +922,7 @@ impl Array {
                             }
                         }
                         LeftTag::RowSum => {
-                            let acc_in = match self.down[i] {
+                            let acc_in = match down.decode(i) {
                                 Some(DownMsg::RowSum { val }) => val,
                                 None => 0.0,
                                 other => panic!(
@@ -361,19 +931,18 @@ impl Array {
                                     self.cycle
                                 ),
                             };
-                            self.down[i] = None;
+                            down.kind[i] = DOWN_NONE;
                             let out = acc_in + self.res[i];
                             self.mac_ops += 1;
-                            let msg = DownMsg::RowSum { val: out };
                             if row + 1 < n {
-                                next_down[self.idx(row + 1, col)] = Some(msg);
+                                next_down.set(i + n, DownMsg::RowSum { val: out });
                             } else {
                                 outs.push(BottomOut::RowSum { col, val: out });
                             }
                         }
                         LeftTag::MacDown => {
                             // PV psums are born at row 0 (downward path).
-                            let acc_in = match self.down[i] {
+                            let acc_in = match down.decode(i) {
                                 Some(DownMsg::Pv { val }) => val,
                                 None => {
                                     assert_eq!(
@@ -390,7 +959,7 @@ impl Array {
                                     self.cycle
                                 ),
                             };
-                            self.down[i] = None;
+                            down.kind[i] = DOWN_NONE;
                             let p = if self.quantize_inputs {
                                 quantize_f32(self.res[i])
                             } else {
@@ -400,33 +969,30 @@ impl Array {
                             self.mac_ops += 1;
                             self.matmul_macs += 1;
                             if row + 1 < n {
-                                next_down[self.idx(row + 1, col)] = Some(DownMsg::Pv { val: out });
+                                next_down.set(i + n, DownMsg::Pv { val: out });
                             } else {
                                 outs.push(BottomOut::Pv { col, val: out });
                             }
                         }
                     }
-                } else if let Some(psum) = self.up[i] {
-                    // An upward psum with no matching operand would mean a
-                    // skew bug: MacUp operands and psums travel together.
+                } else if up.live[i] {
                     panic!(
-                        "orphan upward psum {psum} at ({row},{col}) cycle {}",
-                        self.cycle
+                        "orphan upward psum {} at ({row},{col}) cycle {}",
+                        up.val[i], self.cycle
                     );
                 }
 
                 // ---- Downward path (non-operand-coupled messages) ----
-                if let Some(msg) = self.down[i].take() {
+                if let Some(msg) = down.decode(i) {
+                    down.kind[i] = DOWN_NONE;
                     match msg {
                         DownMsg::Park { val, hops, masked } => {
                             if hops == 0 {
-                                // fp16 result registers (FTZ) in f16 mode;
-                                // a masked lane parks exactly 0 and latches.
                                 self.res[i] = if masked { 0.0 } else { self.q_res(val) };
                                 self.masked[i] = masked;
                             } else if row + 1 < n {
-                                next_down[self.idx(row + 1, col)] =
-                                    Some(DownMsg::Park { val, hops: hops - 1, masked });
+                                next_down
+                                    .set(i + n, DownMsg::Park { val, hops: hops - 1, masked });
                             } else {
                                 panic!(
                                     "park value fell off column {col} cycle {}",
@@ -440,13 +1006,12 @@ impl Array {
                                 self.mac_ops += 1;
                             }
                             if row + 1 < n {
-                                next_down[self.idx(row + 1, col)] =
-                                    Some(DownMsg::AddBroadcast { val });
+                                next_down.set(i + n, DownMsg::AddBroadcast { val });
                             }
                         }
                         DownMsg::AVal { val } => {
                             if row + 1 < n {
-                                next_down[self.idx(row + 1, col)] = Some(DownMsg::AVal { val });
+                                next_down.set(i + n, DownMsg::AVal { val });
                             } else {
                                 outs.push(BottomOut::AVal { col, val });
                             }
@@ -455,8 +1020,7 @@ impl Array {
                             if hops == 0 {
                                 self.stat[i] = val;
                             } else if row + 1 < n {
-                                next_down[self.idx(row + 1, col)] =
-                                    Some(DownMsg::Preload { val, hops: hops - 1 });
+                                next_down.set(i + n, DownMsg::Preload { val, hops: hops - 1 });
                             } else {
                                 panic!(
                                     "preload value fell off column {col} cycle {}",
@@ -465,8 +1029,8 @@ impl Array {
                             }
                         }
                         DownMsg::RowSum { .. } | DownMsg::Pv { .. } => {
-                            // These must always be consumed by an operand in
-                            // the left-path arm above.
+                            // These must always be consumed by an operand
+                            // in the left-path arm above.
                             panic!(
                                 "unconsumed {msg:?} at ({row},{col}) cycle {} — \
                                  operand wave and psum wave desynchronized",
@@ -478,59 +1042,40 @@ impl Array {
             }
         }
 
-        // 3. Stage this cycle's top exits for CMP processing next cycle.
-        for col in 0..n {
-            if let Some(s) = up_exit[col] {
-                assert!(
-                    self.cmp_inbox[col].is_none(),
-                    "structural hazard: CMP inbox col {col} cycle {}",
-                    self.cycle
-                );
-                self.cmp_inbox[col] = Some(s);
-            }
-        }
+        self.edges_phase(&mut next_ops, &mut next_down);
+        self.finish_step(ops, up, down, next_ops, next_up, next_down);
+    }
 
-        // 4. Apply edge injections queued for this boundary.
-        for row in 0..n {
-            if let Some(op) = self.inject_left[row].take() {
-                assert!(
-                    next_ops[self.idx(row, 0)].is_none(),
-                    "structural hazard: left edge row {row} cycle {}",
-                    self.cycle
-                );
-                next_ops[self.idx(row, 0)] = Some(op);
-            }
-        }
-        for col in 0..n {
-            if let Some(msg) = self.inject_top[col].take() {
-                assert!(
-                    next_down[self.idx(0, col)].is_none(),
-                    "structural hazard: top edge col {col} cycle {}",
-                    self.cycle
-                );
-                next_down[self.idx(0, col)] = Some(msg);
-            }
-        }
-
-        // Swap: the consumed arrival buffers become next cycle's blank
-        // next-buffers (they are fully drained by the loops above, which
-        // `take()` every slot they read).
-        self.ops.iter_mut().for_each(|x| *x = None);
-        self.up.iter_mut().for_each(|x| *x = None);
-        self.down.iter_mut().for_each(|x| *x = None);
-        self.next_ops = std::mem::replace(&mut self.ops, next_ops);
-        self.next_up = std::mem::replace(&mut self.up, next_up);
-        self.next_down = std::mem::replace(&mut self.down, next_down);
+    /// Swap: the consumed arrival buffers become next cycle's blank
+    /// next-buffers (the passes drain every slot they read; `clear`
+    /// wipes the tag/kind/live lanes wholesale).
+    fn finish_step(
+        &mut self,
+        mut ops: OpWave,
+        mut up: UpWave,
+        mut down: DownWave,
+        next_ops: OpWave,
+        next_up: UpWave,
+        next_down: DownWave,
+    ) {
+        ops.clear();
+        up.clear();
+        down.clear();
+        self.ops = next_ops;
+        self.next_ops = ops;
+        self.up = next_up;
+        self.next_up = up;
+        self.down = next_down;
+        self.next_down = down;
         self.cycle += 1;
-        outs
     }
 
     /// True when no value is in flight anywhere in the array.
     pub fn quiescent(&self) -> bool {
-        self.ops.iter().all(Option::is_none)
-            && self.up.iter().all(Option::is_none)
-            && self.down.iter().all(Option::is_none)
-            && self.cmp_inbox.iter().all(Option::is_none)
+        self.ops.tag.iter().all(|&t| t == OP_NONE)
+            && !self.up.live.iter().any(|&l| l)
+            && self.down.kind.iter().all(|&k| k == DOWN_NONE)
+            && !self.cmp_inbox_live.iter().any(|&l| l)
             && self.inject_left.iter().all(Option::is_none)
             && self.inject_top.iter().all(Option::is_none)
     }
@@ -552,7 +1097,7 @@ impl Array {
     }
 
     pub fn cmp_new_m(&self, col: usize) -> f32 {
-        self.cmp[col].new_m
+        self.cmp_new[col]
     }
 
     pub fn pwl(&self) -> &PwlExp2 {
@@ -563,6 +1108,7 @@ impl Array {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::numerics::SplitMix64;
 
     /// Drive a bare first matmul (upward) through a tiny array and check
     /// S = Q K^T lands at the CMP row and parks correctly.
@@ -781,5 +1327,145 @@ mod tests {
         // just ensure the call path doesn't quantize const waves)
         assert!(a.inject_left[0].unwrap().val == 1.0 / 3.0);
         assert!((a.inject_left[1].unwrap().val - 1.0 / 3.0).abs() > 0.0);
+    }
+
+    /// Drive the same randomized (legal) injection schedule through a
+    /// vectorized array and its scalar-reference twin, comparing the full
+    /// observable state after every phase — the in-module half of the
+    /// `tests/sim_differential.rs` contract.
+    #[test]
+    fn vectorized_step_matches_scalar_reference_on_random_waves() {
+        let n = 4;
+        let mut rng = SplitMix64::new(0xA113);
+        for trial in 0..4 {
+            let mut v = Array::new(n, 8, trial % 2 == 0);
+            let mut s = Array::new(n, 8, trial % 2 == 0);
+            s.scalar_reference = true;
+
+            let assert_same = |v: &Array, s: &Array, what: &str| {
+                let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&v.res), bits(&s.res), "res after {what} trial {trial}");
+                assert_eq!(bits(&v.stat), bits(&s.stat), "stat after {what}");
+                assert_eq!(v.masked, s.masked, "masked after {what}");
+                assert_eq!(bits(&v.cmp_new), bits(&s.cmp_new), "cmp_new after {what}");
+                assert_eq!(bits(&v.cmp_old), bits(&s.cmp_old), "cmp_old after {what}");
+                assert_eq!(v.cmp_seen, s.cmp_seen, "cmp_seen after {what}");
+                assert_eq!(v.cycle, s.cycle, "cycle after {what}");
+                assert_eq!(v.mac_ops, s.mac_ops, "mac_ops after {what}");
+                assert_eq!(v.matmul_macs, s.matmul_macs, "matmul_macs after {what}");
+            };
+
+            // Phase 1: stationary preload + bounds + skewed MacUp matmul.
+            for r in 0..n {
+                for c in 0..n {
+                    let x = rng.next_normal() as f32;
+                    v.set_stationary(r, c, x);
+                    s.set_stationary(r, c, x);
+                }
+            }
+            for col in 0..n {
+                let b = 1 + rng.next_below(n as u64) as u16;
+                v.cmp_set_bound(col, b);
+                s.cmp_set_bound(col, b);
+            }
+            let kmat: Vec<f32> = (0..n * n).map(|_| rng.next_normal() as f32).collect();
+            for cycle in 0..6 * n as i64 {
+                for kk in 0..n {
+                    let nn = cycle - (n - 1 - kk) as i64;
+                    if (0..n as i64).contains(&nn) {
+                        let x = kmat[nn as usize * n + kk];
+                        v.inject_left(kk, x, LeftTag::MacUp);
+                        s.inject_left(kk, x, LeftTag::MacUp);
+                    }
+                }
+                assert_eq!(v.step(), s.scalar_reference_step());
+            }
+            assert_same(&v, &s, "matmul");
+
+            // Phase 2: -new_m broadcast + a-value passdown + const wave.
+            for col in 0..n {
+                v.cmp_emit_sub(col);
+                s.cmp_emit_sub(col);
+            }
+            for row in 0..n {
+                v.inject_left(row, 0.7, LeftTag::MulConst);
+                s.inject_left(row, 0.7, LeftTag::MulConst);
+            }
+            for _ in 0..n + 2 {
+                assert_eq!(v.step(), s.scalar_reference_step());
+            }
+            for col in 0..n {
+                v.cmp_emit_a(col);
+                s.cmp_emit_a(col);
+            }
+            for _ in 0..n + 2 {
+                assert_eq!(v.step(), s.scalar_reference_step());
+            }
+            assert_same(&v, &s, "elementwise");
+
+            // Phase 3: PWL pairs, then skewed rowsum + PV waves.
+            let pwl = PwlExp2::new(8);
+            for j in 0..8u8 {
+                for row in 0..n {
+                    let sl = pwl.slopes[j as usize] as f32;
+                    let ic = pwl.intercepts[j as usize] as f32;
+                    v.inject_left(row, sl, LeftTag::Pwl { seg: j, intercept: ic });
+                    s.inject_left(row, sl, LeftTag::Pwl { seg: j, intercept: ic });
+                }
+                assert_eq!(v.step(), s.scalar_reference_step());
+            }
+            let vmat: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32).collect();
+            for cycle in 0..4 * n as i64 {
+                if (0..n as i64).contains(&cycle) {
+                    v.inject_left(cycle as usize, 1.0, LeftTag::RowSum);
+                    s.inject_left(cycle as usize, 1.0, LeftTag::RowSum);
+                }
+                assert_eq!(v.step(), s.scalar_reference_step());
+            }
+            for cycle in 0..4 * n as i64 {
+                if (0..n as i64).contains(&cycle) {
+                    let x = vmat[cycle as usize];
+                    v.inject_left(cycle as usize, x, LeftTag::MacDown);
+                    s.inject_left(cycle as usize, x, LeftTag::MacDown);
+                }
+                assert_eq!(v.step(), s.scalar_reference_step());
+            }
+            assert_same(&v, &s, "rowsum+pv");
+            assert!(v.quiescent() && s.quiescent());
+        }
+    }
+
+    /// `reset` restores the just-constructed state (the shard-batching
+    /// hazard fence): a reused array replays a program bitwise like a
+    /// fresh one.
+    #[test]
+    fn reset_restores_fresh_state() {
+        let n = 3;
+        let run = |a: &mut Array| {
+            for r in 0..n {
+                for c in 0..n {
+                    a.set_stationary(r, c, (r + 2 * c) as f32);
+                }
+            }
+            for cycle in 0..6 * n as i64 {
+                for kk in 0..n {
+                    let nn = cycle - (n - 1 - kk) as i64;
+                    if (0..n as i64).contains(&nn) {
+                        a.inject_left(kk, (nn + kk as i64) as f32, LeftTag::MacUp);
+                    }
+                }
+                a.step();
+            }
+            (a.res.clone(), a.cmp_new.clone(), a.cycle, a.mac_ops)
+        };
+        let mut fresh = Array::new(n, 8, true);
+        let want = run(&mut fresh);
+        let mut reused = Array::new(n, 8, true);
+        run(&mut reused);
+        reused.reset();
+        assert_eq!(reused.cycle, 0);
+        assert_eq!(reused.mac_ops, 0);
+        assert!(reused.quiescent());
+        assert_eq!(run(&mut reused), want, "post-reset run differs from fresh");
     }
 }

@@ -142,6 +142,39 @@ pub fn preload_standalone_cycles(n: usize) -> u64 {
     n as u64 + 1
 }
 
+/// Per-instruction event streams generated once per `run_program` and
+/// reused for every tile (the signal tables are pure functions of the
+/// [`InnerSchedule`], so the machine's dispatch loop hoists the
+/// O(N²)-event generate+sort out of the per-instruction hot path — one
+/// generation instead of one per scheduled tile).
+pub struct EventTemplates {
+    pub score_first: Events,
+    pub score_next: Events,
+    pub value: Events,
+    pub preload_overlapped: Events,
+    pub preload_standalone: Events,
+}
+
+impl EventTemplates {
+    pub fn new(s: &InnerSchedule) -> EventTemplates {
+        EventTemplates {
+            score_first: attn_score_events(s, true),
+            score_next: attn_score_events(s, false),
+            value: attn_value_events(s),
+            preload_overlapped: preload_events_overlapped(s),
+            preload_standalone: preload_events_standalone(s.n),
+        }
+    }
+
+    pub fn score(&self, first: bool) -> &Events {
+        if first {
+            &self.score_first
+        } else {
+            &self.score_next
+        }
+    }
+}
+
 /// Merge (combine) event streams with per-instruction issue offsets — the
 /// §4.3 "combiner unit".  Returns a single sorted absolute-cycle stream.
 pub fn combine(streams: Vec<(u64, Events)>) -> Vec<(u64, Signal)> {
@@ -204,6 +237,21 @@ mod tests {
             // after injection, so >= keeps a strict one-cycle gap).
             let first_col0 = ev.iter().find(|(_, s)| matches!(s, Signal::InjectPreload { col: 0, .. })).unwrap().0;
             assert!(first_col0 >= s.pv_at(0, 0, n - 1));
+        }
+    }
+
+    #[test]
+    fn templates_equal_direct_generation() {
+        for n in [4usize, 32] {
+            let s = sched(n);
+            let tpl = EventTemplates::new(&s);
+            assert_eq!(tpl.score_first, attn_score_events(&s, true));
+            assert_eq!(tpl.score_next, attn_score_events(&s, false));
+            assert_eq!(tpl.score(true), &tpl.score_first);
+            assert_eq!(tpl.score(false), &tpl.score_next);
+            assert_eq!(tpl.value, attn_value_events(&s));
+            assert_eq!(tpl.preload_overlapped, preload_events_overlapped(&s));
+            assert_eq!(tpl.preload_standalone, preload_events_standalone(n));
         }
     }
 

@@ -47,6 +47,11 @@ pub struct MachineConfig {
     pub spad_elems: usize,
     pub accum_elems: usize,
     pub dma: DmaConfig,
+    /// Step the array with the frozen pre-refactor per-lane path instead
+    /// of the vectorized one ([`Array::scalar_reference_step`]) — the
+    /// differential harness and the old-vs-new bench sweep set this; it
+    /// must never change results or cycle counts.
+    pub scalar_reference: bool,
 }
 
 impl MachineConfig {
@@ -62,6 +67,7 @@ impl MachineConfig {
             spad_elems: 1 << 18,
             accum_elems: 1 << 16,
             dma: DmaConfig::for_bandwidth(820.0, 1.5, 4),
+            scalar_reference: false,
         }
     }
 
@@ -90,6 +96,7 @@ impl MachineConfig {
             spad_elems: 6 * n * n,
             accum_elems: n * n + n,
             dma: DmaConfig::for_bandwidth(cfg.mem_bw_gbs, cfg.freq_ghz, 4),
+            scalar_reference: false,
         }
     }
 }
@@ -167,13 +174,33 @@ impl Machine {
         let scale = (LOG2E / (cfg.scale_dim as f64).sqrt()) as f32;
         let mut accum = Accumulator::new(cfg.n, cfg.segments, scale, cfg.accum_elems);
         accum.f16_mode = cfg.quantize;
+        let mut array = Array::new(cfg.n, cfg.segments, cfg.quantize);
+        array.scalar_reference = cfg.scalar_reference;
         Machine {
             mem: vec![0.0; cfg.mem_elems],
             spad: Sram::new(cfg.spad_elems),
-            array: Array::new(cfg.n, cfg.segments, cfg.quantize),
+            array,
             accum,
             cfg,
         }
+    }
+
+    /// Reset the device for reuse by another shard — the shard-batching
+    /// hazard fence (DESIGN.md §8).  Zeroes main memory (`write_padded`
+    /// relies on zero padding), the scratchpad data *and* its
+    /// DMA-readiness scoreboard (a stale ready cycle would poison the
+    /// next program's schedule), the accumulator, and every array
+    /// register and counter; `scale_dim` rebinds the softmax scale to
+    /// the next shard's head dim.  After this the next `run_program` is
+    /// bitwise and cycle-for-cycle the run a fresh machine would
+    /// produce (pinned by `sim_backend.rs` / `sim_differential.rs`).
+    pub fn reset_for_reuse(&mut self, scale_dim: usize) {
+        self.cfg.scale_dim = scale_dim;
+        self.mem.fill(0.0);
+        self.spad.reset();
+        self.array.reset();
+        let scale = (LOG2E / (scale_dim as f64).sqrt()) as f32;
+        self.accum.reset(scale);
     }
 
     pub fn write_mem(&mut self, addr: u32, data: &[f32]) {
@@ -189,6 +216,9 @@ impl Machine {
         let n = self.cfg.n;
         let sched = InnerSchedule::new(n, self.cfg.variant, self.cfg.segments);
         let ii = sched.inner_latency();
+        // Per-instruction signal tables, generated once and replayed per
+        // tile (hoists the O(N²) generate+sort out of the dispatch loop).
+        let tpl = controller::EventTemplates::new(&sched);
 
         // ---------------- Phase 1: schedule ----------------
         let mut events: Vec<(u64, Ev)> = Vec::new();
@@ -335,7 +365,7 @@ impl Machine {
                                 // drain window (offsets are relative to the
                                 // previous score's issue cycle).
                                 let base = last_score_t.unwrap();
-                                for (c, sig) in controller::preload_events_overlapped(&sched) {
+                                for &(c, sig) in &tpl.preload_overlapped {
                                     events.push((base + c,
                                         Ev::Sig { sig, k_tile: k, v_tile: k, q_tile: q }));
                                 }
@@ -346,7 +376,7 @@ impl Machine {
                                 let drained =
                                     last_score_t.map(|lt| lt + last_score_ii).unwrap_or(0);
                                 let start = q_ready.max(drained).max(compute_free.saturating_sub(0));
-                                for (c, sig) in controller::preload_events_standalone(n) {
+                                for &(c, sig) in &tpl.preload_standalone {
                                     events.push((start + c,
                                         Ev::Sig { sig, k_tile: k, v_tile: k, q_tile: q }));
                                 }
@@ -359,7 +389,7 @@ impl Machine {
                     ensure!(stationary_loaded, "attn_score before any load_stationary");
 
                     // Emit score events.
-                    for (c, sig) in controller::attn_score_events(&sched, first) {
+                    for &(c, sig) in tpl.score(first) {
                         if matches!(sig, Signal::AccumBegin) {
                             let (o_addr, o_stride) = value
                                 .map(|(_, o)| (o.addr, o.stride))
@@ -395,7 +425,7 @@ impl Machine {
                     if let Some((v, out)) = value {
                         ensure!(v.space == Space::Spad && out.space == Space::Accum,
                             "attn_value reads spad V, writes accum O");
-                        for (c, sig) in controller::attn_value_events(&sched) {
+                        for &(c, sig) in &tpl.value {
                             events.push((t + c, Ev::Sig {
                                 sig, k_tile: k, v_tile: v, q_tile: k,
                             }));
@@ -456,7 +486,12 @@ impl Machine {
         let scale = (LOG2E / (self.cfg.scale_dim as f64).sqrt()) as f32;
         let trace = std::env::var_os("FSA_TRACE").is_some();
         let mut ei = 0usize;
-        for cycle in 0..end_cycle {
+        let mut outs = Vec::new();
+        let mut cycle: u64 = 0;
+        // Span-based execution: drain this cycle's events, then tight-step
+        // the array to the next event boundary with no event polling (and
+        // no per-cycle Vec allocation) in between.
+        while cycle < end_cycle {
             while ei < events.len() && events[ei].0 == cycle {
                 let (_, ev) = events[ei];
                 if trace {
@@ -467,9 +502,19 @@ impl Machine {
                 ei += 1;
             }
             debug_assert!(ei >= events.len() || events[ei].0 > cycle);
-            let outs = self.array.step();
-            for out in outs {
-                self.accum.accept(out, cycle);
+            let until = events
+                .get(ei)
+                .map(|&(c, _)| c.min(end_cycle))
+                .unwrap_or(end_cycle);
+            loop {
+                self.array.step_into(&mut outs);
+                for &out in &outs {
+                    self.accum.accept(out, cycle);
+                }
+                cycle += 1;
+                if cycle >= until {
+                    break;
+                }
             }
         }
         ensure!(self.array.quiescent(), "array not quiescent at program end");

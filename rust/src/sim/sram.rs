@@ -28,6 +28,16 @@ impl Sram {
         self.data.len()
     }
 
+    /// Reset to the just-constructed state for machine reuse across
+    /// shards (the shard-batching hazard fence): zero the data *and* the
+    /// readiness scoreboard — a stale ready cycle from a previous
+    /// program would delay (and so change) the next program's schedule
+    /// relative to a fresh machine.
+    pub fn reset(&mut self) {
+        self.data.fill(0.0);
+        self.ready_at.fill(0);
+    }
+
     /// Record that `tile` becomes valid at `cycle` (DMA completion).
     pub fn mark_ready(&mut self, tile: &TileDesc, cycle: u64) {
         let (lo, hi) = (tile.addr as usize, tile.end_addr() as usize);

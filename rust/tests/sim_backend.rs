@@ -162,9 +162,9 @@ fn backend_enum_routes_sim_and_reports_measured_cycles() {
 }
 
 /// Satellite: sim determinism — the same program on the same memory
-/// image twice yields identical `RunStats` and an identical memory
-/// image (the machine is a pure function of its inputs; no hidden
-/// state leaks between runs).
+/// image three times yields identical `RunStats` and an identical
+/// memory image (the machine is a pure function of its inputs; no
+/// hidden state leaks between runs).
 #[test]
 fn sim_is_deterministic_across_identical_runs() {
     let p = ChunkParams::whole(N, 64, MaskKind::Causal);
@@ -185,17 +185,93 @@ fn sim_is_deterministic_across_identical_runs() {
         (stats, image)
     };
     let (s1, img1) = run();
-    let (s2, img2) = run();
-    assert_eq!(s1.cycles, s2.cycles);
-    assert_eq!(s1.matmul_macs, s2.matmul_macs);
-    assert_eq!(s1.total_pe_ops, s2.total_pe_ops);
-    assert_eq!(s1.dma_load_busy, s2.dma_load_busy);
-    assert_eq!(s1.dma_store_busy, s2.dma_store_busy);
-    assert_eq!(s1.compute_busy, s2.compute_busy);
-    assert_eq!(s1.instructions, s2.instructions);
-    let b1: Vec<u32> = img1.iter().map(|x| x.to_bits()).collect();
-    let b2: Vec<u32> = img2.iter().map(|x| x.to_bits()).collect();
-    assert_eq!(b1, b2, "memory images must be bitwise identical");
+    for round in 0..2 {
+        let (s2, img2) = run();
+        assert_eq!(s1.cycles, s2.cycles, "round {round}");
+        assert_eq!(s1.matmul_macs, s2.matmul_macs, "round {round}");
+        assert_eq!(s1.total_pe_ops, s2.total_pe_ops, "round {round}");
+        assert_eq!(s1.dma_load_busy, s2.dma_load_busy, "round {round}");
+        assert_eq!(s1.dma_store_busy, s2.dma_store_busy, "round {round}");
+        assert_eq!(s1.compute_busy, s2.compute_busy, "round {round}");
+        assert_eq!(s1.instructions, s2.instructions, "round {round}");
+        let b1: Vec<u32> = img1.iter().map(|x| x.to_bits()).collect();
+        let b2: Vec<u32> = img2.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(b1, b2, "memory images must be bitwise identical (round {round})");
+    }
+}
+
+/// Satellite: shard batching (DESIGN.md §8) — a backend that lets
+/// several shards share one machine between `reset_for_reuse` hazard
+/// fences produces bitwise-identical outputs, partial states and
+/// measured cycle counts to a backend allocating a fresh machine per
+/// shard, across a mixed stream of shapes, masks and execute paths —
+/// and stays deterministic across three batched repetitions.
+#[test]
+fn shard_batching_is_bitwise_and_cycle_equal_to_fresh_machines() {
+    #[derive(Debug, PartialEq)]
+    enum Out {
+        Head(Vec<u32>, u64),
+        Partial(Vec<u32>, Vec<u32>, Vec<u32>, u64),
+    }
+    let run = |shards: usize| -> Vec<Out> {
+        let mut be = sim();
+        be.set_batch_shards(shards);
+        let mut rng = SplitMix64::new(88);
+        let mut outs = Vec::new();
+        // Mixed shard stream: whole heads of different shapes + masks,
+        // a chunk with partial state, a decode row, a decode range —
+        // all between the same pair of hazard fences when batched.
+        for &(l, d, mask) in &[
+            (64usize, 32usize, MaskKind::Causal),
+            (40, 16, MaskKind::None),
+            (33, 8, MaskKind::PaddingKeys { valid: 20 }),
+            (96, 32, MaskKind::Causal),
+        ] {
+            let q = rng.normal_matrix(l, d);
+            let k = rng.normal_matrix(l, d);
+            let v = rng.normal_matrix(l, d);
+            let o = be.execute_head(l, d, &q, &k, &v, mask).unwrap();
+            outs.push(Out::Head(
+                o.iter().map(|x| x.to_bits()).collect(),
+                be.take_measured().unwrap(),
+            ));
+        }
+        let (l, d) = (64usize, 16usize);
+        let q = rng.normal_matrix(l, d);
+        let kc = rng.normal_matrix(32, d);
+        let vc = rng.normal_matrix(32, d);
+        let p = be
+            .execute_head_partial(l, d, &q, &kc, &vc, MaskKind::Causal, 16, l)
+            .unwrap();
+        outs.push(Out::Partial(
+            p.acc.iter().map(|x| x.to_bits()).collect(),
+            p.m.iter().map(|x| x.to_bits()).collect(),
+            p.l.iter().map(|x| x.to_bits()).collect(),
+            be.take_measured().unwrap(),
+        ));
+        let qr = rng.normal_matrix(1, d);
+        let k = rng.normal_matrix(50, d);
+        let v = rng.normal_matrix(50, d);
+        let o = be.execute_decode_row(50, d, &qr, &k, &v).unwrap();
+        outs.push(Out::Head(
+            o.iter().map(|x| x.to_bits()).collect(),
+            be.take_measured().unwrap(),
+        ));
+        let pr = be.execute_decode_row_partial(50, d, &qr, &k, &v).unwrap();
+        outs.push(Out::Partial(
+            pr.acc.iter().map(|x| x.to_bits()).collect(),
+            pr.m.iter().map(|x| x.to_bits()).collect(),
+            pr.l.iter().map(|x| x.to_bits()).collect(),
+            be.take_measured().unwrap(),
+        ));
+        outs
+    };
+    let fresh = run(1);
+    let batched = run(4);
+    assert_eq!(fresh, batched, "batched shards must match fresh machines");
+    // Determinism of the batched path itself (3 runs total).
+    assert_eq!(batched, run(4));
+    assert_eq!(batched, run(4));
 }
 
 /// Satellite: structural-hazard regression for the new decode-row

@@ -1,0 +1,281 @@
+//! Differential pin for the vectorized simulator (DESIGN.md §8's SoA
+//! waves): the struct-of-arrays array keeps a frozen per-lane port of
+//! the pre-refactor control flow (`MachineConfig::scalar_reference`),
+//! and this harness drives randomized workloads through both paths,
+//! asserting
+//!
+//! * outputs bitwise-equal to each other *and* to the reference twins
+//!   (`flash_pwl_masked` / `flash_pwl_partial` / `decode_pwl{,_partial}`),
+//! * measured cycle counts identical (the vectorization must not move a
+//!   single edge event),
+//! * every structural-hazard panic fires with the same message — and,
+//!   since the messages embed `cycle {}`, at the same cycle — in both
+//!   paths.
+//!
+//! The sweep is seeded (SplitMix64), so a failure names a reproducible
+//! (n, L, d, mask, mode) tuple in its assert message.
+
+use fsa::config::AccelConfig;
+use fsa::kernel::flash::{flash_chunk_program, ChunkLayout, ChunkParams};
+use fsa::mask::MaskKind;
+use fsa::numerics::reference::{
+    decode_pwl, decode_pwl_partial, flash_pwl_masked, flash_pwl_partial, Mat,
+};
+use fsa::numerics::SplitMix64;
+use fsa::runtime::SimBackend;
+use fsa::sim::array::{Array, DownMsg, LeftTag};
+use fsa::sim::{Machine, MachineConfig};
+
+const SEGMENTS: usize = 8;
+
+fn accel(n: usize) -> AccelConfig {
+    let mut cfg = AccelConfig::builtin("fsa").unwrap();
+    cfg.array_size = n;
+    cfg
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// ~200 randomized cases over array size x sequence length x head dim x
+/// mask x execution mode, biased toward the small arrays where a skew
+/// bug has the fewest cycles to hide in.  Every case runs on a
+/// vectorized backend and a scalar-reference backend and must agree
+/// bitwise (outputs) and exactly (measured cycles) — and the vectorized
+/// output must equal the analytic reference twin, so the pair can't
+/// drift together.
+#[test]
+fn randomized_differential_sweep_is_bitwise_and_cycle_exact() {
+    let mut rng = SplitMix64::new(0xD1FF);
+    let mut cases = 0usize;
+    for &(n, trials) in &[(8usize, 90usize), (16, 70), (32, 40)] {
+        let mut vec_be = SimBackend::new(&accel(n));
+        let mut sca_be = SimBackend::new(&accel(n));
+        sca_be.set_scalar_reference(true);
+        for trial in 0..trials {
+            let l = 1 + rng.next_below(3 * n as u64) as usize;
+            let d = [n / 4, n / 2, n][rng.next_below(3) as usize].max(1);
+            let mask = match rng.next_below(3) {
+                0 => MaskKind::None,
+                1 => MaskKind::Causal,
+                // valid >= 1 keeps every query row live; the fully-masked
+                // operator short-circuit has its own test in sim_backend.rs.
+                _ => MaskKind::PaddingKeys { valid: 1 + rng.next_below(l as u64) as usize },
+            };
+            let mode = rng.next_below(4);
+            let ctx = format!("n={n} L={l} d={d} {mask:?} mode={mode} trial={trial}");
+            match mode {
+                0 => {
+                    // Whole head.
+                    let q = rng.normal_matrix(l, d);
+                    let k = rng.normal_matrix(l, d);
+                    let v = rng.normal_matrix(l, d);
+                    let got = vec_be.execute_head(l, d, &q, &k, &v, mask).unwrap();
+                    let twin = sca_be.execute_head(l, d, &q, &k, &v, mask).unwrap();
+                    assert_eq!(bits(&got), bits(&twin), "vec vs scalar: {ctx}");
+                    let want = flash_pwl_masked(
+                        &Mat::new(l, d, q),
+                        &Mat::new(l, d, k),
+                        &Mat::new(l, d, v),
+                        n,
+                        n,
+                        SEGMENTS,
+                        mask,
+                    );
+                    assert_eq!(bits(&got), bits(&want.data), "vec vs reference: {ctx}");
+                }
+                1 => {
+                    // Sequence-parallel chunk at global key coordinates.
+                    let start = rng.next_below(l as u64) as usize;
+                    let len = 1 + rng.next_below((l - start) as u64) as usize;
+                    let q = rng.normal_matrix(l, d);
+                    let kc = rng.normal_matrix(len, d);
+                    let vc = rng.normal_matrix(len, d);
+                    let got = vec_be
+                        .execute_head_partial(l, d, &q, &kc, &vc, mask, start, l)
+                        .unwrap();
+                    let twin = sca_be
+                        .execute_head_partial(l, d, &q, &kc, &vc, mask, start, l)
+                        .unwrap();
+                    assert_eq!(got, twin, "vec vs scalar: {ctx} chunk [{start}, {})", start + len);
+                    let want = flash_pwl_partial(
+                        &Mat::new(l, d, q),
+                        &Mat::new(len, d, kc),
+                        &Mat::new(len, d, vc),
+                        n,
+                        n,
+                        SEGMENTS,
+                        mask,
+                        start,
+                        l,
+                    );
+                    assert_eq!(got, want, "vec vs reference: {ctx} chunk [{start}, {})", start + len);
+                }
+                2 => {
+                    // Decode row over an L-token prefix (mask-free path).
+                    let qr = rng.normal_matrix(1, d);
+                    let k = rng.normal_matrix(l, d);
+                    let v = rng.normal_matrix(l, d);
+                    let got = vec_be.execute_decode_row(l, d, &qr, &k, &v).unwrap();
+                    let twin = sca_be.execute_decode_row(l, d, &qr, &k, &v).unwrap();
+                    assert_eq!(bits(&got), bits(&twin), "vec vs scalar: {ctx}");
+                    let want = decode_pwl(&qr, &k, &v, d, n, SEGMENTS);
+                    assert_eq!(bits(&got), bits(&want), "vec vs reference: {ctx}");
+                }
+                _ => {
+                    // Split-KV decode range (partial state out).
+                    let qr = rng.normal_matrix(1, d);
+                    let k = rng.normal_matrix(l, d);
+                    let v = rng.normal_matrix(l, d);
+                    let got = vec_be.execute_decode_row_partial(l, d, &qr, &k, &v).unwrap();
+                    let twin = sca_be.execute_decode_row_partial(l, d, &qr, &k, &v).unwrap();
+                    assert_eq!(got, twin, "vec vs scalar: {ctx}");
+                    let want = decode_pwl_partial(&qr, &k, &v, d, n, SEGMENTS);
+                    assert_eq!(got, want, "vec vs reference: {ctx}");
+                }
+            }
+            // The vectorization must not move a single cycle.
+            let vc = vec_be.take_measured().expect("sim runs measure");
+            let sc = sca_be.take_measured().expect("sim runs measure");
+            assert_eq!(vc, sc, "measured cycles: {ctx}");
+            assert!(vc > 0, "live case must cost cycles: {ctx}");
+            cases += 1;
+        }
+    }
+    assert_eq!(cases, 200);
+}
+
+/// Full `RunStats` equality at machine level: every counter the stats
+/// report — not just cycles — is identical between the two step paths,
+/// and so is the final memory image, bit for bit.
+#[test]
+fn run_stats_are_identical_between_vectorized_and_scalar_paths() {
+    let n = 32;
+    for &(l, mask) in &[
+        (96usize, MaskKind::Causal),
+        (64, MaskKind::None),
+        (40, MaskKind::PaddingKeys { valid: 25 }),
+    ] {
+        let p = ChunkParams::whole(n, l, mask);
+        let layout = ChunkLayout::packed(&p);
+        let prog = flash_chunk_program(&p, &layout).unwrap();
+        let mut rng = SplitMix64::new(0xBEEF ^ l as u64);
+        let data = rng.normal_matrix(p.padded_queries(), n);
+        let run = |scalar: bool| {
+            let mut mc = MachineConfig::from_accel(&accel(n));
+            mc.scalar_reference = scalar;
+            mc.mem_elems = layout.mem_elems(&p).max(1 << 12);
+            let mut m = Machine::new(mc);
+            m.write_mem(layout.q_addr, &data);
+            m.write_mem(layout.k_addr, &data);
+            m.write_mem(layout.v_addr, &data);
+            let stats = m.run_program(&prog).unwrap();
+            let image = bits(m.read_mem(0, layout.mem_elems(&p)));
+            (stats, image)
+        };
+        let (sv, iv) = run(false);
+        let (ss, is) = run(true);
+        assert_eq!(sv.cycles, ss.cycles, "L={l} {mask:?}");
+        assert_eq!(sv.matmul_macs, ss.matmul_macs, "L={l} {mask:?}");
+        assert_eq!(sv.total_pe_ops, ss.total_pe_ops, "L={l} {mask:?}");
+        assert_eq!(sv.dma_load_busy, ss.dma_load_busy, "L={l} {mask:?}");
+        assert_eq!(sv.dma_store_busy, ss.dma_store_busy, "L={l} {mask:?}");
+        assert_eq!(sv.compute_busy, ss.compute_busy, "L={l} {mask:?}");
+        assert_eq!(sv.instructions, ss.instructions, "L={l} {mask:?}");
+        assert_eq!(iv, is, "memory image L={l} {mask:?}");
+    }
+}
+
+/// Run `f` expecting a panic; return the panic payload as a string with
+/// the default hook silenced (so expected panics don't spam the test
+/// log with backtraces).
+fn panic_message<F: FnOnce() + std::panic::UnwindSafe>(f: F) -> String {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let res = std::panic::catch_unwind(f);
+    std::panic::set_hook(prev);
+    let err = res.expect_err("scenario must panic");
+    if let Some(s) = err.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = err.downcast_ref::<&str>() {
+        (*s).into()
+    } else {
+        "<non-string panic payload>".into()
+    }
+}
+
+/// Structural-hazard regression: every hazard panic the array can raise
+/// fires with an identical message — including the embedded cycle
+/// number — in the vectorized and the scalar-reference paths.  A
+/// vectorization that reordered wave phases would move or reword one of
+/// these before it could corrupt data silently.
+#[test]
+fn hazard_panics_fire_identically_in_both_step_paths() {
+    type Setup = fn(&mut Array);
+    let scenarios: &[(&str, Setup)] = &[
+        ("orphan-psum", |a| a.inject_left(1, 1.0, LeftTag::MacUp)),
+        ("park-falloff", |a| {
+            a.inject_top(0, DownMsg::Park { val: 2.0, hops: 7, masked: false })
+        }),
+        ("preload-falloff", |a| a.inject_top(1, DownMsg::Preload { val: 2.0, hops: 9 })),
+        ("unconsumed-rowsum", |a| a.inject_top(0, DownMsg::RowSum { val: 1.0 })),
+        ("rowsum-meets-park", |a| {
+            a.inject_left(0, 1.0, LeftTag::RowSum);
+            a.inject_top(0, DownMsg::Park { val: 2.0, hops: 3, masked: false });
+        }),
+        ("pv-meets-park", |a| {
+            a.inject_left(0, 1.0, LeftTag::MacDown);
+            a.inject_top(0, DownMsg::Park { val: 2.0, hops: 3, masked: false });
+        }),
+        ("pv-without-psum", |a| a.inject_left(1, 1.0, LeftTag::MacDown)),
+        ("double-left-injection", |a| {
+            a.inject_left(2, 1.0, LeftTag::MulConst);
+            a.inject_left(2, 2.0, LeftTag::MulConst);
+        }),
+    ];
+    for &(name, setup) in scenarios {
+        let msg_of = |scalar: bool| {
+            panic_message(move || {
+                let mut a = Array::new(4, SEGMENTS, false);
+                a.scalar_reference = scalar;
+                setup(&mut a);
+                for _ in 0..32 {
+                    a.step();
+                }
+            })
+        };
+        let v = msg_of(false);
+        let s = msg_of(true);
+        assert_eq!(v, s, "hazard '{name}' diverged between step paths");
+        assert!(
+            v.contains("cycle"),
+            "hazard '{name}' message must pin the firing cycle: {v}"
+        );
+    }
+}
+
+/// The decode-row hazard case of `sim_backend.rs`, parameterized over
+/// both step paths: br = 1 program shapes (including prefixes straddling
+/// tile boundaries) must survive the port-hazard asserts whichever
+/// stepper runs them.
+#[test]
+fn decode_row_hazard_sweep_covers_both_step_paths() {
+    let n = 16;
+    for scalar in [false, true] {
+        let mut be = SimBackend::new(&accel(n));
+        if scalar {
+            be.set_scalar_reference(true);
+        }
+        let mut rng = SplitMix64::new(0xDEC0);
+        for prefix in [1usize, 15, 16, 17, 47] {
+            let qr = rng.normal_matrix(1, n);
+            let k = rng.normal_matrix(prefix, n);
+            let v = rng.normal_matrix(prefix, n);
+            // A panic here IS the failure; the finiteness check is a bonus.
+            let out = be.execute_decode_row(prefix, n, &qr, &k, &v).unwrap();
+            assert!(out.iter().all(|x| x.is_finite()), "scalar={scalar} prefix={prefix}");
+            assert!(be.take_measured().unwrap() > 0);
+        }
+    }
+}

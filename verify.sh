@@ -28,6 +28,11 @@ RUSTFLAGS="${RUSTFLAGS:-} -D warnings" cargo build --examples
 echo "== cargo test -q =="
 cargo test -q
 
+# The vectorized-vs-scalar differential pin, run by name so its failure
+# is visible even when the quiet full suite is skimmed.
+echo "== cargo test --test sim_differential =="
+cargo test -q --test sim_differential
+
 echo "== cargo doc --no-deps (warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
