@@ -8,18 +8,20 @@ verify:
 
 # Every bench target at minimal iterations (FSA_BENCH_SMOKE shrinks
 # sweeps/budgets), asserting exit 0.  Optional verify stage: VERIFY_BENCH=1.
-BENCHES = ablation causal cycles decode fig1 fig11 fig12 hotpath longcontext multihead simcycles table2 table3
+BENCHES = ablation causal cycles decode fig1 fig11 fig12 hotpath longcontext multihead serving simcycles table2 table3
 bench-smoke:
 	@for b in $(BENCHES); do \
 		echo "== cargo bench --bench $$b (smoke) =="; \
 		FSA_BENCH_SMOKE=1 cargo bench --bench $$b || exit 1; \
 	done
 
-# Refresh BENCH_simcycles.json (the sim-throughput perf record; see
-# EXPERIMENTS.md §Perf log).  Honors FSA_BENCH_SMOKE=1 for a quick pass
-# that still writes the JSON (flagged "smoke": true).
+# Refresh the perf records: BENCH_simcycles.json (sim throughput) and
+# BENCH_serving.json (serving-path SLO trajectory); see EXPERIMENTS.md
+# §Perf log.  Honors FSA_BENCH_SMOKE=1 for a quick pass that still
+# writes the JSON (flagged "smoke": true).
 bench-json:
 	cargo bench --bench simcycles
+	cargo bench --bench serving
 
 build:
 	cargo build --release

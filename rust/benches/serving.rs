@@ -1,0 +1,332 @@
+//! Bench: the serving-path perf trajectory (DESIGN.md §9) — a live
+//! coordinator pool under open-loop Poisson arrivals, across the four
+//! serving modes the repo cares about:
+//!
+//! * `stateless_mix` — mixed masks/shapes on the reference pool;
+//! * `decode` — sessions stepped in lockstep (prefill → decode → close),
+//!   so TTFT (prefill latency) and TPOT (decode latency) are populated;
+//! * `sim_attrib` — the same traffic shape on `backend=sim`, harvesting
+//!   the per-instruction-class cycle attribution and asserting the
+//!   exact-sum contract across every response;
+//! * `seqpar` — `seq_shards = 2` chunked serving with gather-time
+//!   merges.
+//!
+//! Every scenario embeds its pool's full [`MetricsSnapshot`] JSON
+//! (counters, latency p50/p95/p99, TTFT/TPOT, queue depth, per-backend
+//! dispatch split, KV gauges) into `BENCH_serving.json` — the same
+//! schema `fsa serve --metrics-json` writes — so the serving trajectory
+//! is diffable across PRs; see EXPERIMENTS.md §Perf log.  `make
+//! bench-json` runs this target (and `simcycles`); the emitted document
+//! is parsed back before it is written, so a malformed record fails the
+//! bench rather than the reader.
+
+use std::time::{Duration, Instant};
+
+use fsa::benchutil::{fmt_duration, smoke, Table};
+use fsa::config::{BackendKind, RunConfig};
+use fsa::coordinator::request::{AttentionRequest, AttentionResponse, OpKind};
+use fsa::coordinator::Coordinator;
+use fsa::mask::MaskKind;
+use fsa::numerics::SplitMix64;
+use fsa::sim::CycleBreakdown;
+use fsa::telemetry::json::{parse, Json};
+
+fn cfg(backend: BackendKind, devices: usize, seq_shards: usize) -> RunConfig {
+    RunConfig {
+        devices,
+        max_batch: 8,
+        batch_timeout_cycles: 50_000,
+        // Deeper than any scenario's total request count, so open-loop
+        // submission never trips ingress backpressure mid-bench.
+        queue_depth: 256,
+        backend,
+        num_heads: 4,
+        num_kv_heads: 2,
+        seq_shards,
+        sim_max_seq: 256,
+        array_size: 32,
+        ..RunConfig::default()
+    }
+}
+
+fn gqa_req(seed: u64, id: u64, seq: usize, d: usize, heads: usize, kv: usize) -> AttentionRequest {
+    let mut rng = SplitMix64::new(seed);
+    AttentionRequest::gqa(
+        id,
+        seq,
+        d,
+        heads,
+        kv,
+        rng.normal_matrix(heads * seq, d),
+        rng.normal_matrix(kv * seq, d),
+        rng.normal_matrix(kv * seq, d),
+    )
+}
+
+/// One exponential inter-arrival gap (`-ln(1-u) · mean`, u ∈ [0, 1)),
+/// i.e. Poisson arrivals at rate `1/mean`.
+fn poisson_gap(rng: &mut SplitMix64, mean: Duration) -> Duration {
+    Duration::from_secs_f64(-(1.0 - rng.next_f64()).ln() * mean.as_secs_f64())
+}
+
+/// Submit every request at its Poisson arrival time (open loop — the
+/// submitter never waits for responses), then drain all of them.
+fn run_open_loop(
+    coord: &Coordinator,
+    reqs: Vec<AttentionRequest>,
+    mean_gap: Duration,
+    seed: u64,
+) -> (Duration, Vec<AttentionResponse>) {
+    let mut rng = SplitMix64::new(seed);
+    let start = Instant::now();
+    let mut due = Duration::ZERO;
+    let mut rxs = Vec::with_capacity(reqs.len());
+    for req in reqs {
+        due += poisson_gap(&mut rng, mean_gap);
+        if let Some(wait) = due.checked_sub(start.elapsed()) {
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+        }
+        rxs.push(coord.submit(req).expect("ingress accepts (queue_depth sized for the bench)"));
+    }
+    let resps: Vec<AttentionResponse> =
+        rxs.into_iter().map(|rx| rx.recv().expect("response arrives")).collect();
+    (start.elapsed(), resps)
+}
+
+/// Freeze a pool's metrics into the scenario record: request/throughput
+/// figures, simulated-device occupancy, and the full snapshot JSON.
+fn scenario_json(
+    name: &str,
+    coord: &Coordinator,
+    rc: &RunConfig,
+    wall: Duration,
+    requests: usize,
+    ok: usize,
+) -> Json {
+    let snap = coord.metrics.snapshot();
+    // Simulated device time (cycles at the configured clock) over host
+    // wall time × devices: how busy the simulated fleet was, in
+    // simulated seconds per host second — a trajectory statistic, not a
+    // physical utilization.
+    let device_s = snap.counter("device_cycles").unwrap_or(0) as f64 / (rc.freq_ghz * 1e9);
+    let wall_s = wall.as_secs_f64();
+    let mut j = Json::obj();
+    j.set("name", Json::str(name))
+        .set("requests", Json::u64(requests as u64))
+        .set("ok", Json::u64(ok as u64))
+        .set("wall_s", Json::Num(wall_s))
+        .set("throughput_rps", Json::Num(requests as f64 / wall_s))
+        .set("devices", Json::u64(rc.devices as u64))
+        .set("sim_device_time_s", Json::Num(device_s))
+        .set("sim_occupancy", Json::Num(device_s / (wall_s * rc.devices as f64)))
+        .set("metrics", snap.to_json());
+    j
+}
+
+fn table_row(t: &mut Table, name: &str, coord: &Coordinator, requests: usize, wall: Duration) {
+    let snap = coord.metrics.snapshot();
+    let ns = |v: u64| fmt_duration(Duration::from_nanos(v));
+    t.row(&[
+        name.to_string(),
+        requests.to_string(),
+        fmt_duration(wall),
+        format!("{:.0}", requests as f64 / wall.as_secs_f64()),
+        ns(snap.latency_ns.p50),
+        ns(snap.latency_ns.p95),
+        ns(snap.latency_ns.p99),
+        ns(snap.kind(OpKind::Prefill).p50),
+        ns(snap.kind(OpKind::Decode).p50),
+    ]);
+}
+
+/// Mixed stateless traffic (unmasked / causal / padded keys over a
+/// sweep of shapes) on the reference pool.
+fn stateless_mix(t: &mut Table) -> Json {
+    let rc = cfg(BackendKind::Reference, 2, 1);
+    let coord = Coordinator::start(rc.clone()).unwrap();
+    let n = if smoke() { 12 } else { 96 };
+    let seqs = [32usize, 48, 64, 96];
+    let reqs: Vec<AttentionRequest> = (0..n)
+        .map(|i| {
+            let seq = seqs[i % seqs.len()];
+            let mask = match i % 3 {
+                0 => MaskKind::None,
+                1 => MaskKind::Causal,
+                _ => MaskKind::PaddingKeys { valid: seq * 5 / 8 },
+            };
+            gqa_req(9000 + i as u64, i as u64, seq, 32, 4, 2).with_mask(mask)
+        })
+        .collect();
+    let gap = Duration::from_micros(if smoke() { 50 } else { 150 });
+    let (wall, resps) = run_open_loop(&coord, reqs, gap, 11);
+    let ok = resps.iter().filter(|r| r.output.is_ok()).count();
+    assert_eq!(ok, n, "stateless_mix must serve every request");
+    let j = scenario_json("stateless_mix", &coord, &rc, wall, n, ok);
+    table_row(t, "stateless_mix", &coord, n, wall);
+    coord.shutdown();
+    j
+}
+
+/// Decode-phase serving: sessions prefilled, then stepped in lockstep
+/// (closed loop — decode steps are causally ordered per session), then
+/// closed.  Populates the TTFT and TPOT histograms.
+fn decode_scenario(t: &mut Table) -> Json {
+    let rc = cfg(BackendKind::Reference, 2, 1);
+    let coord = Coordinator::start(rc.clone()).unwrap();
+    let (sessions, steps) = if smoke() { (2usize, 4usize) } else { (6, 24) };
+    let (seq, d, heads, kv) = (64usize, 32usize, 2usize, 1usize);
+    let mut rng = SplitMix64::new(21);
+    let start = Instant::now();
+    for s in 0..sessions as u64 {
+        let prefill = AttentionRequest::prefill(
+            s,
+            s,
+            seq,
+            d,
+            heads,
+            kv,
+            rng.normal_matrix(heads * seq, d),
+            rng.normal_matrix(kv * seq, d),
+            rng.normal_matrix(kv * seq, d),
+        )
+        .with_mask(MaskKind::Causal);
+        coord.submit_wait(prefill).unwrap().output.expect("prefill succeeds");
+    }
+    let mut id = 1000u64;
+    for step in 0..steps as u64 {
+        for s in 0..sessions as u64 {
+            id += 1;
+            let dec = AttentionRequest::decode(
+                id,
+                s,
+                step,
+                d,
+                heads,
+                kv,
+                rng.normal_matrix(heads, d),
+                rng.normal_matrix(kv, d),
+                rng.normal_matrix(kv, d),
+            );
+            coord.submit_wait(dec).unwrap().output.expect("decode step succeeds");
+        }
+    }
+    for s in 0..sessions as u64 {
+        id += 1;
+        coord.submit_wait(AttentionRequest::close(id, s)).unwrap();
+    }
+    let wall = start.elapsed();
+    let requests = sessions * (steps + 2);
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.kind(OpKind::Prefill).count, sessions as u64, "one TTFT sample per session");
+    assert_eq!(
+        snap.kind(OpKind::Decode).count,
+        (sessions * steps) as u64,
+        "one TPOT sample per decode step"
+    );
+    let j = scenario_json("decode", &coord, &rc, wall, requests, requests);
+    table_row(t, "decode", &coord, requests, wall);
+    coord.shutdown();
+    j
+}
+
+/// The attribution scenario: `backend=sim` (32-wide array) serving, with
+/// every response's per-instruction-class cycle breakdown harvested and
+/// the exact-sum contract asserted across the whole run.
+fn sim_attrib(t: &mut Table) -> Json {
+    let rc = cfg(BackendKind::Sim, 2, 1);
+    let coord = Coordinator::start(rc.clone()).unwrap();
+    let n = if smoke() { 4 } else { 12 };
+    let seqs = [48usize, 64, 96];
+    let reqs: Vec<AttentionRequest> = (0..n)
+        .map(|i| {
+            let mask = if i % 2 == 0 { MaskKind::None } else { MaskKind::Causal };
+            gqa_req(5000 + i as u64, i as u64, seqs[i % seqs.len()], 16, 2, 1).with_mask(mask)
+        })
+        .collect();
+    let (wall, resps) = run_open_loop(&coord, reqs, Duration::from_micros(200), 13);
+    let mut agg = CycleBreakdown::default();
+    let mut cycles = 0u64;
+    for r in &resps {
+        assert!(r.output.is_ok(), "sim_attrib must serve every request");
+        assert_eq!(r.measured_shards, r.shards, "sim prices from measured cycles");
+        let bd = r.cycle_breakdown.expect("sim responses carry attribution");
+        assert_eq!(bd.total(), r.device_cycles, "attribution must sum exactly ({bd:?})");
+        agg.add(&bd);
+        cycles += r.device_cycles;
+    }
+    assert_eq!(agg.total(), cycles, "aggregated attribution must sum exactly");
+    let mut attrib = Json::obj();
+    attrib
+        .set("score", Json::u64(agg.score))
+        .set("exp", Json::u64(agg.exp))
+        .set("rowsum", Json::u64(agg.rowsum))
+        .set("pv", Json::u64(agg.pv))
+        .set("mask_wave", Json::u64(agg.mask_wave))
+        .set("dma", Json::u64(agg.dma))
+        .set("stall", Json::u64(agg.stall))
+        .set("recompute", Json::u64(agg.recompute))
+        .set("total", Json::u64(agg.total()));
+    let mut j = scenario_json("sim_attrib", &coord, &rc, wall, n, n);
+    j.set("cycle_attribution", attrib);
+    table_row(t, "sim_attrib", &coord, n, wall);
+    coord.shutdown();
+    j
+}
+
+/// Sequence-parallel serving (`seq_shards = 2`): chunked shards with
+/// exact partial-softmax merges at gather (DESIGN.md §7).
+fn seqpar(t: &mut Table) -> Json {
+    let rc = cfg(BackendKind::Reference, 3, 2);
+    let coord = Coordinator::start(rc.clone()).unwrap();
+    let n = if smoke() { 4 } else { 24 };
+    let reqs: Vec<AttentionRequest> = (0..n)
+        .map(|i| {
+            let mask = if i % 2 == 0 { MaskKind::None } else { MaskKind::Causal };
+            gqa_req(7000 + i as u64, i as u64, 64, 32, 4, 2).with_mask(mask)
+        })
+        .collect();
+    let gap = Duration::from_micros(if smoke() { 50 } else { 150 });
+    let (wall, resps) = run_open_loop(&coord, reqs, gap, 17);
+    for r in &resps {
+        assert!(r.output.is_ok(), "seqpar must serve every request");
+        assert_eq!(r.seq_chunks, 2, "requests must be sequence-sharded");
+    }
+    let snap = coord.metrics.snapshot();
+    assert!(snap.counter("merge_steps").unwrap_or(0) > 0, "gather must merge partials");
+    let j = scenario_json("seqpar", &coord, &rc, wall, n, n);
+    table_row(t, "seqpar", &coord, n, wall);
+    coord.shutdown();
+    j
+}
+
+fn main() {
+    let mut t = Table::new(&[
+        "scenario", "reqs", "wall", "rps", "p50", "p95", "p99", "TTFT p50", "TPOT p50",
+    ]);
+    let scenarios = vec![
+        stateless_mix(&mut t),
+        decode_scenario(&mut t),
+        sim_attrib(&mut t),
+        seqpar(&mut t),
+    ];
+    println!(
+        "serving — coordinator pools under Poisson/lockstep load \
+         (latencies host-side, smoke = {})\n{}",
+        smoke(),
+        t.to_string()
+    );
+
+    let mut root = Json::obj();
+    root.set("bench", Json::str("serving"))
+        .set("smoke", Json::Bool(smoke()))
+        .set("scenarios", Json::Arr(scenarios));
+    let text = root.pretty();
+    // The record must be readable by the CI gate (python3 json.load)
+    // and our own parser; fail here, not in the reader.
+    parse(&text).expect("emitted BENCH_serving.json parses back");
+    let path = "BENCH_serving.json";
+    std::fs::write(path, &text).expect("write bench json");
+    println!("[bench] wrote {path}");
+}

@@ -11,6 +11,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, ensure, Context};
 
+use crate::coordinator::trace::TraceLevel;
 use crate::mask::MaskKind;
 
 /// Parsed INI document: section -> key -> value (last write wins).
@@ -402,6 +403,12 @@ pub struct RunConfig {
     /// the cycle-accurate backend runs in milliseconds.  Must be a
     /// power of two (`AccelConfig::validate`'s rule).
     pub array_size: usize,
+    /// Request-path tracing level (DESIGN.md §9): `off` (the default;
+    /// the record call is a single branch), `summary` (per-kind event
+    /// counts), or `full` (counts plus a ring of the last 4096 events).
+    /// Tracing never changes served bits — asserted end to end by
+    /// `rust/tests/coordinator_trace.rs`.
+    pub trace: TraceLevel,
 }
 
 impl Default for RunConfig {
@@ -424,6 +431,7 @@ impl Default for RunConfig {
             sim_max_seq: 8192,
             sim_batch_shards: 8,
             array_size: 128,
+            trace: TraceLevel::Off,
         }
     }
 }
@@ -529,6 +537,9 @@ impl RunConfig {
         }
         if let Some(v) = ini.get_parsed::<usize>(sec, "array_size")? {
             cfg.array_size = v;
+        }
+        if let Some(v) = ini.get_parsed::<TraceLevel>(sec, "trace")? {
+            cfg.trace = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -653,6 +664,17 @@ mod tests {
         );
         assert!(RunConfig::from_ini(&Ini::parse("[run]\narray_size = 48\n").unwrap()).is_err());
         assert!(RunConfig::from_ini(&Ini::parse("[run]\narray_size = 1\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_config_trace_knob() {
+        let run = RunConfig::from_ini(&Ini::parse("[run]\ntrace = full\n").unwrap()).unwrap();
+        assert_eq!(run.trace, TraceLevel::Full);
+        let run = RunConfig::from_ini(&Ini::parse("[run]\ntrace = summary\n").unwrap()).unwrap();
+        assert_eq!(run.trace, TraceLevel::Summary);
+        // Default: off (zero overhead on the request path).
+        assert_eq!(RunConfig::default().trace, TraceLevel::Off);
+        assert!(RunConfig::from_ini(&Ini::parse("[run]\ntrace = verbose\n").unwrap()).is_err());
     }
 
     #[test]

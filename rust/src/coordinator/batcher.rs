@@ -26,10 +26,11 @@ use std::time::Duration;
 use crate::mask::MaskKind;
 
 use super::metrics::Metrics;
-use super::request::{AttentionResponse, Envelope};
+use super::request::{AttentionResponse, Envelope, OpKind};
 use super::router::Router;
 use super::session::{SessionOp, SessionTable};
 use super::shard::{explode, ShardEnvelope};
+use super::trace::{EventKind, Tracer, NO_DEVICE, NO_HEAD, NO_SESSION};
 
 /// Batch compatibility key: shards sharing it may run in one device
 /// batch (same kernel shape) — sequence length, head dim, and mask
@@ -96,6 +97,8 @@ pub struct Batcher {
     seq_shards: usize,
     /// Resolved backend capabilities (see [`PoolCapabilities`]).
     caps: PoolCapabilities,
+    /// Request-path event sink (DESIGN.md §9); disabled by default.
+    tracer: Arc<Tracer>,
 }
 
 impl Batcher {
@@ -112,7 +115,15 @@ impl Batcher {
             timeout: Duration::from_nanos((timeout_cycles as f64 / freq_ghz) as u64),
             seq_shards: seq_shards.max(1),
             caps,
+            tracer: Tracer::off(),
         }
+    }
+
+    /// Attach a request-path tracer (the coordinator threads its own;
+    /// directly constructed batchers keep the disabled default).
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Batcher {
+        self.tracer = tracer;
+        self
     }
 
     /// Main loop: drain the ingress channel, resolve session lifecycle
@@ -129,13 +140,40 @@ impl Batcher {
     ) {
         let mut groups: Vec<(GroupKey, Vec<ShardEnvelope>)> = Vec::new();
         let admit = |env: Envelope, groups: &mut Vec<(GroupKey, Vec<ShardEnvelope>)>| {
+            // Queue depth at admit: requests in flight right now
+            // (submitted minus completed; saturating because the two
+            // relaxed counters race by design).
+            let o = std::sync::atomic::Ordering::Relaxed;
+            metrics.record_queue_depth(
+                (metrics.submitted.load(o) as u64)
+                    .saturating_sub(metrics.completed.load(o) as u64),
+            );
             let Some(env) =
                 admit_session_op(env, &sessions, &metrics, self.caps, self.seq_shards)
             else {
                 return; // answered in place (close / lifecycle error)
             };
+            let (id, session) = (env.req.id, op_session(&env.req.op));
+            self.tracer.record(
+                EventKind::Admit,
+                id,
+                session,
+                NO_HEAD,
+                NO_HEAD,
+                NO_DEVICE,
+                env.req.seq_len as u64,
+            );
             let key = (env.req.seq_len, env.req.d, std::mem::discriminant(&env.req.mask));
             let shards = explode(env, self.seq_shards);
+            self.tracer.record(
+                EventKind::Shard,
+                id,
+                session,
+                NO_HEAD,
+                NO_HEAD,
+                NO_DEVICE,
+                shards.len() as u64,
+            );
             match groups.iter_mut().find(|(k, _)| *k == key) {
                 Some((_, g)) => g.extend(shards),
                 None => groups.push((key, shards)),
@@ -351,12 +389,24 @@ fn admit_session_op(
     }
 }
 
+/// Session id carried on an op, or [`NO_SESSION`] for stateless
+/// requests (trace-event coordinate).
+fn op_session(op: &SessionOp) -> u64 {
+    match op {
+        SessionOp::Stateless => NO_SESSION,
+        SessionOp::Prefill { session }
+        | SessionOp::Decode { session, .. }
+        | SessionOp::Close { session } => *session,
+    }
+}
+
 /// Answer an envelope without touching the device pool (lifecycle
 /// replies and validation errors).  A vanished client is not an error.
 fn reply_inline(env: Envelope, output: Result<Vec<f32>, String>, metrics: &Metrics) {
     let ok = output.is_ok();
     let resp = AttentionResponse {
         id: env.req.id,
+        kind: OpKind::of(&env.req.op),
         output,
         num_heads: env.req.num_heads,
         num_kv_heads: env.req.num_kv_heads,
@@ -374,6 +424,7 @@ fn reply_inline(env: Envelope, output: Result<Vec<f32>, String>, metrics: &Metri
         kv_hits: 0,
         kv_misses: 0,
         measured_shards: 0,
+        cycle_breakdown: None,
     };
     metrics.record(&resp, ok);
     let _ = env.reply.send(resp);

@@ -34,6 +34,8 @@ use super::metrics::Metrics;
 use super::router::{Batch, WorkerHandle};
 use super::session::SessionTable;
 use super::shard::{CacheOutcome, ShardCtx, ShardEnvelope, ShardOut, ShardResult};
+use super::trace::{EventKind, Tracer, NO_HEAD, NO_SESSION};
+use crate::sim::CycleBreakdown;
 
 pub struct DeviceWorker {
     handle: WorkerHandle,
@@ -49,6 +51,7 @@ impl DeviceWorker {
         cfg: &RunConfig,
         sessions: Arc<SessionTable>,
         metrics: Arc<Metrics>,
+        tracer: Arc<Tracer>,
     ) -> crate::Result<DeviceWorker> {
         let (tx, rx) = mpsc::channel::<Batch>();
         let load = Arc::new(std::sync::atomic::AtomicUsize::new(0));
@@ -56,7 +59,7 @@ impl DeviceWorker {
         let cfg = cfg.clone();
         let thread = std::thread::Builder::new()
             .name(format!("fsa-device-{id}"))
-            .spawn(move || worker_loop(id, cfg, rx, load, metrics, sessions))?;
+            .spawn(move || worker_loop(id, cfg, rx, load, metrics, sessions, tracer))?;
         Ok(DeviceWorker { handle, thread: Some(thread) })
     }
 
@@ -81,6 +84,7 @@ fn worker_loop(
     load: Arc<std::sync::atomic::AtomicUsize>,
     metrics: Arc<Metrics>,
     sessions: Arc<SessionTable>,
+    tracer: Arc<Tracer>,
 ) {
     let mut cfg = AccelConfig::builtin("fsa").expect("builtin fsa config");
     // Device timing runs at the configured clock (also used by the
@@ -115,8 +119,9 @@ fn worker_loop(
     while let Ok(batch) = rx.recv() {
         let n = batch.len();
         for env in batch {
-            let (cycles, cache_outcome, output, measured) = execute_shard(
+            let (cycles, cache_outcome, output, measured, breakdown) = execute_shard(
                 id, &cfg, backend.as_mut(), &mut cache, &sessions, &metrics, &env, seq_shards,
+                &tracer,
             );
             metrics.record_shard(cycles);
             if let Some(name) = backend_name {
@@ -125,12 +130,17 @@ fn worker_loop(
             if env.shard.is_partial() {
                 metrics.seq_chunk_shards.fetch_add(1, Ordering::Relaxed);
             }
+            let (req_id, session) = (env.shard.req.id, ctx_session(&env.ctx));
+            let (head, chunk) = (env.shard.head as u32, env.shard.chunk as u32);
+            tracer.record(EventKind::Execute, req_id, session, head, chunk, id as u32, cycles);
             match cache_outcome {
                 CacheOutcome::Hit => {
                     metrics.kv_hits.fetch_add(1, Ordering::Relaxed);
+                    tracer.record(EventKind::KvHit, req_id, session, head, chunk, id as u32, 0);
                 }
                 CacheOutcome::Miss => {
                     metrics.kv_misses.fetch_add(1, Ordering::Relaxed);
+                    tracer.record(EventKind::KvMiss, req_id, session, head, chunk, id as u32, 0);
                 }
                 CacheOutcome::NotApplicable => {}
             }
@@ -143,21 +153,46 @@ fn worker_loop(
                     measured,
                     output,
                     cache: cache_outcome,
+                    breakdown,
                 },
                 &cfg,
             );
             if let Some(resp) = resp {
+                tracer.record(
+                    EventKind::Gather, req_id, session, NO_HEAD, NO_HEAD, id as u32,
+                    resp.device_cycles,
+                );
+                if resp.merge_steps > 0 {
+                    tracer.record(
+                        EventKind::Merge, req_id, session, NO_HEAD, NO_HEAD, id as u32,
+                        resp.merge_steps as u64,
+                    );
+                }
                 metrics.record(&resp, resp.output.is_ok());
                 env.gather.send(resp);
             }
         }
+        // KV occupancy gauge: pages used/total after each batch
+        // (DESIGN.md §9's cache-pressure signal).
+        metrics.set_kv_gauge(id, cache.used_pages(), cache.capacity_pages());
         load.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+/// Session id of a shard's context for trace events ([`NO_SESSION`]
+/// for stateless work).
+fn ctx_session(ctx: &ShardCtx) -> u64 {
+    match ctx {
+        ShardCtx::Stateless => NO_SESSION,
+        ShardCtx::Prefill { session, .. } | ShardCtx::Decode { session, .. } => *session,
     }
 }
 
 /// Execute one shard on this device: numerics + device-cycle pricing +
 /// KV-cache bookkeeping.  Returns `(cycles, cache outcome, output,
-/// measured)`.
+/// measured, breakdown)` — the breakdown is `Some` only when the
+/// backend measured the cycles on the machine (its `total()` equals
+/// `cycles`, including the decode-miss recompute charge).
 ///
 /// Pricing (DESIGN.md §8): backends that *measure* device time (the
 /// cycle-accurate sim) report it via [`Backend::take_measured`], and
@@ -184,7 +219,8 @@ fn execute_shard(
     metrics: &Metrics,
     env: &ShardEnvelope,
     seq_shards: usize,
-) -> (u64, CacheOutcome, Result<ShardOut, String>, bool) {
+    tracer: &Tracer,
+) -> (u64, CacheOutcome, Result<ShardOut, String>, bool, Option<CycleBreakdown>) {
     let shard = &env.shard;
     let req = &shard.req;
     let (start, len) = shard.kv_range;
@@ -228,6 +264,7 @@ fn execute_shard(
             let (k_chunk, v_chunk) =
                 (&k[start * req.d..(start + len) * req.d], &v[start * req.d..(start + len) * req.d]);
             let mut measured = None;
+            let mut breakdown = None;
             let output = match backend {
                 None => Err("device backend unavailable".to_string()),
                 Some(be) => {
@@ -250,6 +287,7 @@ fn execute_shard(
                         .map(ShardOut::Full)
                     };
                     measured = be.take_measured();
+                    breakdown = be.take_measured_breakdown();
                     out
                 }
             };
@@ -264,7 +302,7 @@ fn execute_shard(
                     if let Admit::Cached { evicted } =
                         cache.insert(session, stream, epoch, req.d, k_chunk, v_chunk, &live)
                     {
-                        report_evictions(id, sessions, metrics, seq_shards, &evicted);
+                        report_evictions(id, sessions, metrics, seq_shards, tracer, &evicted);
                     }
                 }
             }
@@ -273,6 +311,7 @@ fn execute_shard(
                 CacheOutcome::NotApplicable,
                 output,
                 measured.is_some(),
+                breakdown,
             )
         }
         ShardCtx::Decode { session, prefix_len, epoch } => {
@@ -296,7 +335,7 @@ fn execute_shard(
             } else if growing && len >= 1 && cached == Some((len - 1, epoch)) {
                 match cache.append(session, stream, k_row, v_row, &live) {
                     Admit::Cached { evicted } => {
-                        report_evictions(id, sessions, metrics, seq_shards, &evicted);
+                        report_evictions(id, sessions, metrics, seq_shards, tracer, &evicted);
                         outcome = CacheOutcome::Hit;
                         data = cache.gather(session, stream);
                     }
@@ -337,13 +376,14 @@ fn execute_shard(
                                     start + len
                                 )),
                                 false,
+                                None,
                             );
                         }
                         Some((k, v)) => {
                             if let Admit::Cached { evicted } =
                                 cache.insert(session, stream, epoch, req.d, &k, &v, &live)
                             {
-                                report_evictions(id, sessions, metrics, seq_shards, &evicted);
+                                report_evictions(id, sessions, metrics, seq_shards, tracer, &evicted);
                             }
                             (k, v)
                         }
@@ -359,6 +399,7 @@ fn execute_shard(
                 cfg.pwl_segments,
             );
             let mut measured = None;
+            let mut breakdown = None;
             let output = match backend {
                 None => Err("device backend unavailable".to_string()),
                 Some(be) => {
@@ -382,16 +423,22 @@ fn execute_shard(
                         .map(ShardOut::Full)
                     };
                     measured = be.take_measured();
+                    breakdown = be.take_measured_breakdown();
                     out
                 }
             };
             // Measured cycles cover the attention pass; the miss-path
             // recompute (the upstream model's forward pass over the
             // prefix) is not executed by any backend and stays modeled.
+            // The attribution charges it to its own class so the
+            // breakdown keeps summing exactly to `cycles`.
             let cycles = measured
                 .map(|m| m + perf.recompute_cycles)
                 .unwrap_or(perf.total_cycles);
-            (cycles, outcome, output, measured.is_some())
+            if let Some(bd) = &mut breakdown {
+                bd.recompute += perf.recompute_cycles;
+            }
+            (cycles, outcome, output, measured.is_some(), breakdown)
         }
     }
 }
@@ -405,10 +452,20 @@ fn report_evictions(
     sessions: &SessionTable,
     metrics: &Metrics,
     seq_shards: usize,
+    tracer: &Tracer,
     evicted: &[(u64, usize)],
 ) {
     for &(sid, stream) in evicted {
         sessions.clear_placement(sid, stream / seq_shards, stream % seq_shards, id);
         metrics.kv_evictions.fetch_add(1, Ordering::Relaxed);
+        tracer.record(
+            EventKind::KvEvict,
+            0,
+            sid,
+            (stream / seq_shards) as u32,
+            (stream % seq_shards) as u32,
+            id as u32,
+            sid,
+        );
     }
 }

@@ -1,4 +1,5 @@
-//! Serving metrics: counters + latency reservoir, lock-light.
+//! Serving metrics: counters, per-op-kind SLO histograms, a bounded
+//! latency reservoir, and a machine-readable snapshot (DESIGN.md §9).
 //!
 //! Three granularities are tracked, matching the sharded request path:
 //! whole requests (`submitted`/`completed`/`failed`, latency
@@ -10,12 +11,83 @@
 //! `head_shards`, 32 times in `seq_chunk_shards`, and 24 times in
 //! `merge_steps`.  (Before sequence sharding, `head_shards` silently
 //! conflated every future shard kind.)
+//!
+//! SLO layer: every completion also lands its latency in the
+//! [`OpKind`]-indexed log-scale [`Histogram`] — prefill latency *is*
+//! time-to-first-token (TTFT), decode latency *is* time-per-output-token
+//! (TPOT) — the batcher records queue depth at every admit, and device
+//! workers gauge their KV-cache page occupancy.  [`Metrics::snapshot`]
+//! freezes all of it into a [`MetricsSnapshot`] whose
+//! [`MetricsSnapshot::to_json`] is the `fsa serve --metrics-json` /
+//! `BENCH_serving.json` schema.
+//!
+//! The latency reservoir is bounded uniform sampling (Vitter's
+//! Algorithm R): past [`DEFAULT_LATENCY_CAPACITY`] samples, each new
+//! offer displaces a random retained one with probability `cap/seen`,
+//! keeping the retained set a uniform sample of *everything* offered.
+//! (It previously just stopped pushing at capacity — long runs reported
+//! percentiles of only their first 65536 requests, silently.)  Offers
+//! past capacity are counted in `latency_drops`.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use super::request::AttentionResponse;
+use crate::numerics::SplitMix64;
+use crate::telemetry::{json::Json, Histogram};
+
+use super::request::{AttentionResponse, OpKind};
+
+/// Default bound on retained latency samples (the reservoir keeps a
+/// uniform sample past this; [`Metrics::with_latency_capacity`] shrinks
+/// it for tests).
+pub const DEFAULT_LATENCY_CAPACITY: usize = 65536;
+
+/// Bounded uniform reservoir (Vitter's Algorithm R) over `u64` samples.
+#[derive(Debug)]
+struct Reservoir {
+    cap: usize,
+    samples: Vec<u64>,
+    /// Samples offered over the whole run (not just retained).
+    seen: u64,
+    rng: SplitMix64,
+}
+
+impl Default for Reservoir {
+    fn default() -> Reservoir {
+        Reservoir::new(DEFAULT_LATENCY_CAPACITY)
+    }
+}
+
+impl Reservoir {
+    fn new(cap: usize) -> Reservoir {
+        Reservoir {
+            cap: cap.max(1),
+            samples: Vec::new(),
+            seen: 0,
+            rng: SplitMix64::new(0x5EED_CAFE),
+        }
+    }
+
+    /// Offer one sample.  Returns `true` when the reservoir was already
+    /// full — the offer was *sampled* (kept with probability
+    /// `cap/seen`, displacing a uniform victim) rather than retained
+    /// verbatim.
+    fn offer(&mut self, v: u64) -> bool {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+            false
+        } else {
+            let j = self.rng.next_below(self.seen);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = v;
+            }
+            true
+        }
+    }
+}
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -54,14 +126,18 @@ pub struct Metrics {
     /// Decode steps admitted (one per validated decode request).
     pub decode_steps: AtomicUsize,
     /// Shards dispatched to the cycle-accurate sim backend
-    /// (DESIGN.md §8).  The three dispatch counters split
-    /// `head_shards` by executing engine, so a mixed fleet (or a
-    /// config mistake) is visible in the summary.
+    /// (DESIGN.md §8).  The dispatch counters split `head_shards` by
+    /// executing engine, so a mixed fleet (or a config mistake) is
+    /// visible in the summary.
     pub sim_dispatches: AtomicUsize,
     /// Shards dispatched to the in-crate reference twin.
     pub reference_dispatches: AtomicUsize,
     /// Shards dispatched to the PJRT artifact runtime.
     pub pjrt_dispatches: AtomicUsize,
+    /// Dispatches whose backend name matched no known engine — always a
+    /// bug somewhere, so it is counted loudly instead of ignored (the
+    /// old `_ => 0` arm dropped them silently).
+    pub unknown_dispatches: AtomicUsize,
     /// Decode shards served from KV-cache pages.
     pub kv_hits: AtomicU64,
     /// Decode shards that took the recompute fallback.
@@ -69,13 +145,130 @@ pub struct Metrics {
     /// Live KV streams evicted from device caches under capacity
     /// pressure.
     pub kv_evictions: AtomicU64,
-    /// Host latencies in ns (bounded reservoir).
-    latencies_ns: Mutex<Vec<u64>>,
+    /// Latency samples offered to the reservoir (every completion).
+    pub latency_samples: AtomicU64,
+    /// Offers past reservoir capacity: retained only by uniform
+    /// sampling, not verbatim (the explicit drop counter the old
+    /// silent `len() < cap` guard lacked).
+    pub latency_drops: AtomicU64,
+    /// Exact maximum latency ns (the reservoir may displace its max).
+    latency_max_ns: AtomicU64,
+    /// Host latencies in ns (bounded uniform reservoir).
+    latencies_ns: Mutex<Reservoir>,
+    /// Per-[`OpKind`] completion latency histograms, indexed by
+    /// [`OpKind::index`].  Prefill is TTFT, decode is TPOT.
+    kind_latency: [Histogram; 4],
+    /// Queue depth observed at each admit (submitted − completed).
+    queue_depth: Histogram,
+    /// Per-device KV-cache page occupancy `(used, capacity)`, gauged by
+    /// workers after each batch.
+    kv_gauges: Mutex<BTreeMap<usize, (usize, usize)>>,
+}
+
+/// The `(count, mean, p50, p95, p99, max)` bundle of one latency/depth
+/// distribution, as serialized into snapshots.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistStats {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+impl HistStats {
+    fn of(h: &Histogram) -> HistStats {
+        let (count, mean, p50, p95, p99, max) = h.stats();
+        HistStats { count, mean, p50, p95, p99, max }
+    }
+
+    fn to_json(self) -> Json {
+        let mut j = Json::obj();
+        j.set("count", Json::u64(self.count))
+            .set("mean", Json::Num(self.mean))
+            .set("p50", Json::u64(self.p50))
+            .set("p95", Json::u64(self.p95))
+            .set("p99", Json::u64(self.p99))
+            .set("max", Json::u64(self.max));
+        j
+    }
+}
+
+/// A frozen copy of every metric, ready for JSON serialization — the
+/// `fsa serve --metrics-json` and `BENCH_serving.json` schema
+/// (DESIGN.md §9).
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Flat monotonic counters, in declaration order.
+    pub counters: Vec<(&'static str, u64)>,
+    /// Whole-pool completion latency (ns) from the reservoir: exact
+    /// count/max, uniform-sample percentiles.
+    pub latency_ns: HistStats,
+    /// Per-[`OpKind`] completion latency (ns), [`OpKind::ALL`] order.
+    /// `prefill` is TTFT, `decode` is TPOT.
+    pub op_kinds: Vec<(&'static str, HistStats)>,
+    /// Queue depth at admit.
+    pub queue_depth: HistStats,
+    /// Per-device KV page occupancy `(device, used, capacity)`.
+    pub kv_gauges: Vec<(usize, usize, usize)>,
+}
+
+impl MetricsSnapshot {
+    /// Look up a flat counter by name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| *n == name).map(|&(_, v)| v)
+    }
+
+    /// The latency stats of one op kind.
+    pub fn kind(&self, kind: OpKind) -> HistStats {
+        self.op_kinds[kind.index()].1
+    }
+
+    /// Serialize (the schema documented in DESIGN.md §9).
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for &(name, v) in &self.counters {
+            counters.set(name, Json::u64(v));
+        }
+        let mut kinds = Json::obj();
+        for &(name, stats) in &self.op_kinds {
+            kinds.set(name, stats.to_json());
+        }
+        let kv = self
+            .kv_gauges
+            .iter()
+            .map(|&(dev, used, cap)| {
+                let mut g = Json::obj();
+                g.set("device", Json::u64(dev as u64))
+                    .set("used_pages", Json::u64(used as u64))
+                    .set("capacity_pages", Json::u64(cap as u64));
+                g
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("counters", counters)
+            .set("latency_ns", self.latency_ns.to_json())
+            .set("op_kinds", kinds)
+            .set("ttft_ns", self.kind(OpKind::Prefill).to_json())
+            .set("tpot_ns", self.kind(OpKind::Decode).to_json())
+            .set("queue_depth", self.queue_depth.to_json())
+            .set("kv", Json::Arr(kv));
+        j
+    }
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// A metrics sink whose latency reservoir holds at most `cap`
+    /// samples — tests exercise the drop counter without 65537 records.
+    pub fn with_latency_capacity(cap: usize) -> Metrics {
+        let m = Metrics::new();
+        *super::lock(&m.latencies_ns) = Reservoir::new(cap);
+        m
     }
 
     /// Record one executed head shard (called by device workers).
@@ -86,14 +279,26 @@ impl Metrics {
 
     /// Count one shard dispatch against the executing backend kind
     /// (`Backend::name`): `sim`, `reference` or `pjrt`.  Unknown names
-    /// are ignored rather than panicking a worker.
+    /// land in `unknown_dispatches` — counted, never silently ignored.
     pub fn record_dispatch(&self, backend: &str) {
         match backend {
             "sim" => self.sim_dispatches.fetch_add(1, Ordering::Relaxed),
             "reference" => self.reference_dispatches.fetch_add(1, Ordering::Relaxed),
             "pjrt" => self.pjrt_dispatches.fetch_add(1, Ordering::Relaxed),
-            _ => 0,
+            _ => self.unknown_dispatches.fetch_add(1, Ordering::Relaxed),
         };
+    }
+
+    /// Record the ingress queue depth seen at one admit (called by the
+    /// batcher; `submitted − completed` at that instant).
+    pub fn record_queue_depth(&self, depth: u64) {
+        self.queue_depth.record(depth);
+    }
+
+    /// Gauge one device's KV-cache page occupancy (called by workers
+    /// after each batch).
+    pub fn set_kv_gauge(&self, device: usize, used: usize, capacity: usize) {
+        super::lock(&self.kv_gauges).insert(device, (used, capacity));
     }
 
     /// Record one gathered response (called by the completing worker).
@@ -110,10 +315,24 @@ impl Metrics {
         }
         self.merge_steps.fetch_add(resp.merge_steps as u64, Ordering::Relaxed);
         self.device_cycles.fetch_add(resp.device_cycles, Ordering::Relaxed);
-        let mut l = super::lock(&self.latencies_ns);
-        if l.len() < 65536 {
-            l.push(resp.latency.as_nanos() as u64);
+        let ns = resp.latency.as_nanos() as u64;
+        self.kind_latency[resp.kind.index()].record(ns);
+        self.latency_samples.fetch_add(1, Ordering::Relaxed);
+        self.latency_max_ns.fetch_max(ns, Ordering::Relaxed);
+        if super::lock(&self.latencies_ns).offer(ns) {
+            self.latency_drops.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Nearest-rank percentile of the latency reservoir (exact until
+    /// the reservoir fills, a uniform-sample estimate after).
+    pub fn latency_percentile(&self, p: f64) -> Duration {
+        let mut l = super::lock(&self.latencies_ns).samples.clone();
+        if l.is_empty() {
+            return Duration::ZERO;
+        }
+        l.sort_unstable();
+        Duration::from_nanos(crate::benchutil::nearest_rank(&l, p))
     }
 
     /// (p50, p95, max) host latency, nearest-rank selection: percentile
@@ -124,7 +343,7 @@ impl Metrics {
     /// low on small reservoirs — e.g. the 9th of 10 samples instead of
     /// the 10th.)
     pub fn latency_percentiles(&self) -> (Duration, Duration, Duration) {
-        let mut l = super::lock(&self.latencies_ns).clone();
+        let mut l = super::lock(&self.latencies_ns).samples.clone();
         if l.is_empty() {
             return (Duration::ZERO, Duration::ZERO, Duration::ZERO);
         }
@@ -133,15 +352,81 @@ impl Metrics {
         (pick(0.5), pick(0.95), pick(1.0))
     }
 
+    /// Freeze every metric into a serializable [`MetricsSnapshot`].
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let o = Ordering::Relaxed;
+        let counters = vec![
+            ("submitted", self.submitted.load(o) as u64),
+            ("completed", self.completed.load(o) as u64),
+            ("failed", self.failed.load(o) as u64),
+            ("batches", self.batches.load(o) as u64),
+            ("head_shards", self.head_shards.load(o) as u64),
+            ("multi_head_requests", self.multi_head_requests.load(o) as u64),
+            ("seqpar_requests", self.seqpar_requests.load(o) as u64),
+            ("seq_chunk_shards", self.seq_chunk_shards.load(o) as u64),
+            ("merge_steps", self.merge_steps.load(o)),
+            ("device_cycles", self.device_cycles.load(o)),
+            ("shard_cycles", self.shard_cycles.load(o)),
+            ("sessions_opened", self.sessions_opened.load(o) as u64),
+            ("sessions_closed", self.sessions_closed.load(o) as u64),
+            ("decode_steps", self.decode_steps.load(o) as u64),
+            ("sim_dispatches", self.sim_dispatches.load(o) as u64),
+            ("reference_dispatches", self.reference_dispatches.load(o) as u64),
+            ("pjrt_dispatches", self.pjrt_dispatches.load(o) as u64),
+            ("unknown_dispatches", self.unknown_dispatches.load(o) as u64),
+            ("kv_hits", self.kv_hits.load(o)),
+            ("kv_misses", self.kv_misses.load(o)),
+            ("kv_evictions", self.kv_evictions.load(o)),
+            ("latency_samples", self.latency_samples.load(o)),
+            ("latency_drops", self.latency_drops.load(o)),
+        ];
+        let latency_ns = {
+            let res = super::lock(&self.latencies_ns);
+            let mut l = res.samples.clone();
+            drop(res);
+            l.sort_unstable();
+            let pick = |p: f64| {
+                if l.is_empty() { 0 } else { crate::benchutil::nearest_rank(&l, p) }
+            };
+            let mean = if l.is_empty() {
+                0.0
+            } else {
+                l.iter().sum::<u64>() as f64 / l.len() as f64
+            };
+            HistStats {
+                count: self.latency_samples.load(o),
+                mean,
+                p50: pick(0.50),
+                p95: pick(0.95),
+                p99: pick(0.99),
+                max: self.latency_max_ns.load(o),
+            }
+        };
+        MetricsSnapshot {
+            counters,
+            latency_ns,
+            op_kinds: OpKind::ALL
+                .iter()
+                .map(|k| (k.name(), HistStats::of(&self.kind_latency[k.index()])))
+                .collect(),
+            queue_depth: HistStats::of(&self.queue_depth),
+            kv_gauges: super::lock(&self.kv_gauges)
+                .iter()
+                .map(|(&dev, &(used, cap))| (dev, used, cap))
+                .collect(),
+        }
+    }
+
     /// One-line human-readable summary of every counter.
     pub fn summary(&self) -> String {
         let (p50, p95, max) = self.latency_percentiles();
         format!(
             "submitted {} completed {} failed {} batches {} head_shards {} \
              multi_head {} seqpar {} seq_chunk_shards {} merge_steps {} \
-             device_cycles {} dispatch sim/ref/pjrt {}/{}/{} \
+             device_cycles {} dispatch sim/ref/pjrt/unknown {}/{}/{}/{} \
              sessions {}/{} decode_steps {} \
-             kv hit/miss/evict {}/{}/{} latency p50 {:?} p95 {:?} max {:?}",
+             kv hit/miss/evict {}/{}/{} latency p50 {:?} p95 {:?} max {:?} \
+             drops {}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -155,6 +440,7 @@ impl Metrics {
             self.sim_dispatches.load(Ordering::Relaxed),
             self.reference_dispatches.load(Ordering::Relaxed),
             self.pjrt_dispatches.load(Ordering::Relaxed),
+            self.unknown_dispatches.load(Ordering::Relaxed),
             self.sessions_opened.load(Ordering::Relaxed),
             self.sessions_closed.load(Ordering::Relaxed),
             self.decode_steps.load(Ordering::Relaxed),
@@ -164,6 +450,7 @@ impl Metrics {
             p50,
             p95,
             max,
+            self.latency_drops.load(Ordering::Relaxed),
         )
     }
 }
@@ -192,6 +479,8 @@ mod tests {
             kv_hits: 0,
             kv_misses: 0,
             measured_shards: 0,
+            kind: OpKind::Stateless,
+            cycle_breakdown: None,
         }
     }
 
@@ -228,10 +517,12 @@ mod tests {
     fn empty_percentiles_are_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_percentiles().0, Duration::ZERO);
+        assert_eq!(m.latency_percentile(0.99), Duration::ZERO);
     }
 
     /// Satellite: dispatches are counted per backend kind, split out of
-    /// `head_shards`, and surfaced in the summary.
+    /// `head_shards`, and surfaced in the summary; unknown names are
+    /// counted loudly instead of silently ignored.
     #[test]
     fn dispatches_counted_per_backend_kind() {
         let m = Metrics::new();
@@ -240,12 +531,17 @@ mod tests {
         }
         m.record_dispatch("reference");
         m.record_dispatch("pjrt");
-        m.record_dispatch("quantum"); // unknown: ignored, not a panic
+        m.record_dispatch("quantum"); // unknown: counted, not dropped
         let o = Ordering::Relaxed;
         assert_eq!(m.sim_dispatches.load(o), 3);
         assert_eq!(m.reference_dispatches.load(o), 1);
         assert_eq!(m.pjrt_dispatches.load(o), 1);
-        assert!(m.summary().contains("dispatch sim/ref/pjrt 3/1/1"), "{}", m.summary());
+        assert_eq!(m.unknown_dispatches.load(o), 1);
+        assert!(
+            m.summary().contains("dispatch sim/ref/pjrt/unknown 3/1/1/1"),
+            "{}",
+            m.summary()
+        );
     }
 
     /// Satellite: sequence shards and merge steps are counted
@@ -286,6 +582,7 @@ mod tests {
         assert_eq!(p50, Duration::from_millis(10));
         assert_eq!(p95, Duration::from_millis(19));
         assert_eq!(max, Duration::from_millis(20));
+        assert_eq!(m.latency_percentile(0.99), Duration::from_millis(20));
     }
 
     /// The old `((n-1)·p) as usize` truncation picked the 9th of 10
@@ -308,5 +605,126 @@ mod tests {
             Duration::from_millis(3),
             Duration::from_millis(3),
         ));
+    }
+
+    /// Satellite: the reservoir no longer silently stops recording at
+    /// capacity — past it, offers are uniform-sampled and the drop
+    /// counter says exactly how many were not retained verbatim.
+    #[test]
+    fn reservoir_bounds_memory_and_counts_drops() {
+        let m = Metrics::with_latency_capacity(8);
+        for ms in 1..=20u64 {
+            m.record(&resp(ms, 1), true);
+        }
+        let o = Ordering::Relaxed;
+        assert_eq!(m.latency_samples.load(o), 20);
+        assert_eq!(m.latency_drops.load(o), 12, "20 offers, 8 retained slots");
+        let res = crate::coordinator::lock(&m.latencies_ns);
+        assert_eq!(res.samples.len(), 8, "memory stays bounded");
+        assert_eq!(res.seen, 20);
+        // Every retained sample is a genuine offer (1..=20 ms in ns).
+        assert!(res.samples.iter().all(|&v| v >= 1_000_000 && v <= 20_000_000));
+        drop(res);
+        // The exact max survives even if the reservoir displaced it.
+        assert_eq!(m.snapshot().latency_ns.max, 20_000_000);
+        assert!(m.summary().contains("drops 12"), "{}", m.summary());
+    }
+
+    /// Later samples really do displace earlier ones (Algorithm R keeps
+    /// a uniform sample of the whole stream, not a prefix).
+    #[test]
+    fn reservoir_sampling_admits_late_samples() {
+        let m = Metrics::with_latency_capacity(4);
+        for _ in 0..4 {
+            m.record(&resp(1, 1), true);
+        }
+        for _ in 0..400 {
+            m.record(&resp(1000, 1), true);
+        }
+        let res = crate::coordinator::lock(&m.latencies_ns);
+        assert!(
+            res.samples.iter().any(|&v| v == 1_000_000_000),
+            "400 late offers against 4 slots: some must have displaced \
+             the prefix (P[none] < 1e-60)"
+        );
+    }
+
+    /// Per-op-kind histograms split latency by SLO class: prefill
+    /// feeds TTFT, decode feeds TPOT.
+    #[test]
+    fn op_kind_latency_histograms() {
+        let m = Metrics::new();
+        let mut pre = resp(8, 1);
+        pre.kind = OpKind::Prefill;
+        m.record(&pre, true);
+        for _ in 0..3 {
+            let mut dec = resp(2, 1);
+            dec.kind = OpKind::Decode;
+            m.record(&dec, true);
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.kind(OpKind::Prefill).count, 1);
+        assert_eq!(snap.kind(OpKind::Decode).count, 3);
+        assert_eq!(snap.kind(OpKind::Stateless).count, 0);
+        // TTFT == prefill stats; TPOT == decode stats; log-bucket
+        // percentiles stay within 2x of the true 8 ms / 2 ms.
+        let ttft = snap.kind(OpKind::Prefill);
+        assert!(ttft.p50 >= 8_000_000 && ttft.p50 <= 16_000_000, "{ttft:?}");
+        let tpot = snap.kind(OpKind::Decode);
+        assert!(tpot.p50 >= 2_000_000 && tpot.p50 <= 4_000_000, "{tpot:?}");
+        assert_eq!(tpot.max, 2_000_000);
+    }
+
+    /// Satellite: the snapshot serializes to JSON and parses back with
+    /// the same shape and values (via the dependency-free
+    /// [`crate::telemetry::json`] round trip).
+    #[test]
+    fn snapshot_json_round_trip() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(5, Ordering::Relaxed);
+        m.record_dispatch("sim");
+        m.record_dispatch("warp"); // unknown
+        m.record_queue_depth(3);
+        m.set_kv_gauge(0, 7, 64);
+        m.set_kv_gauge(2, 0, 64);
+        let mut dec = resp(4, 2);
+        dec.kind = OpKind::Decode;
+        m.record(&dec, true);
+        let snap = m.snapshot();
+        assert_eq!(snap.counter("submitted"), Some(5));
+        assert_eq!(snap.counter("unknown_dispatches"), Some(1));
+        assert_eq!(snap.counter("nonsense"), None);
+
+        let text = snap.to_json().to_string();
+        let back = crate::telemetry::json::parse(&text).unwrap();
+        let c = back.get("counters").unwrap();
+        assert_eq!(c.get("submitted").unwrap().as_u64(), Some(5));
+        assert_eq!(c.get("sim_dispatches").unwrap().as_u64(), Some(1));
+        assert_eq!(c.get("unknown_dispatches").unwrap().as_u64(), Some(1));
+        assert_eq!(c.get("latency_samples").unwrap().as_u64(), Some(1));
+        // Latency block: one 4 ms sample.
+        let lat = back.get("latency_ns").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_u64(), Some(1));
+        assert_eq!(lat.get("p50").unwrap().as_u64(), Some(4_000_000));
+        assert_eq!(lat.get("max").unwrap().as_u64(), Some(4_000_000));
+        // Op kinds + the TTFT/TPOT aliases.
+        let kinds = back.get("op_kinds").unwrap();
+        assert_eq!(kinds.get("decode").unwrap().get("count").unwrap().as_u64(), Some(1));
+        assert_eq!(kinds.get("prefill").unwrap().get("count").unwrap().as_u64(), Some(0));
+        assert_eq!(back.get("tpot_ns").unwrap().get("count").unwrap().as_u64(), Some(1));
+        assert_eq!(back.get("ttft_ns").unwrap().get("count").unwrap().as_u64(), Some(0));
+        // Queue depth + KV gauges.
+        assert_eq!(back.get("queue_depth").unwrap().get("count").unwrap().as_u64(), Some(1));
+        let kv = back.get("kv").unwrap().as_arr().unwrap();
+        assert_eq!(kv.len(), 2);
+        assert_eq!(kv[0].get("device").unwrap().as_u64(), Some(0));
+        assert_eq!(kv[0].get("used_pages").unwrap().as_u64(), Some(7));
+        assert_eq!(kv[1].get("device").unwrap().as_u64(), Some(2));
+        // The pretty form parses identically.
+        let pretty = crate::telemetry::json::parse(&snap.to_json().pretty()).unwrap();
+        assert_eq!(
+            pretty.get("counters").unwrap().get("submitted").unwrap().as_u64(),
+            Some(5)
+        );
     }
 }

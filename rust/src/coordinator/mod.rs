@@ -32,6 +32,7 @@ pub mod request;
 pub mod router;
 pub mod session;
 pub mod shard;
+pub mod trace;
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -47,6 +48,7 @@ use metrics::Metrics;
 use request::{AttentionRequest, AttentionResponse};
 use router::Router;
 use session::SessionTable;
+use trace::Tracer;
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
@@ -57,6 +59,10 @@ pub struct Coordinator {
     /// Session registry (decode-phase serving): lifecycle state, the
     /// host-tier K/V prefixes, and the sticky device placements.
     pub sessions: Arc<SessionTable>,
+    /// Request-path event sink (DESIGN.md §9); disabled unless
+    /// [`RunConfig::trace`] says otherwise, in which case it records
+    /// admit→shard→dispatch→execute→gather spans plus KV traffic.
+    pub tracer: Arc<Tracer>,
 }
 
 impl Coordinator {
@@ -81,14 +87,22 @@ impl Coordinator {
         }
 
         let sessions = Arc::new(SessionTable::new());
+        let tracer = Tracer::new(cfg.trace);
         let mut workers = Vec::with_capacity(cfg.devices);
         for id in 0..cfg.devices {
-            workers.push(DeviceWorker::spawn(id, &cfg, sessions.clone(), metrics.clone())?);
+            workers.push(DeviceWorker::spawn(
+                id,
+                &cfg,
+                sessions.clone(),
+                metrics.clone(),
+                tracer.clone(),
+            )?);
         }
         let router = Router::new(
             workers.iter().map(|w| w.handle()).collect(),
             sessions.clone(),
-        );
+        )
+        .with_tracer(tracer.clone());
 
         // Resolve the pool's backend capabilities once: PJRT has no
         // `fsa_decode` artifact kind, its artifacts take no mask input
@@ -126,7 +140,8 @@ impl Coordinator {
             cfg.freq_ghz,
             cfg.seq_shards,
             caps,
-        );
+        )
+        .with_tracer(tracer.clone());
         let m2 = metrics.clone();
         let s2 = sessions.clone();
         let batcher_handle = std::thread::Builder::new()
@@ -140,6 +155,7 @@ impl Coordinator {
             workers,
             metrics,
             sessions,
+            tracer,
         })
     }
 

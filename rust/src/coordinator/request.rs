@@ -14,8 +14,62 @@ use std::time::{Duration, Instant};
 
 use crate::mask::MaskKind;
 use crate::schedule::{decode_attention_flops, masked_attention_flops};
+use crate::sim::CycleBreakdown;
 
 use super::session::{SessionId, SessionOp};
+
+/// SLO class of a request: which latency histogram its completion lands
+/// in ([`super::metrics::Metrics`], DESIGN.md §9).  Derived from the
+/// [`SessionOp`], echoed on every [`AttentionResponse`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// One-shot operator (no session).
+    Stateless,
+    /// Session-opening full-prefix attention; its latency is the
+    /// time-to-first-token (TTFT) numerator.
+    Prefill,
+    /// One decode step; its latency is the time-per-output-token (TPOT)
+    /// numerator.
+    Decode,
+    /// Session retirement (inline reply, no tensors).
+    Close,
+}
+
+impl OpKind {
+    /// The class of a session op.
+    pub fn of(op: &SessionOp) -> OpKind {
+        match op {
+            SessionOp::Stateless => OpKind::Stateless,
+            SessionOp::Prefill { .. } => OpKind::Prefill,
+            SessionOp::Decode { .. } => OpKind::Decode,
+            SessionOp::Close { .. } => OpKind::Close,
+        }
+    }
+
+    /// Stable index for per-kind metric arrays.
+    pub fn index(self) -> usize {
+        match self {
+            OpKind::Stateless => 0,
+            OpKind::Prefill => 1,
+            OpKind::Decode => 2,
+            OpKind::Close => 3,
+        }
+    }
+
+    /// Snapshot/JSON name.
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Stateless => "stateless",
+            OpKind::Prefill => "prefill",
+            OpKind::Decode => "decode",
+            OpKind::Close => "close",
+        }
+    }
+
+    /// All kinds in [`OpKind::index`] order.
+    pub const ALL: [OpKind; 4] =
+        [OpKind::Stateless, OpKind::Prefill, OpKind::Decode, OpKind::Close];
+}
 
 /// One attention operator: row-major per-head `(seq_len, d)` matrices.
 ///
@@ -335,6 +389,15 @@ pub struct AttentionResponse {
     /// predicted by the perfmodel — `shards` on a sim pool, 0 on the
     /// modeled backends.
     pub measured_shards: usize,
+    /// SLO class of the request ([`OpKind::of`] its session op) — which
+    /// latency histogram this completion lands in.
+    pub kind: OpKind,
+    /// Per-instruction-class attribution of `device_cycles` (DESIGN.md
+    /// §9): present iff *every* shard executed on the cycle-accurate
+    /// machine (`measured_shards == shards`, plus the decode-miss
+    /// recompute charge); its `total()` equals `device_cycles` exactly.
+    /// `None` on modeled backends and inline lifecycle replies.
+    pub cycle_breakdown: Option<CycleBreakdown>,
 }
 
 /// Internal envelope: request + reply channel + enqueue timestamp.
@@ -468,6 +531,18 @@ mod tests {
         )
         .with_mask(MaskKind::Causal)
         .padded(4);
+    }
+
+    #[test]
+    fn op_kind_classification() {
+        assert_eq!(OpKind::of(&SessionOp::Stateless), OpKind::Stateless);
+        assert_eq!(OpKind::of(&SessionOp::Prefill { session: 1 }), OpKind::Prefill);
+        assert_eq!(OpKind::of(&SessionOp::Decode { session: 1, step: 0 }), OpKind::Decode);
+        assert_eq!(OpKind::of(&SessionOp::Close { session: 1 }), OpKind::Close);
+        for (i, k) in OpKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i, "{k:?}");
+        }
+        assert_eq!(OpKind::Decode.name(), "decode");
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::sync::Arc;
 
 use super::session::{SessionId, SessionTable};
 use super::shard::{ShardCtx, ShardEnvelope};
+use super::trace::{EventKind, Tracer, NO_SESSION};
 
 /// A batch of shards handed to one device worker.
 pub type Batch = Vec<ShardEnvelope>;
@@ -44,12 +45,21 @@ pub struct Router {
     /// Round-robin tiebreaker so equal-load workers share traffic.
     rr: AtomicUsize,
     sessions: Arc<SessionTable>,
+    /// Request-path event sink (DESIGN.md §9); disabled by default.
+    tracer: Arc<Tracer>,
 }
 
 impl Router {
     pub fn new(workers: Vec<WorkerHandle>, sessions: Arc<SessionTable>) -> Router {
         assert!(!workers.is_empty());
-        Router { workers, rr: AtomicUsize::new(0), sessions }
+        Router { workers, rr: AtomicUsize::new(0), sessions, tracer: Tracer::off() }
+    }
+
+    /// Attach a request-path tracer (the coordinator threads its own;
+    /// directly constructed routers keep the disabled default).
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Router {
+        self.tracer = tracer;
+        self
     }
 
     /// Scatter a batch: partition by KV affinity, then send each
@@ -79,8 +89,12 @@ impl Router {
                 match self.workers.iter().find(|w| w.id == dev) {
                     Some(w) => {
                         w.load.fetch_add(group.len(), Ordering::Relaxed);
+                        let meta = self.dispatch_meta(&group);
                         match w.queue.send(group) {
-                            Ok(()) => return,
+                            Ok(()) => {
+                                self.record_dispatches(meta, w);
+                                return;
+                            }
                             Err(mpsc::SendError(g)) => {
                                 // Dead worker: its cached pages are
                                 // unreachable — drop every pin onto it.
@@ -105,11 +119,13 @@ impl Router {
         for &i in &order {
             let w = &self.workers[i];
             w.load.fetch_add(group.len(), Ordering::Relaxed);
+            let meta = self.dispatch_meta(&group);
             match w.queue.send(group) {
                 Ok(()) => {
                     if let Some((sid, kv_head, chunk)) = skey {
                         self.sessions.place(sid, kv_head, chunk, w.id);
                     }
+                    self.record_dispatches(meta, w);
                     return;
                 }
                 Err(mpsc::SendError(g)) => {
@@ -124,6 +140,41 @@ impl Router {
 
     pub fn worker_count(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Per-shard trace coordinates, captured *before* a send consumes
+    /// the batch; `None` when tracing is off so the hot path allocates
+    /// nothing.
+    fn dispatch_meta(&self, group: &Batch) -> Option<Vec<(u64, u64, u32, u32)>> {
+        if !self.tracer.enabled() {
+            return None;
+        }
+        Some(
+            group
+                .iter()
+                .map(|e| {
+                    let session = match e.ctx {
+                        ShardCtx::Prefill { session, .. }
+                        | ShardCtx::Decode { session, .. } => session,
+                        ShardCtx::Stateless => NO_SESSION,
+                    };
+                    (e.shard.req.id, session, e.shard.head as u32, e.shard.chunk as u32)
+                })
+                .collect(),
+        )
+    }
+
+    /// Record one [`EventKind::Dispatch`] per placed shard (payload:
+    /// the device's outstanding-shard gauge after the push).  Only
+    /// called after a *successful* send — a bounced batch records
+    /// nothing on the dead worker.
+    fn record_dispatches(&self, meta: Option<Vec<(u64, u64, u32, u32)>>, w: &WorkerHandle) {
+        let Some(meta) = meta else { return };
+        let depth = w.load.load(Ordering::Relaxed) as u64;
+        for (req, session, head, chunk) in meta {
+            self.tracer
+                .record(EventKind::Dispatch, req, session, head, chunk, w.id as u32, depth);
+        }
     }
 }
 
@@ -379,6 +430,7 @@ mod tests {
                         measured: false,
                         output: Ok(ShardOut::Full(vec![0.0; d])),
                         cache: CacheOutcome::Hit,
+                        breakdown: None,
                     },
                     &cfg,
                 );

@@ -34,8 +34,9 @@ use crate::numerics::pwl::PwlExp2;
 use crate::numerics::reference::{Exp2, FlashPartial};
 use crate::perfmodel::pool_utilization;
 use crate::schedule::live_chunk_ranges;
+use crate::sim::CycleBreakdown;
 
-use super::request::{AttentionRequest, AttentionResponse, Envelope};
+use super::request::{AttentionRequest, AttentionResponse, Envelope, OpKind};
 use super::session::{SessionId, SessionOp};
 
 /// One query head × one sequence chunk of one request: the unit of
@@ -142,6 +143,11 @@ pub struct ShardResult {
     pub output: Result<ShardOut, String>,
     /// KV-cache outcome (decode shards only).
     pub cache: CacheOutcome,
+    /// Per-instruction-class attribution of `cycles` when the backend
+    /// measured them on the cycle-accurate machine (DESIGN.md §9);
+    /// `None` on modeled backends.  When present its `total()` equals
+    /// `cycles` exactly (including the decode-miss recompute charge).
+    pub breakdown: Option<CycleBreakdown>,
 }
 
 struct GatherInner {
@@ -154,6 +160,11 @@ struct GatherInner {
     /// Shards whose cycles were measured on the sim machine rather
     /// than modeled (DESIGN.md §8).
     measured_shards: usize,
+    /// Sum of the shard breakdowns (order-independent) and how many
+    /// shards carried one — the response reports attribution iff every
+    /// shard did (DESIGN.md §9).
+    breakdown_sum: CycleBreakdown,
+    breakdown_shards: usize,
 }
 
 /// Per-request gather cell shared by all of the request's shards.
@@ -194,6 +205,10 @@ impl Gather {
             }
             if result.measured {
                 inner.measured_shards += 1;
+            }
+            if let Some(bd) = &result.breakdown {
+                inner.breakdown_sum.add(bd);
+                inner.breakdown_shards += 1;
             }
         }
         inner.done[slot] = Some((result.device_id, result.cycles, result.output));
@@ -320,6 +335,9 @@ impl Gather {
             kv_hits: inner.kv_hits,
             kv_misses: inner.kv_misses,
             measured_shards: inner.measured_shards,
+            kind: OpKind::of(&req.op),
+            cycle_breakdown: (inner.breakdown_shards == req.num_heads * live)
+                .then_some(inner.breakdown_sum),
         }
     }
 }
@@ -382,6 +400,8 @@ pub fn explode(env: Envelope, seq_shards: usize) -> Vec<ShardEnvelope> {
             kv_hits: 0,
             kv_misses: 0,
             measured_shards: 0,
+            breakdown_sum: CycleBreakdown::default(),
+            breakdown_shards: 0,
         }),
     });
     let mut shards = Vec::with_capacity(num_heads * live);
@@ -443,6 +463,7 @@ mod tests {
             measured: false,
             output: Ok(ShardOut::Full(out)),
             cache: CacheOutcome::NotApplicable,
+            breakdown: None,
         }
     }
 
@@ -531,6 +552,36 @@ mod tests {
             assert!(out[h * 4..(h + 1) * 4].iter().all(|&x| x == h as f32));
         }
         assert!(resp.utilization > 0.0);
+        assert_eq!(resp.kind, OpKind::Stateless);
+        assert!(resp.cycle_breakdown.is_none(), "modeled shards carry no attribution");
+    }
+
+    #[test]
+    fn gather_sums_breakdowns_iff_every_shard_carried_one() {
+        let mk = |with_bd: [bool; 2]| {
+            let (env, rx) = gqa_envelope(2, 1, 2, 2);
+            let shards = explode(env, 1);
+            for h in 0..2 {
+                let mut r = full(h, 0, 50, vec![0.0; 4]);
+                if with_bd[h] {
+                    let mut bd = CycleBreakdown::default();
+                    bd.score = 30;
+                    bd.dma = 20;
+                    r.breakdown = Some(bd);
+                    r.measured = true;
+                }
+                shards[h].gather.complete(r, &fsa());
+            }
+            rx.try_recv().unwrap()
+        };
+        // All shards measured: attribution present, summed, exact.
+        let resp = mk([true, true]);
+        let bd = resp.cycle_breakdown.expect("all shards carried a breakdown");
+        assert_eq!(bd.score, 60);
+        assert_eq!(bd.dma, 40);
+        assert_eq!(bd.total(), resp.device_cycles);
+        // A single modeled shard suppresses the whole-operator claim.
+        assert!(mk([true, false]).cycle_breakdown.is_none());
     }
 
     #[test]
@@ -575,6 +626,7 @@ mod tests {
                     measured: false,
                     output: Ok(ShardOut::Partial(oracle_part(s.head, s.kv_range))),
                     cache: CacheOutcome::NotApplicable,
+                    breakdown: None,
                 },
                 &cfg,
             );
@@ -623,6 +675,7 @@ mod tests {
                         Ok(ShardOut::Full(vec![0.0; 4]))
                     },
                     cache: CacheOutcome::NotApplicable,
+                    breakdown: None,
                 },
                 &fsa(),
             );
@@ -659,6 +712,7 @@ mod tests {
                     measured: h == 0,
                     output: Ok(ShardOut::Full(vec![0.5; d])),
                     cache: if h == 2 { CacheOutcome::Miss } else { CacheOutcome::Hit },
+                    breakdown: None,
                 },
                 &fsa(),
             );
@@ -667,6 +721,7 @@ mod tests {
         assert_eq!(resp.kv_hits, 3);
         assert_eq!(resp.kv_misses, 1);
         assert_eq!(resp.measured_shards, 1, "one shard priced from measured cycles");
+        assert_eq!(resp.kind, OpKind::Decode);
         // Decode output is one row per head.
         assert_eq!(resp.output.unwrap().len(), 4 * d);
     }

@@ -1,0 +1,351 @@
+//! Request-path tracing (DESIGN.md §9): a lock-light ring buffer of
+//! typed span events covering a request's whole life — admission,
+//! sharding, dispatch, execution, gather/merge, and KV-cache traffic.
+//!
+//! Off by default ([`TraceLevel::Off`]): `record` is one branch on a
+//! plain field, so the hot path pays nothing when tracing is disabled
+//! — which is what lets the e2e suite assert that enabling it changes
+//! **no served bits** (`rust/tests/coordinator_trace.rs`).  `Summary`
+//! keeps only per-kind relaxed-atomic counts; `Full` additionally
+//! retains the last [`RING_CAP`] events in a mutex-guarded ring
+//! (overwritten events are counted, never silently lost).
+//!
+//! Timestamps are monotonic nanoseconds since the tracer's creation
+//! ([`Tracer::new`]), so event ordering is meaningful across threads on
+//! one coordinator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// How much the coordinator records (the `trace` config key /
+/// `--trace` flag).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceLevel {
+    /// Record nothing (the default; zero overhead).
+    #[default]
+    Off,
+    /// Per-kind event counts only.
+    Summary,
+    /// Counts plus the last [`RING_CAP`] events.
+    Full,
+}
+
+impl std::str::FromStr for TraceLevel {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<TraceLevel, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" => Ok(TraceLevel::Off),
+            "summary" => Ok(TraceLevel::Summary),
+            "full" => Ok(TraceLevel::Full),
+            other => anyhow::bail!("unknown trace level {other:?} (off|summary|full)"),
+        }
+    }
+}
+
+impl std::fmt::Display for TraceLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Summary => "summary",
+            TraceLevel::Full => "full",
+        })
+    }
+}
+
+/// What happened (one per span point on the request path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Batcher accepted a request (payload: seq_len; for decode, the
+    /// stamped prefix length).
+    Admit,
+    /// Request exploded into its shard grid (payload: shard count).
+    Shard,
+    /// Router placed a shard on a device (payload: device queue depth
+    /// after the push).
+    Dispatch,
+    /// Device worker finished a shard's numerics (payload: the shard's
+    /// device cycles, measured or modeled).
+    Execute,
+    /// The final shard landed and the response was assembled (payload:
+    /// total device cycles of the response).
+    Gather,
+    /// Sequence-parallel partial merges performed at gather (payload:
+    /// merge step count).
+    Merge,
+    /// Decode shard served from KV-cache pages.
+    KvHit,
+    /// Decode shard took the recompute fallback.
+    KvMiss,
+    /// A cached stream was evicted (payload: the evicted session id).
+    KvEvict,
+}
+
+/// Number of [`EventKind`] variants (the counts-array size).
+pub const EVENT_KINDS: usize = 9;
+
+impl EventKind {
+    /// Stable index for the per-kind count array.
+    pub fn index(self) -> usize {
+        match self {
+            EventKind::Admit => 0,
+            EventKind::Shard => 1,
+            EventKind::Dispatch => 2,
+            EventKind::Execute => 3,
+            EventKind::Gather => 4,
+            EventKind::Merge => 5,
+            EventKind::KvHit => 6,
+            EventKind::KvMiss => 7,
+            EventKind::KvEvict => 8,
+        }
+    }
+
+    /// Summary/JSON name.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::Shard => "shard",
+            EventKind::Dispatch => "dispatch",
+            EventKind::Execute => "execute",
+            EventKind::Gather => "gather",
+            EventKind::Merge => "merge",
+            EventKind::KvHit => "kv_hit",
+            EventKind::KvMiss => "kv_miss",
+            EventKind::KvEvict => "kv_evict",
+        }
+    }
+
+    /// All kinds in [`EventKind::index`] order.
+    pub const ALL: [EventKind; EVENT_KINDS] = [
+        EventKind::Admit,
+        EventKind::Shard,
+        EventKind::Dispatch,
+        EventKind::Execute,
+        EventKind::Gather,
+        EventKind::Merge,
+        EventKind::KvHit,
+        EventKind::KvMiss,
+        EventKind::KvEvict,
+    ];
+}
+
+/// `session` value when the event has no session (stateless requests).
+pub const NO_SESSION: u64 = u64::MAX;
+/// `device` value when the event precedes device placement.
+pub const NO_DEVICE: u32 = u32::MAX;
+/// `head`/`chunk` value for whole-request events.
+pub const NO_HEAD: u32 = u32::MAX;
+
+/// Events retained at [`TraceLevel::Full`] before overwrite.
+pub const RING_CAP: usize = 4096;
+
+/// One span event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Monotonic nanoseconds since the tracer was created.
+    pub t_ns: u64,
+    pub kind: EventKind,
+    /// Request id.
+    pub req: u64,
+    /// Session id, or [`NO_SESSION`].
+    pub session: u64,
+    /// Query head, or [`NO_HEAD`] for whole-request events.
+    pub head: u32,
+    /// Sequence chunk, or [`NO_HEAD`].
+    pub chunk: u32,
+    /// Device id, or [`NO_DEVICE`].
+    pub device: u32,
+    /// Kind-specific payload (see [`EventKind`] docs).
+    pub payload: u64,
+}
+
+struct Ring {
+    buf: Vec<Event>,
+    /// Next write slot (`buf` is a circular buffer once full).
+    next: usize,
+    overwritten: u64,
+}
+
+/// The coordinator's event sink, shared by the batcher, router and
+/// every device worker.
+pub struct Tracer {
+    level: TraceLevel,
+    epoch: Instant,
+    counts: [AtomicU64; EVENT_KINDS],
+    ring: Mutex<Ring>,
+}
+
+impl Tracer {
+    pub fn new(level: TraceLevel) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            level,
+            epoch: Instant::now(),
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            ring: Mutex::new(Ring { buf: Vec::new(), next: 0, overwritten: 0 }),
+        })
+    }
+
+    /// A disabled tracer (the default for callers that don't thread one
+    /// through, e.g. components constructed directly in tests).
+    pub fn off() -> Arc<Tracer> {
+        Tracer::new(TraceLevel::Off)
+    }
+
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    /// Whether any recording happens (`Summary` or `Full`).
+    pub fn enabled(&self) -> bool {
+        self.level != TraceLevel::Off
+    }
+
+    /// Record one event.  At [`TraceLevel::Off`] this is a single
+    /// branch and returns immediately — the overhead bound that keeps
+    /// tracing safe to thread through the hot path unconditionally.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        kind: EventKind,
+        req: u64,
+        session: u64,
+        head: u32,
+        chunk: u32,
+        device: u32,
+        payload: u64,
+    ) {
+        if self.level == TraceLevel::Off {
+            return;
+        }
+        self.counts[kind.index()].fetch_add(1, Ordering::Relaxed);
+        if self.level != TraceLevel::Full {
+            return;
+        }
+        let ev = Event {
+            t_ns: self.epoch.elapsed().as_nanos() as u64,
+            kind,
+            req,
+            session,
+            head,
+            chunk,
+            device,
+            payload,
+        };
+        let mut ring = match self.ring.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if ring.buf.len() < RING_CAP {
+            ring.buf.push(ev);
+        } else {
+            let slot = ring.next;
+            ring.buf[slot] = ev;
+            ring.overwritten += 1;
+        }
+        ring.next = (ring.next + 1) % RING_CAP;
+    }
+
+    /// Total events of one kind recorded (all levels but `Off`).
+    pub fn count(&self, kind: EventKind) -> u64 {
+        self.counts[kind.index()].load(Ordering::Relaxed)
+    }
+
+    /// Events overwritten after the ring filled.
+    pub fn overwritten(&self) -> u64 {
+        match self.ring.lock() {
+            Ok(g) => g.overwritten,
+            Err(p) => p.into_inner().overwritten,
+        }
+    }
+
+    /// The retained events, oldest first ([`TraceLevel::Full`] only;
+    /// empty otherwise).
+    pub fn events(&self) -> Vec<Event> {
+        let ring = match self.ring.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if ring.buf.len() < RING_CAP {
+            ring.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(RING_CAP);
+            out.extend_from_slice(&ring.buf[ring.next..]);
+            out.extend_from_slice(&ring.buf[..ring.next]);
+            out
+        }
+    }
+
+    /// One-line per-kind counts for operator logs, e.g.
+    /// `trace: admit=8 shard=8 dispatch=32 execute=32 gather=8`.
+    pub fn summary(&self) -> String {
+        let mut s = String::from("trace:");
+        for kind in EventKind::ALL {
+            let c = self.count(kind);
+            if c > 0 {
+                s.push_str(&format!(" {}={c}", kind.name()));
+            }
+        }
+        let over = self.overwritten();
+        if over > 0 {
+            s.push_str(&format!(" overwritten={over}"));
+        }
+        if s == "trace:" {
+            s.push_str(" (no events)");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_print() {
+        for l in [TraceLevel::Off, TraceLevel::Summary, TraceLevel::Full] {
+            assert_eq!(l.to_string().parse::<TraceLevel>().unwrap(), l);
+        }
+        assert_eq!("FULL".parse::<TraceLevel>().unwrap(), TraceLevel::Full);
+        assert!("verbose".parse::<TraceLevel>().is_err());
+        assert_eq!(TraceLevel::default(), TraceLevel::Off);
+    }
+
+    #[test]
+    fn off_records_nothing() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        t.record(EventKind::Admit, 1, NO_SESSION, NO_HEAD, NO_HEAD, NO_DEVICE, 0);
+        assert_eq!(t.count(EventKind::Admit), 0);
+        assert!(t.events().is_empty());
+        assert_eq!(t.summary(), "trace: (no events)");
+    }
+
+    #[test]
+    fn summary_counts_without_retaining_events() {
+        let t = Tracer::new(TraceLevel::Summary);
+        assert!(t.enabled());
+        t.record(EventKind::Dispatch, 1, NO_SESSION, 0, 0, 3, 1);
+        t.record(EventKind::Dispatch, 1, NO_SESSION, 1, 0, 2, 1);
+        assert_eq!(t.count(EventKind::Dispatch), 2);
+        assert!(t.events().is_empty());
+        assert!(t.summary().contains("dispatch=2"), "{}", t.summary());
+    }
+
+    #[test]
+    fn full_ring_overwrites_oldest_and_counts_losses() {
+        let t = Tracer::new(TraceLevel::Full);
+        for i in 0..(RING_CAP as u64 + 10) {
+            t.record(EventKind::Execute, i, NO_SESSION, 0, 0, 0, i);
+        }
+        assert_eq!(t.count(EventKind::Execute), RING_CAP as u64 + 10);
+        assert_eq!(t.overwritten(), 10);
+        let evs = t.events();
+        assert_eq!(evs.len(), RING_CAP);
+        // Oldest first: the first 10 requests were overwritten.
+        assert_eq!(evs[0].req, 10);
+        assert_eq!(evs.last().unwrap().req, RING_CAP as u64 + 9);
+        // Timestamps are monotone non-decreasing in retained order.
+        assert!(evs.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+        assert!(t.summary().contains("overwritten=10"), "{}", t.summary());
+    }
+}

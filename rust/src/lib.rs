@@ -36,6 +36,8 @@
 //! * [`coordinator`] — multi-head request path: head sharding/gather,
 //!   affinity router, batcher, device workers, metrics; session
 //!   lifecycle + paged KV caches for decode-phase serving.
+//! * [`telemetry`] — log-scale histograms + hand-rolled JSON shared by
+//!   serving metrics and the bench harness (DESIGN.md §9).
 //! * [`config`] — INI-style config system for machines and runs.
 //! * [`cli`], [`benchutil`], [`testutil`] — offline-environment stand-ins
 //!   for clap / criterion / proptest (see DESIGN.md §substitutions).
@@ -54,6 +56,7 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod schedule;
 pub mod sim;
+pub mod telemetry;
 pub mod testutil;
 
 /// Crate-wide result alias.

@@ -32,6 +32,7 @@ Device / serving commands:
           [--heads 1 --kv-heads 1 --backend pjrt|reference|sim|auto]
           [--mask none|causal --freq-ghz 1.5 --seq-shards 1]
           [--sim-max-seq 8192 --sim-batch-shards 8 --array-size 128]
+          [--trace off|summary|full --metrics-json PATH]
                                boot the coordinator and serve a workload
                                (multi-head/GQA requests are sharded
                                per head across the device pool; --mask
@@ -52,7 +53,14 @@ Device / serving commands:
                                N shards share one machine between
                                hazard fences (1 disables reuse);
                                --array-size shrinks the simulated array
-                               for fast sim runs)
+                               for fast sim runs; --trace records
+                               request-path span events — summary keeps
+                               per-kind counts, full adds a 4096-event
+                               ring — without changing served bits;
+                               --metrics-json writes the MetricsSnapshot
+                               as JSON to PATH on shutdown: counters,
+                               per-op-kind latency histograms incl.
+                               TTFT/TPOT, queue depth, KV occupancy)
           [--decode-steps 0 --sessions 1 --kv-pages 4096
            --page-size 16 --eviction lru|none]
                                with --decode-steps > 0: decode-phase
@@ -150,6 +158,8 @@ fn serve(args: &Args) -> fsa::Result<()> {
     cfg.sim_max_seq = args.get("sim-max-seq", cfg.sim_max_seq)?;
     cfg.sim_batch_shards = args.get("sim-batch-shards", cfg.sim_batch_shards)?;
     cfg.array_size = args.get("array-size", cfg.array_size)?;
+    cfg.trace = args.flag("trace").unwrap_or("off").parse()?;
+    let metrics_json = args.flag("metrics-json").map(PathBuf::from);
     let n_req = args.get("requests", 16usize)?;
     let seq = args.get("seq", 512usize)?;
     let d = args.get("d", 128usize)?;
@@ -167,7 +177,9 @@ fn serve(args: &Args) -> fsa::Result<()> {
     );
     let coord = Coordinator::start(cfg)?;
     if decode_steps > 0 {
-        return serve_decode(coord, n_sessions, decode_steps, seq, d, heads, kv_heads, mask);
+        return serve_decode(
+            coord, n_sessions, decode_steps, seq, d, heads, kv_heads, mask, metrics_json,
+        );
     }
     let mut rng = SplitMix64::new(1);
     let mut pending = Vec::new();
@@ -197,7 +209,23 @@ fn serve(args: &Args) -> fsa::Result<()> {
     if ok > 0 {
         println!("worst whole-operator FLOPs/s utilization: {:.1}%", 100.0 * worst_util);
     }
+    finish(coord, metrics_json.as_deref())
+}
+
+/// Common serve epilogue: the one-line counter summary, the trace
+/// summary when tracing is on, the machine-readable snapshot when
+/// `--metrics-json` asked for one, then shutdown.
+fn finish(coord: Coordinator, metrics_json: Option<&std::path::Path>) -> fsa::Result<()> {
     println!("{}", coord.metrics.summary());
+    if coord.tracer.enabled() {
+        println!("{}", coord.tracer.summary());
+    }
+    if let Some(path) = metrics_json {
+        let json = coord.metrics.snapshot().to_json().pretty();
+        std::fs::write(path, &json)
+            .map_err(|e| anyhow::anyhow!("writing metrics snapshot {}: {e}", path.display()))?;
+        println!("metrics snapshot written to {}", path.display());
+    }
     coord.shutdown();
     Ok(())
 }
@@ -217,6 +245,7 @@ fn serve_decode(
     heads: usize,
     kv_heads: usize,
     mask: fsa::mask::MaskKind,
+    metrics_json: Option<PathBuf>,
 ) -> fsa::Result<()> {
     let mut rng = SplitMix64::new(7);
     let mut id = 0u64;
@@ -281,7 +310,5 @@ fn serve_decode(
         "kv cache: {hits} hit / {misses} miss shards ({:.1}% hit rate)",
         100.0 * hits as f64 / (hits + misses).max(1) as f64
     );
-    println!("{}", coord.metrics.summary());
-    coord.shutdown();
-    Ok(())
+    finish(coord, metrics_json.as_deref())
 }

@@ -295,6 +295,17 @@ impl Backend {
         }
     }
 
+    /// Per-instruction-class attribution of the last measured execution
+    /// (DESIGN.md §9); `None` for backends that model instead of
+    /// measure.  When `Some`, its `total()` equals the cycles returned
+    /// by the paired [`Backend::take_measured`].
+    pub fn take_measured_breakdown(&mut self) -> Option<crate::sim::CycleBreakdown> {
+        match self {
+            Backend::Sim(s) => s.take_measured_breakdown(),
+            _ => None,
+        }
+    }
+
     /// Forward the `sim_batch_shards` knob to the sim backend (how many
     /// independent shards share one machine between hazard fences;
     /// no-op for backends that don't simulate).

@@ -36,7 +36,7 @@ use crate::kernel::flash::{
 };
 use crate::mask::MaskKind;
 use crate::numerics::reference::FlashPartial;
-use crate::sim::{Machine, MachineConfig, RunStats};
+use crate::sim::{CycleBreakdown, Machine, MachineConfig, RunStats};
 
 /// Default shards per machine between hazard fences
 /// ([`crate::config::RunConfig::sim_batch_shards`]'s default).
@@ -49,6 +49,11 @@ pub struct SimBackend {
     /// Measured cycles of the most recent execution (consumed by the
     /// worker for pricing; [`SimBackend::take_measured`]).
     measured: Option<u64>,
+    /// Per-instruction-class attribution of `measured` (DESIGN.md §9);
+    /// same lifecycle, consumed by
+    /// [`SimBackend::take_measured_breakdown`].  Its `total()` always
+    /// equals the `measured` cycles it rides with.
+    measured_bd: Option<CycleBreakdown>,
     /// Shard-batching machine cache (DESIGN.md §8): up to `batch_shards`
     /// independent shards share one machine, separated by
     /// [`Machine::reset_for_reuse`] hazard fences — every program ends
@@ -67,6 +72,7 @@ impl SimBackend {
         SimBackend {
             cfg: MachineConfig::from_accel(accel),
             measured: None,
+            measured_bd: None,
             cached: None,
             cached_uses: 0,
             batch_shards: DEFAULT_BATCH_SHARDS,
@@ -82,6 +88,14 @@ impl SimBackend {
     /// execution to replace the modeled latency with the measured one.
     pub fn take_measured(&mut self) -> Option<u64> {
         self.measured.take()
+    }
+
+    /// The per-instruction-class cycle attribution of the last
+    /// `execute_*` call (cleared by the take).  Always paired with
+    /// [`SimBackend::take_measured`]: its `total()` equals the measured
+    /// cycles of the same execution.
+    pub fn take_measured_breakdown(&mut self) -> Option<CycleBreakdown> {
+        self.measured_bd.take()
     }
 
     /// Set how many independent shards may share one machine between
@@ -188,6 +202,7 @@ impl SimBackend {
         mask: MaskKind,
     ) -> Result<Vec<f32>, String> {
         self.measured = None;
+        self.measured_bd = None;
         self.check_dims(seq_len, d)?;
         if q.len() != seq_len * d || k.len() != seq_len * d || v.len() != k.len() {
             return Err(format!(
@@ -202,6 +217,7 @@ impl SimBackend {
         // (the same rule as `FlashPartial::finalize`).
         if (0..seq_len).all(|i| mask.valid_keys(i, seq_len) == 0) {
             self.measured = Some(0);
+            self.measured_bd = Some(CycleBreakdown::default());
             return Ok(vec![0.0; seq_len * d]);
         }
         let p = ChunkParams::whole(self.cfg.n, seq_len, mask);
@@ -213,6 +229,7 @@ impl SimBackend {
         Self::write_padded(&mut m, layout.v_addr, v, seq_len, d);
         let stats = self.run(&mut m, &prog)?;
         self.measured = Some(stats.cycles);
+        self.measured_bd = Some(stats.breakdown);
         let out = Self::read_output(&m, &p, &layout, d);
         self.retire(m);
         Ok(out)
@@ -236,6 +253,7 @@ impl SimBackend {
         total_keys: usize,
     ) -> Result<FlashPartial, String> {
         self.measured = None;
+        self.measured_bd = None;
         self.check_dims(seq_len, d)?;
         if k_chunk.len() % d != 0 || k_chunk.len() != v_chunk.len() || q.len() != seq_len * d {
             return Err(format!(
@@ -262,6 +280,7 @@ impl SimBackend {
 
         let mut part = FlashPartial::empty(seq_len, d);
         let mut cycles = 0u64;
+        let mut bd = CycleBreakdown::default();
         for blk in 0..p.row_blocks() {
             let prog = match flash_chunk_partial_program(&p, &layout, blk)
                 .map_err(|e| format!("sim backend: {e:#}"))?
@@ -273,6 +292,7 @@ impl SimBackend {
             };
             let stats = self.run(&mut m, &prog)?;
             cycles += stats.cycles;
+            bd.add(&stats.breakdown);
             let o_base = layout.o_addr as usize + blk * n * n;
             let l_base = layout.l_addr as usize + blk * n;
             for mcol in 0..n {
@@ -288,6 +308,7 @@ impl SimBackend {
             }
         }
         self.measured = Some(cycles);
+        self.measured_bd = Some(bd);
         self.retire(m);
         Ok(part)
     }
@@ -303,6 +324,7 @@ impl SimBackend {
         v: &[f32],
     ) -> Result<Vec<f32>, String> {
         self.measured = None;
+        self.measured_bd = None;
         self.check_dims(prefix_len, d)?;
         if q_row.len() != d || k.len() != prefix_len * d || v.len() != k.len() {
             return Err(format!(
@@ -321,6 +343,7 @@ impl SimBackend {
         Self::write_padded(&mut m, layout.v_addr, v, prefix_len, d);
         let stats = self.run(&mut m, &prog)?;
         self.measured = Some(stats.cycles);
+        self.measured_bd = Some(stats.breakdown);
         let out = Self::read_output(&m, &p, &layout, d);
         self.retire(m);
         Ok(out)
@@ -336,6 +359,7 @@ impl SimBackend {
         v: &[f32],
     ) -> Result<FlashPartial, String> {
         self.measured = None;
+        self.measured_bd = None;
         self.check_dims(range_len, d)?;
         if q_row.len() != d || k.len() != range_len * d || v.len() != k.len() {
             return Err(format!(
@@ -357,6 +381,7 @@ impl SimBackend {
         Self::write_padded(&mut m, layout.v_addr, v, range_len, d);
         let stats = self.run(&mut m, &prog)?;
         self.measured = Some(stats.cycles);
+        self.measured_bd = Some(stats.breakdown);
         let mut part = FlashPartial::empty(1, d);
         part.m[0] = m.array.cmp_new_m(0);
         part.l[0] = m.read_mem(layout.l_addr, 1)[0];

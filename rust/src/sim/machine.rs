@@ -101,6 +101,69 @@ impl MachineConfig {
     }
 }
 
+/// Per-instruction-class cycle attribution of one program run
+/// (DESIGN.md §9): *where* the measured cycles went.  Constructed so
+/// the classes sum **exactly** to [`RunStats::cycles`]: the compute
+/// classes partition `compute_busy` (each inner interval decomposes as
+/// QK^T score + exp window + rowsum + PV remainder, per §3.5), `stall`
+/// is the compute-timeline idle gap (scoreboard waits on SRAM
+/// readiness, WAR hazards, standalone stationary preloads), and `dma`
+/// is the tail where a DMA queue outlives the compute stream.
+/// `total() == cycles` is debug-asserted per run and pinned e2e by
+/// `rust/tests/coordinator_sim.rs`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CycleBreakdown {
+    /// QK^T score MACs (2N of each inner interval).
+    pub score: u64,
+    /// Subtract-max + PWL exp2 window (N + 2 + segments per interval).
+    pub exp: u64,
+    /// Row-sum accumulation (N per interval) plus the `1/l` reciprocal.
+    pub rowsum: u64,
+    /// PV (attention-value) MACs — the interval remainder — plus the
+    /// LSE output normalization.
+    pub pv: u64,
+    /// §6 mask-wave cycles (one per masked score iteration).
+    pub mask_wave: u64,
+    /// DMA tail beyond the last compute cycle (loads/stores that
+    /// outlive the compute stream; overlapped DMA is hidden under the
+    /// compute classes, as on the device).
+    pub dma: u64,
+    /// Compute-timeline idle: hazard/scoreboard stalls and stationary
+    /// preload occupancy.
+    pub stall: u64,
+    /// Modeled recompute charge added by the serving layer on decode
+    /// cache misses (never produced by the machine itself).
+    pub recompute: u64,
+}
+
+impl CycleBreakdown {
+    /// Sum of every class — equals the measured total cycles by
+    /// construction.
+    pub fn total(&self) -> u64 {
+        self.score
+            + self.exp
+            + self.rowsum
+            + self.pv
+            + self.mask_wave
+            + self.dma
+            + self.stall
+            + self.recompute
+    }
+
+    /// Accumulate another breakdown (shard batching in the sim backend,
+    /// shard→response rollup at gather).
+    pub fn add(&mut self, other: &CycleBreakdown) {
+        self.score += other.score;
+        self.exp += other.exp;
+        self.rowsum += other.rowsum;
+        self.pv += other.pv;
+        self.mask_wave += other.mask_wave;
+        self.dma += other.dma;
+        self.stall += other.stall;
+        self.recompute += other.recompute;
+    }
+}
+
 /// Timing + utilization results of one program run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RunStats {
@@ -113,6 +176,8 @@ pub struct RunStats {
     pub dma_store_busy: u64,
     pub compute_busy: u64,
     pub instructions: usize,
+    /// Exact-sum cycle attribution (`breakdown.total() == cycles`).
+    pub breakdown: CycleBreakdown,
 }
 
 impl RunStats {
@@ -241,6 +306,7 @@ impl Machine {
         // (WAR hazard the real controller resolves via its scoreboard).
         let mut spad_reads: Vec<(TileDesc, u64)> = Vec::new();
         let mut compute_busy: u64 = 0;
+        let mut bd = CycleBreakdown::default();
 
         let overlap_region = |list: &[(TileDesc, u64)], t: &TileDesc| -> u64 {
             list.iter().filter(|(r, _)| r.overlaps(t)).map(|&(_, c)| c).max().unwrap_or(0)
@@ -420,6 +486,20 @@ impl Machine {
                     last_score_ii = ii;
                     compute_free = t + ii;
                     compute_busy += ii;
+                    // Attribute this interval to instruction classes
+                    // (DESIGN.md §9): the unmasked interval decomposes
+                    // as score (2N) + exp window (N + 2 + segments) +
+                    // rowsum (N) + PV remainder; a masked score adds
+                    // exactly the one-cycle §6 mask wave — so the
+                    // charges sum to the `ii` added to `compute_busy`.
+                    let base_ii = if masked { ii - 1 } else { ii };
+                    bd.score += 2 * n as u64;
+                    bd.exp += (n + 2 + self.cfg.segments) as u64;
+                    bd.rowsum += n as u64;
+                    bd.pv += base_ii - (4 * n + 2 + self.cfg.segments) as u64;
+                    if masked {
+                        bd.mask_wave += 1;
+                    }
 
                     // Emit the paired value events now (same t).
                     if let Some((v, out)) = value {
@@ -447,6 +527,8 @@ impl Machine {
                     accum_writes.push((l, t + lat));
                     compute_free = t + lat;
                     compute_busy += lat;
+                    // The 1/l reciprocal finishes the row-sum chain.
+                    bd.rowsum += lat;
                 }
                 Instruction::AttnLseNorm { out, l } => {
                     ensure!(out.space == Space::Accum && l.space == Space::Accum,
@@ -464,6 +546,8 @@ impl Machine {
                     accum_writes.push((out, t + lat));
                     compute_free = t + lat;
                     compute_busy += lat;
+                    // LSE normalization finishes the PV output.
+                    bd.pv += lat;
                 }
             }
             idx += 1;
@@ -519,16 +603,28 @@ impl Machine {
         }
         ensure!(self.array.quiescent(), "array not quiescent at program end");
 
+        // Close the attribution: the compute classes partition
+        // `compute_busy`, the residual idle on the compute timeline is
+        // `stall`, and any DMA tail past the last compute cycle is
+        // `dma` — so the classes sum exactly to the reported cycles.
+        let cycles = compute_free.max(store_q.free_at()).max(load_q.free_at());
+        bd.stall = compute_free.saturating_sub(compute_busy);
+        bd.dma = cycles - compute_free;
+        debug_assert_eq!(
+            bd.total(),
+            cycles,
+            "cycle attribution must sum exactly to the measured total"
+        );
+
         Ok(RunStats {
-            cycles: compute_free
-                .max(store_q.free_at())
-                .max(load_q.free_at()),
+            cycles,
             matmul_macs: self.array.matmul_macs,
             total_pe_ops: self.array.mac_ops,
             dma_load_busy: load_q.busy_cycles(),
             dma_store_busy: store_q.busy_cycles(),
             compute_busy,
             instructions: program.len(),
+            breakdown: bd,
         })
     }
 

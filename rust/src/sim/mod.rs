@@ -30,4 +30,4 @@ pub mod machine;
 pub mod sram;
 
 pub use array::{Array, LeftTag};
-pub use machine::{Machine, MachineConfig, RunStats};
+pub use machine::{CycleBreakdown, Machine, MachineConfig, RunStats};

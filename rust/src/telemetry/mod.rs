@@ -1,0 +1,226 @@
+//! Telemetry primitives shared by the serving metrics and the bench
+//! harness (DESIGN.md §9): a lock-free fixed-bucket log-scale
+//! [`Histogram`] and a dependency-free JSON writer/parser ([`json`]).
+//!
+//! The histogram's bucket rule: bucket 0 holds the value 0 and bucket
+//! `b` (1..=63) holds values in `[2^(b-1), 2^b - 1]` — i.e. the bucket
+//! index of `v > 0` is `floor(log2 v) + 1`, clamped to 63.  Percentile
+//! queries return the bucket's upper bound (capped at the true observed
+//! maximum), so any reported quantile is within 2x of the exact value
+//! while `record` stays a handful of relaxed atomic adds — the overhead
+//! bound that lets the serving hot path carry per-op-kind latency
+//! tracking unconditionally.
+
+pub mod json;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log-scale buckets (covers the full `u64` range).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Fixed-bucket log₂ histogram over `u64` samples (latencies in ns,
+/// queue depths, cycle counts).  All operations are `&self` and
+/// relaxed-atomic: safe to share across device workers without locks.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+    total: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Bucket index of a sample (see the module-level bucket rule).
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Upper bound of a bucket: the largest value the bucket can hold.
+pub fn bucket_upper(b: usize) -> u64 {
+    if b >= HIST_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Arithmetic mean of the recorded samples (0 when empty) — exact,
+    /// unlike the percentiles, because the raw sum is kept.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Nearest-rank percentile (same rank rule as
+    /// [`crate::benchutil::nearest_rank`]): the value returned is the
+    /// upper bound of the bucket holding the `ceil(p·n)`-th smallest
+    /// sample, capped at the observed maximum — so `percentile(1.0)`
+    /// can overshoot the true max by at most 0 and any `p` by at most
+    /// 2x.  Returns 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((p * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for b in 0..HIST_BUCKETS {
+            seen += self.counts[b].load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_upper(b).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Fold another histogram into this one (per-device → pool rollup).
+    pub fn merge(&self, other: &Histogram) {
+        for b in 0..HIST_BUCKETS {
+            let c = other.counts[b].load(Ordering::Relaxed);
+            if c > 0 {
+                self.counts[b].fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.total.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+        self.max.fetch_max(other.max(), Ordering::Relaxed);
+    }
+
+    /// Non-empty buckets as `(upper_bound, count)` pairs, ascending —
+    /// the serialized shape of the histogram.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        (0..HIST_BUCKETS)
+            .filter_map(|b| {
+                let c = self.counts[b].load(Ordering::Relaxed);
+                (c > 0).then_some((bucket_upper(b), c))
+            })
+            .collect()
+    }
+
+    /// The standard stats bundle serialized into snapshots:
+    /// `(count, mean, p50, p95, p99, max)`.
+    pub fn stats(&self) -> (u64, f64, u64, u64, u64, u64) {
+        (
+            self.count(),
+            self.mean(),
+            self.percentile(0.50),
+            self.percentile(0.95),
+            self.percentile(0.99),
+            self.max(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_rule_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(63), u64::MAX);
+        // Every value lands in a bucket whose range contains it.
+        for v in [0u64, 1, 7, 8, 1000, 1 << 40, u64::MAX] {
+            let b = bucket_of(v);
+            assert!(v <= bucket_upper(b), "v={v} b={b}");
+            if b > 0 {
+                assert!(v > bucket_upper(b - 1), "v={v} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn percentiles_within_2x_and_capped_at_max() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.max(), 1000);
+        assert_eq!(h.mean(), 500.5);
+        // p50 rank = 500 → bucket of 500 is [256, 511] → upper 511.
+        let p50 = h.percentile(0.5);
+        assert!((500..=1000).contains(&p50) && p50 <= 2 * 500, "{p50}");
+        // p100 is exact (capped at the observed max).
+        assert_eq!(h.percentile(1.0), 1000);
+        // Single sample: every percentile is that sample (upper bound
+        // capped at max).
+        let one = Histogram::new();
+        one.record(7);
+        assert_eq!(one.percentile(0.5), 7);
+        assert_eq!(one.percentile(0.99), 7);
+        // Empty histogram reports zeros.
+        assert_eq!(Histogram::new().percentile(0.95), 0);
+        assert_eq!(Histogram::new().mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(10);
+        b.record(1000);
+        b.record(0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum(), 1010);
+        assert_eq!(a.max(), 1000);
+        assert_eq!(a.nonzero_buckets().len(), 3);
+    }
+}

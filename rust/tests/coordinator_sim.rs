@@ -87,6 +87,23 @@ fn sim_pool_matches_reference_pool_bitwise_and_prices_measured_cycles() {
         // Every shard was priced from measured machine cycles…
         assert_eq!(got.measured_shards, got.shards, "seq={seq} {mask:?}");
         assert_eq!(want.measured_shards, 0, "reference pool models, never measures");
+        // …the sim pool attributes every one of those cycles to an
+        // instruction class — the breakdown sums EXACTLY to the priced
+        // total (DESIGN.md §9) — while the model-priced reference pool
+        // carries no breakdown…
+        let bd = got.cycle_breakdown.expect("sim responses carry attribution");
+        assert_eq!(
+            bd.total(),
+            got.device_cycles,
+            "seq={seq} {mask:?}: attribution must sum to the priced cycles ({bd:?})"
+        );
+        assert!(bd.score > 0 && bd.exp > 0 && bd.rowsum > 0, "seq={seq} {mask:?}: {bd:?}");
+        assert_eq!(bd.recompute, 0, "stateless serving never recomputes");
+        match mask {
+            MaskKind::None => assert_eq!(bd.mask_wave, 0, "unmasked shards ride no mask wave"),
+            _ => assert!(bd.mask_wave > 0, "seq={seq} {mask:?}: masked intervals must be counted"),
+        }
+        assert!(want.cycle_breakdown.is_none(), "modeled cycles have no measured attribution");
         // …and measured disagrees with the model by less than the band
         // while not being the model (it is a genuine measurement).
         let accel = {
@@ -168,6 +185,13 @@ fn sim_decode_session_is_bitwise_the_reference_pool() {
                 rng.normal_matrix(kv, d),
             );
             let resp = coord.submit_wait(dec).unwrap();
+            // Decode responses on the sim pool attribute exactly too;
+            // any recompute fallback is charged to its own class so the
+            // sum still equals the priced cycles (measured + recompute).
+            if resp.measured_shards == resp.shards && resp.shards > 0 {
+                let bd = resp.cycle_breakdown.expect("measured decode carries attribution");
+                assert_eq!(bd.total(), resp.device_cycles, "step {step}: {bd:?}");
+            }
             outs.push(resp.output.expect("decode step succeeds"));
         }
         coord.submit_wait(AttentionRequest::close(99, 7)).unwrap();
@@ -208,6 +232,11 @@ fn sim_seqpar_serving_is_bitwise_the_reference_pool() {
         );
         assert_eq!(got.measured_shards, got.shards, "{mask:?}");
         assert_eq!(got.merge_steps, want.merge_steps, "{mask:?}");
+        // Chunked shards roll their per-shard breakdowns up at gather;
+        // the exact-sum contract holds across the whole (head, chunk)
+        // grid, not just single shards.
+        let bd = got.cycle_breakdown.expect("chunked sim responses carry attribution");
+        assert_eq!(bd.total(), got.device_cycles, "{mask:?}: {bd:?}");
     }
     let o = std::sync::atomic::Ordering::Relaxed;
     assert!(sim.metrics.seq_chunk_shards.load(o) >= heads * 2);

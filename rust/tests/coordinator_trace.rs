@@ -1,0 +1,289 @@
+//! E2e contract of the telemetry layer (DESIGN.md §9):
+//!
+//! * enabling tracing changes **no served bits** — identical workloads
+//!   on trace-off and trace-full pools produce bitwise-equal outputs,
+//!   on both the reference and the cycle-accurate sim backends;
+//! * the full-trace event stream covers the whole request path
+//!   (admit → shard → dispatch → execute → gather, plus KV traffic)
+//!   with counts that reconcile against the serving metrics, and sim
+//!   Execute payloads sum exactly to the shard-cycle counter;
+//! * `Metrics::snapshot` serializes through the dependency-free JSON
+//!   writer and parses back with the schema `fsa serve --metrics-json`
+//!   and `BENCH_serving.json` share.
+
+use fsa::config::{BackendKind, RunConfig};
+use fsa::coordinator::request::AttentionRequest;
+use fsa::coordinator::trace::{EventKind, TraceLevel};
+use fsa::coordinator::Coordinator;
+use fsa::mask::MaskKind;
+use fsa::numerics::SplitMix64;
+
+const N: usize = 32;
+
+fn cfg(backend: BackendKind, trace: TraceLevel, devices: usize) -> RunConfig {
+    RunConfig {
+        devices,
+        max_batch: 8,
+        batch_timeout_cycles: 50_000,
+        queue_depth: 64,
+        backend,
+        num_heads: 4,
+        num_kv_heads: 2,
+        sim_max_seq: 256,
+        array_size: N,
+        trace,
+        ..RunConfig::default()
+    }
+}
+
+fn gqa_req(seed: u64, id: u64, seq: usize, d: usize, heads: usize, kv: usize) -> AttentionRequest {
+    let mut rng = SplitMix64::new(seed);
+    AttentionRequest::gqa(
+        id,
+        seq,
+        d,
+        heads,
+        kv,
+        rng.normal_matrix(heads * seq, d),
+        rng.normal_matrix(kv * seq, d),
+        rng.normal_matrix(kv * seq, d),
+    )
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The mixed workload both pools serve: 3 stateless causal GQA requests
+/// plus one session (causal prefill, 2 decode steps, close).  Returns
+/// every output in submission order.
+fn run_workload(coord: &Coordinator, seq: usize, d: usize) -> Vec<Vec<f32>> {
+    let (heads, kv) = (4usize, 2usize);
+    let mut outs = Vec::new();
+    for i in 0..3u64 {
+        let req = gqa_req(100 + i, i, seq, d, heads, kv).with_mask(MaskKind::Causal);
+        outs.push(coord.submit_wait(req).unwrap().output.expect("stateless serving"));
+    }
+    let mut rng = SplitMix64::new(777);
+    let prefill = AttentionRequest::prefill(
+        10,
+        5,
+        seq,
+        d,
+        heads,
+        kv,
+        rng.normal_matrix(heads * seq, d),
+        rng.normal_matrix(kv * seq, d),
+        rng.normal_matrix(kv * seq, d),
+    )
+    .with_mask(MaskKind::Causal);
+    outs.push(coord.submit_wait(prefill).unwrap().output.expect("prefill"));
+    for step in 0..2u64 {
+        let dec = AttentionRequest::decode(
+            20 + step,
+            5,
+            step,
+            d,
+            heads,
+            kv,
+            rng.normal_matrix(heads, d),
+            rng.normal_matrix(kv, d),
+            rng.normal_matrix(kv, d),
+        );
+        outs.push(coord.submit_wait(dec).unwrap().output.expect("decode step"));
+    }
+    coord.submit_wait(AttentionRequest::close(99, 5)).unwrap();
+    outs
+}
+
+/// Acceptance: full tracing on the reference pool changes no served
+/// bits, and the recorded spans cover the whole request path with
+/// counts that reconcile against the serving metrics.
+#[test]
+fn tracing_changes_no_served_bits_on_the_reference_pool() {
+    let (seq, d) = (32usize, 16usize);
+    let off = Coordinator::start(cfg(BackendKind::Reference, TraceLevel::Off, 2)).unwrap();
+    let full = Coordinator::start(cfg(BackendKind::Reference, TraceLevel::Full, 2)).unwrap();
+
+    let want = run_workload(&off, seq, d);
+    let got = run_workload(&full, seq, d);
+    assert_eq!(want.len(), got.len());
+    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(bits(w), bits(g), "stage {i}: tracing changed served bits");
+    }
+
+    // The off pool recorded literally nothing.
+    assert!(!off.tracer.enabled());
+    for kind in EventKind::ALL {
+        assert_eq!(off.tracer.count(kind), 0, "{}", kind.name());
+    }
+    assert!(off.tracer.events().is_empty());
+
+    // The full pool's counts reconcile with the metrics: 6 dispatched
+    // requests (3 stateless + prefill + 2 decode; close is answered
+    // inline and never admitted to the shard path), one Shard and one
+    // Gather each, and one Dispatch + Execute per head shard.
+    let o = std::sync::atomic::Ordering::Relaxed;
+    let t = &full.tracer;
+    assert_eq!(t.count(EventKind::Admit), 6);
+    assert_eq!(t.count(EventKind::Shard), 6);
+    assert_eq!(t.count(EventKind::Gather), 6);
+    let shards = full.metrics.head_shards.load(o) as u64;
+    assert!(shards > 0);
+    assert_eq!(t.count(EventKind::Dispatch), shards);
+    assert_eq!(t.count(EventKind::Execute), shards);
+    assert_eq!(t.count(EventKind::KvHit), full.metrics.kv_hits.load(o));
+    assert_eq!(t.count(EventKind::KvMiss), full.metrics.kv_misses.load(o));
+    assert!(t.count(EventKind::KvHit) + t.count(EventKind::KvMiss) > 0, "decode touched KV");
+
+    // Retained events exist (Full level), and Admit events carry the
+    // sequence length as payload.  (Strict timestamp ordering is a
+    // single-thread property — asserted in the trace unit tests, not
+    // here where two device workers interleave.)
+    let evs = t.events();
+    assert!(!evs.is_empty());
+    assert!(
+        evs.iter().any(|e| e.kind == EventKind::Admit && e.payload == seq as u64),
+        "an Admit event must carry seq_len"
+    );
+    let s = t.summary();
+    assert!(s.contains("admit=6") && s.contains("execute="), "{s}");
+
+    off.shutdown();
+    full.shutdown();
+}
+
+/// Acceptance: the same bitwise contract on the cycle-accurate sim
+/// pool — plus the exact-sum attribution bridges: traced Execute
+/// payloads sum to the shard-cycle counter, and the per-response
+/// breakdowns are identical across trace levels (tracing must not move
+/// a single simulated cycle).
+#[test]
+fn tracing_changes_no_served_bits_on_the_sim_pool() {
+    let (seq, d, heads, kv) = (48usize, 16usize, 2usize, 1usize);
+    let off = Coordinator::start(cfg(BackendKind::Sim, TraceLevel::Off, 2)).unwrap();
+    let full = Coordinator::start(cfg(BackendKind::Sim, TraceLevel::Full, 2)).unwrap();
+
+    for (i, mask) in [MaskKind::None, MaskKind::Causal].into_iter().enumerate() {
+        let req = gqa_req(5000 + i as u64, 1 + i as u64, seq, d, heads, kv).with_mask(mask);
+        let want = off.submit_wait(req.clone()).unwrap();
+        let got = full.submit_wait(req).unwrap();
+        assert_eq!(
+            bits(&want.output.expect("untraced sim serving")),
+            bits(&got.output.expect("traced sim serving")),
+            "{mask:?}: tracing changed served bits"
+        );
+        assert_eq!(got.device_cycles, want.device_cycles, "{mask:?}");
+        assert_eq!(got.cycle_breakdown, want.cycle_breakdown, "{mask:?}");
+        let bd = got.cycle_breakdown.expect("sim responses carry attribution");
+        assert_eq!(bd.total(), got.device_cycles, "{mask:?}: {bd:?}");
+    }
+
+    // Every Execute event carries its shard's measured cycles; the ring
+    // held them all (few shards << RING_CAP), so the payloads sum
+    // exactly to the worker-side cycle counter.
+    let o = std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(full.tracer.overwritten(), 0);
+    let traced: u64 = full
+        .tracer
+        .events()
+        .iter()
+        .filter(|e| e.kind == EventKind::Execute)
+        .map(|e| e.payload)
+        .sum();
+    assert_eq!(traced, full.metrics.shard_cycles.load(o));
+
+    off.shutdown();
+    full.shutdown();
+}
+
+/// Satellite: the e2e metrics snapshot serializes through the
+/// dependency-free JSON writer and parses back with the documented
+/// schema — counters, per-op-kind latency (TTFT = prefill,
+/// TPOT = decode), queue depth, and per-device KV gauges.
+#[test]
+fn metrics_snapshot_round_trips_end_to_end() {
+    let coord = Coordinator::start(cfg(BackendKind::Reference, TraceLevel::Summary, 1)).unwrap();
+    let (seq, d, heads, kv) = (32usize, 16usize, 4usize, 2usize);
+    for i in 0..2u64 {
+        let req = gqa_req(300 + i, i, seq, d, heads, kv);
+        coord.submit_wait(req).unwrap().output.expect("stateless serving");
+    }
+    let mut rng = SplitMix64::new(31);
+    coord
+        .submit_wait(
+            AttentionRequest::prefill(
+                10,
+                5,
+                seq,
+                d,
+                heads,
+                kv,
+                rng.normal_matrix(heads * seq, d),
+                rng.normal_matrix(kv * seq, d),
+                rng.normal_matrix(kv * seq, d),
+            )
+            .with_mask(MaskKind::Causal),
+        )
+        .unwrap()
+        .output
+        .expect("prefill");
+    coord
+        .submit_wait(AttentionRequest::decode(
+            11,
+            5,
+            0,
+            d,
+            heads,
+            kv,
+            rng.normal_matrix(heads, d),
+            rng.normal_matrix(kv, d),
+            rng.normal_matrix(kv, d),
+        ))
+        .unwrap()
+        .output
+        .expect("decode");
+    coord.submit_wait(AttentionRequest::close(12, 5)).unwrap();
+
+    let snap = coord.metrics.snapshot();
+    let text = snap.to_json().pretty();
+    let back = fsa::telemetry::json::parse(&text).unwrap();
+
+    let c = back.get("counters").unwrap();
+    assert_eq!(c.get("submitted").unwrap().as_u64(), Some(5));
+    assert_eq!(c.get("completed").unwrap().as_u64(), Some(5));
+    assert_eq!(c.get("failed").unwrap().as_u64(), Some(0));
+    assert_eq!(c.get("latency_samples").unwrap().as_u64(), Some(5));
+    assert_eq!(c.get("unknown_dispatches").unwrap().as_u64(), Some(0));
+    assert_eq!(
+        c.get("reference_dispatches").unwrap().as_u64().unwrap(),
+        c.get("head_shards").unwrap().as_u64().unwrap(),
+        "every shard dispatched on the reference engine"
+    );
+
+    // TTFT is the prefill histogram, TPOT the decode one.
+    assert_eq!(back.get("ttft_ns").unwrap().get("count").unwrap().as_u64(), Some(1));
+    assert_eq!(back.get("tpot_ns").unwrap().get("count").unwrap().as_u64(), Some(1));
+    let kinds = back.get("op_kinds").unwrap();
+    assert_eq!(kinds.get("stateless").unwrap().get("count").unwrap().as_u64(), Some(2));
+    assert_eq!(kinds.get("close").unwrap().get("count").unwrap().as_u64(), Some(1));
+
+    // One queue-depth observation per envelope the batcher saw.
+    assert_eq!(back.get("queue_depth").unwrap().get("count").unwrap().as_u64(), Some(5));
+
+    // The single device gauged its KV cache at the configured capacity.
+    let kv_gauges = back.get("kv").unwrap().as_arr().unwrap();
+    assert_eq!(kv_gauges.len(), 1);
+    assert_eq!(kv_gauges[0].get("device").unwrap().as_u64(), Some(0));
+    assert_eq!(
+        kv_gauges[0].get("capacity_pages").unwrap().as_u64(),
+        Some(RunConfig::default().kv_cache_pages as u64)
+    );
+
+    // Summary-level tracing counted spans without retaining events.
+    assert!(coord.tracer.enabled());
+    assert!(coord.tracer.count(EventKind::Admit) > 0);
+    assert!(coord.tracer.events().is_empty());
+
+    coord.shutdown();
+}

@@ -177,6 +177,11 @@ fn run_stats_are_identical_between_vectorized_and_scalar_paths() {
         let (sv, iv) = run(false);
         let (ss, is) = run(true);
         assert_eq!(sv.cycles, ss.cycles, "L={l} {mask:?}");
+        // Cycle attribution (DESIGN.md §9) is part of the stats
+        // contract: both steppers must charge identical per-class
+        // counts, and the classes must sum exactly to the total.
+        assert_eq!(sv.breakdown, ss.breakdown, "L={l} {mask:?}");
+        assert_eq!(sv.breakdown.total(), sv.cycles, "L={l} {mask:?}: {:?}", sv.breakdown);
         assert_eq!(sv.matmul_macs, ss.matmul_macs, "L={l} {mask:?}");
         assert_eq!(sv.total_pe_ops, ss.total_pe_ops, "L={l} {mask:?}");
         assert_eq!(sv.dma_load_busy, ss.dma_load_busy, "L={l} {mask:?}");

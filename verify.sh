@@ -52,10 +52,22 @@ else
     echo "== rustfmt not installed; skipping format check =="
 fi
 
-# Optional stage: every bench target at smoke iterations (exit 0 check).
+# Optional stage: every bench target at smoke iterations (exit 0 check),
+# then regenerate the perf records and hold them to valid JSON with a
+# reader (python3) the hand-rolled writer shares no code with.
 if [ "${VERIFY_BENCH:-0}" = "1" ]; then
     echo "== make bench-smoke (VERIFY_BENCH=1) =="
     make bench-smoke
+    echo "== make bench-json (smoke) =="
+    FSA_BENCH_SMOKE=1 make bench-json
+    if command -v python3 >/dev/null 2>&1; then
+        echo "== python3 validates BENCH_*.json =="
+        for f in BENCH_*.json; do
+            python3 -c "import json,sys; json.load(open(sys.argv[1])); print(sys.argv[1] + ': valid JSON')" "$f"
+        done
+    else
+        echo "== python3 not installed; skipping JSON validation =="
+    fi
 fi
 
 echo "verify OK"
