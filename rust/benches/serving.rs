@@ -1,5 +1,5 @@
 //! Bench: the serving-path perf trajectory (DESIGN.md §9) — a live
-//! coordinator pool under open-loop Poisson arrivals, across the four
+//! coordinator pool under open-loop Poisson arrivals, across the five
 //! serving modes the repo cares about:
 //!
 //! * `stateless_mix` — mixed masks/shapes on the reference pool;
@@ -9,7 +9,11 @@
 //!   the per-instruction-class cycle attribution and asserting the
 //!   exact-sum contract across every response;
 //! * `seqpar` — `seq_shards = 2` chunked serving with gather-time
-//!   merges.
+//!   merges;
+//! * `continuous` — pipelined multi-session decode rounds under tight
+//!   token budgets, so the scheduler's continuous-batching waves (and
+//!   the `batch_occupancy` / wave-mix counters) are exercised
+//!   (DESIGN.md §10).
 //!
 //! Every scenario embeds its pool's full [`MetricsSnapshot`] JSON
 //! (counters, latency p50/p95/p99, TTFT/TPOT, queue depth, per-backend
@@ -301,6 +305,98 @@ fn seqpar(t: &mut Table) -> Json {
     j
 }
 
+/// Continuous batching (DESIGN.md §10): tight token budgets + a long
+/// group timeout, with each decode round submitted pipelined across
+/// all sessions so steps of many live sessions share dispatch waves.
+/// Asserts the scheduler-counter reconciliation invariant and that at
+/// least one wave actually mixed sessions — the continuous payoff the
+/// `batch_occupancy` / wave-mix telemetry in `BENCH_serving.json`
+/// tracks across PRs.
+fn continuous(t: &mut Table) -> Json {
+    let mut rc = cfg(BackendKind::Reference, 2, 1);
+    // ~1.3 ms at 1.5 GHz: long enough for a round's steps to assemble
+    // into shared waves, short enough to keep the bench quick.
+    rc.batch_timeout_cycles = 2_000_000;
+    rc.max_batch_prefill_tokens = 128; // two seq-64 prefills per wave
+    rc.max_batch_total_tokens = 4096;
+    rc.waiting_served_ratio = 1.2;
+    let coord = Coordinator::start(rc.clone()).unwrap();
+    let (sessions, steps) = if smoke() { (2usize, 4usize) } else { (4, 16) };
+    let (seq, d, heads, kv) = (64usize, 32usize, 2usize, 1usize);
+    let mut rng = SplitMix64::new(31);
+    let start = Instant::now();
+    // Prefills pipelined: the third and fourth defer behind the
+    // 128-token wave budget while the first two open.
+    let rxs: Vec<_> = (0..sessions as u64)
+        .map(|s| {
+            let prefill = AttentionRequest::prefill(
+                s,
+                s,
+                seq,
+                d,
+                heads,
+                kv,
+                rng.normal_matrix(heads * seq, d),
+                rng.normal_matrix(kv * seq, d),
+                rng.normal_matrix(kv * seq, d),
+            )
+            .with_mask(MaskKind::Causal);
+            coord.submit(prefill).expect("ingress accepts")
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().output.expect("prefill succeeds");
+    }
+    let mut id = 1000u64;
+    for step in 0..steps as u64 {
+        // One round: every live session's step in flight at once — the
+        // shards the scheduler batches into shared decode waves.
+        let rxs: Vec<_> = (0..sessions as u64)
+            .map(|s| {
+                id += 1;
+                let dec = AttentionRequest::decode(
+                    id,
+                    s,
+                    step,
+                    d,
+                    heads,
+                    kv,
+                    rng.normal_matrix(heads, d),
+                    rng.normal_matrix(kv, d),
+                    rng.normal_matrix(kv, d),
+                );
+                coord.submit(dec).expect("ingress accepts")
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().output.expect("decode step succeeds");
+        }
+    }
+    for s in 0..sessions as u64 {
+        id += 1;
+        coord.submit_wait(AttentionRequest::close(id, s)).unwrap();
+    }
+    let wall = start.elapsed();
+    let requests = sessions * (steps + 2);
+    let o = std::sync::atomic::Ordering::Relaxed;
+    let m = &coord.metrics;
+    assert_eq!(m.sched_queued.load(o), requests as u64, "scheduler saw every request");
+    assert_eq!(
+        m.sched_admitted.load(o),
+        m.sched_queued.load(o) - m.sched_rejected.load(o),
+        "admitted = queued - rejected"
+    );
+    assert_eq!(m.sched_rejected.load(o), sessions as u64, "closes are answered inline");
+    assert!(
+        m.multi_session_decode_waves.load(o) >= 1,
+        "continuous serving must batch decode steps of different sessions"
+    );
+    let j = scenario_json("continuous", &coord, &rc, wall, requests, requests);
+    table_row(t, "continuous", &coord, requests, wall);
+    coord.shutdown();
+    j
+}
+
 fn main() {
     let mut t = Table::new(&[
         "scenario", "reqs", "wall", "rps", "p50", "p95", "p99", "TTFT p50", "TPOT p50",
@@ -310,6 +406,7 @@ fn main() {
         decode_scenario(&mut t),
         sim_attrib(&mut t),
         seqpar(&mut t),
+        continuous(&mut t),
     ];
     println!(
         "serving — coordinator pools under Poisson/lockstep load \

@@ -340,6 +340,27 @@ pub struct RunConfig {
     pub max_batch: usize,
     pub batch_timeout_cycles: u64,
     pub queue_depth: usize,
+    /// Continuous-scheduler prefill budget (DESIGN.md §10): the most
+    /// prefill-class tokens (stateless + prefill `seq_len`s) one
+    /// scheduler wave admits.  A single request above this cap is
+    /// rejected outright with an error naming the knob; requests that
+    /// only exceed it in aggregate wait their turn.
+    pub max_batch_prefill_tokens: usize,
+    /// Continuous-scheduler total-token budget (DESIGN.md §10): live
+    /// session tokens (Σ open-session prefix lengths) plus this wave's
+    /// admitted prefill-class tokens must stay at or under this cap.
+    /// A request above it even against an empty pool is rejected;
+    /// otherwise it waits for sessions to close.  Decode steps and
+    /// closes are exempt — they shrink or bound live state.
+    pub max_batch_total_tokens: usize,
+    /// Continuous-scheduler prefill-vs-decode knob (DESIGN.md §10,
+    /// TGI's `waiting_served_ratio`): with decode traffic runnable, a
+    /// fresh prefill is admitted only when waiting prefill tokens ≥
+    /// this ratio × live session tokens (or the oldest prefill has
+    /// waited a full batch timeout — the starvation bound).  `0.0`
+    /// disables deferral: prefills are admitted whenever the token
+    /// budgets allow.
+    pub waiting_served_ratio: f64,
     pub artifacts_dir: String,
     /// Numerics engine for the device workers.
     pub backend: BackendKind,
@@ -418,6 +439,9 @@ impl Default for RunConfig {
             max_batch: 8,
             batch_timeout_cycles: 200_000,
             queue_depth: 1024,
+            max_batch_prefill_tokens: 8192,
+            max_batch_total_tokens: 65536,
+            waiting_served_ratio: 1.2,
             artifacts_dir: "artifacts".into(),
             backend: BackendKind::Pjrt,
             num_heads: 1,
@@ -462,6 +486,23 @@ impl RunConfig {
             self.freq_ghz
         );
         ensure!(
+            self.max_batch_prefill_tokens >= 1,
+            "max_batch_prefill_tokens must be >= 1, got {}",
+            self.max_batch_prefill_tokens
+        );
+        ensure!(
+            self.max_batch_total_tokens >= self.max_batch_prefill_tokens,
+            "max_batch_total_tokens ({}) must be >= max_batch_prefill_tokens ({}) \
+             — a wave the prefill budget admits must fit the total budget",
+            self.max_batch_total_tokens,
+            self.max_batch_prefill_tokens
+        );
+        ensure!(
+            self.waiting_served_ratio.is_finite() && self.waiting_served_ratio >= 0.0,
+            "waiting_served_ratio must be finite and >= 0, got {}",
+            self.waiting_served_ratio
+        );
+        ensure!(
             self.seq_shards >= 1,
             "seq_shards must be >= 1, got {}",
             self.seq_shards
@@ -498,6 +539,15 @@ impl RunConfig {
         }
         if let Some(v) = ini.get_parsed::<usize>(sec, "queue_depth")? {
             cfg.queue_depth = v;
+        }
+        if let Some(v) = ini.get_parsed::<usize>(sec, "max_batch_prefill_tokens")? {
+            cfg.max_batch_prefill_tokens = v;
+        }
+        if let Some(v) = ini.get_parsed::<usize>(sec, "max_batch_total_tokens")? {
+            cfg.max_batch_total_tokens = v;
+        }
+        if let Some(v) = ini.get_parsed::<f64>(sec, "waiting_served_ratio")? {
+            cfg.waiting_served_ratio = v;
         }
         if let Some(v) = ini.get(sec, "artifacts_dir") {
             cfg.artifacts_dir = v.to_string();
@@ -664,6 +714,47 @@ mod tests {
         );
         assert!(RunConfig::from_ini(&Ini::parse("[run]\narray_size = 48\n").unwrap()).is_err());
         assert!(RunConfig::from_ini(&Ini::parse("[run]\narray_size = 1\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_config_continuous_scheduler_knobs() {
+        // Satellite: the continuous-batching budgets are INI-plumbed
+        // and validated (DESIGN.md §10).
+        let text = "[run]\nmax_batch_prefill_tokens = 512\n\
+                    max_batch_total_tokens = 2048\nwaiting_served_ratio = 0.5\n";
+        let run = RunConfig::from_ini(&Ini::parse(text).unwrap()).unwrap();
+        assert_eq!(run.max_batch_prefill_tokens, 512);
+        assert_eq!(run.max_batch_total_tokens, 2048);
+        assert_eq!(run.waiting_served_ratio, 0.5);
+        // Defaults: TGI-shaped budgets, ratio 1.2.
+        let dflt = RunConfig::default();
+        assert_eq!(dflt.max_batch_prefill_tokens, 8192);
+        assert_eq!(dflt.max_batch_total_tokens, 65536);
+        assert_eq!(dflt.waiting_served_ratio, 1.2);
+        // Degenerate values are rejected at load: zero prefill budget,
+        // total below prefill, negative or non-finite ratio.
+        assert!(RunConfig::from_ini(
+            &Ini::parse("[run]\nmax_batch_prefill_tokens = 0\n").unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_ini(
+            &Ini::parse("[run]\nmax_batch_total_tokens = 100\n").unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_ini(
+            &Ini::parse("[run]\nwaiting_served_ratio = -1\n").unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_ini(
+            &Ini::parse("[run]\nwaiting_served_ratio = inf\n").unwrap()
+        )
+        .is_err());
+        // Ratio 0 is legal: it disables prefill deferral entirely.
+        let run = RunConfig::from_ini(
+            &Ini::parse("[run]\nwaiting_served_ratio = 0\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(run.waiting_served_ratio, 0.0);
     }
 
     #[test]

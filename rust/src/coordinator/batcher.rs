@@ -1,46 +1,33 @@
-//! Shard batcher: explodes ingress requests into per-head shards and
-//! groups compatible shards so a device runs one compiled executable
-//! per batch (amortizing PJRT dispatch), bounded by `max_batch` and a
-//! timeout so short queues still make progress.
+//! Admission gate of the serving path: pool capabilities and session
+//! lifecycle resolution, shared by the continuous scheduler.
 //!
-//! A multi-head request enters as one [`Envelope`] and leaves as
-//! `num_heads · live_chunks` [`ShardEnvelope`]s (the `(head, kv-range)`
-//! grid of DESIGN.md §7; one chunk per head on the legacy
-//! `seq_shards = 1` path); shards of *different* requests with the
-//! same `(seq_len, d, mask)` shape share batches, so head-sharding,
-//! sequence-sharding, and cross-request batching compose (masked and
-//! unmasked shards are different kernels and never share a batch).
+//! Historically this module owned the whole one-shot `Batcher` loop —
+//! ingress drain, shard grouping, and batch dispatch.  The continuous
+//! refactor (DESIGN.md §10) split that loop into
+//! [`super::queue`] (where requests wait) and [`super::scheduler`]
+//! (when they run); what remains here is the part whose behavior the
+//! bitwise one-shot-equivalence contract depends on staying put:
 //!
-//! The batcher is also the session lifecycle gate (DESIGN.md §5):
-//! prefill registers the session, decode validates step order and
-//! appends the new K/V row to the host tier *before* dispatch (so
-//! in-flight shards always find their prefix), and close is answered
-//! right here — sessions mean the batcher no longer ships full K/V
-//! copies per step: a decode envelope carries one row per KV head and
-//! the devices read the prefix from their page caches.
+//! * [`PoolCapabilities`] — what the pool's resolved backend can
+//!   execute, probed once at
+//!   [`Coordinator::start`](super::Coordinator::start);
+//! * [`admit_session_op`] — the session lifecycle gate (DESIGN.md §5):
+//!   prefill registers the session, decode validates step order and
+//!   appends the new K/V row to the host tier *before* dispatch (so
+//!   in-flight shards always find their prefix), close is answered
+//!   right here, and every capability violation is rejected before any
+//!   state mutates.
+//!
+//! Sessions mean the serving path ships no full K/V copies per step: a
+//! decode envelope carries one row per KV head and the devices read
+//! the prefix from their page caches.
 
-use std::sync::mpsc;
-use std::sync::Arc;
 use std::time::Duration;
-
-use crate::mask::MaskKind;
 
 use super::metrics::Metrics;
 use super::request::{AttentionResponse, Envelope, OpKind};
-use super::router::Router;
 use super::session::{SessionOp, SessionTable};
-use super::shard::{explode, ShardEnvelope};
-use super::trace::{EventKind, Tracer, NO_DEVICE, NO_HEAD, NO_SESSION};
-
-/// Batch compatibility key: shards sharing it may run in one device
-/// batch (same kernel shape) — sequence length, head dim, and mask
-/// *kind* (`std::mem::Discriminant`): masked and unmasked shards are
-/// different kernels, but two `PaddingKeys` requests with different
-/// `valid` prefixes share one (execution is per-shard with the shard's
-/// own mask, so batching them together is safe — keying on the exact
-/// `valid` would put every padded length in its own group and defeat
-/// cross-request batching on exactly the padded traffic).
-type GroupKey = (usize, usize, std::mem::Discriminant<MaskKind>);
+use super::trace::NO_SESSION;
 
 /// What the pool's resolved backend can execute, probed once at
 /// [`Coordinator::start`](super::Coordinator::start).  Incapable pools
@@ -85,166 +72,11 @@ impl PoolCapabilities {
     }
 }
 
-pub struct Batcher {
-    max_batch: usize,
-    /// Timeout expressed in simulated device cycles in the config; the
-    /// batcher converts at the *configured* clock (`RunConfig::freq_ghz`)
-    /// to a host duration.  (It used to hard-code the paper's 1.5 GHz,
-    /// silently flushing batches 1.5x early on a 1.0 GHz config.)
-    timeout: Duration,
-    /// Sequence-parallel shard count every admitted request explodes at
-    /// (`RunConfig::seq_shards`; 1 = legacy whole-sequence shards).
-    seq_shards: usize,
-    /// Resolved backend capabilities (see [`PoolCapabilities`]).
-    caps: PoolCapabilities,
-    /// Request-path event sink (DESIGN.md §9); disabled by default.
-    tracer: Arc<Tracer>,
-}
-
-impl Batcher {
-    pub fn new(
-        max_batch: usize,
-        timeout_cycles: u64,
-        freq_ghz: f64,
-        seq_shards: usize,
-        caps: PoolCapabilities,
-    ) -> Batcher {
-        assert!(freq_ghz > 0.0, "clock must be positive (RunConfig::validate)");
-        Batcher {
-            max_batch: max_batch.max(1),
-            timeout: Duration::from_nanos((timeout_cycles as f64 / freq_ghz) as u64),
-            seq_shards: seq_shards.max(1),
-            caps,
-            tracer: Tracer::off(),
-        }
-    }
-
-    /// Attach a request-path tracer (the coordinator threads its own;
-    /// directly constructed batchers keep the disabled default).
-    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Batcher {
-        self.tracer = tracer;
-        self
-    }
-
-    /// Main loop: drain the ingress channel, resolve session lifecycle
-    /// ops, explode each dispatched request into head shards, group
-    /// shards by `(seq_len, d, mask)`, and dispatch a group when it
-    /// reaches `max_batch` shards or its oldest member exceeds the
-    /// timeout.  Exits when the ingress disconnects.
-    pub fn run(
-        &self,
-        rx: mpsc::Receiver<Envelope>,
-        router: Router,
-        metrics: Arc<Metrics>,
-        sessions: Arc<SessionTable>,
-    ) {
-        let mut groups: Vec<(GroupKey, Vec<ShardEnvelope>)> = Vec::new();
-        let admit = |env: Envelope, groups: &mut Vec<(GroupKey, Vec<ShardEnvelope>)>| {
-            // Queue depth at admit: requests in flight right now
-            // (submitted minus completed; saturating because the two
-            // relaxed counters race by design).
-            let o = std::sync::atomic::Ordering::Relaxed;
-            metrics.record_queue_depth(
-                (metrics.submitted.load(o) as u64)
-                    .saturating_sub(metrics.completed.load(o) as u64),
-            );
-            let Some(env) =
-                admit_session_op(env, &sessions, &metrics, self.caps, self.seq_shards)
-            else {
-                return; // answered in place (close / lifecycle error)
-            };
-            let (id, session) = (env.req.id, op_session(&env.req.op));
-            self.tracer.record(
-                EventKind::Admit,
-                id,
-                session,
-                NO_HEAD,
-                NO_HEAD,
-                NO_DEVICE,
-                env.req.seq_len as u64,
-            );
-            let key = (env.req.seq_len, env.req.d, std::mem::discriminant(&env.req.mask));
-            let shards = explode(env, self.seq_shards);
-            self.tracer.record(
-                EventKind::Shard,
-                id,
-                session,
-                NO_HEAD,
-                NO_HEAD,
-                NO_DEVICE,
-                shards.len() as u64,
-            );
-            match groups.iter_mut().find(|(k, _)| *k == key) {
-                Some((_, g)) => g.extend(shards),
-                None => groups.push((key, shards)),
-            }
-        };
-        loop {
-            // Block briefly so timeouts fire even when idle.
-            let first = rx.recv_timeout(self.timeout.min(Duration::from_millis(5)));
-            match first {
-                Ok(env) => {
-                    admit(env, &mut groups);
-                    // Opportunistically drain whatever else is queued.
-                    while let Ok(env) = rx.try_recv() {
-                        admit(env, &mut groups);
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    // Flush everything and exit.
-                    for (_, g) in groups.drain(..) {
-                        for chunk in Self::chunks(g, self.max_batch) {
-                            metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            router.dispatch(chunk);
-                        }
-                    }
-                    return;
-                }
-            }
-
-            // Dispatch full groups and timed-out groups.
-            let now = std::time::Instant::now();
-            let mut i = 0;
-            while i < groups.len() {
-                let ready = groups[i].1.len() >= self.max_batch
-                    || groups[i]
-                        .1
-                        .first()
-                        .map(|e| now.duration_since(e.enqueued) >= self.timeout)
-                        .unwrap_or(false);
-                if ready {
-                    let (_, g) = groups.swap_remove(i);
-                    for chunk in Self::chunks(g, self.max_batch) {
-                        metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        router.dispatch(chunk);
-                    }
-                } else {
-                    i += 1;
-                }
-            }
-        }
-    }
-
-    fn chunks(mut g: Vec<ShardEnvelope>, max: usize) -> Vec<Vec<ShardEnvelope>> {
-        let mut out = Vec::new();
-        while g.len() > max {
-            let rest = g.split_off(max);
-            out.push(g);
-            g = rest;
-        }
-        if !g.is_empty() {
-            out.push(g);
-        }
-        out
-    }
-}
-
 /// Resolve a request's [`SessionOp`] against the session table.
 /// Returns the (possibly prefix-stamped) envelope when it should be
 /// dispatched to the pool, `None` when it was answered in place
 /// (close, or a lifecycle/capability error).
-fn admit_session_op(
+pub fn admit_session_op(
     mut env: Envelope,
     sessions: &SessionTable,
     metrics: &Metrics,
@@ -391,7 +223,7 @@ fn admit_session_op(
 
 /// Session id carried on an op, or [`NO_SESSION`] for stateless
 /// requests (trace-event coordinate).
-fn op_session(op: &SessionOp) -> u64 {
+pub(super) fn op_session(op: &SessionOp) -> u64 {
     match op {
         SessionOp::Stateless => NO_SESSION,
         SessionOp::Prefill { session }
@@ -402,7 +234,7 @@ fn op_session(op: &SessionOp) -> u64 {
 
 /// Answer an envelope without touching the device pool (lifecycle
 /// replies and validation errors).  A vanished client is not an error.
-fn reply_inline(env: Envelope, output: Result<Vec<f32>, String>, metrics: &Metrics) {
+pub(super) fn reply_inline(env: Envelope, output: Result<Vec<f32>, String>, metrics: &Metrics) {
     let ok = output.is_ok();
     let resp = AttentionResponse {
         id: env.req.id,
@@ -434,36 +266,8 @@ fn reply_inline(env: Envelope, output: Result<Vec<f32>, String>, metrics: &Metri
 mod tests {
     use super::*;
     use crate::coordinator::request::AttentionRequest;
-
-    fn envs(n: u64, seq: usize) -> Vec<ShardEnvelope> {
-        let d = 4;
-        (0..n)
-            .flat_map(|id| {
-                let m = vec![0.0f32; seq * d];
-                explode(
-                    Envelope {
-                        req: AttentionRequest::new(id, seq, d, m.clone(), m.clone(), m),
-                        reply: mpsc::channel().0,
-                        enqueued: std::time::Instant::now(),
-                    },
-                    1,
-                )
-            })
-            .collect()
-    }
-
-    /// Satellite: the batch timeout converts cycles at the configured
-    /// clock, not a hard-coded 1.5 GHz — 150k cycles are 100 µs at
-    /// 1.5 GHz but 150 µs at 1.0 GHz (the old code flushed 1.5× early).
-    #[test]
-    fn timeout_converts_at_the_configured_clock() {
-        let at = |ghz: f64| {
-            Batcher::new(4, 150_000, ghz, 1, PoolCapabilities::reference()).timeout
-        };
-        assert_eq!(at(1.5), Duration::from_nanos(100_000));
-        assert_eq!(at(1.0), Duration::from_nanos(150_000));
-        assert_eq!(at(3.0), Duration::from_nanos(50_000));
-    }
+    use crate::mask::MaskKind;
+    use std::sync::mpsc;
 
     #[test]
     fn seqpar_requests_need_a_partial_capable_pool() {
@@ -576,21 +380,6 @@ mod tests {
     }
 
     #[test]
-    fn group_keys_split_on_mask_kind_but_not_padding_valid() {
-        // Masked and unmasked shards are different kernels and must not
-        // share a batch; two key-padding requests padded to the same
-        // bucket from different original lengths MUST share one (else
-        // every padded length waits out its own batch timeout).
-        let key = |m: MaskKind| std::mem::discriminant(&m);
-        assert_ne!(key(MaskKind::None), key(MaskKind::Causal));
-        assert_ne!(key(MaskKind::None), key(MaskKind::PaddingKeys { valid: 7 }));
-        assert_eq!(
-            key(MaskKind::PaddingKeys { valid: 100 }),
-            key(MaskKind::PaddingKeys { valid: 101 })
-        );
-    }
-
-    #[test]
     fn masked_requests_rejected_on_mask_incapable_pools_before_any_state() {
         let sessions = SessionTable::new();
         let metrics = Metrics::new();
@@ -635,42 +424,6 @@ mod tests {
                 .is_some()
         );
         assert!(sessions.contains(7));
-    }
-
-    #[test]
-    fn chunking_respects_max_batch() {
-        let g = envs(10, 8);
-        let chunks = Batcher::chunks(g, 4);
-        let sizes: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
-        assert_eq!(sizes, vec![4, 4, 2]);
-        // No shard lost or duplicated.
-        let mut ids: Vec<u64> = chunks.iter().flatten().map(|e| e.shard.req.id).collect();
-        ids.sort_unstable();
-        assert_eq!(ids, (0..10).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn empty_group_produces_no_chunks() {
-        assert!(Batcher::chunks(vec![], 4).is_empty());
-    }
-
-    #[test]
-    fn multi_head_request_contributes_one_shard_per_head() {
-        let (seq, d, heads) = (8, 4, 4);
-        let q = vec![0.0f32; heads * seq * d];
-        let kv = vec![0.0f32; seq * d];
-        let shards = explode(
-            Envelope {
-                req: AttentionRequest::gqa(1, seq, d, heads, 1, q, kv.clone(), kv),
-                reply: mpsc::channel().0,
-                enqueued: std::time::Instant::now(),
-            },
-            1,
-        );
-        // One 4-head request + batch limit 3 => chunks of 3 + 1.
-        let sizes: Vec<usize> =
-            Batcher::chunks(shards, 3).iter().map(|c| c.len()).collect();
-        assert_eq!(sizes, vec![3, 1]);
     }
 
     #[test]

@@ -69,7 +69,7 @@ impl DeviceWorker {
 
     pub fn shutdown(mut self) {
         // Dropping our queue clone isn't enough (router holds clones);
-        // the batcher going away drops those, and the loop exits.
+        // the scheduler going away drops those, and the loop exits.
         drop(self.handle);
         if let Some(t) = self.thread.take() {
             let _ = t.join();
@@ -88,7 +88,7 @@ fn worker_loop(
 ) {
     let mut cfg = AccelConfig::builtin("fsa").expect("builtin fsa config");
     // Device timing runs at the configured clock (also used by the
-    // batcher's timeout conversion — one clock everywhere), and the
+    // scheduler's timeout conversion — one clock everywhere), and the
     // configured array dim (tiling for the reference backend, machine
     // size for the sim backend, tile census for pricing).
     cfg.freq_ghz = run_cfg.freq_ghz;

@@ -15,8 +15,13 @@
 //! SLO layer: every completion also lands its latency in the
 //! [`OpKind`]-indexed log-scale [`Histogram`] — prefill latency *is*
 //! time-to-first-token (TTFT), decode latency *is* time-per-output-token
-//! (TPOT) — the batcher records queue depth at every admit, and device
-//! workers gauge their KV-cache page occupancy.  [`Metrics::snapshot`]
+//! (TPOT) — the scheduler records queue depth both at every admit and
+//! once per working iteration (steady-state queueing, not just arrival
+//! bursts), batch occupancy at every dispatched wave, and device
+//! workers gauge their KV-cache page occupancy.  The `sched_*` and
+//! wave-mix counters expose the continuous serving loop's decisions
+//! (DESIGN.md §10): at quiescence
+//! `sched_admitted = sched_queued − sched_rejected`.  [`Metrics::snapshot`]
 //! freezes all of it into a [`MetricsSnapshot`] whose
 //! [`MetricsSnapshot::to_json`] is the `fsa serve --metrics-json` /
 //! `BENCH_serving.json` schema.
@@ -97,7 +102,7 @@ pub struct Metrics {
     pub completed: AtomicUsize,
     /// Requests whose gathered output was an error.
     pub failed: AtomicUsize,
-    /// Device batches dispatched by the batcher.
+    /// Device batches (waves) dispatched by the scheduler.
     pub batches: AtomicUsize,
     /// Shards executed by device workers (one per `(head, chunk)` grid
     /// cell).
@@ -125,6 +130,29 @@ pub struct Metrics {
     pub sessions_closed: AtomicUsize,
     /// Decode steps admitted (one per validated decode request).
     pub decode_steps: AtomicUsize,
+    /// Scheduler iterations that had work in hand (ingested something,
+    /// or held waiting entries / open shard groups).  Idle timeout
+    /// ticks are not counted — the queue-depth histogram reflects
+    /// steady-state queueing, not a flood of idle zeros.
+    pub sched_iterations: AtomicU64,
+    /// Envelopes ingested from the coordinator ingress into the wait
+    /// queue.
+    pub sched_queued: AtomicU64,
+    /// Envelopes admitted past the budget + lifecycle gates and
+    /// dispatched to the pool.
+    pub sched_admitted: AtomicU64,
+    /// Envelopes answered inline instead of dispatched: token-budget
+    /// rejections, capability/lifecycle rejections, and close replies.
+    /// At quiescence `sched_admitted = sched_queued − sched_rejected`.
+    pub sched_rejected: AtomicU64,
+    /// Dispatched waves containing at least one prefill-class
+    /// (stateless or prefill) shard.
+    pub prefill_waves: AtomicU64,
+    /// Dispatched waves containing at least one decode shard.
+    pub decode_waves: AtomicU64,
+    /// Decode-carrying waves whose decode shards span more than one
+    /// session — the continuous-batching payoff made countable.
+    pub multi_session_decode_waves: AtomicU64,
     /// Shards dispatched to the cycle-accurate sim backend
     /// (DESIGN.md §8).  The dispatch counters split `head_shards` by
     /// executing engine, so a mixed fleet (or a config mistake) is
@@ -158,8 +186,12 @@ pub struct Metrics {
     /// Per-[`OpKind`] completion latency histograms, indexed by
     /// [`OpKind::index`].  Prefill is TTFT, decode is TPOT.
     kind_latency: [Histogram; 4],
-    /// Queue depth observed at each admit (submitted − completed).
+    /// Queue depth observed at each admit and once per working
+    /// scheduler iteration (submitted − completed, resp. wait-queue
+    /// length).
     queue_depth: Histogram,
+    /// Shards per dispatched wave (batch occupancy).
+    batch_occupancy: Histogram,
     /// Per-device KV-cache page occupancy `(used, capacity)`, gauged by
     /// workers after each batch.
     kv_gauges: Mutex<BTreeMap<usize, (usize, usize)>>,
@@ -208,8 +240,10 @@ pub struct MetricsSnapshot {
     /// Per-[`OpKind`] completion latency (ns), [`OpKind::ALL`] order.
     /// `prefill` is TTFT, `decode` is TPOT.
     pub op_kinds: Vec<(&'static str, HistStats)>,
-    /// Queue depth at admit.
+    /// Queue depth at admit and per working scheduler iteration.
     pub queue_depth: HistStats,
+    /// Shards per dispatched wave.
+    pub batch_occupancy: HistStats,
     /// Per-device KV page occupancy `(device, used, capacity)`.
     pub kv_gauges: Vec<(usize, usize, usize)>,
 }
@@ -253,6 +287,7 @@ impl MetricsSnapshot {
             .set("ttft_ns", self.kind(OpKind::Prefill).to_json())
             .set("tpot_ns", self.kind(OpKind::Decode).to_json())
             .set("queue_depth", self.queue_depth.to_json())
+            .set("batch_occupancy", self.batch_occupancy.to_json())
             .set("kv", Json::Arr(kv));
         j
     }
@@ -289,10 +324,18 @@ impl Metrics {
         };
     }
 
-    /// Record the ingress queue depth seen at one admit (called by the
-    /// batcher; `submitted − completed` at that instant).
+    /// Record an ingress queue depth observation: the scheduler calls
+    /// this at every admit (`submitted − completed` at that instant)
+    /// AND once per working iteration with the wait-queue length, so
+    /// the histogram reflects steady-state queueing rather than
+    /// arrival bursts only.
     pub fn record_queue_depth(&self, depth: u64) {
         self.queue_depth.record(depth);
+    }
+
+    /// Record the shard count of one dispatched wave (batch occupancy).
+    pub fn record_batch_occupancy(&self, shards: u64) {
+        self.batch_occupancy.record(shards);
     }
 
     /// Gauge one device's KV-cache page occupancy (called by workers
@@ -370,6 +413,13 @@ impl Metrics {
             ("sessions_opened", self.sessions_opened.load(o) as u64),
             ("sessions_closed", self.sessions_closed.load(o) as u64),
             ("decode_steps", self.decode_steps.load(o) as u64),
+            ("sched_iterations", self.sched_iterations.load(o)),
+            ("sched_queued", self.sched_queued.load(o)),
+            ("sched_admitted", self.sched_admitted.load(o)),
+            ("sched_rejected", self.sched_rejected.load(o)),
+            ("prefill_waves", self.prefill_waves.load(o)),
+            ("decode_waves", self.decode_waves.load(o)),
+            ("multi_session_decode_waves", self.multi_session_decode_waves.load(o)),
             ("sim_dispatches", self.sim_dispatches.load(o) as u64),
             ("reference_dispatches", self.reference_dispatches.load(o) as u64),
             ("pjrt_dispatches", self.pjrt_dispatches.load(o) as u64),
@@ -410,6 +460,7 @@ impl Metrics {
                 .map(|k| (k.name(), HistStats::of(&self.kind_latency[k.index()])))
                 .collect(),
             queue_depth: HistStats::of(&self.queue_depth),
+            batch_occupancy: HistStats::of(&self.batch_occupancy),
             kv_gauges: super::lock(&self.kv_gauges)
                 .iter()
                 .map(|(&dev, &(used, cap))| (dev, used, cap))
@@ -425,6 +476,8 @@ impl Metrics {
              multi_head {} seqpar {} seq_chunk_shards {} merge_steps {} \
              device_cycles {} dispatch sim/ref/pjrt/unknown {}/{}/{}/{} \
              sessions {}/{} decode_steps {} \
+             sched iter/queued/admitted/rejected {}/{}/{}/{} \
+             waves prefill/decode/multi_session {}/{}/{} \
              kv hit/miss/evict {}/{}/{} latency p50 {:?} p95 {:?} max {:?} \
              drops {}",
             self.submitted.load(Ordering::Relaxed),
@@ -444,6 +497,13 @@ impl Metrics {
             self.sessions_opened.load(Ordering::Relaxed),
             self.sessions_closed.load(Ordering::Relaxed),
             self.decode_steps.load(Ordering::Relaxed),
+            self.sched_iterations.load(Ordering::Relaxed),
+            self.sched_queued.load(Ordering::Relaxed),
+            self.sched_admitted.load(Ordering::Relaxed),
+            self.sched_rejected.load(Ordering::Relaxed),
+            self.prefill_waves.load(Ordering::Relaxed),
+            self.decode_waves.load(Ordering::Relaxed),
+            self.multi_session_decode_waves.load(Ordering::Relaxed),
             self.kv_hits.load(Ordering::Relaxed),
             self.kv_misses.load(Ordering::Relaxed),
             self.kv_evictions.load(Ordering::Relaxed),
@@ -685,6 +745,10 @@ mod tests {
         m.record_dispatch("sim");
         m.record_dispatch("warp"); // unknown
         m.record_queue_depth(3);
+        m.record_batch_occupancy(4);
+        m.sched_queued.fetch_add(5, Ordering::Relaxed);
+        m.sched_admitted.fetch_add(4, Ordering::Relaxed);
+        m.sched_rejected.fetch_add(1, Ordering::Relaxed);
         m.set_kv_gauge(0, 7, 64);
         m.set_kv_gauge(2, 0, 64);
         let mut dec = resp(4, 2);
@@ -713,8 +777,15 @@ mod tests {
         assert_eq!(kinds.get("prefill").unwrap().get("count").unwrap().as_u64(), Some(0));
         assert_eq!(back.get("tpot_ns").unwrap().get("count").unwrap().as_u64(), Some(1));
         assert_eq!(back.get("ttft_ns").unwrap().get("count").unwrap().as_u64(), Some(0));
-        // Queue depth + KV gauges.
+        // Scheduler counters reconcile in the serialized form too.
+        assert_eq!(c.get("sched_queued").unwrap().as_u64(), Some(5));
+        assert_eq!(c.get("sched_admitted").unwrap().as_u64(), Some(4));
+        assert_eq!(c.get("sched_rejected").unwrap().as_u64(), Some(1));
+        // Queue depth + batch occupancy + KV gauges.
         assert_eq!(back.get("queue_depth").unwrap().get("count").unwrap().as_u64(), Some(1));
+        let occ = back.get("batch_occupancy").unwrap();
+        assert_eq!(occ.get("count").unwrap().as_u64(), Some(1));
+        assert!(occ.get("p50").unwrap().as_u64().unwrap() >= 4);
         let kv = back.get("kv").unwrap().as_arr().unwrap();
         assert_eq!(kv.len(), 2);
         assert_eq!(kv[0].get("device").unwrap().as_u64(), Some(0));
@@ -726,5 +797,38 @@ mod tests {
             pretty.get("counters").unwrap().get("submitted").unwrap().as_u64(),
             Some(5)
         );
+    }
+
+    /// Satellite: the continuous-scheduler counters and the
+    /// batch-occupancy histogram surface in both the snapshot and the
+    /// one-line summary.
+    #[test]
+    fn scheduler_counters_and_batch_occupancy() {
+        let m = Metrics::new();
+        let o = Ordering::Relaxed;
+        m.sched_iterations.fetch_add(7, o);
+        m.sched_queued.fetch_add(10, o);
+        m.sched_admitted.fetch_add(8, o);
+        m.sched_rejected.fetch_add(2, o);
+        m.prefill_waves.fetch_add(3, o);
+        m.decode_waves.fetch_add(4, o);
+        m.multi_session_decode_waves.fetch_add(2, o);
+        m.record_batch_occupancy(2);
+        m.record_batch_occupancy(6);
+        let snap = m.snapshot();
+        assert_eq!(snap.counter("sched_iterations"), Some(7));
+        assert_eq!(
+            snap.counter("sched_admitted").unwrap(),
+            snap.counter("sched_queued").unwrap() - snap.counter("sched_rejected").unwrap(),
+            "reconciliation: admitted = queued - rejected"
+        );
+        assert_eq!(snap.counter("prefill_waves"), Some(3));
+        assert_eq!(snap.counter("decode_waves"), Some(4));
+        assert_eq!(snap.counter("multi_session_decode_waves"), Some(2));
+        assert_eq!(snap.batch_occupancy.count, 2);
+        assert_eq!(snap.batch_occupancy.max, 6);
+        let s = m.summary();
+        assert!(s.contains("sched iter/queued/admitted/rejected 7/10/8/2"), "{s}");
+        assert!(s.contains("waves prefill/decode/multi_session 3/4/2"), "{s}");
     }
 }

@@ -1,18 +1,27 @@
 //! Serving coordinator: the L3 layer that puts FSA devices on a request
 //! path (vLLM-router-shaped, scoped to this paper's device).
 //!
-//! Pipeline: [`request`] types flow into the [`batcher`], which explodes
-//! each request into per-query-head [`shard`]s and groups compatible
-//! shards into device batches by padded sequence bucket; the [`router`]
-//! scatters shards across the pool — least-loaded placement with
-//! KV-head affinity so GQA heads sharing K/V land on one device; each
-//! [`device`] worker owns a numerics backend ([`crate::runtime`]: PJRT
-//! artifacts, or the in-crate reference twin) plus the
-//! [`crate::perfmodel`] for device-cycle accounting (simulated FSA
-//! latency at 1.5 GHz); the final shard's worker gathers the per-head
-//! outputs into one whole-operator [`request::AttentionResponse`].
-//! [`metrics`] aggregates throughput/latency at both request and shard
-//! granularity.
+//! Pipeline (DESIGN.md §10): [`request`] types flow into the persistent
+//! serving loop — a [`queue`] of waiting envelopes drained by the
+//! [`scheduler`], which runs continuously: new requests join a running
+//! batch, closed sessions leave it, decode steps from many live
+//! sessions share each dispatch wave, and fresh prefills are admitted
+//! under the token-budget/waiting-ratio policy. The [`batcher`] module
+//! keeps the admission gate ([`batcher::admit_session_op`] +
+//! [`batcher::PoolCapabilities`]): capability and lifecycle checks that
+//! must not change under continuous scheduling. Admitted requests
+//! explode into per-query-head [`shard`]s grouped into device batches
+//! by padded sequence bucket; the [`router`] scatters shards across the
+//! pool — least-loaded placement with KV-head affinity so GQA heads
+//! sharing K/V land on one device; each [`device`] worker owns a
+//! numerics backend ([`crate::runtime`]: PJRT artifacts, or the
+//! in-crate reference twin) plus the [`crate::perfmodel`] for
+//! device-cycle accounting (simulated FSA latency at 1.5 GHz); the
+//! final shard's worker gathers the per-head outputs into one
+//! whole-operator [`request::AttentionResponse`], answered on that
+//! request's own reply channel the moment it completes (per-request
+//! streaming — no end-of-batch barrier). [`metrics`] aggregates
+//! throughput/latency at both request and shard granularity.
 //!
 //! Decode-phase serving (DESIGN.md §5) rides the same path: [`session`]
 //! carries the prefill→decode→close lifecycle and the host-tier K/V,
@@ -28,8 +37,10 @@ pub mod batcher;
 pub mod device;
 pub mod kvcache;
 pub mod metrics;
+pub mod queue;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 pub mod session;
 pub mod shard;
 pub mod trace;
@@ -42,18 +53,18 @@ use anyhow::{anyhow, ensure};
 
 use crate::config::{AccelConfig, BackendKind, RunConfig};
 use crate::runtime::Backend;
-use batcher::Batcher;
 use device::DeviceWorker;
 use metrics::Metrics;
 use request::{AttentionRequest, AttentionResponse};
 use router::Router;
+use scheduler::{Scheduler, TokenBudget};
 use session::SessionTable;
 use trace::Tracer;
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
     ingress: mpsc::SyncSender<request::Envelope>,
-    batcher_handle: Option<std::thread::JoinHandle<()>>,
+    scheduler_handle: Option<std::thread::JoinHandle<()>>,
     workers: Vec<DeviceWorker>,
     pub metrics: Arc<Metrics>,
     /// Session registry (decode-phase serving): lifecycle state, the
@@ -66,7 +77,7 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Boot the batcher thread + device worker pool.
+    /// Boot the scheduler thread + device worker pool.
     ///
     /// Backend resolution ([`BackendKind`]): `Pjrt` (the default)
     /// requires the artifacts manifest up front and fails fast without
@@ -134,24 +145,29 @@ impl Coordinator {
         };
 
         let (ingress, ingress_rx) = mpsc::sync_channel(cfg.queue_depth);
-        let batcher = Batcher::new(
+        let scheduler = Scheduler::new(
             cfg.max_batch,
             cfg.batch_timeout_cycles,
             cfg.freq_ghz,
             cfg.seq_shards,
             caps,
+            TokenBudget {
+                max_prefill_tokens: cfg.max_batch_prefill_tokens,
+                max_total_tokens: cfg.max_batch_total_tokens,
+                waiting_served_ratio: cfg.waiting_served_ratio,
+            },
         )
         .with_tracer(tracer.clone());
         let m2 = metrics.clone();
         let s2 = sessions.clone();
-        let batcher_handle = std::thread::Builder::new()
-            .name("fsa-batcher".into())
-            .spawn(move || batcher.run(ingress_rx, router, m2, s2))
-            .expect("spawning batcher");
+        let scheduler_handle = std::thread::Builder::new()
+            .name("fsa-scheduler".into())
+            .spawn(move || scheduler.run(ingress_rx, router, m2, s2))
+            .expect("spawning scheduler");
 
         Ok(Coordinator {
             ingress,
-            batcher_handle: Some(batcher_handle),
+            scheduler_handle: Some(scheduler_handle),
             workers,
             metrics,
             sessions,
@@ -183,10 +199,12 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("worker dropped the request"))
     }
 
-    /// Graceful shutdown: drain the batcher, stop workers.
+    /// Graceful shutdown: drain the scheduler (flush policy — every
+    /// still-queued envelope is served or answered, DESIGN.md §10),
+    /// stop workers.
     pub fn shutdown(mut self) {
         drop(self.ingress);
-        if let Some(h) = self.batcher_handle.take() {
+        if let Some(h) = self.scheduler_handle.take() {
             let _ = h.join();
         }
         for w in self.workers.drain(..) {

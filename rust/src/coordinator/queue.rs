@@ -1,0 +1,442 @@
+//! The scheduler's waiting queue (DESIGN.md §10): FIFO of ingressed
+//! envelopes that have not yet been admitted onto the shard path.
+//!
+//! Continuous batching splits the old one-shot batcher in two — this
+//! module is the *where requests wait* half, [`super::scheduler`] is
+//! the *when they run* half.  The queue itself is policy-free storage
+//! plus one operation, [`WaitQueue::pop_wave`]: given the scheduler's
+//! per-iteration [`WavePolicy`] (token budgets and the prefill
+//! go/no-go decision), it pops the prefix of entries that may run now
+//! and returns a [`Verdict`] per popped entry.
+//!
+//! Ordering invariant — the heart of the bitwise one-shot-equivalence
+//! contract: entries of one *session* are never reordered.  When a
+//! prefill is deferred (budget or waiting-ratio), every later entry
+//! carrying the same session id is deferred with it, so a pipelined
+//! `prefill → decode → close` sequence reaches the admission gate in
+//! submission order no matter how many waves it waits.  Entries of
+//! *different* sessions (and stateless requests) may overtake a
+//! deferred prefill — their numerics are independent, so overtaking
+//! changes when they run, never what they compute.
+//!
+//! Budget semantics:
+//! * `max_prefill_tokens` caps Σ `seq_len` over the prefill-class
+//!   (stateless + prefill) entries admitted in ONE wave.  An entry
+//!   whose own `seq_len` exceeds the cap can never be scheduled and is
+//!   rejected outright, with an error naming the knob.
+//! * `max_total_tokens` caps live session tokens plus the
+//!   prefill-class tokens admitted this wave.  An entry that would
+//!   push past it *waits* (sessions close, tokens free up); one that
+//!   exceeds it even against an empty pool is rejected.
+//! * Decode and close entries are budget-exempt: their sessions were
+//!   paid for at prefill admission (sim pools additionally bound
+//!   decode growth via `sim_max_seq`, see [`super::batcher`]).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::Envelope;
+use super::session::SessionOp;
+
+/// Per-iteration admission inputs, computed by the scheduler from the
+/// configured [`RunConfig`](crate::config::RunConfig) budgets and the
+/// pool's live state.
+#[derive(Clone, Copy, Debug)]
+pub struct WavePolicy {
+    /// Σ `seq_len` over prefill-class entries admitted per wave
+    /// (`RunConfig::max_batch_prefill_tokens`).
+    pub max_prefill_tokens: usize,
+    /// Live session tokens + this wave's prefill-class tokens
+    /// (`RunConfig::max_batch_total_tokens`).
+    pub max_total_tokens: usize,
+    /// Tokens currently held by open sessions
+    /// ([`super::session::SessionTable::live_tokens`]).
+    pub live_tokens: usize,
+    /// The waiting-ratio decision (see
+    /// [`super::scheduler::allow_prefill`]): `false` defers every
+    /// prefill-class entry this wave so pending decode steps keep the
+    /// array to themselves.
+    pub allow_prefill: bool,
+}
+
+impl WavePolicy {
+    /// The shutdown-flush policy: admit everything still waiting.
+    /// Budgets are scheduling policy, not device capability — once the
+    /// ingress is gone nothing will ever free tokens, so holding
+    /// entries back would strand their clients instead of serving them.
+    pub fn flush() -> WavePolicy {
+        WavePolicy {
+            max_prefill_tokens: usize::MAX,
+            max_total_tokens: usize::MAX,
+            live_tokens: 0,
+            allow_prefill: true,
+        }
+    }
+}
+
+/// What [`WaitQueue::pop_wave`] decided for one popped entry.
+pub enum Verdict {
+    /// Run it this wave (next stop: the admission gate,
+    /// [`super::batcher::admit_session_op`]).
+    Admit(Envelope),
+    /// It can never fit the configured budgets: answer inline with
+    /// this error (which names the knob to raise).
+    Reject(Envelope, String),
+}
+
+/// Scheduling class of one queued envelope.
+enum Class {
+    /// Costs `tokens` of both budgets; `session` is `Some` for prefill
+    /// ops (whose deferral must block the session's later entries).
+    PrefillClass { tokens: usize, session: Option<u64> },
+    /// Budget-exempt, but ordered after any deferred entry of the same
+    /// session.
+    SessionFollowup { session: u64 },
+}
+
+fn class(env: &Envelope) -> Class {
+    match env.req.op {
+        SessionOp::Stateless => {
+            Class::PrefillClass { tokens: env.req.seq_len, session: None }
+        }
+        SessionOp::Prefill { session } => {
+            Class::PrefillClass { tokens: env.req.seq_len, session: Some(session) }
+        }
+        SessionOp::Decode { session, .. } | SessionOp::Close { session } => {
+            Class::SessionFollowup { session }
+        }
+    }
+}
+
+/// The waiting queue: submission-ordered envelopes not yet admitted.
+#[derive(Default)]
+pub struct WaitQueue {
+    entries: VecDeque<Envelope>,
+}
+
+impl WaitQueue {
+    pub fn new() -> WaitQueue {
+        WaitQueue::default()
+    }
+
+    /// Append one ingressed envelope (FIFO).
+    pub fn push(&mut self, env: Envelope) {
+        self.entries.push_back(env);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Σ `seq_len` over waiting prefill-class entries — the numerator
+    /// of the waiting-vs-served ratio.
+    pub fn waiting_prefill_tokens(&self) -> usize {
+        self.entries
+            .iter()
+            .filter_map(|e| match class(e) {
+                Class::PrefillClass { tokens, .. } => Some(tokens),
+                Class::SessionFollowup { .. } => None,
+            })
+            .sum()
+    }
+
+    /// Whether any *runnable* decode step is waiting — the case where
+    /// admitting a fresh prefill delays live sessions' TPOT.  A decode
+    /// queued behind its own session's not-yet-admitted prefill is not
+    /// runnable: counting it would let it suppress the very prefill it
+    /// waits on (a livelock the timeout bound would otherwise have to
+    /// break).
+    pub fn has_runnable_decode(&self) -> bool {
+        let mut pending_prefill: Vec<u64> = Vec::new();
+        for e in &self.entries {
+            match e.req.op {
+                SessionOp::Prefill { session } => pending_prefill.push(session),
+                SessionOp::Decode { session, .. }
+                    if !pending_prefill.contains(&session) =>
+                {
+                    return true;
+                }
+                _ => {}
+            }
+        }
+        false
+    }
+
+    /// How long the oldest waiting prefill-class entry has been queued
+    /// (`None` when none is waiting) — the starvation bound's input.
+    pub fn oldest_prefill_wait(&self, now: Instant) -> Option<Duration> {
+        self.entries
+            .iter()
+            .filter(|e| matches!(class(e), Class::PrefillClass { .. }))
+            .map(|e| now.saturating_duration_since(e.enqueued))
+            .max()
+    }
+
+    /// Pop this wave's entries under `policy`.  Verdicts come back in
+    /// queue order; deferred entries stay queued in their original
+    /// relative order.  See the module docs for the deferral/rejection
+    /// semantics and the per-session ordering invariant.
+    pub fn pop_wave(&mut self, policy: &WavePolicy) -> Vec<Verdict> {
+        let mut wave = Vec::new();
+        let mut kept: VecDeque<Envelope> = VecDeque::new();
+        // Sessions with a deferred entry ahead: everything later for
+        // them must wait too (tiny per-wave set; linear scan is fine).
+        let mut blocked: Vec<u64> = Vec::new();
+        let mut spent = 0usize; // prefill-class tokens admitted this wave
+        while let Some(env) = self.entries.pop_front() {
+            match class(&env) {
+                Class::SessionFollowup { session } => {
+                    if blocked.contains(&session) {
+                        kept.push_back(env);
+                    } else {
+                        wave.push(Verdict::Admit(env));
+                    }
+                }
+                Class::PrefillClass { tokens, session } => {
+                    if session.map(|s| blocked.contains(&s)).unwrap_or(false) {
+                        kept.push_back(env);
+                        continue;
+                    }
+                    if tokens > policy.max_prefill_tokens {
+                        wave.push(Verdict::Reject(
+                            env,
+                            format!(
+                                "request of {tokens} tokens exceeds \
+                                 max_batch_prefill_tokens ({}): it can never be \
+                                 scheduled; raise `[run] max_batch_prefill_tokens` \
+                                 / `--max-batch-prefill-tokens` (DESIGN.md §10)",
+                                policy.max_prefill_tokens
+                            ),
+                        ));
+                    } else if tokens > policy.max_total_tokens {
+                        wave.push(Verdict::Reject(
+                            env,
+                            format!(
+                                "request of {tokens} tokens exceeds \
+                                 max_batch_total_tokens ({}) even against an idle \
+                                 pool; raise `[run] max_batch_total_tokens` / \
+                                 `--max-batch-total-tokens` (DESIGN.md §10)",
+                                policy.max_total_tokens
+                            ),
+                        ));
+                    } else if !policy.allow_prefill
+                        || spent + tokens > policy.max_prefill_tokens
+                        || policy.live_tokens + spent + tokens > policy.max_total_tokens
+                    {
+                        // Deferred: fits the knobs in principle, just
+                        // not this wave.
+                        if let Some(s) = session {
+                            blocked.push(s);
+                        }
+                        kept.push_back(env);
+                    } else {
+                        spent += tokens;
+                        wave.push(Verdict::Admit(env));
+                    }
+                }
+            }
+        }
+        self.entries = kept;
+        wave
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::AttentionRequest;
+    use std::sync::mpsc;
+
+    fn env(req: AttentionRequest) -> Envelope {
+        Envelope { req, reply: mpsc::channel().0, enqueued: Instant::now() }
+    }
+
+    fn stateless(id: u64, seq: usize) -> Envelope {
+        let d = 2;
+        let m = vec![0.0f32; seq * d];
+        env(AttentionRequest::new(id, seq, d, m.clone(), m.clone(), m))
+    }
+
+    fn prefill(id: u64, session: u64, seq: usize) -> Envelope {
+        let d = 2;
+        let m = vec![0.0f32; seq * d];
+        env(AttentionRequest::prefill(id, session, seq, d, 1, 1, m.clone(), m.clone(), m))
+    }
+
+    fn decode(id: u64, session: u64, step: u64) -> Envelope {
+        let d = 2;
+        env(AttentionRequest::decode(
+            id, session, step, d, 1, 1, vec![0.0; d], vec![0.0; d], vec![0.0; d],
+        ))
+    }
+
+    fn policy(prefill: usize, total: usize, live: usize, allow: bool) -> WavePolicy {
+        WavePolicy {
+            max_prefill_tokens: prefill,
+            max_total_tokens: total,
+            live_tokens: live,
+            allow_prefill: allow,
+        }
+    }
+
+    fn ids(wave: &[Verdict]) -> Vec<(u64, bool)> {
+        wave.iter()
+            .map(|v| match v {
+                Verdict::Admit(e) => (e.req.id, true),
+                Verdict::Reject(e, _) => (e.req.id, false),
+            })
+            .collect()
+    }
+
+    /// Satellite (admission boundaries): a request exactly at the
+    /// prefill cap is admitted; one token over is rejected with an
+    /// error naming the knob; at budget zero everything prefill-class
+    /// is rejected.
+    #[test]
+    fn prefill_budget_at_cap_over_cap_and_zero() {
+        // Exactly at cap: admitted.
+        let mut q = WaitQueue::new();
+        q.push(stateless(1, 32));
+        let wave = q.pop_wave(&policy(32, 1000, 0, true));
+        assert_eq!(ids(&wave), vec![(1, true)]);
+        assert!(q.is_empty());
+
+        // One over: rejected outright (it can never fit), and the
+        // error names the knob.
+        let mut q = WaitQueue::new();
+        q.push(stateless(2, 33));
+        let wave = q.pop_wave(&policy(32, 1000, 0, true));
+        assert_eq!(ids(&wave), vec![(2, false)]);
+        match &wave[0] {
+            Verdict::Reject(_, msg) => {
+                assert!(msg.contains("max_batch_prefill_tokens"), "{msg}");
+                assert!(msg.contains("33"), "{msg}");
+            }
+            Verdict::Admit(_) => panic!("must be rejected"),
+        }
+
+        // Zero budget: every prefill-class entry is rejected.
+        let mut q = WaitQueue::new();
+        q.push(stateless(3, 1));
+        q.push(prefill(4, 7, 8));
+        let wave = q.pop_wave(&policy(0, 1000, 0, true));
+        assert_eq!(ids(&wave), vec![(3, false), (4, false)]);
+    }
+
+    /// Two requests that fit individually but not together: the first
+    /// is admitted, the second waits for the next wave (deferred, not
+    /// rejected).
+    #[test]
+    fn over_cap_in_aggregate_defers_the_second_entry() {
+        let mut q = WaitQueue::new();
+        q.push(stateless(1, 20));
+        q.push(stateless(2, 20));
+        let wave = q.pop_wave(&policy(32, 1000, 0, true));
+        assert_eq!(ids(&wave), vec![(1, true)]);
+        assert_eq!(q.len(), 1);
+        // Next wave (tokens freed): the deferred entry is admitted.
+        let wave = q.pop_wave(&policy(32, 1000, 0, true));
+        assert_eq!(ids(&wave), vec![(2, true)]);
+        assert!(q.is_empty());
+    }
+
+    /// Satellite (admission boundaries): the total-token budget counts
+    /// live session tokens — at-cap admits, one over defers, and an
+    /// entry larger than the whole budget is rejected.
+    #[test]
+    fn total_budget_counts_live_session_tokens() {
+        // 60 live + 4 = 64 == cap: admitted.
+        let mut q = WaitQueue::new();
+        q.push(stateless(1, 4));
+        assert_eq!(ids(&q.pop_wave(&policy(32, 64, 60, true))), vec![(1, true)]);
+
+        // 60 live + 5 = 65 > cap: deferred until sessions close.
+        let mut q = WaitQueue::new();
+        q.push(stateless(2, 5));
+        assert!(q.pop_wave(&policy(32, 64, 60, true)).is_empty());
+        assert_eq!(q.len(), 1);
+        // Sessions closed (live tokens freed): now admitted.
+        assert_eq!(ids(&q.pop_wave(&policy(32, 64, 0, true))), vec![(2, true)]);
+
+        // Larger than the whole budget: rejected, naming the knob.
+        let mut q = WaitQueue::new();
+        q.push(stateless(3, 100));
+        let wave = q.pop_wave(&policy(200, 64, 0, true));
+        assert_eq!(ids(&wave), vec![(3, false)]);
+        match &wave[0] {
+            Verdict::Reject(_, msg) => {
+                assert!(msg.contains("max_batch_total_tokens"), "{msg}")
+            }
+            Verdict::Admit(_) => panic!("must be rejected"),
+        }
+    }
+
+    /// The per-session ordering invariant: a deferred prefill blocks
+    /// the session's later decode, while other sessions' decode steps
+    /// overtake freely (their numerics are independent).
+    #[test]
+    fn deferred_prefill_blocks_its_sessions_followups_only() {
+        let mut q = WaitQueue::new();
+        q.push(prefill(1, 7, 16)); // deferred below (allow_prefill = false)
+        q.push(decode(2, 7, 0)); // same session: must wait behind it
+        q.push(decode(3, 9, 4)); // other session: admitted this wave
+        let wave = q.pop_wave(&policy(32, 1000, 10, false));
+        assert_eq!(ids(&wave), vec![(3, true)]);
+        assert_eq!(q.len(), 2, "prefill and its follow-up stay queued");
+        // Prefill allowed again: the pair drains in submission order.
+        let wave = q.pop_wave(&policy(32, 1000, 10, true));
+        assert_eq!(ids(&wave), vec![(1, true), (2, true)]);
+        assert!(q.is_empty());
+    }
+
+    /// `allow_prefill = false` (the waiting-ratio gate) defers every
+    /// prefill-class entry, stateless included, without rejecting any.
+    #[test]
+    fn ratio_gate_defers_prefill_class_without_rejecting() {
+        let mut q = WaitQueue::new();
+        q.push(stateless(1, 8));
+        q.push(prefill(2, 5, 8));
+        assert!(q.pop_wave(&policy(32, 1000, 10, false)).is_empty());
+        assert_eq!(q.len(), 2);
+        let wave = q.pop_wave(&policy(32, 1000, 10, true));
+        assert_eq!(ids(&wave), vec![(1, true), (2, true)]);
+    }
+
+    /// The shutdown-flush policy admits everything, so no client is
+    /// stranded waiting on tokens that will never free.
+    #[test]
+    fn flush_policy_admits_everything() {
+        let mut q = WaitQueue::new();
+        q.push(stateless(1, 1_000_000));
+        q.push(prefill(2, 7, 64));
+        q.push(decode(3, 7, 0));
+        let wave = q.pop_wave(&WavePolicy::flush());
+        assert_eq!(ids(&wave), vec![(1, true), (2, true), (3, true)]);
+        assert!(q.is_empty());
+    }
+
+    /// Queue introspection feeding the scheduler's ratio decision.
+    #[test]
+    fn introspection_counts_prefill_tokens_and_runnable_decodes() {
+        let mut q = WaitQueue::new();
+        assert_eq!(q.waiting_prefill_tokens(), 0);
+        assert!(!q.has_runnable_decode());
+        assert!(q.oldest_prefill_wait(Instant::now()).is_none());
+        q.push(stateless(1, 8));
+        q.push(prefill(2, 7, 16));
+        q.push(decode(3, 7, 0));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.waiting_prefill_tokens(), 24);
+        // Session 7's decode waits on session 7's queued prefill: it is
+        // not runnable, so it must not suppress prefill admission.
+        assert!(!q.has_runnable_decode());
+        // A decode of an already-live session IS runnable.
+        q.push(decode(4, 9, 2));
+        assert!(q.has_runnable_decode());
+        assert!(q.oldest_prefill_wait(Instant::now()).is_some());
+    }
+}

@@ -96,23 +96,24 @@ pub struct AttentionRequest {
     /// `Stateless` for ordinary one-shot operators.
     pub op: SessionOp,
     /// Decode only: the prefix length (tokens attended over, including
-    /// this step's appended row).  Stamped by the batcher after session
-    /// validation; 0 elsewhere.
+    /// this step's appended row).  Stamped by the admission gate after
+    /// session validation; 0 elsewhere.
     pub prefix_len: usize,
     /// Decode only: the session's *prefill* length — the fixed basis of
     /// the sequence-parallel chunk grid, so split-KV decode keeps the
     /// same chunk boundaries across steps while the last chunk grows
     /// ([`crate::schedule::chunk_ranges`], DESIGN.md §7).  Stamped by
-    /// the batcher after session validation; 0 elsewhere.
+    /// the admission gate after session validation; 0 elsewhere.
     pub prefill_len: usize,
     /// Prefill/decode only: the session's incarnation epoch (ids may be
     /// reused after close; device caches match streams on it).  Stamped
-    /// by the batcher after session validation; 0 elsewhere.
+    /// by the admission gate after session validation; 0 elsewhere.
     pub epoch: u64,
     /// Attention mask of this operator (DESIGN.md §6): `Causal` for
     /// transformer prefill, `PaddingKeys` stamped by [`Self::padded`]
     /// so bucket padding is exact.  Decode steps take no mask (the step
-    /// row attends the whole prefix); the batcher rejects masked ones.
+    /// row attends the whole prefix); the admission gate rejects masked
+    /// ones.
     pub mask: MaskKind,
 }
 
@@ -507,7 +508,7 @@ mod tests {
         );
         assert_eq!(dec.op, SessionOp::Decode { session: 77, step: 0 });
         assert_eq!(dec.seq_len, 1);
-        // Before the batcher stamps the prefix, flops fall back to the
+        // Before the admission gate stamps the prefix, flops fall back to the
         // one-token shape; after stamping they cover the prefix.
         assert_eq!(dec.flops(), 2 * decode_attention_flops(1, d));
         dec.prefix_len = 3;

@@ -192,7 +192,7 @@ fn session_key(group: &Batch) -> Option<(SessionId, usize, usize)> {
 
 /// Split a batch into contiguous groups of equal affinity key,
 /// preserving first-seen order (shards of one request arrive adjacent
-/// from the batcher, so this is a single pass, no map).
+/// from the scheduler, so this is a single pass, no map).
 fn partition_by_affinity(batch: Batch) -> Vec<Batch> {
     let mut groups: Vec<((u64, usize, usize), Batch)> = Vec::new();
     for env in batch {

@@ -1,0 +1,510 @@
+//! The continuous-batching serving loop (DESIGN.md §10): a persistent
+//! scheduler that drains the ingress into the [`super::queue::WaitQueue`],
+//! decides per iteration what may run (token budgets + the
+//! waiting-vs-served ratio), and assembles dispatch waves in which
+//! decode steps of many live sessions — and compatible prefill-class
+//! shards — share device batches.
+//!
+//! This is the TGI `Infer`/`Queue`/batching-task topology on the
+//! repo's threads-and-channels substrate: requests *join* a running
+//! batch as they arrive, finished/closed sessions *leave* it, and a
+//! fresh prefill is admitted only when [`allow_prefill`] says the
+//! waiting side has earned its slot.  The one-shot `Batcher` this
+//! replaces admitted everything immediately; its admission gate
+//! ([`super::batcher::admit_session_op`]) and grouping rules live on
+//! here unchanged, which is why the serving contract holds:
+//!
+//! **Bitwise one-shot equivalence.**  Scheduling decides only *when*
+//! an envelope reaches the admission gate, never *what* it computes.
+//! The wait queue preserves per-session order (a deferred prefill
+//! blocks its session's later entries, [`super::queue`]), the gate
+//! stamps the same epochs/prefixes it always did, and each request's
+//! shard grid, gather merge order, and numerics are untouched — so
+//! every response is bitwise identical to the one-shot path's, pinned
+//! by `rust/tests/coordinator_continuous.rs` across backends, masks,
+//! and shard counts.
+//!
+//! Responses stream per request, as they always have: each envelope
+//! carries its own reply channel, answered the moment its last shard
+//! gathers — a decode step's client is answered mid-run while other
+//! sessions' steps are still in flight, not at end-of-batch.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::mask::MaskKind;
+
+use super::batcher::{admit_session_op, op_session, reply_inline, PoolCapabilities};
+use super::metrics::Metrics;
+use super::queue::{Verdict, WaitQueue, WavePolicy};
+use super::request::Envelope;
+use super::router::Router;
+use super::session::SessionTable;
+use super::shard::{explode, ShardCtx, ShardEnvelope};
+use super::trace::{EventKind, Tracer, NO_DEVICE, NO_HEAD};
+
+/// Batch compatibility key: shards sharing it may run in one device
+/// batch (same kernel shape) — sequence length, head dim, and mask
+/// *kind* (`std::mem::Discriminant`): masked and unmasked shards are
+/// different kernels, but two `PaddingKeys` requests with different
+/// `valid` prefixes share one (execution is per-shard with the shard's
+/// own mask, so batching them together is safe — keying on the exact
+/// `valid` would put every padded length in its own group and defeat
+/// cross-request batching on exactly the padded traffic).  Decode
+/// shards carry `seq_len = 1` and no mask, so steps of *different
+/// sessions* share a key — the continuous-batching payoff.
+type GroupKey = (usize, usize, std::mem::Discriminant<MaskKind>);
+
+/// The scheduler's token-budget knobs, from
+/// [`RunConfig`](crate::config::RunConfig) (INI `[run]` keys /
+/// `fsa serve` flags of the same names).
+#[derive(Clone, Copy, Debug)]
+pub struct TokenBudget {
+    /// `max_batch_prefill_tokens`: Σ `seq_len` over prefill-class
+    /// (stateless + prefill) entries admitted per wave.
+    pub max_prefill_tokens: usize,
+    /// `max_batch_total_tokens`: live session tokens + this wave's
+    /// prefill-class tokens.
+    pub max_total_tokens: usize,
+    /// `waiting_served_ratio`: admit a fresh prefill over pending
+    /// decode work once waiting prefill tokens ≥ ratio × live tokens.
+    pub waiting_served_ratio: f64,
+}
+
+impl TokenBudget {
+    /// Budgets that never defer or reject (unit tests and callers that
+    /// only want the grouping behavior).
+    pub fn unlimited() -> TokenBudget {
+        TokenBudget {
+            max_prefill_tokens: usize::MAX,
+            max_total_tokens: usize::MAX,
+            waiting_served_ratio: 0.0,
+        }
+    }
+}
+
+/// The waiting-vs-served prefill decision (TGI's `max_waiting_tokens`
+/// knob, expressed as a ratio): should this wave admit prefill-class
+/// work, or keep the array to pending decode steps?
+///
+/// Admit when any of:
+/// * no runnable decode step is waiting — there is nothing to starve;
+/// * no session tokens are live — an idle pool must never hold work
+///   back (this is what keeps sequential `submit_wait` clients
+///   prompt);
+/// * the oldest waiting prefill-class entry has aged past the batch
+///   timeout — the starvation bound that makes deferral time-bounded;
+/// * waiting prefill tokens ≥ `ratio` × live tokens — the waiting side
+///   has earned its slot.
+///
+/// Otherwise defer: pending decode steps keep their TPOT.
+pub fn allow_prefill(
+    waiting_prefill_tokens: usize,
+    live_tokens: usize,
+    decode_pending: bool,
+    oldest_wait: Option<Duration>,
+    timeout: Duration,
+    ratio: f64,
+) -> bool {
+    if !decode_pending || live_tokens == 0 {
+        return true;
+    }
+    if oldest_wait.map(|w| w >= timeout).unwrap_or(false) {
+        return true;
+    }
+    waiting_prefill_tokens as f64 >= ratio * live_tokens as f64
+}
+
+/// The persistent serving loop: one per coordinator, owning the wait
+/// queue and the open (not-yet-dispatched) shard groups.
+pub struct Scheduler {
+    max_batch: usize,
+    /// Timeout expressed in simulated device cycles in the config; the
+    /// scheduler converts at the *configured* clock
+    /// (`RunConfig::freq_ghz`) to a host duration.  It bounds both
+    /// group dispatch (a non-full group flushes once its oldest shard
+    /// ages past it) and prefill deferral ([`allow_prefill`]).
+    timeout: Duration,
+    /// Sequence-parallel shard count every admitted request explodes at
+    /// (`RunConfig::seq_shards`; 1 = legacy whole-sequence shards).
+    seq_shards: usize,
+    /// Resolved backend capabilities
+    /// ([`super::batcher::PoolCapabilities`]).
+    caps: PoolCapabilities,
+    /// Token budgets + ratio knob (DESIGN.md §10).
+    budget: TokenBudget,
+    /// Request-path event sink (DESIGN.md §9); disabled by default.
+    tracer: Arc<Tracer>,
+}
+
+impl Scheduler {
+    pub fn new(
+        max_batch: usize,
+        timeout_cycles: u64,
+        freq_ghz: f64,
+        seq_shards: usize,
+        caps: PoolCapabilities,
+        budget: TokenBudget,
+    ) -> Scheduler {
+        assert!(freq_ghz > 0.0, "clock must be positive (RunConfig::validate)");
+        Scheduler {
+            max_batch: max_batch.max(1),
+            timeout: Duration::from_nanos((timeout_cycles as f64 / freq_ghz) as u64),
+            seq_shards: seq_shards.max(1),
+            caps,
+            budget,
+            tracer: Tracer::off(),
+        }
+    }
+
+    /// Attach a request-path tracer (the coordinator threads its own;
+    /// directly constructed schedulers keep the disabled default).
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Scheduler {
+        self.tracer = tracer;
+        self
+    }
+
+    /// The serving loop.  Each iteration: (1) ingest whatever the
+    /// ingress holds into the wait queue, (2) compute this wave's
+    /// [`WavePolicy`] from the budgets and the pool's live tokens,
+    /// (3) pop the admissible wave, push each admitted envelope through
+    /// the admission gate and into shard groups, answer rejects inline,
+    /// (4) dispatch groups that are full or whose oldest shard timed
+    /// out.  Exits when the ingress disconnects, after flushing the
+    /// queue under [`WavePolicy::flush`] (budgets are scheduling
+    /// policy — with no ingress left, holding work back would strand
+    /// clients, so everything still queued is admitted in order) and
+    /// dispatching every open group.
+    pub fn run(
+        &self,
+        rx: mpsc::Receiver<Envelope>,
+        router: Router,
+        metrics: Arc<Metrics>,
+        sessions: Arc<SessionTable>,
+    ) {
+        let mut wait = WaitQueue::new();
+        let mut groups: Vec<(GroupKey, Vec<ShardEnvelope>)> = Vec::new();
+        loop {
+            // Block briefly so group timeouts and deferred-entry
+            // retries fire even when the ingress is idle.
+            let mut disconnected = false;
+            let mut ingested = 0usize;
+            match rx.recv_timeout(self.timeout.min(Duration::from_millis(5))) {
+                Ok(env) => {
+                    self.ingest(env, &mut wait, &metrics);
+                    ingested += 1;
+                    // Opportunistically drain whatever else is queued.
+                    while let Ok(env) = rx.try_recv() {
+                        self.ingest(env, &mut wait, &metrics);
+                        ingested += 1;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+
+            // Iteration accounting: only iterations with work in sight
+            // count (and sample queue depth) — idle 5 ms ticks would
+            // otherwise flood the histogram with zeros and make
+            // `sched_iterations` a wall-clock proxy instead of a
+            // scheduling-decision count.
+            if ingested > 0 || !wait.is_empty() || !groups.is_empty() {
+                metrics.sched_iterations.fetch_add(1, Ordering::Relaxed);
+                // Steady-state queueing, sampled once per working
+                // iteration (the admit-time sample in `resolve` only
+                // sees arrival bursts).
+                metrics.record_queue_depth(wait.len() as u64);
+            }
+
+            let policy = if disconnected {
+                WavePolicy::flush()
+            } else {
+                let live_tokens = sessions.live_tokens();
+                WavePolicy {
+                    max_prefill_tokens: self.budget.max_prefill_tokens,
+                    max_total_tokens: self.budget.max_total_tokens,
+                    live_tokens,
+                    allow_prefill: allow_prefill(
+                        wait.waiting_prefill_tokens(),
+                        live_tokens,
+                        wait.has_runnable_decode(),
+                        wait.oldest_prefill_wait(Instant::now()),
+                        self.timeout,
+                        self.budget.waiting_served_ratio,
+                    ),
+                }
+            };
+            for verdict in wait.pop_wave(&policy) {
+                match verdict {
+                    Verdict::Admit(env) => self.resolve(env, &mut groups, &metrics, &sessions),
+                    Verdict::Reject(env, msg) => {
+                        metrics.sched_rejected.fetch_add(1, Ordering::Relaxed);
+                        reply_inline(env, Err(msg), &metrics);
+                    }
+                }
+            }
+
+            if disconnected {
+                for (_, g) in groups.drain(..) {
+                    for chunk in Self::chunks(g, self.max_batch) {
+                        self.dispatch_wave(chunk, &router, &metrics);
+                    }
+                }
+                return;
+            }
+
+            // Dispatch full groups and timed-out groups.
+            let now = Instant::now();
+            let mut i = 0;
+            while i < groups.len() {
+                let ready = groups[i].1.len() >= self.max_batch
+                    || groups[i]
+                        .1
+                        .first()
+                        .map(|e| now.duration_since(e.enqueued) >= self.timeout)
+                        .unwrap_or(false);
+                if ready {
+                    let (_, g) = groups.swap_remove(i);
+                    for chunk in Self::chunks(g, self.max_batch) {
+                        self.dispatch_wave(chunk, &router, &metrics);
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Ingest one envelope into the wait queue (trace payload: queue
+    /// length after the push).
+    fn ingest(&self, env: Envelope, wait: &mut WaitQueue, metrics: &Metrics) {
+        metrics.sched_queued.fetch_add(1, Ordering::Relaxed);
+        let (id, session) = (env.req.id, op_session(&env.req.op));
+        wait.push(env);
+        self.tracer.record(
+            EventKind::Enqueue,
+            id,
+            session,
+            NO_HEAD,
+            NO_HEAD,
+            NO_DEVICE,
+            wait.len() as u64,
+        );
+    }
+
+    /// Push one wave-admitted envelope through the session/capability
+    /// gate and, if it survives, into its shard group.
+    fn resolve(
+        &self,
+        env: Envelope,
+        groups: &mut Vec<(GroupKey, Vec<ShardEnvelope>)>,
+        metrics: &Metrics,
+        sessions: &SessionTable,
+    ) {
+        // Requests in flight right now (submitted minus completed;
+        // saturating because the two relaxed counters race by design) —
+        // the per-envelope arrival-side sample, kept alongside the
+        // per-iteration one in `run`.
+        let o = Ordering::Relaxed;
+        metrics.record_queue_depth(
+            (metrics.submitted.load(o) as u64)
+                .saturating_sub(metrics.completed.load(o) as u64),
+        );
+        let Some(env) = admit_session_op(env, sessions, metrics, self.caps, self.seq_shards)
+        else {
+            // Answered in place (close / lifecycle / capability error):
+            // the inline-answer side of the reconciliation invariant.
+            metrics.sched_rejected.fetch_add(1, o);
+            return;
+        };
+        metrics.sched_admitted.fetch_add(1, o);
+        let (id, session) = (env.req.id, op_session(&env.req.op));
+        self.tracer.record(
+            EventKind::Admit,
+            id,
+            session,
+            NO_HEAD,
+            NO_HEAD,
+            NO_DEVICE,
+            env.req.seq_len as u64,
+        );
+        let key = (env.req.seq_len, env.req.d, std::mem::discriminant(&env.req.mask));
+        let shards = explode(env, self.seq_shards);
+        self.tracer.record(
+            EventKind::Shard,
+            id,
+            session,
+            NO_HEAD,
+            NO_HEAD,
+            NO_DEVICE,
+            shards.len() as u64,
+        );
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, g)) => g.extend(shards),
+            None => groups.push((key, shards)),
+        }
+    }
+
+    /// Dispatch one device batch, classifying its wave mix for the
+    /// scheduler counters: occupancy, prefill/decode presence, and —
+    /// the continuous-batching payoff — decode waves spanning more
+    /// than one session.
+    fn dispatch_wave(&self, chunk: Vec<ShardEnvelope>, router: &Router, metrics: &Metrics) {
+        let o = Ordering::Relaxed;
+        metrics.batches.fetch_add(1, o);
+        metrics.record_batch_occupancy(chunk.len() as u64);
+        let mut decode_sessions: Vec<u64> = Vec::new();
+        let mut prefill_class = false;
+        for e in &chunk {
+            match e.ctx {
+                ShardCtx::Decode { session, .. } => {
+                    if !decode_sessions.contains(&session) {
+                        decode_sessions.push(session);
+                    }
+                }
+                ShardCtx::Prefill { .. } | ShardCtx::Stateless => prefill_class = true,
+            }
+        }
+        if prefill_class {
+            metrics.prefill_waves.fetch_add(1, o);
+        }
+        if !decode_sessions.is_empty() {
+            metrics.decode_waves.fetch_add(1, o);
+            if decode_sessions.len() > 1 {
+                metrics.multi_session_decode_waves.fetch_add(1, o);
+            }
+        }
+        router.dispatch(chunk);
+    }
+
+    fn chunks(mut g: Vec<ShardEnvelope>, max: usize) -> Vec<Vec<ShardEnvelope>> {
+        let mut out = Vec::new();
+        while g.len() > max {
+            let rest = g.split_off(max);
+            out.push(g);
+            g = rest;
+        }
+        if !g.is_empty() {
+            out.push(g);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::AttentionRequest;
+
+    fn envs(n: u64, seq: usize) -> Vec<ShardEnvelope> {
+        let d = 4;
+        (0..n)
+            .flat_map(|id| {
+                let m = vec![0.0f32; seq * d];
+                explode(
+                    Envelope {
+                        req: AttentionRequest::new(id, seq, d, m.clone(), m.clone(), m),
+                        reply: mpsc::channel().0,
+                        enqueued: Instant::now(),
+                    },
+                    1,
+                )
+            })
+            .collect()
+    }
+
+    /// The batch timeout converts cycles at the configured clock, not a
+    /// hard-coded 1.5 GHz — 150k cycles are 100 µs at 1.5 GHz but
+    /// 150 µs at 1.0 GHz.
+    #[test]
+    fn timeout_converts_at_the_configured_clock() {
+        let at = |ghz: f64| {
+            Scheduler::new(
+                4,
+                150_000,
+                ghz,
+                1,
+                PoolCapabilities::reference(),
+                TokenBudget::unlimited(),
+            )
+            .timeout
+        };
+        assert_eq!(at(1.5), Duration::from_nanos(100_000));
+        assert_eq!(at(1.0), Duration::from_nanos(150_000));
+        assert_eq!(at(3.0), Duration::from_nanos(50_000));
+    }
+
+    #[test]
+    fn chunking_respects_max_batch() {
+        let g = envs(10, 8);
+        let chunks = Scheduler::chunks(g, 4);
+        let sizes: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+        // No shard lost or duplicated.
+        let mut ids: Vec<u64> = chunks.iter().flatten().map(|e| e.shard.req.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_group_produces_no_chunks() {
+        assert!(Scheduler::chunks(vec![], 4).is_empty());
+    }
+
+    #[test]
+    fn multi_head_request_contributes_one_shard_per_head() {
+        let (seq, d, heads) = (8, 4, 4);
+        let q = vec![0.0f32; heads * seq * d];
+        let kv = vec![0.0f32; seq * d];
+        let shards = explode(
+            Envelope {
+                req: AttentionRequest::gqa(1, seq, d, heads, 1, q, kv.clone(), kv),
+                reply: mpsc::channel().0,
+                enqueued: Instant::now(),
+            },
+            1,
+        );
+        // One 4-head request + batch limit 3 => chunks of 3 + 1.
+        let sizes: Vec<usize> =
+            Scheduler::chunks(shards, 3).iter().map(|c| c.len()).collect();
+        assert_eq!(sizes, vec![3, 1]);
+    }
+
+    #[test]
+    fn group_keys_split_on_mask_kind_but_not_padding_valid() {
+        // Masked and unmasked shards are different kernels and must not
+        // share a batch; two key-padding requests padded to the same
+        // bucket from different original lengths MUST share one (else
+        // every padded length waits out its own batch timeout).
+        let key = |m: MaskKind| std::mem::discriminant(&m);
+        assert_ne!(key(MaskKind::None), key(MaskKind::Causal));
+        assert_ne!(key(MaskKind::None), key(MaskKind::PaddingKeys { valid: 7 }));
+        assert_eq!(
+            key(MaskKind::PaddingKeys { valid: 100 }),
+            key(MaskKind::PaddingKeys { valid: 101 })
+        );
+    }
+
+    /// Satellite (admission boundaries): the waiting-ratio decision —
+    /// each admit clause in isolation, then the defer case.
+    #[test]
+    fn allow_prefill_ratio_decision() {
+        let t = Duration::from_millis(1);
+        // No runnable decode waiting: always admit.
+        assert!(allow_prefill(10, 1000, false, None, t, 1.2));
+        // Idle pool (no live tokens): always admit, even against
+        // pending decode work in the queue.
+        assert!(allow_prefill(10, 0, true, None, t, 1.2));
+        // Starvation bound: an entry aged past the timeout is admitted
+        // regardless of the ratio.
+        assert!(allow_prefill(1, 1000, true, Some(Duration::from_millis(2)), t, 1.2));
+        // Ratio satisfied: 1200 waiting ≥ 1.2 × 1000 live.
+        assert!(allow_prefill(1200, 1000, true, Some(Duration::ZERO), t, 1.2));
+        // One token short of the ratio, young, decode pending: defer.
+        assert!(!allow_prefill(1199, 1000, true, Some(Duration::ZERO), t, 1.2));
+        // Ratio 0 disables deferral entirely.
+        assert!(allow_prefill(0, 1000, true, Some(Duration::ZERO), t, 0.0));
+    }
+}

@@ -67,16 +67,16 @@ pub enum SessionOp {
     /// step cannot be resubmitted — abandon the session on such
     /// errors.  (Foreseeable failures are rejected *before* admission:
     /// shape/order violations here, missing decode backend support in
-    /// the batcher.)
+    /// the admission gate.)
     Decode { session: SessionId, step: u64 },
     /// Retire the session: host-tier K/V is dropped immediately and
-    /// device pages become reapable.  Answered directly by the batcher
-    /// with an empty-output success response.
+    /// device pages become reapable.  Answered directly at the
+    /// admission gate with an empty-output success response.
     Close { session: SessionId },
 }
 
-/// What a validated decode step tells the batcher (stamped onto the
-/// request before dispatch).
+/// What a validated decode step tells the admission gate (stamped onto
+/// the request before dispatch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DecodeAdmit {
     /// Prefix length this step attends (previous length + 1).
@@ -123,9 +123,10 @@ struct Session {
     placement: Vec<Option<usize>>,
 }
 
-/// Coordinator-global session registry shared by the batcher (lifecycle
-/// + host tier), the router (sticky placement) and the device workers
-/// (miss fallback + eviction notifications).
+/// Coordinator-global session registry shared by the scheduler
+/// (lifecycle + host tier + live-token budgets), the router (sticky
+/// placement) and the device workers (miss fallback + eviction
+/// notifications).
 #[derive(Default)]
 struct Inner {
     sessions: HashMap<SessionId, Session>,
@@ -269,6 +270,14 @@ impl SessionTable {
 
     pub fn session_count(&self) -> usize {
         self.lock().sessions.len()
+    }
+
+    /// Total tokens currently held by open sessions (Σ prefix lengths) —
+    /// the served side of the scheduler's waiting-vs-served ratio and
+    /// the live term of its `max_batch_total_tokens` budget
+    /// (DESIGN.md §10).
+    pub fn live_tokens(&self) -> usize {
+        self.lock().sessions.values().map(|s| s.len).sum()
     }
 
     /// Current prefix length of a live session.
@@ -415,9 +424,11 @@ mod tests {
     fn lifecycle_open_decode_close() {
         let t = SessionTable::new();
         let (d, heads, kv) = (4usize, 4usize, 2usize);
+        assert_eq!(t.live_tokens(), 0);
         t.open(9, &prefill_req(9, 8, d, heads, kv), 1).unwrap();
         assert!(t.contains(9));
         assert_eq!(t.prefix_len(9), Some(8));
+        assert_eq!(t.live_tokens(), 8);
         // Double open is rejected.
         assert!(t.open(9, &prefill_req(9, 8, d, heads, kv), 1).is_err());
 
@@ -430,6 +441,8 @@ mod tests {
         // The chunk-grid basis stays the prefill length as the prefix grows.
         assert_eq!((a0.prefill_len, a1.prefill_len), (8, 8));
         assert_eq!(t.prefix_len(9), Some(10));
+        // live_tokens tracks the grown prefix (scheduler budget input).
+        assert_eq!(t.live_tokens(), 10);
         let e0 = a0.epoch;
 
         // Appended rows are visible in the host tier.
@@ -453,6 +466,7 @@ mod tests {
 
         assert!(t.close(9));
         assert!(!t.close(9));
+        assert_eq!(t.live_tokens(), 0);
         assert!(t.begin_decode(9, 2, &decode_req(9, 2, d, heads, kv)).is_err());
     }
 

@@ -79,14 +79,14 @@ impl HeadShard {
 
 /// Session context a device worker needs to execute a shard, derived
 /// from the request's [`SessionOp`] at explode time (`Close` never
-/// reaches the device pool — the batcher answers it directly).
+/// reaches the device pool — the admission gate answers it directly).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ShardCtx {
     /// One-shot operator: execute and forget.
     Stateless,
     /// Full-prefix attention whose K/V the worker inserts into its
     /// paged cache after executing.  `epoch` is the session's
-    /// incarnation stamp (batcher-assigned) so caches never confuse a
+    /// incarnation stamp (admission-gate-assigned) so caches never confuse a
     /// reused id with its dead predecessor.
     Prefill { session: SessionId, epoch: u64 },
     /// Single-query-row attention over `prefix_len` tokens: pages on a
@@ -120,8 +120,8 @@ pub enum ShardOut {
 pub struct ShardEnvelope {
     pub shard: HeadShard,
     pub gather: Arc<Gather>,
-    /// Copied from the ingress envelope so the batcher's timeout logic
-    /// works per shard without touching the gather.
+    /// Copied from the ingress envelope so the scheduler's timeout
+    /// logic works per shard without touching the gather.
     pub enqueued: Instant,
     /// Session context for the executing worker and the router's
     /// sticky placement.
@@ -381,7 +381,7 @@ pub fn explode(env: Envelope, seq_shards: usize) -> Vec<ShardEnvelope> {
         SessionOp::Decode { session, .. } => {
             ShardCtx::Decode { session, prefix_len: req.prefix_len, epoch: req.epoch }
         }
-        // Close is answered by the batcher and never dispatched; treat
+        // Close is answered at the admission gate and never dispatched; treat
         // a stray one as stateless rather than panicking.
         SessionOp::Stateless | SessionOp::Close { .. } => ShardCtx::Stateless,
     };
@@ -694,7 +694,7 @@ mod tests {
             11, 42, 3, d, 4, 2,
             vec![0.0; 4 * d], vec![0.0; 2 * d], vec![0.0; 2 * d],
         );
-        req.prefix_len = 9; // batcher stamps
+        req.prefix_len = 9; // admission gate stamps
         req.epoch = 5;
         let shards = explode(Envelope { req, reply: tx, enqueued: Instant::now() }, 1);
         assert_eq!(shards.len(), 4);

@@ -56,8 +56,8 @@ impl std::fmt::Display for TraceLevel {
 /// What happened (one per span point on the request path).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EventKind {
-    /// Batcher accepted a request (payload: seq_len; for decode, the
-    /// stamped prefix length).
+    /// Scheduler admitted a request past the budget + lifecycle gates
+    /// (payload: seq_len; for decode, the stamped prefix length).
     Admit,
     /// Request exploded into its shard grid (payload: shard count).
     Shard,
@@ -79,10 +79,13 @@ pub enum EventKind {
     KvMiss,
     /// A cached stream was evicted (payload: the evicted session id).
     KvEvict,
+    /// Scheduler queued an ingressed envelope into the wait queue
+    /// (payload: wait-queue length after the push, DESIGN.md §10).
+    Enqueue,
 }
 
 /// Number of [`EventKind`] variants (the counts-array size).
-pub const EVENT_KINDS: usize = 9;
+pub const EVENT_KINDS: usize = 10;
 
 impl EventKind {
     /// Stable index for the per-kind count array.
@@ -97,6 +100,7 @@ impl EventKind {
             EventKind::KvHit => 6,
             EventKind::KvMiss => 7,
             EventKind::KvEvict => 8,
+            EventKind::Enqueue => 9,
         }
     }
 
@@ -112,6 +116,7 @@ impl EventKind {
             EventKind::KvHit => "kv_hit",
             EventKind::KvMiss => "kv_miss",
             EventKind::KvEvict => "kv_evict",
+            EventKind::Enqueue => "enqueue",
         }
     }
 
@@ -126,6 +131,7 @@ impl EventKind {
         EventKind::KvHit,
         EventKind::KvMiss,
         EventKind::KvEvict,
+        EventKind::Enqueue,
     ];
 }
 
@@ -166,7 +172,7 @@ struct Ring {
     overwritten: u64,
 }
 
-/// The coordinator's event sink, shared by the batcher, router and
+/// The coordinator's event sink, shared by the scheduler, router and
 /// every device worker.
 pub struct Tracer {
     level: TraceLevel,

@@ -10,8 +10,8 @@
 //! NeuronCore-v2-like), the **kernel programming model** of paper §5
 //! (typed tiles + JIT builder), a **runtime** that executes the
 //! JAX/Pallas AOT artifacts via PJRT (with an in-crate reference
-//! fallback), and a serving **coordinator** (router, batcher, device
-//! pool) that puts it all on a request path — full multi-head / GQA
+//! fallback), and a serving **coordinator** (router, continuous
+//! queue + scheduler, device pool) that puts it all on a request path — full multi-head / GQA
 //! operators, sharded per head across the pool, plus decode-phase
 //! serving: a prefill→decode→close session lifecycle over per-device
 //! paged KV caches — with Python nowhere in sight.
@@ -34,7 +34,8 @@
 //!   [`runtime::Backend`] (PJRT HLO-text path, the reference twin, or
 //!   the cycle-accurate sim backend with measured-cycle pricing, §8).
 //! * [`coordinator`] — multi-head request path: head sharding/gather,
-//!   affinity router, batcher, device workers, metrics; session
+//!   affinity router, continuous queue + scheduler (token-budget
+//!   admission, DESIGN.md §10), device workers, metrics; session
 //!   lifecycle + paged KV caches for decode-phase serving.
 //! * [`telemetry`] — log-scale histograms + hand-rolled JSON shared by
 //!   serving metrics and the bench harness (DESIGN.md §9).

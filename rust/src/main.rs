@@ -32,6 +32,8 @@ Device / serving commands:
           [--heads 1 --kv-heads 1 --backend pjrt|reference|sim|auto]
           [--mask none|causal --freq-ghz 1.5 --seq-shards 1]
           [--sim-max-seq 8192 --sim-batch-shards 8 --array-size 128]
+          [--max-batch-prefill-tokens 8192 --max-batch-total-tokens 65536
+           --waiting-served-ratio 1.2]
           [--trace off|summary|full --metrics-json PATH]
                                boot the coordinator and serve a workload
                                (multi-head/GQA requests are sharded
@@ -53,7 +55,15 @@ Device / serving commands:
                                N shards share one machine between
                                hazard fences (1 disables reuse);
                                --array-size shrinks the simulated array
-                               for fast sim runs; --trace records
+                               for fast sim runs; the continuous
+                               scheduler (DESIGN.md §10) caps each wave
+                               at --max-batch-prefill-tokens prefill
+                               tokens and live + admitted tokens at
+                               --max-batch-total-tokens, and defers
+                               fresh prefills while decode traffic runs
+                               until waiting >= --waiting-served-ratio
+                               x live tokens (0 disables deferral);
+                               --trace records
                                request-path span events — summary keeps
                                per-kind counts, full adds a 4096-event
                                ring — without changing served bits;
@@ -158,6 +168,11 @@ fn serve(args: &Args) -> fsa::Result<()> {
     cfg.sim_max_seq = args.get("sim-max-seq", cfg.sim_max_seq)?;
     cfg.sim_batch_shards = args.get("sim-batch-shards", cfg.sim_batch_shards)?;
     cfg.array_size = args.get("array-size", cfg.array_size)?;
+    cfg.max_batch_prefill_tokens =
+        args.get("max-batch-prefill-tokens", cfg.max_batch_prefill_tokens)?;
+    cfg.max_batch_total_tokens =
+        args.get("max-batch-total-tokens", cfg.max_batch_total_tokens)?;
+    cfg.waiting_served_ratio = args.get("waiting-served-ratio", cfg.waiting_served_ratio)?;
     cfg.trace = args.flag("trace").unwrap_or("off").parse()?;
     let metrics_json = args.flag("metrics-json").map(PathBuf::from);
     let n_req = args.get("requests", 16usize)?;

@@ -1,0 +1,431 @@
+//! End-to-end continuous-batching tests (DESIGN.md §10): the ISSUE-8
+//! acceptance suite for the persistent queue + scheduler serving loop.
+//!
+//! The load-bearing invariant: a mixed workload — stateless operators
+//! (plain, causal, key-padded) interleaved with prefill → N decode
+//! steps → close sessions — served through the continuous scheduler
+//! under *tight* token budgets (prefills deferred across waves, decode
+//! steps of many sessions sharing dispatch waves) is **bitwise
+//! identical per request** to the same workload served under
+//! never-defer budgets, on the reference AND sim backends, whole
+//! sequences and `seq_shards = 2`.  Continuous scheduling may change
+//! only *when* work runs, never *what* it computes.
+//!
+//! Alongside the bits: scheduler metrics reconcile exactly
+//! (`sched_admitted = sched_queued − sched_rejected` at quiescence), at
+//! least one dispatched decode wave carries more than one session (the
+//! continuous-batching payoff), and responses stream back per request
+//! while later work is still unsubmitted.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+
+use fsa::config::{BackendKind, RunConfig};
+use fsa::coordinator::request::{AttentionRequest, AttentionResponse};
+use fsa::coordinator::Coordinator;
+use fsa::mask::MaskKind;
+use fsa::numerics::reference::decode_pwl;
+use fsa::numerics::SplitMix64;
+
+/// Mixed workload phases, submitted pipelined within each phase:
+/// stateless ops, session prefills, per-round decode steps (one per
+/// session per round — the shards that must share waves), closes.
+struct Workload {
+    stateless: Vec<AttentionRequest>,
+    prefills: Vec<AttentionRequest>,
+    rounds: Vec<Vec<AttentionRequest>>,
+    closes: Vec<AttentionRequest>,
+}
+
+/// Deterministic workload: same seed → bitwise-identical requests, so
+/// two coordinators can be fed the exact same bits.
+#[allow(clippy::too_many_arguments)]
+fn mixed_workload(
+    seed: u64,
+    sessions: &[u64],
+    seq: usize,
+    d: usize,
+    heads: usize,
+    kv: usize,
+    steps: usize,
+    with_masks: bool,
+) -> Workload {
+    let mut rng = SplitMix64::new(seed);
+    let mut stateless = Vec::new();
+    let mk_stateless = |rng: &mut SplitMix64, id: u64, mask: MaskKind| {
+        let q = rng.normal_matrix(heads * seq, d);
+        let k = rng.normal_matrix(kv * seq, d);
+        let v = rng.normal_matrix(kv * seq, d);
+        AttentionRequest::gqa(id, seq, d, heads, kv, q, k, v).with_mask(mask)
+    };
+    stateless.push(mk_stateless(&mut rng, 1, MaskKind::None));
+    if with_masks {
+        stateless.push(mk_stateless(&mut rng, 2, MaskKind::Causal));
+        stateless.push(mk_stateless(
+            &mut rng,
+            3,
+            MaskKind::PaddingKeys { valid: seq - seq / 4 },
+        ));
+    }
+    let prefills = sessions
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| {
+            let q = rng.normal_matrix(heads * seq, d);
+            let k = rng.normal_matrix(kv * seq, d);
+            let v = rng.normal_matrix(kv * seq, d);
+            let req =
+                AttentionRequest::prefill(100 + i as u64, s, seq, d, heads, kv, q, k, v);
+            // One causal session rides along when masks are on (causal
+            // prefill is the transformer case; its decode steps carry
+            // no mask, the step row IS the causal row).
+            if with_masks && i == 0 { req.with_mask(MaskKind::Causal) } else { req }
+        })
+        .collect();
+    let rounds = (0..steps)
+        .map(|r| {
+            sessions
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| {
+                    let q = rng.normal_matrix(heads, d);
+                    let k = rng.normal_matrix(kv, d);
+                    let v = rng.normal_matrix(kv, d);
+                    AttentionRequest::decode(
+                        1000 + (r as u64) * 100 + i as u64,
+                        s,
+                        r as u64,
+                        d,
+                        heads,
+                        kv,
+                        q,
+                        k,
+                        v,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let closes = sessions
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| AttentionRequest::close(9000 + i as u64, s))
+        .collect();
+    Workload { stateless, prefills, rounds, closes }
+}
+
+/// Submit a phase pipelined (every request in flight at once), then
+/// collect each request's streamed response into the output map.
+fn submit_phase(
+    coord: &Coordinator,
+    reqs: Vec<AttentionRequest>,
+    out: &mut BTreeMap<u64, Vec<f32>>,
+) {
+    let rxs: Vec<(u64, mpsc::Receiver<AttentionResponse>)> = reqs
+        .into_iter()
+        .map(|r| {
+            let id = r.id;
+            (id, coord.submit(r).unwrap())
+        })
+        .collect();
+    for (id, rx) in rxs {
+        let resp = rx.recv().unwrap();
+        out.insert(id, resp.output.unwrap_or_else(|e| panic!("request {id}: {e}")));
+    }
+}
+
+/// Serve the whole workload; returns every request's output bits plus
+/// the completed-count observed after the FIRST decode round — the
+/// streaming probe (it must be mid-run: > 0 and < the final total).
+fn serve_workload(coord: &Coordinator, w: Workload) -> (BTreeMap<u64, Vec<f32>>, u64) {
+    let mut out = BTreeMap::new();
+    submit_phase(coord, w.stateless, &mut out);
+    submit_phase(coord, w.prefills, &mut out);
+    let mut mid_completed = 0u64;
+    for (r, round) in w.rounds.into_iter().enumerate() {
+        submit_phase(coord, round, &mut out);
+        if r == 0 {
+            mid_completed = coord.metrics.completed.load(Ordering::Relaxed) as u64;
+        }
+    }
+    submit_phase(coord, w.closes, &mut out);
+    (out, mid_completed)
+}
+
+/// Budgets that never defer: the one-shot baseline (admit-everything,
+/// small batches, short timeout — the old `Batcher`'s behavior).
+fn one_shot_cfg(backend: BackendKind, heads: usize, kv: usize) -> RunConfig {
+    RunConfig {
+        devices: 2,
+        max_batch: 2,
+        batch_timeout_cycles: 50_000,
+        queue_depth: 256,
+        backend,
+        num_heads: heads,
+        num_kv_heads: kv,
+        max_batch_prefill_tokens: usize::MAX / 4,
+        max_batch_total_tokens: usize::MAX / 2,
+        waiting_served_ratio: 0.0,
+        ..RunConfig::default()
+    }
+}
+
+/// Tight continuous budgets: `max_batch_prefill_tokens` admits at most
+/// two seq-32 prefills per wave (the third defers), the long group
+/// timeout + `max_batch = 6` let all three sessions' decode shards
+/// (2 each) assemble into shared waves.
+fn continuous_cfg(backend: BackendKind, heads: usize, kv: usize, seq: usize) -> RunConfig {
+    RunConfig {
+        devices: 2,
+        max_batch: 6,
+        // ~3.3 ms at 1.5 GHz: long enough for one round's decode steps
+        // of all sessions to join one wave, short enough to keep the
+        // test fast.
+        batch_timeout_cycles: 5_000_000,
+        queue_depth: 256,
+        backend,
+        num_heads: heads,
+        num_kv_heads: kv,
+        max_batch_prefill_tokens: 2 * seq,
+        max_batch_total_tokens: 64 * seq,
+        waiting_served_ratio: 1.2,
+        ..RunConfig::default()
+    }
+}
+
+/// ISSUE-8 acceptance, reference backend: mixed workload through the
+/// continuous scheduler is bitwise identical per request to the
+/// never-defer baseline; scheduler metrics reconcile; at least one
+/// decode wave spans > 1 session; responses stream before end-of-run.
+#[test]
+fn continuous_matches_one_shot_bitwise_on_reference() {
+    let (seq, d, heads, kv, steps) = (32usize, 16usize, 2usize, 1usize, 8usize);
+    let sessions = [7u64, 8, 9];
+
+    let baseline = Coordinator::start(one_shot_cfg(BackendKind::Reference, heads, kv)).unwrap();
+    let (want, _) = serve_workload(
+        &baseline,
+        mixed_workload(0xC0FFEE, &sessions, seq, d, heads, kv, steps, true),
+    );
+    baseline.shutdown();
+
+    let coord =
+        Coordinator::start(continuous_cfg(BackendKind::Reference, heads, kv, seq)).unwrap();
+    let (got, mid_completed) = serve_workload(
+        &coord,
+        mixed_workload(0xC0FFEE, &sessions, seq, d, heads, kv, steps, true),
+    );
+
+    // Bitwise equivalence, request by request.
+    assert_eq!(want.len(), got.len());
+    for (id, bits) in &want {
+        assert_eq!(
+            got.get(id).unwrap(),
+            bits,
+            "request {id} diverged between continuous and one-shot scheduling"
+        );
+    }
+
+    // Streaming: after round 0, the stateless + prefill + first-round
+    // responses were already answered while 7 more rounds (and the
+    // closes) had not been submitted.
+    let o = Ordering::Relaxed;
+    let total = coord.metrics.completed.load(o) as u64;
+    assert!(mid_completed >= (3 + sessions.len() * 2) as u64, "{mid_completed}");
+    assert!(mid_completed < total, "responses must stream before end-of-run");
+
+    // A request over the prefill budget is rejected with an error
+    // naming the knob (and feeds the reconciliation below).
+    let m = vec![0.0f32; 3 * seq * d];
+    let resp = coord
+        .submit_wait(AttentionRequest::new(5000, 3 * seq, d, m.clone(), m.clone(), m))
+        .unwrap();
+    let err = resp.output.unwrap_err();
+    assert!(err.contains("max_batch_prefill_tokens"), "{err}");
+
+    // Reconciliation at quiescence: every envelope the scheduler queued
+    // was either dispatched or answered inline (closes + the budget
+    // reject), nothing lost.
+    let queued = coord.metrics.sched_queued.load(o);
+    let admitted = coord.metrics.sched_admitted.load(o);
+    let rejected = coord.metrics.sched_rejected.load(o);
+    assert_eq!(queued, coord.metrics.submitted.load(o) as u64);
+    assert_eq!(admitted, queued - rejected, "admitted = queued - rejected");
+    // Inline answers: 3 closes + 1 budget reject.
+    assert_eq!(rejected, 4);
+
+    // The continuous-batching payoff: decode waves exist, and at least
+    // one dispatched wave carried decode shards of MORE than one
+    // session (3 sessions × 2 shards assemble under the 6-shard batch
+    // before the ~3.3 ms group timeout, across 8 rounds).
+    assert!(coord.metrics.decode_waves.load(o) >= 1);
+    assert!(
+        coord.metrics.multi_session_decode_waves.load(o) >= 1,
+        "no dispatch wave ever mixed decode shards of two sessions"
+    );
+    assert!(coord.metrics.prefill_waves.load(o) >= 1);
+    assert!(coord.metrics.sched_iterations.load(o) >= 1);
+
+    // Queue-depth histogram saw the per-iteration samples, not only
+    // the per-admit ones (satellite: steady-state queueing).
+    let snap = coord.metrics.snapshot();
+    assert!(snap.queue_depth.count > admitted, "iteration samples missing");
+    assert!(snap.batch_occupancy.count >= 1);
+    coord.shutdown();
+}
+
+/// The same contract on the cycle-accurate sim backend (small shapes:
+/// the sim is O(L²·N) per shard).
+#[test]
+fn continuous_matches_one_shot_bitwise_on_sim() {
+    let (seq, d, heads, kv, steps) = (16usize, 8usize, 2usize, 1usize, 3usize);
+    let sessions = [3u64, 4];
+
+    let mut base = one_shot_cfg(BackendKind::Sim, heads, kv);
+    base.array_size = 8;
+    let baseline = Coordinator::start(base).unwrap();
+    let (want, _) = serve_workload(
+        &baseline,
+        mixed_workload(0x51A, &sessions, seq, d, heads, kv, steps, true),
+    );
+    baseline.shutdown();
+
+    let mut cont = continuous_cfg(BackendKind::Sim, heads, kv, seq);
+    cont.array_size = 8;
+    // Budget of one prefill per wave: the second session's prefill is
+    // deferred a wave — scheduling moves, bits must not.
+    cont.max_batch_prefill_tokens = seq;
+    let coord = Coordinator::start(cont).unwrap();
+    let (got, _) = serve_workload(
+        &coord,
+        mixed_workload(0x51A, &sessions, seq, d, heads, kv, steps, true),
+    );
+    assert_eq!(want, got, "sim bits diverged under continuous scheduling");
+
+    let o = Ordering::Relaxed;
+    assert_eq!(
+        coord.metrics.sched_admitted.load(o),
+        coord.metrics.sched_queued.load(o) - coord.metrics.sched_rejected.load(o)
+    );
+    assert!(coord.metrics.sim_dispatches.load(o) > 0, "must serve on the sim backend");
+    coord.shutdown();
+}
+
+/// The same contract sequence-sharded: every request split into two
+/// K/V chunks merged at gather (`seq_shards = 2`), continuous vs
+/// one-shot — the partial-merge order is part of "what it computes"
+/// and must survive rescheduling.
+#[test]
+fn continuous_matches_one_shot_bitwise_with_seq_shards() {
+    let (seq, d, heads, kv, steps) = (32usize, 16usize, 2usize, 1usize, 3usize);
+    let sessions = [11u64, 12];
+
+    let mut base = one_shot_cfg(BackendKind::Reference, heads, kv);
+    base.seq_shards = 2;
+    let baseline = Coordinator::start(base).unwrap();
+    let (want, _) = serve_workload(
+        &baseline,
+        mixed_workload(0xBEEF, &sessions, seq, d, heads, kv, steps, false),
+    );
+    baseline.shutdown();
+
+    let mut cont = continuous_cfg(BackendKind::Reference, heads, kv, seq);
+    cont.seq_shards = 2;
+    cont.max_batch_prefill_tokens = seq; // one prefill per wave
+    let coord = Coordinator::start(cont).unwrap();
+    let (got, _) = serve_workload(
+        &coord,
+        mixed_workload(0xBEEF, &sessions, seq, d, heads, kv, steps, false),
+    );
+    assert_eq!(want, got, "seq-sharded bits diverged under continuous scheduling");
+    let o = Ordering::Relaxed;
+    assert!(coord.metrics.seqpar_requests.load(o) > 0);
+    coord.shutdown();
+}
+
+/// Satellite (PR-2 incarnation regression, extended to the scheduler
+/// loop): close + re-prefill + decode of a REUSED session id submitted
+/// back-to-back — all three in the wait queue at once, resolved across
+/// scheduler iterations — must serve the new incarnation's K/V, never
+/// the dead predecessor's.  The wait queue's per-session ordering
+/// invariant is what makes the pipelined sequence safe.
+#[test]
+fn reused_session_id_pipelined_through_scheduler_never_serves_stale_kv() {
+    let (seq, d, heads) = (64usize, 16usize, 2usize);
+    // Defaults: array 128, 8 PWL segments — the oracle must tile the
+    // same way as the workers' reference backend.
+    let (array, segments) = (128usize, 8usize);
+    let mut cfg = continuous_cfg(BackendKind::Reference, heads, 1, seq);
+    cfg.devices = 1; // deterministic placement: leftovers stay resident
+    let coord = Coordinator::start(cfg).unwrap();
+    let mut rng = SplitMix64::new(42);
+
+    // First incarnation of id 5: prefill, one decode (so its pages are
+    // cached), NO close yet.
+    let q = rng.normal_matrix(heads * seq, d);
+    let k = rng.normal_matrix(seq, d);
+    let v = rng.normal_matrix(seq, d);
+    let resp = coord
+        .submit_wait(AttentionRequest::prefill(1, 5, seq, d, heads, 1, q, k, v))
+        .unwrap();
+    assert!(resp.output.is_ok(), "{:?}", resp.output);
+    let (dq, dk, dv) =
+        (rng.normal_matrix(heads, d), rng.normal_matrix(1, d), rng.normal_matrix(1, d));
+    assert!(coord
+        .submit_wait(AttentionRequest::decode(2, 5, 0, d, heads, 1, dq, dk, dv))
+        .unwrap()
+        .output
+        .is_ok());
+
+    // Now the pipelined burst: close, re-prefill (same id, same
+    // length — the resident dead stream is the same size, the worst
+    // case), and a decode of the NEW incarnation, submitted without
+    // waiting.  The queue must keep them in session order.
+    let close_rx = coord.submit(AttentionRequest::close(3, 5)).unwrap();
+    let q2 = rng.normal_matrix(heads * seq, d);
+    let k2 = rng.normal_matrix(seq, d);
+    let v2 = rng.normal_matrix(seq, d);
+    let prefill_rx = coord
+        .submit(AttentionRequest::prefill(4, 5, seq, d, heads, 1, q2, k2.clone(), v2.clone()))
+        .unwrap();
+    let dq2 = rng.normal_matrix(heads, d);
+    let dk2 = rng.normal_matrix(1, d);
+    let dv2 = rng.normal_matrix(1, d);
+    let decode_rx = coord
+        .submit(AttentionRequest::decode(
+            5, 5, 0, d, heads, 1,
+            dq2.clone(), dk2.clone(), dv2.clone(),
+        ))
+        .unwrap();
+
+    assert!(close_rx.recv().unwrap().output.is_ok());
+    assert!(prefill_rx.recv().unwrap().output.is_ok());
+    let got = decode_rx.recv().unwrap().output.expect("reused-id decode succeeds");
+
+    // Oracle: the decode over the SECOND incarnation's K/V, computed
+    // exactly as the device's reference backend computes it.  Stale
+    // predecessor K/V would change every element.
+    let mut full_k = k2;
+    full_k.extend_from_slice(&dk2);
+    let mut full_v = v2;
+    full_v.extend_from_slice(&dv2);
+    let mut want = Vec::with_capacity(heads * d);
+    for h in 0..heads {
+        want.extend_from_slice(&decode_pwl(
+            &dq2[h * d..(h + 1) * d],
+            &full_k,
+            &full_v,
+            d,
+            array,
+            segments,
+        ));
+    }
+    assert_eq!(got, want, "reused id served the dead incarnation's K/V");
+
+    assert!(coord.submit_wait(AttentionRequest::close(6, 5)).unwrap().output.is_ok());
+    let o = Ordering::Relaxed;
+    assert_eq!(coord.metrics.sessions_opened.load(o), 2);
+    assert_eq!(coord.metrics.sessions_closed.load(o), 2);
+    coord.shutdown();
+}

@@ -1,6 +1,7 @@
 //! End-to-end decode-phase serving tests (DESIGN.md §5) on the
-//! reference backend: the full coordinator path — session lifecycle in
-//! the batcher, sticky affinity routing, per-device paged KV caches,
+//! reference backend: the full coordinator path — session lifecycle at
+//! the admission gate, sticky affinity routing, per-device paged KV
+//! caches,
 //! single-query-row device numerics, whole-operator gather — with no
 //! PJRT and no artifacts, so these run in every environment.
 //!

@@ -268,8 +268,10 @@ fn metrics_snapshot_round_trips_end_to_end() {
     assert_eq!(kinds.get("stateless").unwrap().get("count").unwrap().as_u64(), Some(2));
     assert_eq!(kinds.get("close").unwrap().get("count").unwrap().as_u64(), Some(1));
 
-    // One queue-depth observation per envelope the batcher saw.
-    assert_eq!(back.get("queue_depth").unwrap().get("count").unwrap().as_u64(), Some(5));
+    // Queue depth is sampled per envelope the scheduler resolved (5
+    // here) PLUS once per working scheduler iteration (DESIGN.md §10),
+    // so the count has a floor, not an exact value.
+    assert!(back.get("queue_depth").unwrap().get("count").unwrap().as_u64().unwrap() >= 5);
 
     // The single device gauged its KV cache at the configured capacity.
     let kv_gauges = back.get("kv").unwrap().as_arr().unwrap();
