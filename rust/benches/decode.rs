@@ -137,8 +137,8 @@ fn live_run(
                 ))
                 .expect("decode");
             assert!(resp.output.is_ok());
-            hits += resp.kv_hits;
-            misses += resp.kv_misses;
+            hits += resp.stats.kv_hits;
+            misses += resp.stats.kv_misses;
         }
     }
     let wall = t0.elapsed();

@@ -1,5 +1,5 @@
 //! Bench: the serving-path perf trajectory (DESIGN.md §9) — a live
-//! coordinator pool under open-loop Poisson arrivals, across the five
+//! coordinator pool under open-loop Poisson arrivals, across the six
 //! serving modes the repo cares about:
 //!
 //! * `stateless_mix` — mixed masks/shapes on the reference pool;
@@ -13,7 +13,10 @@
 //! * `continuous` — pipelined multi-session decode rounds under tight
 //!   token budgets, so the scheduler's continuous-batching waves (and
 //!   the `batch_occupancy` / wave-mix counters) are exercised
-//!   (DESIGN.md §10).
+//!   (DESIGN.md §10);
+//! * `prefix` — a shared-system-prompt session mix with `prefix_cache
+//!   = on`, reporting the admission hit rate and the modeled
+//!   saved-prefill-cycles of resumed prefills (DESIGN.md §11).
 //!
 //! Every scenario embeds its pool's full [`MetricsSnapshot`] JSON
 //! (counters, latency p50/p95/p99, TTFT/TPOT, queue depth, per-backend
@@ -254,8 +257,8 @@ fn sim_attrib(t: &mut Table) -> Json {
     let mut cycles = 0u64;
     for r in &resps {
         assert!(r.output.is_ok(), "sim_attrib must serve every request");
-        assert_eq!(r.measured_shards, r.shards, "sim prices from measured cycles");
-        let bd = r.cycle_breakdown.expect("sim responses carry attribution");
+        assert_eq!(r.stats.measured_shards, r.shards, "sim prices from measured cycles");
+        let bd = r.stats.cycle_breakdown.expect("sim responses carry attribution");
         assert_eq!(bd.total(), r.device_cycles, "attribution must sum exactly ({bd:?})");
         agg.add(&bd);
         cycles += r.device_cycles;
@@ -295,7 +298,7 @@ fn seqpar(t: &mut Table) -> Json {
     let (wall, resps) = run_open_loop(&coord, reqs, gap, 17);
     for r in &resps {
         assert!(r.output.is_ok(), "seqpar must serve every request");
-        assert_eq!(r.seq_chunks, 2, "requests must be sequence-sharded");
+        assert_eq!(r.stats.seq_chunks, 2, "requests must be sequence-sharded");
     }
     let snap = coord.metrics.snapshot();
     assert!(snap.counter("merge_steps").unwrap_or(0) > 0, "gather must merge partials");
@@ -397,6 +400,103 @@ fn continuous(t: &mut Table) -> Json {
     j
 }
 
+/// Shared-system-prompt serving with `prefix_cache = on` (DESIGN.md
+/// §11): every session's prompt opens with the same 48-token system
+/// prefix (three whole KV pages), so each prefill after the first
+/// matches at admission, prices only its uncovered suffix, and resumes
+/// on the devices from the shared refcounted pages.  The scenario
+/// record carries the admission hit rate and the modeled
+/// saved-prefill-cycles alongside the usual snapshot.
+fn prefix(t: &mut Table) -> Json {
+    let mut rc = cfg(BackendKind::Reference, 2, 1);
+    rc.prefix_cache = true;
+    let coord = Coordinator::start(rc.clone()).unwrap();
+    let (sessions, steps) = if smoke() { (3usize, 2usize) } else { (12, 8) };
+    let (seq, d, heads, kv) = (64usize, 32usize, 4usize, 2usize);
+    let sys = 48usize; // shared system prompt: three kv_page_size=16 pages
+    let mut rng = SplitMix64::new(41);
+    let k_base = rng.normal_matrix(kv * seq, d);
+    let v_base = rng.normal_matrix(kv * seq, d);
+    // Overlay the shared system prefix onto a session's fresh K or V
+    // (head-major `(kv_heads, seq, d)` layout).
+    let share = |base: &[f32], mut fresh: Vec<f32>| -> Vec<f32> {
+        let stride = seq * d;
+        for h in 0..kv {
+            fresh[h * stride..h * stride + sys * d]
+                .copy_from_slice(&base[h * stride..h * stride + sys * d]);
+        }
+        fresh
+    };
+    let start = Instant::now();
+    // Closed-loop prefills: each session's prompt is indexed before the
+    // next arrives, so every prefill after the first finds the shared
+    // pages already cached.
+    for s in 0..sessions as u64 {
+        let req = AttentionRequest::prefill(
+            s,
+            s,
+            seq,
+            d,
+            heads,
+            kv,
+            rng.normal_matrix(heads * seq, d),
+            share(&k_base, rng.normal_matrix(kv * seq, d)),
+            share(&v_base, rng.normal_matrix(kv * seq, d)),
+        )
+        .with_mask(MaskKind::Causal);
+        let resp = coord.submit_wait(req).unwrap();
+        resp.output.expect("prefill succeeds");
+        if s > 0 {
+            assert_eq!(
+                resp.stats.prefix_reused_tokens, sys,
+                "warm prefill must resume past the shared system prompt"
+            );
+        }
+    }
+    let mut id = 1000u64;
+    for step in 0..steps as u64 {
+        for s in 0..sessions as u64 {
+            id += 1;
+            let dec = AttentionRequest::decode(
+                id,
+                s,
+                step,
+                d,
+                heads,
+                kv,
+                rng.normal_matrix(heads, d),
+                rng.normal_matrix(kv, d),
+                rng.normal_matrix(kv, d),
+            );
+            coord.submit_wait(dec).unwrap().output.expect("decode step succeeds");
+        }
+    }
+    for s in 0..sessions as u64 {
+        id += 1;
+        coord.submit_wait(AttentionRequest::close(id, s)).unwrap();
+    }
+    let wall = start.elapsed();
+    let requests = sessions * (steps + 2);
+    let o = std::sync::atomic::Ordering::Relaxed;
+    let hits = coord.metrics.prefix_hits.load(o);
+    let misses = coord.metrics.prefix_misses.load(o);
+    let saved = coord.metrics.saved_prefill_cycles.load(o);
+    assert_eq!(misses, 1, "only the first (donor) prefill may miss");
+    assert_eq!(hits, sessions as u64 - 1, "every later prefill must hit");
+    assert!(saved > 0, "resumed prefills must save modeled device cycles");
+    let mut pc = Json::obj();
+    pc.set("hits", Json::u64(hits))
+        .set("misses", Json::u64(misses))
+        .set("hit_rate", Json::Num(hits as f64 / (hits + misses) as f64))
+        .set("attached_pages", Json::u64(coord.metrics.prefix_attached_pages.load(o)))
+        .set("saved_prefill_cycles", Json::u64(saved));
+    let mut j = scenario_json("prefix", &coord, &rc, wall, requests, requests);
+    j.set("prefix_cache", pc);
+    table_row(t, "prefix", &coord, requests, wall);
+    coord.shutdown();
+    j
+}
+
 fn main() {
     let mut t = Table::new(&[
         "scenario", "reqs", "wall", "rps", "p50", "p95", "p99", "TTFT p50", "TPOT p50",
@@ -407,6 +507,7 @@ fn main() {
         sim_attrib(&mut t),
         seqpar(&mut t),
         continuous(&mut t),
+        prefix(&mut t),
     ];
     println!(
         "serving — coordinator pools under Poisson/lockstep load \

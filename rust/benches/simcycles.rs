@@ -18,7 +18,7 @@ use fsa::config::AccelConfig;
 use fsa::mask::MaskKind;
 use fsa::numerics::SplitMix64;
 use fsa::perfmodel::{sim_cross_check, SIM_MODEL_BAND};
-use fsa::runtime::SimBackend;
+use fsa::runtime::{ShardPlan, SimBackend};
 
 struct SweepRow {
     seq: usize,
@@ -27,6 +27,15 @@ struct SweepRow {
     cycles: u64,
     scalar_wall_s: f64,
     vector_wall_s: f64,
+}
+
+/// One whole-head shard through the typed entry point (the serving
+/// path's `Backend::execute` drives the same `ShardPlan::Head` arm).
+fn head(be: &mut SimBackend, l: usize, d: usize, q: &[f32], k: &[f32], v: &[f32], mask: MaskKind) -> Vec<f32> {
+    be.execute(ShardPlan::Head { seq_len: l, d, q, k, v, mask })
+        .unwrap()
+        .into_full()
+        .unwrap()
 }
 
 impl SweepRow {
@@ -111,19 +120,19 @@ fn main() {
         let q = rng.normal_matrix(l, d);
         let k = rng.normal_matrix(l, d);
         let v = rng.normal_matrix(l, d);
-        let out_s = sca.execute_head(l, d, &q, &k, &v, mask).unwrap();
+        let out_s = head(&mut sca, l, d, &q, &k, &v, mask);
         let cyc_s = sca.take_measured().unwrap();
-        let out_v = vec_be.execute_head(l, d, &q, &k, &v, mask).unwrap();
+        let out_v = head(&mut vec_be, l, d, &q, &k, &v, mask);
         let cyc_v = vec_be.take_measured().unwrap();
         assert_eq!(cyc_s, cyc_v, "L={l} {mask}: steppers disagree on cycles");
         let bs: Vec<u32> = out_s.iter().map(|x| x.to_bits()).collect();
         let bv: Vec<u32> = out_v.iter().map(|x| x.to_bits()).collect();
         assert_eq!(bs, bv, "L={l} {mask}: steppers disagree bitwise");
         let st_s = bench_for(budget, || {
-            sca.execute_head(l, d, &q, &k, &v, mask).unwrap();
+            head(&mut sca, l, d, &q, &k, &v, mask);
         });
         let st_v = bench_for(budget, || {
-            vec_be.execute_head(l, d, &q, &k, &v, mask).unwrap();
+            head(&mut vec_be, l, d, &q, &k, &v, mask);
         });
         let row = SweepRow {
             seq: l,
@@ -157,7 +166,7 @@ fn main() {
     let k = rng.normal_matrix(l, d);
     let v = rng.normal_matrix(l, d);
     let st = bench_for(Duration::from_secs(2), || {
-        vec_be.execute_head(l, d, &q, &k, &v, MaskKind::Causal).unwrap();
+        head(&mut vec_be, l, d, &q, &k, &v, MaskKind::Causal);
     });
     println!(
         "[bench] sim-backend causal head (L={l}, d={d}, N={n}): median {}",

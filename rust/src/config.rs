@@ -88,6 +88,16 @@ fn strip_comment(raw: &str) -> &str {
     raw
 }
 
+/// Parse an on/off switch value (`--prefix-cache on|off` and the INI
+/// key of the same name); also takes the usual boolean spellings.
+pub fn parse_on_off(v: &str) -> Option<bool> {
+    match v {
+        "on" | "true" | "1" | "yes" => Some(true),
+        "off" | "false" | "0" | "no" => Some(false),
+        _ => None,
+    }
+}
+
 /// Vector/scalar unit description for baseline machines (paper Fig. 1 &
 /// §2.3: softmax runs on these and they are the bottleneck).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -379,6 +389,19 @@ pub struct RunConfig {
     pub kv_page_size: usize,
     /// Eviction policy of the per-device KV caches.
     pub kv_eviction: EvictionPolicy,
+    /// Cross-session prefix caching (DESIGN.md §11): at admission the
+    /// scheduler hash-walks each prefill against the live sessions'
+    /// indexed prefixes (content-chained per `kv_page_size`-token
+    /// block, then byte-verified) and, on a hit, stamps the request to
+    /// resume from the first uncovered row — devices compute only the
+    /// suffix (bitwise the cold run's suffix rows), the covered tokens
+    /// stop competing for prefill budget, and the warm session's shards
+    /// adopt the donor's placement so shared pages attach by refcount
+    /// instead of copying.  Off by default: a resumed response carries
+    /// only the suffix query rows (`stats.prefix_reused_tokens` says
+    /// how many were skipped), which callers must opt into.  Requires a
+    /// resumed-prefill-capable backend (reference|sim).
+    pub prefix_cache: bool,
     /// Mask the *drivers* (`fsa serve --mask`, examples, benches) stamp
     /// onto the synthetic requests they generate.  This is a
     /// driver-side convenience only: the coordinator itself never
@@ -449,6 +472,7 @@ impl Default for RunConfig {
             kv_cache_pages: 4096,
             kv_page_size: 16,
             kv_eviction: EvictionPolicy::Lru,
+            prefix_cache: false,
             mask: MaskKind::None,
             freq_ghz: 1.5,
             seq_shards: 1,
@@ -506,6 +530,12 @@ impl RunConfig {
             self.seq_shards >= 1,
             "seq_shards must be >= 1, got {}",
             self.seq_shards
+        );
+        ensure!(
+            !(self.prefix_cache && self.backend == BackendKind::Pjrt),
+            "prefix_cache requires a resumed-prefill-capable backend \
+             (reference|sim|auto): the AOT PJRT artifacts have no resumed \
+             kind (DESIGN.md §11)"
         );
         ensure!(
             self.sim_max_seq >= 1,
@@ -569,6 +599,10 @@ impl RunConfig {
         }
         if let Some(v) = ini.get_parsed::<EvictionPolicy>(sec, "kv_eviction")? {
             cfg.kv_eviction = v;
+        }
+        if let Some(v) = ini.get(sec, "prefix_cache") {
+            cfg.prefix_cache = parse_on_off(v)
+                .ok_or_else(|| anyhow!("[run] prefix_cache = {v:?}: expected on|off"))?;
         }
         if let Some(v) = ini.get_parsed::<MaskKind>(sec, "mask")? {
             cfg.mask = v;
@@ -648,6 +682,25 @@ mod tests {
         // Zero-size caches are rejected at load.
         let bad = "[run]\nkv_cache_pages = 0\n";
         assert!(RunConfig::from_ini(&Ini::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_config_prefix_cache_knob() {
+        // Satellite: the prefix-cache switch is INI-plumbed, off by
+        // default, and refused on the resumed-incapable PJRT backend.
+        let on = "[run]\nbackend = reference\nprefix_cache = on\n";
+        let run = RunConfig::from_ini(&Ini::parse(on).unwrap()).unwrap();
+        assert!(run.prefix_cache);
+        assert!(!RunConfig::default().prefix_cache);
+        assert_eq!(parse_on_off("off"), Some(false));
+        assert_eq!(parse_on_off("true"), Some(true));
+        assert_eq!(parse_on_off("maybe"), None);
+        let bad = "[run]\nprefix_cache = maybe\n";
+        assert!(RunConfig::from_ini(&Ini::parse(bad).unwrap()).is_err());
+        // backend = pjrt (the default) has no resumed artifact kind.
+        let pjrt = "[run]\nprefix_cache = on\n";
+        let err = RunConfig::from_ini(&Ini::parse(pjrt).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("prefix_cache"), "{err}");
     }
 
     #[test]

@@ -25,7 +25,7 @@
 use std::time::Duration;
 
 use super::metrics::Metrics;
-use super::request::{AttentionResponse, Envelope, OpKind};
+use super::request::{AttentionResponse, Envelope, OpKind, ResponseStats};
 use super::session::{SessionOp, SessionTable};
 use super::trace::NO_SESSION;
 
@@ -243,8 +243,6 @@ pub(super) fn reply_inline(env: Envelope, output: Result<Vec<f32>, String>, metr
         num_heads: env.req.num_heads,
         num_kv_heads: env.req.num_kv_heads,
         shards: 0,
-        seq_chunks: 0,
-        merge_steps: 0,
         device_cycles: 0,
         critical_path_cycles: 0,
         device_time: Duration::ZERO,
@@ -253,10 +251,7 @@ pub(super) fn reply_inline(env: Envelope, output: Result<Vec<f32>, String>, metr
         device_id: 0,
         devices_used: Vec::new(),
         bucket: env.req.seq_len,
-        kv_hits: 0,
-        kv_misses: 0,
-        measured_shards: 0,
-        cycle_breakdown: None,
+        stats: ResponseStats::default(),
     };
     metrics.record(&resp, ok);
     let _ = env.reply.send(resp);

@@ -25,8 +25,10 @@ use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::config::{AccelConfig, RunConfig};
-use crate::perfmodel::{fsa_decode_perf, fsa_flash_chunk_perf, fsa_flash_perf_masked};
-use crate::runtime::Backend;
+use crate::perfmodel::{
+    fsa_decode_perf, fsa_flash_chunk_perf, fsa_flash_perf_masked, fsa_flash_resumed_perf,
+};
+use crate::runtime::{Backend, ShardPlan};
 use crate::schedule::Variant;
 
 use super::kvcache::{Admit, KvCache, KvCacheConfig};
@@ -119,11 +121,11 @@ fn worker_loop(
     while let Ok(batch) = rx.recv() {
         let n = batch.len();
         for env in batch {
-            let (cycles, cache_outcome, output, measured, breakdown) = execute_shard(
+            let exec = execute_shard(
                 id, &cfg, backend.as_mut(), &mut cache, &sessions, &metrics, &env, seq_shards,
                 &tracer,
             );
-            metrics.record_shard(cycles);
+            metrics.record_shard(exec.cycles);
             if let Some(name) = backend_name {
                 metrics.record_dispatch(name);
             }
@@ -132,8 +134,8 @@ fn worker_loop(
             }
             let (req_id, session) = (env.shard.req.id, ctx_session(&env.ctx));
             let (head, chunk) = (env.shard.head as u32, env.shard.chunk as u32);
-            tracer.record(EventKind::Execute, req_id, session, head, chunk, id as u32, cycles);
-            match cache_outcome {
+            tracer.record(EventKind::Execute, req_id, session, head, chunk, id as u32, exec.cycles);
+            match exec.cache {
                 CacheOutcome::Hit => {
                     metrics.kv_hits.fetch_add(1, Ordering::Relaxed);
                     tracer.record(EventKind::KvHit, req_id, session, head, chunk, id as u32, 0);
@@ -149,11 +151,14 @@ fn worker_loop(
                     head: env.shard.head,
                     chunk_pos: env.shard.chunk_pos,
                     device_id: id,
-                    cycles,
-                    measured,
-                    output,
-                    cache: cache_outcome,
-                    breakdown,
+                    cycles: exec.cycles,
+                    measured: exec.measured,
+                    output: exec.output,
+                    cache: exec.cache,
+                    breakdown: exec.breakdown,
+                    attached_pages: exec.attached_pages,
+                    cow_copies: exec.cow_copies,
+                    saved_cycles: exec.saved_cycles,
                 },
                 &cfg,
             );
@@ -162,10 +167,10 @@ fn worker_loop(
                     EventKind::Gather, req_id, session, NO_HEAD, NO_HEAD, id as u32,
                     resp.device_cycles,
                 );
-                if resp.merge_steps > 0 {
+                if resp.stats.merge_steps > 0 {
                     tracer.record(
                         EventKind::Merge, req_id, session, NO_HEAD, NO_HEAD, id as u32,
-                        resp.merge_steps as u64,
+                        resp.stats.merge_steps as u64,
                     );
                 }
                 metrics.record(&resp, resp.output.is_ok());
@@ -188,9 +193,47 @@ fn ctx_session(ctx: &ShardCtx) -> u64 {
     }
 }
 
+/// What [`execute_shard`] hands back to the worker loop — everything
+/// the [`ShardResult`] needs beyond the shard's own coordinates.
+struct ShardExec {
+    /// Device cycles charged to the shard (measured when the backend
+    /// measured, modeled otherwise).
+    cycles: u64,
+    cache: CacheOutcome,
+    output: Result<ShardOut, String>,
+    /// Whether `cycles` came from the cycle-accurate machine.
+    measured: bool,
+    /// Per-class attribution when measured; its `total()` equals
+    /// `cycles` (including the decode-miss recompute charge).
+    breakdown: Option<CycleBreakdown>,
+    /// KV pages this shard attached by content match instead of
+    /// copying (DESIGN.md §11).
+    attached_pages: usize,
+    /// Copy-on-write tail copies this shard's cache traffic triggered.
+    cow_copies: usize,
+    /// Modeled cycles a resumed prefill avoided vs. the cold run.
+    saved_cycles: u64,
+}
+
+impl ShardExec {
+    /// A shard that produced `output` for `cycles` modeled cycles and
+    /// touched no cache state.
+    fn modeled(cycles: u64, cache: CacheOutcome, output: Result<ShardOut, String>) -> ShardExec {
+        ShardExec {
+            cycles,
+            cache,
+            output,
+            measured: false,
+            breakdown: None,
+            attached_pages: 0,
+            cow_copies: 0,
+            saved_cycles: 0,
+        }
+    }
+}
+
 /// Execute one shard on this device: numerics + device-cycle pricing +
-/// KV-cache bookkeeping.  Returns `(cycles, cache outcome, output,
-/// measured, breakdown)` — the breakdown is `Some` only when the
+/// KV-cache bookkeeping.  The breakdown is `Some` only when the
 /// backend measured the cycles on the machine (its `total()` equals
 /// `cycles`, including the decode-miss recompute charge).
 ///
@@ -220,7 +263,7 @@ fn execute_shard(
     env: &ShardEnvelope,
     seq_shards: usize,
     tracer: &Tracer,
-) -> (u64, CacheOutcome, Result<ShardOut, String>, bool, Option<CycleBreakdown>) {
+) -> ShardExec {
     let shard = &env.shard;
     let req = &shard.req;
     let (start, len) = shard.kv_range;
@@ -239,26 +282,29 @@ fn execute_shard(
             // the mask prices only the tiles the skipping schedule
             // issues (≈2x fewer for causal, DESIGN.md §6), and a
             // sequence chunk prices only its own key range (§7).
-            let perf = if shard.is_partial() {
+            let seq = req.seq_len.max(cfg.array_size);
+            let d = req.d.min(cfg.array_size);
+            let cold = if shard.is_partial() {
                 fsa_flash_chunk_perf(
-                    cfg,
-                    req.seq_len.max(cfg.array_size),
-                    req.d.min(cfg.array_size),
-                    start,
-                    len.max(1),
-                    Variant::DualPath,
-                    cfg.pwl_segments,
-                    req.mask,
+                    cfg, seq, d, start, len.max(1), Variant::DualPath, cfg.pwl_segments, req.mask,
                 )
             } else {
-                fsa_flash_perf_masked(
-                    cfg,
-                    req.seq_len.max(cfg.array_size),
-                    req.d.min(cfg.array_size),
-                    Variant::DualPath,
-                    cfg.pwl_segments,
-                    req.mask,
-                )
+                fsa_flash_perf_masked(cfg, seq, d, Variant::DualPath, cfg.pwl_segments, req.mask)
+            };
+            // A resumed (prefix-cache warm) prefill runs only the
+            // uncovered suffix query rows [resumed_from, seq_len); the
+            // covered rows' cycles are the saved-prefill term
+            // (DESIGN.md §11).  The saving is always model-vs-model so
+            // it stays meaningful when the backend measures.
+            let resumed = req.resumed_from;
+            let (perf, saved_cycles) = if resumed > 0 && resumed < req.seq_len {
+                let (ks, kl) = if shard.is_partial() { (start, len.max(1)) } else { (0, seq) };
+                let warm = fsa_flash_resumed_perf(
+                    cfg, seq, d, resumed, ks, kl, Variant::DualPath, cfg.pwl_segments, req.mask,
+                );
+                (warm, cold.total_cycles.saturating_sub(warm.total_cycles))
+            } else {
+                (cold, 0)
             };
             let (k, v) = req.head_kv(shard.kv_head);
             let (k_chunk, v_chunk) =
@@ -268,22 +314,47 @@ fn execute_shard(
             let output = match backend {
                 None => Err("device backend unavailable".to_string()),
                 Some(be) => {
-                    let out = if shard.is_partial() {
-                        be.execute_head_partial(
-                            req.seq_len,
-                            req.d,
-                            req.head_q(shard.head),
+                    let out = if resumed > 0 && resumed < req.seq_len {
+                        let q_suffix = &req.head_q(shard.head)[resumed * req.d..];
+                        let plan = ShardPlan::ResumedPrefill {
+                            seq_len: req.seq_len,
+                            d: req.d,
+                            query_offset: resumed,
+                            q_suffix,
                             k_chunk,
                             v_chunk,
-                            req.mask,
-                            start,
-                            req.seq_len,
-                        )
+                            mask: req.mask,
+                            key_offset: start,
+                            total_keys: req.seq_len,
+                        };
+                        if shard.is_partial() {
+                            be.execute(plan).and_then(|o| o.into_partial()).map(ShardOut::Partial)
+                        } else {
+                            be.execute(plan).and_then(|o| o.into_full()).map(ShardOut::Full)
+                        }
+                    } else if shard.is_partial() {
+                        be.execute(ShardPlan::HeadChunk {
+                            seq_len: req.seq_len,
+                            d: req.d,
+                            q: req.head_q(shard.head),
+                            k_chunk,
+                            v_chunk,
+                            mask: req.mask,
+                            key_offset: start,
+                            total_keys: req.seq_len,
+                        })
+                        .and_then(|o| o.into_partial())
                         .map(ShardOut::Partial)
                     } else {
-                        be.execute_head(
-                            req.seq_len, req.d, req.head_q(shard.head), k, v, req.mask,
-                        )
+                        be.execute(ShardPlan::Head {
+                            seq_len: req.seq_len,
+                            d: req.d,
+                            q: req.head_q(shard.head),
+                            k,
+                            v,
+                            mask: req.mask,
+                        })
+                        .and_then(|o| o.into_full())
                         .map(ShardOut::Full)
                     };
                     measured = be.take_measured();
@@ -291,28 +362,47 @@ fn execute_shard(
                     out
                 }
             };
+            let mut attached_pages = 0;
             if let ShardCtx::Prefill { session, epoch } = env.ctx {
                 // Land this chunk of the KV group's prefix in the page
                 // cache once — skipped only when a groupmate of THIS
                 // prefill (same epoch) already inserted it; a
                 // same-length leftover from a closed predecessor
                 // session (reused id, stale epoch) is replaced, never
-                // trusted.
+                // trusted.  The insert carries the FULL chunk (the
+                // request ships its K/V even when resumed); pages whose
+                // content is already resident attach by refcount
+                // instead of copying (DESIGN.md §11).
                 if output.is_ok() && cache.cached_state(session, stream) != Some((len, epoch)) {
-                    if let Admit::Cached { evicted } =
+                    if let Admit::Cached { evicted, attached_pages: attached } =
                         cache.insert(session, stream, epoch, req.d, k_chunk, v_chunk, &live)
                     {
                         report_evictions(id, sessions, metrics, seq_shards, tracer, &evicted);
+                        attached_pages = attached;
+                        if attached > 0 {
+                            tracer.record(
+                                EventKind::PrefixAttach,
+                                req.id,
+                                session,
+                                shard.kv_head as u32,
+                                shard.chunk as u32,
+                                id as u32,
+                                attached as u64,
+                            );
+                        }
                     }
                 }
             }
-            (
-                measured.unwrap_or(perf.total_cycles),
-                CacheOutcome::NotApplicable,
+            ShardExec {
+                cycles: measured.unwrap_or(perf.total_cycles),
+                cache: CacheOutcome::NotApplicable,
                 output,
-                measured.is_some(),
+                measured: measured.is_some(),
                 breakdown,
-            )
+                attached_pages,
+                cow_copies: 0,
+                saved_cycles,
+            }
         }
         ShardCtx::Decode { session, prefix_len, epoch } => {
             // The request carries this step's appended K/V row; the
@@ -326,6 +416,11 @@ fn execute_shard(
             let growing = start + len == prefix_len;
             let cached = cache.cached_state(session, stream);
             let mut outcome = CacheOutcome::Miss;
+            let mut attached_pages = 0usize;
+            // Appends onto a shared (refcounted) tail copy it first —
+            // copy-on-write, DESIGN.md §11; count this shard's copies
+            // by the cache counter's delta.
+            let cow_before = cache.stats.cow_copies;
             let mut data: Option<(Vec<f32>, Vec<f32>)> = None;
             if cached == Some((len, epoch)) {
                 // Range already resident (fixed chunk, or a groupmate
@@ -334,8 +429,9 @@ fn execute_shard(
                 data = cache.gather(session, stream);
             } else if growing && len >= 1 && cached == Some((len - 1, epoch)) {
                 match cache.append(session, stream, k_row, v_row, &live) {
-                    Admit::Cached { evicted } => {
+                    Admit::Cached { evicted, attached_pages: attached } => {
                         report_evictions(id, sessions, metrics, seq_shards, tracer, &evicted);
+                        attached_pages += attached;
                         outcome = CacheOutcome::Hit;
                         data = cache.gather(session, stream);
                     }
@@ -364,7 +460,7 @@ fn execute_shard(
                                 Variant::DualPath,
                                 cfg.pwl_segments,
                             );
-                            return (
+                            return ShardExec::modeled(
                                 perf.total_cycles,
                                 CacheOutcome::Miss,
                                 Err(format!(
@@ -375,15 +471,14 @@ fn execute_shard(
                                     shard.chunk,
                                     start + len
                                 )),
-                                false,
-                                None,
                             );
                         }
                         Some((k, v)) => {
-                            if let Admit::Cached { evicted } =
+                            if let Admit::Cached { evicted, attached_pages: attached } =
                                 cache.insert(session, stream, epoch, req.d, &k, &v, &live)
                             {
                                 report_evictions(id, sessions, metrics, seq_shards, tracer, &evicted);
+                                attached_pages += attached;
                             }
                             (k, v)
                         }
@@ -404,22 +499,24 @@ fn execute_shard(
                 None => Err("device backend unavailable".to_string()),
                 Some(be) => {
                     let out = if shard.is_partial() {
-                        be.execute_decode_row_partial(
-                            len,
-                            req.d,
-                            req.head_q(shard.head),
-                            &k_full,
-                            &v_full,
-                        )
+                        be.execute(ShardPlan::DecodeRange {
+                            range_len: len,
+                            d: req.d,
+                            q_row: req.head_q(shard.head),
+                            k: &k_full,
+                            v: &v_full,
+                        })
+                        .and_then(|o| o.into_partial())
                         .map(ShardOut::Partial)
                     } else {
-                        be.execute_decode_row(
+                        be.execute(ShardPlan::DecodeRow {
                             prefix_len,
-                            req.d,
-                            req.head_q(shard.head),
-                            &k_full,
-                            &v_full,
-                        )
+                            d: req.d,
+                            q_row: req.head_q(shard.head),
+                            k: &k_full,
+                            v: &v_full,
+                        })
+                        .and_then(|o| o.into_full())
                         .map(ShardOut::Full)
                     };
                     measured = be.take_measured();
@@ -438,7 +535,41 @@ fn execute_shard(
             if let Some(bd) = &mut breakdown {
                 bd.recompute += perf.recompute_cycles;
             }
-            (cycles, outcome, output, measured.is_some(), breakdown)
+            let cow_copies = (cache.stats.cow_copies - cow_before) as usize;
+            if cow_copies > 0 {
+                tracer.record(
+                    EventKind::CowCopy,
+                    req.id,
+                    session,
+                    shard.kv_head as u32,
+                    shard.chunk as u32,
+                    id as u32,
+                    cow_copies as u64,
+                );
+            }
+            if attached_pages > 0 {
+                // A miss-path re-insert can re-attach still-resident
+                // shared pages instead of copying them back.
+                tracer.record(
+                    EventKind::PrefixAttach,
+                    req.id,
+                    session,
+                    shard.kv_head as u32,
+                    shard.chunk as u32,
+                    id as u32,
+                    attached_pages as u64,
+                );
+            }
+            ShardExec {
+                cycles,
+                cache: outcome,
+                output,
+                measured: measured.is_some(),
+                breakdown,
+                attached_pages,
+                cow_copies,
+                saved_cycles: 0,
+            }
         }
     }
 }

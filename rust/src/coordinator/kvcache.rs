@@ -1,36 +1,57 @@
-//! Per-device paged KV cache (DESIGN.md §5): the device-HBM tier behind
-//! decode-phase serving.
+//! Per-device paged KV cache (DESIGN.md §5, §11): the device-HBM tier
+//! behind decode-phase serving, redesigned around *refcounted,
+//! content-keyed, copy-on-write pages* so sessions sharing a prefix
+//! (the system-prompt regime) share physical pages.
 //!
-//! Each device worker owns one [`KvCache`].  The cached unit is a
-//! *stream* — the K/V prefix of one `(session, kv_head)` pair, exactly
-//! the granularity the router's KV-head affinity pins to a device — and
-//! the allocation unit is a fixed-size *page* of `page_size` tokens
-//! (both the K and the V rows of those tokens, vLLM-style).  Capacity
-//! is accounted in pages; one page models
-//! `page_size · d · 2 (K+V) · 2 B (fp16)` of device HBM.
+//! Each device worker owns one [`KvCache`].  The externally visible
+//! unit is still a *stream* — the K/V prefix of one `(session,
+//! kv_head)` pair, exactly the granularity the router's KV-head
+//! affinity pins to a device — but a stream no longer owns its pages:
+//! it holds *references* into a page slab owned by the cache.  One page
+//! stores up to `page_size` tokens of K and V rows and models
+//! `page_size · d · 2 (K+V) · 2 B (fp16)` of device HBM; capacity is
+//! accounted in physical pages, so a page shared by ten streams costs
+//! one page.
 //!
-//! Sequence-parallel serving (DESIGN.md §7) caches one *chunk* of a
-//! stream per device; the worker folds the chunk index into the stream
-//! key it passes as `kv_head` (`kv_head · seq_shards + chunk`), so this
-//! cache stays chunk-agnostic — a stream is whatever contiguous K/V
-//! range its owner decided to pin here.
+//! **Content keys.**  A full (immutable) page is identified by a hash
+//! *chain* over the stream prefix: `key_i = h(key_{i-1}, K_i, V_i)`
+//! seeded from `(d, page_size)`.  Two streams whose prefixes agree
+//! byte-for-byte through page `i` compute the same chain key, so an
+//! insert can *attach* (refcount + 1) a resident page instead of
+//! copying it — every attach is byte-verified against the candidate
+//! page, so a hash collision degrades to a copy, never to wrong K/V.
+//! A stream's partially-filled *tail* attaches by a second index keyed
+//! on the chain of the full prefix *before* a page: any resident page
+//! with that prefix — a donor's mutable tail or a longer stream's full
+//! page — is shared when the joiner's tail is a byte-verified prefix
+//! of it (the stream just reads fewer rows than the page holds).
 //!
-//! Policies ([`EvictionPolicy`]):
+//! **Copy-on-write.**  Full shared pages are never mutated.  A decode
+//! append lands in the stream's tail page in place only when that page
+//! is exclusively owned (`refs == 1`), still mutable, and exactly this
+//! stream's length; otherwise the tail is copied first (`cow_copies`)
+//! and the shared original keeps serving its other readers bitwise
+//! unchanged.
 //!
-//! * `Lru` — when an insert/append needs pages beyond capacity, closed
-//!   sessions are reaped first, then whole least-recently-used streams
-//!   are evicted (never the stream being grown).  Evicted keys are
-//!   returned to the caller so it can clear the router's sticky pins —
-//!   the next decode step for that stream takes the explicit cache-miss
-//!   fallback (full recompute from the session host tier) and may be
-//!   re-placed on a less loaded device.
-//! * `None` — never evict: anything that does not fit is rejected and
-//!   every later step for that stream recomputes.  (The paper-shaped
-//!   baseline: no cache reuse across steps.)
+//! **Refcount-aware eviction.**  Detaching a stream (close, reap,
+//! replacement) only drops references; a page is freed when — and only
+//! when — its refcount is zero.  Unreferenced pages stay resident as
+//! prefix-reuse candidates and are reclaimed LRU-first under capacity
+//! pressure (`freed_pages`).  When freeing every refcount-0 page still
+//! is not enough, policy `Lru` falls back to evicting whole
+//! least-recently-used *streams* (never the stream being grown),
+//! releasing their references — pages they shared with other live
+//! streams survive (refs > 0), which is the "eviction skips shared
+//! pages" invariant.  Evicted stream keys are returned so the caller
+//! can clear the router's sticky pins.  Policy `None` never evicts
+//! live streams: anything that does not fit after reaping dead streams
+//! and freeing unreferenced pages is rejected.
 //!
-//! Whole-stream eviction (not page-granular) mirrors vLLM's sequence
-//! preemption: a partially evicted prefix is useless for attention, so
-//! pages of one stream live and die together.
+//! Sequence-parallel serving (DESIGN.md §7) still folds the chunk index
+//! into the stream key (`kv_head · seq_shards + chunk`); the cache
+//! stays chunk-agnostic.
+
+use std::collections::HashMap;
 
 use crate::config::EvictionPolicy;
 
@@ -40,20 +61,39 @@ use super::session::SessionId;
 /// kv_page_size, kv_eviction}`).
 #[derive(Clone, Copy, Debug)]
 pub struct KvCacheConfig {
-    /// Total pages on this device.
+    /// Total physical pages on this device.
     pub pages: usize,
     /// Tokens per page.
     pub page_size: usize,
     pub policy: EvictionPolicy,
 }
 
-/// One fixed-size page: the K and V rows of up to `page_size` tokens.
-struct Page {
+/// Slab index of a page (stable for the page's lifetime).
+type PageId = usize;
+
+/// One physical page: the K and V rows of up to `page_size` tokens,
+/// shared by `refs` stream references.
+struct PageEntry {
+    d: usize,
+    /// Tokens stored (== `page_size` once full/immutable).
+    len: usize,
     k: Vec<f32>,
     v: Vec<f32>,
+    /// Stream references holding this page.  Never mutated while > 1;
+    /// freed only at 0.
+    refs: usize,
+    /// LRU stamp (monotonic access clock) for refcount-0 reclamation.
+    last_used: u64,
+    /// Content chain key — `Some` exactly for full, immutable pages
+    /// (registered in the content index).
+    key: Option<u64>,
+    /// Chain key of the full-page prefix *before* this page (the tail
+    /// index key while mutable; the chain input when it fills).
+    prefix_key: u64,
 }
 
-/// One cached `(session, kv_head)` K/V prefix.
+/// One cached `(session, kv_head)` K/V prefix: page references plus
+/// the chain state needed to extend it.
 struct Stream {
     session: SessionId,
     kv_head: usize,
@@ -63,9 +103,12 @@ struct Stream {
     /// never be appended to or served.
     epoch: u64,
     d: usize,
-    /// Tokens currently stored.
+    /// Tokens this stream covers (a shared tail page may physically
+    /// hold more rows than this stream reads).
     len: usize,
-    pages: Vec<Page>,
+    pages: Vec<PageId>,
+    /// Chain key over this stream's full pages (the tail's prefix key).
+    chain: u64,
     /// LRU stamp (monotonic access clock).
     last_used: u64,
 }
@@ -81,21 +124,32 @@ pub struct KvCacheStats {
     pub inserts: u64,
     /// Single-token appends.
     pub appends: u64,
-    /// Live streams evicted under capacity pressure.
+    /// Live streams evicted under capacity pressure (policy `Lru` last
+    /// resort after refcount-0 reclamation).
     pub evictions: u64,
     /// Closed-session streams reaped.
     pub reaped: u64,
     /// Inserts/appends refused for capacity (policy `None`, or a stream
     /// larger than the whole cache).
     pub rejected: u64,
+    /// Pages attached by content match instead of copied (prefix
+    /// sharing at work).
+    pub attached: u64,
+    /// Copy-on-write tail copies (first divergent append to a shared
+    /// tail).
+    pub cow_copies: u64,
+    /// Refcount-0 pages reclaimed under capacity pressure.
+    pub freed_pages: u64,
 }
 
 /// Outcome of an insert/append.
 #[derive(Debug, PartialEq, Eq)]
 pub enum Admit {
     /// The stream is cached; `evicted` lists the `(session, kv_head)`
-    /// streams sacrificed to make room (their pins must be cleared).
-    Cached { evicted: Vec<(SessionId, usize)> },
+    /// streams sacrificed to make room (their pins must be cleared),
+    /// and `attached_pages` counts pages shared by content match
+    /// instead of copied (0 on appends).
+    Cached { evicted: Vec<(SessionId, usize)>, attached_pages: usize },
     /// The stream could not be admitted; the caller must serve from the
     /// host tier (recompute fallback).
     Rejected,
@@ -103,23 +157,76 @@ pub enum Admit {
 
 pub struct KvCache {
     cfg: KvCacheConfig,
+    /// Page slab; `None` slots are free (ids recycled via `free`).
+    slots: Vec<Option<PageEntry>>,
+    free: Vec<PageId>,
     streams: Vec<Stream>,
+    /// Resident (allocated) physical pages — shared pages count once.
     used_pages: usize,
     clock: u64,
+    /// Full-page content index: chain key → resident page.
+    content: HashMap<u64, PageId>,
+    /// Prefix index: full-prefix chain key → every resident page that
+    /// extends that prefix (diverged tails and full pages alike) — the
+    /// tail-attach candidate set.
+    by_prefix: HashMap<u64, Vec<PageId>>,
     pub stats: KvCacheStats,
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn mix(h: u64, x: u32) -> u64 {
+    let mut h = h;
+    for b in x.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Chain seed for a `page_size`-token page geometry — shared with the
+/// coordinator-level prefix index ([`super::session`]) so both layers
+/// speak one definition of page identity.
+pub(crate) fn chain_seed(page_size: usize) -> u64 {
+    mix(mix(FNV_OFFSET, page_size as u32), 0x5eed)
+}
+
+/// Chain step: hash the previous chain value and one page's K/V bit
+/// patterns (FNV-1a over the f32 bits — deterministic, bitwise).
+pub(crate) fn chain_hash(prev: u64, k: &[f32], v: &[f32]) -> u64 {
+    let mut h = mix(mix(FNV_OFFSET, prev as u32), (prev >> 32) as u32);
+    for &x in k {
+        h = mix(h, x.to_bits());
+    }
+    for &x in v {
+        h = mix(h, x.to_bits());
+    }
+    h
 }
 
 impl KvCache {
     pub fn new(cfg: KvCacheConfig) -> KvCache {
         assert!(cfg.pages >= 1, "kv_cache_pages must be >= 1");
         assert!(cfg.page_size >= 1, "kv_page_size must be >= 1");
-        KvCache { cfg, streams: Vec::new(), used_pages: 0, clock: 0, stats: KvCacheStats::default() }
+        KvCache {
+            cfg,
+            slots: Vec::new(),
+            free: Vec::new(),
+            streams: Vec::new(),
+            used_pages: 0,
+            clock: 0,
+            content: HashMap::new(),
+            by_prefix: HashMap::new(),
+            stats: KvCacheStats::default(),
+        }
     }
 
     pub fn capacity_pages(&self) -> usize {
         self.cfg.pages
     }
 
+    /// Resident physical pages (a page shared by N streams counts
+    /// once — the §11 sharing-aware accounting).
     pub fn used_pages(&self) -> usize {
         self.used_pages
     }
@@ -128,8 +235,88 @@ impl KvCache {
         self.streams.len()
     }
 
+    /// Chain seed: ties keys to the cache geometry so streams of a
+    /// different page size can never alias.
+    fn seed(&self) -> u64 {
+        chain_seed(self.cfg.page_size)
+    }
+
     fn pages_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.cfg.page_size)
+    }
+
+    fn entry(&self, pid: PageId) -> &PageEntry {
+        self.slots[pid].as_ref().expect("live page id")
+    }
+
+    fn entry_mut(&mut self, pid: PageId) -> &mut PageEntry {
+        self.slots[pid].as_mut().expect("live page id")
+    }
+
+    fn touch_page(&mut self, pid: PageId) {
+        self.clock += 1;
+        let clock = self.clock;
+        self.entry_mut(pid).last_used = clock;
+    }
+
+    /// Allocate a page and register it in the prefix index (and, when
+    /// full, the content index) so later inserts can attach it.
+    fn alloc_page(&mut self, e: PageEntry) -> PageId {
+        let (prefix, key) = (e.prefix_key, e.key);
+        self.used_pages += 1;
+        let pid = match self.free.pop() {
+            Some(pid) => {
+                self.slots[pid] = Some(e);
+                pid
+            }
+            None => {
+                self.slots.push(Some(e));
+                self.slots.len() - 1
+            }
+        };
+        self.by_prefix.entry(prefix).or_default().push(pid);
+        if let Some(k) = key {
+            self.content.entry(k).or_insert(pid);
+        }
+        pid
+    }
+
+    /// Drop one stream reference to a page (the page stays resident as
+    /// a reuse candidate; refcount-0 pages are reclaimed by
+    /// [`KvCache::make_room`] under pressure).
+    fn release(&mut self, pid: PageId) {
+        let e = self.entry_mut(pid);
+        e.refs = e.refs.saturating_sub(1);
+    }
+
+    /// Free a refcount-0 page: unindex it and return its slot.
+    fn free_page(&mut self, pid: PageId) {
+        let (key, prefix_key) = {
+            let e = self.entry(pid);
+            debug_assert_eq!(e.refs, 0, "never free a referenced page");
+            (e.key, e.prefix_key)
+        };
+        if let Some(k) = key {
+            if self.content.get(&k) == Some(&pid) {
+                self.content.remove(&k);
+            }
+        }
+        if let Some(cands) = self.by_prefix.get_mut(&prefix_key) {
+            cands.retain(|&c| c != pid);
+            if cands.is_empty() {
+                self.by_prefix.remove(&prefix_key);
+            }
+        }
+        self.slots[pid] = None;
+        self.free.push(pid);
+        self.used_pages -= 1;
+    }
+
+    /// Release every page reference a stream holds.
+    fn release_stream_pages(&mut self, pages: &[PageId]) {
+        for &pid in pages {
+            self.release(pid);
+        }
     }
 
     fn find(&self, sid: SessionId, kv_head: usize) -> Option<usize> {
@@ -154,30 +341,35 @@ impl KvCache {
         self.cached_state(sid, kv_head).map(|(len, _)| len)
     }
 
-    /// Drop one stream (if present), freeing its pages.
+    /// Drop one stream (if present), releasing its page references.
+    /// Pages it exclusively held stay resident (refcount 0) as prefix
+    /// reuse candidates until capacity pressure reclaims them.
     pub fn remove(&mut self, sid: SessionId, kv_head: usize) -> bool {
         match self.find(sid, kv_head) {
             None => false,
             Some(i) => {
                 let s = self.streams.swap_remove(i);
-                self.used_pages -= s.pages.len();
+                self.release_stream_pages(&s.pages);
                 true
             }
         }
     }
 
-    /// Free `need` pages: reap dead streams first (closed sessions and
-    /// stale incarnations, per `live(session, epoch)`), then LRU-evict
-    /// live streams.  `protect` is never reaped *or* evicted — the
-    /// stream being grown must survive even if its session was closed
-    /// mid-flight (the in-flight step still completes; the stream is
-    /// reaped on a later allocation).  Returns the evicted live keys,
-    /// or `Err` when the policy forbids eviction or nothing evictable
-    /// remains.
+    /// Free `need` page slots.  Order (DESIGN.md §11): reap dead
+    /// streams (closed sessions and stale incarnations, per
+    /// `live(session, epoch)`) so their references drop; reclaim
+    /// refcount-0 pages LRU-first (skipping `keep`, the pages a pending
+    /// insert plans to attach); then — policy `Lru` only — evict whole
+    /// LRU live streams, whose *shared* pages survive because their
+    /// refcount stays positive.  `protect` is never reaped or evicted:
+    /// the stream being grown must survive even if its session closed
+    /// mid-flight.  Returns evicted live keys (pin clearing), or `Err`
+    /// when the policy forbids eviction or nothing reclaimable remains.
     fn make_room(
         &mut self,
         need: usize,
         protect: Option<(SessionId, usize)>,
+        keep: &[PageId],
         live: &dyn Fn(SessionId, u64) -> bool,
     ) -> Result<Vec<(SessionId, usize)>, ()> {
         if self.used_pages + need > self.cfg.pages {
@@ -187,7 +379,7 @@ impl KvCache {
                 let s = &self.streams[i];
                 if !live(s.session, s.epoch) && protect != Some((s.session, s.kv_head)) {
                     let s = self.streams.swap_remove(i);
-                    self.used_pages -= s.pages.len();
+                    self.release_stream_pages(&s.pages);
                     self.stats.reaped += 1;
                 } else {
                     i += 1;
@@ -196,9 +388,27 @@ impl KvCache {
         }
         let mut evicted = Vec::new();
         while self.used_pages + need > self.cfg.pages {
+            // Refcount-0 pages first: unreferenced prefix candidates
+            // are the only pages eviction may actually free.
+            let freeable = self
+                .slots
+                .iter()
+                .enumerate()
+                .filter_map(|(pid, s)| s.as_ref().map(|e| (pid, e)))
+                .filter(|&(pid, e)| e.refs == 0 && !keep.contains(&pid))
+                .min_by_key(|&(_, e)| e.last_used)
+                .map(|(pid, _)| pid);
+            if let Some(pid) = freeable {
+                self.free_page(pid);
+                self.stats.freed_pages += 1;
+                continue;
+            }
             if self.cfg.policy == EvictionPolicy::None {
                 return Err(());
             }
+            // Last resort: evict the LRU live stream.  Its references
+            // drop; only pages nobody else shares become freeable on
+            // the next loop turn — shared pages survive by refcount.
             let victim = self
                 .streams
                 .iter()
@@ -210,7 +420,7 @@ impl KvCache {
                 None => return Err(()),
                 Some(i) => {
                     let s = self.streams.swap_remove(i);
-                    self.used_pages -= s.pages.len();
+                    self.release_stream_pages(&s.pages);
                     self.stats.evictions += 1;
                     evicted.push((s.session, s.kv_head));
                 }
@@ -220,7 +430,12 @@ impl KvCache {
     }
 
     /// Insert (or replace) a whole stream of `len = k.len() / d` tokens
-    /// belonging to session incarnation `epoch`.
+    /// belonging to session incarnation `epoch`.  Full pages whose
+    /// content chain matches a resident page (byte-verified) are
+    /// *attached* instead of copied; a matching resident tail is shared
+    /// the same way.  `Admit::Cached::attached_pages` reports how many
+    /// pages the stream shares — the device worker's prefix-attach
+    /// signal.
     #[allow(clippy::too_many_arguments)]
     pub fn insert(
         &mut self,
@@ -237,24 +452,105 @@ impl KvCache {
         assert_eq!(k.len(), v.len());
         let len = k.len() / d;
         self.remove(sid, kv_head);
-        let need = self.pages_for(len);
-        if len == 0 || need > self.cfg.pages {
+        if len == 0 || self.pages_for(len) > self.cfg.pages {
             self.stats.rejected += 1;
             return Admit::Rejected;
         }
-        let evicted = match self.make_room(need, None, live) {
+        let ps = self.cfg.page_size;
+        let full = len / ps;
+        let tail = len - full * ps;
+
+        // Pass 1: plan — walk the chain, matching resident pages.
+        // `Some(pid)` attaches, `None` allocates; `chains[p]` is the
+        // chain key *after* page p.
+        let mut plan: Vec<Option<PageId>> = Vec::with_capacity(full);
+        let mut chains: Vec<u64> = Vec::with_capacity(full);
+        let mut chain = self.seed();
+        for p in 0..full {
+            let (lo, hi) = (p * ps * d, (p + 1) * ps * d);
+            chain = chain_hash(chain, &k[lo..hi], &v[lo..hi]);
+            chains.push(chain);
+            let hit = self.content.get(&chain).copied().filter(|&pid| {
+                let e = self.entry(pid);
+                e.d == d && e.k == k[lo..hi] && e.v == v[lo..hi]
+            });
+            plan.push(hit);
+        }
+        let mut tail_plan: Option<PageId> = None;
+        if tail > 0 {
+            if let Some(cands) = self.by_prefix.get(&chain) {
+                let lo = full * ps * d;
+                tail_plan = cands.iter().copied().find(|&pid| {
+                    let e = self.entry(pid);
+                    e.d == d
+                        && e.len >= tail
+                        && e.k[..tail * d] == k[lo..]
+                        && e.v[..tail * d] == v[lo..]
+                });
+            }
+        }
+
+        let new_pages = plan.iter().filter(|p| p.is_none()).count()
+            + usize::from(tail > 0 && tail_plan.is_none());
+        let keep: Vec<PageId> =
+            plan.iter().flatten().copied().chain(tail_plan).collect();
+        let evicted = match self.make_room(new_pages, None, &keep, live) {
             Ok(e) => e,
             Err(()) => {
                 self.stats.rejected += 1;
                 return Admit::Rejected;
             }
         };
-        let rows_per_page = self.cfg.page_size;
-        let mut pages = Vec::with_capacity(need);
-        for p in 0..need {
-            let lo = p * rows_per_page * d;
-            let hi = ((p + 1) * rows_per_page * d).min(len * d);
-            pages.push(Page { k: k[lo..hi].to_vec(), v: v[lo..hi].to_vec() });
+
+        // Pass 2: materialize references.
+        let mut pages = Vec::with_capacity(full + usize::from(tail > 0));
+        let mut attached = 0usize;
+        let mut prev = self.seed();
+        for p in 0..full {
+            let (lo, hi) = (p * ps * d, (p + 1) * ps * d);
+            let key = chains[p];
+            let pid = match plan[p] {
+                Some(pid) => {
+                    self.entry_mut(pid).refs += 1;
+                    attached += 1;
+                    pid
+                }
+                None => self.alloc_page(PageEntry {
+                    d,
+                    len: ps,
+                    k: k[lo..hi].to_vec(),
+                    v: v[lo..hi].to_vec(),
+                    refs: 1,
+                    last_used: 0,
+                    key: Some(key),
+                    prefix_key: prev,
+                }),
+            };
+            self.touch_page(pid);
+            pages.push(pid);
+            prev = key;
+        }
+        if tail > 0 {
+            let lo = full * ps * d;
+            let pid = match tail_plan {
+                Some(pid) => {
+                    self.entry_mut(pid).refs += 1;
+                    attached += 1;
+                    pid
+                }
+                None => self.alloc_page(PageEntry {
+                    d,
+                    len: tail,
+                    k: k[lo..].to_vec(),
+                    v: v[lo..].to_vec(),
+                    refs: 1,
+                    last_used: 0,
+                    key: None,
+                    prefix_key: prev,
+                }),
+            };
+            self.touch_page(pid);
+            pages.push(pid);
         }
         self.clock += 1;
         self.streams.push(Stream {
@@ -264,15 +560,20 @@ impl KvCache {
             d,
             len,
             pages,
+            chain: prev,
             last_used: self.clock,
         });
-        self.used_pages += need;
         self.stats.inserts += 1;
-        Admit::Cached { evicted }
+        self.stats.attached += attached as u64;
+        Admit::Cached { evicted, attached_pages: attached }
     }
 
-    /// Append one token's K/V row to an existing stream, allocating a
-    /// new page when the last one is full.  On a capacity rejection the
+    /// Append one token's K/V row to an existing stream.  A full tail
+    /// starts a fresh page; a shared (or longer-than-this-stream, or
+    /// already-immutable) tail is copied first — copy-on-write, so the
+    /// divergence never mutates what other streams read.  When the tail
+    /// fills it freezes: it gets its chain key and joins the content
+    /// index for future prefix matches.  On a capacity rejection the
     /// (now stale) stream is dropped entirely — a prefix missing its
     /// newest token is useless for this and every later step.
     pub fn append(
@@ -288,9 +589,20 @@ impl KvCache {
         };
         assert_eq!(k_row.len(), self.streams[i].d, "append row must be (1, d)");
         assert_eq!(k_row.len(), v_row.len());
-        let needs_page = self.streams[i].len % self.cfg.page_size == 0;
-        let evicted = if needs_page {
-            match self.make_room(1, Some((sid, kv_head)), live) {
+        let ps = self.cfg.page_size;
+        let d = self.streams[i].d;
+        let tail_len = self.streams[i].len % ps;
+        let needs_page = tail_len == 0;
+        // Copy-on-write test: mutate the tail in place only when it is
+        // exclusively ours, still mutable, and exactly our length.
+        let needs_cow = !needs_page && {
+            let pid = *self.streams[i].pages.last().expect("stream has a page");
+            let e = self.entry(pid);
+            e.refs > 1 || e.key.is_some() || e.len != tail_len
+        };
+        let evicted = if needs_page || needs_cow {
+            let keep: Vec<PageId> = self.streams[i].pages.clone();
+            match self.make_room(1, Some((sid, kv_head)), &keep, live) {
                 Ok(e) => e,
                 Err(()) => {
                     self.remove(sid, kv_head);
@@ -304,40 +616,95 @@ impl KvCache {
         // Re-find: make_room may have swap-removed around our index.
         // (It never touches the protected stream itself, but stay
         // graceful — a worker thread must not die on a cache panic.)
-        let page_cap = self.cfg.page_size * k_row.len();
         let Some(i) = self.find(sid, kv_head) else {
             self.stats.rejected += 1;
             return Admit::Rejected;
         };
-        if needs_page {
-            self.streams[i].pages.push(Page {
-                k: Vec::with_capacity(page_cap),
-                v: Vec::with_capacity(page_cap),
+        let chain = self.streams[i].chain;
+        let pid = if needs_page {
+            let pid = self.alloc_page(PageEntry {
+                d,
+                len: 0,
+                k: Vec::with_capacity(ps * d),
+                v: Vec::with_capacity(ps * d),
+                refs: 1,
+                last_used: 0,
+                key: None,
+                prefix_key: chain,
             });
-            self.used_pages += 1;
+            self.streams[i].pages.push(pid);
+            pid
+        } else {
+            let old = *self.streams[i].pages.last().expect("stream has a page");
+            if needs_cow {
+                let (ck, cv) = {
+                    let e = self.entry(old);
+                    (e.k[..tail_len * d].to_vec(), e.v[..tail_len * d].to_vec())
+                };
+                let pid = self.alloc_page(PageEntry {
+                    d,
+                    len: tail_len,
+                    k: ck,
+                    v: cv,
+                    refs: 1,
+                    last_used: 0,
+                    key: None,
+                    prefix_key: chain,
+                });
+                self.release(old);
+                *self.streams[i].pages.last_mut().expect("stream has a page") = pid;
+                self.stats.cow_copies += 1;
+                pid
+            } else {
+                old
+            }
+        };
+        {
+            let e = self.entry_mut(pid);
+            e.k.extend_from_slice(k_row);
+            e.v.extend_from_slice(v_row);
+            e.len += 1;
         }
-        let page = self.streams[i].pages.last_mut().expect("stream has a page");
-        page.k.extend_from_slice(k_row);
-        page.v.extend_from_slice(v_row);
+        // A tail that just filled freezes: it becomes immutable, gains
+        // its chain key, and joins the content index so future inserts
+        // can attach one page deeper.  (It stays in the prefix index —
+        // full pages are tail-attach candidates too.)
+        if self.entry(pid).len == ps {
+            let key = {
+                let e = self.entry(pid);
+                chain_hash(e.prefix_key, &e.k, &e.v)
+            };
+            self.entry_mut(pid).key = Some(key);
+            self.content.entry(key).or_insert(pid);
+            self.streams[i].chain = key;
+        }
+        self.touch_page(pid);
         self.streams[i].len += 1;
         self.clock += 1;
         self.streams[i].last_used = self.clock;
         self.stats.appends += 1;
-        Admit::Cached { evicted }
+        Admit::Cached { evicted, attached_pages: 0 }
     }
 
     /// Copy a stream's pages into contiguous `(len, d)` K and V
     /// matrices — the model of the device streaming its pages through
-    /// the array (the `O(len · d)` bytes `fsa_decode_perf` charges).
+    /// the array (the `O(len · d)` bytes `fsa_decode_perf` charges).  A
+    /// shared tail page may hold more rows than this stream covers;
+    /// only the stream's own `len` tokens are gathered.
     pub fn gather(&self, sid: SessionId, kv_head: usize) -> Option<(Vec<f32>, Vec<f32>)> {
         let i = self.find(sid, kv_head)?;
         let s = &self.streams[i];
         let mut k = Vec::with_capacity(s.len * s.d);
         let mut v = Vec::with_capacity(s.len * s.d);
-        for p in &s.pages {
-            k.extend_from_slice(&p.k);
-            v.extend_from_slice(&p.v);
+        let mut remaining = s.len;
+        for &pid in &s.pages {
+            let e = self.entry(pid);
+            let rows = remaining.min(self.cfg.page_size).min(e.len);
+            k.extend_from_slice(&e.k[..rows * s.d]);
+            v.extend_from_slice(&e.v[..rows * s.d]);
+            remaining -= rows;
         }
+        debug_assert_eq!(remaining, 0, "stream pages cover its length");
         Some((k, v))
     }
 }
@@ -359,19 +726,26 @@ mod tests {
     }
     const LIVE: &fn(SessionId, u64) -> bool = &(all_live as fn(SessionId, u64) -> bool);
 
+    fn cached(admit: Admit) -> (Vec<(SessionId, usize)>, usize) {
+        match admit {
+            Admit::Cached { evicted, attached_pages } => (evicted, attached_pages),
+            Admit::Rejected => panic!("expected Cached"),
+        }
+    }
+
     #[test]
     fn insert_append_gather_round_trip() {
         let d = 4;
         let mut c = cache(8, 2, EvictionPolicy::Lru);
         let (k, v) = (rows(3, d, 0.0), rows(3, d, 100.0));
-        assert_eq!(c.insert(1, 0, 1, d, &k, &v, LIVE), Admit::Cached { evicted: vec![] });
+        assert_eq!(cached(c.insert(1, 0, 1, d, &k, &v, LIVE)), (vec![], 0));
         assert_eq!(c.cached_len(1, 0), Some(3));
         assert_eq!(c.used_pages(), 2); // ceil(3/2)
 
         // Append fills the half-full page, then allocates a new one.
-        assert_eq!(c.append(1, 0, &rows(1, d, 50.0), &rows(1, d, 60.0), LIVE), Admit::Cached { evicted: vec![] });
+        assert_eq!(cached(c.append(1, 0, &rows(1, d, 50.0), &rows(1, d, 60.0), LIVE)), (vec![], 0));
         assert_eq!(c.used_pages(), 2);
-        assert_eq!(c.append(1, 0, &rows(1, d, 70.0), &rows(1, d, 80.0), LIVE), Admit::Cached { evicted: vec![] });
+        assert_eq!(cached(c.append(1, 0, &rows(1, d, 70.0), &rows(1, d, 80.0), LIVE)), (vec![], 0));
         assert_eq!(c.used_pages(), 3);
         assert_eq!(c.cached_len(1, 0), Some(5));
 
@@ -385,19 +759,142 @@ mod tests {
         assert_eq!(c.stats.appends, 2);
     }
 
+    /// Tentpole: two streams carrying the same content share physical
+    /// pages — used_pages counts them once, the joiner attaches instead
+    /// of copying, and both gathers stay bitwise the inserted data.
+    #[test]
+    fn identical_prefixes_share_pages() {
+        let d = 2;
+        let mut c = cache(8, 2, EvictionPolicy::Lru);
+        let (k, v) = (rows(5, d, 0.0), rows(5, d, 100.0));
+        // Cold insert: 3 pages (2 full + tail), nothing to attach.
+        assert_eq!(cached(c.insert(1, 0, 1, d, &k, &v, LIVE)), (vec![], 0));
+        assert_eq!(c.used_pages(), 3);
+        // Warm insert of the same content under another session: every
+        // page (including the tail) attaches; zero new pages.
+        assert_eq!(cached(c.insert(2, 0, 2, d, &k, &v, LIVE)), (vec![], 3));
+        assert_eq!(c.used_pages(), 3);
+        assert_eq!(c.stats.attached, 3);
+        let (k1, v1) = c.gather(1, 0).unwrap();
+        let (k2, v2) = c.gather(2, 0).unwrap();
+        assert_eq!((&k1, &v1), (&k, &v));
+        assert_eq!((k1, v1), (k2, v2));
+        // A shorter prefix of the same content shares the full pages
+        // and reads the shared tail partially.
+        assert_eq!(cached(c.insert(3, 0, 3, d, &k[..3 * d], &v[..3 * d], LIVE)).1, 2);
+        let (k3, _) = c.gather(3, 0).unwrap();
+        assert_eq!(k3, &k[..3 * d]);
+        // Divergent content does NOT share (byte-verified, not just
+        // hash-trusted).
+        let kx = rows(5, d, 7777.0);
+        assert_eq!(cached(c.insert(4, 0, 4, d, &kx, &kx, LIVE)).1, 0);
+        assert_eq!(c.used_pages(), 6);
+    }
+
+    /// Property (DESIGN.md §11): COW on tail divergence — appends to a
+    /// shared tail copy first; the donor's bytes never move.
+    #[test]
+    fn cow_copies_a_shared_tail_on_divergent_append() {
+        let d = 2;
+        let mut c = cache(8, 4, EvictionPolicy::Lru);
+        let (k, v) = (rows(3, d, 0.0), rows(3, d, 100.0));
+        c.insert(1, 0, 1, d, &k, &v, LIVE);
+        assert_eq!(cached(c.insert(2, 0, 2, d, &k, &v, LIVE)), (vec![], 1));
+        assert_eq!(c.used_pages(), 1);
+        // First divergent append: stream 1 copies the shared tail
+        // before writing — the copy-on-write moment.
+        cached(c.append(1, 0, &rows(1, d, 11.0), &rows(1, d, 11.5), LIVE));
+        assert_eq!(c.stats.cow_copies, 1);
+        assert_eq!(c.used_pages(), 2);
+        // Stream 2 now owns the original exclusively, so its divergent
+        // append mutates in place — no second copy needed.
+        cached(c.append(2, 0, &rows(1, d, 22.0), &rows(1, d, 22.5), LIVE));
+        assert_eq!(c.stats.cow_copies, 1);
+        assert_eq!(c.used_pages(), 2);
+        let (k1, _) = c.gather(1, 0).unwrap();
+        let (k2, _) = c.gather(2, 0).unwrap();
+        assert_eq!(&k1[..3 * d], &k[..]);
+        assert_eq!(&k2[..3 * d], &k[..], "donor bytes must survive the divergence");
+        assert_eq!(&k1[3 * d..], &rows(1, d, 11.0)[..]);
+        assert_eq!(&k2[3 * d..], &rows(1, d, 22.0)[..]);
+    }
+
+    /// Property: a page is never freed while referenced — capacity
+    /// pressure reclaims refcount-0 pages and evicts LRU streams, but a
+    /// page shared with a surviving stream outlives the eviction and
+    /// its reader still gathers bitwise-intact data.
+    #[test]
+    fn eviction_never_frees_referenced_pages() {
+        let d = 2;
+        let mut c = cache(4, 2, EvictionPolicy::Lru);
+        let (k, v) = (rows(4, d, 0.0), rows(4, d, 100.0));
+        // Sessions 1 and 2 share both pages; session 3 fills the rest.
+        c.insert(1, 0, 1, d, &k, &v, LIVE);
+        assert_eq!(cached(c.insert(2, 0, 2, d, &k, &v, LIVE)).1, 2);
+        c.insert(3, 0, 3, d, &rows(4, d, 500.0), &rows(4, d, 500.0), LIVE);
+        assert_eq!(c.used_pages(), 4);
+        // Make session 1 the LRU stream, then force pressure: the LRU
+        // eviction takes stream 1, but its pages survive via session
+        // 2's references — the freed capacity comes from stream 3.
+        let _ = c.cached_len(3, 0);
+        let _ = c.cached_len(2, 0);
+        let (evicted, _) = cached(c.insert(4, 0, 4, d, &rows(4, d, 900.0), &rows(4, d, 900.0), LIVE));
+        assert!(!evicted.is_empty());
+        let (k2, v2) = c.gather(2, 0).unwrap();
+        assert_eq!((k2, v2), (k.clone(), v.clone()), "shared pages must survive eviction");
+        assert!(c.used_pages() <= c.capacity_pages());
+    }
+
+    /// Property: close releases references — a removed stream's
+    /// exclusive pages become refcount-0 and are reclaimed (not
+    /// evicted-as-a-stream) under the next pressure.
+    #[test]
+    fn remove_releases_references_for_lru_reclaim() {
+        let d = 2;
+        let mut c = cache(4, 1, EvictionPolicy::Lru);
+        c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE);
+        c.insert(2, 0, 2, d, &rows(2, d, 50.0), &rows(2, d, 50.0), LIVE);
+        assert_eq!(c.used_pages(), 4);
+        assert!(c.remove(1, 0));
+        // Pages stay resident as reuse candidates…
+        assert_eq!(c.used_pages(), 4);
+        // …until pressure reclaims exactly them, with no live-stream
+        // eviction.
+        let (evicted, _) = cached(c.insert(3, 0, 3, d, &rows(2, d, 70.0), &rows(2, d, 70.0), LIVE));
+        assert!(evicted.is_empty(), "refcount-0 reclaim, not eviction: {evicted:?}");
+        assert_eq!(c.stats.freed_pages, 2);
+        assert_eq!(c.stats.evictions, 0);
+        assert_eq!(c.cached_len(2, 0), Some(2));
+    }
+
+    /// A removed stream's pages stay attachable: the next session with
+    /// the same content re-attaches them instead of re-copying (the
+    /// cross-session prefix cache surviving the donor's close).
+    #[test]
+    fn unreferenced_pages_stay_attachable() {
+        let d = 2;
+        let mut c = cache(8, 2, EvictionPolicy::Lru);
+        let (k, v) = (rows(4, d, 0.0), rows(4, d, 100.0));
+        c.insert(1, 0, 1, d, &k, &v, LIVE);
+        assert!(c.remove(1, 0));
+        assert_eq!(c.used_pages(), 2);
+        assert_eq!(cached(c.insert(2, 0, 2, d, &k, &v, LIVE)), (vec![], 2));
+        assert_eq!(c.used_pages(), 2);
+        let (k2, _) = c.gather(2, 0).unwrap();
+        assert_eq!(k2, k);
+    }
+
     #[test]
     fn lru_evicts_coldest_stream_and_reports_keys() {
         let d = 2;
         let mut c = cache(4, 1, EvictionPolicy::Lru);
         assert!(matches!(c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE), Admit::Cached { .. }));
-        assert!(matches!(c.insert(2, 0, 2, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE), Admit::Cached { .. }));
+        assert!(matches!(c.insert(2, 0, 2, d, &rows(2, d, 30.0), &rows(2, d, 30.0), LIVE), Admit::Cached { .. }));
         assert_eq!(c.used_pages(), 4);
         // Touch stream 1 so stream 2 is LRU.
         let _ = c.cached_len(1, 0);
-        match c.insert(3, 0, 3, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE) {
-            Admit::Cached { evicted } => assert_eq!(evicted, vec![(2, 0)]),
-            r => panic!("expected eviction, got {r:?}"),
-        }
+        let (evicted, _) = cached(c.insert(3, 0, 3, d, &rows(2, d, 60.0), &rows(2, d, 60.0), LIVE));
+        assert_eq!(evicted, vec![(2, 0)]);
         assert!(c.cached_len(2, 0).is_none());
         assert_eq!(c.cached_len(1, 0), Some(2));
         assert_eq!(c.stats.evictions, 1);
@@ -412,7 +909,6 @@ mod tests {
         // the stale stream), not evict-then-grow itself.
         assert_eq!(c.append(1, 0, &rows(1, d, 9.0), &rows(1, d, 9.0), LIVE), Admit::Rejected);
         assert!(c.cached_len(1, 0).is_none());
-        assert_eq!(c.used_pages(), 0);
         assert_eq!(c.stats.rejected, 1);
     }
 
@@ -421,7 +917,7 @@ mod tests {
         let d = 2;
         let mut c = cache(2, 1, EvictionPolicy::None);
         assert!(matches!(c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE), Admit::Cached { .. }));
-        assert_eq!(c.insert(2, 0, 2, d, &rows(1, d, 0.0), &rows(1, d, 0.0), LIVE), Admit::Rejected);
+        assert_eq!(c.insert(2, 0, 2, d, &rows(1, d, 50.0), &rows(1, d, 50.0), LIVE), Admit::Rejected);
         // The resident stream is untouched.
         assert_eq!(c.cached_len(1, 0), Some(2));
         assert_eq!(c.stats.evictions, 0);
@@ -440,13 +936,11 @@ mod tests {
         let d = 2;
         let mut c = cache(4, 1, EvictionPolicy::Lru);
         assert!(matches!(c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE), Admit::Cached { .. }));
-        assert!(matches!(c.insert(2, 0, 2, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE), Admit::Cached { .. }));
+        assert!(matches!(c.insert(2, 0, 2, d, &rows(2, d, 30.0), &rows(2, d, 30.0), LIVE), Admit::Cached { .. }));
         // Session 1 is closed: its pages are reclaimed, session 2 keeps its.
         let live = |sid: SessionId, _: u64| sid != 1;
-        match c.insert(3, 0, 3, d, &rows(2, d, 0.0), &rows(2, d, 0.0), &live) {
-            Admit::Cached { evicted } => assert!(evicted.is_empty(), "reap, not evict: {evicted:?}"),
-            r => panic!("{r:?}"),
-        }
+        let (evicted, _) = cached(c.insert(3, 0, 3, d, &rows(2, d, 60.0), &rows(2, d, 60.0), &live));
+        assert!(evicted.is_empty(), "reap, not evict: {evicted:?}");
         assert_eq!(c.stats.reaped, 1);
         assert_eq!(c.stats.evictions, 0);
         assert_eq!(c.cached_len(2, 0), Some(2));
@@ -464,33 +958,33 @@ mod tests {
         let mut c = cache(3, 1, EvictionPolicy::Lru);
         c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE);
         let dead = |_: SessionId, _: u64| false;
-        match c.append(1, 0, &rows(1, d, 9.0), &rows(1, d, 9.0), &dead) {
-            Admit::Cached { evicted } => assert!(evicted.is_empty()),
-            r => panic!("append must survive a dead session: {r:?}"),
-        }
+        let (evicted, _) = cached(c.append(1, 0, &rows(1, d, 9.0), &rows(1, d, 9.0), &dead));
+        assert!(evicted.is_empty());
         assert_eq!(c.cached_len(1, 0), Some(3));
         // The dead stream is reaped on the next allocation pressure.
-        c.insert(2, 0, 2, d, &rows(2, d, 0.0), &rows(2, d, 0.0), &dead);
+        c.insert(2, 0, 2, d, &rows(3, d, 50.0), &rows(3, d, 50.0), &dead);
         assert!(c.cached_len(1, 0).is_none());
         assert!(c.stats.reaped >= 1);
     }
 
+    /// Property: a reused session id under a fresh epoch cannot
+    /// resurrect the dead incarnation's stream — the stale stream is
+    /// reaped, the new insert is its own stream, and content-level page
+    /// reuse (which IS legal across incarnations) stays byte-verified.
     #[test]
     fn stale_epoch_streams_are_reaped_like_closed_sessions() {
         let d = 2;
         let mut c = cache(4, 1, EvictionPolicy::Lru);
         c.insert(1, 0, 1, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE);
-        c.insert(2, 0, 2, d, &rows(2, d, 0.0), &rows(2, d, 0.0), LIVE);
+        c.insert(2, 0, 2, d, &rows(2, d, 30.0), &rows(2, d, 30.0), LIVE);
         // Session 1 was closed and its id reused under epoch 7: the
         // epoch-1 stream is dead even though the id is live.
         let live = |sid: SessionId, epoch: u64| match sid {
             1 => epoch == 7,
             _ => true,
         };
-        match c.insert(3, 0, 3, d, &rows(2, d, 0.0), &rows(2, d, 0.0), &live) {
-            Admit::Cached { evicted } => assert!(evicted.is_empty(), "reap, not evict"),
-            r => panic!("{r:?}"),
-        }
+        let (evicted, _) = cached(c.insert(3, 0, 3, d, &rows(2, d, 60.0), &rows(2, d, 60.0), &live));
+        assert!(evicted.is_empty(), "reap, not evict");
         assert!(c.cached_state(1, 0).is_none());
         assert_eq!(c.cached_state(2, 0), Some((2, 2)));
     }
@@ -521,6 +1015,26 @@ mod tests {
         assert_eq!(c.stream_count(), 2);
         assert!(c.remove(1, 0));
         assert_eq!(c.stream_count(), 1);
-        assert_eq!(c.used_pages(), 2);
+    }
+
+    /// An appended tail that fills freezes into the content index: the
+    /// next same-content insert attaches the frozen page too.
+    #[test]
+    fn filled_tails_freeze_and_become_attachable() {
+        let d = 2;
+        let mut c = cache(8, 2, EvictionPolicy::Lru);
+        let (k, v) = (rows(1, d, 0.0), rows(1, d, 100.0));
+        c.insert(1, 0, 1, d, &k, &v, LIVE);
+        cached(c.append(1, 0, &rows(1, d, 10.0), &rows(1, d, 110.0), LIVE));
+        // Stream 1 now holds one full (frozen) page.  A session whose
+        // prefill carries the same two tokens attaches it.
+        let (k2, v2) = c.gather(1, 0).unwrap();
+        assert_eq!(cached(c.insert(2, 0, 2, d, &k2, &v2, LIVE)), (vec![], 1));
+        assert_eq!(c.used_pages(), 1);
+        // And the frozen page is immutable for stream 1's next append:
+        // the new token starts a fresh page, not a mutation.
+        cached(c.append(1, 0, &rows(1, d, 20.0), &rows(1, d, 120.0), LIVE));
+        let (k2b, _) = c.gather(2, 0).unwrap();
+        assert_eq!(k2b, k2, "the shared frozen page must not move");
     }
 }

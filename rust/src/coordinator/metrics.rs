@@ -43,6 +43,8 @@ use crate::numerics::SplitMix64;
 use crate::telemetry::{json::Json, Histogram};
 
 use super::request::{AttentionResponse, OpKind};
+#[cfg(test)]
+use super::request::ResponseStats;
 
 /// Default bound on retained latency samples (the reservoir keeps a
 /// uniform sample past this; [`Metrics::with_latency_capacity`] shrinks
@@ -173,6 +175,19 @@ pub struct Metrics {
     /// Live KV streams evicted from device caches under capacity
     /// pressure.
     pub kv_evictions: AtomicU64,
+    /// Prefill admissions whose hash-chain walk found a cached prefix
+    /// (DESIGN.md §11).  Only counted while the prefix cache is
+    /// enabled, so `hits / (hits + misses)` is the true hit rate.
+    pub prefix_hits: AtomicU64,
+    /// Prefill admissions that found no cached prefix.
+    pub prefix_misses: AtomicU64,
+    /// KV pages attached by content match instead of copied (summed
+    /// over completed requests).
+    pub prefix_attached_pages: AtomicU64,
+    /// Copy-on-write tail copies on the device caches.
+    pub cow_copies: AtomicU64,
+    /// Modeled device cycles resumed prefills avoided vs. cold runs.
+    pub saved_prefill_cycles: AtomicU64,
     /// Latency samples offered to the reservoir (every completion).
     pub latency_samples: AtomicU64,
     /// Offers past reservoir capacity: retained only by uniform
@@ -353,10 +368,15 @@ impl Metrics {
         if resp.num_heads > 1 {
             self.multi_head_requests.fetch_add(1, Ordering::Relaxed);
         }
-        if resp.seq_chunks > 1 {
+        if resp.stats.seq_chunks > 1 {
             self.seqpar_requests.fetch_add(1, Ordering::Relaxed);
         }
-        self.merge_steps.fetch_add(resp.merge_steps as u64, Ordering::Relaxed);
+        self.merge_steps.fetch_add(resp.stats.merge_steps as u64, Ordering::Relaxed);
+        self.prefix_attached_pages
+            .fetch_add(resp.stats.prefix_attached_pages as u64, Ordering::Relaxed);
+        self.cow_copies.fetch_add(resp.stats.cow_copies as u64, Ordering::Relaxed);
+        self.saved_prefill_cycles
+            .fetch_add(resp.stats.saved_prefill_cycles, Ordering::Relaxed);
         self.device_cycles.fetch_add(resp.device_cycles, Ordering::Relaxed);
         let ns = resp.latency.as_nanos() as u64;
         self.kind_latency[resp.kind.index()].record(ns);
@@ -429,6 +449,13 @@ impl Metrics {
             ("kv_evictions", self.kv_evictions.load(o)),
             ("latency_samples", self.latency_samples.load(o)),
             ("latency_drops", self.latency_drops.load(o)),
+            // Prefix-cache counters (DESIGN.md §11) — appended after the
+            // historical names so existing schema consumers keep working.
+            ("prefix_hits", self.prefix_hits.load(o)),
+            ("prefix_misses", self.prefix_misses.load(o)),
+            ("prefix_attached_pages", self.prefix_attached_pages.load(o)),
+            ("cow_copies", self.cow_copies.load(o)),
+            ("saved_prefill_cycles", self.saved_prefill_cycles.load(o)),
         ];
         let latency_ns = {
             let res = super::lock(&self.latencies_ns);
@@ -478,7 +505,9 @@ impl Metrics {
              sessions {}/{} decode_steps {} \
              sched iter/queued/admitted/rejected {}/{}/{}/{} \
              waves prefill/decode/multi_session {}/{}/{} \
-             kv hit/miss/evict {}/{}/{} latency p50 {:?} p95 {:?} max {:?} \
+             kv hit/miss/evict {}/{}/{} \
+             prefix hit/miss/attached/cow {}/{}/{}/{} saved_cycles {} \
+             latency p50 {:?} p95 {:?} max {:?} \
              drops {}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -507,6 +536,11 @@ impl Metrics {
             self.kv_hits.load(Ordering::Relaxed),
             self.kv_misses.load(Ordering::Relaxed),
             self.kv_evictions.load(Ordering::Relaxed),
+            self.prefix_hits.load(Ordering::Relaxed),
+            self.prefix_misses.load(Ordering::Relaxed),
+            self.prefix_attached_pages.load(Ordering::Relaxed),
+            self.cow_copies.load(Ordering::Relaxed),
+            self.saved_prefill_cycles.load(Ordering::Relaxed),
             p50,
             p95,
             max,
@@ -526,8 +560,6 @@ mod tests {
             num_heads: heads,
             num_kv_heads: heads,
             shards: heads,
-            seq_chunks: 1,
-            merge_steps: 0,
             device_cycles: 100,
             critical_path_cycles: 100,
             device_time: Duration::from_micros(1),
@@ -536,11 +568,8 @@ mod tests {
             device_id: 0,
             devices_used: vec![0],
             bucket: 128,
-            kv_hits: 0,
-            kv_misses: 0,
-            measured_shards: 0,
             kind: OpKind::Stateless,
-            cycle_breakdown: None,
+            stats: ResponseStats { seq_chunks: 1, ..ResponseStats::default() },
         }
     }
 
@@ -611,9 +640,9 @@ mod tests {
     fn sequence_shards_and_merges_counted_distinctly() {
         let m = Metrics::new();
         let mut r = resp(1, 4);
-        r.seq_chunks = 4;
+        r.stats.seq_chunks = 4;
         r.shards = 16;
-        r.merge_steps = 12;
+        r.stats.merge_steps = 12;
         m.record(&r, true);
         m.record(&resp(1, 4), true); // legacy multi-head response
         let o = Ordering::Relaxed;
@@ -797,6 +826,35 @@ mod tests {
             pretty.get("counters").unwrap().get("submitted").unwrap().as_u64(),
             Some(5)
         );
+    }
+
+    /// Prefix-cache counters flow from [`ResponseStats`] into the
+    /// snapshot and summary (DESIGN.md §11).
+    #[test]
+    fn prefix_cache_counters_flow_from_stats_to_snapshot() {
+        let m = Metrics::new();
+        let o = Ordering::Relaxed;
+        m.prefix_hits.fetch_add(3, o);
+        m.prefix_misses.fetch_add(1, o);
+        let mut r = resp(1, 1);
+        r.kind = OpKind::Prefill;
+        r.stats.prefix_reused_tokens = 32;
+        r.stats.prefix_attached_pages = 2;
+        r.stats.cow_copies = 1;
+        r.stats.saved_prefill_cycles = 1234;
+        m.record(&r, true);
+        let snap = m.snapshot();
+        assert_eq!(snap.counter("prefix_hits"), Some(3));
+        assert_eq!(snap.counter("prefix_misses"), Some(1));
+        assert_eq!(snap.counter("prefix_attached_pages"), Some(2));
+        assert_eq!(snap.counter("cow_copies"), Some(1));
+        assert_eq!(snap.counter("saved_prefill_cycles"), Some(1234));
+        // The historical counter names stay where consumers expect them.
+        assert!(snap.counter("kv_hits").is_some());
+        assert!(snap.counter("latency_drops").is_some());
+        let s = m.summary();
+        assert!(s.contains("prefix hit/miss/attached/cow 3/1/2/1"), "{s}");
+        assert!(s.contains("saved_cycles 1234"), "{s}");
     }
 
     /// Satellite: the continuous-scheduler counters and the

@@ -145,6 +145,12 @@ impl Coordinator {
         };
 
         let (ingress, ingress_rx) = mpsc::sync_channel(cfg.queue_depth);
+        // Prefix caching (DESIGN.md §11) needs a backend with a resumed
+        // prefill kind: the reference twin and the sim serve it, the
+        // AOT PJRT artifacts do not.  `validate` already refused the
+        // strict-PJRT combination; an `auto` pool that resolved to PJRT
+        // silently serves cold, matching auto's fallback contract.
+        let prefix_page = if cfg.prefix_cache && caps.seqpar { cfg.kv_page_size } else { 0 };
         let scheduler = Scheduler::new(
             cfg.max_batch,
             cfg.batch_timeout_cycles,
@@ -157,7 +163,8 @@ impl Coordinator {
                 waiting_served_ratio: cfg.waiting_served_ratio,
             },
         )
-        .with_tracer(tracer.clone());
+        .with_tracer(tracer.clone())
+        .with_prefix_cache(prefix_page);
         let m2 = metrics.clone();
         let s2 = sessions.clone();
         let scheduler_handle = std::thread::Builder::new()

@@ -20,10 +20,13 @@
 //! changes when they run, never what they compute.
 //!
 //! Budget semantics:
-//! * `max_prefill_tokens` caps Σ `seq_len` over the prefill-class
-//!   (stateless + prefill) entries admitted in ONE wave.  An entry
-//!   whose own `seq_len` exceeds the cap can never be scheduled and is
-//!   rejected outright, with an error naming the knob.
+//! * `max_prefill_tokens` caps Σ `seq_len − resumed_from` over the
+//!   prefill-class (stateless + prefill) entries admitted in ONE wave —
+//!   the uncovered suffix each entry will actually compute; with the
+//!   prefix cache off `resumed_from` is always 0 and this is plain
+//!   Σ `seq_len`.  An entry whose own suffix exceeds the cap can never
+//!   be scheduled and is rejected outright, with an error naming the
+//!   knob.
 //! * `max_total_tokens` caps live session tokens plus the
 //!   prefill-class tokens admitted this wave.  An entry that would
 //!   push past it *waits* (sessions close, tokens free up); one that
@@ -94,13 +97,22 @@ enum Class {
     SessionFollowup { session: u64 },
 }
 
+/// Budget-relevant token count of a prefill-class entry: the uncovered
+/// suffix the devices will actually compute.  `resumed_from` is stamped
+/// by the scheduler's prefix match *before* the envelope enters the
+/// queue (DESIGN.md §11), so cache-covered tokens stop competing for
+/// prefill budget; 0 everywhere the prefix cache is off.
+fn suffix_tokens(env: &Envelope) -> usize {
+    env.req.seq_len - env.req.resumed_from.min(env.req.seq_len)
+}
+
 fn class(env: &Envelope) -> Class {
     match env.req.op {
         SessionOp::Stateless => {
-            Class::PrefillClass { tokens: env.req.seq_len, session: None }
+            Class::PrefillClass { tokens: suffix_tokens(env), session: None }
         }
         SessionOp::Prefill { session } => {
-            Class::PrefillClass { tokens: env.req.seq_len, session: Some(session) }
+            Class::PrefillClass { tokens: suffix_tokens(env), session: Some(session) }
         }
         SessionOp::Decode { session, .. } | SessionOp::Close { session } => {
             Class::SessionFollowup { session }
@@ -391,6 +403,33 @@ mod tests {
         let wave = q.pop_wave(&policy(32, 1000, 10, true));
         assert_eq!(ids(&wave), vec![(1, true), (2, true)]);
         assert!(q.is_empty());
+    }
+
+    /// Satellite (prefix cache, DESIGN.md §11): a resumed prefill is
+    /// priced at its uncovered suffix, not its full `seq_len` — the
+    /// cache-covered tokens stop competing for prefill budget.
+    #[test]
+    fn resumed_prefill_is_priced_at_its_suffix() {
+        let mut q = WaitQueue::new();
+        let mut env = prefill(1, 7, 40);
+        env.req.resumed_from = 32; // 8-token uncovered suffix
+        q.push(env);
+        assert_eq!(q.waiting_prefill_tokens(), 8);
+        // A budget far below the full length admits it.
+        let wave = q.pop_wave(&policy(8, 1000, 0, true));
+        assert_eq!(ids(&wave), vec![(1, true)]);
+        // One under the suffix still rejects (the error quotes the
+        // suffix count, the work the wave would actually run).
+        let mut q = WaitQueue::new();
+        let mut env = prefill(2, 7, 40);
+        env.req.resumed_from = 32;
+        q.push(env);
+        let wave = q.pop_wave(&policy(7, 1000, 0, true));
+        assert_eq!(ids(&wave), vec![(2, false)]);
+        match &wave[0] {
+            Verdict::Reject(_, msg) => assert!(msg.contains("request of 8 tokens"), "{msg}"),
+            Verdict::Admit(_) => panic!("must be rejected"),
+        }
     }
 
     /// `allow_prefill = false` (the waiting-ratio gate) defers every

@@ -13,7 +13,9 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::mask::MaskKind;
-use crate::schedule::{decode_attention_flops, masked_attention_flops};
+use crate::schedule::{
+    decode_attention_flops, masked_attention_flops, masked_attention_flops_resumed,
+};
 use crate::sim::CycleBreakdown;
 
 use super::session::{SessionId, SessionOp};
@@ -115,6 +117,19 @@ pub struct AttentionRequest {
     /// row attends the whole prefix); the admission gate rejects masked
     /// ones.
     pub mask: MaskKind,
+    /// Prefill only: tokens already covered by the device prefix cache
+    /// at admission (DESIGN.md §11) — the devices resume prefill from
+    /// query row `resumed_from` and only the uncovered suffix is
+    /// computed (bitwise the cold run's suffix rows).  Stamped by the
+    /// admission gate's prefix match; 0 elsewhere (and whenever
+    /// `--prefix-cache off`).
+    pub resumed_from: usize,
+    /// Prefill only: the live donor session whose indexed prefix the
+    /// admission match byte-verified against (DESIGN.md §11) — the
+    /// scheduler adopts its device placement so the warm session's
+    /// shards land where the shared pages live.  Stamped together with
+    /// `resumed_from`; `None` elsewhere.
+    pub prefix_donor: Option<SessionId>,
 }
 
 impl AttentionRequest {
@@ -162,6 +177,8 @@ impl AttentionRequest {
             prefill_len: 0,
             epoch: 0,
             mask: MaskKind::None,
+            resumed_from: 0,
+            prefix_donor: None,
         }
     }
 
@@ -230,6 +247,8 @@ impl AttentionRequest {
             prefill_len: 0,
             epoch: 0,
             mask: MaskKind::None,
+            resumed_from: 0,
+            prefix_donor: None,
         }
     }
 
@@ -264,12 +283,26 @@ impl AttentionRequest {
     /// when unmasked, mask-reduced counts otherwise (causal ≈ half; see
     /// [`masked_attention_flops`]).  KV sharing changes memory traffic,
     /// not FLOPs.  For a decode step the per-head work is one query row
-    /// over the whole prefix, `4 L d` with `L = prefix_len`.
+    /// over the whole prefix, `4 L d` with `L = prefix_len`.  A
+    /// cache-resumed prefill (`resumed_from > 0`, DESIGN.md §11) counts
+    /// only the suffix query rows actually computed — utilization stays
+    /// achieved-work over spent-cycles, not a free lunch.
     pub fn flops(&self) -> u64 {
         match self.op {
             SessionOp::Decode { .. } => {
                 self.num_heads as u64
                     * decode_attention_flops(self.prefix_len.max(self.seq_len), self.d)
+            }
+            _ if self.resumed_from > 0 && self.resumed_from < self.seq_len => {
+                self.num_heads as u64
+                    * masked_attention_flops_resumed(
+                        self.seq_len,
+                        self.d,
+                        self.mask,
+                        self.resumed_from,
+                        0,
+                        self.seq_len,
+                    )
             }
             _ => self.num_heads as u64 * masked_attention_flops(self.seq_len, self.d, self.mask),
         }
@@ -335,8 +368,57 @@ impl AttentionRequest {
                 MaskKind::None => MaskKind::PaddingKeys { valid: self.seq_len },
                 m => m,
             },
+            resumed_from: self.resumed_from,
+            prefix_donor: self.prefix_donor,
         }
     }
+}
+
+/// Execution statistics gathered into one [`AttentionResponse`]: the
+/// sharding/caching/measurement accounting, consolidated so the
+/// response proper stays the answer ("output, cost, latency") and every
+/// diagnostic rides in one structured place.  `Default` is the inline
+/// lifecycle reply (all zero, no attribution).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ResponseStats {
+    /// Sequence chunks each head was split into (DESIGN.md §7); 1 on
+    /// the legacy whole-sequence path, 0 for inline lifecycle replies.
+    pub seq_chunks: usize,
+    /// Partial-merge steps the gather performed (`num_heads ·
+    /// (seq_chunks − 1)` when sequence-sharded, else 0) — counted
+    /// distinctly from head shards in [`super::metrics::Metrics`].
+    pub merge_steps: usize,
+    /// Decode shards served from device KV-cache pages.
+    pub kv_hits: usize,
+    /// Decode shards that took the cache-miss recompute fallback.
+    pub kv_misses: usize,
+    /// Shards whose `device_cycles` share was *measured* on the
+    /// cycle-accurate machine (`backend=sim`, DESIGN.md §8) rather than
+    /// predicted by the perfmodel — `shards` on a sim pool, 0 on the
+    /// modeled backends.
+    pub measured_shards: usize,
+    /// Per-instruction-class attribution of `device_cycles` (DESIGN.md
+    /// §9): present iff *every* shard executed on the cycle-accurate
+    /// machine (`measured_shards == shards`, plus the decode-miss
+    /// recompute charge); its `total()` equals `device_cycles` exactly.
+    /// `None` on modeled backends and inline lifecycle replies.
+    pub cycle_breakdown: Option<CycleBreakdown>,
+    /// Prefill only: tokens per KV head the prefix cache covered at
+    /// admission (the request's `resumed_from`, DESIGN.md §11) — the
+    /// devices computed only the `seq_len − prefix_reused_tokens`
+    /// suffix rows.
+    pub prefix_reused_tokens: usize,
+    /// KV pages this request's streams attached by content match
+    /// instead of copying (prefix sharing across its shards).
+    pub prefix_attached_pages: usize,
+    /// Copy-on-write tail copies this request's decode appends
+    /// triggered on its devices.
+    pub cow_copies: usize,
+    /// Modeled device cycles the resumed prefill avoided relative to a
+    /// cold full-prefix run, summed over shards
+    /// ([`crate::perfmodel::fsa_flash_resumed_perf`]); 0 when nothing
+    /// resumed.
+    pub saved_prefill_cycles: u64,
 }
 
 /// Completed request, gathered over all of its head shards.
@@ -353,13 +435,6 @@ pub struct AttentionResponse {
     pub num_kv_heads: usize,
     /// Shards gathered into this response (`num_heads · seq_chunks`).
     pub shards: usize,
-    /// Sequence chunks each head was split into (DESIGN.md §7); 1 on
-    /// the legacy whole-sequence path, 0 for inline lifecycle replies.
-    pub seq_chunks: usize,
-    /// Partial-merge steps the gather performed (`num_heads ·
-    /// (seq_chunks − 1)` when sequence-sharded, else 0) — counted
-    /// distinctly from head shards in [`super::metrics::Metrics`].
-    pub merge_steps: usize,
     /// Total simulated FSA device cycles *consumed* across all shards
     /// (the cost metric: what the pool spent).
     pub device_cycles: u64,
@@ -381,24 +456,12 @@ pub struct AttentionResponse {
     pub devices_used: Vec<usize>,
     /// Padded bucket used.
     pub bucket: usize,
-    /// Decode shards served from device KV-cache pages.
-    pub kv_hits: usize,
-    /// Decode shards that took the cache-miss recompute fallback.
-    pub kv_misses: usize,
-    /// Shards whose `device_cycles` share was *measured* on the
-    /// cycle-accurate machine (`backend=sim`, DESIGN.md §8) rather than
-    /// predicted by the perfmodel — `shards` on a sim pool, 0 on the
-    /// modeled backends.
-    pub measured_shards: usize,
     /// SLO class of the request ([`OpKind::of`] its session op) — which
     /// latency histogram this completion lands in.
     pub kind: OpKind,
-    /// Per-instruction-class attribution of `device_cycles` (DESIGN.md
-    /// §9): present iff *every* shard executed on the cycle-accurate
-    /// machine (`measured_shards == shards`, plus the decode-miss
-    /// recompute charge); its `total()` equals `device_cycles` exactly.
-    /// `None` on modeled backends and inline lifecycle replies.
-    pub cycle_breakdown: Option<CycleBreakdown>,
+    /// Sharding / cache / measurement accounting (one struct instead of
+    /// the historical six loose fields).
+    pub stats: ResponseStats,
 }
 
 /// Internal envelope: request + reply channel + enqueue timestamp.

@@ -438,7 +438,7 @@ mod tests {
         }
         let resp = resp_rx.try_recv().expect("gather completes");
         assert_eq!(resp.shards, 4);
-        assert_eq!(resp.kv_hits, 4);
+        assert_eq!(resp.stats.kv_hits, 4);
         assert!(resp_rx.try_recv().is_err(), "answered exactly once");
     }
 }

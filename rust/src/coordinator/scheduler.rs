@@ -41,7 +41,7 @@ use super::metrics::Metrics;
 use super::queue::{Verdict, WaitQueue, WavePolicy};
 use super::request::Envelope;
 use super::router::Router;
-use super::session::SessionTable;
+use super::session::{SessionOp, SessionTable};
 use super::shard::{explode, ShardCtx, ShardEnvelope};
 use super::trace::{EventKind, Tracer, NO_DEVICE, NO_HEAD};
 
@@ -135,6 +135,12 @@ pub struct Scheduler {
     caps: PoolCapabilities,
     /// Token budgets + ratio knob (DESIGN.md §10).
     budget: TokenBudget,
+    /// Cross-session prefix cache page size in tokens (DESIGN.md §11):
+    /// the block granularity of the [`SessionTable`] prefix index the
+    /// admission match hash-walks.  0 (the default) disables prefix
+    /// matching entirely — every request runs cold, exactly the
+    /// pre-§11 behavior.
+    prefix_page_size: usize,
     /// Request-path event sink (DESIGN.md §9); disabled by default.
     tracer: Arc<Tracer>,
 }
@@ -155,6 +161,7 @@ impl Scheduler {
             seq_shards: seq_shards.max(1),
             caps,
             budget,
+            prefix_page_size: 0,
             tracer: Tracer::off(),
         }
     }
@@ -163,6 +170,13 @@ impl Scheduler {
     /// directly constructed schedulers keep the disabled default).
     pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Scheduler {
         self.tracer = tracer;
+        self
+    }
+
+    /// Enable cross-session prefix matching at `page_size`-token block
+    /// granularity (DESIGN.md §11); 0 keeps it off (the default).
+    pub fn with_prefix_cache(mut self, page_size: usize) -> Scheduler {
+        self.prefix_page_size = page_size;
         self
     }
 
@@ -193,11 +207,11 @@ impl Scheduler {
             let mut ingested = 0usize;
             match rx.recv_timeout(self.timeout.min(Duration::from_millis(5))) {
                 Ok(env) => {
-                    self.ingest(env, &mut wait, &metrics);
+                    self.ingest(env, &mut wait, &metrics, &sessions);
                     ingested += 1;
                     // Opportunistically drain whatever else is queued.
                     while let Ok(env) = rx.try_recv() {
-                        self.ingest(env, &mut wait, &metrics);
+                        self.ingest(env, &mut wait, &metrics, &sessions);
                         ingested += 1;
                     }
                 }
@@ -279,9 +293,56 @@ impl Scheduler {
 
     /// Ingest one envelope into the wait queue (trace payload: queue
     /// length after the push).
-    fn ingest(&self, env: Envelope, wait: &mut WaitQueue, metrics: &Metrics) {
+    ///
+    /// With the prefix cache on, this is where a prefill is matched
+    /// against the live sessions' indexed prefixes (DESIGN.md §11) and
+    /// stamped `resumed_from`/`prefix_donor` — BEFORE it enters the
+    /// queue, so the token budgets and the waiting ratio price only the
+    /// uncovered suffix it will actually compute.  The match is
+    /// hash-walked then byte-verified ([`SessionTable::match_prefix`]),
+    /// so a stamp can never be a collision; a donor closing between
+    /// here and execution is harmless (the stamp only selects which
+    /// query rows the devices compute — the request carries its full
+    /// K/V either way).
+    fn ingest(
+        &self,
+        mut env: Envelope,
+        wait: &mut WaitQueue,
+        metrics: &Metrics,
+        sessions: &SessionTable,
+    ) {
         metrics.sched_queued.fetch_add(1, Ordering::Relaxed);
         let (id, session) = (env.req.id, op_session(&env.req.op));
+        if self.prefix_page_size > 0 && matches!(env.req.op, SessionOp::Prefill { .. }) {
+            match sessions.match_prefix(&env.req, self.prefix_page_size) {
+                Some(m) => {
+                    env.req.resumed_from = m.covered;
+                    env.req.prefix_donor = Some(m.donor);
+                    metrics.prefix_hits.fetch_add(1, Ordering::Relaxed);
+                    self.tracer.record(
+                        EventKind::PrefixHit,
+                        id,
+                        session,
+                        NO_HEAD,
+                        NO_HEAD,
+                        NO_DEVICE,
+                        m.covered as u64,
+                    );
+                }
+                None => {
+                    metrics.prefix_misses.fetch_add(1, Ordering::Relaxed);
+                    self.tracer.record(
+                        EventKind::PrefixMiss,
+                        id,
+                        session,
+                        NO_HEAD,
+                        NO_HEAD,
+                        NO_DEVICE,
+                        0,
+                    );
+                }
+            }
+        }
         wait.push(env);
         self.tracer.record(
             EventKind::Enqueue,
@@ -320,6 +381,22 @@ impl Scheduler {
             return;
         };
         metrics.sched_admitted.fetch_add(1, o);
+        // Prefix-cache bookkeeping (DESIGN.md §11), now that the gate
+        // has opened the session: adopt the donor's device placement so
+        // the warm session's KV streams land where the shared pages
+        // live (attach by refcount instead of copying), then index the
+        // new prefix so later arrivals can resume from it.  Matching
+        // happens at ingest and indexing here, strictly after — so a
+        // request can never match itself.  `adopt_placement` is a no-op
+        // when the donor closed in between.
+        if self.prefix_page_size > 0 {
+            if let SessionOp::Prefill { session: sid } = env.req.op {
+                if let Some(donor) = env.req.prefix_donor {
+                    sessions.adopt_placement(donor, sid);
+                }
+                sessions.index_prefix(sid, self.prefix_page_size);
+            }
+        }
         let (id, session) = (env.req.id, op_session(&env.req.op));
         self.tracer.record(
             EventKind::Admit,
@@ -485,6 +562,64 @@ mod tests {
             key(MaskKind::PaddingKeys { valid: 100 }),
             key(MaskKind::PaddingKeys { valid: 101 })
         );
+    }
+
+    /// Satellite (prefix cache, DESIGN.md §11): ingest stamps a
+    /// byte-verified prefix match onto the request — and only with the
+    /// cache enabled — so the wait queue prices the uncovered suffix.
+    #[test]
+    fn ingest_stamps_prefix_matches_only_when_enabled() {
+        use crate::coordinator::metrics::Metrics;
+        use crate::coordinator::queue::WaitQueue;
+        use crate::coordinator::session::SessionTable;
+
+        let sessions = SessionTable::new();
+        let metrics = Metrics::new();
+        let d = 2;
+        let kv: Vec<f32> = (0..8 * d).map(|x| x as f32 + 1.0).collect();
+        // Donor: a live session with an indexed prefix.
+        let donor =
+            AttentionRequest::prefill(1, 7, 8, d, 1, 1, vec![0.0; 8 * d], kv.clone(), kv.clone());
+        sessions.open(7, &donor, 1).unwrap();
+        sessions.index_prefix(7, 4);
+        let mk = || Envelope {
+            req: AttentionRequest::prefill(
+                2, 9, 8, d, 1, 1, vec![1.0; 8 * d], kv.clone(), kv.clone(),
+            ),
+            reply: mpsc::channel().0,
+            enqueued: Instant::now(),
+        };
+        let sched = |page: usize| {
+            Scheduler::new(
+                4,
+                150_000,
+                1.5,
+                1,
+                PoolCapabilities::reference(),
+                TokenBudget::unlimited(),
+            )
+            .with_prefix_cache(page)
+        };
+        let o = Ordering::Relaxed;
+        // Disabled (the default): no stamp, no counters touched.
+        let mut wait = WaitQueue::new();
+        sched(0).ingest(mk(), &mut wait, &metrics, &sessions);
+        assert_eq!(wait.waiting_prefill_tokens(), 8);
+        assert_eq!(metrics.prefix_hits.load(o) + metrics.prefix_misses.load(o), 0);
+        // Enabled: the shared 4-token page boundary matches (coverage
+        // is capped below seq_len so at least one suffix row runs) and
+        // the queue prices only the suffix.
+        let mut wait = WaitQueue::new();
+        sched(4).ingest(mk(), &mut wait, &metrics, &sessions);
+        assert_eq!(wait.waiting_prefill_tokens(), 4);
+        assert_eq!(metrics.prefix_hits.load(o), 1);
+        // Divergent first-page content: a miss, priced at full length.
+        let mut wait = WaitQueue::new();
+        let mut env = mk();
+        env.req.k[2] += 1.0;
+        sched(4).ingest(env, &mut wait, &metrics, &sessions);
+        assert_eq!(wait.waiting_prefill_tokens(), 8);
+        assert_eq!(metrics.prefix_misses.load(o), 1);
     }
 
     /// Satellite (admission boundaries): the waiting-ratio decision —

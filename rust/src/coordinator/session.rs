@@ -37,6 +37,7 @@ use std::sync::Mutex;
 
 use crate::mask::MaskKind;
 
+use super::kvcache::{chain_hash, chain_seed};
 use super::request::AttentionRequest;
 
 /// Session identifier, chosen by the client (must be unique among live
@@ -123,6 +124,18 @@ struct Session {
     placement: Vec<Option<usize>>,
 }
 
+/// A cross-session prefix match found at admission (DESIGN.md §11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefixMatch {
+    /// The live session whose retained prefix covers the new request's
+    /// leading tokens (byte-verified, not just hash-matched).
+    pub donor: SessionId,
+    /// Covered tokens — page-aligned and strictly below the new
+    /// request's `seq_len`, so a warm prefill always computes at least
+    /// one suffix row.  This is the `resumed_from` stamp.
+    pub covered: usize,
+}
+
 /// Coordinator-global session registry shared by the scheduler
 /// (lifecycle + host tier + live-token budgets), the router (sticky
 /// placement) and the device workers (miss fallback + eviction
@@ -132,6 +145,14 @@ struct Inner {
     sessions: HashMap<SessionId, Session>,
     /// Monotonic epoch source (starts at 1 so 0 means "no epoch").
     next_epoch: u64,
+    /// Cross-session prefix index (DESIGN.md §11): chain hash over the
+    /// first `i` pages of a session's K/V (all KV heads interleaved
+    /// page-major) → candidate donors `(session, epoch, covered
+    /// tokens)`.  Populated by [`SessionTable::index_prefix`] after a
+    /// cold prefill admits; consulted hash-first, then byte-verified
+    /// against the donor's host tier, by
+    /// [`SessionTable::match_prefix`].
+    prefix: HashMap<u64, Vec<(SessionId, u64, usize)>>,
 }
 
 #[derive(Default)]
@@ -259,9 +280,138 @@ impl SessionTable {
         Ok(DecodeAdmit { prefix_len: s.len, epoch: s.epoch, prefill_len: s.prefill_len })
     }
 
-    /// Retire a session.  Returns false when it was not open.
+    /// Retire a session.  Returns false when it was not open.  Its
+    /// prefix-index entries go with it — a dead session can never be a
+    /// prefix donor (its host tier is gone and its device pages are
+    /// reapable), and pruning here keeps the index from accreting
+    /// unmatchable hashes.
     pub fn close(&self, sid: SessionId) -> bool {
-        self.lock().sessions.remove(&sid).is_some()
+        let mut t = self.lock();
+        let gone = t.sessions.remove(&sid).is_some();
+        if gone {
+            t.prefix.retain(|_, cands| {
+                cands.retain(|&(s, _, _)| s != sid);
+                !cands.is_empty()
+            });
+        }
+        gone
+    }
+
+    /// Register an admitted prefill's page-boundary chain hashes in the
+    /// cross-session prefix index (DESIGN.md §11).  Call once, right
+    /// after [`SessionTable::open`] succeeds; `page_size` is the device
+    /// caches' `kv_page_size`, so admission-level coverage is exactly
+    /// the page-aligned sharing the devices can realize.
+    pub fn index_prefix(&self, sid: SessionId, page_size: usize) {
+        if page_size == 0 {
+            return;
+        }
+        let mut t = self.lock();
+        let Some(s) = t.sessions.get(&sid) else { return };
+        let (epoch, d, len, kv_heads) = (s.epoch, s.d, s.len, s.num_kv_heads);
+        let mut chains = Vec::new();
+        let mut c = chain_seed(page_size);
+        let mut page = 0usize;
+        while (page + 1) * page_size <= len {
+            let (lo, hi) = (page * page_size * d, (page + 1) * page_size * d);
+            for h in 0..kv_heads {
+                c = chain_hash(c, &s.k[h][lo..hi], &s.v[h][lo..hi]);
+            }
+            chains.push((c, (page + 1) * page_size));
+            page += 1;
+        }
+        for (c, covered) in chains {
+            t.prefix.entry(c).or_default().push((sid, epoch, covered));
+        }
+    }
+
+    /// Longest indexed prefix of a prefill request's K/V: the deepest
+    /// page boundary whose chain hash names a live donor *and* whose
+    /// bytes equal the donor's host tier (hash-first, byte-verified —
+    /// a collision can never stamp a false resume).  Coverage is
+    /// page-aligned and strictly below `req.seq_len`, so a warm
+    /// prefill always computes at least one suffix row.
+    pub fn match_prefix(&self, req: &AttentionRequest, page_size: usize) -> Option<PrefixMatch> {
+        if page_size == 0 || req.num_kv_heads == 0 || req.d == 0 {
+            return None;
+        }
+        let t = self.lock();
+        // Hash-walk the request's page boundaries, shallow to deep,
+        // collecting hash-matched live candidates; stop at the first
+        // boundary with none (deeper chains extend this one).
+        let mut candidates: Vec<(SessionId, usize)> = Vec::new();
+        let mut c = chain_seed(page_size);
+        let mut page = 0usize;
+        loop {
+            let covered = (page + 1) * page_size;
+            if covered >= req.seq_len {
+                break;
+            }
+            let (lo, hi) = (page * page_size * req.d, covered * req.d);
+            for h in 0..req.num_kv_heads {
+                let (k, v) = req.head_kv(h);
+                c = chain_hash(c, &k[lo..hi], &v[lo..hi]);
+            }
+            let mut found = false;
+            if let Some(cands) = t.prefix.get(&c) {
+                for &(donor, epoch, donor_cov) in cands {
+                    if donor_cov != covered {
+                        continue;
+                    }
+                    if let Some(s) = t.sessions.get(&donor) {
+                        if s.epoch == epoch
+                            && s.d == req.d
+                            && s.num_kv_heads == req.num_kv_heads
+                            && s.len >= covered
+                        {
+                            candidates.push((donor, covered));
+                            found = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if !found {
+                break;
+            }
+            page += 1;
+        }
+        // Byte-verify deepest-first: a verified depth verifies every
+        // shallower boundary, so the first success wins.
+        while let Some((donor, covered)) = candidates.pop() {
+            let Some(s) = t.sessions.get(&donor) else { continue };
+            let n = covered * req.d;
+            let verified = (0..req.num_kv_heads).all(|h| {
+                let (k, v) = req.head_kv(h);
+                s.k[h][..n] == k[..n] && s.v[h][..n] == v[..n]
+            });
+            if verified {
+                return Some(PrefixMatch { donor, covered });
+            }
+        }
+        None
+    }
+
+    /// Copy the donor's sticky placements onto a freshly opened warm
+    /// session (empty slots only): the router then lands the warm
+    /// prefill's shards on the devices already holding the donor's
+    /// pages, where the content-keyed insert can attach instead of
+    /// copy.
+    pub fn adopt_placement(&self, donor: SessionId, sid: SessionId) {
+        let mut t = self.lock();
+        let Some(d) = t.sessions.get(&donor) else { return };
+        let donor_placement = d.placement.clone();
+        let (dkv, dss) = (d.num_kv_heads, d.seq_shards);
+        let Some(s) = t.sessions.get_mut(&sid) else { return };
+        for kv_head in 0..s.num_kv_heads.min(dkv) {
+            for chunk in 0..s.seq_shards.min(dss) {
+                let from = kv_head * dss + chunk;
+                let to = kv_head * s.seq_shards + chunk;
+                if s.placement[to].is_none() {
+                    s.placement[to] = donor_placement[from];
+                }
+            }
+        }
     }
 
     pub fn contains(&self, sid: SessionId) -> bool {
@@ -543,6 +693,100 @@ mod tests {
         assert_eq!(t.placement(404, 0, 0), None);
         t.place(5, 0, 7, 2); // chunk >= seq_shards: ignored
         assert_eq!(t.placement(5, 0, 7), None);
+    }
+
+    /// Row-major `(kv, seq, d)` K/V whose value is a pure function of
+    /// `(head, token, lane)` — prefixes of longer matrices are bitwise
+    /// prefixes of shorter ones, per head.
+    fn kv_mat(kv: usize, seq: usize, d: usize, sign: f32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(kv * seq * d);
+        for h in 0..kv {
+            for t in 0..seq {
+                for x in 0..d {
+                    out.push(sign * (h * 9007 + t * 31 + x + 1) as f32);
+                }
+            }
+        }
+        out
+    }
+
+    /// A prefill whose K/V leading tokens are shared across requests of
+    /// any seq_len (system-prompt shape).
+    fn shared_req(sid: SessionId, seq: usize, d: usize, heads: usize, kv: usize) -> AttentionRequest {
+        AttentionRequest::prefill(
+            1,
+            sid,
+            seq,
+            d,
+            heads,
+            kv,
+            vec![0.5; heads * seq * d],
+            kv_mat(kv, seq, d, 1.0),
+            kv_mat(kv, seq, d, -1.0),
+        )
+    }
+
+    #[test]
+    fn prefix_index_finds_byte_verified_donors() {
+        let t = SessionTable::new();
+        let (d, heads, kv) = (2usize, 2usize, 2usize);
+        t.open(1, &shared_req(1, 8, d, heads, kv), 1).unwrap();
+        t.index_prefix(1, 4);
+        // A longer request sharing the leading bytes matches the
+        // donor's whole indexed prefix (pages of 4 tokens: 4 and 8).
+        let m = t.match_prefix(&shared_req(2, 12, d, heads, kv), 4).unwrap();
+        assert_eq!(m, PrefixMatch { donor: 1, covered: 8 });
+        // An *identical-length* request is capped strictly below its
+        // own seq_len — a warm prefill must keep at least one row.
+        let m = t.match_prefix(&shared_req(2, 8, d, heads, kv), 4).unwrap();
+        assert_eq!(m, PrefixMatch { donor: 1, covered: 4 });
+        // Divergence inside the first page kills the match entirely.
+        let mut k = kv_mat(kv, 12, d, 1.0);
+        k[3] += 1.0; // head 0, token 1
+        let diverged = AttentionRequest::prefill(
+            1, 2, 12, d, heads, kv,
+            vec![0.5; heads * 12 * d], k, kv_mat(kv, 12, d, -1.0),
+        );
+        assert_eq!(t.match_prefix(&diverged, 4), None);
+        // The mask does not gate content sharing (it is evaluated at
+        // global rows by the resumed kernel, DESIGN.md §11).
+        let warm = shared_req(2, 12, d, heads, kv).with_mask(MaskKind::Causal);
+        assert!(t.match_prefix(&warm, 4).is_some());
+        // Shape mismatches never match.
+        assert_eq!(t.match_prefix(&shared_req(2, 12, d * 2, heads, kv / 2), 4), None);
+    }
+
+    #[test]
+    fn closing_the_donor_prunes_its_prefix_entries() {
+        let t = SessionTable::new();
+        let (d, heads, kv) = (2usize, 2usize, 1usize);
+        t.open(1, &shared_req(1, 8, d, heads, kv), 1).unwrap();
+        t.index_prefix(1, 4);
+        assert!(t.match_prefix(&shared_req(2, 12, d, heads, kv), 4).is_some());
+        assert!(t.close(1));
+        assert_eq!(t.match_prefix(&shared_req(2, 12, d, heads, kv), 4), None);
+        // A reused id with different content must not resurrect the
+        // dead donor's coverage.
+        t.open(1, &prefill_req(1, 8, d, heads, kv), 1).unwrap();
+        assert_eq!(t.match_prefix(&shared_req(2, 12, d, heads, kv), 4), None);
+    }
+
+    #[test]
+    fn adopt_placement_copies_only_empty_slots() {
+        let t = SessionTable::new();
+        let (d, heads, kv) = (2usize, 4usize, 2usize);
+        t.open(1, &shared_req(1, 8, d, heads, kv), 2).unwrap();
+        t.place(1, 0, 0, 3);
+        t.place(1, 1, 1, 5);
+        t.open(2, &shared_req(2, 12, d, heads, kv), 2).unwrap();
+        t.place(2, 1, 1, 0); // already placed: adoption must not clobber
+        t.adopt_placement(1, 2);
+        assert_eq!(t.placement(2, 0, 0), Some(3));
+        assert_eq!(t.placement(2, 0, 1), None);
+        assert_eq!(t.placement(2, 1, 1), Some(0));
+        // Unknown donors and sessions are no-ops.
+        t.adopt_placement(404, 2);
+        t.adopt_placement(1, 404);
     }
 
     #[test]

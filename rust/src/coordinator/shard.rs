@@ -36,7 +36,7 @@ use crate::perfmodel::pool_utilization;
 use crate::schedule::live_chunk_ranges;
 use crate::sim::CycleBreakdown;
 
-use super::request::{AttentionRequest, AttentionResponse, Envelope, OpKind};
+use super::request::{AttentionRequest, AttentionResponse, Envelope, OpKind, ResponseStats};
 use super::session::{SessionId, SessionOp};
 
 /// One query head × one sequence chunk of one request: the unit of
@@ -148,6 +148,14 @@ pub struct ShardResult {
     /// `None` on modeled backends.  When present its `total()` equals
     /// `cycles` exactly (including the decode-miss recompute charge).
     pub breakdown: Option<CycleBreakdown>,
+    /// KV pages this shard's stream attached by content match instead
+    /// of copying (prefill inserts, DESIGN.md §11).
+    pub attached_pages: usize,
+    /// Copy-on-write tail copies this shard's append triggered.
+    pub cow_copies: usize,
+    /// Modeled cycles a resumed prefill avoided vs. the cold run of
+    /// this shard (0 when nothing resumed).
+    pub saved_cycles: u64,
 }
 
 struct GatherInner {
@@ -165,6 +173,10 @@ struct GatherInner {
     /// shard did (DESIGN.md §9).
     breakdown_sum: CycleBreakdown,
     breakdown_shards: usize,
+    /// Prefix-cache accounting summed over shards (DESIGN.md §11).
+    attached_pages: usize,
+    cow_copies: usize,
+    saved_cycles: u64,
 }
 
 /// Per-request gather cell shared by all of the request's shards.
@@ -210,6 +222,9 @@ impl Gather {
                 inner.breakdown_sum.add(bd);
                 inner.breakdown_shards += 1;
             }
+            inner.attached_pages += result.attached_pages;
+            inner.cow_copies += result.cow_copies;
+            inner.saved_cycles += result.saved_cycles;
         }
         inner.done[slot] = Some((result.device_id, result.cycles, result.output));
         if inner.remaining > 0 {
@@ -237,7 +252,15 @@ impl Gather {
     /// merge of the sequence partials.
     fn assemble(&self, inner: &mut GatherInner, cfg: &AccelConfig) -> AttentionResponse {
         let req = &self.req;
-        let head_elems = req.seq_len * req.d;
+        // A resumed (prefix-cache warm) prefill computes only the
+        // uncovered suffix query rows, so the response carries
+        // `seq_len - resumed_from` rows per head; row 0 of the output
+        // is global row `resumed_from` (= `stats.prefix_reused_tokens`,
+        // DESIGN.md §11).  Admission caps `resumed_from` below
+        // `seq_len`; the defensive min keeps a corrupt stamp from
+        // underflowing.
+        let head_elems = (req.seq_len - req.resumed_from.min(req.seq_len.saturating_sub(1)))
+            * req.d;
         let live = self.live_chunks;
         // The merge evaluates exp2 exactly like the reference backend
         // that produced the partials (PWL + fp16 MAC, DESIGN.md §7).
@@ -320,8 +343,6 @@ impl Gather {
             num_heads: req.num_heads,
             num_kv_heads: req.num_kv_heads,
             shards: req.num_heads * live,
-            seq_chunks: live,
-            merge_steps,
             device_cycles,
             critical_path_cycles,
             device_time: Duration::from_nanos(
@@ -332,12 +353,20 @@ impl Gather {
             device_id,
             devices_used,
             bucket: req.seq_len,
-            kv_hits: inner.kv_hits,
-            kv_misses: inner.kv_misses,
-            measured_shards: inner.measured_shards,
             kind: OpKind::of(&req.op),
-            cycle_breakdown: (inner.breakdown_shards == req.num_heads * live)
-                .then_some(inner.breakdown_sum),
+            stats: ResponseStats {
+                seq_chunks: live,
+                merge_steps,
+                kv_hits: inner.kv_hits,
+                kv_misses: inner.kv_misses,
+                measured_shards: inner.measured_shards,
+                cycle_breakdown: (inner.breakdown_shards == req.num_heads * live)
+                    .then_some(inner.breakdown_sum),
+                prefix_reused_tokens: req.resumed_from,
+                prefix_attached_pages: inner.attached_pages,
+                cow_copies: inner.cow_copies,
+                saved_prefill_cycles: inner.saved_cycles,
+            },
         }
     }
 }
@@ -402,6 +431,9 @@ pub fn explode(env: Envelope, seq_shards: usize) -> Vec<ShardEnvelope> {
             measured_shards: 0,
             breakdown_sum: CycleBreakdown::default(),
             breakdown_shards: 0,
+            attached_pages: 0,
+            cow_copies: 0,
+            saved_cycles: 0,
         }),
     });
     let mut shards = Vec::with_capacity(num_heads * live);
@@ -464,6 +496,9 @@ mod tests {
             output: Ok(ShardOut::Full(out)),
             cache: CacheOutcome::NotApplicable,
             breakdown: None,
+            attached_pages: 0,
+            cow_copies: 0,
+            saved_cycles: 0,
         }
     }
 
@@ -538,8 +573,8 @@ mod tests {
         let resp = rx.try_recv().expect("gather must reply after last shard");
         assert_eq!(resp.id, 7);
         assert_eq!(resp.shards, 4);
-        assert_eq!(resp.seq_chunks, 1);
-        assert_eq!(resp.merge_steps, 0);
+        assert_eq!(resp.stats.seq_chunks, 1);
+        assert_eq!(resp.stats.merge_steps, 0);
         assert_eq!(resp.num_heads, 4);
         assert_eq!(resp.num_kv_heads, 2);
         assert_eq!(resp.devices_used, vec![0, 1]);
@@ -553,7 +588,8 @@ mod tests {
         }
         assert!(resp.utilization > 0.0);
         assert_eq!(resp.kind, OpKind::Stateless);
-        assert!(resp.cycle_breakdown.is_none(), "modeled shards carry no attribution");
+        assert!(resp.stats.cycle_breakdown.is_none(), "modeled shards carry no attribution");
+        assert_eq!(resp.stats.prefix_reused_tokens, 0, "stateless never resumes");
     }
 
     #[test]
@@ -576,12 +612,12 @@ mod tests {
         };
         // All shards measured: attribution present, summed, exact.
         let resp = mk([true, true]);
-        let bd = resp.cycle_breakdown.expect("all shards carried a breakdown");
+        let bd = resp.stats.cycle_breakdown.expect("all shards carried a breakdown");
         assert_eq!(bd.score, 60);
         assert_eq!(bd.dma, 40);
         assert_eq!(bd.total(), resp.device_cycles);
         // A single modeled shard suppresses the whole-operator claim.
-        assert!(mk([true, false]).cycle_breakdown.is_none());
+        assert!(mk([true, false]).stats.cycle_breakdown.is_none());
     }
 
     #[test]
@@ -627,14 +663,17 @@ mod tests {
                     output: Ok(ShardOut::Partial(oracle_part(s.head, s.kv_range))),
                     cache: CacheOutcome::NotApplicable,
                     breakdown: None,
+                    attached_pages: 0,
+                    cow_copies: 0,
+                    saved_cycles: 0,
                 },
                 &cfg,
             );
         }
         let resp = rx.try_recv().expect("gather replies once all shards land");
         assert_eq!(resp.shards, 4);
-        assert_eq!(resp.seq_chunks, 2);
-        assert_eq!(resp.merge_steps, heads * 1, "one merge per head");
+        assert_eq!(resp.stats.seq_chunks, 2);
+        assert_eq!(resp.stats.merge_steps, heads * 1, "one merge per head");
         assert_eq!(resp.devices_used, vec![0, 1]);
         let out = resp.output.unwrap();
         // The merged result equals the ordered host-side fold, which for
@@ -676,6 +715,9 @@ mod tests {
                     },
                     cache: CacheOutcome::NotApplicable,
                     breakdown: None,
+                    attached_pages: 0,
+                    cow_copies: 0,
+                    saved_cycles: 0,
                 },
                 &fsa(),
             );
@@ -713,14 +755,17 @@ mod tests {
                     output: Ok(ShardOut::Full(vec![0.5; d])),
                     cache: if h == 2 { CacheOutcome::Miss } else { CacheOutcome::Hit },
                     breakdown: None,
+                    attached_pages: 0,
+                    cow_copies: 0,
+                    saved_cycles: 0,
                 },
                 &fsa(),
             );
         }
         let resp = rx.try_recv().unwrap();
-        assert_eq!(resp.kv_hits, 3);
-        assert_eq!(resp.kv_misses, 1);
-        assert_eq!(resp.measured_shards, 1, "one shard priced from measured cycles");
+        assert_eq!(resp.stats.kv_hits, 3);
+        assert_eq!(resp.stats.kv_misses, 1);
+        assert_eq!(resp.stats.measured_shards, 1, "one shard priced from measured cycles");
         assert_eq!(resp.kind, OpKind::Decode);
         // Decode output is one row per head.
         assert_eq!(resp.output.unwrap().len(), 4 * d);

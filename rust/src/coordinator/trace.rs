@@ -82,10 +82,23 @@ pub enum EventKind {
     /// Scheduler queued an ingressed envelope into the wait queue
     /// (payload: wait-queue length after the push, DESIGN.md §10).
     Enqueue,
+    /// Admission matched a prefill against the cross-session prefix
+    /// index (payload: covered tokens = the stamped resume point,
+    /// DESIGN.md §11).
+    PrefixHit,
+    /// Admission found no cached prefix for a prefill (prefix cache
+    /// enabled; payload: 0).
+    PrefixMiss,
+    /// A device cache insert attached already-resident pages by
+    /// refcount instead of copying (payload: pages attached).
+    PrefixAttach,
+    /// An append copied a shared tail page before writing
+    /// (copy-on-write; payload: copies).
+    CowCopy,
 }
 
 /// Number of [`EventKind`] variants (the counts-array size).
-pub const EVENT_KINDS: usize = 10;
+pub const EVENT_KINDS: usize = 14;
 
 impl EventKind {
     /// Stable index for the per-kind count array.
@@ -101,6 +114,10 @@ impl EventKind {
             EventKind::KvMiss => 7,
             EventKind::KvEvict => 8,
             EventKind::Enqueue => 9,
+            EventKind::PrefixHit => 10,
+            EventKind::PrefixMiss => 11,
+            EventKind::PrefixAttach => 12,
+            EventKind::CowCopy => 13,
         }
     }
 
@@ -117,6 +134,10 @@ impl EventKind {
             EventKind::KvMiss => "kv_miss",
             EventKind::KvEvict => "kv_evict",
             EventKind::Enqueue => "enqueue",
+            EventKind::PrefixHit => "prefix_hit",
+            EventKind::PrefixMiss => "prefix_miss",
+            EventKind::PrefixAttach => "prefix_attach",
+            EventKind::CowCopy => "cow_copy",
         }
     }
 
@@ -132,6 +153,10 @@ impl EventKind {
         EventKind::KvMiss,
         EventKind::KvEvict,
         EventKind::Enqueue,
+        EventKind::PrefixHit,
+        EventKind::PrefixMiss,
+        EventKind::PrefixAttach,
+        EventKind::CowCopy,
     ];
 }
 

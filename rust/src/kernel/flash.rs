@@ -81,6 +81,7 @@ pub fn flash_attention_program_masked(
     let cp = ChunkParams {
         n,
         valid_queries: p.seq_len,
+        query_offset: 0,
         valid_keys: p.seq_len,
         key_offset: 0,
         total_keys: p.seq_len,
@@ -120,6 +121,12 @@ pub struct ChunkParams {
     /// Real query rows (the rest of the last row block is zero padding;
     /// its columns compute garbage the caller never reads).
     pub valid_queries: usize,
+    /// Global query index of the first real query row — nonzero only
+    /// for resumed (prefix-cache warm) prefills, whose Q buffer holds
+    /// just the suffix rows.  The mask wave is programmed at global
+    /// query coordinates, so the suffix rows compute bitwise what the
+    /// cold run computed for them (DESIGN.md §11).
+    pub query_offset: usize,
     /// Real key rows in this chunk.
     pub valid_keys: usize,
     /// Global key index of the chunk's first key.
@@ -138,6 +145,7 @@ impl ChunkParams {
         ChunkParams {
             n,
             valid_queries: seq_len,
+            query_offset: 0,
             valid_keys: seq_len,
             key_offset: 0,
             total_keys: seq_len,
@@ -173,6 +181,27 @@ impl ChunkParams {
         p
     }
 
+    /// Resumed-prefill chunk params (DESIGN.md §11): only the suffix
+    /// query rows `[query_offset, seq_len)` are present in the Q
+    /// buffer, over keys `[key_offset, key_offset + chunk_len)` of a
+    /// `total_keys` sequence.  `query_offset = 0` reproduces
+    /// [`ChunkParams::chunk`].
+    pub fn resumed(
+        n: usize,
+        seq_len: usize,
+        mask: MaskKind,
+        query_offset: usize,
+        key_offset: usize,
+        chunk_len: usize,
+        total_keys: usize,
+    ) -> ChunkParams {
+        assert!(query_offset < seq_len, "resume point must leave suffix rows");
+        let mut p = ChunkParams::chunk(n, seq_len, mask, key_offset, chunk_len, total_keys);
+        p.valid_queries = seq_len - query_offset;
+        p.query_offset = query_offset;
+        p
+    }
+
     /// Query rows padded up to whole row blocks.
     pub fn padded_queries(&self) -> usize {
         self.valid_queries.div_ceil(self.n).max(1) * self.n
@@ -196,7 +225,8 @@ impl ChunkParams {
     /// stationary column for both mask kinds.
     pub fn tile_bound(&self, block: usize, col_tile: usize) -> (bool, LaneBound) {
         let n = self.n;
-        let gq0 = block * n;
+        let lq0 = block * n;
+        let gq0 = self.query_offset + lq0;
         let lk0 = col_tile * n;
         let w = n.min(self.valid_keys.saturating_sub(lk0));
         let gk0 = (self.key_offset + lk0) as i64;
@@ -213,7 +243,7 @@ impl ChunkParams {
                 cap: w as u16,
             },
         };
-        let rows_real = n.min(self.valid_queries.saturating_sub(gq0));
+        let rows_real = n.min(self.valid_queries.saturating_sub(lq0));
         let live = w > 0 && (0..rows_real).any(|m| bound.bound(m) > 0);
         (live, bound)
     }
@@ -397,7 +427,7 @@ pub fn flash_decode_row_program(n: usize, prefix_len: usize) -> crate::Result<(C
 }
 
 /// The split-KV decode-range program (partial state, single row
-/// block): the unit `Backend::execute_decode_row_partial` runs.
+/// block): the unit a `ShardPlan::DecodeRange` execution runs.
 pub fn flash_decode_row_partial_program(
     n: usize,
     range_len: usize,
@@ -572,6 +602,38 @@ mod tests {
         let d = ChunkParams::decode_row(32, 37);
         assert_eq!((d.valid_queries, d.row_blocks(), d.padded_keys()), (1, 1, 64));
         assert_eq!(d.tile_bound(0, 1).1.bound(0), 5);
+    }
+
+    #[test]
+    fn resumed_params_program_the_mask_at_global_query_rows() {
+        // Resume at row 32 of a 64-row causal head on a 32-array: one
+        // suffix row block whose global rows are [32, 64) — its tile
+        // bounds are exactly the cold run's row block 1.
+        let r = ChunkParams::resumed(32, 64, MaskKind::Causal, 32, 0, 64, 64);
+        assert_eq!((r.valid_queries, r.row_blocks()), (32, 1));
+        let cold = ChunkParams::whole(32, 64, MaskKind::Causal);
+        for j in 0..2 {
+            let (live_r, b_r) = r.tile_bound(0, j);
+            let (live_c, b_c) = cold.tile_bound(1, j);
+            assert_eq!(live_r, live_c, "tile {j}");
+            assert_eq!((b_r.base, b_r.diag, b_r.cap), (b_c.base, b_c.diag, b_c.cap));
+        }
+        // A tile-misaligned resume point: rows [40, 64) are one ragged
+        // row block; the causal boundary still sits at global row 40.
+        let m = ChunkParams::resumed(32, 64, MaskKind::Causal, 40, 0, 64, 64);
+        assert_eq!((m.valid_queries, m.row_blocks()), (24, 1));
+        let (live, b) = m.tile_bound(0, 1);
+        assert!(live);
+        assert_eq!(b.bound(0), 9, "valid_keys(40) - key tile start 32");
+        // query_offset = 0 reproduces the chunk constructor's bounds.
+        let z = ChunkParams::resumed(32, 64, MaskKind::Causal, 0, 32, 32, 64);
+        let c = ChunkParams::chunk(32, 64, MaskKind::Causal, 32, 32, 64);
+        for blk in 0..2 {
+            let (lz, bz) = z.tile_bound(blk, 0);
+            let (lc, bc) = c.tile_bound(blk, 0);
+            assert_eq!(lz, lc);
+            assert_eq!((bz.base, bz.diag, bz.cap), (bc.base, bc.diag, bc.cap));
+        }
     }
 
     #[test]

@@ -79,6 +79,20 @@ Device / serving commands:
                                per session over the paged KV caches,
                                close, and report hit/miss/eviction
                                counters (backend reference|auto)
+          [--prefix-cache on|off]
+                               cross-session prefix caching (DESIGN.md
+                               §11, off by default): prefills sharing a
+                               byte-identical prefix with a live session
+                               resume from the first uncovered row —
+                               the response carries only the suffix
+                               query rows (bitwise the cold run's) and
+                               shared KV pages attach by refcount; needs
+                               --backend reference|sim (the AOT
+                               artifacts have no resumed kind); with
+                               --decode-steps serving every session's
+                               prompt opens with a shared half-prompt
+                               system prefix so warm prefills resume
+                               from live pages
   help                         this text
 ";
 
@@ -162,6 +176,10 @@ fn serve(args: &Args) -> fsa::Result<()> {
     cfg.kv_cache_pages = args.get("kv-pages", cfg.kv_cache_pages)?;
     cfg.kv_page_size = args.get("page-size", cfg.kv_page_size)?;
     cfg.kv_eviction = args.flag("eviction").unwrap_or("lru").parse()?;
+    if let Some(v) = args.flag("prefix-cache") {
+        cfg.prefix_cache = fsa::config::parse_on_off(v)
+            .ok_or_else(|| anyhow::anyhow!("--prefix-cache {v:?}: expected on|off"))?;
+    }
     cfg.mask = args.flag("mask").unwrap_or("none").parse()?;
     cfg.freq_ghz = args.get("freq-ghz", cfg.freq_ghz)?;
     cfg.seq_shards = args.get("seq-shards", cfg.seq_shards)?;
@@ -186,14 +204,23 @@ fn serve(args: &Args) -> fsa::Result<()> {
 
     println!(
         "booting coordinator: {} devices, backend {}, artifacts at {}, \
-         mask {}, {:.2} GHz, {} seq shard(s), kv cache {} x {}-token pages ({})",
+         mask {}, {:.2} GHz, {} seq shard(s), kv cache {} x {}-token pages ({}), \
+         prefix cache {}",
         cfg.devices, cfg.backend, cfg.artifacts_dir, cfg.mask, cfg.freq_ghz,
-        cfg.seq_shards, cfg.kv_cache_pages, cfg.kv_page_size, cfg.kv_eviction
+        cfg.seq_shards, cfg.kv_cache_pages, cfg.kv_page_size, cfg.kv_eviction,
+        if cfg.prefix_cache { "on" } else { "off" }
     );
+    // With the prefix cache on, the decode-serving workload opens every
+    // session with the same system prefix — half the prompt, rounded
+    // down to whole KV pages — so prefills after the first actually
+    // exercise the §11 match/resume path.
+    let prefix_share =
+        if cfg.prefix_cache { (seq / 2 / cfg.kv_page_size) * cfg.kv_page_size } else { 0 };
     let coord = Coordinator::start(cfg)?;
     if decode_steps > 0 {
         return serve_decode(
-            coord, n_sessions, decode_steps, seq, d, heads, kv_heads, mask, metrics_json,
+            coord, n_sessions, decode_steps, seq, d, heads, kv_heads, mask, prefix_share,
+            metrics_json,
         );
     }
     let mut rng = SplitMix64::new(1);
@@ -249,7 +276,10 @@ fn finish(coord: Coordinator, metrics_json: Option<&std::path::Path>) -> fsa::Re
 /// when `--mask causal` — the transformer-prefill regime), interleave
 /// `steps` decode steps per session (round-robin, so device KV caches
 /// juggle all sessions at once), close everything, and report the
-/// cache counters.
+/// cache counters.  With `prefix_share > 0` (`--prefix-cache on`)
+/// every session's prompt opens with the same `prefix_share`-token
+/// system prefix, so warm prefills resume from shared pages
+/// (DESIGN.md §11).
 #[allow(clippy::too_many_arguments)]
 fn serve_decode(
     coord: Coordinator,
@@ -260,6 +290,7 @@ fn serve_decode(
     heads: usize,
     kv_heads: usize,
     mask: fsa::mask::MaskKind,
+    prefix_share: usize,
     metrics_json: Option<PathBuf>,
 ) -> fsa::Result<()> {
     let mut rng = SplitMix64::new(7);
@@ -269,6 +300,25 @@ fn serve_decode(
         id
     };
 
+    let (sys_k, sys_v) = if prefix_share > 0 {
+        (rng.normal_matrix(kv_heads * seq, d), rng.normal_matrix(kv_heads * seq, d))
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    // Overlay the shared system prefix onto a session's fresh K or V
+    // (head-major `(kv_heads, seq, d)` layout).
+    let share = |base: &[f32], mut fresh: Vec<f32>| -> Vec<f32> {
+        if prefix_share == 0 {
+            return fresh;
+        }
+        for h in 0..kv_heads {
+            let at = h * seq * d;
+            fresh[at..at + prefix_share * d].copy_from_slice(&base[at..at + prefix_share * d]);
+        }
+        fresh
+    };
+
+    let mut reused = 0usize;
     for s in 0..n_sessions as u64 {
         let resp = coord.submit_wait(
             AttentionRequest::prefill(
@@ -279,14 +329,21 @@ fn serve_decode(
                 heads,
                 kv_heads,
                 rng.normal_matrix(heads * seq, d),
-                rng.normal_matrix(kv_heads * seq, d),
-                rng.normal_matrix(kv_heads * seq, d),
+                share(&sys_k, rng.normal_matrix(kv_heads * seq, d)),
+                share(&sys_v, rng.normal_matrix(kv_heads * seq, d)),
             )
             .with_mask(mask),
         )?;
         resp.output.map_err(|e| anyhow::anyhow!("prefill of session {s} failed: {e}"))?;
+        reused += resp.stats.prefix_reused_tokens;
     }
     println!("{n_sessions} sessions prefilled at L={seq} (mask {mask})");
+    if prefix_share > 0 {
+        println!(
+            "prefix cache: {reused} prompt tokens resumed from shared pages \
+             ({prefix_share}-token system prefix)"
+        );
+    }
 
     let t0 = std::time::Instant::now();
     let (mut hits, mut misses) = (0usize, 0usize);
@@ -305,8 +362,8 @@ fn serve_decode(
             ))?;
             resp.output
                 .map_err(|e| anyhow::anyhow!("decode step {step} of session {s} failed: {e}"))?;
-            hits += resp.kv_hits;
-            misses += resp.kv_misses;
+            hits += resp.stats.kv_hits;
+            misses += resp.stats.kv_misses;
         }
     }
     let wall = t0.elapsed();

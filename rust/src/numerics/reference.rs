@@ -335,6 +335,37 @@ pub fn flash_forward_partial(
     key_offset: usize,
     total_keys: usize,
 ) -> FlashPartial {
+    flash_forward_partial_at(qm, km, vm, br, bc, exp2, prec, mask, 0, key_offset, total_keys)
+}
+
+/// [`flash_forward_partial`] resumed at a *global query row offset*
+/// (DESIGN.md §11): `qm` holds only the suffix query rows, whose global
+/// indices are `[query_offset, query_offset + qm.rows)`, and the mask is
+/// evaluated at those global row coordinates.  Because every per-row
+/// online-softmax update depends only on that row's Q, the key tiling,
+/// and the row's own valid-key prefix — never on which rows share its
+/// row block (the `br = 1` decode pin is the degenerate case of this
+/// independence) — the returned partial rows are **bitwise identical**
+/// to the corresponding rows of the `query_offset = 0` whole-query run
+/// (pinned by a unit test).  This is the prefix-cache warm-prefill
+/// kernel: rows `[0, query_offset)` were served from cached pages and
+/// are simply not recomputed.  `query_offset = 0` is
+/// operation-for-operation [`flash_forward_partial`], which delegates
+/// here.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_forward_partial_at(
+    qm: &Mat,
+    km: &Mat,
+    vm: &Mat,
+    br: usize,
+    bc: usize,
+    exp2: &Exp2,
+    prec: Precision,
+    mask: MaskKind,
+    query_offset: usize,
+    key_offset: usize,
+    total_keys: usize,
+) -> FlashPartial {
     let (l, d) = (qm.rows, qm.cols);
     let lk = km.rows;
     assert_eq!(km.cols, d);
@@ -370,8 +401,10 @@ pub fn flash_forward_partial(
             let bce = bc.min(lk - k0);
             // Tile-skipping schedule: a fully-masked tile touches no row
             // state, so skipping it is exact.  Coverage and valid-key
-            // prefixes are evaluated at *global* key coordinates.
-            if mask.coverage(q0, bre, key_offset + k0, bce) == TileCoverage::Empty {
+            // prefixes are evaluated at *global* coordinates on both
+            // axes (query_offset for resumed prefills, key_offset for
+            // sequence chunks).
+            if mask.coverage(query_offset + q0, bre, key_offset + k0, bce) == TileCoverage::Empty {
                 k0 += bce;
                 continue;
             }
@@ -379,7 +412,7 @@ pub fn flash_forward_partial(
                 // Valid keys form a per-row prefix of the tile's columns
                 // (both mask kinds are column-prefix masks).
                 let vc = mask
-                    .valid_keys(q0 + r, total_keys)
+                    .valid_keys(query_offset + q0 + r, total_keys)
                     .saturating_sub(key_offset + k0)
                     .min(bce);
                 if vc == 0 {
@@ -430,7 +463,7 @@ pub fn flash_forward_partial(
             // O += P V, n-ascending (downward path, top row first); the
             // masked lanes ride along with P = 0, exactly as on the array.
             for r in 0..bre {
-                if mask.valid_keys(q0 + r, total_keys) <= key_offset + k0 {
+                if mask.valid_keys(query_offset + q0 + r, total_keys) <= key_offset + k0 {
                     continue; // row skipped above: stale P, state untouched
                 }
                 for h in 0..d {
@@ -623,6 +656,34 @@ pub fn flash_pwl_partial(
         &Exp2::PwlF16(PwlExp2::new(segments)),
         Precision::F16F32,
         mask,
+        key_offset,
+        total_keys,
+    )
+}
+
+/// Convenience: one resumed-prefill chunk with the paper's device
+/// numerics — the strict twin the device workers' reference backend
+/// runs for prefix-cache warm prefills (`qm` = suffix query rows at
+/// global offset `query_offset`, see [`flash_forward_partial_at`]).
+#[allow(clippy::too_many_arguments)]
+pub fn flash_pwl_resumed(
+    qm: &Mat,
+    km: &Mat,
+    vm: &Mat,
+    br: usize,
+    bc: usize,
+    segments: usize,
+    mask: MaskKind,
+    query_offset: usize,
+    key_offset: usize,
+    total_keys: usize,
+) -> FlashPartial {
+    flash_forward_partial_at(
+        qm, km, vm, br, bc,
+        &Exp2::PwlF16(PwlExp2::new(segments)),
+        Precision::F16F32,
+        mask,
+        query_offset,
         key_offset,
         total_keys,
     )
@@ -1020,6 +1081,66 @@ mod tests {
             let merged = merge_partials(&[part], &exp2);
             let whole = flash_pwl_masked(&qm, &km, &vm, bc, bc, 8, mask);
             assert_eq!(merged.data, whole.data, "{mask:?}");
+        }
+    }
+
+    #[test]
+    fn resumed_partial_rows_are_bitwise_the_whole_run_suffix() {
+        // Tentpole pin (DESIGN.md §11): a resumed prefill computing only
+        // the suffix query rows at their global coordinates must be
+        // bitwise the corresponding rows of the cold whole-query run —
+        // for every mask kind, aligned and ragged resume points, row
+        // tilings that re-block the suffix differently from the cold
+        // run, and both whole-range and ragged-chunked keys.
+        let mut rng = SplitMix64::new(74);
+        let (l, d) = (48usize, 16usize);
+        let qm = rand_mat(&mut rng, l, d);
+        let km = rand_mat(&mut rng, l, d);
+        let vm = rand_mat(&mut rng, l, d);
+        let exp2 = Exp2::PwlF16(PwlExp2::new(8));
+        for mask in [MaskKind::None, MaskKind::Causal, MaskKind::PaddingKeys { valid: 19 }] {
+            for (br, bc) in [(8usize, 8usize), (16, 8), (8, 16)] {
+                for resume in [1usize, 8, 17, 32, l - 1] {
+                    let rows = l - resume;
+                    let tag = format!("{mask:?} br={br} bc={bc} resume={resume}");
+                    let qs = Mat::new(rows, d, qm.data[resume * d..].to_vec());
+                    // Whole key range: the finalized resumed rows are
+                    // the cold kernel's suffix rows, bit for bit.
+                    let cold = flash_pwl_masked(&qm, &km, &vm, br, bc, 8, mask);
+                    let warm = flash_forward_partial_at(
+                        &qs, &km, &vm, br, bc, &exp2, Precision::F16F32, mask, resume, 0, l,
+                    )
+                    .finalize();
+                    assert_eq!(warm.data, cold.data[resume * d..], "whole {tag}");
+                    // Ragged key chunks: per-chunk resumed partials
+                    // merged in chunk order equal the cold chunked
+                    // run's suffix rows (the seq_shards > 1 warm path).
+                    let split = 20usize;
+                    let k0m = Mat::new(split, d, km.data[..split * d].to_vec());
+                    let v0m = Mat::new(split, d, vm.data[..split * d].to_vec());
+                    let k1m = Mat::new(l - split, d, km.data[split * d..].to_vec());
+                    let v1m = Mat::new(l - split, d, vm.data[split * d..].to_vec());
+                    let cold_chunked = merge_partials(
+                        &[
+                            flash_pwl_partial(&qm, &k0m, &v0m, br, bc, 8, mask, 0, l),
+                            flash_pwl_partial(&qm, &k1m, &v1m, br, bc, 8, mask, split, l),
+                        ],
+                        &exp2,
+                    );
+                    let warm_chunked = merge_partials(
+                        &[
+                            flash_pwl_resumed(&qs, &k0m, &v0m, br, bc, 8, mask, resume, 0, l),
+                            flash_pwl_resumed(&qs, &k1m, &v1m, br, bc, 8, mask, resume, split, l),
+                        ],
+                        &exp2,
+                    );
+                    assert_eq!(
+                        warm_chunked.data,
+                        cold_chunked.data[resume * d..],
+                        "chunked {tag}"
+                    );
+                }
+            }
         }
     }
 

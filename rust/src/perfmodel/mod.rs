@@ -15,8 +15,9 @@ use crate::config::AccelConfig;
 use crate::mask::MaskKind;
 use crate::schedule::{
     attention_flops, decode_attention_flops, live_chunk_ranges, masked_attention_flops,
-    masked_attention_flops_range, masked_tile_counts, masked_tile_counts_range, preload_latency,
-    rescale_latency, InnerSchedule, Variant,
+    masked_attention_flops_range, masked_attention_flops_resumed, masked_tile_counts,
+    masked_tile_counts_range, masked_tile_counts_resumed, preload_latency, rescale_latency,
+    InnerSchedule, Variant,
 };
 use crate::sim::dma::DmaConfig;
 
@@ -445,6 +446,71 @@ pub fn fsa_flash_chunk_perf(
     }
 }
 
+/// Timing of a *resumed* (prefix-cache warm) prefill chunk
+/// (DESIGN.md §11): only the `seq_len - query_start` uncovered suffix
+/// query rows run, against global keys `[key_start, key_start +
+/// key_len)`.  The structure is [`fsa_flash_chunk_perf`] with the tile
+/// census and useful FLOPs further restricted to the suffix rows
+/// ([`masked_tile_counts_resumed`] / [`masked_attention_flops_resumed`]);
+/// suffix rows tile locally from the resume point but their mask
+/// coverage is classified at global query coordinates, exactly like the
+/// resumed kernel.  `query_start == 0` reproduces the chunk model, and
+/// the device worker's `saved_prefill_cycles` term is the cold chunk
+/// model minus this.
+#[allow(clippy::too_many_arguments)]
+pub fn fsa_flash_resumed_perf(
+    cfg: &AccelConfig,
+    seq_len: usize,
+    d: usize,
+    query_start: usize,
+    key_start: usize,
+    key_len: usize,
+    variant: Variant,
+    segments: usize,
+    mask: MaskKind,
+) -> FsaPerf {
+    let n = cfg.array_size;
+    assert!(d <= n, "head dim {d} exceeds array size {n}");
+    assert!(key_len >= 1, "chunk must cover at least one key");
+    assert!(query_start < seq_len, "resume point must leave suffix rows");
+    let sched = InnerSchedule::new(n, variant, segments);
+    let ii = sched.inner_latency();
+    let ii_masked = sched.masked_inner_latency();
+
+    let t_r = (seq_len - query_start).div_ceil(n) as u64;
+    let (full, partial, _skipped) =
+        masked_tile_counts_resumed(seq_len, n, mask, query_start, key_start, key_len);
+
+    let dma = DmaConfig::for_bandwidth(cfg.mem_bw_gbs, cfg.freq_ghz, 4);
+    let tile_bytes = (n * n * 2) as f64;
+    let bpc = cfg.mem_bw_gbs / cfg.freq_ghz;
+    let dma_per_iter = dma.setup_cycles + (2.0 * tile_bytes / bpc).ceil() as u64;
+
+    let ii_eff = ii.max(dma_per_iter);
+    let ii_masked_eff = ii_masked.max(dma_per_iter);
+    let bandwidth_bound = dma_per_iter > ii;
+
+    let inner = full * ii_eff + partial * ii_masked_eff;
+    let outer = rescale_latency(n);
+    let startup = preload_latency(n) + dma_per_iter + dma.setup_cycles;
+    let total = inner + t_r * outer + startup;
+
+    let flops =
+        masked_attention_flops_resumed(seq_len, d, mask, query_start, key_start, key_len) as f64;
+    let peak_per_cycle = 2.0 * (n * n) as f64;
+    let utilization = flops / (peak_per_cycle * total as f64);
+
+    let array_active = full * ii + partial * ii_masked + t_r * preload_latency(n);
+    FsaPerf {
+        total_cycles: total,
+        array_active_cycles: array_active.min(total),
+        dma_cycles: (full + partial) * dma_per_iter,
+        utilization,
+        seconds: total as f64 / (cfg.freq_ghz * 1e9),
+        bandwidth_bound,
+    }
+}
+
 /// Timing of one sequence-parallel head (DESIGN.md §7): the K/V split
 /// into `seq_shards` even chunks computed concurrently, their partial
 /// `(O~, m, l)` triples shipped to the gathering device and merged in
@@ -749,6 +815,46 @@ mod tests {
 
     fn fsa() -> AccelConfig {
         AccelConfig::builtin("fsa").unwrap()
+    }
+
+    #[test]
+    fn resumed_perf_at_query_start_zero_is_the_chunk_model() {
+        // DESIGN.md §11: with nothing resumed, the resumed model must
+        // be the chunk model cycle for cycle — whole range and a
+        // key-chunk sub-range, masked and unmasked.
+        let cfg = fsa();
+        for mask in [MaskKind::None, MaskKind::Causal] {
+            for (ks, kl) in [(0usize, 2048usize), (1024, 1024)] {
+                let cold =
+                    fsa_flash_chunk_perf(&cfg, 2048, 128, ks, kl, Variant::DualPath, 8, mask);
+                let warm = fsa_flash_resumed_perf(
+                    &cfg, 2048, 128, 0, ks, kl, Variant::DualPath, 8, mask,
+                );
+                assert_eq!(warm.total_cycles, cold.total_cycles, "{mask:?} [{ks},{kl})");
+                assert_eq!(warm.dma_cycles, cold.dma_cycles, "{mask:?} [{ks},{kl})");
+            }
+        }
+    }
+
+    #[test]
+    fn resumed_prefill_saves_cycles_proportionally_to_coverage() {
+        // The saved-prefill-cycles term (cold minus resumed) must be
+        // positive and grow with the covered prefix.
+        let cfg = fsa();
+        for mask in [MaskKind::None, MaskKind::Causal] {
+            let cold = fsa_flash_chunk_perf(&cfg, 4096, 128, 0, 4096, Variant::DualPath, 8, mask);
+            let saved: Vec<u64> = [1024usize, 2048, 3072]
+                .iter()
+                .map(|&qs| {
+                    let warm = fsa_flash_resumed_perf(
+                        &cfg, 4096, 128, qs, 0, 4096, Variant::DualPath, 8, mask,
+                    );
+                    assert!(warm.total_cycles < cold.total_cycles, "{mask:?} resume {qs}");
+                    cold.total_cycles - warm.total_cycles
+                })
+                .collect();
+            assert!(saved.windows(2).all(|w| w[1] > w[0]), "{mask:?}: {saved:?}");
+        }
     }
 
     #[test]

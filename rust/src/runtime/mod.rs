@@ -18,7 +18,8 @@ use anyhow::{anyhow, bail, ensure, Context};
 use crate::config::{AccelConfig, BackendKind};
 use crate::mask::MaskKind;
 use crate::numerics::reference::{
-    decode_pwl, decode_pwl_partial, flash_pwl_masked, flash_pwl_partial, FlashPartial, Mat,
+    decode_pwl, decode_pwl_partial, flash_pwl_masked, flash_pwl_partial, flash_pwl_resumed,
+    FlashPartial, Mat,
 };
 
 pub use sim_backend::SimBackend;
@@ -315,12 +316,45 @@ impl Backend {
         }
     }
 
-    /// Execute one head: row-major `(seq_len, d)` Q/K/V in, `(seq_len,
-    /// d)` output, mask applied exactly (DESIGN.md §6).  Errors are
-    /// strings because they travel inside
-    /// [`crate::coordinator::request::AttentionResponse`].
-    #[allow(clippy::too_many_arguments)]
-    pub fn execute_head(
+    /// Execute one typed unit of backend work (the single entry point —
+    /// the old `execute_head`/`execute_head_partial`/`execute_decode_row`/
+    /// `execute_decode_row_partial` surface collapsed into a
+    /// [`ShardPlan`] dispatch).  Errors are strings because they travel
+    /// inside [`crate::coordinator::request::AttentionResponse`].
+    pub fn execute(&mut self, plan: ShardPlan<'_>) -> Result<ShardOutput, String> {
+        plan.validate()?;
+        match plan {
+            ShardPlan::Head { seq_len, d, q, k, v, mask } => {
+                self.run_head(seq_len, d, q, k, v, mask).map(ShardOutput::Full)
+            }
+            ShardPlan::HeadChunk { seq_len, d, q, k_chunk, v_chunk, mask, key_offset, total_keys } => self
+                .run_head_chunk(seq_len, d, q, k_chunk, v_chunk, mask, key_offset, total_keys)
+                .map(ShardOutput::Partial),
+            ShardPlan::ResumedPrefill {
+                seq_len,
+                d,
+                query_offset,
+                q_suffix,
+                k_chunk,
+                v_chunk,
+                mask,
+                key_offset,
+                total_keys,
+            } => self.run_resumed(
+                seq_len, d, query_offset, q_suffix, k_chunk, v_chunk, mask, key_offset, total_keys,
+            ),
+            ShardPlan::DecodeRow { prefix_len, d, q_row, k, v } => {
+                self.run_decode_row(prefix_len, d, q_row, k, v).map(ShardOutput::Full)
+            }
+            ShardPlan::DecodeRange { range_len, d, q_row, k, v } => {
+                self.run_decode_range(range_len, d, q_row, k, v).map(ShardOutput::Partial)
+            }
+        }
+    }
+
+    /// Whole-head prefill/stateless attention: normalized `(seq_len, d)`
+    /// rows, mask applied exactly (DESIGN.md §6).
+    fn run_head(
         &mut self,
         seq_len: usize,
         d: usize,
@@ -372,24 +406,24 @@ impl Backend {
                 Ok(flash_pwl_masked(&qm, &km, &vm, *array_size, *array_size, *segments, mask)
                     .data)
             }
-            Backend::Sim(s) => s.execute_head(seq_len, d, q, k, v, mask),
+            Backend::Sim(s) => s.run_head(seq_len, d, q, k, v, mask),
         }
     }
 
-    /// Execute one sequence-parallel chunk of one head (DESIGN.md §7):
-    /// the full `(seq_len, d)` Q against the `(chunk_len, d)` K/V chunk
-    /// covering global keys `[key_offset, key_offset + chunk_len)` of a
+    /// One sequence-parallel chunk of one head (DESIGN.md §7): the full
+    /// `(seq_len, d)` Q against the `(chunk_len, d)` K/V chunk covering
+    /// global keys `[key_offset, key_offset + chunk_len)` of a
     /// `total_keys`-key sequence, emitting the partial `(O~, m, l)`
     /// state the gather merges in chunk order.
     ///
     /// The reference twin runs [`flash_pwl_partial`] tiled at the array
     /// size — the same kernel whose single-chunk degeneration is
-    /// bitwise [`Backend::execute_head`].  The AOT artifacts emit only
+    /// bitwise the whole-head path.  The AOT artifacts emit only
     /// normalized outputs (no partial-state signature is exported), so
     /// the strict PJRT backend reports the gap instead of silently
     /// merging incompatible numerics.
     #[allow(clippy::too_many_arguments)]
-    pub fn execute_head_partial(
+    fn run_head_chunk(
         &mut self,
         seq_len: usize,
         d: usize,
@@ -400,14 +434,6 @@ impl Backend {
         key_offset: usize,
         total_keys: usize,
     ) -> Result<FlashPartial, String> {
-        if k_chunk.len() % d != 0 || k_chunk.len() != v_chunk.len() || q.len() != seq_len * d {
-            return Err(format!(
-                "partial shape mismatch: q {} k {} v {} for seq {seq_len} d {d}",
-                q.len(),
-                k_chunk.len(),
-                v_chunk.len()
-            ));
-        }
         match self {
             Backend::Pjrt(_) => Err(format!(
                 "no partial (`fsa_attn_partial`) artifact kind is exported yet \
@@ -426,15 +452,65 @@ impl Backend {
                     mask, key_offset, total_keys,
                 ))
             }
-            Backend::Sim(s) => s.execute_head_partial(
+            Backend::Sim(s) => s.run_head_chunk(
                 seq_len, d, q, k_chunk, v_chunk, mask, key_offset, total_keys,
             ),
         }
     }
 
-    /// Execute one decode step of one head: a single `(1, d)` query row
-    /// over a `(prefix_len, d)` K/V prefix (cached pages or the
-    /// host-tier fallback — numerically identical by construction).
+    /// One resumed (prefix-cache warm) prefill chunk (DESIGN.md §11):
+    /// only the suffix query rows `[query_offset, seq_len)` against the
+    /// K/V chunk, with the mask evaluated at global query coordinates.
+    /// A whole-range chunk (`key_offset == 0` covering `total_keys`)
+    /// returns the normalized suffix rows ([`ShardOutput::Full`]) —
+    /// mirroring the cold whole-head path — and a sub-range returns
+    /// partial state the gather merges in chunk order, so the warm
+    /// output composes bitwise with the cold run's suffix rows.
+    #[allow(clippy::too_many_arguments)]
+    fn run_resumed(
+        &mut self,
+        seq_len: usize,
+        d: usize,
+        query_offset: usize,
+        q_suffix: &[f32],
+        k_chunk: &[f32],
+        v_chunk: &[f32],
+        mask: MaskKind,
+        key_offset: usize,
+        total_keys: usize,
+    ) -> Result<ShardOutput, String> {
+        let chunk_len = k_chunk.len() / d;
+        let whole_range = key_offset == 0 && chunk_len == total_keys;
+        match self {
+            Backend::Pjrt(_) => Err(format!(
+                "no resumed-prefill artifact kind is exported yet (resume {query_offset} of \
+                 {seq_len}); prefix-cache serving needs backend=reference|sim (DESIGN.md §11)"
+            )),
+            Backend::Reference { array_size, segments } => {
+                let rows = seq_len - query_offset;
+                let qm = Mat::new(rows, d, q_suffix.to_vec());
+                let km = Mat::new(chunk_len, d, k_chunk.to_vec());
+                let vm = Mat::new(chunk_len, d, v_chunk.to_vec());
+                let part = flash_pwl_resumed(
+                    &qm, &km, &vm,
+                    *array_size, *array_size, *segments,
+                    mask, query_offset, key_offset, total_keys,
+                );
+                if whole_range {
+                    Ok(ShardOutput::Full(part.finalize().data))
+                } else {
+                    Ok(ShardOutput::Partial(part))
+                }
+            }
+            Backend::Sim(s) => s.run_resumed(
+                seq_len, d, query_offset, q_suffix, k_chunk, v_chunk, mask, key_offset, total_keys,
+            ),
+        }
+    }
+
+    /// One decode step of one head: a single `(1, d)` query row over a
+    /// `(prefix_len, d)` K/V prefix (cached pages or the host-tier
+    /// fallback — numerically identical by construction).
     ///
     /// The reference twin tiles the prefix at the array size with a
     /// ragged tail ([`decode_pwl`]), matching the stateless oracle
@@ -442,7 +518,7 @@ impl Backend {
     /// would carry `(1, d) × (L, d)` signatures); exporting one is
     /// listed in DESIGN.md §future-work, so the strict backend reports
     /// the gap instead of silently changing numerics.
-    pub fn execute_decode_row(
+    fn run_decode_row(
         &mut self,
         prefix_len: usize,
         d: usize,
@@ -450,14 +526,6 @@ impl Backend {
         k: &[f32],
         v: &[f32],
     ) -> Result<Vec<f32>, String> {
-        if q_row.len() != d || k.len() != prefix_len * d || v.len() != k.len() {
-            return Err(format!(
-                "decode shape mismatch: q {} k {} v {} for prefix {prefix_len} d {d}",
-                q_row.len(),
-                k.len(),
-                v.len()
-            ));
-        }
         match self {
             Backend::Pjrt(_) => Err(format!(
                 "no `fsa_decode` artifact kind is exported yet (prefix {prefix_len}, d {d}); \
@@ -466,16 +534,14 @@ impl Backend {
             Backend::Reference { array_size, segments } => {
                 Ok(decode_pwl(q_row, k, v, d, *array_size, *segments))
             }
-            Backend::Sim(s) => s.execute_decode_row(prefix_len, d, q_row, k, v),
+            Backend::Sim(s) => s.run_decode_row(prefix_len, d, q_row, k, v),
         }
     }
 
-    /// Execute one split-KV decode range of one head (DESIGN.md §7):
-    /// the `(1, d)` query row against a `(range_len, d)` slice of the
-    /// prefix, emitting the one-row partial the gather merges in range
-    /// order.  Same shape/backed-ness rules as
-    /// [`Backend::execute_decode_row`].
-    pub fn execute_decode_row_partial(
+    /// One split-KV decode range of one head (DESIGN.md §7): the `(1,
+    /// d)` query row against a `(range_len, d)` slice of the prefix,
+    /// emitting the one-row partial the gather merges in range order.
+    fn run_decode_range(
         &mut self,
         range_len: usize,
         d: usize,
@@ -483,14 +549,6 @@ impl Backend {
         k: &[f32],
         v: &[f32],
     ) -> Result<FlashPartial, String> {
-        if q_row.len() != d || k.len() != range_len * d || v.len() != k.len() {
-            return Err(format!(
-                "decode range shape mismatch: q {} k {} v {} for range {range_len} d {d}",
-                q_row.len(),
-                k.len(),
-                v.len()
-            ));
-        }
         match self {
             Backend::Pjrt(_) => Err(format!(
                 "no `fsa_decode` partial artifact kind is exported yet (range \
@@ -500,7 +558,207 @@ impl Backend {
             Backend::Reference { array_size, segments } => {
                 Ok(decode_pwl_partial(q_row, k, v, d, *array_size, *segments))
             }
-            Backend::Sim(s) => s.execute_decode_row_partial(range_len, d, q_row, k, v),
+            Backend::Sim(s) => s.run_decode_range(range_len, d, q_row, k, v),
+        }
+    }
+}
+
+/// One typed unit of backend work — the single argument of
+/// [`Backend::execute`].  Every serving shard the device workers run is
+/// one of these variants; the per-variant parameters that used to ride
+/// four parallel method signatures live on the enum, and a resumed
+/// prefill is a variant rather than a fifth method.
+#[derive(Clone, Copy, Debug)]
+pub enum ShardPlan<'a> {
+    /// Whole-head prefill/stateless attention: row-major `(seq_len, d)`
+    /// Q/K/V, normalized `(seq_len, d)` output rows.
+    Head {
+        seq_len: usize,
+        d: usize,
+        q: &'a [f32],
+        k: &'a [f32],
+        v: &'a [f32],
+        mask: MaskKind,
+    },
+    /// One sequence-parallel K/V chunk at global key coordinates
+    /// (DESIGN.md §7): partial `(O~, m, l)` state out.
+    HeadChunk {
+        seq_len: usize,
+        d: usize,
+        q: &'a [f32],
+        k_chunk: &'a [f32],
+        v_chunk: &'a [f32],
+        mask: MaskKind,
+        key_offset: usize,
+        total_keys: usize,
+    },
+    /// Resumed (prefix-cache warm) prefill (DESIGN.md §11): `q_suffix`
+    /// holds only the `seq_len - query_offset` uncovered query rows;
+    /// the mask is evaluated at global query coordinates so the rows
+    /// compute bitwise what the cold run computed for them.  Output is
+    /// [`ShardOutput::Full`] suffix rows for a whole-range chunk,
+    /// [`ShardOutput::Partial`] for a sequence-parallel sub-range.
+    ResumedPrefill {
+        seq_len: usize,
+        d: usize,
+        query_offset: usize,
+        q_suffix: &'a [f32],
+        k_chunk: &'a [f32],
+        v_chunk: &'a [f32],
+        mask: MaskKind,
+        key_offset: usize,
+        total_keys: usize,
+    },
+    /// One decode step: a `(1, d)` query row over the `(prefix_len, d)`
+    /// K/V prefix, normalized `(1, d)` output.
+    DecodeRow {
+        prefix_len: usize,
+        d: usize,
+        q_row: &'a [f32],
+        k: &'a [f32],
+        v: &'a [f32],
+    },
+    /// One split-KV decode range: partial one-row state out.
+    DecodeRange {
+        range_len: usize,
+        d: usize,
+        q_row: &'a [f32],
+        k: &'a [f32],
+        v: &'a [f32],
+    },
+}
+
+impl ShardPlan<'_> {
+    /// Plan kind for logs and error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ShardPlan::Head { .. } => "head",
+            ShardPlan::HeadChunk { .. } => "head_chunk",
+            ShardPlan::ResumedPrefill { .. } => "resumed_prefill",
+            ShardPlan::DecodeRow { .. } => "decode_row",
+            ShardPlan::DecodeRange { .. } => "decode_range",
+        }
+    }
+
+    /// Shape validation shared by every backend: reported as an error,
+    /// never a panic, because it travels inside an `AttentionResponse`.
+    fn validate(&self) -> Result<(), String> {
+        match *self {
+            ShardPlan::Head { seq_len, d, q, k, v, .. } => {
+                if q.len() != seq_len * d || k.len() != q.len() || v.len() != q.len() {
+                    return Err(format!(
+                        "head shape mismatch: q {} k {} v {} for seq {seq_len} d {d}",
+                        q.len(),
+                        k.len(),
+                        v.len()
+                    ));
+                }
+            }
+            ShardPlan::HeadChunk { seq_len, d, q, k_chunk, v_chunk, key_offset, total_keys, .. } => {
+                if k_chunk.len() % d != 0
+                    || k_chunk.len() != v_chunk.len()
+                    || q.len() != seq_len * d
+                {
+                    return Err(format!(
+                        "partial shape mismatch: q {} k {} v {} for seq {seq_len} d {d}",
+                        q.len(),
+                        k_chunk.len(),
+                        v_chunk.len()
+                    ));
+                }
+                if key_offset + k_chunk.len() / d > total_keys {
+                    return Err(format!(
+                        "chunk [{key_offset}, {}) exceeds the {total_keys}-key sequence",
+                        key_offset + k_chunk.len() / d
+                    ));
+                }
+            }
+            ShardPlan::ResumedPrefill {
+                seq_len,
+                d,
+                query_offset,
+                q_suffix,
+                k_chunk,
+                v_chunk,
+                key_offset,
+                total_keys,
+                ..
+            } => {
+                if query_offset >= seq_len {
+                    return Err(format!(
+                        "resume point {query_offset} leaves no suffix rows of seq {seq_len}"
+                    ));
+                }
+                if q_suffix.len() != (seq_len - query_offset) * d
+                    || k_chunk.len() % d != 0
+                    || k_chunk.len() != v_chunk.len()
+                {
+                    return Err(format!(
+                        "resumed shape mismatch: q {} k {} v {} for seq {seq_len} d {d} \
+                         resume {query_offset}",
+                        q_suffix.len(),
+                        k_chunk.len(),
+                        v_chunk.len()
+                    ));
+                }
+                if key_offset + k_chunk.len() / d > total_keys {
+                    return Err(format!(
+                        "chunk [{key_offset}, {}) exceeds the {total_keys}-key sequence",
+                        key_offset + k_chunk.len() / d
+                    ));
+                }
+            }
+            ShardPlan::DecodeRow { prefix_len, d, q_row, k, v } => {
+                if q_row.len() != d || k.len() != prefix_len * d || v.len() != k.len() {
+                    return Err(format!(
+                        "decode shape mismatch: q {} k {} v {} for prefix {prefix_len} d {d}",
+                        q_row.len(),
+                        k.len(),
+                        v.len()
+                    ));
+                }
+            }
+            ShardPlan::DecodeRange { range_len, d, q_row, k, v } => {
+                if q_row.len() != d || k.len() != range_len * d || v.len() != k.len() {
+                    return Err(format!(
+                        "decode range shape mismatch: q {} k {} v {} for range {range_len} d {d}",
+                        q_row.len(),
+                        k.len(),
+                        v.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What a [`ShardPlan`] produces: normalized output rows, or partial
+/// online-softmax state for the gather's chunk-order merge.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardOutput {
+    /// Normalized row-major rows — `(seq_len, d)` for [`ShardPlan::Head`],
+    /// the suffix rows for a whole-range [`ShardPlan::ResumedPrefill`],
+    /// `(1, d)` for [`ShardPlan::DecodeRow`].
+    Full(Vec<f32>),
+    /// Unnormalized `(O~, m, l)` state, merged in chunk order.
+    Partial(FlashPartial),
+}
+
+impl ShardOutput {
+    /// Unwrap normalized rows; reports (not panics) a variant mismatch.
+    pub fn into_full(self) -> Result<Vec<f32>, String> {
+        match self {
+            ShardOutput::Full(rows) => Ok(rows),
+            ShardOutput::Partial(_) => Err("expected normalized rows, got partial state".into()),
+        }
+    }
+
+    /// Unwrap partial state; reports (not panics) a variant mismatch.
+    pub fn into_partial(self) -> Result<FlashPartial, String> {
+        match self {
+            ShardOutput::Partial(p) => Ok(p),
+            ShardOutput::Full(_) => Err("expected partial state, got normalized rows".into()),
         }
     }
 }
@@ -560,6 +818,18 @@ mod tests {
         assert_eq!(m.kinds(), vec!["fsa_attn", "sdpa"]);
     }
 
+    fn head(
+        be: &mut Backend,
+        seq_len: usize,
+        d: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        mask: MaskKind,
+    ) -> Result<Vec<f32>, String> {
+        be.execute(ShardPlan::Head { seq_len, d, q, k, v, mask })?.into_full()
+    }
+
     #[test]
     fn reference_backend_matches_flash_pwl_twin() {
         use crate::numerics::reference::flash_pwl;
@@ -573,7 +843,7 @@ mod tests {
         let q = rng.normal_matrix(seq, d);
         let k = rng.normal_matrix(seq, d);
         let v = rng.normal_matrix(seq, d);
-        let got = be.execute_head(seq, d, &q, &k, &v, MaskKind::None).unwrap();
+        let got = head(&mut be, seq, d, &q, &k, &v, MaskKind::None).unwrap();
         // seq (32) is below the 128 array dim: one ragged tile, which is
         // exactly one whole-sequence tile.
         let want = flash_pwl(
@@ -586,7 +856,7 @@ mod tests {
         );
         assert_eq!(got, want.data);
         // Masked execution is the masked twin, bit for bit.
-        let causal = be.execute_head(seq, d, &q, &k, &v, MaskKind::Causal).unwrap();
+        let causal = head(&mut be, seq, d, &q, &k, &v, MaskKind::Causal).unwrap();
         let want = flash_pwl_masked(
             &Mat::new(seq, d, q.clone()),
             &Mat::new(seq, d, k.clone()),
@@ -616,12 +886,21 @@ mod tests {
         // Two chunks through the backend == the flash_pwl_partial twin,
         // and their in-order merge == the whole-head execute path
         // within the PWL band.
-        let p0 = be
-            .execute_head_partial(seq, d, &q, &k[..16 * d], &v[..16 * d], MaskKind::None, 0, seq)
-            .unwrap();
-        let p1 = be
-            .execute_head_partial(seq, d, &q, &k[16 * d..], &v[16 * d..], MaskKind::None, 16, seq)
-            .unwrap();
+        let chunk = |be: &mut Backend, k_chunk: &[f32], v_chunk: &[f32], key_offset: usize| {
+            be.execute(ShardPlan::HeadChunk {
+                seq_len: seq,
+                d,
+                q: &q,
+                k_chunk,
+                v_chunk,
+                mask: MaskKind::None,
+                key_offset,
+                total_keys: seq,
+            })
+            .and_then(ShardOutput::into_partial)
+        };
+        let p0 = chunk(&mut be, &k[..16 * d], &v[..16 * d], 0).unwrap();
+        let p1 = chunk(&mut be, &k[16 * d..], &v[16 * d..], 16).unwrap();
         let want = flash_pwl_partial(
             &Mat::new(seq, d, q.clone()),
             &Mat::new(16, d, k[..16 * d].to_vec()),
@@ -631,7 +910,7 @@ mod tests {
         );
         assert_eq!(p0, want);
         let merged = merge_partials(&[p0, p1], &Exp2::PwlF16(PwlExp2::new(cfg.pwl_segments)));
-        let whole = be.execute_head(seq, d, &q, &k, &v, MaskKind::None).unwrap();
+        let whole = head(&mut be, seq, d, &q, &k, &v, MaskKind::None).unwrap();
         let err = crate::numerics::reference::mat_error(
             &merged,
             &Mat::new(seq, d, whole),
@@ -639,11 +918,75 @@ mod tests {
         assert!(err.mae < 3e-2, "{err:?}");
         // Decode range partial == the decode_pwl_partial twin.
         let qr = rng.normal_matrix(1, d);
-        let dp = be.execute_decode_row_partial(16, d, &qr, &k[..16 * d], &v[..16 * d]).unwrap();
+        let dp = be
+            .execute(ShardPlan::DecodeRange {
+                range_len: 16,
+                d,
+                q_row: &qr,
+                k: &k[..16 * d],
+                v: &v[..16 * d],
+            })
+            .unwrap()
+            .into_partial()
+            .unwrap();
         assert_eq!(dp, decode_pwl_partial(&qr, &k[..16 * d], &v[..16 * d], d, cfg.array_size, cfg.pwl_segments));
         // Shape mismatches are reported, not panicked.
-        assert!(be.execute_head_partial(seq, d, &q, &k[..d - 1], &v[..d - 1], MaskKind::None, 0, seq).is_err());
-        assert!(be.execute_decode_row_partial(16, d, &qr, &k[..8 * d], &v[..8 * d]).is_err());
+        assert!(chunk(&mut be, &k[..d - 1], &v[..d - 1], 0).is_err());
+        assert!(be
+            .execute(ShardPlan::DecodeRange {
+                range_len: 16,
+                d,
+                q_row: &qr,
+                k: &k[..8 * d],
+                v: &v[..8 * d],
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn reference_backend_resumed_rows_are_bitwise_the_cold_suffix() {
+        use crate::numerics::SplitMix64;
+        let cfg = AccelConfig::builtin("fsa").unwrap();
+        let mut be =
+            Backend::new(BackendKind::Reference, Path::new("/nonexistent"), &cfg).unwrap();
+        let (seq, d, resume) = (40usize, 16usize, 13usize);
+        let mut rng = SplitMix64::new(11);
+        let q = rng.normal_matrix(seq, d);
+        let k = rng.normal_matrix(seq, d);
+        let v = rng.normal_matrix(seq, d);
+        for mask in [MaskKind::None, MaskKind::Causal] {
+            let cold = head(&mut be, seq, d, &q, &k, &v, mask).unwrap();
+            let warm = be
+                .execute(ShardPlan::ResumedPrefill {
+                    seq_len: seq,
+                    d,
+                    query_offset: resume,
+                    q_suffix: &q[resume * d..],
+                    k_chunk: &k,
+                    v_chunk: &v,
+                    mask,
+                    key_offset: 0,
+                    total_keys: seq,
+                })
+                .unwrap()
+                .into_full()
+                .unwrap();
+            assert_eq!(warm, cold[resume * d..], "{mask:?}");
+        }
+        // Resume point beyond the sequence is reported, not panicked.
+        assert!(be
+            .execute(ShardPlan::ResumedPrefill {
+                seq_len: seq,
+                d,
+                query_offset: seq,
+                q_suffix: &[],
+                k_chunk: &k,
+                v_chunk: &v,
+                mask: MaskKind::None,
+                key_offset: 0,
+                total_keys: seq,
+            })
+            .is_err());
     }
 
     #[test]
@@ -664,11 +1007,22 @@ mod tests {
         let q = rng.normal_matrix(1, d);
         let k = rng.normal_matrix(prefix, d);
         let v = rng.normal_matrix(prefix, d);
-        let got = be.execute_decode_row(prefix, d, &q, &k, &v).unwrap();
+        let got = be
+            .execute(ShardPlan::DecodeRow { prefix_len: prefix, d, q_row: &q, k: &k, v: &v })
+            .unwrap()
+            .into_full()
+            .unwrap();
         // Same tiling as the device path: array-size columns, ragged tail.
         let want = decode_pwl(&q, &k, &v, d, cfg.array_size, cfg.pwl_segments);
         assert_eq!(got, want);
         // Shape mismatches are reported, not panicked.
-        assert!(be.execute_decode_row(prefix, d, &q, &k[..d], &v).is_err());
+        assert!(be
+            .execute(ShardPlan::DecodeRow { prefix_len: prefix, d, q_row: &q, k: &k[..d], v: &v })
+            .is_err());
+        // Plan kinds name themselves for logs.
+        assert_eq!(
+            ShardPlan::DecodeRow { prefix_len: prefix, d, q_row: &q, k: &k, v: &v }.kind(),
+            "decode_row"
+        );
     }
 }

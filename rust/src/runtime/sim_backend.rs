@@ -36,6 +36,7 @@ use crate::kernel::flash::{
 };
 use crate::mask::MaskKind;
 use crate::numerics::reference::FlashPartial;
+use crate::runtime::{ShardOutput, ShardPlan};
 use crate::sim::{CycleBreakdown, Machine, MachineConfig, RunStats};
 
 /// Default shards per machine between hazard fences
@@ -119,6 +120,57 @@ impl SimBackend {
         self.cached_uses = 0;
     }
 
+    /// The single typed entry point — [`crate::runtime::Backend::execute`]'s
+    /// sim twin for callers holding a bare `SimBackend` (the differential
+    /// harness and the cycle benches drive both steppers through it).
+    pub fn execute(&mut self, plan: ShardPlan<'_>) -> Result<ShardOutput, String> {
+        plan.validate()?;
+        match plan {
+            ShardPlan::Head { seq_len, d, q, k, v, mask } => {
+                self.run_head(seq_len, d, q, k, v, mask).map(ShardOutput::Full)
+            }
+            ShardPlan::HeadChunk {
+                seq_len,
+                d,
+                q,
+                k_chunk,
+                v_chunk,
+                mask,
+                key_offset,
+                total_keys,
+            } => self
+                .run_head_chunk(seq_len, d, q, k_chunk, v_chunk, mask, key_offset, total_keys)
+                .map(ShardOutput::Partial),
+            ShardPlan::ResumedPrefill {
+                seq_len,
+                d,
+                query_offset,
+                q_suffix,
+                k_chunk,
+                v_chunk,
+                mask,
+                key_offset,
+                total_keys,
+            } => self.run_resumed(
+                seq_len,
+                d,
+                query_offset,
+                q_suffix,
+                k_chunk,
+                v_chunk,
+                mask,
+                key_offset,
+                total_keys,
+            ),
+            ShardPlan::DecodeRow { prefix_len, d, q_row, k, v } => {
+                self.run_decode_row(prefix_len, d, q_row, k, v).map(ShardOutput::Full)
+            }
+            ShardPlan::DecodeRange { range_len, d, q_row, k, v } => {
+                self.run_decode_range(range_len, d, q_row, k, v).map(ShardOutput::Partial)
+            }
+        }
+    }
+
     /// A machine for one shard: workload-sized memory, the shard's real
     /// head dim as the softmax-scale dim.  Reuses the cached machine
     /// across a hazard fence when batching is on and its capacities
@@ -191,8 +243,10 @@ impl SimBackend {
     }
 
     /// One whole head: `(seq_len, d)` Q/K/V, masked exactly.  Returns
-    /// the output and records measured cycles.
-    pub fn execute_head(
+    /// the output and records measured cycles.  (Dispatched from
+    /// [`crate::runtime::Backend::execute`] — the `ShardPlan::Head`
+    /// arm; the old public four-method surface is gone.)
+    pub(crate) fn run_head(
         &mut self,
         seq_len: usize,
         d: usize,
@@ -241,7 +295,7 @@ impl SimBackend {
     /// block, reads `(O~, l)` from memory and `m` from the CMP
     /// registers, then moves on.  Measured cycles sum the block runs.
     #[allow(clippy::too_many_arguments)]
-    pub fn execute_head_partial(
+    pub(crate) fn run_head_chunk(
         &mut self,
         seq_len: usize,
         d: usize,
@@ -313,9 +367,118 @@ impl SimBackend {
         Ok(part)
     }
 
+    /// One resumed (prefix-cache warm) prefill chunk (DESIGN.md §11):
+    /// only the suffix query rows ride in the Q buffer, and the §8 mask
+    /// wave is programmed at *global* query coordinates
+    /// ([`ChunkParams::resumed`]), so every suffix row runs the exact
+    /// tile sequence the cold run gave it.  A whole-range chunk runs
+    /// the normalized program and returns the suffix rows; a sub-range
+    /// runs per-row-block partial programs like
+    /// [`SimBackend::run_head_chunk`].
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_resumed(
+        &mut self,
+        seq_len: usize,
+        d: usize,
+        query_offset: usize,
+        q_suffix: &[f32],
+        k_chunk: &[f32],
+        v_chunk: &[f32],
+        mask: MaskKind,
+        key_offset: usize,
+        total_keys: usize,
+    ) -> Result<ShardOutput, String> {
+        self.measured = None;
+        self.measured_bd = None;
+        self.check_dims(seq_len, d)?;
+        if query_offset >= seq_len {
+            return Err(format!(
+                "sim backend: resume point {query_offset} leaves no suffix rows of {seq_len}"
+            ));
+        }
+        let rows = seq_len - query_offset;
+        if q_suffix.len() != rows * d || k_chunk.len() % d != 0 || k_chunk.len() != v_chunk.len() {
+            return Err(format!(
+                "sim backend: resumed shape mismatch q {} k {} v {} for ({seq_len}, {d}) \
+                 resume {query_offset}",
+                q_suffix.len(),
+                k_chunk.len(),
+                v_chunk.len()
+            ));
+        }
+        let chunk_len = k_chunk.len() / d;
+        if chunk_len == 0 || key_offset + chunk_len > total_keys {
+            return Err(format!(
+                "sim backend: chunk [{key_offset}, {}) outside the {total_keys}-key sequence",
+                key_offset + chunk_len
+            ));
+        }
+        let n = self.cfg.n;
+        let p = ChunkParams::resumed(n, seq_len, mask, query_offset, key_offset, chunk_len, total_keys);
+        let layout = ChunkLayout::packed(&p);
+        if key_offset == 0 && chunk_len == total_keys {
+            // Whole key range: normalized program over the suffix row
+            // blocks — the warm mirror of the cold whole-head path.
+            if (query_offset..seq_len).all(|i| mask.valid_keys(i, total_keys) == 0) {
+                self.measured = Some(0);
+                self.measured_bd = Some(CycleBreakdown::default());
+                return Ok(ShardOutput::Full(vec![0.0; rows * d]));
+            }
+            let prog =
+                flash_chunk_program(&p, &layout).map_err(|e| format!("sim backend: {e:#}"))?;
+            let mut m = self.machine_for(&p, &layout, d);
+            Self::write_padded(&mut m, layout.q_addr, q_suffix, rows, d);
+            Self::write_padded(&mut m, layout.k_addr, k_chunk, chunk_len, d);
+            Self::write_padded(&mut m, layout.v_addr, v_chunk, chunk_len, d);
+            let stats = self.run(&mut m, &prog)?;
+            self.measured = Some(stats.cycles);
+            self.measured_bd = Some(stats.breakdown);
+            let out = Self::read_output(&m, &p, &layout, d);
+            self.retire(m);
+            return Ok(ShardOutput::Full(out));
+        }
+        // Sub-range chunk: per-row-block partial programs, exactly the
+        // cold chunk path restricted to the suffix rows.
+        let mut m = self.machine_for(&p, &layout, d);
+        Self::write_padded(&mut m, layout.q_addr, q_suffix, rows, d);
+        Self::write_padded(&mut m, layout.k_addr, k_chunk, chunk_len, d);
+        Self::write_padded(&mut m, layout.v_addr, v_chunk, chunk_len, d);
+        let mut part = FlashPartial::empty(rows, d);
+        let mut cycles = 0u64;
+        let mut bd = CycleBreakdown::default();
+        for blk in 0..p.row_blocks() {
+            let prog = match flash_chunk_partial_program(&p, &layout, blk)
+                .map_err(|e| format!("sim backend: {e:#}"))?
+            {
+                None => continue,
+                Some(prog) => prog,
+            };
+            let stats = self.run(&mut m, &prog)?;
+            cycles += stats.cycles;
+            bd.add(&stats.breakdown);
+            let o_base = layout.o_addr as usize + blk * n * n;
+            let l_base = layout.l_addr as usize + blk * n;
+            for mcol in 0..n {
+                let row = blk * n + mcol;
+                if row >= rows {
+                    break;
+                }
+                part.m[row] = m.array.cmp_new_m(mcol);
+                part.l[row] = m.read_mem((l_base + mcol) as u32, 1)[0];
+                for h in 0..d {
+                    part.acc[row * d + h] = m.read_mem((o_base + h * n + mcol) as u32, 1)[0];
+                }
+            }
+        }
+        self.measured = Some(cycles);
+        self.measured_bd = Some(bd);
+        self.retire(m);
+        Ok(ShardOutput::Partial(part))
+    }
+
     /// One decode step (`br = 1`): a single query row over the
     /// `(prefix_len, d)` prefix, normalized on-device.
-    pub fn execute_decode_row(
+    pub(crate) fn run_decode_row(
         &mut self,
         prefix_len: usize,
         d: usize,
@@ -350,7 +513,7 @@ impl SimBackend {
     }
 
     /// One split-KV decode range (`br = 1`, partial state).
-    pub fn execute_decode_row_partial(
+    pub(crate) fn run_decode_range(
         &mut self,
         range_len: usize,
         d: usize,

@@ -286,6 +286,66 @@ pub fn masked_attention_flops_range(
     4 * pairs * d as u64
 }
 
+/// Query-range-restricted [`masked_tile_counts_range`]: the tile census
+/// of a *resumed* prefill that computes only the suffix query rows
+/// `[query_start, seq_len)` over the key chunk `[key_start, key_start +
+/// key_len)` (DESIGN.md §11).  The suffix rows are tiled locally from
+/// the resume point (row tile `i` covers global rows `query_start +
+/// i*n ..`), but coverage is classified at *global* query coordinates —
+/// exactly how the resumed kernel evaluates its mask — so the causal
+/// diagonal lands where the cold run's does.  `query_start == 0`
+/// reproduces [`masked_tile_counts_range`] whenever the cold row tiling
+/// is aligned, and the saved-prefill-cycles term in
+/// [`crate::perfmodel`] is the difference between the two censuses.
+pub fn masked_tile_counts_resumed(
+    seq_len: usize,
+    n: usize,
+    mask: MaskKind,
+    query_start: usize,
+    key_start: usize,
+    key_len: usize,
+) -> (u64, u64, u64) {
+    assert!(n >= 1 && seq_len >= 1 && key_len >= 1);
+    assert!(query_start < seq_len, "resume point must leave suffix rows");
+    let t_r = (seq_len - query_start).div_ceil(n);
+    let t_c = key_len.div_ceil(n);
+    let (mut full, mut partial, mut skipped) = (0u64, 0u64, 0u64);
+    for i in 0..t_r {
+        for j in 0..t_c {
+            let c0 = key_start + j * n;
+            let w = n.min(key_start + key_len - c0);
+            match mask.coverage(query_start + i * n, n, c0, w) {
+                TileCoverage::Full => full += 1,
+                TileCoverage::Partial => partial += 1,
+                TileCoverage::Empty => skipped += 1,
+            }
+        }
+    }
+    (full, partial, skipped)
+}
+
+/// Query-range-restricted [`masked_attention_flops_range`]: useful
+/// FLOPs of the valid `(query, key)` pairs whose query row falls in
+/// `[query_start, seq_len)` and whose key falls in `[key_start,
+/// key_start + key_len)` — the work a resumed prefill actually
+/// performs.  The covered-prefix complement (`query_start == 0` total
+/// minus this) is the work the prefix cache saved.
+pub fn masked_attention_flops_resumed(
+    seq_len: usize,
+    d: usize,
+    mask: MaskKind,
+    query_start: usize,
+    key_start: usize,
+    key_len: usize,
+) -> u64 {
+    let end = key_start + key_len;
+    let mut pairs = 0u64;
+    for i in query_start..seq_len {
+        pairs += mask.valid_keys(i, end).saturating_sub(key_start) as u64;
+    }
+    4 * pairs * d as u64
+}
+
 /// Masked attention FLOPs for one `(seq_len, d)` head: only the valid
 /// `(query, key)` pairs count as useful work (score + PV, 2 FLOPs per
 /// MAC each).  `None` recovers the paper's `4 L² d`; causal is
@@ -615,5 +675,64 @@ mod tests {
             masked_attention_flops_range(128, 16, MaskKind::Causal, 128, 64),
             0
         );
+    }
+
+    #[test]
+    fn resumed_census_matches_range_census_at_query_start_zero() {
+        for mask in [
+            MaskKind::None,
+            MaskKind::Causal,
+            MaskKind::PaddingKeys { valid: 300 },
+        ] {
+            assert_eq!(
+                masked_tile_counts_resumed(1024, 128, mask, 0, 0, 1024),
+                masked_tile_counts_range(1024, 128, mask, 0, 1024),
+                "{mask:?}"
+            );
+            assert_eq!(
+                masked_attention_flops_resumed(512, 64, mask, 0, 0, 512),
+                masked_attention_flops_range(512, 64, mask, 0, 512),
+                "{mask:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn resumed_census_prices_only_suffix_rows_at_global_coordinates() {
+        // 1024 tokens, resume at 512: four suffix row tiles over eight
+        // column tiles.  Unmasked: all full.  Causal: row tile at global
+        // r0 = 512 + 128i has (4 + i) full tiles below the diagonal, one
+        // diagonal partial, and skips the rest.
+        assert_eq!(
+            masked_tile_counts_resumed(1024, 128, MaskKind::None, 512, 0, 1024),
+            (32, 0, 0)
+        );
+        let (full, partial, skipped) =
+            masked_tile_counts_resumed(1024, 128, MaskKind::Causal, 512, 0, 1024);
+        assert_eq!((full, partial, skipped), (4 + 5 + 6 + 7, 4, 3 + 2 + 1));
+        // A tile-misaligned resume point still classifies at global rows:
+        // resume 100 over 256 keys => row tiles start at row 100.
+        let (f, p, s) = masked_tile_counts_resumed(256, 128, MaskKind::Causal, 100, 0, 256);
+        assert_eq!(f + p + s, 4);
+        assert!(p >= 1, "diagonal straddle must be partial");
+        // FLOPs: the resumed suffix plus the covered-prefix complement
+        // partition the whole operator, for every mask.
+        for mask in [
+            MaskKind::None,
+            MaskKind::Causal,
+            MaskKind::PaddingKeys { valid: 300 },
+        ] {
+            let whole = masked_attention_flops(512, 64, mask);
+            let suffix = masked_attention_flops_resumed(512, 64, mask, 100, 0, 512);
+            let prefix_rows: u64 = (0..100)
+                .map(|i| 4 * mask.valid_keys(i, 512) as u64 * 64)
+                .sum();
+            assert_eq!(suffix + prefix_rows, whole, "{mask:?}");
+        }
+        // Resumed suffix FLOPs also partition across key chunks.
+        let whole = masked_attention_flops_resumed(512, 64, MaskKind::Causal, 200, 0, 512);
+        let a = masked_attention_flops_resumed(512, 64, MaskKind::Causal, 200, 0, 256);
+        let b = masked_attention_flops_resumed(512, 64, MaskKind::Causal, 200, 256, 256);
+        assert_eq!(a + b, whole);
     }
 }

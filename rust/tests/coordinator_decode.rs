@@ -131,7 +131,7 @@ fn decode_session_is_bitwise_stateless_recompute() {
         let got = resp.output.expect("decode step succeeds");
         assert_eq!(got, want, "step {i} diverged from stateless recompute");
         assert_eq!(resp.shards, 4);
-        hits += resp.kv_hits;
+        hits += resp.stats.kv_hits;
         devices_seen.push(resp.devices_used.clone());
     }
     // Every decode shard after the prefill was served from pages.
@@ -176,7 +176,7 @@ fn eviction_recompute_recache_cycle_stays_bitwise_exact() {
     let (req, want) = a.decode(&mut rng, 2);
     let resp = coord.submit_wait(req).unwrap();
     assert_eq!(resp.output.unwrap(), want);
-    assert_eq!((resp.kv_hits, resp.kv_misses), (4, 0));
+    assert_eq!((resp.stats.kv_hits, resp.stats.kv_misses), (4, 0));
 
     // B's prefill forces A's streams out (LRU).
     assert!(coord.submit_wait(b.prefill(&mut rng, 3, seq)).unwrap().output.is_ok());
@@ -190,7 +190,7 @@ fn eviction_recompute_recache_cycle_stays_bitwise_exact() {
     let resp = coord.submit_wait(req).unwrap();
     assert_eq!(resp.output.unwrap(), want, "miss path diverged");
     assert_eq!(
-        (resp.kv_misses, resp.kv_hits),
+        (resp.stats.kv_misses, resp.stats.kv_hits),
         (2, 2),
         "one miss + one groupmate hit per KV group"
     );
@@ -200,13 +200,13 @@ fn eviction_recompute_recache_cycle_stays_bitwise_exact() {
     let (req, want) = a.decode(&mut rng, 5);
     let resp = coord.submit_wait(req).unwrap();
     assert_eq!(resp.output.unwrap(), want);
-    assert_eq!((resp.kv_hits, resp.kv_misses), (4, 0));
+    assert_eq!((resp.stats.kv_hits, resp.stats.kv_misses), (4, 0));
 
     // And B now misses, recomputes, stays exact.
     let (req, want) = b.decode(&mut rng, 6);
     let resp = coord.submit_wait(req).unwrap();
     assert_eq!(resp.output.unwrap(), want);
-    assert_eq!(resp.kv_misses, 2);
+    assert_eq!(resp.stats.kv_misses, 2);
 
     coord.shutdown();
 }
@@ -244,7 +244,7 @@ fn reused_session_id_never_serves_the_dead_predecessors_kv() {
             want,
             "step {i} of the reused id served stale predecessor K/V"
         );
-        assert_eq!((resp.kv_hits, resp.kv_misses), (4, 0), "fresh streams must hit");
+        assert_eq!((resp.stats.kv_hits, resp.stats.kv_misses), (4, 0), "fresh streams must hit");
     }
     coord.shutdown();
 }

@@ -1,0 +1,207 @@
+//! Cross-session prefix-cache serving tests (DESIGN.md §11, ISSUE
+//! acceptance): the full coordinator path with `prefix_cache = on` —
+//! admission-time hash-walk + byte-verified matching, suffix-only
+//! resumed prefill on the devices, refcounted page attach, and the
+//! budget/placement bookkeeping — pinned against the cold run.
+//!
+//! The load-bearing invariant: a cache-shared prefill computes **only**
+//! the uncovered suffix query rows, and those rows — plus every
+//! subsequent decode step of the warm session — are **bitwise
+//! identical** to the same workload served with the prefix cache off.
+//! Asserted across the reference and cycle-accurate sim backends,
+//! masks {none, causal}, and seq_shards {1, 2}.
+
+use fsa::config::{BackendKind, RunConfig};
+use fsa::coordinator::request::AttentionRequest;
+use fsa::coordinator::Coordinator;
+use fsa::mask::MaskKind;
+use fsa::numerics::SplitMix64;
+
+const SEQ: usize = 48;
+const D: usize = 16;
+/// Tokens sessions 101 and 202 share (a whole number of PAGE-token
+/// blocks strictly below SEQ, so the match covers exactly this much).
+const SHARED: usize = 32;
+const PAGE: usize = 16;
+const HEADS: usize = 4;
+const KV: usize = 2;
+const DECODE_STEPS: u64 = 4;
+
+/// Deterministic per-tensor content: the two coordinators (cache on /
+/// cache off) must see byte-identical workloads.
+fn mat(tag: u64, rows: usize, d: usize) -> Vec<f32> {
+    SplitMix64::new(0x9E37 + tag).normal_matrix(rows, d)
+}
+
+/// `fresh` with each KV head's first `shared` rows replaced by `base`'s
+/// (head-major `(kv_heads, seq, d)` layout).
+fn with_shared_prefix(base: &[f32], fresh: &[f32], shared: usize) -> Vec<f32> {
+    let mut out = fresh.to_vec();
+    let stride = SEQ * D;
+    for h in 0..KV {
+        out[h * stride..h * stride + shared * D]
+            .copy_from_slice(&base[h * stride..h * stride + shared * D]);
+    }
+    out
+}
+
+struct Run {
+    /// Outputs in submission order: donor prefill, warm prefill, then
+    /// `DECODE_STEPS` decode steps of the warm session.
+    outputs: Vec<Vec<f32>>,
+    warm_reused: usize,
+    prefix_hits: u64,
+    prefix_misses: u64,
+    attached_pages: u64,
+    saved_cycles: u64,
+}
+
+/// Serve the fixed two-session workload: donor prefill, a second
+/// prefill sharing the donor's first SHARED tokens of K/V (fresh Q and
+/// tail), close the donor mid-stream, then decode the warm session.
+fn run_workload(
+    prefix_cache: bool,
+    backend: BackendKind,
+    mask: MaskKind,
+    seq_shards: usize,
+) -> Run {
+    let cfg = RunConfig {
+        devices: 1,
+        max_batch: 8,
+        batch_timeout_cycles: 50_000,
+        queue_depth: 64,
+        backend,
+        num_heads: HEADS,
+        num_kv_heads: KV,
+        kv_cache_pages: 256,
+        kv_page_size: PAGE,
+        prefix_cache,
+        seq_shards,
+        sim_max_seq: 512,
+        array_size: 16,
+        ..RunConfig::default()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    let mut outputs = Vec::new();
+
+    let k1 = mat(12, KV * SEQ, D);
+    let v1 = mat(13, KV * SEQ, D);
+    let donor = AttentionRequest::prefill(
+        1, 101, SEQ, D, HEADS, KV,
+        mat(11, HEADS * SEQ, D), k1.clone(), v1.clone(),
+    )
+    .with_mask(mask);
+    let resp = coord.submit_wait(donor).unwrap();
+    outputs.push(resp.output.expect("donor prefill"));
+
+    let warm = AttentionRequest::prefill(
+        2, 202, SEQ, D, HEADS, KV,
+        mat(21, HEADS * SEQ, D),
+        with_shared_prefix(&k1, &mat(22, KV * SEQ, D), SHARED),
+        with_shared_prefix(&v1, &mat(23, KV * SEQ, D), SHARED),
+    )
+    .with_mask(mask);
+    let resp = coord.submit_wait(warm).unwrap();
+    let warm_reused = resp.stats.prefix_reused_tokens;
+    outputs.push(resp.output.expect("warm prefill"));
+
+    // Retire the donor mid-stream: shared device pages must survive on
+    // the warm session's references alone (refcounts, not liveness).
+    assert!(coord.submit_wait(AttentionRequest::close(3, 101)).unwrap().output.is_ok());
+
+    for step in 0..DECODE_STEPS {
+        let req = AttentionRequest::decode(
+            10 + step, 202, step, D, HEADS, KV,
+            mat(30 + step, HEADS, D),
+            mat(40 + step, KV, D),
+            mat(50 + step, KV, D),
+        );
+        let resp = coord.submit_wait(req).unwrap();
+        outputs.push(resp.output.expect("decode step"));
+    }
+
+    let o = std::sync::atomic::Ordering::Relaxed;
+    let run = Run {
+        outputs,
+        warm_reused,
+        prefix_hits: coord.metrics.prefix_hits.load(o),
+        prefix_misses: coord.metrics.prefix_misses.load(o),
+        attached_pages: coord.metrics.prefix_attached_pages.load(o),
+        saved_cycles: coord.metrics.saved_prefill_cycles.load(o),
+    };
+    coord.shutdown();
+    run
+}
+
+/// The pinned contract for one (backend, mask, seq_shards) cell.
+fn assert_warm_equals_cold(backend: BackendKind, mask: MaskKind, seq_shards: usize) {
+    let cold = run_workload(false, backend, mask, seq_shards);
+    let warm = run_workload(true, backend, mask, seq_shards);
+    let tag = format!("{backend:?}/{mask}/shards={seq_shards}");
+
+    // Cache off: nothing matched, nothing counted, full outputs.
+    assert_eq!(cold.warm_reused, 0, "{tag}");
+    assert_eq!((cold.prefix_hits, cold.prefix_misses), (0, 0), "{tag}");
+    assert_eq!(cold.outputs[1].len(), HEADS * SEQ * D, "{tag}");
+
+    // Cache on: the donor missed (nothing indexed yet), the second
+    // prefill matched exactly the shared SHARED-token block run.
+    assert_eq!((warm.prefix_hits, warm.prefix_misses), (1, 1), "{tag}");
+    assert_eq!(warm.warm_reused, SHARED, "{tag}");
+    assert!(warm.saved_cycles > 0, "{tag}: resumed prefill must save modeled cycles");
+
+    // The donor's own prefill ran identically under both configs.
+    assert_eq!(cold.outputs[0], warm.outputs[0], "{tag}: donor prefill diverged");
+
+    // The warm prefill carries only the uncovered suffix rows, and
+    // they are bitwise the cold run's rows [SHARED..SEQ) per head.
+    let suffix = SEQ - SHARED;
+    assert_eq!(warm.outputs[1].len(), HEADS * suffix * D, "{tag}");
+    for h in 0..HEADS {
+        let cold_rows = &cold.outputs[1][h * SEQ * D + SHARED * D..(h + 1) * SEQ * D];
+        let warm_rows = &warm.outputs[1][h * suffix * D..(h + 1) * suffix * D];
+        assert_eq!(cold_rows, warm_rows, "{tag}: head {h} suffix rows diverged");
+    }
+
+    // Every decode step after the resumed prefill is bitwise the cold
+    // run's — including past the donor's close.
+    for (i, (c, w)) in cold.outputs[2..].iter().zip(&warm.outputs[2..]).enumerate() {
+        assert_eq!(c, w, "{tag}: decode step {i} diverged");
+    }
+}
+
+#[test]
+fn reference_backend_whole_sequence_is_bitwise_cold() {
+    assert_warm_equals_cold(BackendKind::Reference, MaskKind::None, 1);
+    assert_warm_equals_cold(BackendKind::Reference, MaskKind::Causal, 1);
+}
+
+#[test]
+fn reference_backend_seq_sharded_is_bitwise_cold() {
+    assert_warm_equals_cold(BackendKind::Reference, MaskKind::None, 2);
+    assert_warm_equals_cold(BackendKind::Reference, MaskKind::Causal, 2);
+}
+
+#[test]
+fn sim_backend_whole_sequence_is_bitwise_cold() {
+    assert_warm_equals_cold(BackendKind::Sim, MaskKind::None, 1);
+    assert_warm_equals_cold(BackendKind::Sim, MaskKind::Causal, 1);
+}
+
+#[test]
+fn sim_backend_seq_sharded_is_bitwise_cold() {
+    assert_warm_equals_cold(BackendKind::Sim, MaskKind::None, 2);
+    assert_warm_equals_cold(BackendKind::Sim, MaskKind::Causal, 2);
+}
+
+/// On one device the warm session's KV streams find the donor's pages
+/// resident and attach the shared prefix by refcount instead of
+/// copying (the device-tier half of the tentpole).
+#[test]
+fn shared_prefix_pages_attach_instead_of_copying() {
+    let warm = run_workload(true, BackendKind::Reference, MaskKind::None, 1);
+    assert!(
+        warm.attached_pages > 0,
+        "warm prefill on the donor's device must attach shared pages, got 0"
+    );
+}

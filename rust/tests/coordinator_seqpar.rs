@@ -127,9 +127,9 @@ fn seq_sharded_serving_is_bitwise_placement_invariant() {
                     out1, out3,
                     "L={seq} d={d} {mask:?} shards={shards}: output depends on placement"
                 );
-                assert_eq!(multi.seq_chunks, shards.min(seq));
-                assert_eq!(multi.shards, heads * multi.seq_chunks);
-                assert_eq!(multi.merge_steps, heads * (multi.seq_chunks - 1));
+                assert_eq!(multi.stats.seq_chunks, shards.min(seq));
+                assert_eq!(multi.shards, heads * multi.stats.seq_chunks);
+                assert_eq!(multi.stats.merge_steps, heads * (multi.stats.seq_chunks - 1));
                 assert!(
                     multi.devices_used.len() > 1,
                     "chunks must actually scatter across the pool"
@@ -192,7 +192,7 @@ fn dead_chunks_are_skipped_and_padding_stays_exact() {
     let req =
         gqa_req(&mut rng, 1, seq, d, heads, kv).with_mask(MaskKind::PaddingKeys { valid: 20 });
     let resp = serve_one(2, 4, req.clone());
-    assert_eq!(resp.seq_chunks, 2, "two live chunks out of four");
+    assert_eq!(resp.stats.seq_chunks, 2, "two live chunks out of four");
     assert_eq!(resp.shards, heads * 2);
     let out = resp.output.unwrap();
     for h in 0..heads {
@@ -214,7 +214,7 @@ fn dead_chunks_are_skipped_and_padding_stays_exact() {
     // shard per head and the defined zero output.
     let req = gqa_req(&mut rng, 2, seq, d, heads, kv).with_mask(MaskKind::PaddingKeys { valid: 0 });
     let resp = serve_one(2, 4, req);
-    assert_eq!(resp.seq_chunks, 1);
+    assert_eq!(resp.stats.seq_chunks, 1);
     assert!(resp.output.unwrap().iter().all(|&x| x == 0.0));
 }
 
@@ -257,9 +257,9 @@ fn causal_prefill_split_kv_decode_is_bitwise_placement_invariant() {
                     rng.normal_matrix(kv, d),
                 ))
                 .unwrap();
-            hits += resp.kv_hits;
-            misses += resp.kv_misses;
-            assert_eq!(resp.seq_chunks, shards, "split-KV decode runs one row per chunk");
+            hits += resp.stats.kv_hits;
+            misses += resp.stats.kv_misses;
+            assert_eq!(resp.stats.seq_chunks, shards, "split-KV decode runs one row per chunk");
             outs.push(resp.output.expect("decode step"));
         }
         coord.submit_wait(AttentionRequest::close(999, 9)).unwrap();

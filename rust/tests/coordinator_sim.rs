@@ -85,13 +85,13 @@ fn sim_pool_matches_reference_pool_bitwise_and_prices_measured_cycles() {
             "seq={seq} d={d} {mask:?}: sim pool diverged from reference pool"
         );
         // Every shard was priced from measured machine cycles…
-        assert_eq!(got.measured_shards, got.shards, "seq={seq} {mask:?}");
-        assert_eq!(want.measured_shards, 0, "reference pool models, never measures");
+        assert_eq!(got.stats.measured_shards, got.shards, "seq={seq} {mask:?}");
+        assert_eq!(want.stats.measured_shards, 0, "reference pool models, never measures");
         // …the sim pool attributes every one of those cycles to an
         // instruction class — the breakdown sums EXACTLY to the priced
         // total (DESIGN.md §9) — while the model-priced reference pool
         // carries no breakdown…
-        let bd = got.cycle_breakdown.expect("sim responses carry attribution");
+        let bd = got.stats.cycle_breakdown.expect("sim responses carry attribution");
         assert_eq!(
             bd.total(),
             got.device_cycles,
@@ -103,7 +103,7 @@ fn sim_pool_matches_reference_pool_bitwise_and_prices_measured_cycles() {
             MaskKind::None => assert_eq!(bd.mask_wave, 0, "unmasked shards ride no mask wave"),
             _ => assert!(bd.mask_wave > 0, "seq={seq} {mask:?}: masked intervals must be counted"),
         }
-        assert!(want.cycle_breakdown.is_none(), "modeled cycles have no measured attribution");
+        assert!(want.stats.cycle_breakdown.is_none(), "modeled cycles have no measured attribution");
         // …and measured disagrees with the model by less than the band
         // while not being the model (it is a genuine measurement).
         let accel = {
@@ -188,8 +188,8 @@ fn sim_decode_session_is_bitwise_the_reference_pool() {
             // Decode responses on the sim pool attribute exactly too;
             // any recompute fallback is charged to its own class so the
             // sum still equals the priced cycles (measured + recompute).
-            if resp.measured_shards == resp.shards && resp.shards > 0 {
-                let bd = resp.cycle_breakdown.expect("measured decode carries attribution");
+            if resp.stats.measured_shards == resp.shards && resp.shards > 0 {
+                let bd = resp.stats.cycle_breakdown.expect("measured decode carries attribution");
                 assert_eq!(bd.total(), resp.device_cycles, "step {step}: {bd:?}");
             }
             outs.push(resp.output.expect("decode step succeeds"));
@@ -223,19 +223,19 @@ fn sim_seqpar_serving_is_bitwise_the_reference_pool() {
         let req = gqa_req(7000 + i as u64, 1, seq, d, heads, kv).with_mask(mask);
         let got = sim.submit_wait(req.clone()).unwrap();
         let want = reference.submit_wait(req).unwrap();
-        assert_eq!(got.seq_chunks, 2, "{mask:?}");
+        assert_eq!(got.stats.seq_chunks, 2, "{mask:?}");
         assert_eq!(got.shards, heads * 2, "{mask:?}");
         assert_eq!(
             bits(&got.output.expect("sim seqpar succeeds")),
             bits(&want.output.expect("reference seqpar succeeds")),
             "{mask:?}: chunked sim serving diverged"
         );
-        assert_eq!(got.measured_shards, got.shards, "{mask:?}");
-        assert_eq!(got.merge_steps, want.merge_steps, "{mask:?}");
+        assert_eq!(got.stats.measured_shards, got.shards, "{mask:?}");
+        assert_eq!(got.stats.merge_steps, want.stats.merge_steps, "{mask:?}");
         // Chunked shards roll their per-shard breakdowns up at gather;
         // the exact-sum contract holds across the whole (head, chunk)
         // grid, not just single shards.
-        let bd = got.cycle_breakdown.expect("chunked sim responses carry attribution");
+        let bd = got.stats.cycle_breakdown.expect("chunked sim responses carry attribution");
         assert_eq!(bd.total(), got.device_cycles, "{mask:?}: {bd:?}");
     }
     let o = std::sync::atomic::Ordering::Relaxed;

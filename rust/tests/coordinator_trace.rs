@@ -174,8 +174,8 @@ fn tracing_changes_no_served_bits_on_the_sim_pool() {
             "{mask:?}: tracing changed served bits"
         );
         assert_eq!(got.device_cycles, want.device_cycles, "{mask:?}");
-        assert_eq!(got.cycle_breakdown, want.cycle_breakdown, "{mask:?}");
-        let bd = got.cycle_breakdown.expect("sim responses carry attribution");
+        assert_eq!(got.stats.cycle_breakdown, want.stats.cycle_breakdown, "{mask:?}");
+        let bd = got.stats.cycle_breakdown.expect("sim responses carry attribution");
         assert_eq!(bd.total(), got.device_cycles, "{mask:?}: {bd:?}");
     }
 

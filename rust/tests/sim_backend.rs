@@ -1,12 +1,17 @@
 //! The §8 bitwise contract at the backend level: every `SimBackend`
-//! execution path — whole heads, sequence chunks, decode rows, split-KV
-//! decode ranges — must produce outputs bitwise-identical to the
-//! reference twin it claims to mirror (they share the PWL exp2, the
-//! fp16 quantization points and the accumulation orders; the §8 mask
-//! wave covers partial tiles and zero-padded ragged tails).  Also the
-//! sim-determinism and structural-hazard satellites: the machine is a
-//! pure function of (program, memory image), and the new decode-row /
-//! partial program shapes survive the array's port-hazard asserts.
+//! execution path — whole heads, sequence chunks, resumed (prefix-warm)
+//! prefills, decode rows, split-KV decode ranges — must produce outputs
+//! bitwise-identical to the reference twin it claims to mirror (they
+//! share the PWL exp2, the fp16 quantization points and the
+//! accumulation orders; the §8 mask wave covers partial tiles and
+//! zero-padded ragged tails).  Also the sim-determinism and
+//! structural-hazard satellites: the machine is a pure function of
+//! (program, memory image), and the new decode-row / partial program
+//! shapes survive the array's port-hazard asserts.
+//!
+//! Everything drives the single typed entry point
+//! (`execute(ShardPlan) -> ShardOutput`, DESIGN.md §11) — the old
+//! four-method surface is gone.
 //!
 //! Machine-verified twin: python/tests/test_sim_backend_bitwise.py runs
 //! the same comparison as a float32/float16 numpy port.
@@ -15,10 +20,11 @@ use fsa::config::{AccelConfig, BackendKind};
 use fsa::kernel::flash::{flash_chunk_program, ChunkLayout, ChunkParams};
 use fsa::mask::MaskKind;
 use fsa::numerics::reference::{
-    decode_pwl, decode_pwl_partial, flash_pwl_masked, flash_pwl_partial, Mat,
+    decode_pwl, decode_pwl_partial, flash_pwl_masked, flash_pwl_partial, flash_pwl_resumed,
+    FlashPartial, Mat,
 };
 use fsa::numerics::SplitMix64;
-use fsa::runtime::{Backend, SimBackend};
+use fsa::runtime::{Backend, ShardPlan, SimBackend};
 use fsa::sim::{Machine, MachineConfig};
 
 const N: usize = 32;
@@ -32,6 +38,64 @@ fn accel() -> AccelConfig {
 
 fn sim() -> SimBackend {
     SimBackend::new(&accel())
+}
+
+fn head(
+    be: &mut SimBackend,
+    l: usize,
+    d: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: MaskKind,
+) -> Result<Vec<f32>, String> {
+    be.execute(ShardPlan::Head { seq_len: l, d, q, k, v, mask })?.into_full()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn chunk(
+    be: &mut SimBackend,
+    l: usize,
+    d: usize,
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    mask: MaskKind,
+    key_offset: usize,
+) -> Result<FlashPartial, String> {
+    be.execute(ShardPlan::HeadChunk {
+        seq_len: l,
+        d,
+        q,
+        k_chunk: kc,
+        v_chunk: vc,
+        mask,
+        key_offset,
+        total_keys: l,
+    })?
+    .into_partial()
+}
+
+fn decode(
+    be: &mut SimBackend,
+    prefix: usize,
+    d: usize,
+    qr: &[f32],
+    k: &[f32],
+    v: &[f32],
+) -> Result<Vec<f32>, String> {
+    be.execute(ShardPlan::DecodeRow { prefix_len: prefix, d, q_row: qr, k, v })?.into_full()
+}
+
+fn decode_range(
+    be: &mut SimBackend,
+    range: usize,
+    d: usize,
+    qr: &[f32],
+    k: &[f32],
+    v: &[f32],
+) -> Result<FlashPartial, String> {
+    be.execute(ShardPlan::DecodeRange { range_len: range, d, q_row: qr, k, v })?.into_partial()
 }
 
 #[test]
@@ -49,7 +113,7 @@ fn execute_head_is_bitwise_the_reference_twin() {
             MaskKind::Causal,
             MaskKind::PaddingKeys { valid: l - l / 3 },
         ] {
-            let got = be.execute_head(l, d, &q, &k, &v, mask).unwrap();
+            let got = head(&mut be, l, d, &q, &k, &v, mask).unwrap();
             let want = flash_pwl_masked(
                 &Mat::new(l, d, q.clone()),
                 &Mat::new(l, d, k.clone()),
@@ -65,9 +129,7 @@ fn execute_head_is_bitwise_the_reference_twin() {
     // A fully-masked operator returns the defined zero output without
     // running the array.
     let q = rng.normal_matrix(8, 8);
-    let got = be
-        .execute_head(8, 8, &q, &q, &q, MaskKind::PaddingKeys { valid: 0 })
-        .unwrap();
+    let got = head(&mut be, 8, 8, &q, &q, &q, MaskKind::PaddingKeys { valid: 0 }).unwrap();
     assert!(got.iter().all(|&x| x == 0.0));
 }
 
@@ -85,18 +147,17 @@ fn execute_head_partial_is_bitwise_the_reference_twin() {
     let v = rng.normal_matrix(l, d);
     for mask in [MaskKind::None, MaskKind::Causal, MaskKind::PaddingKeys { valid: 40 }] {
         for &(start, len) in &[(0usize, 32usize), (32, 32), (16, 48)] {
-            let got = be
-                .execute_head_partial(
-                    l,
-                    d,
-                    &q,
-                    &k[start * d..(start + len) * d],
-                    &v[start * d..(start + len) * d],
-                    mask,
-                    start,
-                    l,
-                )
-                .unwrap();
+            let got = chunk(
+                &mut be,
+                l,
+                d,
+                &q,
+                &k[start * d..(start + len) * d],
+                &v[start * d..(start + len) * d],
+                mask,
+                start,
+            )
+            .unwrap();
             let want = flash_pwl_partial(
                 &Mat::new(l, d, q.clone()),
                 &Mat::new(len, d, k[start * d..(start + len) * d].to_vec()),
@@ -113,6 +174,95 @@ fn execute_head_partial_is_bitwise_the_reference_twin() {
     }
 }
 
+/// DESIGN.md §11: a resumed (prefix-cache warm) prefill computes only
+/// the uncovered suffix query rows, with the mask programmed at global
+/// query coordinates — so the suffix rows are bitwise the cold whole-
+/// head run's same rows, whole-range and per-key-chunk alike.
+#[test]
+fn resumed_prefill_rows_are_bitwise_the_cold_suffix() {
+    let mut rng = SplitMix64::new(89);
+    let mut be = sim();
+    let (l, d) = (64usize, 16usize);
+    let q = rng.normal_matrix(l, d);
+    let k = rng.normal_matrix(l, d);
+    let v = rng.normal_matrix(l, d);
+    for mask in [MaskKind::None, MaskKind::Causal, MaskKind::PaddingKeys { valid: 40 }] {
+        let cold = head(&mut be, l, d, &q, &k, &v, mask).unwrap();
+        for &resume in &[16usize, 33] {
+            // Whole key range: normalized suffix rows out, bitwise the
+            // cold run's same rows.
+            let warm = be
+                .execute(ShardPlan::ResumedPrefill {
+                    seq_len: l,
+                    d,
+                    query_offset: resume,
+                    q_suffix: &q[resume * d..],
+                    k_chunk: &k,
+                    v_chunk: &v,
+                    mask,
+                    key_offset: 0,
+                    total_keys: l,
+                })
+                .unwrap()
+                .into_full()
+                .unwrap();
+            assert_eq!(warm, cold[resume * d..], "{mask:?} resume {resume} whole-range");
+            // Split key range: partial states, each bitwise the
+            // reference resumed twin at the same global coordinates.
+            let split = 32usize;
+            let rows = l - resume;
+            for &(start, len) in &[(0usize, split), (split, l - split)] {
+                let warm_part = be
+                    .execute(ShardPlan::ResumedPrefill {
+                        seq_len: l,
+                        d,
+                        query_offset: resume,
+                        q_suffix: &q[resume * d..],
+                        k_chunk: &k[start * d..(start + len) * d],
+                        v_chunk: &v[start * d..(start + len) * d],
+                        mask,
+                        key_offset: start,
+                        total_keys: l,
+                    })
+                    .unwrap()
+                    .into_partial()
+                    .unwrap();
+                let want = flash_pwl_resumed(
+                    &Mat::new(rows, d, q[resume * d..].to_vec()),
+                    &Mat::new(len, d, k[start * d..(start + len) * d].to_vec()),
+                    &Mat::new(len, d, v[start * d..(start + len) * d].to_vec()),
+                    N,
+                    N,
+                    SEGMENTS,
+                    mask,
+                    resume,
+                    start,
+                    l,
+                );
+                assert_eq!(
+                    warm_part, want,
+                    "{mask:?} resume {resume} chunk [{start}, {})",
+                    start + len
+                );
+            }
+        }
+    }
+    // A resume point that leaves no suffix rows is reported, not run.
+    assert!(be
+        .execute(ShardPlan::ResumedPrefill {
+            seq_len: l,
+            d,
+            query_offset: l,
+            q_suffix: &[],
+            k_chunk: &k,
+            v_chunk: &v,
+            mask: MaskKind::None,
+            key_offset: 0,
+            total_keys: l,
+        })
+        .is_err());
+}
+
 #[test]
 fn execute_decode_rows_are_bitwise_the_reference_twin() {
     let mut rng = SplitMix64::new(83);
@@ -121,13 +271,13 @@ fn execute_decode_rows_are_bitwise_the_reference_twin() {
         let qr = rng.normal_matrix(1, d);
         let k = rng.normal_matrix(prefix, d);
         let v = rng.normal_matrix(prefix, d);
-        let got = be.execute_decode_row(prefix, d, &qr, &k, &v).unwrap();
+        let got = decode(&mut be, prefix, d, &qr, &k, &v).unwrap();
         assert_eq!(
             got,
             decode_pwl(&qr, &k, &v, d, N, SEGMENTS),
             "decode prefix={prefix} d={d}"
         );
-        let part = be.execute_decode_row_partial(prefix, d, &qr, &k, &v).unwrap();
+        let part = decode_range(&mut be, prefix, d, &qr, &k, &v).unwrap();
         assert_eq!(
             part,
             decode_pwl_partial(&qr, &k, &v, d, N, SEGMENTS),
@@ -136,7 +286,7 @@ fn execute_decode_rows_are_bitwise_the_reference_twin() {
     }
     // Shape mismatches are reported, not panicked.
     let qr = rng.normal_matrix(1, 8);
-    assert!(be.execute_decode_row(4, 8, &qr, &qr, &qr).is_err());
+    assert!(decode(&mut be, 4, 8, &qr, &qr, &qr).is_err());
 }
 
 #[test]
@@ -149,7 +299,11 @@ fn backend_enum_routes_sim_and_reports_measured_cycles() {
     let mut rng = SplitMix64::new(84);
     let (l, d) = (64usize, 32usize);
     let q = rng.normal_matrix(l, d);
-    let out = be.execute_head(l, d, &q, &q, &q, MaskKind::Causal).unwrap();
+    let out = be
+        .execute(ShardPlan::Head { seq_len: l, d, q: &q, k: &q, v: &q, mask: MaskKind::Causal })
+        .unwrap()
+        .into_full()
+        .unwrap();
     assert_eq!(out.len(), l * d);
     let measured = be.take_measured().expect("sim executions measure cycles");
     assert!(measured > 0);
@@ -157,7 +311,8 @@ fn backend_enum_routes_sim_and_reports_measured_cycles() {
     // The reference backend never measures.
     let mut rb =
         Backend::new(BackendKind::Reference, std::path::Path::new("/nonexistent"), &cfg).unwrap();
-    rb.execute_head(l, d, &q, &q, &q, MaskKind::None).unwrap();
+    rb.execute(ShardPlan::Head { seq_len: l, d, q: &q, k: &q, v: &q, mask: MaskKind::None })
+        .unwrap();
     assert!(rb.take_measured().is_none());
 }
 
@@ -219,8 +374,9 @@ fn shard_batching_is_bitwise_and_cycle_equal_to_fresh_machines() {
         let mut rng = SplitMix64::new(88);
         let mut outs = Vec::new();
         // Mixed shard stream: whole heads of different shapes + masks,
-        // a chunk with partial state, a decode row, a decode range —
-        // all between the same pair of hazard fences when batched.
+        // a chunk with partial state, a resumed suffix, a decode row, a
+        // decode range — all between the same pair of hazard fences
+        // when batched.
         for &(l, d, mask) in &[
             (64usize, 32usize, MaskKind::Causal),
             (40, 16, MaskKind::None),
@@ -230,7 +386,7 @@ fn shard_batching_is_bitwise_and_cycle_equal_to_fresh_machines() {
             let q = rng.normal_matrix(l, d);
             let k = rng.normal_matrix(l, d);
             let v = rng.normal_matrix(l, d);
-            let o = be.execute_head(l, d, &q, &k, &v, mask).unwrap();
+            let o = head(&mut be, l, d, &q, &k, &v, mask).unwrap();
             outs.push(Out::Head(
                 o.iter().map(|x| x.to_bits()).collect(),
                 be.take_measured().unwrap(),
@@ -241,7 +397,18 @@ fn shard_batching_is_bitwise_and_cycle_equal_to_fresh_machines() {
         let kc = rng.normal_matrix(32, d);
         let vc = rng.normal_matrix(32, d);
         let p = be
-            .execute_head_partial(l, d, &q, &kc, &vc, MaskKind::Causal, 16, l)
+            .execute(ShardPlan::HeadChunk {
+                seq_len: l,
+                d,
+                q: &q,
+                k_chunk: &kc,
+                v_chunk: &vc,
+                mask: MaskKind::Causal,
+                key_offset: 16,
+                total_keys: l,
+            })
+            .unwrap()
+            .into_partial()
             .unwrap();
         outs.push(Out::Partial(
             p.acc.iter().map(|x| x.to_bits()).collect(),
@@ -249,15 +416,36 @@ fn shard_batching_is_bitwise_and_cycle_equal_to_fresh_machines() {
             p.l.iter().map(|x| x.to_bits()).collect(),
             be.take_measured().unwrap(),
         ));
-        let qr = rng.normal_matrix(1, d);
-        let k = rng.normal_matrix(50, d);
-        let v = rng.normal_matrix(50, d);
-        let o = be.execute_decode_row(50, d, &qr, &k, &v).unwrap();
+        let kk = rng.normal_matrix(l, d);
+        let vv = rng.normal_matrix(l, d);
+        let o = be
+            .execute(ShardPlan::ResumedPrefill {
+                seq_len: l,
+                d,
+                query_offset: 24,
+                q_suffix: &q[24 * d..],
+                k_chunk: &kk,
+                v_chunk: &vv,
+                mask: MaskKind::Causal,
+                key_offset: 0,
+                total_keys: l,
+            })
+            .unwrap()
+            .into_full()
+            .unwrap();
         outs.push(Out::Head(
             o.iter().map(|x| x.to_bits()).collect(),
             be.take_measured().unwrap(),
         ));
-        let pr = be.execute_decode_row_partial(50, d, &qr, &k, &v).unwrap();
+        let qr = rng.normal_matrix(1, d);
+        let k = rng.normal_matrix(50, d);
+        let v = rng.normal_matrix(50, d);
+        let o = decode(&mut be, 50, d, &qr, &k, &v).unwrap();
+        outs.push(Out::Head(
+            o.iter().map(|x| x.to_bits()).collect(),
+            be.take_measured().unwrap(),
+        ));
+        let pr = decode_range(&mut be, 50, d, &qr, &k, &v).unwrap();
         outs.push(Out::Partial(
             pr.acc.iter().map(|x| x.to_bits()).collect(),
             pr.m.iter().map(|x| x.to_bits()).collect(),
@@ -288,7 +476,7 @@ fn decode_row_program_shape_is_hazard_free() {
         let k = rng.normal_matrix(prefix, N);
         let v = rng.normal_matrix(prefix, N);
         // A panic here IS the failure; the output check is a bonus.
-        let out = be.execute_decode_row(prefix, N, &qr, &k, &v).unwrap();
+        let out = decode(&mut be, prefix, N, &qr, &k, &v).unwrap();
         assert!(out.iter().all(|x| x.is_finite()));
         assert!(be.take_measured().unwrap() > 0);
     }

@@ -19,10 +19,10 @@ use fsa::config::AccelConfig;
 use fsa::kernel::flash::{flash_chunk_program, ChunkLayout, ChunkParams};
 use fsa::mask::MaskKind;
 use fsa::numerics::reference::{
-    decode_pwl, decode_pwl_partial, flash_pwl_masked, flash_pwl_partial, Mat,
+    decode_pwl, decode_pwl_partial, flash_pwl_masked, flash_pwl_partial, flash_pwl_resumed, Mat,
 };
 use fsa::numerics::SplitMix64;
-use fsa::runtime::SimBackend;
+use fsa::runtime::{ShardPlan, SimBackend};
 use fsa::sim::array::{Array, DownMsg, LeftTag};
 use fsa::sim::{Machine, MachineConfig};
 
@@ -41,10 +41,11 @@ fn bits(v: &[f32]) -> Vec<u32> {
 /// ~200 randomized cases over array size x sequence length x head dim x
 /// mask x execution mode, biased toward the small arrays where a skew
 /// bug has the fewest cycles to hide in.  Every case runs on a
-/// vectorized backend and a scalar-reference backend and must agree
-/// bitwise (outputs) and exactly (measured cycles) — and the vectorized
-/// output must equal the analytic reference twin, so the pair can't
-/// drift together.
+/// vectorized backend and a scalar-reference backend — both through the
+/// single typed entry point (`execute(ShardPlan)`, DESIGN.md §11) — and
+/// must agree bitwise (outputs) and exactly (measured cycles) — and the
+/// vectorized output must equal the analytic reference twin, so the
+/// pair can't drift together.
 #[test]
 fn randomized_differential_sweep_is_bitwise_and_cycle_exact() {
     let mut rng = SplitMix64::new(0xD1FF);
@@ -63,7 +64,7 @@ fn randomized_differential_sweep_is_bitwise_and_cycle_exact() {
                 // operator short-circuit has its own test in sim_backend.rs.
                 _ => MaskKind::PaddingKeys { valid: 1 + rng.next_below(l as u64) as usize },
             };
-            let mode = rng.next_below(4);
+            let mode = rng.next_below(5);
             let ctx = format!("n={n} L={l} d={d} {mask:?} mode={mode} trial={trial}");
             match mode {
                 0 => {
@@ -71,13 +72,14 @@ fn randomized_differential_sweep_is_bitwise_and_cycle_exact() {
                     let q = rng.normal_matrix(l, d);
                     let k = rng.normal_matrix(l, d);
                     let v = rng.normal_matrix(l, d);
-                    let got = vec_be.execute_head(l, d, &q, &k, &v, mask).unwrap();
-                    let twin = sca_be.execute_head(l, d, &q, &k, &v, mask).unwrap();
+                    let plan = || ShardPlan::Head { seq_len: l, d, q: &q, k: &k, v: &v, mask };
+                    let got = vec_be.execute(plan()).unwrap().into_full().unwrap();
+                    let twin = sca_be.execute(plan()).unwrap().into_full().unwrap();
                     assert_eq!(bits(&got), bits(&twin), "vec vs scalar: {ctx}");
                     let want = flash_pwl_masked(
-                        &Mat::new(l, d, q),
-                        &Mat::new(l, d, k),
-                        &Mat::new(l, d, v),
+                        &Mat::new(l, d, q.clone()),
+                        &Mat::new(l, d, k.clone()),
+                        &Mat::new(l, d, v.clone()),
                         n,
                         n,
                         SEGMENTS,
@@ -92,12 +94,18 @@ fn randomized_differential_sweep_is_bitwise_and_cycle_exact() {
                     let q = rng.normal_matrix(l, d);
                     let kc = rng.normal_matrix(len, d);
                     let vc = rng.normal_matrix(len, d);
-                    let got = vec_be
-                        .execute_head_partial(l, d, &q, &kc, &vc, mask, start, l)
-                        .unwrap();
-                    let twin = sca_be
-                        .execute_head_partial(l, d, &q, &kc, &vc, mask, start, l)
-                        .unwrap();
+                    let plan = || ShardPlan::HeadChunk {
+                        seq_len: l,
+                        d,
+                        q: &q,
+                        k_chunk: &kc,
+                        v_chunk: &vc,
+                        mask,
+                        key_offset: start,
+                        total_keys: l,
+                    };
+                    let got = vec_be.execute(plan()).unwrap().into_partial().unwrap();
+                    let twin = sca_be.execute(plan()).unwrap().into_partial().unwrap();
                     assert_eq!(got, twin, "vec vs scalar: {ctx} chunk [{start}, {})", start + len);
                     let want = flash_pwl_partial(
                         &Mat::new(l, d, q),
@@ -117,22 +125,67 @@ fn randomized_differential_sweep_is_bitwise_and_cycle_exact() {
                     let qr = rng.normal_matrix(1, d);
                     let k = rng.normal_matrix(l, d);
                     let v = rng.normal_matrix(l, d);
-                    let got = vec_be.execute_decode_row(l, d, &qr, &k, &v).unwrap();
-                    let twin = sca_be.execute_decode_row(l, d, &qr, &k, &v).unwrap();
+                    let plan =
+                        || ShardPlan::DecodeRow { prefix_len: l, d, q_row: &qr, k: &k, v: &v };
+                    let got = vec_be.execute(plan()).unwrap().into_full().unwrap();
+                    let twin = sca_be.execute(plan()).unwrap().into_full().unwrap();
                     assert_eq!(bits(&got), bits(&twin), "vec vs scalar: {ctx}");
                     let want = decode_pwl(&qr, &k, &v, d, n, SEGMENTS);
                     assert_eq!(bits(&got), bits(&want), "vec vs reference: {ctx}");
                 }
-                _ => {
+                3 => {
                     // Split-KV decode range (partial state out).
                     let qr = rng.normal_matrix(1, d);
                     let k = rng.normal_matrix(l, d);
                     let v = rng.normal_matrix(l, d);
-                    let got = vec_be.execute_decode_row_partial(l, d, &qr, &k, &v).unwrap();
-                    let twin = sca_be.execute_decode_row_partial(l, d, &qr, &k, &v).unwrap();
+                    let plan =
+                        || ShardPlan::DecodeRange { range_len: l, d, q_row: &qr, k: &k, v: &v };
+                    let got = vec_be.execute(plan()).unwrap().into_partial().unwrap();
+                    let twin = sca_be.execute(plan()).unwrap().into_partial().unwrap();
                     assert_eq!(got, twin, "vec vs scalar: {ctx}");
                     let want = decode_pwl_partial(&qr, &k, &v, d, n, SEGMENTS);
                     assert_eq!(got, want, "vec vs reference: {ctx}");
+                }
+                _ => {
+                    // Resumed (prefix-warm) whole-range prefill: suffix
+                    // rows at global mask coordinates (DESIGN.md §11).
+                    let resume = rng.next_below(l as u64) as usize;
+                    let rows = l - resume;
+                    let q = rng.normal_matrix(rows, d);
+                    let k = rng.normal_matrix(l, d);
+                    let v = rng.normal_matrix(l, d);
+                    let plan = || ShardPlan::ResumedPrefill {
+                        seq_len: l,
+                        d,
+                        query_offset: resume,
+                        q_suffix: &q,
+                        k_chunk: &k,
+                        v_chunk: &v,
+                        mask,
+                        key_offset: 0,
+                        total_keys: l,
+                    };
+                    let got = vec_be.execute(plan()).unwrap().into_full().unwrap();
+                    let twin = sca_be.execute(plan()).unwrap().into_full().unwrap();
+                    assert_eq!(bits(&got), bits(&twin), "vec vs scalar: {ctx} resume {resume}");
+                    let want = flash_pwl_resumed(
+                        &Mat::new(rows, d, q),
+                        &Mat::new(l, d, k),
+                        &Mat::new(l, d, v),
+                        n,
+                        n,
+                        SEGMENTS,
+                        mask,
+                        resume,
+                        0,
+                        l,
+                    )
+                    .finalize();
+                    assert_eq!(
+                        bits(&got),
+                        bits(&want.data),
+                        "vec vs reference: {ctx} resume {resume}"
+                    );
                 }
             }
             // The vectorization must not move a single cycle.
@@ -278,7 +331,11 @@ fn decode_row_hazard_sweep_covers_both_step_paths() {
             let k = rng.normal_matrix(prefix, n);
             let v = rng.normal_matrix(prefix, n);
             // A panic here IS the failure; the finiteness check is a bonus.
-            let out = be.execute_decode_row(prefix, n, &qr, &k, &v).unwrap();
+            let out = be
+                .execute(ShardPlan::DecodeRow { prefix_len: prefix, d: n, q_row: &qr, k: &k, v: &v })
+                .unwrap()
+                .into_full()
+                .unwrap();
             assert!(out.iter().all(|x| x.is_finite()), "scalar={scalar} prefix={prefix}");
             assert!(be.take_measured().unwrap() > 0);
         }

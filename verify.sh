@@ -66,27 +66,36 @@ if [ "${VERIFY_BENCH:-0}" = "1" ]; then
             python3 -c "import json,sys; json.load(open(sys.argv[1])); print(sys.argv[1] + ': valid JSON')" "$f"
         done
         # The serving record must carry the continuous-scheduler schema
-        # (same assertions as the CI bench-smoke gate): the five
+        # (same assertions as the CI bench-smoke gate): the six
         # scenarios, per-scenario batch-occupancy / queue-depth / wave-mix
-        # telemetry, and the counter reconciliation invariant.
+        # telemetry, the counter reconciliation invariant, and the
+        # prefix-cache scenario's hit-rate / saved-cycles record
+        # (DESIGN.md §11).
         echo "== python3 validates the BENCH_serving.json schema =="
         python3 - <<'EOF'
 import json
 serving = json.load(open("BENCH_serving.json"))
 names = [s["name"] for s in serving["scenarios"]]
-assert names == ["stateless_mix", "decode", "sim_attrib", "seqpar", "continuous"], names
+assert names == ["stateless_mix", "decode", "sim_attrib", "seqpar",
+                 "continuous", "prefix"], names
+by_name = {s["name"]: s for s in serving["scenarios"]}
 for s in serving["scenarios"]:
     for key in ("ttft_ns", "tpot_ns", "latency_ns", "queue_depth", "batch_occupancy"):
         assert key in s["metrics"], f"{s['name']}: missing {key}"
     c = s["metrics"]["counters"]
     for key in ("sched_iterations", "sched_queued", "sched_admitted",
                 "sched_rejected", "prefill_waves", "decode_waves",
-                "multi_session_decode_waves"):
+                "multi_session_decode_waves", "prefix_hits", "prefix_misses",
+                "prefix_attached_pages", "cow_copies", "saved_prefill_cycles"):
         assert key in c, f"{s['name']}: missing counter {key}"
     assert c["sched_admitted"] == c["sched_queued"] - c["sched_rejected"], s["name"]
-cont = serving["scenarios"][-1]
+cont = by_name["continuous"]
 assert cont["metrics"]["counters"]["multi_session_decode_waves"] >= 1, cont
 assert cont["metrics"]["batch_occupancy"]["count"] >= 1, cont
+pc = by_name["prefix"]["prefix_cache"]
+assert pc["hits"] >= 1 and pc["misses"] == 1, pc
+assert pc["hit_rate"] > 0.0, pc
+assert pc["saved_prefill_cycles"] > 0, pc
 print("BENCH_serving.json: schema OK")
 EOF
     else
