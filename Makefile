@@ -15,13 +15,15 @@ bench-smoke:
 		FSA_BENCH_SMOKE=1 cargo bench --bench $$b || exit 1; \
 	done
 
-# Refresh the perf records: BENCH_simcycles.json (sim throughput) and
-# BENCH_serving.json (serving-path SLO trajectory); see EXPERIMENTS.md
-# §Perf log.  Honors FSA_BENCH_SMOKE=1 for a quick pass that still
-# writes the JSON (flagged "smoke": true).
+# Refresh the perf records: BENCH_simcycles.json (sim throughput),
+# BENCH_serving.json (serving-path SLO trajectory), and
+# BENCH_hotpath.json (cached-vs-uncached shard dispatch); see
+# EXPERIMENTS.md §Perf log.  Honors FSA_BENCH_SMOKE=1 for a quick pass
+# that still writes the JSON (flagged "smoke": true).
 bench-json:
 	cargo bench --bench simcycles
 	cargo bench --bench serving
+	cargo bench --bench hotpath
 
 build:
 	cargo build --release

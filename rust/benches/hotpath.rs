@@ -6,15 +6,22 @@
 //!  2. full small-device FlashAttention run (schedule + execute);
 //!  3. host flash_pwl reference (dominates Table-2 cross-checks);
 //!  4. PWL exp2 scalar evaluation;
-//!  5. coordinator round trip without PJRT (batching/routing overhead).
+//!  5. shard dispatch with the compiled-program cache + machine pool on
+//!     (the serving defaults) vs off — recorded to `BENCH_hotpath.json`
+//!     (via `make bench-json`) so the programs-built ≪ shards-executed
+//!     contract of DESIGN.md §12 stays diffable across PRs.
 use std::time::Duration;
 
-use fsa::benchutil::{bench_for, fmt_duration, observe, Table};
+use fsa::benchutil::{bench_for, fmt_duration, observe, smoke, Table};
+use fsa::config::AccelConfig;
 use fsa::kernel::{flash_attention_program, FlashLayout, FlashParams};
+use fsa::mask::MaskKind;
 use fsa::numerics::pwl::PwlExp2;
 use fsa::numerics::reference::{flash_pwl, Mat};
 use fsa::numerics::SplitMix64;
+use fsa::runtime::{ShardPlan, SimBackend};
 use fsa::sim::{Machine, MachineConfig};
+use fsa::telemetry::json::{parse, Json};
 
 fn main() {
     let mut t = Table::new(&["hot path", "median", "notes"]);
@@ -80,5 +87,119 @@ fn main() {
         format!("{:.1} Melem/s", 4096.0 / st.per_iter_ns() * 1e3),
     ]);
 
+    // 5: shard dispatch, cached vs uncached.  One pass dispatches the
+    // decode-heavy shape mix a lockstep serving round produces: two
+    // same-shape heads, each a causal prefill shard plus a run of
+    // decode rows over growing prefixes.  Cycle-accurate array stepping
+    // dominates host time either way (the cache can only strip the
+    // compile + machine-allocation overhead off the top), so the
+    // headline contract in the JSON record is programs built vs shards
+    // executed, not the timing delta.
+    let n = 32usize;
+    let accel = {
+        let mut a = AccelConfig::builtin("fsa").unwrap();
+        a.array_size = n;
+        a
+    };
+    let (seq, d, decode_rows) = (2 * n, n, 6usize);
+    let mut rng = SplitMix64::new(5);
+    let q = rng.normal_matrix(seq, d);
+    let k = rng.normal_matrix(seq, d);
+    let v = rng.normal_matrix(seq, d);
+    let qr = rng.normal_matrix(1, d);
+    let shards_per_pass = 2 * (1 + decode_rows) as u64;
+    let mut dispatch_pass = |be: &mut SimBackend| {
+        for _head in 0..2 {
+            observe(
+                be.execute(ShardPlan::Head {
+                    seq_len: seq,
+                    d,
+                    q: &q,
+                    k: &k,
+                    v: &v,
+                    mask: MaskKind::Causal,
+                })
+                .unwrap(),
+            );
+            for i in 0..decode_rows {
+                let prefix = seq - decode_rows + 1 + i;
+                observe(
+                    be.execute(ShardPlan::DecodeRow {
+                        prefix_len: prefix,
+                        d,
+                        q_row: &qr,
+                        k: &k[..prefix * d],
+                        v: &v[..prefix * d],
+                    })
+                    .unwrap(),
+                );
+            }
+        }
+    };
+    let budget = Duration::from_millis(if smoke() { 200 } else { 1000 });
+    let mut modes = Vec::new();
+    for cached in [true, false] {
+        let mut be = SimBackend::new(&accel);
+        if !cached {
+            be.set_prog_cache(0);
+            be.set_batch_shards(1);
+        }
+        // Count passes ourselves: bench_for's calibration + warmup
+        // calls also dispatch shards, and the counters see every one.
+        let mut passes = 0u64;
+        let st = bench_for(budget, || {
+            passes += 1;
+            dispatch_pass(&mut be)
+        });
+        let hp = be.take_hotpath_stats();
+        let shards = passes * shards_per_pass;
+        let us_per_shard = st.per_iter_ns() / shards_per_pass as f64 / 1e3;
+        if cached {
+            assert!(
+                hp.prog_cache_misses < shards,
+                "cache on: programs built ({}) must be fewer than shards executed ({shards})",
+                hp.prog_cache_misses
+            );
+            assert!(hp.prog_cache_hits > 0, "repeated shapes must hit the cache");
+        } else {
+            assert_eq!(hp.prog_cache_hits, 0, "cache off must never hit");
+            assert_eq!(hp.machines_allocated, shards, "reuse off allocates per shard");
+        }
+        let name = if cached { "cached" } else { "uncached" };
+        t.row(&[
+            format!("shard dispatch n={n} ({name})"),
+            fmt_duration(st.median),
+            format!(
+                "{us_per_shard:.1} us/shard, {} progs / {shards} shards",
+                hp.prog_cache_misses
+            ),
+        ]);
+        let mut j = Json::obj();
+        j.set("name", Json::str(name))
+            .set("median_us_per_shard", Json::Num(us_per_shard))
+            .set("shards_executed", Json::u64(shards))
+            .set("programs_built", Json::u64(hp.prog_cache_misses))
+            .set("prog_cache_hits", Json::u64(hp.prog_cache_hits))
+            .set("machines_allocated", Json::u64(hp.machines_allocated));
+        modes.push(j);
+    }
+
     println!("{}", t.to_string());
+
+    let mut sweep = Json::obj();
+    sweep
+        .set("array_size", Json::u64(n as u64))
+        .set("seq", Json::u64(seq as u64))
+        .set("decode_rows_per_head", Json::u64(decode_rows as u64))
+        .set("shards_per_pass", Json::u64(shards_per_pass))
+        .set("modes", Json::Arr(modes));
+    let mut root = Json::obj();
+    root.set("bench", Json::str("hotpath"))
+        .set("smoke", Json::Bool(smoke()))
+        .set("prog_cache_sweep", sweep);
+    let text = root.pretty();
+    parse(&text).expect("emitted BENCH_hotpath.json parses back");
+    let path = "BENCH_hotpath.json";
+    std::fs::write(path, &text).expect("write bench json");
+    println!("[bench] wrote {path}");
 }

@@ -441,6 +441,13 @@ pub struct RunConfig {
     /// machines while skipping the per-shard allocations.  `1` disables
     /// reuse.  Ignored by every other backend.
     pub sim_batch_shards: usize,
+    /// Compiled ISA-program cache entries per sim backend (DESIGN.md
+    /// §12): programs are pure functions of their shape/mask/layout
+    /// key, so a hit replays the identical text and skips the per-shard
+    /// rebuild — host time only, never served bits or measured cycles.
+    /// `0` disables caching (the recompilation twin the differential
+    /// tests pin against).  Ignored by every other backend.
+    pub sim_prog_cache: usize,
     /// Array dimension of the simulated devices (tiling for the
     /// reference backend, machine size for the sim backend, tile census
     /// for pricing).  Defaults to the paper's 128; tests shrink it so
@@ -478,6 +485,7 @@ impl Default for RunConfig {
             seq_shards: 1,
             sim_max_seq: 8192,
             sim_batch_shards: 8,
+            sim_prog_cache: 256,
             array_size: 128,
             trace: TraceLevel::Off,
         }
@@ -619,6 +627,9 @@ impl RunConfig {
         if let Some(v) = ini.get_parsed::<usize>(sec, "sim_batch_shards")? {
             cfg.sim_batch_shards = v;
         }
+        if let Some(v) = ini.get_parsed::<usize>(sec, "sim_prog_cache")? {
+            cfg.sim_prog_cache = v;
+        }
         if let Some(v) = ini.get_parsed::<usize>(sec, "array_size")? {
             cfg.array_size = v;
         }
@@ -747,12 +758,17 @@ mod tests {
     fn run_config_sim_backend_knobs() {
         // Satellite: the sim backend parses, and the O(L²) guard plus
         // the device array dim are INI-plumbed and validated.
-        let text = "[run]\nbackend = sim\nsim_max_seq = 256\nsim_batch_shards = 4\narray_size = 32\n";
+        let text = "[run]\nbackend = sim\nsim_max_seq = 256\nsim_batch_shards = 4\n\
+                    sim_prog_cache = 64\narray_size = 32\n";
         let run = RunConfig::from_ini(&Ini::parse(text).unwrap()).unwrap();
         assert_eq!(run.backend, BackendKind::Sim);
         assert_eq!(run.sim_max_seq, 256);
         assert_eq!(run.sim_batch_shards, 4);
+        assert_eq!(run.sim_prog_cache, 64);
         assert_eq!(run.array_size, 32);
+        // 0 is a legal value: it disables the program cache.
+        let off = RunConfig::from_ini(&Ini::parse("[run]\nsim_prog_cache = 0\n").unwrap()).unwrap();
+        assert_eq!(off.sim_prog_cache, 0);
         assert_eq!("sim".parse::<BackendKind>().unwrap(), BackendKind::Sim);
         assert_eq!(BackendKind::Sim.to_string(), "sim");
         // Defaults: 8192-token guard (the vectorized array's budget) on
@@ -760,6 +776,7 @@ mod tests {
         let dflt = RunConfig::default();
         assert_eq!((dflt.sim_max_seq, dflt.array_size), (8192, 128));
         assert_eq!(dflt.sim_batch_shards, 8);
+        assert_eq!(dflt.sim_prog_cache, 256);
         // Degenerate values are rejected at load.
         assert!(RunConfig::from_ini(&Ini::parse("[run]\nsim_max_seq = 0\n").unwrap()).is_err());
         assert!(

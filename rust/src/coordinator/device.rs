@@ -101,6 +101,8 @@ fn worker_loop(
             // Shard batching for the sim backend (no-op elsewhere):
             // how many shards share one machine between hazard fences.
             b.set_sim_batch_shards(run_cfg.sim_batch_shards);
+            // Compiled-program cache entries (DESIGN.md §12; 0 disables).
+            b.set_sim_prog_cache(run_cfg.sim_prog_cache);
             Some(b)
         }
         Err(e) => {
@@ -180,6 +182,17 @@ fn worker_loop(
         // KV occupancy gauge: pages used/total after each batch
         // (DESIGN.md §9's cache-pressure signal).
         metrics.set_kv_gauge(id, cache.used_pages(), cache.capacity_pages());
+        // Hot-path counters (DESIGN.md §12): drain the backend's
+        // program-cache hit/miss and machine-allocation deltas once per
+        // batch instead of per shard.
+        if let Some(b) = backend.as_mut() {
+            let hp = b.take_hotpath_stats();
+            if hp != Default::default() {
+                metrics.prog_cache_hits.fetch_add(hp.prog_cache_hits, Ordering::Relaxed);
+                metrics.prog_cache_misses.fetch_add(hp.prog_cache_misses, Ordering::Relaxed);
+                metrics.machines_allocated.fetch_add(hp.machines_allocated, Ordering::Relaxed);
+            }
+        }
         load.fetch_sub(n, Ordering::Relaxed);
     }
 }

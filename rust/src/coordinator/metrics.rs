@@ -188,6 +188,16 @@ pub struct Metrics {
     pub cow_copies: AtomicU64,
     /// Modeled device cycles resumed prefills avoided vs. cold runs.
     pub saved_prefill_cycles: AtomicU64,
+    /// Sim-backend program lookups served from the compiled-program
+    /// cache (DESIGN.md §12); harvested per batch from
+    /// [`Backend::take_hotpath_stats`](crate::runtime::Backend::take_hotpath_stats).
+    pub prog_cache_hits: AtomicU64,
+    /// Sim-backend program lookups that ran the ISA builder (== programs
+    /// actually built, in both cache-on and cache-off modes).
+    pub prog_cache_misses: AtomicU64,
+    /// Fresh sim machine allocations (first shard, reuse-off mode, or a
+    /// grow-on-demand replacement).
+    pub machines_allocated: AtomicU64,
     /// Latency samples offered to the reservoir (every completion).
     pub latency_samples: AtomicU64,
     /// Offers past reservoir capacity: retained only by uniform
@@ -456,6 +466,11 @@ impl Metrics {
             ("prefix_attached_pages", self.prefix_attached_pages.load(o)),
             ("cow_copies", self.cow_copies.load(o)),
             ("saved_prefill_cycles", self.saved_prefill_cycles.load(o)),
+            // Hot-path counters (DESIGN.md §12) — appended after the
+            // historical names so existing schema consumers keep working.
+            ("prog_cache_hits", self.prog_cache_hits.load(o)),
+            ("prog_cache_misses", self.prog_cache_misses.load(o)),
+            ("machines_allocated", self.machines_allocated.load(o)),
         ];
         let latency_ns = {
             let res = super::lock(&self.latencies_ns);
@@ -507,6 +522,7 @@ impl Metrics {
              waves prefill/decode/multi_session {}/{}/{} \
              kv hit/miss/evict {}/{}/{} \
              prefix hit/miss/attached/cow {}/{}/{}/{} saved_cycles {} \
+             prog_cache hit/miss {}/{} machines {} \
              latency p50 {:?} p95 {:?} max {:?} \
              drops {}",
             self.submitted.load(Ordering::Relaxed),
@@ -541,6 +557,9 @@ impl Metrics {
             self.prefix_attached_pages.load(Ordering::Relaxed),
             self.cow_copies.load(Ordering::Relaxed),
             self.saved_prefill_cycles.load(Ordering::Relaxed),
+            self.prog_cache_hits.load(Ordering::Relaxed),
+            self.prog_cache_misses.load(Ordering::Relaxed),
+            self.machines_allocated.load(Ordering::Relaxed),
             p50,
             p95,
             max,
@@ -855,6 +874,26 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("prefix hit/miss/attached/cow 3/1/2/1"), "{s}");
         assert!(s.contains("saved_cycles 1234"), "{s}");
+    }
+
+    /// Satellite (DESIGN.md §12): the hot-path counters the workers
+    /// harvest from `Backend::take_hotpath_stats` surface in both the
+    /// snapshot and the one-line summary.
+    #[test]
+    fn hotpath_counters_flow_to_snapshot_and_summary() {
+        let m = Metrics::new();
+        let o = Ordering::Relaxed;
+        m.prog_cache_hits.fetch_add(7, o);
+        m.prog_cache_misses.fetch_add(2, o);
+        m.machines_allocated.fetch_add(3, o);
+        let snap = m.snapshot();
+        assert_eq!(snap.counter("prog_cache_hits"), Some(7));
+        assert_eq!(snap.counter("prog_cache_misses"), Some(2));
+        assert_eq!(snap.counter("machines_allocated"), Some(3));
+        // The historical counter names stay where consumers expect them.
+        assert!(snap.counter("saved_prefill_cycles").is_some());
+        let s = m.summary();
+        assert!(s.contains("prog_cache hit/miss 7/2 machines 3"), "{s}");
     }
 
     /// Satellite: the continuous-scheduler counters and the

@@ -31,7 +31,8 @@ Device / serving commands:
   serve   [--requests 16 --devices 2 --seq 512 --artifacts DIR]
           [--heads 1 --kv-heads 1 --backend pjrt|reference|sim|auto]
           [--mask none|causal --freq-ghz 1.5 --seq-shards 1]
-          [--sim-max-seq 8192 --sim-batch-shards 8 --array-size 128]
+          [--sim-max-seq 8192 --sim-batch-shards 8 --sim-prog-cache 256
+           --array-size 128]
           [--max-batch-prefill-tokens 8192 --max-batch-total-tokens 65536
            --waiting-served-ratio 1.2]
           [--trace off|summary|full --metrics-json PATH]
@@ -54,6 +55,10 @@ Device / serving commands:
                                --sim-max-seq; --sim-batch-shards N lets
                                N shards share one machine between
                                hazard fences (1 disables reuse);
+                               --sim-prog-cache N caches N compiled ISA
+                               programs per device, skipping per-shard
+                               rebuilds without changing served bits or
+                               measured cycles (0 disables);
                                --array-size shrinks the simulated array
                                for fast sim runs; the continuous
                                scheduler (DESIGN.md §10) caps each wave
@@ -185,6 +190,7 @@ fn serve(args: &Args) -> fsa::Result<()> {
     cfg.seq_shards = args.get("seq-shards", cfg.seq_shards)?;
     cfg.sim_max_seq = args.get("sim-max-seq", cfg.sim_max_seq)?;
     cfg.sim_batch_shards = args.get("sim-batch-shards", cfg.sim_batch_shards)?;
+    cfg.sim_prog_cache = args.get("sim-prog-cache", cfg.sim_prog_cache)?;
     cfg.array_size = args.get("array-size", cfg.array_size)?;
     cfg.max_batch_prefill_tokens =
         args.get("max-batch-prefill-tokens", cfg.max_batch_prefill_tokens)?;

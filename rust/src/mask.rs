@@ -16,7 +16,7 @@ use std::fmt;
 use anyhow::bail;
 
 /// Which `(query, key)` pairs an attention operator may attend.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum MaskKind {
     /// Unmasked square attention (the original behavior).
     #[default]

@@ -56,6 +56,50 @@ impl Mat {
             data: self.data.iter().map(|&x| quantize_f32(x)).collect(),
         }
     }
+
+    /// Borrow this matrix as a [`MatView`].
+    pub fn view(&self) -> MatView<'_> {
+        MatView { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+}
+
+/// A borrowed row-major matrix — the zero-copy twin of [`Mat`]
+/// (DESIGN.md §12).  [`ShardPlan`](crate::runtime::ShardPlan) already
+/// carries borrowed slices, so the reference backend wraps them here
+/// and the kernels quantize (or materialize) straight from the
+/// caller's storage instead of copying into an owned `Mat` first.
+#[derive(Clone, Copy, Debug)]
+pub struct MatView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> MatView<'a> {
+    pub fn new(rows: usize, cols: usize, data: &'a [f32]) -> MatView<'a> {
+        assert_eq!(data.len(), rows * cols);
+        MatView { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Quantize every element through fp16, materializing an owned
+    /// [`Mat`] — element-for-element [`Mat::quantized`].
+    pub fn quantized(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| quantize_f32(x)).collect(),
+        }
+    }
+
+    /// Materialize an owned copy (the f32 path's one necessary copy).
+    pub fn to_mat(&self) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.to_vec() }
+    }
 }
 
 #[inline]
@@ -366,6 +410,41 @@ pub fn flash_forward_partial_at(
     key_offset: usize,
     total_keys: usize,
 ) -> FlashPartial {
+    flash_forward_partial_at_view(
+        qm.view(),
+        km.view(),
+        vm.view(),
+        br,
+        bc,
+        exp2,
+        prec,
+        mask,
+        query_offset,
+        key_offset,
+        total_keys,
+    )
+}
+
+/// [`flash_forward_partial_at`] on borrowed [`MatView`] operands — the
+/// zero-copy workhorse every owned-`Mat` entry point delegates to.
+/// Pre-quantization materializes owned operands (fp16 quantization has
+/// to write *somewhere*), but it reads straight from the caller's
+/// storage, so a view caller pays one materialization instead of a
+/// `to_vec` copy *plus* the materialization.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_forward_partial_at_view(
+    qm: MatView<'_>,
+    km: MatView<'_>,
+    vm: MatView<'_>,
+    br: usize,
+    bc: usize,
+    exp2: &Exp2,
+    prec: Precision,
+    mask: MaskKind,
+    query_offset: usize,
+    key_offset: usize,
+    total_keys: usize,
+) -> FlashPartial {
     let (l, d) = (qm.rows, qm.cols);
     let lk = km.rows;
     assert_eq!(km.cols, d);
@@ -386,7 +465,7 @@ pub fn flash_forward_partial_at(
     // of per-MAC inside the O(L^2 d) loops (EXPERIMENTS.md §Perf).
     let (qq, kq, vq) = match prec {
         Precision::F16F32 => (qm.quantized(), km.quantized(), vm.quantized()),
-        Precision::F32 => (qm.clone(), km.clone(), vm.clone()),
+        Precision::F32 => (qm.to_mat(), km.to_mat(), vm.to_mat()),
     };
     let (qm, km, vm) = (&qq, &kq, &vq);
 
@@ -679,6 +758,83 @@ pub fn flash_pwl_resumed(
     total_keys: usize,
 ) -> FlashPartial {
     flash_forward_partial_at(
+        qm, km, vm, br, bc,
+        &Exp2::PwlF16(PwlExp2::new(segments)),
+        Precision::F16F32,
+        mask,
+        query_offset,
+        key_offset,
+        total_keys,
+    )
+}
+
+/// [`flash_pwl_masked`] on borrowed operands — the zero-copy entry
+/// point the reference backend's `ShardPlan::Head` arm executes
+/// (DESIGN.md §12).  Delegates to the same view workhorse as the owned
+/// wrapper, so the output is bitwise [`flash_pwl_masked`]'s.
+pub fn flash_pwl_masked_view(
+    qm: MatView<'_>,
+    km: MatView<'_>,
+    vm: MatView<'_>,
+    br: usize,
+    bc: usize,
+    segments: usize,
+    mask: MaskKind,
+) -> Mat {
+    flash_forward_partial_at_view(
+        qm, km, vm, br, bc,
+        &Exp2::PwlF16(PwlExp2::new(segments)),
+        Precision::F16F32,
+        mask,
+        0,
+        0,
+        km.rows,
+    )
+    .finalize()
+}
+
+/// [`flash_pwl_partial`] on borrowed operands — the zero-copy entry
+/// point the reference backend's `ShardPlan::HeadChunk` arm executes.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_pwl_partial_view(
+    qm: MatView<'_>,
+    km: MatView<'_>,
+    vm: MatView<'_>,
+    br: usize,
+    bc: usize,
+    segments: usize,
+    mask: MaskKind,
+    key_offset: usize,
+    total_keys: usize,
+) -> FlashPartial {
+    flash_forward_partial_at_view(
+        qm, km, vm, br, bc,
+        &Exp2::PwlF16(PwlExp2::new(segments)),
+        Precision::F16F32,
+        mask,
+        0,
+        key_offset,
+        total_keys,
+    )
+}
+
+/// [`flash_pwl_resumed`] on borrowed operands — the zero-copy entry
+/// point the reference backend's `ShardPlan::ResumedPrefill` arm
+/// executes.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_pwl_resumed_view(
+    qm: MatView<'_>,
+    km: MatView<'_>,
+    vm: MatView<'_>,
+    br: usize,
+    bc: usize,
+    segments: usize,
+    mask: MaskKind,
+    query_offset: usize,
+    key_offset: usize,
+    total_keys: usize,
+) -> FlashPartial {
+    flash_forward_partial_at_view(
         qm, km, vm, br, bc,
         &Exp2::PwlF16(PwlExp2::new(segments)),
         Precision::F16F32,

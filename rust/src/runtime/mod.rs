@@ -8,6 +8,7 @@
 //! `python/compile/aot.py`) indexes every artifact with its workload
 //! metadata; [`Runtime`] compiles lazily and caches executables.
 
+pub mod prog_cache;
 pub mod sim_backend;
 
 use std::collections::HashMap;
@@ -18,11 +19,11 @@ use anyhow::{anyhow, bail, ensure, Context};
 use crate::config::{AccelConfig, BackendKind};
 use crate::mask::MaskKind;
 use crate::numerics::reference::{
-    decode_pwl, decode_pwl_partial, flash_pwl_masked, flash_pwl_partial, flash_pwl_resumed,
-    FlashPartial, Mat,
+    decode_pwl, decode_pwl_partial, flash_pwl_masked_view, flash_pwl_partial_view,
+    flash_pwl_resumed_view, FlashPartial, MatView,
 };
 
-pub use sim_backend::SimBackend;
+pub use sim_backend::{HotpathStats, SimBackend};
 
 /// One manifest row.
 #[derive(Clone, Debug, PartialEq)]
@@ -316,6 +317,26 @@ impl Backend {
         }
     }
 
+    /// Forward the `sim_prog_cache` knob to the sim backend (compiled
+    /// ISA-program cache entries; 0 disables — DESIGN.md §12; no-op for
+    /// backends that don't simulate).
+    pub fn set_sim_prog_cache(&mut self, entries: usize) {
+        if let Backend::Sim(s) = self {
+            s.set_prog_cache(entries);
+        }
+    }
+
+    /// Drain the sim backend's host-path counters (program-cache
+    /// hits/misses, machine allocations) accumulated since the last
+    /// take; zeros for backends that don't simulate.  Workers harvest
+    /// these per batch into [`crate::coordinator::metrics::Metrics`].
+    pub fn take_hotpath_stats(&mut self) -> HotpathStats {
+        match self {
+            Backend::Sim(s) => s.take_hotpath_stats(),
+            _ => HotpathStats::default(),
+        }
+    }
+
     /// Execute one typed unit of backend work (the single entry point —
     /// the old `execute_head`/`execute_head_partial`/`execute_decode_row`/
     /// `execute_decode_row_partial` surface collapsed into a
@@ -400,11 +421,18 @@ impl Backend {
                 // what makes bucket padding bitwise-exact: a padded
                 // request and its unpadded original tile identically
                 // over the valid region, and the mask excludes the rest.
-                let qm = Mat::new(seq_len, d, q.to_vec());
-                let km = Mat::new(seq_len, d, k.to_vec());
-                let vm = Mat::new(seq_len, d, v.to_vec());
-                Ok(flash_pwl_masked(&qm, &km, &vm, *array_size, *array_size, *segments, mask)
-                    .data)
+                // The plan's slices execute as borrowed views — no
+                // owned-Mat staging copies (DESIGN.md §12).
+                Ok(flash_pwl_masked_view(
+                    MatView::new(seq_len, d, q),
+                    MatView::new(seq_len, d, k),
+                    MatView::new(seq_len, d, v),
+                    *array_size,
+                    *array_size,
+                    *segments,
+                    mask,
+                )
+                .data)
             }
             Backend::Sim(s) => s.run_head(seq_len, d, q, k, v, mask),
         }
@@ -443,11 +471,10 @@ impl Backend {
             )),
             Backend::Reference { array_size, segments } => {
                 let chunk_len = k_chunk.len() / d;
-                let qm = Mat::new(seq_len, d, q.to_vec());
-                let km = Mat::new(chunk_len, d, k_chunk.to_vec());
-                let vm = Mat::new(chunk_len, d, v_chunk.to_vec());
-                Ok(flash_pwl_partial(
-                    &qm, &km, &vm,
+                Ok(flash_pwl_partial_view(
+                    MatView::new(seq_len, d, q),
+                    MatView::new(chunk_len, d, k_chunk),
+                    MatView::new(chunk_len, d, v_chunk),
                     *array_size, *array_size, *segments,
                     mask, key_offset, total_keys,
                 ))
@@ -488,11 +515,10 @@ impl Backend {
             )),
             Backend::Reference { array_size, segments } => {
                 let rows = seq_len - query_offset;
-                let qm = Mat::new(rows, d, q_suffix.to_vec());
-                let km = Mat::new(chunk_len, d, k_chunk.to_vec());
-                let vm = Mat::new(chunk_len, d, v_chunk.to_vec());
-                let part = flash_pwl_resumed(
-                    &qm, &km, &vm,
+                let part = flash_pwl_resumed_view(
+                    MatView::new(rows, d, q_suffix),
+                    MatView::new(chunk_len, d, k_chunk),
+                    MatView::new(chunk_len, d, v_chunk),
                     *array_size, *array_size, *segments,
                     mask, query_offset, key_offset, total_keys,
                 );
@@ -766,6 +792,7 @@ impl ShardOutput {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::numerics::reference::{flash_pwl_masked, flash_pwl_partial, Mat};
 
     #[test]
     fn manifest_parsing_rejects_garbage() {

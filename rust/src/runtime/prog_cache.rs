@@ -1,0 +1,271 @@
+//! Compiled-program cache for the sim backend (DESIGN.md §12).
+//!
+//! An ISA program is a *pure function* of its construction inputs:
+//! [`flash_chunk_program`](crate::kernel::flash::flash_chunk_program)
+//! and [`flash_chunk_partial_program`](crate::kernel::flash::flash_chunk_partial_program)
+//! read nothing but the [`ChunkParams`] fields (which embed the array
+//! dim `n` and the mask bound form), the [`ChunkLayout`] addresses, and —
+//! for the partial path — the row-block index.  PWL segment count and
+//! fp16 quantization live in the *machine*, not the program, so they
+//! cannot leak into the cached text.  [`ProgKey`] captures every one of
+//! those inputs; a hit therefore hands back a program that is textually
+//! identical to what a fresh build would produce, and reuse can change
+//! host time only — never served bits, never measured cycles.  The
+//! contract is pinned by the cache-on/cache-off twins in
+//! `rust/tests/sim_differential.rs` and `rust/tests/coordinator_sim.rs`.
+//!
+//! The cache is a bounded LRU of `Arc<Program>` (decode waves re-execute
+//! identical shapes every step, so the working set is small and hot).
+//! A fully-masked partial block — where the builder returns `None` and
+//! the backend skips the array — is memoized as `None` too: deciding
+//! "no live tiles" walks the same tile census as building the program.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::isa::Program;
+use crate::kernel::flash::{ChunkLayout, ChunkParams};
+use crate::mask::MaskKind;
+
+/// Every input of ISA program construction, by value.  Two shards with
+/// equal keys get textually identical programs (see the module doc for
+/// the purity argument).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProgKey {
+    /// `Some(blk)` for a per-row-block partial program
+    /// ([`flash_chunk_partial_program`](crate::kernel::flash::flash_chunk_partial_program));
+    /// `None` for the normalized whole-chunk program
+    /// ([`flash_chunk_program`](crate::kernel::flash::flash_chunk_program)).
+    pub partial_block: Option<usize>,
+    /// The [`ChunkParams`] fields, verbatim (`n` is the array dim).
+    pub n: usize,
+    pub valid_queries: usize,
+    pub query_offset: usize,
+    pub valid_keys: usize,
+    pub key_offset: usize,
+    pub total_keys: usize,
+    pub mask: MaskKind,
+    pub spad_elems: u32,
+    pub accum_elems: u32,
+    /// The [`ChunkLayout`] addresses (today always `packed(&p)`, but the
+    /// key does not assume that).
+    pub q_addr: u32,
+    pub k_addr: u32,
+    pub v_addr: u32,
+    pub o_addr: u32,
+    pub l_addr: u32,
+}
+
+impl ProgKey {
+    pub fn new(p: &ChunkParams, layout: &ChunkLayout, partial_block: Option<usize>) -> ProgKey {
+        ProgKey {
+            partial_block,
+            n: p.n,
+            valid_queries: p.valid_queries,
+            query_offset: p.query_offset,
+            valid_keys: p.valid_keys,
+            key_offset: p.key_offset,
+            total_keys: p.total_keys,
+            mask: p.mask,
+            spad_elems: p.spad_elems,
+            accum_elems: p.accum_elems,
+            q_addr: layout.q_addr,
+            k_addr: layout.k_addr,
+            v_addr: layout.v_addr,
+            o_addr: layout.o_addr,
+            l_addr: layout.l_addr,
+        }
+    }
+}
+
+struct Entry {
+    /// `None` memoizes a fully-masked partial block (builder said "no
+    /// live tiles" — the backend skips the array run entirely).
+    prog: Option<Arc<Program>>,
+    /// Monotonic last-use stamp for LRU eviction.
+    stamp: u64,
+}
+
+/// Bounded LRU of compiled programs, keyed by [`ProgKey`].
+pub struct ProgramCache {
+    capacity: usize,
+    map: HashMap<ProgKey, Entry>,
+    clock: u64,
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that ran the builder (cache-off backends count every
+    /// build here too, so `misses` == programs built in both modes).
+    pub misses: u64,
+}
+
+impl ProgramCache {
+    /// A cache holding at most `capacity` programs (`capacity >= 1`).
+    pub fn new(capacity: usize) -> ProgramCache {
+        ProgramCache {
+            capacity: capacity.max(1),
+            map: HashMap::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look `key` up; on a miss run `build` and cache its product.
+    /// Build errors are returned without being cached (the next lookup
+    /// retries), so a transient failure can never poison the cache.
+    pub fn get_or_build<E>(
+        &mut self,
+        key: ProgKey,
+        build: impl FnOnce() -> Result<Option<Program>, E>,
+    ) -> Result<Option<Arc<Program>>, E> {
+        self.clock += 1;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.stamp = self.clock;
+            self.hits += 1;
+            return Ok(e.prog.clone());
+        }
+        self.misses += 1;
+        let prog = build()?.map(Arc::new);
+        if self.map.len() >= self.capacity {
+            // O(len) min-stamp scan: eviction only happens once the
+            // cache is full, and serving working sets are far below any
+            // sane capacity, so the scan is off the hot path.
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k)
+            {
+                self.map.remove(&victim);
+            }
+        }
+        self.map.insert(key, Entry { prog: prog.clone(), stamp: self.clock });
+        Ok(prog)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::flash::{flash_chunk_partial_program, flash_chunk_program};
+
+    fn key_for(seq_len: usize, mask: MaskKind) -> (ChunkParams, ChunkLayout, ProgKey) {
+        let p = ChunkParams::whole(8, seq_len, mask);
+        let layout = ChunkLayout::packed(&p);
+        let key = ProgKey::new(&p, &layout, None);
+        (p, layout, key)
+    }
+
+    #[test]
+    fn hit_returns_the_same_arc_and_counts() {
+        let (p, layout, key) = key_for(16, MaskKind::Causal);
+        let mut c = ProgramCache::new(8);
+        let a = c
+            .get_or_build(key, || {
+                flash_chunk_program(&p, &layout).map(Some).map_err(|e| format!("{e:#}"))
+            })
+            .unwrap()
+            .unwrap();
+        let b = c
+            .get_or_build(key, || -> Result<_, String> { panic!("hit must not rebuild") })
+            .unwrap()
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((c.hits, c.misses, c.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_shapes_get_distinct_entries() {
+        let (p1, l1, k1) = key_for(16, MaskKind::Causal);
+        let (p2, l2, k2) = key_for(16, MaskKind::None);
+        assert_ne!(k1, k2);
+        let mut c = ProgramCache::new(8);
+        let a = c
+            .get_or_build(k1, || {
+                flash_chunk_program(&p1, &l1).map(Some).map_err(|e| format!("{e:#}"))
+            })
+            .unwrap()
+            .unwrap();
+        let b = c
+            .get_or_build(k2, || {
+                flash_chunk_program(&p2, &l2).map(Some).map_err(|e| format!("{e:#}"))
+            })
+            .unwrap()
+            .unwrap();
+        // Causal whole-head skips upper-triangular tiles; the unmasked
+        // twin does not — the cached texts must differ.
+        assert_ne!(*a, *b);
+        assert_eq!((c.hits, c.misses, c.len()), (0, 2, 2));
+    }
+
+    #[test]
+    fn lru_evicts_the_stalest_entry_at_capacity() {
+        let shapes = [
+            (8, MaskKind::None),
+            (16, MaskKind::None),
+            (24, MaskKind::None),
+        ];
+        let mut c = ProgramCache::new(2);
+        let mut build = |c: &mut ProgramCache, i: usize| {
+            let (p, layout, key) = key_for(shapes[i].0, shapes[i].1);
+            c.get_or_build(key, || {
+                flash_chunk_program(&p, &layout).map(Some).map_err(|e| format!("{e:#}"))
+            })
+            .unwrap()
+        };
+        build(&mut c, 0);
+        build(&mut c, 1);
+        build(&mut c, 0); // refresh 0 so 1 is now the LRU
+        build(&mut c, 2); // evicts 1
+        assert_eq!(c.len(), 2);
+        build(&mut c, 0); // still resident
+        assert_eq!(c.hits, 2);
+        build(&mut c, 1); // evicted: rebuilds
+        assert_eq!((c.hits, c.misses), (2, 4));
+    }
+
+    #[test]
+    fn fully_masked_partial_block_memoizes_none() {
+        // Causal chunk whose keys [8, 16) all exceed block 0's query
+        // rows 0..8 — the builder reports no live tiles.
+        let p = ChunkParams::chunk(8, 16, MaskKind::Causal, 8, 8, 16);
+        let layout = ChunkLayout::packed(&p);
+        let key = ProgKey::new(&p, &layout, Some(0));
+        let mut c = ProgramCache::new(8);
+        let first = c
+            .get_or_build(key, || {
+                flash_chunk_partial_program(&p, &layout, 0).map_err(|e| format!("{e:#}"))
+            })
+            .unwrap();
+        assert!(first.is_none());
+        let second = c
+            .get_or_build(key, || -> Result<_, String> { panic!("memoized None must hit") })
+            .unwrap();
+        assert!(second.is_none());
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn build_errors_are_not_cached() {
+        let (p, layout, key) = key_for(16, MaskKind::Causal);
+        let mut c = ProgramCache::new(8);
+        let err = c.get_or_build(key, || Err::<Option<Program>, _>("transient".to_string()));
+        assert!(err.is_err());
+        assert_eq!(c.len(), 0);
+        let ok = c
+            .get_or_build(key, || {
+                flash_chunk_program(&p, &layout).map(Some).map_err(|e| format!("{e:#}"))
+            })
+            .unwrap();
+        assert!(ok.is_some());
+        assert_eq!((c.hits, c.misses), (0, 2));
+    }
+}

@@ -30,18 +30,45 @@
 //! ~`5N+10` cycles, each cycle stepping N² PEs — O(L²·N) PE-steps per
 //! head shard.
 
+use std::sync::Arc;
+
 use crate::config::AccelConfig;
+use crate::isa::Program;
 use crate::kernel::flash::{
     flash_chunk_partial_program, flash_chunk_program, ChunkLayout, ChunkParams,
 };
 use crate::mask::MaskKind;
 use crate::numerics::reference::FlashPartial;
+use crate::runtime::prog_cache::{ProgKey, ProgramCache};
 use crate::runtime::{ShardOutput, ShardPlan};
 use crate::sim::{CycleBreakdown, Machine, MachineConfig, RunStats};
 
 /// Default shards per machine between hazard fences
-/// ([`crate::config::RunConfig::sim_batch_shards`]'s default).
+/// ([`crate::config::RunConfig::sim_batch_shards`]'s default; any value
+/// `> 1` now means "pool indefinitely" — see [`SimBackend::machine_for`]).
 pub const DEFAULT_BATCH_SHARDS: usize = 8;
+
+/// Default [`crate::config::RunConfig::sim_prog_cache`] entries.
+pub const DEFAULT_PROG_CACHE: usize = 256;
+
+/// Host-path counters of one backend since the last
+/// [`SimBackend::take_hotpath_stats`] — the worker drains them into
+/// [`crate::coordinator::metrics::Metrics`] after each batch.  None of
+/// these
+/// affect served bits or measured cycles; they only observe host work
+/// avoided (or paid) on the dispatch path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HotpathStats {
+    /// Program lookups served from the compiled-program cache.
+    pub prog_cache_hits: u64,
+    /// Program lookups that ran the ISA builder.  With the cache
+    /// disabled every build lands here too, so in *both* modes
+    /// `prog_cache_misses` == programs actually built.
+    pub prog_cache_misses: u64,
+    /// Fresh [`Machine`] allocations (first shard, `sim_batch_shards=1`
+    /// reuse-off mode, or a grow-on-demand replacement).
+    pub machines_allocated: u64,
+}
 
 /// One simulated FSA card behind a device worker.
 pub struct SimBackend {
@@ -55,17 +82,24 @@ pub struct SimBackend {
     /// [`SimBackend::take_measured_breakdown`].  Its `total()` always
     /// equals the `measured` cycles it rides with.
     measured_bd: Option<CycleBreakdown>,
-    /// Shard-batching machine cache (DESIGN.md §8): up to `batch_shards`
-    /// independent shards share one machine, separated by
+    /// Persistent machine pool (DESIGN.md §8/§12): independent shards
+    /// share one machine indefinitely, separated by
     /// [`Machine::reset_for_reuse`] hazard fences — every program ends
     /// array-quiescent and the fence zeroes all memories, registers and
     /// the DMA scoreboard, so a reused run is bitwise and
     /// cycle-for-cycle a fresh one, minus the ~3 large allocations per
-    /// shard.
+    /// shard.  Replaced only when a shard's capacity needs exceed the
+    /// resident machine ([`SimBackend::machine_for`]'s grow-on-demand).
     cached: Option<Machine>,
-    /// Shards served by the cached machine since it was built.
+    /// Shards served by the cached machine since it was built
+    /// (informational; reuse is no longer capped).
     cached_uses: usize,
     batch_shards: usize,
+    /// Compiled-program LRU (DESIGN.md §12); `None` when
+    /// `sim_prog_cache = 0` disables caching.
+    prog_cache: Option<ProgramCache>,
+    /// Host-path counters since the last [`SimBackend::take_hotpath_stats`].
+    hotpath: HotpathStats,
 }
 
 impl SimBackend {
@@ -77,6 +111,8 @@ impl SimBackend {
             cached: None,
             cached_uses: 0,
             batch_shards: DEFAULT_BATCH_SHARDS,
+            prog_cache: Some(ProgramCache::new(DEFAULT_PROG_CACHE)),
+            hotpath: HotpathStats::default(),
         }
     }
 
@@ -99,15 +135,35 @@ impl SimBackend {
         self.measured_bd.take()
     }
 
-    /// Set how many independent shards may share one machine between
-    /// hazard fences (the `sim_batch_shards` knob; 1 disables reuse so
-    /// every shard gets a freshly allocated machine).
+    /// Set the machine-pooling mode (the `sim_batch_shards` knob):
+    /// 1 disables reuse so every shard gets a freshly allocated machine
+    /// (the cycle-equality oracle's fresh-machine twin); any value `> 1`
+    /// keeps the machine across hazard fences indefinitely.
     pub fn set_batch_shards(&mut self, shards: usize) {
         self.batch_shards = shards.max(1);
         if self.batch_shards == 1 {
             self.cached = None;
         }
         self.cached_uses = 0;
+    }
+
+    /// Size (entries) of the compiled-program cache (the
+    /// `sim_prog_cache` knob; 0 disables caching so every shard
+    /// rebuilds its program — the recompilation twin).  Resizing starts
+    /// an empty cache; hit/miss counters live in [`HotpathStats`].
+    pub fn set_prog_cache(&mut self, entries: usize) {
+        self.prog_cache = if entries == 0 { None } else { Some(ProgramCache::new(entries)) };
+    }
+
+    /// Drain the host-path counters accumulated since the last take
+    /// (the worker calls this after each batch).
+    pub fn take_hotpath_stats(&mut self) -> HotpathStats {
+        std::mem::take(&mut self.hotpath)
+    }
+
+    /// Peek at the host-path counters without draining them.
+    pub fn hotpath_stats(&self) -> HotpathStats {
+        self.hotpath
     }
 
     /// Route array stepping through the frozen pre-refactor scalar path
@@ -172,17 +228,22 @@ impl SimBackend {
     }
 
     /// A machine for one shard: workload-sized memory, the shard's real
-    /// head dim as the softmax-scale dim.  Reuses the cached machine
-    /// across a hazard fence when batching is on and its capacities
-    /// cover the shard (zeroed surplus memory behaves exactly like a
-    /// tighter fit); otherwise allocates fresh.
+    /// head dim as the softmax-scale dim.  With pooling on
+    /// (`batch_shards > 1`) the resident machine is reused across a
+    /// hazard fence whenever its capacities cover the shard (zeroed
+    /// surplus memory behaves exactly like a tighter fit — capacities
+    /// appear only in bound checks, never in timing); a too-small
+    /// resident triggers an explicit GROW: the replacement is sized to
+    /// the max of the shard's needs and the resident's capacities, so
+    /// the pool converges on a machine that covers every shape this
+    /// backend has seen and stops reallocating.
     fn machine_for(&mut self, p: &ChunkParams, layout: &ChunkLayout, d: usize) -> Machine {
         let mut cfg = self.cfg.clone();
         cfg.scale_dim = d;
         cfg.spad_elems = cfg.spad_elems.max(p.spad_elems as usize);
         cfg.accum_elems = cfg.accum_elems.max(p.accum_elems as usize);
         cfg.mem_elems = layout.mem_elems(p).max(1 << 12);
-        if self.batch_shards > 1 && self.cached_uses < self.batch_shards {
+        if self.batch_shards > 1 {
             if let Some(mut m) = self.cached.take() {
                 if m.cfg.mem_elems >= cfg.mem_elems
                     && m.cfg.spad_elems >= cfg.spad_elems
@@ -192,9 +253,15 @@ impl SimBackend {
                     self.cached_uses += 1;
                     return m;
                 }
+                // GROW: carry the resident's capacities into the
+                // replacement instead of silently dropping them.
+                cfg.mem_elems = cfg.mem_elems.max(m.cfg.mem_elems);
+                cfg.spad_elems = cfg.spad_elems.max(m.cfg.spad_elems);
+                cfg.accum_elems = cfg.accum_elems.max(m.cfg.accum_elems);
             }
         }
         self.cached_uses = 1;
+        self.hotpath.machines_allocated += 1;
         Machine::new(cfg)
     }
 
@@ -208,6 +275,64 @@ impl SimBackend {
         }
     }
 
+    /// Build (or fetch) the program for `(p, layout)` — the normalized
+    /// whole-chunk program when `blk` is `None`, the per-row-block
+    /// partial program otherwise (`Ok(None)` = the block is fully
+    /// masked).  All six dispatch-path build sites funnel through here
+    /// so the cache sees every shape and the hit/miss counters mean the
+    /// same thing on every path.
+    fn build_program(
+        &mut self,
+        p: &ChunkParams,
+        layout: &ChunkLayout,
+        blk: Option<usize>,
+    ) -> Result<Option<Arc<Program>>, String> {
+        let build = || -> Result<Option<Program>, String> {
+            match blk {
+                None => flash_chunk_program(p, layout).map(Some),
+                Some(b) => flash_chunk_partial_program(p, layout, b),
+            }
+            .map_err(|e| format!("sim backend: {e:#}"))
+        };
+        let (prog, hit) = match &mut self.prog_cache {
+            Some(c) => {
+                let h0 = c.hits;
+                let got = c.get_or_build(ProgKey::new(p, layout, blk), build)?;
+                (got, c.hits > h0)
+            }
+            None => (build()?.map(Arc::new), false),
+        };
+        if hit {
+            self.hotpath.prog_cache_hits += 1;
+        } else {
+            self.hotpath.prog_cache_misses += 1;
+        }
+        Ok(prog)
+    }
+
+    /// The normalized chunk program (head / whole-range resumed /
+    /// decode-row paths), cached.
+    fn chunk_program(
+        &mut self,
+        p: &ChunkParams,
+        layout: &ChunkLayout,
+    ) -> Result<Arc<Program>, String> {
+        Ok(self
+            .build_program(p, layout, None)?
+            .expect("a normalized chunk program always exists"))
+    }
+
+    /// One row block's partial program (chunk / sub-range resumed /
+    /// decode-range paths), cached; `None` = fully-masked block.
+    fn chunk_partial_program(
+        &mut self,
+        p: &ChunkParams,
+        layout: &ChunkLayout,
+        blk: usize,
+    ) -> Result<Option<Arc<Program>>, String> {
+        self.build_program(p, layout, Some(blk))
+    }
+
     /// Write a `(rows, d)` row-major host matrix into device memory as
     /// the zero-padded `(padded_rows, n)` layout the programs expect
     /// (device memory is zero-initialized, so only real data moves).
@@ -219,19 +344,23 @@ impl SimBackend {
     }
 
     /// Read the de-transposed `(valid_queries, d)` output of a
-    /// normalized chunk program.
+    /// normalized chunk program.  Each O^T block is read as one
+    /// borrowed slice (no per-element `read_mem` calls); the returned
+    /// `Vec` is the single allocation left on this path — it escapes
+    /// into [`ShardOutput::Full`] and must be owned.
     fn read_output(m: &Machine, p: &ChunkParams, layout: &ChunkLayout, d: usize) -> Vec<f32> {
         let n = p.n;
         let mut out = vec![0.0f32; p.valid_queries * d];
         for blk in 0..p.row_blocks() {
             let base = layout.o_addr as usize + blk * n * n;
+            let block = m.read_mem(base as u32, n * n);
             for mcol in 0..n {
                 let row = blk * n + mcol;
                 if row >= p.valid_queries {
                     break;
                 }
                 for h in 0..d {
-                    out[row * d + h] = m.read_mem((base + h * n + mcol) as u32, 1)[0];
+                    out[row * d + h] = block[h * n + mcol];
                 }
             }
         }
@@ -276,7 +405,7 @@ impl SimBackend {
         }
         let p = ChunkParams::whole(self.cfg.n, seq_len, mask);
         let layout = ChunkLayout::packed(&p);
-        let prog = flash_chunk_program(&p, &layout).map_err(|e| format!("sim backend: {e:#}"))?;
+        let prog = self.chunk_program(&p, &layout)?;
         let mut m = self.machine_for(&p, &layout, d);
         Self::write_padded(&mut m, layout.q_addr, q, seq_len, d);
         Self::write_padded(&mut m, layout.k_addr, k, seq_len, d);
@@ -336,9 +465,7 @@ impl SimBackend {
         let mut cycles = 0u64;
         let mut bd = CycleBreakdown::default();
         for blk in 0..p.row_blocks() {
-            let prog = match flash_chunk_partial_program(&p, &layout, blk)
-                .map_err(|e| format!("sim backend: {e:#}"))?
-            {
+            let prog = match self.chunk_partial_program(&p, &layout, blk)? {
                 // Block fully masked in this chunk: its rows keep the
                 // empty (0, -inf, 0) state — the merge identity.
                 None => continue,
@@ -424,8 +551,7 @@ impl SimBackend {
                 self.measured_bd = Some(CycleBreakdown::default());
                 return Ok(ShardOutput::Full(vec![0.0; rows * d]));
             }
-            let prog =
-                flash_chunk_program(&p, &layout).map_err(|e| format!("sim backend: {e:#}"))?;
+            let prog = self.chunk_program(&p, &layout)?;
             let mut m = self.machine_for(&p, &layout, d);
             Self::write_padded(&mut m, layout.q_addr, q_suffix, rows, d);
             Self::write_padded(&mut m, layout.k_addr, k_chunk, chunk_len, d);
@@ -447,9 +573,7 @@ impl SimBackend {
         let mut cycles = 0u64;
         let mut bd = CycleBreakdown::default();
         for blk in 0..p.row_blocks() {
-            let prog = match flash_chunk_partial_program(&p, &layout, blk)
-                .map_err(|e| format!("sim backend: {e:#}"))?
-            {
+            let prog = match self.chunk_partial_program(&p, &layout, blk)? {
                 None => continue,
                 Some(prog) => prog,
             };
@@ -499,7 +623,7 @@ impl SimBackend {
         }
         let p = ChunkParams::decode_row(self.cfg.n, prefix_len);
         let layout = ChunkLayout::packed(&p);
-        let prog = flash_chunk_program(&p, &layout).map_err(|e| format!("sim backend: {e:#}"))?;
+        let prog = self.chunk_program(&p, &layout)?;
         let mut m = self.machine_for(&p, &layout, d);
         Self::write_padded(&mut m, layout.q_addr, q_row, 1, d);
         Self::write_padded(&mut m, layout.k_addr, k, prefix_len, d);
@@ -535,8 +659,8 @@ impl SimBackend {
         let n = self.cfg.n;
         let p = ChunkParams::decode_row(n, range_len);
         let layout = ChunkLayout::packed(&p);
-        let prog = flash_chunk_partial_program(&p, &layout, 0)
-            .map_err(|e| format!("sim backend: {e:#}"))?
+        let prog = self
+            .chunk_partial_program(&p, &layout, 0)?
             .expect("an unmasked decode range always has live tiles");
         let mut m = self.machine_for(&p, &layout, d);
         Self::write_padded(&mut m, layout.q_addr, q_row, 1, d);

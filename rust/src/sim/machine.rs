@@ -15,6 +15,8 @@
 //!    and routing bottom-edge values into the accumulator.  Numerics and
 //!    port-legality are checked *here*, by actual dataflow.
 
+use std::sync::Arc;
+
 use anyhow::{bail, ensure, Context};
 
 use crate::config::AccelConfig;
@@ -232,6 +234,15 @@ pub struct Machine {
     pub spad: Sram,
     pub array: Array,
     pub accum: Accumulator,
+    /// Inner-loop schedule, hoisted out of `run_program`: a pure
+    /// function of `(n, variant, segments)`, none of which
+    /// [`Machine::reset_for_reuse`] can change — so one machine serving
+    /// many shards builds it exactly once.
+    sched: InnerSchedule,
+    /// Per-instruction signal tables ([`controller::EventTemplates`]),
+    /// equally shape-pure and hoisted for the same reason (the O(N²)
+    /// generate+sort used to run on every `run_program` call).
+    tpl: Arc<controller::EventTemplates>,
 }
 
 impl Machine {
@@ -241,11 +252,15 @@ impl Machine {
         accum.f16_mode = cfg.quantize;
         let mut array = Array::new(cfg.n, cfg.segments, cfg.quantize);
         array.scalar_reference = cfg.scalar_reference;
+        let sched = InnerSchedule::new(cfg.n, cfg.variant, cfg.segments);
+        let tpl = Arc::new(controller::EventTemplates::new(&sched));
         Machine {
             mem: vec![0.0; cfg.mem_elems],
             spad: Sram::new(cfg.spad_elems),
             array,
             accum,
+            sched,
+            tpl,
             cfg,
         }
     }
@@ -279,11 +294,12 @@ impl Machine {
     /// Schedule + execute a program; returns timing statistics.
     pub fn run_program(&mut self, program: &Program) -> crate::Result<RunStats> {
         let n = self.cfg.n;
-        let sched = InnerSchedule::new(n, self.cfg.variant, self.cfg.segments);
+        // Shape-pure schedule + signal tables, built once in
+        // [`Machine::new`] (copied / Arc-cloned here because Phase 2
+        // calls `&mut self` methods).
+        let sched = self.sched;
         let ii = sched.inner_latency();
-        // Per-instruction signal tables, generated once and replayed per
-        // tile (hoists the O(N²) generate+sort out of the dispatch loop).
-        let tpl = controller::EventTemplates::new(&sched);
+        let tpl = Arc::clone(&self.tpl);
 
         // ---------------- Phase 1: schedule ----------------
         let mut events: Vec<(u64, Ev)> = Vec::new();

@@ -211,6 +211,89 @@ fn sim_decode_session_is_bitwise_the_reference_pool() {
     reference.shutdown();
 }
 
+/// PR 10 e2e: the compiled-program cache is a host-time optimization
+/// only.  A sim pool serving prefill → decode with the cache on (the
+/// default) is bitwise the same pool with the cache off and machine
+/// reuse disabled — and the metrics prove the cache worked: hits
+/// observed, programs built strictly fewer than shards executed, and
+/// fewer machine allocations than the reuse-off twin.
+#[test]
+fn sim_prog_cache_serving_is_bitwise_cache_off_and_skips_rebuilds() {
+    let (seq, d, heads, kv, steps) = (64usize, 32usize, 2usize, 1usize, 4usize);
+    // One device so every shard flows through a single worker's cache
+    // (per-worker caches never share entries across devices).
+    let hot = Coordinator::start(cfg(BackendKind::Sim, 1, 1)).unwrap();
+    let mut off = cfg(BackendKind::Sim, 1, 1);
+    off.sim_prog_cache = 0;
+    off.sim_batch_shards = 1;
+    let cold = Coordinator::start(off).unwrap();
+
+    let run = |coord: &Coordinator| -> Vec<Vec<f32>> {
+        let mut rng = SplitMix64::new(1010);
+        let mut outs = Vec::new();
+        let prefill = AttentionRequest::prefill(
+            1,
+            11,
+            seq,
+            d,
+            heads,
+            kv,
+            rng.normal_matrix(heads * seq, d),
+            rng.normal_matrix(kv * seq, d),
+            rng.normal_matrix(kv * seq, d),
+        )
+        .with_mask(MaskKind::Causal);
+        outs.push(coord.submit_wait(prefill).unwrap().output.expect("prefill succeeds"));
+        for step in 0..steps as u64 {
+            let dec = AttentionRequest::decode(
+                2 + step,
+                11,
+                step,
+                d,
+                heads,
+                kv,
+                rng.normal_matrix(heads, d),
+                rng.normal_matrix(kv, d),
+                rng.normal_matrix(kv, d),
+            );
+            outs.push(coord.submit_wait(dec).unwrap().output.expect("decode step succeeds"));
+        }
+        coord.submit_wait(AttentionRequest::close(99, 11)).unwrap();
+        outs
+    };
+
+    let got = run(&hot);
+    let want = run(&cold);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(bits(g), bits(w), "stage {i} (0 = prefill): cache-on diverged from cache-off");
+    }
+
+    let o = std::sync::atomic::Ordering::Relaxed;
+    let hits = hot.metrics.prog_cache_hits.load(o);
+    let built = hot.metrics.prog_cache_misses.load(o);
+    let shards = hot.metrics.sim_dispatches.load(o);
+    assert!(hits > 0, "same-shape head shards must hit the cache");
+    assert!(
+        built < shards,
+        "cache on: programs built ({built}) must be fewer than shards executed ({shards})"
+    );
+    // The cache-off twin builds on every lookup and never hits.
+    assert_eq!(cold.metrics.prog_cache_hits.load(o), 0, "cache off must never hit");
+    assert!(cold.metrics.prog_cache_misses.load(o) >= built, "cache off rebuilds everywhere");
+    // Machine pooling: grow-on-demand reuse allocates strictly fewer
+    // machines than the reuse-off (`sim_batch_shards = 1`) twin.
+    assert!(
+        hot.metrics.machines_allocated.load(o) < cold.metrics.machines_allocated.load(o),
+        "pooled worker must allocate fewer machines ({} vs {})",
+        hot.metrics.machines_allocated.load(o),
+        cold.metrics.machines_allocated.load(o)
+    );
+
+    hot.shutdown();
+    cold.shutdown();
+}
+
 /// Acceptance: `seq_shards = 2` chunked serving on the sim pool —
 /// partial (O~, m, l) states computed on the array, merged in chunk
 /// order at gather — bitwise the reference pool.

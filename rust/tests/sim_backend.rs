@@ -462,6 +462,130 @@ fn shard_batching_is_bitwise_and_cycle_equal_to_fresh_machines() {
     assert_eq!(batched, run(4));
 }
 
+/// Satellite (DESIGN.md §12): the persistent machine pool makes
+/// explicit grow-or-keep decisions instead of churning — a too-small
+/// resident machine is *grown* into a replacement that carries its
+/// capacities (not silently dropped), a covering resident is kept
+/// across arbitrarily many shards (no use cap), and
+/// `sim_batch_shards = 1` still allocates fresh per shard (the
+/// cycle-equality oracle's twin).  Observed through the
+/// `machines_allocated` hot-path counter.
+#[test]
+fn machine_pool_grows_on_demand_and_never_churns() {
+    let mut rng = SplitMix64::new(90);
+    let small_q = rng.normal_matrix(32, 16);
+    let big_q = rng.normal_matrix(96, 32);
+
+    let mut be = sim(); // pooling on (default batch_shards = 8)
+    head(&mut be, 32, 16, &small_q, &small_q, &small_q, MaskKind::None).unwrap();
+    assert_eq!(be.hotpath_stats().machines_allocated, 1, "first shard allocates");
+
+    // Bigger shard: the resident is too small — grow (one replacement),
+    // not drop-and-thrash.
+    head(&mut be, 96, 32, &big_q, &big_q, &big_q, MaskKind::Causal).unwrap();
+    assert_eq!(be.hotpath_stats().machines_allocated, 2, "growth allocates once");
+
+    // The grown machine covers BOTH shapes: alternating small/big for
+    // far more shards than the old 8-use cap must not allocate again.
+    for round in 0..10 {
+        head(&mut be, 32, 16, &small_q, &small_q, &small_q, MaskKind::None).unwrap();
+        head(&mut be, 96, 32, &big_q, &big_q, &big_q, MaskKind::Causal).unwrap();
+        assert_eq!(
+            be.hotpath_stats().machines_allocated,
+            2,
+            "round {round}: resident machine must be kept, not churned"
+        );
+    }
+
+    // take() drains the counters; the next take sees only new work.
+    let drained = be.take_hotpath_stats();
+    assert_eq!(drained.machines_allocated, 2);
+    assert_eq!(be.hotpath_stats(), Default::default());
+
+    // Reuse-off twin: every shard allocates fresh.
+    let mut fresh = sim();
+    fresh.set_batch_shards(1);
+    for _ in 0..3 {
+        head(&mut fresh, 32, 16, &small_q, &small_q, &small_q, MaskKind::None).unwrap();
+    }
+    assert_eq!(fresh.hotpath_stats().machines_allocated, 3);
+}
+
+/// Tentpole contract (DESIGN.md §12): the compiled-program cache may
+/// only remove host work — cache-on vs cache-off is bitwise-identical
+/// in outputs AND identical in measured cycles and `CycleBreakdown`,
+/// across every execute path.  Also pins the counter semantics: the
+/// cache-on twin reports hits on repeated shapes with strictly fewer
+/// builds (misses) than lookups, the cache-off twin reports every
+/// lookup as a miss.
+#[test]
+fn prog_cache_on_off_is_bitwise_and_cycle_identical() {
+    #[allow(clippy::type_complexity)]
+    let run = |cache_entries: usize| -> (Vec<(Vec<u32>, u64, fsa::sim::CycleBreakdown)>, fsa::runtime::HotpathStats) {
+        let mut be = sim();
+        be.set_prog_cache(cache_entries);
+        let mut rng = SplitMix64::new(91);
+        let mut outs = Vec::new();
+        let mut push = |be: &mut SimBackend, bits: Vec<u32>| {
+            let cycles = be.take_measured().unwrap();
+            let bd = be.take_measured_breakdown().unwrap();
+            assert_eq!(bd.total(), cycles);
+            outs.push((bits, cycles, bd));
+        };
+        // Two identical passes over a mixed stream: the second pass is
+        // all repeated shapes, so a cache can only hit there.
+        let (l, d) = (64usize, 32usize);
+        let q = rng.normal_matrix(l, d);
+        let k = rng.normal_matrix(l, d);
+        let v = rng.normal_matrix(l, d);
+        let qr = rng.normal_matrix(1, d);
+        for _pass in 0..2 {
+            for mask in [MaskKind::Causal, MaskKind::None] {
+                let o = head(&mut be, l, d, &q, &k, &v, mask).unwrap();
+                let bits = o.iter().map(|x| x.to_bits()).collect();
+                push(&mut be, bits);
+            }
+            let p = chunk(&mut be, l, d, &q, &k[..32 * d], &v[..32 * d], MaskKind::Causal, 0)
+                .unwrap();
+            let bits = p
+                .acc
+                .iter()
+                .chain(p.m.iter())
+                .chain(p.l.iter())
+                .map(|x| x.to_bits())
+                .collect();
+            push(&mut be, bits);
+            let o = decode(&mut be, 50, d, &qr, &k[..50 * d], &v[..50 * d]).unwrap();
+            let bits = o.iter().map(|x| x.to_bits()).collect();
+            push(&mut be, bits);
+            let pr = decode_range(&mut be, 50, d, &qr, &k[..50 * d], &v[..50 * d]).unwrap();
+            let bits = pr
+                .acc
+                .iter()
+                .chain(pr.m.iter())
+                .chain(pr.l.iter())
+                .map(|x| x.to_bits())
+                .collect();
+            push(&mut be, bits);
+        }
+        (outs, be.take_hotpath_stats())
+    };
+    let (on, on_stats) = run(256);
+    let (off, off_stats) = run(0);
+    assert_eq!(
+        on, off,
+        "cache-on must be bitwise, cycle and breakdown identical to cache-off"
+    );
+    // Same lookups either way; only where they are served differs.
+    let lookups = off_stats.prog_cache_misses;
+    assert_eq!(off_stats.prog_cache_hits, 0, "disabled cache never hits");
+    assert_eq!(on_stats.prog_cache_hits + on_stats.prog_cache_misses, lookups);
+    // The whole second pass repeats shapes: at least half the lookups hit,
+    // and strictly fewer programs were built than shards executed.
+    assert!(on_stats.prog_cache_hits * 2 >= lookups, "stats: {on_stats:?}");
+    assert!(on_stats.prog_cache_misses < lookups, "stats: {on_stats:?}");
+}
+
 /// Satellite: structural-hazard regression for the new decode-row
 /// program shape — the array panics on any port conflict, so merely
 /// completing these runs proves the br = 1 and masked-ragged schedules

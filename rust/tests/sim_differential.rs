@@ -199,6 +199,136 @@ fn randomized_differential_sweep_is_bitwise_and_cycle_exact() {
     assert_eq!(cases, 200);
 }
 
+/// Hot-path contract (DESIGN.md §12): the compiled-program cache and
+/// the persistent machine pool may only spend or save *host* time.
+/// Over the same randomized grid as the main sweep, a backend with
+/// both enabled (the serving defaults) must produce bitwise-identical
+/// outputs, identical measured cycles, and an identical per-class
+/// `CycleBreakdown` against a twin with both disabled
+/// (`sim_prog_cache = 0`, `sim_batch_shards = 1`) — while the cached
+/// side actually exercises the cache (hits observed, fewer programs
+/// built than looked up).
+#[test]
+fn prog_cache_and_machine_pool_sweep_is_bitwise_and_cycle_exact() {
+    let mut rng = SplitMix64::new(0xCAC4E);
+    let mut cases = 0usize;
+    let mut hits = 0u64;
+    let mut lookups = 0u64;
+    for &(n, trials) in &[(8usize, 90usize), (16, 70), (32, 40)] {
+        // `hot` keeps the defaults: program cache on, machine reuse on.
+        let mut hot = SimBackend::new(&accel(n));
+        let mut cold = SimBackend::new(&accel(n));
+        cold.set_prog_cache(0);
+        cold.set_batch_shards(1);
+        for trial in 0..trials {
+            let l = 1 + rng.next_below(3 * n as u64) as usize;
+            let d = [n / 4, n / 2, n][rng.next_below(3) as usize].max(1);
+            let mask = match rng.next_below(3) {
+                0 => MaskKind::None,
+                1 => MaskKind::Causal,
+                _ => MaskKind::PaddingKeys { valid: 1 + rng.next_below(l as u64) as usize },
+            };
+            let mode = rng.next_below(5);
+            let ctx = format!("n={n} L={l} d={d} {mask:?} mode={mode} trial={trial}");
+            match mode {
+                0 => {
+                    let q = rng.normal_matrix(l, d);
+                    let k = rng.normal_matrix(l, d);
+                    let v = rng.normal_matrix(l, d);
+                    let plan = || ShardPlan::Head { seq_len: l, d, q: &q, k: &k, v: &v, mask };
+                    let got = hot.execute(plan()).unwrap().into_full().unwrap();
+                    let want = cold.execute(plan()).unwrap().into_full().unwrap();
+                    assert_eq!(bits(&got), bits(&want), "hot vs cold: {ctx}");
+                }
+                1 => {
+                    let start = rng.next_below(l as u64) as usize;
+                    let len = 1 + rng.next_below((l - start) as u64) as usize;
+                    let q = rng.normal_matrix(l, d);
+                    let kc = rng.normal_matrix(len, d);
+                    let vc = rng.normal_matrix(len, d);
+                    let plan = || ShardPlan::HeadChunk {
+                        seq_len: l,
+                        d,
+                        q: &q,
+                        k_chunk: &kc,
+                        v_chunk: &vc,
+                        mask,
+                        key_offset: start,
+                        total_keys: l,
+                    };
+                    let got = hot.execute(plan()).unwrap().into_partial().unwrap();
+                    let want = cold.execute(plan()).unwrap().into_partial().unwrap();
+                    assert_eq!(got, want, "hot vs cold: {ctx} chunk [{start}, {})", start + len);
+                }
+                2 => {
+                    let qr = rng.normal_matrix(1, d);
+                    let k = rng.normal_matrix(l, d);
+                    let v = rng.normal_matrix(l, d);
+                    let plan =
+                        || ShardPlan::DecodeRow { prefix_len: l, d, q_row: &qr, k: &k, v: &v };
+                    let got = hot.execute(plan()).unwrap().into_full().unwrap();
+                    let want = cold.execute(plan()).unwrap().into_full().unwrap();
+                    assert_eq!(bits(&got), bits(&want), "hot vs cold: {ctx}");
+                }
+                3 => {
+                    let qr = rng.normal_matrix(1, d);
+                    let k = rng.normal_matrix(l, d);
+                    let v = rng.normal_matrix(l, d);
+                    let plan =
+                        || ShardPlan::DecodeRange { range_len: l, d, q_row: &qr, k: &k, v: &v };
+                    let got = hot.execute(plan()).unwrap().into_partial().unwrap();
+                    let want = cold.execute(plan()).unwrap().into_partial().unwrap();
+                    assert_eq!(got, want, "hot vs cold: {ctx}");
+                }
+                _ => {
+                    let resume = rng.next_below(l as u64) as usize;
+                    let rows = l - resume;
+                    let q = rng.normal_matrix(rows, d);
+                    let k = rng.normal_matrix(l, d);
+                    let v = rng.normal_matrix(l, d);
+                    let plan = || ShardPlan::ResumedPrefill {
+                        seq_len: l,
+                        d,
+                        query_offset: resume,
+                        q_suffix: &q,
+                        k_chunk: &k,
+                        v_chunk: &v,
+                        mask,
+                        key_offset: 0,
+                        total_keys: l,
+                    };
+                    let got = hot.execute(plan()).unwrap().into_full().unwrap();
+                    let want = cold.execute(plan()).unwrap().into_full().unwrap();
+                    assert_eq!(bits(&got), bits(&want), "hot vs cold: {ctx} resume {resume}");
+                }
+            }
+            // Neither the cache nor machine reuse may move a cycle —
+            // or shift a single cycle between attribution classes.
+            let hc = hot.take_measured().expect("sim runs measure");
+            let cc = cold.take_measured().expect("sim runs measure");
+            assert_eq!(hc, cc, "measured cycles: {ctx}");
+            let hb = hot.take_measured_breakdown().expect("sim runs attribute");
+            let cb = cold.take_measured_breakdown().expect("sim runs attribute");
+            assert_eq!(hb, cb, "cycle breakdown: {ctx}");
+            assert_eq!(hb.total(), hc, "breakdown must sum to cycles: {ctx}");
+            cases += 1;
+        }
+        let hp = hot.take_hotpath_stats();
+        hits += hp.prog_cache_hits;
+        lookups += hp.prog_cache_hits + hp.prog_cache_misses;
+        let cp = cold.take_hotpath_stats();
+        assert_eq!(cp.prog_cache_hits, 0, "n={n}: cache-off twin must never hit");
+        assert!(cp.prog_cache_misses > 0, "n={n}: cache-off twin counts every build");
+    }
+    assert_eq!(cases, 200);
+    assert!(hits > 0, "the randomized grid must revisit at least one program shape");
+    assert!(
+        lookups - hits < lookups,
+        "programs built ({}) must be fewer than program lookups ({lookups})",
+        lookups - hits
+    );
+}
+
 /// Full `RunStats` equality at machine level: every counter the stats
 /// report — not just cycles — is identical between the two step paths,
 /// and so is the final memory image, bit for bit.

@@ -86,7 +86,8 @@ for s in serving["scenarios"]:
     for key in ("sched_iterations", "sched_queued", "sched_admitted",
                 "sched_rejected", "prefill_waves", "decode_waves",
                 "multi_session_decode_waves", "prefix_hits", "prefix_misses",
-                "prefix_attached_pages", "cow_copies", "saved_prefill_cycles"):
+                "prefix_attached_pages", "cow_copies", "saved_prefill_cycles",
+                "prog_cache_hits", "prog_cache_misses", "machines_allocated"):
         assert key in c, f"{s['name']}: missing counter {key}"
     assert c["sched_admitted"] == c["sched_queued"] - c["sched_rejected"], s["name"]
 cont = by_name["continuous"]
@@ -96,7 +97,17 @@ pc = by_name["prefix"]["prefix_cache"]
 assert pc["hits"] >= 1 and pc["misses"] == 1, pc
 assert pc["hit_rate"] > 0.0, pc
 assert pc["saved_prefill_cycles"] > 0, pc
-print("BENCH_serving.json: schema OK")
+sim = by_name["sim_attrib"]["metrics"]["counters"]
+assert sim["prog_cache_hits"] >= 1, sim
+assert sim["prog_cache_misses"] < sim["sim_dispatches"], sim
+hot = json.load(open("BENCH_hotpath.json"))
+modes = {m["name"]: m for m in hot["prog_cache_sweep"]["modes"]}
+cached, uncached = modes["cached"], modes["uncached"]
+assert cached["programs_built"] < cached["shards_executed"], cached
+assert cached["prog_cache_hits"] >= 1, cached
+assert uncached["prog_cache_hits"] == 0, uncached
+assert uncached["programs_built"] >= uncached["shards_executed"], uncached
+print("BENCH_serving.json + BENCH_hotpath.json: schema OK")
 EOF
     else
         echo "== python3 not installed; skipping JSON validation =="
